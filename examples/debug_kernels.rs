@@ -1,0 +1,68 @@
+//! Debug harness: run individually-lowered Pallas kernel HLOs (dumped to
+//! /tmp by a scratch python script) on the rust PJRT client and compare
+//! against python's outputs. Used to isolate HLO-interchange issues.
+
+use xamba::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let meta = Json::parse(&std::fs::read_to_string("/tmp/k_meta.json")?)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let client = xla::PjRtClient::cpu()?;
+    let Json::Obj(cases) = &meta else { panic!() };
+    for (name, case) in cases {
+        let proto =
+            xla::HloModuleProto::from_text_file(&format!("/tmp/k_{name}.hlo.txt"))?;
+        let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+        let mut lits = Vec::new();
+        for a in case.get("args").unwrap().as_arr().unwrap() {
+            let shape: Vec<i64> = a
+                .get("shape")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|d| d.as_f64().unwrap() as i64)
+                .collect();
+            let data: Vec<f32> = a
+                .get("data")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_f64().unwrap() as f32)
+                .collect();
+            lits.push(xla::Literal::vec1(&data).reshape(&shape)?);
+        }
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        for (i, (part, want)) in parts
+            .iter()
+            .zip(case.get("outs").unwrap().as_arr().unwrap())
+            .enumerate()
+        {
+            let got: Vec<f32> = part.to_vec()?;
+            let head: Vec<f32> = want
+                .get("head")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_f64().unwrap() as f32)
+                .collect();
+            let sum: f64 = got.iter().map(|&x| x as f64).sum();
+            let want_sum = want.get("sum").unwrap().as_f64().unwrap();
+            let ok = got
+                .iter()
+                .zip(&head)
+                .all(|(a, b)| (a - b).abs() < 1e-3 + 1e-3 * b.abs())
+                && (sum - want_sum).abs() < 1e-2 * want_sum.abs().max(1.0);
+            println!(
+                "{name}[{i}]: {}  rust_head={:?} py_head={:?} rust_sum={sum:.3} py_sum={want_sum:.3}",
+                if ok { "OK " } else { "MISMATCH" },
+                &got[..4.min(got.len())],
+                &head[..4.min(head.len())]
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Fig-1-style NPU profiling: per-op latency breakdowns for Mamba and
+//! Mamba-2 blocks (130M shapes, T=4 prefill — the paper's workload), on
+//! the simulated Series-2 NPU, before and after the XAMBA passes.
+//!
+//! Run: `cargo run --release --example npu_profile`
+
+use xamba::config::{npu_series2, presets};
+use xamba::graph::Census;
+use xamba::npu::Profile;
+use xamba::passes::{actiba::ActibaPass, cumba::CumbaPass, reduba::RedubaPass, Pass};
+
+fn main() {
+    let cfg = npu_series2();
+    let t = 4; // the paper's fixed input-token count
+
+    println!("=== Fig 1: baseline bottlenecks (130M shapes, T={t}) ===\n");
+    for shape in [presets::block130m_mamba(), presets::block130m_mamba2()] {
+        let g = xamba::models::build_block(&shape, t);
+        let p = Profile::of(&cfg, &g);
+        println!("{}", p.breakdown_table());
+        println!(
+            "DSP share {:.1}%  MPU share {:.1}%\n",
+            100.0 * p.engine_share(xamba::npu::Engine::Dsp),
+            100.0 * p.engine_share(xamba::npu::Engine::Mpu),
+        );
+    }
+
+    println!("=== Mamba-2 block after CumBA / ReduBA (Fig 4a/4b) ===\n");
+    let m2 = presets::block130m_mamba2();
+    let g = xamba::models::build_block(&m2, t);
+    let base = Profile::of(&cfg, &g);
+    let cumba = Profile::of(&cfg, &CumbaPass.apply(&g));
+    let reduba = Profile::of(&cfg, &RedubaPass.apply(&g));
+    let both = Profile::of(&cfg, &RedubaPass.apply(&CumbaPass.apply(&g)));
+    println!(
+        "baseline {:.3} ms | CumBA {:.3} ms ({:.2}x) | ReduBA {:.3} ms ({:.2}x) | both {:.3} ms ({:.2}x)\n",
+        base.total_ns / 1e6,
+        cumba.total_ns / 1e6,
+        base.total_ns / cumba.total_ns,
+        reduba.total_ns / 1e6,
+        base.total_ns / reduba.total_ns,
+        both.total_ns / 1e6,
+        base.total_ns / both.total_ns,
+    );
+    println!("{}", both.breakdown_table());
+
+    println!("=== Mamba block after ActiBA (Fig 4c) ===\n");
+    let m1 = presets::block130m_mamba();
+    let g1 = xamba::models::build_block(&m1, t);
+    let b1 = Profile::of(&cfg, &g1);
+    let sp = Profile::of(&cfg, &ActibaPass::softplus_only(32).apply(&g1));
+    let full = Profile::of(&cfg, &ActibaPass::default().apply(&g1));
+    println!(
+        "baseline {:.3} ms | +softplus PLU {:.3} ms ({:.2}x) | +SiLU PLU {:.3} ms ({:.2}x)\n",
+        b1.total_ns / 1e6,
+        sp.total_ns / 1e6,
+        b1.total_ns / sp.total_ns,
+        full.total_ns / 1e6,
+        b1.total_ns / full.total_ns,
+    );
+    println!("{}", full.breakdown_table());
+
+    println!("=== Fig 5: operator census ===\n");
+    let c1 = Census::of(&xamba::models::build_block(&m1, t));
+    let c2 = Census::of(&xamba::models::build_block(&m2, t));
+    println!(
+        "{}",
+        Census::comparison_table(&[("mamba(T=4)", &c1), ("mamba2(T=4)", &c2)])
+    );
+}

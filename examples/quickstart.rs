@@ -1,0 +1,73 @@
+//! Quickstart: load the AOT artifacts, run one prefill and a few decode
+//! steps by hand. The 60-second tour of the public API.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use xamba::coordinator::{sample, Tokenizer};
+use xamba::runtime::{Engine, HostTensor, Manifest};
+use xamba::util::Prng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. the manifest describes every AOT-compiled program
+    let manifest = Manifest::load("artifacts").map_err(anyhow::Error::msg)?;
+    let prefill = manifest.find("tiny-mamba", "xamba", "prefill").unwrap();
+    let decode = manifest.find("tiny-mamba", "xamba", "decode_b1").unwrap();
+    println!(
+        "loaded {} programs; using {} + {}",
+        manifest.programs.len(),
+        prefill.hlo_file,
+        decode.hlo_file
+    );
+
+    // 2. compile on the PJRT CPU client (cached by program key)
+    let mut engine = Engine::cpu()?;
+
+    // 3. fixed-window prefill: left-padded prompt, zero states
+    let tok = Tokenizer::new(manifest.prefill_len, prefill.shape.vocab_size);
+    let prompt = b"every kernel needs a";
+    let ids = tok.encode_window(prompt);
+    let outs = engine.run_with_weights(
+        &manifest,
+        prefill,
+        &[
+            HostTensor::I32(vec![ids.len()], ids),
+            HostTensor::zeros(&prefill.inputs[2].shape),
+            HostTensor::zeros(&prefill.inputs[3].shape),
+        ],
+    )?;
+    let mut rng = Prng::new(0);
+    let mut token = sample(outs[0].f32_data(), 0.0, &mut rng);
+    let (mut conv, mut ssm) = (outs[1].clone(), outs[2].clone());
+
+    // 4. decode loop: one token at a time from the cached SSM state
+    let mut text = vec![token as u8];
+    for _ in 0..24 {
+        let with_batch = |t: &HostTensor| {
+            let mut s = vec![1usize];
+            s.extend_from_slice(t.shape());
+            HostTensor::F32(s, t.f32_data().to_vec())
+        };
+        let outs = engine.run_with_weights(
+            &manifest,
+            decode,
+            &[
+                HostTensor::I32(vec![1, 1], vec![token]),
+                with_batch(&conv),
+                with_batch(&ssm),
+            ],
+        )?;
+        token = sample(outs[0].f32_data(), 0.0, &mut rng);
+        text.push(token as u8);
+        let strip = |t: &HostTensor| {
+            HostTensor::F32(t.shape()[1..].to_vec(), t.f32_data().to_vec())
+        };
+        conv = strip(&outs[1]);
+        ssm = strip(&outs[2]);
+    }
+    println!(
+        "prompt:     {:?}\ncompletion: {:?}",
+        String::from_utf8_lossy(prompt),
+        String::from_utf8_lossy(&text)
+    );
+    Ok(())
+}

@@ -1,0 +1,93 @@
+"""Model configurations for the Mamba / Mamba-2 reproductions.
+
+Shape conventions follow the HuggingFace ``mamba-130m-hf`` /
+``mamba2-130m-hf`` checkpoints the paper benchmarks (d_model=768,
+expand=2, Mamba-1: d_state=16, dt_rank=48; Mamba-2: d_state=128,
+headdim=64, chunk=256 — the 256x256 CumSum_b of paper §2.1 comes from
+chunk=256). The ``tiny`` presets keep every architectural knob but shrink
+widths so the end-to-end serving demo trains and runs in seconds on CPU.
+
+These configs are mirrored by ``rust/src/config/presets.rs``; the AOT
+manifest carries them across the language boundary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch: str                # "mamba" | "mamba2"
+    vocab_size: int
+    d_model: int
+    n_layers: int
+    d_state: int             # N
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0         # mamba-1 only; 0 = d_model // 16
+    headdim: int = 64        # mamba-2 only (P)
+    chunk: int = 64          # mamba-2 SSD chunk length
+    plu_segments: int = 32   # ActiBA C-LUT size for the xamba variant
+    plu_range: float = 8.0   # C-LUT core range [-r, r]
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def resolved_dt_rank(self) -> int:
+        return self.dt_rank or max(1, self.d_model // 16)
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.headdim == 0
+        return self.d_inner // self.headdim
+
+    @property
+    def conv_dim(self) -> int:
+        """Channels through the causal conv (mamba2 convs x, B, C together)."""
+        if self.arch == "mamba2":
+            return self.d_inner + 2 * self.d_state
+        return self.d_inner
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["d_inner"] = self.d_inner
+        d["dt_rank_resolved"] = self.resolved_dt_rank
+        if self.arch == "mamba2":
+            d["n_heads"] = self.n_heads
+        d["conv_dim"] = self.conv_dim
+        return d
+
+
+# --- presets ----------------------------------------------------------------
+
+#: Tiny char-LM used by the end-to-end serving demo (trains in ~a minute).
+TINY_MAMBA = ModelConfig(
+    name="tiny-mamba", arch="mamba", vocab_size=256, d_model=128,
+    n_layers=2, d_state=16, dt_rank=8,
+)
+
+TINY_MAMBA2 = ModelConfig(
+    name="tiny-mamba2", arch="mamba2", vocab_size=256, d_model=128,
+    n_layers=2, d_state=32, headdim=32, chunk=16,
+)
+
+#: Single-block 130M shapes — the exact tensor dimensions the paper
+#: profiles (CumSum_b on 256x256 comes from chunk=256 at seq 256).
+BLOCK_130M_MAMBA = ModelConfig(
+    name="block130m-mamba", arch="mamba", vocab_size=50280, d_model=768,
+    n_layers=1, d_state=16, dt_rank=48,
+)
+
+BLOCK_130M_MAMBA2 = ModelConfig(
+    name="block130m-mamba2", arch="mamba2", vocab_size=50280, d_model=768,
+    n_layers=1, d_state=128, headdim=64, chunk=256,
+)
+
+PRESETS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [TINY_MAMBA, TINY_MAMBA2, BLOCK_130M_MAMBA, BLOCK_130M_MAMBA2]
+}

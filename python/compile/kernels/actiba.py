@@ -1,0 +1,132 @@
+"""ActiBA: activation functions on the drain-path PLU (paper §2.2).
+
+Swish/SiLU and Softplus dominate Mamba-1's NPU latency because they run
+sequentially on the DSP (Fig 1). The NPU's Arithmetic Unit carries a
+Piecewise Linear Unit fed by a Configurable LUT of (slope, intercept)
+pairs; evaluating ``f(x) ~= m_k x + c_k`` there costs one multiply-add per
+element *during the drain phase of the producing matmul* — the intermediate
+tensor never round-trips through SRAM ("vertical fusion").
+
+Two kernels:
+
+* ``plu_apply`` — standalone elementwise PLU evaluation (the C-LUT lives
+  whole in VMEM; segment index is a clamped affine bucketing, the gather
+  stays on-chip).
+* ``matmul_plu`` — a tiled matmul whose epilogue applies the PLU to the
+  output tile before it is written back: the Pallas rendering of the
+  paper's drain-phase fusion (Fig 2(e)).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .cumba import _pick_block
+
+
+def _plu_eval(x, slopes, intercepts, lo: float, hi: float):
+    """Vectorized C-LUT evaluation: k = clip(floor((x-lo)/step)); m_k x + c_k.
+
+    Segment select is a one-hot contraction, not a gather: (a) it maps onto
+    the MAC array exactly like the hardware C-LUT mux does, and (b) the
+    gather that ``jnp.take`` lowers to is miscompiled to zeros by the
+    xla_extension 0.5.1 backend the rust runtime links (see DESIGN.md
+    §Interchange-gotchas).
+    """
+    k_total = slopes.shape[0]
+    step = (hi - lo) / k_total
+    k = jnp.clip(jnp.floor((x - lo) * (1.0 / step)).astype(jnp.int32),
+                 0, k_total - 1)
+    seg = jax.lax.broadcasted_iota(jnp.int32, (k_total,), 0)
+    onehot = (k[..., None] == seg).astype(x.dtype)  # (..., K)
+    # keep the dot rank-2 on both sides: xla_extension 0.5.1 miscompiles
+    # dot_general with a rank-1 rhs to zeros (second interchange gotcha)
+    m = (onehot @ slopes.reshape(k_total, 1))[..., 0]
+    c = (onehot @ intercepts.reshape(k_total, 1))[..., 0]
+    return m * x + c
+
+
+def _plu_kernel(x_ref, m_ref, c_ref, o_ref, *, lo: float, hi: float):
+    o_ref[...] = _plu_eval(x_ref[...], m_ref[...], c_ref[...], lo, hi)
+
+
+def plu_apply(x: jax.Array, slopes: jax.Array, intercepts: jax.Array,
+              lo: float, hi: float, *, block: int = 512) -> jax.Array:
+    """Apply a C-LUT piecewise-linear approximation elementwise.
+
+    Oracle: ``ref.plu_ref``. ``slopes``/``intercepts`` are the (K,) C-LUT
+    contents (see ``compile.plu``); they are small and block-resident.
+    """
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    blk = _pick_block(n, block)
+    k_total = slopes.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_plu_kernel, lo=lo, hi=hi),
+        grid=(n // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((k_total,), lambda i: (0,)),  # whole LUT, every tile
+            pl.BlockSpec((k_total,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(flat, slopes, intercepts)
+    return out.reshape(shape)
+
+
+def _matmul_plu_kernel(x_ref, w_ref, m_ref, c_ref, o_ref,
+                       *, lo: float, hi: float, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot(
+        x_ref[...], w_ref[...], precision=jax.lax.Precision.HIGHEST,
+        preferred_element_type=o_ref.dtype,
+    )
+
+    # Drain phase: the final k-step applies the PLU as the accumulator tile
+    # leaves VMEM — the pre-activation never round-trips through memory.
+    @pl.when(k == nk - 1)
+    def _drain():
+        o_ref[...] = _plu_eval(o_ref[...], m_ref[...], c_ref[...], lo, hi)
+
+
+def matmul_plu(x: jax.Array, w: jax.Array, slopes: jax.Array,
+               intercepts: jax.Array, lo: float, hi: float, *,
+               bm: int = 64, bn: int = 128, bk: int = 128) -> jax.Array:
+    """``plu(x @ w)`` with the PLU fused into the matmul drain.
+
+    Oracle: ``ref.plu_ref(x @ w, ...)``.
+    """
+    if x.ndim != 2 or w.ndim != 2 or x.shape[1] != w.shape[0]:
+        raise ValueError(f"bad matmul shapes {x.shape} @ {w.shape}")
+    m, kdim = x.shape
+    n = w.shape[1]
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(kdim, bk)
+    nk = kdim // bk
+    k_total = slopes.shape[0]
+    return pl.pallas_call(
+        functools.partial(_matmul_plu_kernel, lo=lo, hi=hi, nk=nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((k_total,), lambda i, j, k: (0,)),
+            pl.BlockSpec((k_total,), lambda i, j, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, slopes, intercepts)

@@ -1,0 +1,63 @@
+"""ReduBA: ReduceSum as a ones-vector MVM (paper §2.1).
+
+ReduceSum over the rows of a (m, n) matrix is ``R = 1_m @ X`` — a
+matrix-vector multiply against an all-ones mask vector. On the NPU this
+moves the reduction off the sequential DSP onto the MPU's MAC array, and —
+unlike CumBA's (m x m) mask — the *same* length-m mask vector is reused by
+every output element, so mask traffic is O(m) once, not O(m^2).
+
+TPU adaptation: the ones vector never exists at all; the kernel is a
+grid-level reduction where each (bk, bn) input tile folds into a
+VMEM-resident (1, bn) accumulator (output-stationary along the reduction
+axis, exactly the reuse argument of the paper).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .cumba import _pick_block
+
+
+def _reduba_kernel(x_ref, o_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # ones(1, bk) @ X(bk, bn) == column-sum of the tile, accumulated.
+    o_ref[...] += jnp.sum(x_ref[...], axis=0, keepdims=True)
+
+
+def reduba_reducesum(x: jax.Array, *, bn: int = 256, bk: int = 128) -> jax.Array:
+    """ReduceSum along axis -2 of a (m, n) matrix via the ReduBA MVM.
+
+    Equivalent to ``jnp.sum(x, axis=-2)`` (oracle: ``ref.reduba_ref``).
+    """
+    if x.ndim != 2:
+        raise ValueError(f"reduba_reducesum expects (m, n), got {x.shape}")
+    m, n = x.shape
+    bk = _pick_block(m, bk)
+    bn = _pick_block(n, bn)
+    grid = (n // bn, m // bk)
+    out = pl.pallas_call(
+        _reduba_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bk, bn), lambda j, k: (k, j))],
+        out_specs=pl.BlockSpec((1, bn), lambda j, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, n), x.dtype),
+        interpret=True,
+    )(x)
+    return out[0]
+
+
+def reduba_reducesum_last(x: jax.Array, **kw) -> jax.Array:
+    """ReduceSum along the last axis (transpose-wrapped ReduBA)."""
+    if x.ndim != 2:
+        raise ValueError(f"expects rank 2, got {x.shape}")
+    return reduba_reducesum(x.T, **kw)

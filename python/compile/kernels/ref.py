@@ -1,0 +1,218 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: python/tests/ asserts each Pallas
+kernel (run under interpret=True) matches its oracle to tight tolerances,
+and the rust interpreter's golden tests are generated from the same
+functions. Keep these boring and obviously-correct; no Pallas, no tricks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# The two sequential bottleneck ops (paper Fig 1) in their naive form.
+# ---------------------------------------------------------------------------
+
+
+def cumsum_ref(x: jax.Array, axis: int = -2) -> jax.Array:
+    """Standard CumSum: C[i, j] = sum_{k<=i} X[k, j] (paper §2.1)."""
+    return jnp.cumsum(x, axis=axis)
+
+
+def reducesum_ref(x: jax.Array, axis: int = -2) -> jax.Array:
+    """Standard ReduceSum: R[j] = sum_i X[i, j] = C[m, j] (paper §2.1)."""
+    return jnp.sum(x, axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# The XAMBA reformulations, still in pure jnp (mask semantics oracle).
+# ---------------------------------------------------------------------------
+
+
+def cumba_mask(m: int, dtype=jnp.float32) -> jax.Array:
+    """Lower-triangular CumBA mask: M[i, j] = 1 if j <= i else 0."""
+    return jnp.tril(jnp.ones((m, m), dtype=dtype))
+
+
+def cumba_ref(x: jax.Array) -> jax.Array:
+    """CumSum over the leading axis of a (m, n) matrix as M @ X."""
+    m = x.shape[-2]
+    return cumba_mask(m, x.dtype) @ x
+
+
+def reduba_ref(x: jax.Array) -> jax.Array:
+    """ReduceSum over the leading axis of a (m, n) matrix as ones @ X."""
+    m = x.shape[-2]
+    return jnp.ones((m,), x.dtype) @ x
+
+
+# ---------------------------------------------------------------------------
+# Activations: exact + PLU-approximated (ActiBA oracle).
+# ---------------------------------------------------------------------------
+
+
+def silu_ref(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x)
+
+
+def softplus_ref(x: jax.Array) -> jax.Array:
+    return jax.nn.softplus(x)
+
+
+def plu_ref(x: jax.Array, slopes: jax.Array, intercepts: jax.Array,
+            lo: float, hi: float) -> jax.Array:
+    """Evaluate a C-LUT: segment k = clip(floor((x-lo)/step)), m_k*x + c_k."""
+    k_total = slopes.shape[0]
+    step = (hi - lo) / k_total
+    k = jnp.clip(jnp.floor((x - lo) / step).astype(jnp.int32), 0, k_total - 1)
+    return slopes[k] * x + intercepts[k]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 selective scan (sequential oracle, paper appendix A.1).
+# ---------------------------------------------------------------------------
+
+
+def selective_scan_ref(
+    x: jax.Array,  # (T, D)       input sequence
+    dt: jax.Array,  # (T, D)      post-softplus step sizes
+    a: jax.Array,  # (D, N)       state matrix (negative, continuous-time)
+    b: jax.Array,  # (T, N)       input projection (selective)
+    c: jax.Array,  # (T, N)       output projection (selective)
+    d: jax.Array,  # (D,)         skip connection
+    h0: jax.Array | None = None,  # (D, N) initial state
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential selective scan. Returns (y: (T, D), h_T: (D, N)).
+
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) outer B_t
+    y_t = (h_t @ C_t) + D * x_t
+    """
+    t_len, d_model = x.shape
+    n = a.shape[1]
+    h = jnp.zeros((d_model, n), x.dtype) if h0 is None else h0
+
+    def step(h, inputs):
+        x_t, dt_t, b_t, c_t = inputs
+        da = jnp.exp(dt_t[:, None] * a)  # (D, N)
+        h = da * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y_t = h @ c_t + d * x_t
+        return h, y_t
+
+    h_final, ys = jax.lax.scan(step, h, (x, dt, b, c))
+    return ys, h_final
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD (structured state-space duality), chunked oracle.
+# Follows Listing 1 of Dao & Gu (2024), which is what the paper profiles:
+# CumSum_b is the segsum cumsum at the start of step 1.
+# ---------------------------------------------------------------------------
+
+
+def segsum_ref(a: jax.Array) -> jax.Array:
+    """Segment-sum: S[i, j] = sum_{k in (j, i]} a[k], -inf for j > i.
+
+    This is where CumSum_b lives: a (..., T) vector becomes a (..., T, T)
+    matrix through a cumsum and a broadcasted difference.
+    """
+    t = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    s = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool), k=0)
+    return jnp.where(mask, s, -jnp.inf)
+
+
+def ssd_chunk_ref(
+    x: jax.Array,  # (T, H, P)   inputs (heads x headdim)
+    dt: jax.Array,  # (T, H)     post-softplus step sizes
+    a: jax.Array,  # (H,)        per-head scalar decay (negative)
+    b: jax.Array,  # (T, N)      shared-across-heads input proj (ngroups=1)
+    c: jax.Array,  # (T, N)      output proj
+    h0: jax.Array | None = None,  # (H, P, N) initial state
+) -> tuple[jax.Array, jax.Array]:
+    """Single-chunk SSD. Returns (y: (T, H, P), state: (H, P, N)).
+
+    Step 1 (intra-chunk):  L = exp(segsum(dt * a)),
+                           Y_diag = ((C @ B^T) * L) @ (dt * x)
+    Step 2 (chunk state):  decay_states = exp(A_last - A_cumsum),
+                           state = (B * decay * dt * x) summed over T
+    Steps 3/4: initial-state contribution to outputs + final state carry.
+    """
+    t, h, p = x.shape
+    da = dt * a[None, :]  # (T, H)
+    da_cs = jnp.cumsum(da, axis=0)  # (T, H) CumSum_b analogue
+
+    # -- step 1: intra-chunk (assumes zero initial state)
+    l_mat = jnp.exp(segsum_ref(da.T))  # (H, T, T)
+    cb = c @ b.T  # (T, T)
+    scores = cb[None, :, :] * l_mat  # (H, T, T)
+    xdt = x * dt[:, :, None]  # (T, H, P)
+    y_diag = jnp.einsum("hts,shp->thp", scores, xdt)
+
+    # -- step 2: per-chunk output state
+    decay_states = jnp.exp(da_cs[-1, :][None, :] - da_cs)  # (T, H)
+    state = jnp.einsum("tn,th,thp->hpn", b, decay_states * dt, x)
+
+    # -- steps 3/4: initial-state contribution to outputs and final state
+    if h0 is not None:
+        state_decay_out = jnp.exp(da_cs)  # (T, H)
+        y_off = jnp.einsum("tn,hpn,th->thp", c, h0, state_decay_out)
+        y_diag = y_diag + y_off
+        chunk_decay = jnp.exp(da_cs[-1, :])  # (H,)
+        state = state + h0 * chunk_decay[:, None, None]
+
+    return y_diag, state
+
+
+def ssd_ref(
+    x: jax.Array,  # (T, H, P)
+    dt: jax.Array,  # (T, H)
+    a: jax.Array,  # (H,)
+    b: jax.Array,  # (T, N)
+    c: jax.Array,  # (T, N)
+    chunk: int,
+    h0: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Multi-chunk SSD: split T into chunks, carry state between them."""
+    t = x.shape[0]
+    assert t % chunk == 0, f"T={t} not divisible by chunk={chunk}"
+    h, p = x.shape[1], x.shape[2]
+    n = b.shape[-1]
+    state = jnp.zeros((h, p, n), x.dtype) if h0 is None else h0
+    ys = []
+    for s in range(0, t, chunk):
+        y_c, state = ssd_chunk_ref(
+            x[s : s + chunk], dt[s : s + chunk], a,
+            b[s : s + chunk], c[s : s + chunk], h0=state,
+        )
+        ys.append(y_c)
+    return jnp.concatenate(ys, axis=0), state
+
+
+# ---------------------------------------------------------------------------
+# Single-token recurrent steps (decode path) — used to check prefill/decode
+# state consistency: prefill(T) must equal T successive decode steps.
+# ---------------------------------------------------------------------------
+
+
+def selective_step_ref(h, x_t, dt_t, a, b_t, c_t, d):
+    """One recurrent step of the Mamba-1 SSM. h: (D, N) -> (y_t, h')."""
+    da = jnp.exp(dt_t[:, None] * a)
+    h = da * h + (dt_t * x_t)[:, None] * b_t[None, :]
+    return h @ c_t + d * x_t, h
+
+
+def ssd_step_ref(state, x_t, dt_t, a, b_t, c_t):
+    """One recurrent step of the Mamba-2 SSM.
+
+    state: (H, P, N) -> (y_t: (H, P), state').
+    """
+    da = jnp.exp(dt_t * a)  # (H,)
+    state = state * da[:, None, None] + jnp.einsum(
+        "hp,n->hpn", x_t * dt_t[:, None], b_t
+    )
+    y = jnp.einsum("hpn,n->hp", state, c_t)
+    return y, state

@@ -1,0 +1,83 @@
+"""Mamba-1 selective scan as a Pallas kernel.
+
+The recurrence h_t = exp(dt_t A) h_{t-1} + (dt_t x_t) B_t, y_t = h_t C_t
+is inherently sequential in t, but fully parallel across the channel axis
+D. The kernel therefore grids over D-tiles; each program instance walks the
+whole sequence with its (bd, N) state slice held in the output-state block
+(VMEM-resident for the entire walk — zero state traffic to HBM until the
+final drain, which is what makes decode cheap on the NPU too).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .cumba import _pick_block
+
+
+def _scan_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref,
+                 y_ref, hout_ref, *, t_len: int):
+    a = a_ref[...]          # (bd, N)
+    d_skip = d_ref[...]     # (bd,)
+    hout_ref[...] = h0_ref[...]
+
+    def step(t, _):
+        x_t = x_ref[t, :]    # (bd,)
+        dt_t = dt_ref[t, :]  # (bd,)
+        b_t = b_ref[t, :]    # (N,)
+        c_t = c_ref[t, :]    # (N,)
+        h = hout_ref[...]
+        da = jnp.exp(dt_t[:, None] * a)
+        h = da * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        hout_ref[...] = h
+        y_ref[t, :] = h @ c_t + d_skip * x_t
+        return ()
+
+    jax.lax.fori_loop(0, t_len, step, ())
+
+
+def selective_scan(
+    x: jax.Array,   # (T, D)
+    dt: jax.Array,  # (T, D)
+    a: jax.Array,   # (D, N)
+    b: jax.Array,   # (T, N)
+    c: jax.Array,   # (T, N)
+    d: jax.Array,   # (D,)
+    h0: jax.Array,  # (D, N)
+    *, bd: int = 128,
+) -> tuple[jax.Array, jax.Array]:
+    """Selective scan over (T, D). Oracle: ``ref.selective_scan_ref``.
+
+    Returns ``(y: (T, D), h_T: (D, N))``.
+    """
+    t_len, d_model = x.shape
+    n = a.shape[1]
+    bd = _pick_block(d_model, bd)
+    grid = (d_model // bd,)
+    y, h_t = pl.pallas_call(
+        functools.partial(_scan_kernel, t_len=t_len),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t_len, bd), lambda i: (0, i)),  # x
+            pl.BlockSpec((t_len, bd), lambda i: (0, i)),  # dt
+            pl.BlockSpec((bd, n), lambda i: (i, 0)),      # a
+            pl.BlockSpec((t_len, n), lambda i: (0, 0)),   # b (shared)
+            pl.BlockSpec((t_len, n), lambda i: (0, 0)),   # c (shared)
+            pl.BlockSpec((bd,), lambda i: (i,)),          # d
+            pl.BlockSpec((bd, n), lambda i: (i, 0)),      # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((t_len, bd), lambda i: (0, i)),
+            pl.BlockSpec((bd, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t_len, d_model), x.dtype),
+            jax.ShapeDtypeStruct((d_model, n), x.dtype),
+        ],
+        interpret=True,
+    )(x, dt, a, b, c, d, h0)
+    return y, h_t

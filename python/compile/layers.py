@@ -1,0 +1,127 @@
+"""Shared layer primitives and the flat-buffer parameter convention.
+
+All model parameters live in ONE flat f32 buffer. The AOT-lowered
+functions take ``(wbuf, inputs...)`` so the rust runtime feeds a single
+weights literal loaded straight from ``artifacts/weights_<name>.bin`` —
+no pytree marshalling crosses the language boundary. ``ParamSpec`` defines
+the layout; ``unpack`` turns the buffer back into named arrays with static
+slices (free at HLO level: they lower to views).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --- flat parameter buffers -------------------------------------------------
+
+
+class ParamSpec:
+    """Ordered (name -> shape) layout of the flat weight buffer."""
+
+    def __init__(self):
+        self.entries: list[tuple[str, tuple[int, ...]]] = []
+        self._offsets: dict[str, tuple[int, tuple[int, ...]]] = {}
+        self._total = 0
+
+    def add(self, name: str, shape: tuple[int, ...]) -> None:
+        if name in self._offsets:
+            raise ValueError(f"duplicate param {name}")
+        size = math.prod(shape)
+        self.entries.append((name, shape))
+        self._offsets[name] = (self._total, shape)
+        self._total += size
+
+    @property
+    def total(self) -> int:
+        return self._total
+
+    def unpack(self, wbuf: jax.Array) -> dict[str, jax.Array]:
+        """Static-slice the flat buffer into named arrays."""
+        out = {}
+        for name, (off, shape) in self._offsets.items():
+            size = math.prod(shape)
+            out[name] = jax.lax.dynamic_slice(wbuf, (off,), (size,)).reshape(shape)
+        return out
+
+    def pack(self, params: dict[str, np.ndarray]) -> np.ndarray:
+        """Concatenate named numpy arrays into the flat buffer."""
+        bufs = []
+        for name, shape in self.entries:
+            arr = np.asarray(params[name], dtype=np.float32)
+            if arr.shape != tuple(shape):
+                raise ValueError(f"{name}: expected {shape}, got {arr.shape}")
+            bufs.append(arr.reshape(-1))
+        return np.concatenate(bufs) if bufs else np.zeros((0,), np.float32)
+
+    def manifest(self) -> list[dict]:
+        return [
+            {"name": n, "shape": list(s), "offset": self._offsets[n][0]}
+            for n, s in self.entries
+        ]
+
+
+# --- primitives --------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm over the last axis."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rmsnorm_gated(x: jax.Array, z_act: jax.Array, w: jax.Array,
+                  eps: float = 1e-5) -> jax.Array:
+    """Mamba-2's gated norm: rmsnorm(x * act(z)) (act applied by caller)."""
+    return rmsnorm(x * z_act, w, eps)
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                  state: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over (T, C) with carried state.
+
+    ``w``: (K, C) depthwise taps, ``state``: (K-1, C) trailing context of
+    the previous segment. Returns (out (T, C), new_state (K-1, C)).
+    """
+    k = w.shape[0]
+    t = x.shape[0]
+    xp = jnp.concatenate([state, x], axis=0)  # (K-1+T, C)
+    out = b + sum(w[i] * jax.lax.dynamic_slice_in_dim(xp, i, t, 0)
+                  for i in range(k))
+    new_state = jax.lax.dynamic_slice_in_dim(xp, t, k - 1, 0)
+    return out, new_state
+
+
+def causal_conv1d_step(x_t: jax.Array, w: jax.Array, b: jax.Array,
+                       state: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Single-token depthwise conv step. state: (K-1, C), x_t: (C,)."""
+    window = jnp.concatenate([state, x_t[None, :]], axis=0)  # (K, C)
+    out = b + jnp.sum(w * window, axis=0)
+    return out, window[1:]
+
+
+def softplus_exact(x: jax.Array) -> jax.Array:
+    return jax.nn.softplus(x)
+
+
+def silu_exact(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x)
+
+
+# --- initialization ----------------------------------------------------------
+
+
+def uniform_init(rng: np.random.Generator, shape, scale: float) -> np.ndarray:
+    return rng.uniform(-scale, scale, size=shape).astype(np.float32)
+
+
+def dt_init(rng: np.random.Generator, n: int, dt_min: float = 1e-3,
+            dt_max: float = 0.1) -> np.ndarray:
+    """Mamba's dt bias init: softplus^{-1} of log-uniform samples."""
+    dt = np.exp(rng.uniform(np.log(dt_min), np.log(dt_max), size=n))
+    # inverse softplus: log(e^x - 1)
+    return np.log(np.expm1(dt)).astype(np.float32)

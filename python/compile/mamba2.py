@@ -1,0 +1,137 @@
+"""Mamba-2 block (Dao & Gu 2024 SSD framework), prefill and decode paths.
+
+Architecture (per HF ``Mamba2Block``, ngroups=1): a single in_proj emits
+[z, x, B, C, dt] at once (the "simultaneous projection" the paper's
+appendix A.1 contrasts with Mamba-1's staged projections); depthwise
+causal conv + SiLU over the concatenated (x, B, C); Softplus on dt with a
+learned bias; chunked SSD with per-head scalar decay; gated RMSNorm;
+out_proj.
+
+The ops the paper's Fig 1 flags as Mamba-2's NPU bottlenecks — CumSum
+(inside SSD's segsum) and ReduceSum (the chunk-state contractions) — are
+inside the pluggable ``ops["ssd"]``: the baseline variant uses the pure-jnp
+``jnp.cumsum``/``einsum`` oracle, the xamba variant the Pallas kernel with
+CumBA/ReduBA rewrites baked in.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers
+from .configs import ModelConfig
+from .kernels import ref
+
+
+# --- parameters ---------------------------------------------------------------
+
+
+def add_block_params(spec: layers.ParamSpec, cfg: ModelConfig, j: int) -> None:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.d_state
+    h, k, cd = cfg.n_heads, cfg.d_conv, cfg.conv_dim
+    p = f"l{j}."
+    spec.add(p + "norm_w", (d,))
+    spec.add(p + "in_proj", (d, 2 * di + 2 * n + h))
+    spec.add(p + "conv_w", (k, cd))
+    spec.add(p + "conv_b", (cd,))
+    spec.add(p + "dt_bias", (h,))
+    spec.add(p + "a_log", (h,))
+    spec.add(p + "d_skip", (h,))
+    spec.add(p + "gnorm_w", (di,))
+    spec.add(p + "out_proj", (di, d))
+
+
+def init_block_params(cfg: ModelConfig, j: int,
+                      rng: np.random.Generator) -> dict[str, np.ndarray]:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.d_state
+    h, k, cd = cfg.n_heads, cfg.d_conv, cfg.conv_dim
+    p = f"l{j}."
+    # A init: log-uniform over [1, 16) per head (mamba2 default)
+    a_log = np.log(rng.uniform(1.0, 16.0, size=h)).astype(np.float32)
+    return {
+        p + "norm_w": np.ones((d,), np.float32),
+        p + "in_proj": layers.uniform_init(rng, (d, 2 * di + 2 * n + h),
+                                           d ** -0.5),
+        p + "conv_w": layers.uniform_init(rng, (k, cd), (k) ** -0.5),
+        p + "conv_b": np.zeros((cd,), np.float32),
+        p + "dt_bias": layers.dt_init(rng, h),
+        p + "a_log": a_log,
+        p + "d_skip": np.ones((h,), np.float32),
+        p + "gnorm_w": np.ones((di,), np.float32),
+        p + "out_proj": layers.uniform_init(rng, (di, d), di ** -0.5),
+    }
+
+
+def _split_zxbcdt(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * n]
+    dt = zxbcdt[..., di + di + 2 * n:]
+    assert dt.shape[-1] == h
+    return z, xbc, dt
+
+
+def _split_xbc(cfg: ModelConfig, xbc: jax.Array):
+    di, n = cfg.d_inner, cfg.d_state
+    return xbc[..., :di], xbc[..., di:di + n], xbc[..., di + n:]
+
+
+# --- prefill -------------------------------------------------------------------
+
+
+def block_prefill(cfg: ModelConfig, ops: dict, p: dict, j: int,
+                  x: jax.Array, conv_state: jax.Array, ssm_state: jax.Array):
+    """One Mamba-2 block over (T, d_model). Returns (y, conv', ssm')."""
+    w = lambda name: p[f"l{j}.{name}"]
+    t = x.shape[0]
+    h, pd = cfg.n_heads, cfg.headdim
+
+    zxbcdt = x @ w("in_proj")
+    z, xbc, dt_raw = _split_zxbcdt(cfg, zxbcdt)
+
+    xbc, conv_state = layers.causal_conv1d(xbc, w("conv_w"), w("conv_b"),
+                                           conv_state)
+    xbc = ops["silu"](xbc)
+    xi, b, c = _split_xbc(cfg, xbc)
+
+    dt = ops["softplus"](dt_raw + w("dt_bias"))  # (T, H)
+    a = -jnp.exp(w("a_log"))  # (H,)
+
+    xh = xi.reshape(t, h, pd)
+    y, ssm_state = ops["ssd"](xh, dt, a, b, c, cfg.chunk, ssm_state)
+    y = y + w("d_skip")[None, :, None] * xh
+    y = y.reshape(t, cfg.d_inner)
+
+    y = layers.rmsnorm_gated(y, ops["silu"](z), w("gnorm_w"))
+    return y @ w("out_proj"), conv_state, ssm_state
+
+
+# --- decode --------------------------------------------------------------------
+
+
+def block_step(cfg: ModelConfig, ops: dict, p: dict, j: int,
+               x_t: jax.Array, conv_state: jax.Array, ssm_state: jax.Array):
+    """One Mamba-2 block for a single token (d_model,)."""
+    w = lambda name: p[f"l{j}.{name}"]
+    h, pd = cfg.n_heads, cfg.headdim
+
+    zxbcdt = x_t @ w("in_proj")
+    z, xbc, dt_raw = _split_zxbcdt(cfg, zxbcdt)
+
+    xbc, conv_state = layers.causal_conv1d_step(xbc, w("conv_w"),
+                                                w("conv_b"), conv_state)
+    xbc = ops["silu"](xbc)
+    xi, b_t, c_t = _split_xbc(cfg, xbc)
+
+    dt_t = ops["softplus"](dt_raw + w("dt_bias"))  # (H,)
+    a = -jnp.exp(w("a_log"))
+
+    xh = xi.reshape(h, pd)
+    y_t, ssm_state = ref.ssd_step_ref(ssm_state, xh, dt_t, a, b_t, c_t)
+    y_t = y_t + w("d_skip")[:, None] * xh
+    y_t = y_t.reshape(cfg.d_inner)
+
+    y_t = layers.rmsnorm_gated(y_t, ops["silu"](z), w("gnorm_w"))
+    return y_t @ w("out_proj"), conv_state, ssm_state

@@ -1,0 +1,189 @@
+"""Full-model assembly: embedding, block stack, variant op tables, and the
+prefill / decode entrypoints that ``aot.py`` lowers to HLO.
+
+XAMBA Step-1 (paper §2): NPUs want static shapes, so serving uses two
+fixed-shape programs — a *prefill* model over a fixed token window (the
+coordinator left-pads shorter prompts) that emits last-position logits plus
+the recurrent states, and a *decode* model that advances one token from
+cached states. Python never runs at serving time; these functions exist
+only to be AOT-lowered.
+
+Variants:
+  * ``baseline`` — exact SiLU/Softplus, pure-jnp sequential scan / SSD
+    with ``jnp.cumsum`` + ``einsum`` (the unoptimized graph of Fig 1).
+  * ``xamba``    — ActiBA PLU activations, Pallas scan / SSD kernels with
+    the CumBA masked-matmul and ReduBA contraction rewrites inside.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers, mamba, mamba2, plu
+from .configs import ModelConfig
+from .kernels import actiba, ref, scan, ssd
+
+
+# --- variant op tables --------------------------------------------------------
+
+
+def _plu_ops(cfg: ModelConfig) -> dict:
+    seg, r = cfg.plu_segments, cfg.plu_range
+    silu_t = plu.silu_table(seg, -r, r)
+    sp_t = plu.softplus_table(seg, -r, r)
+    silu_m = jnp.asarray(silu_t.slopes)
+    silu_c = jnp.asarray(silu_t.intercepts)
+    sp_m = jnp.asarray(sp_t.slopes)
+    sp_c = jnp.asarray(sp_t.intercepts)
+
+    def silu_plu(x):
+        return actiba.plu_apply(x, silu_m, silu_c, silu_t.lo, silu_t.hi)
+
+    def softplus_plu(x):
+        return actiba.plu_apply(x, sp_m, sp_c, sp_t.lo, sp_t.hi)
+
+    return {"silu": silu_plu, "softplus": softplus_plu}
+
+
+def make_ops(cfg: ModelConfig, variant: str) -> dict:
+    """Build the pluggable op table for a model variant."""
+    if variant == "baseline":
+        return {
+            "silu": layers.silu_exact,
+            "softplus": layers.softplus_exact,
+            "scan": ref.selective_scan_ref,
+            "ssd": ref.ssd_ref,
+        }
+    if variant == "xamba":
+        ops = _plu_ops(cfg)
+        ops["scan"] = scan.selective_scan
+        ops["ssd"] = ssd.ssd
+        return ops
+    # ablations: activations-only or matrix-rewrites-only
+    if variant == "xamba-acti":
+        ops = _plu_ops(cfg)
+        ops["scan"] = ref.selective_scan_ref
+        ops["ssd"] = ref.ssd_ref
+        return ops
+    if variant == "xamba-mat":
+        return {
+            "silu": layers.silu_exact,
+            "softplus": layers.softplus_exact,
+            "scan": scan.selective_scan,
+            "ssd": ssd.ssd,
+        }
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+# --- parameter layout ---------------------------------------------------------
+
+
+def build_spec(cfg: ModelConfig) -> layers.ParamSpec:
+    spec = layers.ParamSpec()
+    spec.add("emb", (cfg.vocab_size, cfg.d_model))
+    blk = mamba if cfg.arch == "mamba" else mamba2
+    for j in range(cfg.n_layers):
+        blk.add_block_params(spec, cfg, j)
+    spec.add("final_norm_w", (cfg.d_model,))
+    return spec
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    params = {
+        "emb": (rng.normal(size=(cfg.vocab_size, cfg.d_model)) * 0.02
+                ).astype(np.float32),
+        "final_norm_w": np.ones((cfg.d_model,), np.float32),
+    }
+    blk = mamba if cfg.arch == "mamba" else mamba2
+    for j in range(cfg.n_layers):
+        params.update(blk.init_block_params(cfg, j, rng))
+    return params
+
+
+def state_shapes(cfg: ModelConfig) -> dict[str, tuple[int, ...]]:
+    """Recurrent-state tensor shapes (the serving layer's 'KV cache')."""
+    conv = (cfg.n_layers, cfg.d_conv - 1, cfg.conv_dim)
+    if cfg.arch == "mamba":
+        ssm = (cfg.n_layers, cfg.d_inner, cfg.d_state)
+    else:
+        ssm = (cfg.n_layers, cfg.n_heads, cfg.headdim, cfg.d_state)
+    return {"conv": conv, "ssm": ssm}
+
+
+# --- forward -------------------------------------------------------------------
+
+
+def _backbone(cfg: ModelConfig, ops: dict, p: dict, x: jax.Array,
+              conv0: jax.Array, ssm0: jax.Array, *, step: bool):
+    """Shared block-stack walk for prefill (T, d) and decode (d,)."""
+    blk = mamba if cfg.arch == "mamba" else mamba2
+    f = blk.block_step if step else blk.block_prefill
+    convs, ssms = [], []
+    for j in range(cfg.n_layers):
+        xn = layers.rmsnorm(x, p[f"l{j}.norm_w"])
+        y, c_j, s_j = f(cfg, ops, p, j, xn, conv0[j], ssm0[j])
+        x = x + y
+        convs.append(c_j)
+        ssms.append(s_j)
+    x = layers.rmsnorm(x, p["final_norm_w"])
+    return x, jnp.stack(convs), jnp.stack(ssms)
+
+
+def prefill(cfg: ModelConfig, variant: str, wbuf: jax.Array,
+            tokens: jax.Array, conv0: jax.Array, ssm0: jax.Array):
+    """Fixed-window prefill. tokens: (T,) int32.
+
+    Returns (last_logits (V,), conv' (L,K-1,C), ssm').
+    """
+    spec = build_spec(cfg)
+    p = spec.unpack(wbuf)
+    ops = make_ops(cfg, variant)
+    x = p["emb"][tokens]  # (T, d_model)
+    x, convs, ssms = _backbone(cfg, ops, p, x, conv0, ssm0, step=False)
+    logits = x[-1] @ p["emb"].T  # tied head, last position only
+    return logits, convs, ssms
+
+
+def prefill_all_logits(cfg: ModelConfig, variant: str, wbuf: jax.Array,
+                       tokens: jax.Array, conv0: jax.Array, ssm0: jax.Array):
+    """Prefill that keeps logits at every position (training / eval)."""
+    spec = build_spec(cfg)
+    p = spec.unpack(wbuf)
+    ops = make_ops(cfg, variant)
+    x = p["emb"][tokens]
+    x, convs, ssms = _backbone(cfg, ops, p, x, conv0, ssm0, step=False)
+    return x @ p["emb"].T, convs, ssms
+
+
+def decode(cfg: ModelConfig, variant: str, wbuf: jax.Array,
+           token: jax.Array, conv0: jax.Array, ssm0: jax.Array):
+    """Single-token decode step. token: () int32.
+
+    Returns (logits (V,), conv', ssm').
+    """
+    spec = build_spec(cfg)
+    p = spec.unpack(wbuf)
+    ops = make_ops(cfg, variant)
+    x = p["emb"][token]  # (d_model,)
+    x, convs, ssms = _backbone(cfg, ops, p, x, conv0, ssm0, step=True)
+    logits = x @ p["emb"].T
+    return logits, convs, ssms
+
+
+def zero_states(cfg: ModelConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    ss = state_shapes(cfg)
+    return (jnp.zeros(ss["conv"], jnp.float32),
+            jnp.zeros(ss["ssm"], jnp.float32))
+
+
+def jit_prefill(cfg: ModelConfig, variant: str):
+    return jax.jit(functools.partial(prefill, cfg, variant))
+
+
+def jit_decode(cfg: ModelConfig, variant: str):
+    return jax.jit(functools.partial(decode, cfg, variant))

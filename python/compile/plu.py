@@ -1,0 +1,132 @@
+"""Piecewise-linear (PLU / C-LUT) fitting of activation functions.
+
+This is the build-time half of ActiBA (paper §2.2): the NPU's Piecewise
+Linear Unit evaluates ``f(x) ~= m_k * x + c_k`` over intervals
+``[x_k, x_{k+1}]`` using a Configurable Lookup Table (C-LUT) of slopes and
+intercepts. We fit the C-LUT here (mirrored bit-for-bit by the rust
+``plu::`` module so the simulator and the AOT artifacts agree) and bake the
+resulting constants into the ``xamba`` model variants.
+
+Both SiLU and Softplus are non-linear only near the origin and become
+linear in the tails (SiLU -> 0 / x, Softplus -> 0 / x), so a modest number
+of uniform segments over a clipped core range plus two analytic tail
+segments gives max-error well below 1e-2 -- the "negligible quality loss"
+regime Table 1 of the paper reports.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PluTable:
+    """A C-LUT: ``K`` uniform segments on ``[lo, hi]`` plus linear tails.
+
+    Segment ``k`` covers ``[lo + k*step, lo + (k+1)*step)``. Inputs below
+    ``lo`` use segment 0 and inputs at/above ``hi`` use segment ``K-1``;
+    the fitters choose tail slopes/intercepts analytically so the clamped
+    segments are exact in the limit (not just at the knots).
+    """
+
+    lo: float
+    hi: float
+    slopes: np.ndarray  # (K,) float32
+    intercepts: np.ndarray  # (K,) float32
+
+    @property
+    def num_segments(self) -> int:
+        return int(self.slopes.shape[0])
+
+    @property
+    def step(self) -> float:
+        return (self.hi - self.lo) / self.num_segments
+
+    def __call__(self, x: np.ndarray) -> np.ndarray:
+        x = np.asarray(x, dtype=np.float32)
+        k = np.clip(
+            np.floor((x - self.lo) / self.step).astype(np.int32),
+            0,
+            self.num_segments - 1,
+        )
+        return self.slopes[k] * x + self.intercepts[k]
+
+    def as_arrays(self) -> tuple[np.ndarray, np.ndarray]:
+        return self.slopes, self.intercepts
+
+    def to_dict(self) -> dict:
+        return {
+            "lo": self.lo,
+            "hi": self.hi,
+            "slopes": self.slopes.tolist(),
+            "intercepts": self.intercepts.tolist(),
+        }
+
+
+def _secant_fit(f, lo: float, hi: float, segments: int) -> tuple[np.ndarray, np.ndarray]:
+    """Slope/intercept per segment from secants through the knots."""
+    knots = np.linspace(lo, hi, segments + 1, dtype=np.float64)
+    fk = f(knots)
+    m = (fk[1:] - fk[:-1]) / (knots[1:] - knots[:-1])
+    c = fk[:-1] - m * knots[:-1]
+    return m.astype(np.float32), c.astype(np.float32)
+
+
+def fit_plu(
+    f,
+    lo: float,
+    hi: float,
+    segments: int,
+    tail_lo: tuple[float, float] | None = None,
+    tail_hi: tuple[float, float] | None = None,
+) -> PluTable:
+    """Fit a C-LUT for ``f`` on ``[lo, hi]`` with uniform ``segments``.
+
+    ``tail_lo`` / ``tail_hi`` are optional analytic ``(slope, intercept)``
+    pairs overriding the first / last segment so out-of-range inputs follow
+    the function's asymptote instead of extrapolating a secant.
+    """
+    if segments < 2:
+        raise ValueError(f"need >= 2 segments, got {segments}")
+    m, c = _secant_fit(f, lo, hi, segments)
+    if tail_lo is not None:
+        m[0], c[0] = tail_lo
+    if tail_hi is not None:
+        m[-1], c[-1] = tail_hi
+    return PluTable(lo=float(lo), hi=float(hi), slopes=m, intercepts=c)
+
+
+def silu_table(segments: int = 32, lo: float = -8.0, hi: float = 8.0) -> PluTable:
+    """C-LUT for SiLU(x) = x * sigmoid(x). Tails: 0 below, identity above."""
+
+    def silu(x):
+        return x / (1.0 + np.exp(-x))
+
+    return fit_plu(
+        silu, lo, hi, segments, tail_lo=(0.0, 0.0), tail_hi=(1.0, 0.0)
+    )
+
+
+def softplus_table(
+    segments: int = 32, lo: float = -8.0, hi: float = 8.0, beta: float = 1.0
+) -> PluTable:
+    """C-LUT for Softplus(x) = log(1 + e^{beta x}) / beta."""
+
+    def softplus(x):
+        # numerically-stable log1p(exp(.))
+        z = beta * x
+        return (np.maximum(z, 0.0) + np.log1p(np.exp(-np.abs(z)))) / beta
+
+    return fit_plu(
+        softplus, lo, hi, segments, tail_lo=(0.0, 0.0), tail_hi=(1.0, 0.0)
+    )
+
+
+def max_abs_error(table: PluTable, f, n: int = 200_001, span: float = 4.0) -> float:
+    """Max |f - plu| over a dense grid extending ``span`` beyond the range."""
+    xs = np.linspace(table.lo - span, table.hi + span, n, dtype=np.float64)
+    exact = f(xs)
+    approx = table(xs.astype(np.float32)).astype(np.float64)
+    return float(np.max(np.abs(exact - approx)))

@@ -1,0 +1,149 @@
+"""Build-time training of the tiny char-LMs served by the demo.
+
+The paper benchmarks pretrained HuggingFace checkpoints; with no network
+access we instead train the same architectures (tiny preset) as byte-level
+LMs on a synthetic-but-structured corpus for a few hundred steps, so the
+served model has real predictive behaviour (greedy decode completes corpus
+patterns) and the quality experiments (Table-1 substitute) have a signal
+to degrade. The loss curve lands in ``artifacts/train_log_<name>.txt`` and
+EXPERIMENTS.md.
+
+Training uses the ``baseline`` variant (exact activations, pure-jnp scan:
+fast to differentiate); the exported weights are shared by all variants —
+exactly the paper's setting, where ActiBA approximates a model trained
+with exact activations.
+
+Usage: python -m compile.train [--arch mamba|mamba2] [--steps N] [--out DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+from .configs import PRESETS, ModelConfig
+
+WINDOW = 64  # training window == serving prefill window
+
+
+# --- synthetic corpus ---------------------------------------------------------
+
+_WORDS = [
+    "state", "space", "models", "scan", "mamba", "npu", "kernel", "mask",
+    "cumsum", "matmul", "vector", "chunk", "drain", "tile", "gate", "token",
+]
+
+_TEMPLATES = [
+    "the {a} {b} runs on the {c} .",
+    "a {a} maps the {b} to the {c} .",
+    "every {a} needs a {b} and a {c} .",
+    "{a} plus {b} gives {c} .",
+    "fast {a} , slow {b} , tiny {c} .",
+]
+
+
+def make_corpus(n_sentences: int = 3000, seed: int = 7) -> bytes:
+    """Deterministic synthetic corpus with heavy n-gram structure."""
+    rng = np.random.default_rng(seed)
+    parts = []
+    for _ in range(n_sentences):
+        t = _TEMPLATES[rng.integers(len(_TEMPLATES))]
+        a, b, c = rng.choice(_WORDS, size=3)
+        parts.append(t.format(a=a, b=b, c=c))
+    return (" ".join(parts)).encode("ascii")
+
+
+def batches(corpus: bytes, batch: int, steps: int, seed: int = 11):
+    """Yield (tokens (B, W+1) int32) training windows."""
+    data = np.frombuffer(corpus, dtype=np.uint8).astype(np.int32)
+    rng = np.random.default_rng(seed)
+    hi = len(data) - WINDOW - 1
+    for _ in range(steps):
+        idx = rng.integers(0, hi, size=batch)
+        yield np.stack([data[i:i + WINDOW + 1] for i in idx])
+
+
+# --- loss / optimizer ---------------------------------------------------------
+
+
+def loss_fn(cfg: ModelConfig, wbuf, tokens):
+    """Mean next-byte cross-entropy over a (B, W+1) batch."""
+    conv0, ssm0 = model.zero_states(cfg)
+
+    def one(seq):
+        logits, _, _ = model.prefill_all_logits(
+            cfg, "baseline", wbuf, seq[:-1], conv0, ssm0)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(
+            logp, seq[1:, None], axis=-1))
+
+    return jnp.mean(jax.vmap(one)(tokens))
+
+
+def adam_update(g, m, v, w, step, lr=2e-3, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * jnp.square(g)
+    mhat = m / (1 - b1 ** step)
+    vhat = v / (1 - b2 ** step)
+    return m, v, w - lr * mhat / (jnp.sqrt(vhat) + eps)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def train_step(cfg: ModelConfig, wbuf, m, v, step, tokens):
+    loss, g = jax.value_and_grad(lambda w: loss_fn(cfg, w, tokens))(wbuf)
+    m, v, wbuf = adam_update(g, m, v, wbuf, step)
+    return loss, wbuf, m, v
+
+
+# --- driver --------------------------------------------------------------------
+
+
+def train(cfg: ModelConfig, steps: int, batch: int, out_dir: str,
+          seed: int = 0) -> np.ndarray:
+    spec = model.build_spec(cfg)
+    wbuf = jnp.asarray(spec.pack(model.init_params(cfg, seed)))
+    m = jnp.zeros_like(wbuf)
+    v = jnp.zeros_like(wbuf)
+    corpus = make_corpus()
+    log = []
+    t0 = time.time()
+    for i, toks in enumerate(batches(corpus, batch, steps), start=1):
+        loss, wbuf, m, v = train_step(cfg, wbuf, m, v, float(i),
+                                      jnp.asarray(toks))
+        if i == 1 or i % 20 == 0 or i == steps:
+            log.append((i, float(loss)))
+            print(f"[{cfg.name}] step {i:4d}  loss {float(loss):.4f}  "
+                  f"({time.time() - t0:.1f}s)")
+    w_np = np.asarray(wbuf, dtype=np.float32)
+    w_path = f"{out_dir}/weights_{cfg.name}.bin"
+    w_np.tofile(w_path)
+    with open(f"{out_dir}/train_log_{cfg.name}.txt", "w") as f:
+        f.write("step\tloss\n")
+        for s, l in log:
+            f.write(f"{s}\t{l:.6f}\n")
+    print(f"[{cfg.name}] wrote {w_path} ({w_np.size} f32)")
+    return w_np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=["mamba", "mamba2", "both"],
+                    default="both")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    names = {"mamba": ["tiny-mamba"], "mamba2": ["tiny-mamba2"],
+             "both": ["tiny-mamba", "tiny-mamba2"]}[args.arch]
+    for name in names:
+        train(PRESETS[name], args.steps, args.batch, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""AOT export path: HLO-text interchange invariants and block programs.
+
+The three interchange gotchas this suite guards (each cost a real debugging
+session against xla_extension 0.5.1 — see DESIGN.md):
+  1. text, not serialized protos (64-bit instruction ids);
+  2. no rank-1 dot operands in kernels (miscompiled to zeros);
+  3. print_large_constants=True (elided constants parse as zeros).
+"""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, configs, model
+
+
+class TestHloText:
+    def test_no_elided_constants(self):
+        """Gotcha #3: `constant({...})` placeholders must never appear."""
+        cfg = configs.TINY_MAMBA
+        spec = model.build_spec(cfg)
+        w = jnp.asarray(spec.pack(model.init_params(cfg)))
+        toks = jnp.zeros((8,), jnp.int32)
+        c0, s0 = model.zero_states(cfg)
+        import functools
+        fn = functools.partial(model.prefill, cfg, "xamba")
+        lowered = jax.jit(fn).lower(w, toks, c0, s0)
+        text = aot.to_hlo_text(lowered)
+        assert "constant({...})" not in text, "large constants were elided"
+        assert text.startswith("HloModule")
+
+    def test_artifacts_hlo_files_clean(self):
+        """If artifacts exist, they must all satisfy the invariant too."""
+        if not os.path.exists("../artifacts/manifest.json"):
+            pytest.skip("artifacts not built")
+        import json
+        man = json.load(open("../artifacts/manifest.json"))
+        for m in man["models"]:
+            text = open(f"../artifacts/{m['hlo']}").read()
+            assert "constant({...})" not in text, m["hlo"]
+
+
+class TestBlockPrograms:
+    def test_block_fwd_matches_model_block(self):
+        """The exported single-block program equals the in-model block."""
+        cfg = configs.TINY_MAMBA2
+        wbuf = jnp.asarray(aot.block_init(cfg, seed=3))
+        rng = np.random.default_rng(4)
+        x = jnp.asarray(rng.normal(size=(32, cfg.d_model)).astype(np.float32))
+        conv0 = jnp.zeros((cfg.d_conv - 1, cfg.conv_dim), jnp.float32)
+        ssm0 = jnp.zeros((cfg.n_heads, cfg.headdim, cfg.d_state), jnp.float32)
+        y, c, s = aot.block_fwd(cfg, "baseline", wbuf, x, conv0, ssm0)
+        assert y.shape == (32, cfg.d_model)
+        assert c.shape == conv0.shape and s.shape == ssm0.shape
+        # xamba variant numerically close
+        y2, _, _ = aot.block_fwd(cfg, "xamba", wbuf, x, conv0, ssm0)
+        assert float(jnp.max(jnp.abs(y - y2))) < 0.5
+
+    def test_block_spec_totals_match_rust(self):
+        # asserted against aot.py's printed sizes in rust params.rs tests
+        assert aot.block_spec(configs.BLOCK_130M_MAMBA).total == 3_771_648
+        assert aot.block_spec(configs.BLOCK_130M_MAMBA2).total == 3_765_320
+
+
+class TestManifest:
+    def test_manifest_covers_all_programs(self):
+        if not os.path.exists("../artifacts/manifest.json"):
+            pytest.skip("artifacts not built")
+        import json
+        man = json.load(open("../artifacts/manifest.json"))
+        kinds = {(m["name"], m["variant"], m["kind"]) for m in man["models"]}
+        for name in ["tiny-mamba", "tiny-mamba2"]:
+            for variant in ["baseline", "xamba"]:
+                assert (name, variant, "prefill") in kinds
+                for b in [1, 2, 4, 8]:
+                    assert (name, variant, f"decode_b{b}") in kinds
+        # every referenced file exists with plausible size
+        for m in man["models"]:
+            p = f"../artifacts/{m['hlo']}"
+            assert os.path.getsize(p) > 1000, p
+            wp = f"../artifacts/{m['weights']}"
+            assert os.path.getsize(wp) == 4 * m["weights_len"], wp
+
+    def test_golden_has_prefill_entries(self):
+        if not os.path.exists("../artifacts/golden.json"):
+            pytest.skip("artifacts not built")
+        import json
+        g = json.load(open("../artifacts/golden.json"))
+        e = g["tiny-mamba.baseline.prefill"]
+        assert len(e["tokens"]) == 64
+        assert len(e["outputs"][0]["head"]) == 16
+        assert np.isfinite(e["outputs"][0]["sum"])

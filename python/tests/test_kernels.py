@@ -1,0 +1,286 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+This is the core correctness signal of the compile path: the kernels are
+exactly what gets lowered into the AOT artifacts the rust runtime serves.
+Hypothesis sweeps shapes; tolerances are tight because interpret-mode
+Pallas and the oracle share numerics.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import plu as pluf
+from compile.kernels import actiba, cumba, reduba, ref, scan, ssd
+
+RNG = np.random.default_rng(0)
+
+
+def norm(shape, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32) * scale)
+
+
+# --- CumBA -----------------------------------------------------------------
+
+
+class TestCumba:
+    def test_matches_cumsum_paper_shape(self):
+        # the 256x256 CumSum_b of Mamba-2 130M
+        x = norm((256, 256))
+        np.testing.assert_allclose(
+            cumba.cumba_cumsum(x), ref.cumsum_ref(x), rtol=2e-5, atol=2e-4)
+
+    def test_mask_semantics(self):
+        m = np.asarray(ref.cumba_mask(4))
+        expect = np.tril(np.ones((4, 4), np.float32))
+        np.testing.assert_array_equal(m, expect)
+
+    def test_cumba_ref_equals_cumsum(self):
+        x = norm((32, 8))
+        np.testing.assert_allclose(
+            ref.cumba_ref(x), ref.cumsum_ref(x), rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        m=st.integers(2, 96),
+        n=st.integers(1, 40),
+        seed=st.integers(0, 2**31),
+    )
+    def test_shape_sweep(self, m, n, seed):
+        r = np.random.default_rng(seed)
+        x = jnp.asarray(r.normal(size=(m, n)).astype(np.float32))
+        np.testing.assert_allclose(
+            cumba.cumba_cumsum(x), ref.cumsum_ref(x), rtol=2e-5, atol=2e-4)
+
+    def test_last_axis_variant(self):
+        x = norm((16, 24))
+        np.testing.assert_allclose(
+            cumba.cumba_cumsum_last(x), jnp.cumsum(x, axis=-1),
+            rtol=2e-5, atol=2e-4)
+
+    def test_rejects_bad_rank(self):
+        with pytest.raises(ValueError):
+            cumba.cumba_cumsum(norm((2, 3, 4)))
+
+
+# --- ReduBA ----------------------------------------------------------------
+
+
+class TestReduba:
+    def test_matches_reducesum(self):
+        x = norm((128, 96))
+        np.testing.assert_allclose(
+            reduba.reduba_reducesum(x), ref.reducesum_ref(x),
+            rtol=2e-5, atol=2e-4)
+
+    def test_reducesum_is_last_cumsum_row(self):
+        # paper §2.1: R_j = C_{m,j}
+        x = norm((24, 12))
+        np.testing.assert_allclose(
+            ref.reducesum_ref(x), ref.cumsum_ref(x)[-1], rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        m=st.integers(1, 80),
+        n=st.integers(1, 48),
+        seed=st.integers(0, 2**31),
+    )
+    def test_shape_sweep(self, m, n, seed):
+        r = np.random.default_rng(seed)
+        x = jnp.asarray(r.normal(size=(m, n)).astype(np.float32))
+        np.testing.assert_allclose(
+            reduba.reduba_reducesum(x), ref.reducesum_ref(x),
+            rtol=2e-5, atol=3e-4)
+
+
+# --- ActiBA / PLU ------------------------------------------------------------
+
+
+class TestActiba:
+    @pytest.mark.parametrize("table_fn,exact", [
+        (pluf.silu_table, lambda x: x / (1 + np.exp(-x))),
+        (pluf.softplus_table, lambda x: np.logaddexp(0, x)),
+    ])
+    def test_plu_apply_matches_ref_and_exact(self, table_fn, exact):
+        t = table_fn(32)
+        x = norm((2048,), scale=3.0)
+        sl, ic = jnp.asarray(t.slopes), jnp.asarray(t.intercepts)
+        got = actiba.plu_apply(x, sl, ic, t.lo, t.hi)
+        want = ref.plu_ref(x, sl, ic, t.lo, t.hi)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+        err = np.max(np.abs(np.asarray(got) - exact(np.asarray(x))))
+        assert err < 0.02, f"PLU-32 error {err} not negligible"
+
+    def test_matmul_plu_fused_drain(self):
+        t = pluf.silu_table(32)
+        a, w = norm((32, 48)), norm((48, 64))
+        sl, ic = jnp.asarray(t.slopes), jnp.asarray(t.intercepts)
+        got = actiba.matmul_plu(a, w, sl, ic, t.lo, t.hi, bm=16, bn=32, bk=16)
+        want = ref.plu_ref(a @ w, sl, ic, t.lo, t.hi)
+        np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        n=st.integers(8, 1024),
+        segments=st.sampled_from([8, 16, 32, 64]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_plu_sweep(self, n, segments, seed):
+        r = np.random.default_rng(seed)
+        t = pluf.silu_table(segments)
+        x = jnp.asarray(r.normal(size=n).astype(np.float32) * 5)
+        sl, ic = jnp.asarray(t.slopes), jnp.asarray(t.intercepts)
+        got = actiba.plu_apply(x, sl, ic, t.lo, t.hi)
+        np.testing.assert_allclose(
+            got, ref.plu_ref(x, sl, ic, t.lo, t.hi), rtol=1e-5, atol=1e-5)
+
+    def test_out_of_range_uses_tails(self):
+        t = pluf.silu_table(16)
+        sl, ic = jnp.asarray(t.slopes), jnp.asarray(t.intercepts)
+        x = jnp.asarray([-100.0, 100.0], jnp.float32)
+        got = np.asarray(actiba.plu_apply(x, sl, ic, t.lo, t.hi))
+        assert got[0] == 0.0
+        np.testing.assert_allclose(got[1], 100.0, rtol=1e-5)
+
+
+# --- selective scan (Mamba-1) -------------------------------------------------
+
+
+class TestScan:
+    def _args(self, t, d, n, seed=0):
+        r = np.random.default_rng(seed)
+        return (
+            jnp.asarray(r.normal(size=(t, d)).astype(np.float32)),
+            jnp.asarray(r.uniform(0.01, 0.2, size=(t, d)).astype(np.float32)),
+            jnp.asarray(-r.uniform(0.5, 2.0, size=(d, n)).astype(np.float32)),
+            jnp.asarray(r.normal(size=(t, n)).astype(np.float32)),
+            jnp.asarray(r.normal(size=(t, n)).astype(np.float32)),
+            jnp.asarray(r.normal(size=(d,)).astype(np.float32)),
+        )
+
+    def test_matches_oracle(self):
+        x, dt, a, b, c, d = self._args(24, 64, 16)
+        h0 = jnp.zeros((64, 16), jnp.float32)
+        y1, h1 = scan.selective_scan(x, dt, a, b, c, d, h0, bd=32)
+        y2, h2 = ref.selective_scan_ref(x, dt, a, b, c, d)
+        np.testing.assert_allclose(y1, y2, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(h1, h2, rtol=2e-5, atol=2e-5)
+
+    def test_state_carry_equals_concatenation(self):
+        # scanning [x1; x2] == scan x1 then scan x2 from its final state
+        x, dt, a, b, c, d = self._args(16, 32, 8, seed=3)
+        h0 = jnp.zeros((32, 8), jnp.float32)
+        y_full, h_full = scan.selective_scan(x, dt, a, b, c, d, h0, bd=16)
+        y1, h1 = scan.selective_scan(x[:8], dt[:8], a, b[:8], c[:8], d, h0, bd=16)
+        y2, h2 = scan.selective_scan(x[8:], dt[8:], a, b[8:], c[8:], d, h1, bd=16)
+        np.testing.assert_allclose(
+            np.concatenate([y1, y2]), y_full, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(h2, h_full, rtol=2e-4, atol=2e-4)
+
+    def test_scan_equals_stepwise(self):
+        x, dt, a, b, c, d = self._args(12, 16, 4, seed=5)
+        h = jnp.zeros((16, 4), jnp.float32)
+        ys = []
+        for t in range(12):
+            y_t, h = ref.selective_step_ref(h, x[t], dt[t], a, b[t], c[t], d)
+            ys.append(y_t)
+        y_ref, h_ref = ref.selective_scan_ref(x, dt, a, b, c, d)
+        np.testing.assert_allclose(jnp.stack(ys), y_ref, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(h, h_ref, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=6, deadline=None)
+    @given(
+        t=st.integers(1, 20),
+        d=st.sampled_from([8, 16, 48]),
+        n=st.sampled_from([4, 8]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_shape_sweep(self, t, d, n, seed):
+        x, dt, a, b, c, dd = self._args(t, d, n, seed=seed)
+        h0 = jnp.zeros((d, n), jnp.float32)
+        y1, h1 = scan.selective_scan(x, dt, a, b, c, dd, h0, bd=8)
+        y2, h2 = ref.selective_scan_ref(x, dt, a, b, c, dd)
+        np.testing.assert_allclose(y1, y2, rtol=5e-5, atol=5e-5)
+        np.testing.assert_allclose(h1, h2, rtol=5e-5, atol=5e-5)
+
+
+# --- SSD (Mamba-2) ---------------------------------------------------------------
+
+
+class TestSsd:
+    def _args(self, t, h, p, n, seed=0):
+        r = np.random.default_rng(seed)
+        return (
+            jnp.asarray(r.normal(size=(t, h, p)).astype(np.float32)),
+            jnp.asarray(r.uniform(0.01, 0.2, size=(t, h)).astype(np.float32)),
+            jnp.asarray(-r.uniform(0.5, 2.0, size=(h,)).astype(np.float32)),
+            jnp.asarray(r.normal(size=(t, n)).astype(np.float32)),
+            jnp.asarray(r.normal(size=(t, n)).astype(np.float32)),
+        )
+
+    def test_single_chunk_matches_oracle(self):
+        x, dt, a, b, c = self._args(32, 4, 16, 8)
+        h0 = jnp.zeros((4, 16, 8), jnp.float32)
+        y1, s1 = ssd.ssd_chunk(x, dt, a, b, c, h0)
+        y2, s2 = ref.ssd_chunk_ref(x, dt, a, b, c, h0=h0)
+        np.testing.assert_allclose(y1, y2, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(s1, s2, rtol=2e-4, atol=2e-4)
+
+    def test_multi_chunk_state_carry(self):
+        x, dt, a, b, c = self._args(64, 2, 8, 16, seed=2)
+        y1, s1 = ssd.ssd(x, dt, a, b, c, chunk=16)
+        y2, s2 = ref.ssd_ref(x, dt, a, b, c, chunk=16)
+        np.testing.assert_allclose(y1, y2, rtol=3e-4, atol=3e-4)
+        np.testing.assert_allclose(s1, s2, rtol=3e-4, atol=3e-4)
+
+    def test_chunked_equals_stepwise(self):
+        # chunked SSD == token-by-token recurrence (duality check)
+        x, dt, a, b, c = self._args(16, 2, 4, 8, seed=7)
+        y_c, s_c = ref.ssd_ref(x, dt, a, b, c, chunk=8)
+        state = jnp.zeros((2, 4, 8), jnp.float32)
+        ys = []
+        for t in range(16):
+            y_t, state = ref.ssd_step_ref(state, x[t], dt[t], a, b[t], c[t])
+            ys.append(y_t)
+        np.testing.assert_allclose(jnp.stack(ys), y_c, rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(state, s_c, rtol=2e-3, atol=2e-3)
+
+    def test_chunk_size_invariance(self):
+        x, dt, a, b, c = self._args(32, 2, 8, 8, seed=9)
+        y8, s8 = ssd.ssd(x, dt, a, b, c, chunk=8)
+        y16, s16 = ssd.ssd(x, dt, a, b, c, chunk=16)
+        np.testing.assert_allclose(y8, y16, rtol=3e-4, atol=3e-4)
+        np.testing.assert_allclose(s8, s16, rtol=3e-4, atol=3e-4)
+
+    def test_rejects_indivisible_chunk(self):
+        x, dt, a, b, c = self._args(10, 2, 4, 4)
+        with pytest.raises(ValueError):
+            ssd.ssd(x, dt, a, b, c, chunk=4)
+
+    @settings(max_examples=5, deadline=None)
+    @given(
+        chunk=st.sampled_from([4, 8, 16]),
+        h=st.sampled_from([1, 2, 4]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_shape_sweep(self, chunk, h, seed):
+        x, dt, a, b, c = self._args(2 * chunk, h, 8, 8, seed=seed)
+        y1, s1 = ssd.ssd(x, dt, a, b, c, chunk=chunk)
+        y2, s2 = ref.ssd_ref(x, dt, a, b, c, chunk=chunk)
+        np.testing.assert_allclose(y1, y2, rtol=5e-4, atol=5e-4)
+        np.testing.assert_allclose(s1, s2, rtol=5e-4, atol=5e-4)
+
+
+# --- segsum oracle ------------------------------------------------------------
+
+
+def test_segsum_definition():
+    a = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    s = np.asarray(ref.segsum_ref(a))
+    # S[i,j] = sum_{k in (j, i]} a[k]
+    assert s[2, 0] == pytest.approx(2.0 + 3.0)
+    assert s[3, 1] == pytest.approx(3.0 + 4.0)
+    assert s[1, 1] == pytest.approx(0.0)
+    assert np.isneginf(s[0, 2])

@@ -1,0 +1,118 @@
+"""L2 model correctness: prefill/decode state consistency, variant
+equivalence, and the flat-buffer parameter ABI shared with rust."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import configs, model
+
+TOKS = jnp.asarray((np.arange(64) * 7 + 3) % 256, jnp.int32)
+
+
+def _weights(cfg, seed=0):
+    spec = model.build_spec(cfg)
+    return spec, jnp.asarray(spec.pack(model.init_params(cfg, seed)))
+
+
+class TestParamSpec:
+    def test_totals_match_rust_mirror(self):
+        # these constants are asserted on the rust side too (params.rs)
+        assert model.build_spec(configs.TINY_MAMBA).total == 266_112
+        assert model.build_spec(configs.TINY_MAMBA2).total == 251_952
+
+    def test_pack_unpack_round_trip(self):
+        cfg = configs.TINY_MAMBA
+        spec = model.build_spec(cfg)
+        params = model.init_params(cfg, seed=1)
+        buf = spec.pack(params)
+        back = spec.unpack(jnp.asarray(buf))
+        for name, shape in spec.entries:
+            np.testing.assert_array_equal(np.asarray(back[name]), params[name])
+            assert back[name].shape == tuple(shape)
+
+    def test_duplicate_name_rejected(self):
+        from compile.layers import ParamSpec
+        s = ParamSpec()
+        s.add("w", (2,))
+        with pytest.raises(ValueError):
+            s.add("w", (3,))
+
+    def test_pack_shape_mismatch_rejected(self):
+        from compile.layers import ParamSpec
+        s = ParamSpec()
+        s.add("w", (2, 2))
+        with pytest.raises(ValueError):
+            s.pack({"w": np.zeros((2, 3), np.float32)})
+
+
+@pytest.mark.parametrize("cfg", [configs.TINY_MAMBA, configs.TINY_MAMBA2],
+                         ids=["mamba", "mamba2"])
+class TestConsistency:
+    def test_prefill_equals_decode_chain(self, cfg):
+        """XAMBA Step-1 invariant: the fixed-window prefill model and the
+        cached-state decode model implement the same recurrence."""
+        _, w = _weights(cfg)
+        c0, s0 = model.zero_states(cfg)
+        lg_p, c_p, s_p = model.prefill(cfg, "baseline", w, TOKS, c0, s0)
+        lg_d, c_d, s_d = None, c0, s0
+        for t in range(TOKS.shape[0]):
+            lg_d, c_d, s_d = model.decode(cfg, "baseline", w, TOKS[t], c_d, s_d)
+        np.testing.assert_allclose(lg_p, lg_d, rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(c_p, c_d, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(s_p, s_d, rtol=2e-3, atol=2e-3)
+
+    def test_xamba_variant_close_to_baseline(self, cfg):
+        """The Pallas/PLU variant must stay within ActiBA's error budget."""
+        _, w = _weights(cfg)
+        c0, s0 = model.zero_states(cfg)
+        lg_b, _, _ = model.prefill(cfg, "baseline", w, TOKS, c0, s0)
+        lg_x, _, _ = model.prefill(cfg, "xamba", w, TOKS, c0, s0)
+        diff = float(jnp.max(jnp.abs(lg_b - lg_x)))
+        assert 0.0 < diff < 1.0, f"variant drift {diff}"
+
+    def test_xamba_mat_variant_is_exact(self, cfg):
+        """CumBA/ReduBA kernels without PLU must match baseline exactly
+        (they are mathematically identical reformulations)."""
+        _, w = _weights(cfg)
+        c0, s0 = model.zero_states(cfg)
+        lg_b, _, s_b = model.prefill(cfg, "baseline", w, TOKS, c0, s0)
+        lg_m, _, s_m = model.prefill(cfg, "xamba-mat", w, TOKS, c0, s0)
+        np.testing.assert_allclose(lg_b, lg_m, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(s_b, s_m, rtol=1e-3, atol=1e-3)
+
+    def test_state_shapes_match_config(self, cfg):
+        ss = model.state_shapes(cfg)
+        assert ss["conv"] == (cfg.n_layers, cfg.d_conv - 1, cfg.conv_dim)
+        if cfg.arch == "mamba":
+            assert ss["ssm"] == (cfg.n_layers, cfg.d_inner, cfg.d_state)
+        else:
+            assert ss["ssm"] == (
+                cfg.n_layers, cfg.n_heads, cfg.headdim, cfg.d_state)
+
+    def test_decode_depends_on_state(self, cfg):
+        """Same token, different state -> different logits (the cache is
+        actually consulted)."""
+        _, w = _weights(cfg)
+        c0, s0 = model.zero_states(cfg)
+        lg1, c1, s1 = model.decode(cfg, "baseline", w, jnp.int32(5), c0, s0)
+        lg2, _, _ = model.decode(cfg, "baseline", w, jnp.int32(5), c1, s1)
+        assert float(jnp.max(jnp.abs(lg1 - lg2))) > 1e-3
+
+
+class TestConfigs:
+    def test_presets_consistent(self):
+        c = configs.BLOCK_130M_MAMBA2
+        assert c.d_inner == 1536
+        assert c.n_heads == 24
+        assert c.chunk == 256  # the 256x256 CumSum_b
+        assert configs.BLOCK_130M_MAMBA.resolved_dt_rank == 48
+
+    def test_conv_dim_covers_xbc(self):
+        c = configs.TINY_MAMBA2
+        assert c.conv_dim == c.d_inner + 2 * c.d_state
+        assert configs.TINY_MAMBA.conv_dim == configs.TINY_MAMBA.d_inner
+
+    def test_unknown_variant_rejected(self):
+        with pytest.raises(ValueError):
+            model.make_ops(configs.TINY_MAMBA, "nope")

@@ -1,0 +1,71 @@
+"""ActiBA's C-LUT fitting: error bounds, tails, and python<->rust parity
+expectations (the rust `plu::` module duplicates this construction)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import plu
+
+
+def silu(x):
+    return x / (1.0 + np.exp(-x))
+
+
+def softplus(x):
+    return np.logaddexp(0.0, x)
+
+
+class TestFit:
+    def test_silu_32_is_negligible(self):
+        t = plu.silu_table(32)
+        assert plu.max_abs_error(t, silu) < 0.02
+
+    def test_softplus_32_is_negligible(self):
+        t = plu.softplus_table(32)
+        assert plu.max_abs_error(t, softplus) < 0.02
+
+    @settings(max_examples=12, deadline=None)
+    @given(segments=st.sampled_from([4, 8, 16, 32, 64, 128]))
+    def test_error_scales_down_with_segments(self, segments):
+        err = plu.max_abs_error(plu.silu_table(segments), silu)
+        # secant error ~ O(step^2), plus the fixed floor from the analytic
+        # tail overrides (|silu(-8)| ~ 2.7e-3 is forced to 0 at the edge)
+        step = 16.0 / segments
+        assert err < 0.15 * step * step + 3.2e-3, f"{segments}: {err}"
+
+    def test_monotone_improvement(self):
+        errs = [plu.max_abs_error(plu.silu_table(k), silu)
+                for k in (4, 8, 16, 32, 64)]
+        assert all(a >= b for a, b in zip(errs, errs[1:])), errs
+
+    def test_tails_are_asymptotes(self):
+        t = plu.silu_table(16)
+        assert t(np.float32(-50.0)) == 0.0
+        np.testing.assert_allclose(t(np.float32(50.0)), 50.0, rtol=1e-6)
+        s = plu.softplus_table(16)
+        assert s(np.float32(-50.0)) == 0.0
+        np.testing.assert_allclose(s(np.float32(50.0)), 50.0, rtol=1e-6)
+
+    def test_rejects_tiny_segment_count(self):
+        with pytest.raises(ValueError):
+            plu.fit_plu(silu, -8, 8, 1)
+
+    def test_eval_vectorized_matches_scalar(self):
+        t = plu.silu_table(32)
+        xs = np.linspace(-12, 12, 301, dtype=np.float32)
+        batch = t(xs)
+        single = np.asarray([t(np.asarray([v], np.float32))[0] for v in xs])
+        np.testing.assert_array_equal(batch, single)
+
+    def test_to_dict_round_trips_values(self):
+        t = plu.silu_table(8)
+        d = t.to_dict()
+        assert d["lo"] == t.lo and len(d["slopes"]) == 8
+
+    @settings(max_examples=10, deadline=None)
+    @given(x=st.floats(-100, 100))
+    def test_everywhere_finite(self, x):
+        t = plu.softplus_table(32)
+        y = t(np.asarray([x], np.float32))[0]
+        assert np.isfinite(y)

@@ -1,0 +1,59 @@
+"""Build-time training path: corpus, batching, and loss descent."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import configs, model, train
+
+
+class TestCorpus:
+    def test_deterministic(self):
+        assert train.make_corpus(100, seed=7) == train.make_corpus(100, seed=7)
+        assert train.make_corpus(100, seed=7) != train.make_corpus(100, seed=8)
+
+    def test_ascii_byte_range(self):
+        c = train.make_corpus(200)
+        assert all(b < 128 for b in c)
+        assert len(c) > 2000
+
+    def test_batches_shape_and_range(self):
+        corpus = train.make_corpus(500)
+        for toks in train.batches(corpus, batch=4, steps=3):
+            assert toks.shape == (4, train.WINDOW + 1)
+            assert toks.dtype == np.int32
+            assert toks.min() >= 0 and toks.max() < 256
+
+
+class TestLoss:
+    def test_initial_loss_near_uniform(self):
+        cfg = configs.TINY_MAMBA
+        spec = model.build_spec(cfg)
+        w = jnp.asarray(spec.pack(model.init_params(cfg)))
+        toks = next(iter(train.batches(train.make_corpus(300), 2, 1)))
+        loss = float(train.loss_fn(cfg, w, jnp.asarray(toks)))
+        # random init: close to ln(256) = 5.545
+        assert 4.5 < loss < 6.5
+
+    @pytest.mark.slow
+    def test_few_steps_decrease_loss(self):
+        cfg = configs.TINY_MAMBA
+        spec = model.build_spec(cfg)
+        w = jnp.asarray(spec.pack(model.init_params(cfg)))
+        m = jnp.zeros_like(w)
+        v = jnp.zeros_like(w)
+        corpus = train.make_corpus(500)
+        losses = []
+        for i, toks in enumerate(train.batches(corpus, 8, 10), start=1):
+            loss, w, m, v = train.train_step(cfg, w, m, v, float(i),
+                                             jnp.asarray(toks))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.8, losses
+
+    def test_adam_moves_toward_gradient(self):
+        g = jnp.asarray([1.0, -1.0])
+        m = jnp.zeros(2)
+        v = jnp.zeros(2)
+        w = jnp.zeros(2)
+        _, _, w2 = train.adam_update(g, m, v, w, step=1.0, lr=0.1)
+        assert float(w2[0]) < 0 < float(w2[1])

@@ -1,0 +1,58 @@
+//! Ablation (paper §2.2 closing remark): "increasing the number of linear
+//! segments ... can further reduce this loss without significantly
+//! impacting performance".
+//!
+//! Sweeps the C-LUT segment count: approximation error falls fast while
+//! the simulated latency of the ActiBA-optimized model stays flat (the
+//! PLU evaluates one multiply-add regardless of LUT size); the adaptive
+//! (Flex-SFU-style) fitter buys extra accuracy at equal budget.
+
+use xamba::config::{npu_series2, presets};
+use xamba::npu::Profile;
+use xamba::passes::{actiba::ActibaPass, Pass};
+use xamba::plu;
+use xamba::util::Table;
+
+fn main() {
+    let cfg = npu_series2();
+    let g = xamba::models::build_block(&presets::block130m_mamba(), 4);
+    let base = Profile::of(&cfg, &g).total_ns;
+
+    let mut t = Table::new(&[
+        "segments",
+        "silu max|err| (uniform)",
+        "silu max|err| (adaptive)",
+        "block speedup",
+    ])
+    .with_title("Ablation: PLU segment count — accuracy vs performance");
+
+    let mut errs = Vec::new();
+    for segments in [4usize, 8, 16, 32, 64, 128] {
+        let uni = plu::silu_table(segments, -8.0, 8.0).max_abs_error(plu::silu_exact, 4.0);
+        let ada = plu::fit_adaptive(plu::silu_exact, -8.0, 8.0, segments)
+            .max_abs_error(plu::silu_exact);
+        let p = Profile::of(&cfg, &ActibaPass::with_segments(segments).apply(&g));
+        t.row(&[
+            segments.to_string(),
+            format!("{uni:.2e}"),
+            format!("{ada:.2e}"),
+            format!("{:.2}x", base / p.total_ns),
+        ]);
+        errs.push((segments, uni, ada, base / p.total_ns));
+    }
+    println!("{t}");
+
+    // error monotone decreasing; speedup flat (paper's claim)
+    for w in errs.windows(2) {
+        assert!(w[1].1 <= w[0].1 * 1.01, "uniform error not decreasing");
+    }
+    let speedups: Vec<f64> = errs.iter().map(|e| e.3).collect();
+    let spread = speedups.iter().cloned().fold(f64::MIN, f64::max)
+        / speedups.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(spread < 1.05, "latency should be ~flat across LUT sizes: {speedups:?}");
+    // adaptive at least matches uniform at every budget
+    for &(seg, uni, ada, _) in &errs {
+        assert!(ada <= uni * 1.05, "adaptive worse than uniform at {seg}");
+    }
+    println!("ablation_plu_segments: OK");
+}

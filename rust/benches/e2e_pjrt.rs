@@ -1,0 +1,121 @@
+//! End-to-end wallclock benchmark on the REAL runtime (PJRT-CPU): prefill
+//! and decode latency of the AOT artifacts, baseline vs xamba variants,
+//! plus the 130M-shape block programs.
+//!
+//! This is the liveness measurement plane (DESIGN.md §1): absolute
+//! numbers are CPU wallclock, not NPU latency — the paper-shape claims
+//! live in the simulator benches. What must hold here is *correct
+//! execution at serving speed* and sane batching scaling.
+
+use std::time::Instant;
+
+use xamba::runtime::{Engine, HostTensor, Manifest};
+use xamba::util::{Summary, Table};
+
+fn bench<F: FnMut()>(mut f: F, iters: usize) -> Summary {
+    // warmup
+    f();
+    f();
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3); // ms
+    }
+    Summary::of(&samples)
+}
+
+fn main() {
+    let manifest = Manifest::load("artifacts").expect("run `make artifacts`");
+    let mut engine = Engine::cpu().expect("pjrt cpu");
+    let mut t = Table::new(&["program", "p50 ms", "mean ms", "p99 ms"])
+        .with_title("e2e PJRT-CPU wallclock");
+
+    for model in ["tiny-mamba", "tiny-mamba2"] {
+        for variant in ["baseline", "xamba"] {
+            // prefill
+            let e = manifest.find(model, variant, "prefill").unwrap();
+            engine.prepare(&manifest, e).unwrap();
+            let tok = HostTensor::I32(vec![64], (0..64).map(|i| i % 256).collect());
+            let conv = HostTensor::zeros(&e.inputs[2].shape);
+            let ssm = HostTensor::zeros(&e.inputs[3].shape);
+            let s = bench(
+                || {
+                    engine
+                        .execute_cached(e, &[tok.clone(), conv.clone(), ssm.clone()])
+                        .unwrap();
+                },
+                10,
+            );
+            t.row(&[
+                format!("{model}.{variant}.prefill"),
+                format!("{:.2}", s.p50),
+                format!("{:.2}", s.mean),
+                format!("{:.2}", s.p99),
+            ]);
+
+            // decode buckets: per-sequence cost must IMPROVE with batching
+            let mut per_seq = Vec::new();
+            for b in manifest.decode_buckets(model, variant) {
+                let e = manifest
+                    .find(model, variant, &format!("decode_b{b}"))
+                    .unwrap();
+                engine.prepare(&manifest, e).unwrap();
+                let tokb = HostTensor::I32(vec![b, 1], vec![7; b]);
+                let convb = HostTensor::zeros(&e.inputs[2].shape);
+                let ssmb = HostTensor::zeros(&e.inputs[3].shape);
+                let s = bench(
+                    || {
+                        engine
+                            .execute_cached(
+                                e,
+                                &[tokb.clone(), convb.clone(), ssmb.clone()],
+                            )
+                            .unwrap();
+                    },
+                    20,
+                );
+                per_seq.push((b, s.p50 / b as f64));
+                t.row(&[
+                    format!("{model}.{variant}.decode_b{b}"),
+                    format!("{:.2}", s.p50),
+                    format!("{:.2}", s.mean),
+                    format!("{:.2}", s.p99),
+                ]);
+            }
+            let first = per_seq.first().unwrap().1;
+            let last = per_seq.last().unwrap().1;
+            println!(
+                "{model}.{variant}: per-seq decode cost b1 {first:.2} ms -> b8 {last:.2} ms ({:.1}x batching gain)",
+                first / last
+            );
+        }
+    }
+
+    // 130M-shape block programs (paper shapes through the real runtime)
+    for model in ["block130m-mamba", "block130m-mamba2"] {
+        for variant in ["baseline", "xamba"] {
+            let e = manifest.find(model, variant, "block").unwrap();
+            engine.prepare(&manifest, e).unwrap();
+            let x = HostTensor::zeros(&e.inputs[1].shape);
+            let conv = HostTensor::zeros(&e.inputs[2].shape);
+            let ssm = HostTensor::zeros(&e.inputs[3].shape);
+            let s = bench(
+                || {
+                    engine
+                        .execute_cached(e, &[x.clone(), conv.clone(), ssm.clone()])
+                        .unwrap();
+                },
+                5,
+            );
+            t.row(&[
+                format!("{model}.{variant}.block(T=256)"),
+                format!("{:.2}", s.p50),
+                format!("{:.2}", s.mean),
+                format!("{:.2}", s.p99),
+            ]);
+        }
+    }
+    println!("{t}");
+    println!("e2e_pjrt: OK");
+}

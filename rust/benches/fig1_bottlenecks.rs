@@ -1,0 +1,42 @@
+//! Fig 1 reproduction: execution bottlenecks for Mamba and Mamba-2 on the
+//! simulated Series-2 NPU (130M shapes, T=4 fixed input tokens).
+//!
+//! Paper claim: Mamba is limited by sequential DSP execution of Swish and
+//! SoftPlus; Mamba-2 by CumSum and ReduceSum.
+
+use xamba::config::{npu_series2, presets};
+use xamba::npu::{Engine, Profile};
+
+fn main() {
+    let cfg = npu_series2();
+    let t = 4;
+    println!("=== Fig 1: op-level bottlenecks (130M block shapes, T={t}) ===\n");
+    for shape in [presets::block130m_mamba(), presets::block130m_mamba2()] {
+        let g = xamba::models::build_block(&shape, t);
+        let p = Profile::of(&cfg, &g);
+        println!("{}", p.breakdown_table());
+        println!(
+            "engine shares: DSP {:.1}%  MPU {:.1}%\n",
+            100.0 * p.engine_share(Engine::Dsp),
+            100.0 * p.engine_share(Engine::Mpu),
+        );
+    }
+
+    // machine-checkable headline claims
+    let g1 = xamba::models::build_block(&presets::block130m_mamba(), t);
+    let p1 = Profile::of(&cfg, &g1);
+    let act_share = p1.op_share("Swish") + p1.op_share("SoftPlus");
+    println!("Mamba-1 Swish+SoftPlus share: {:.1}%  (paper: dominant)", 100.0 * act_share);
+    assert!(act_share > 0.4, "activation share regressed: {act_share}");
+
+    let g2 = xamba::models::build_block(&presets::block130m_mamba2(), t);
+    let p2 = Profile::of(&cfg, &g2);
+    let seq_share = p2.op_share("CumSum") + p2.op_share("ReduceSum");
+    println!(
+        "Mamba-2 CumSum share: {:.1}%, CumSum+ReduceSum: {:.1}%  (paper: CumSum >50%)",
+        100.0 * p2.op_share("CumSum"),
+        100.0 * seq_share
+    );
+    assert!(p2.op_share("CumSum") > 0.5, "CumSum share regressed");
+    println!("\nfig1_bottlenecks: OK");
+}

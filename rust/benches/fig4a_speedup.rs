@@ -1,0 +1,47 @@
+//! Fig 4(a) reproduction: single-block Mamba-2 130M latency with CumBA,
+//! ReduBA, and both, vs the unoptimized baseline.
+//!
+//! Paper: CumBA 2.7x, ReduBA 1.2x, CumBA+ReduBA 4.8x.
+
+use xamba::config::{npu_series2, presets};
+use xamba::npu::Profile;
+use xamba::passes::{cumba::CumbaPass, reduba::RedubaPass, Pass};
+use xamba::util::Table;
+
+fn main() {
+    let cfg = npu_series2();
+    let g = xamba::models::build_block(&presets::block130m_mamba2(), 4);
+    let base = Profile::of(&cfg, &g);
+    let cumba = Profile::of(&cfg, &CumbaPass.apply(&g));
+    let reduba = Profile::of(&cfg, &RedubaPass.apply(&g));
+    let both = Profile::of(&cfg, &RedubaPass.apply(&CumbaPass.apply(&g)));
+
+    let mut t = Table::new(&["variant", "latency", "speedup", "paper"])
+        .with_title("Fig 4(a): Mamba-2 130M single block, T=4 (simulated NPU)");
+    let rows = [
+        ("baseline", base.total_ns, 1.0, "1.0x"),
+        ("CumBA", cumba.total_ns, base.total_ns / cumba.total_ns, "2.7x"),
+        ("ReduBA", reduba.total_ns, base.total_ns / reduba.total_ns, "1.2x"),
+        ("CumBA+ReduBA", both.total_ns, base.total_ns / both.total_ns, "4.8x"),
+    ];
+    for (name, ns, speedup, paper) in rows {
+        t.row(&[
+            name.to_string(),
+            xamba::util::table::fmt_ns(ns),
+            format!("{speedup:.2}x"),
+            paper.to_string(),
+        ]);
+    }
+    println!("{t}");
+
+    // shape assertions: ordering and rough factors must match the paper
+    let s_cumba = base.total_ns / cumba.total_ns;
+    let s_reduba = base.total_ns / reduba.total_ns;
+    let s_both = base.total_ns / both.total_ns;
+    assert!(s_cumba > s_reduba, "CumBA must beat ReduBA");
+    assert!(s_both > s_cumba, "combined must beat each alone");
+    assert!((2.0..4.5).contains(&s_cumba), "CumBA {s_cumba:.2}x vs paper 2.7x");
+    assert!((1.02..1.6).contains(&s_reduba), "ReduBA {s_reduba:.2}x vs paper 1.2x");
+    assert!((3.5..6.5).contains(&s_both), "both {s_both:.2}x vs paper 4.8x");
+    println!("fig4a_speedup: OK (who-wins and factors in paper range)");
+}

@@ -1,0 +1,43 @@
+//! Fig 4(b) reproduction: normalized latency breakdown of the Mamba-2
+//! 130M block, baseline vs CumBA.
+//!
+//! Paper: CumSum contributes >50% of baseline latency; CumBA removes it
+//! by turning it into mask matmul.
+
+use xamba::config::{npu_series2, presets};
+use xamba::npu::Profile;
+use xamba::passes::{cumba::CumbaPass, Pass};
+use xamba::util::Table;
+
+fn main() {
+    let cfg = npu_series2();
+    let g = xamba::models::build_block(&presets::block130m_mamba2(), 4);
+    let base = Profile::of(&cfg, &g);
+    let opt = Profile::of(&cfg, &CumbaPass.apply(&g));
+
+    let mut t = Table::new(&["op", "baseline %", "CumBA % (of baseline)"])
+        .with_title("Fig 4(b): normalized latency breakdown, Mamba-2 130M block");
+    let mut ops: Vec<&str> = base.by_op().iter().map(|(o, _)| *o).collect();
+    for (o, _) in opt.by_op() {
+        if !ops.contains(&o) {
+            ops.push(o);
+        }
+    }
+    for op in ops {
+        t.row(&[
+            op.to_string(),
+            format!("{:5.1}", 100.0 * base.op_ns(op) / base.total_ns),
+            format!("{:5.1}", 100.0 * opt.op_ns(op) / base.total_ns),
+        ]);
+    }
+    t.row(&[
+        "TOTAL".into(),
+        "100.0".into(),
+        format!("{:5.1}", 100.0 * opt.total_ns / base.total_ns),
+    ]);
+    println!("{t}");
+
+    assert!(base.op_share("CumSum") > 0.5, "paper: CumSum >50% of baseline");
+    assert_eq!(opt.op_ns("CumSum"), 0.0, "CumBA must eliminate CumSum");
+    println!("fig4b_breakdown: OK");
+}

@@ -1,0 +1,91 @@
+//! Tiny `--flag value` / `--flag` argument parser.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: one positional command + string flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` (without the binary name).
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare -- not supported".into());
+                }
+                // --k=v or --k v or --switch
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.command.is_empty() {
+                out.command = a.clone();
+            } else {
+                return Err(format!("unexpected positional argument {a:?}"));
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Option<usize> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn get_f32(&self, key: &str) -> Option<f32> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_flags_switches() {
+        let a = Args::parse(&sv(&[
+            "profile", "--model", "tiny-mamba", "--t=8", "--adaptive",
+        ]))
+        .unwrap();
+        assert_eq!(a.command, "profile");
+        assert_eq!(a.get("model"), Some("tiny-mamba"));
+        assert_eq!(a.get_usize("t"), Some(8));
+        assert!(a.has("adaptive"));
+        assert!(!a.has("nope"));
+    }
+
+    #[test]
+    fn rejects_extra_positionals() {
+        assert!(Args::parse(&sv(&["a", "b"])).is_err());
+    }
+
+    #[test]
+    fn empty_is_help() {
+        let a = Args::parse(&[]).unwrap();
+        assert_eq!(a.command, "");
+    }
+}

@@ -1,0 +1,220 @@
+//! Command-line interface (hand-rolled: no clap in the vendored set).
+//!
+//! Subcommands:
+//!   serve    — start the PJRT-backed server, read prompts from stdin
+//!   profile  — NPU-simulator latency breakdown of a model graph
+//!   census   — Fig-5 operator census (Mamba vs Mamba-2)
+//!   plu-fit  — fit & report a C-LUT for silu/softplus
+//!   verify   — differential-check the XAMBA passes on a model graph
+
+mod args;
+
+pub use args::Args;
+
+use crate::config::{self, presets, NpuConfig, ServeConfig};
+use crate::coordinator::{start_pjrt, GenParams};
+use crate::graph::Census;
+use crate::npu::Profile;
+use crate::passes::{actiba::ActibaPass, cumba::CumbaPass, reduba::RedubaPass, Pass};
+use crate::plu;
+
+/// Entry point: dispatch on the first positional argument.
+pub fn run(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "serve" => cmd_serve(&args),
+        "profile" => cmd_profile(&args),
+        "census" => cmd_census(&args),
+        "plu-fit" => cmd_plu_fit(&args),
+        "verify" => cmd_verify(&args),
+        "help" | "" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}; try `xamba help`")),
+    }
+}
+
+const HELP: &str = "\
+xamba — SSMs on resource-constrained NPUs (paper reproduction)
+
+USAGE: xamba <command> [--flag value ...]
+
+COMMANDS:
+  serve     --model tiny-mamba --variant xamba [--artifacts DIR]
+            [--max-new 48] [--temperature 0.0]
+            reads prompts from stdin (one per line), prints completions
+  profile   --model block130m-mamba2 [--t 4] [--passes cumba,reduba,actiba]
+            [--config FILE] [--pipelined] [--energy]
+            simulated-NPU per-op latency breakdown
+  census    [--t 4]           Fig-5 operator census, Mamba vs Mamba-2
+  plu-fit   [--fn silu|softplus] [--segments 32] [--adaptive]
+  verify    --model tiny-mamba2 [--t 16]   differential pass verification
+  help
+";
+
+fn npu_from(args: &Args) -> Result<NpuConfig, String> {
+    let doc = config::load(args.get("config"))?;
+    Ok(NpuConfig::from_doc(&doc, "npu"))
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let mut cfg = ServeConfig::default();
+    if let Some(d) = args.get("artifacts") {
+        cfg.artifacts_dir = d.to_string();
+    }
+    if let Some(m) = args.get("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(v) = args.get("variant") {
+        cfg.variant = v.to_string();
+    }
+    let max_new = args.get_usize("max-new").unwrap_or(48);
+    let temperature = args.get_f32("temperature").unwrap_or(0.0);
+    let server = start_pjrt(&cfg).map_err(|e| format!("{e:#}"))?;
+    eprintln!(
+        "serving {} ({}) from {} — type a prompt per line, ctrl-d to stop",
+        cfg.model, cfg.variant, cfg.artifacts_dir
+    );
+    let stdin = std::io::stdin();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if std::io::BufRead::read_line(&mut stdin.lock(), &mut line)
+            .map_err(|e| e.to_string())?
+            == 0
+        {
+            break;
+        }
+        let prompt = line.trim_end();
+        if prompt.is_empty() {
+            continue;
+        }
+        let rx = server.submit(
+            prompt.as_bytes(),
+            GenParams { max_new_tokens: max_new, temperature, ..Default::default() },
+        );
+        match rx.recv() {
+            Ok(r) => println!(
+                "{}{}   [{:?}, ttft {:.1} ms, {:.0} tok/s]",
+                prompt,
+                String::from_utf8_lossy(&r.generated),
+                r.finish,
+                r.ttft_us / 1e3,
+                r.decode_tokens_per_s()
+            ),
+            Err(_) => return Err("server died".into()),
+        }
+    }
+    let m = server.shutdown();
+    eprintln!("{}", m.report());
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<(), String> {
+    let name = args.get("model").unwrap_or("block130m-mamba2");
+    let shape = presets::model_by_name(name).ok_or(format!("unknown model {name}"))?;
+    let t = args.get_usize("t").unwrap_or(4);
+    let cfg = npu_from(args)?;
+    let mut g = if shape.n_layers == 1 {
+        crate::models::build_block(&shape, t)
+    } else {
+        crate::models::build_prefill(&shape, t)
+    };
+    let base = Profile::of(&cfg, &g);
+    println!("{}", base.breakdown_table());
+    if args.has("pipelined") {
+        let r = crate::npu::pipelined_latency(&cfg, &g);
+        println!(
+            "pipelined makespan {} (overlap {:.2}x, critical path {})",
+            crate::util::table::fmt_ns(r.makespan_ns),
+            r.overlap(),
+            crate::util::table::fmt_ns(r.critical_path_ns),
+        );
+    }
+    if args.has("energy") {
+        let e = crate::npu::estimate_energy(&cfg, &g, &Default::default());
+        println!(
+            "energy: {:.0} uJ (compute {:.0}, SRAM {:.0}, DRAM {:.0})",
+            e.total_uj(), e.compute_uj, e.sram_uj, e.dram_uj
+        );
+    }
+    if let Some(pass_list) = args.get("passes") {
+        for p in pass_list.split(',') {
+            g = match p {
+                "cumba" => CumbaPass.apply(&g),
+                "reduba" => RedubaPass.apply(&g),
+                "actiba" => ActibaPass::default().apply(&g),
+                other => return Err(format!("unknown pass {other}")),
+            };
+        }
+        let opt = Profile::of(&cfg, &g);
+        println!("{}", opt.breakdown_table());
+        println!(
+            "speedup with [{}]: {:.2}x",
+            pass_list,
+            base.total_ns / opt.total_ns
+        );
+    }
+    Ok(())
+}
+
+fn cmd_census(args: &Args) -> Result<(), String> {
+    let t = args.get_usize("t").unwrap_or(4);
+    let c1 = Census::of(&crate::models::build_block(&presets::block130m_mamba(), t));
+    let c2 = Census::of(&crate::models::build_block(&presets::block130m_mamba2(), t));
+    println!(
+        "{}",
+        Census::comparison_table(&[
+            (&format!("mamba(T={t})"), &c1),
+            (&format!("mamba2(T={t})"), &c2),
+        ])
+    );
+    Ok(())
+}
+
+fn cmd_plu_fit(args: &Args) -> Result<(), String> {
+    let f = args.get("fn").unwrap_or("silu");
+    let segments = args.get_usize("segments").unwrap_or(32);
+    let adaptive = args.has("adaptive");
+    let (table_err, ada_err) = match f {
+        "silu" => (
+            plu::silu_table(segments, -8.0, 8.0).max_abs_error(plu::silu_exact, 4.0),
+            plu::fit_adaptive(plu::silu_exact, -8.0, 8.0, segments)
+                .max_abs_error(plu::silu_exact),
+        ),
+        "softplus" => (
+            plu::softplus_table(segments, -8.0, 8.0)
+                .max_abs_error(plu::softplus_exact, 4.0),
+            plu::fit_adaptive(plu::softplus_exact, -8.0, 8.0, segments)
+                .max_abs_error(plu::softplus_exact),
+        ),
+        other => return Err(format!("unknown fn {other}")),
+    };
+    println!("fn={f} segments={segments}");
+    println!("uniform C-LUT   max |err| = {table_err:.3e}");
+    if adaptive {
+        println!("adaptive C-LUT  max |err| = {ada_err:.3e} (Flex-SFU-style)");
+    }
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<(), String> {
+    let name = args.get("model").unwrap_or("tiny-mamba2");
+    let shape = presets::model_by_name(name).ok_or(format!("unknown model {name}"))?;
+    let t = args.get_usize("t").unwrap_or(16);
+    let g = crate::models::build_block(&shape, t);
+    for (label, rewritten) in [
+        ("cumba", CumbaPass.apply(&g)),
+        ("reduba", RedubaPass.apply(&g)),
+        ("cumba+reduba", RedubaPass.apply(&CumbaPass.apply(&g))),
+        ("actiba", ActibaPass::default().apply(&g)),
+    ] {
+        let r = crate::passes::verify::differential(&g, &rewritten, 2, 99, 0.3)?;
+        println!(
+            "{label:14} outputs={} max_abs_err={:.3e} max_rel_err={:.3e}",
+            r.outputs, r.max_abs_err, r.max_rel_err
+        );
+    }
+    Ok(())
+}

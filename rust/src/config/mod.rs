@@ -1,0 +1,25 @@
+//! Configuration system: TOML-subset parsing, typed configs, presets.
+//!
+//! One TOML file can configure the whole stack (`[npu]`, `[serve]`
+//! sections); every struct also has calibrated defaults so the binaries
+//! run with zero configuration.
+
+pub mod presets;
+pub mod toml;
+pub mod types;
+
+pub use presets::{model_by_name, npu_series2, npu_unit};
+pub use toml::{TomlDoc, TomlValue};
+pub use types::{ModelShape, NpuConfig, ServeConfig};
+
+/// Load a TOML config file; `None` path yields an empty doc (defaults).
+pub fn load(path: Option<&str>) -> Result<TomlDoc, String> {
+    match path {
+        None => Ok(TomlDoc::default()),
+        Some(p) => {
+            let src = std::fs::read_to_string(p)
+                .map_err(|e| format!("read {p}: {e}"))?;
+            TomlDoc::parse(&src).map_err(|e| format!("{p}: {e}"))
+        }
+    }
+}

@@ -1,0 +1,295 @@
+//! Typed configuration structs (NPU cost model, model shapes, serving).
+//!
+//! Every struct can be loaded from the TOML-subset format via `from_doc`
+//! with a section prefix, so one file configures the whole stack:
+//!
+//! ```toml
+//! [npu]
+//! mpu_rows = 32
+//! [serve]
+//! model = "tiny-mamba"
+//! variant = "xamba"
+//! ```
+
+use super::toml::TomlDoc;
+
+/// Cost-model parameters of the simulated NPU (DESIGN.md §1: substitution
+/// for the Intel Core Ultra Series 2 NPU). Defaults are calibrated so the
+/// *baseline* Mamba/Mamba-2 profiles reproduce the bottleneck shares of
+/// paper Fig 1; see `config::presets::npu_series2`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NpuConfig {
+    /// MPU MAC array rows (output-stationary, Fig 2(a)).
+    pub mpu_rows: usize,
+    /// MPU MAC array columns.
+    pub mpu_cols: usize,
+    /// MPU clock, GHz ("high-frequency MAC array").
+    pub mpu_freq_ghz: f64,
+    /// DSP vector lanes (the paper's "n-width vector adder").
+    pub dsp_lanes: usize,
+    /// DSP clock, GHz.
+    pub dsp_freq_ghz: f64,
+    /// DSP cycles per element for composite transcendental activations
+    /// (Swish = sigmoid+mul, Softplus = exp+log — the paper's Fig-1
+    /// bottlenecks; evaluated by polynomial iteration on the DSP).
+    pub dsp_act_cycles_per_elem: f64,
+    /// DSP cycles per element for single transcendentals (Exp, Log, ...).
+    pub dsp_exp_cycles_per_elem: f64,
+    /// DSP cycles per element for plain elementwise arithmetic.
+    pub dsp_ew_cycles_per_elem: f64,
+    /// Fixed DSP kernel-dispatch overhead per composite-activation op,
+    /// microseconds (firmware round trip to launch a Swish/Softplus DSP
+    /// routine; ActiBA's drain-path fusion eliminates it entirely).
+    pub dsp_dispatch_us: f64,
+    /// DSP cycles per vector-row step of CumSum/ReduceSum (adder latency).
+    pub dsp_row_cycles: f64,
+    /// Fixed per-row overhead cycles of CumSum: the sequential dependence
+    /// forces a register-file <-> SRAM round trip per row (paper §2.1:
+    /// "processed in smaller chunks ... frequent SRAM transfers").
+    pub cumsum_row_overhead: f64,
+    /// Per-row overhead of ReduceSum (accumulate-only: cheaper).
+    pub reducesum_row_overhead: f64,
+    /// Memory-traffic amplification of DSP-sequential ops (CumSum /
+    /// ReduceSum): chunked processing re-reads operands instead of
+    /// streaming them once like the MPU's tiled walk (paper §2.1).
+    pub dsp_seq_mem_amplification: f64,
+    /// Elements the PLU can drain per MPU cycle (C-LUT multiply-add lives
+    /// in the drain path, so it is effectively free unless it exceeds
+    /// drain bandwidth).
+    pub plu_elems_per_cycle: f64,
+    /// On-chip SRAM capacity in KiB (spills beyond this go to DRAM).
+    pub sram_kib: usize,
+    /// SRAM bandwidth, GiB/s.
+    pub sram_gbps: f64,
+    /// DRAM (LPDDR) bandwidth, GiB/s.
+    pub dram_gbps: f64,
+    /// Effective stream bandwidth of the DSP's private DMA path, GiB/s —
+    /// sequential ops cannot use the MPU's wide buses (paper §2.1).
+    pub dsp_mem_gbps: f64,
+    /// Bytes per weight element as stored (the paper compresses weights
+    /// to FP16 during conversion): scales Input/Const streaming traffic.
+    pub weight_bytes: f64,
+    /// DSP register-file capacity in KiB; CumSum chunks that exceed it
+    /// round-trip through SRAM every chunk (paper §2.1).
+    pub dsp_rf_kib: usize,
+    /// Zero-value compression on constant masks (paper Fig 3).
+    pub zvc_enabled: bool,
+    /// Sparsity-bitmap compute skip in the MPU datapath.
+    pub sparsity_skip_enabled: bool,
+}
+
+impl Default for NpuConfig {
+    fn default() -> Self {
+        super::presets::npu_series2()
+    }
+}
+
+impl NpuConfig {
+    /// Load from a parsed TOML doc; missing keys keep defaults.
+    pub fn from_doc(doc: &TomlDoc, section: &str) -> Self {
+        let d = Self::default();
+        let k = |name: &str| format!("{section}.{name}");
+        Self {
+            mpu_rows: doc.i64_or(&k("mpu_rows"), d.mpu_rows as i64) as usize,
+            mpu_cols: doc.i64_or(&k("mpu_cols"), d.mpu_cols as i64) as usize,
+            mpu_freq_ghz: doc.f64_or(&k("mpu_freq_ghz"), d.mpu_freq_ghz),
+            dsp_lanes: doc.i64_or(&k("dsp_lanes"), d.dsp_lanes as i64) as usize,
+            dsp_freq_ghz: doc.f64_or(&k("dsp_freq_ghz"), d.dsp_freq_ghz),
+            dsp_act_cycles_per_elem: doc
+                .f64_or(&k("dsp_act_cycles_per_elem"), d.dsp_act_cycles_per_elem),
+            dsp_exp_cycles_per_elem: doc
+                .f64_or(&k("dsp_exp_cycles_per_elem"), d.dsp_exp_cycles_per_elem),
+            dsp_ew_cycles_per_elem: doc
+                .f64_or(&k("dsp_ew_cycles_per_elem"), d.dsp_ew_cycles_per_elem),
+            dsp_dispatch_us: doc.f64_or(&k("dsp_dispatch_us"), d.dsp_dispatch_us),
+            dsp_row_cycles: doc.f64_or(&k("dsp_row_cycles"), d.dsp_row_cycles),
+            cumsum_row_overhead: doc
+                .f64_or(&k("cumsum_row_overhead"), d.cumsum_row_overhead),
+            reducesum_row_overhead: doc
+                .f64_or(&k("reducesum_row_overhead"), d.reducesum_row_overhead),
+            dsp_seq_mem_amplification: doc.f64_or(
+                &k("dsp_seq_mem_amplification"),
+                d.dsp_seq_mem_amplification,
+            ),
+            plu_elems_per_cycle: doc
+                .f64_or(&k("plu_elems_per_cycle"), d.plu_elems_per_cycle),
+            sram_kib: doc.i64_or(&k("sram_kib"), d.sram_kib as i64) as usize,
+            sram_gbps: doc.f64_or(&k("sram_gbps"), d.sram_gbps),
+            dram_gbps: doc.f64_or(&k("dram_gbps"), d.dram_gbps),
+            dsp_mem_gbps: doc.f64_or(&k("dsp_mem_gbps"), d.dsp_mem_gbps),
+            weight_bytes: doc.f64_or(&k("weight_bytes"), d.weight_bytes),
+            dsp_rf_kib: doc.i64_or(&k("dsp_rf_kib"), d.dsp_rf_kib as i64) as usize,
+            zvc_enabled: doc.bool_or(&k("zvc_enabled"), d.zvc_enabled),
+            sparsity_skip_enabled: doc
+                .bool_or(&k("sparsity_skip_enabled"), d.sparsity_skip_enabled),
+        }
+    }
+
+    /// MACs per MPU cycle.
+    pub fn macs_per_cycle(&self) -> f64 {
+        (self.mpu_rows * self.mpu_cols) as f64
+    }
+}
+
+/// Model architecture shapes — rust mirror of `python/compile/configs.py`
+/// (the AOT manifest carries the same numbers; `models::` builds IR graphs
+/// from this struct).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelShape {
+    pub name: String,
+    /// "mamba" | "mamba2"
+    pub arch: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub d_state: usize,
+    pub d_conv: usize,
+    pub expand: usize,
+    /// mamba-1 only (0 = d_model/16)
+    pub dt_rank: usize,
+    /// mamba-2 only
+    pub headdim: usize,
+    pub chunk: usize,
+}
+
+impl ModelShape {
+    pub fn d_inner(&self) -> usize {
+        self.expand * self.d_model
+    }
+
+    pub fn resolved_dt_rank(&self) -> usize {
+        if self.dt_rank == 0 {
+            (self.d_model / 16).max(1)
+        } else {
+            self.dt_rank
+        }
+    }
+
+    pub fn n_heads(&self) -> usize {
+        debug_assert_eq!(self.d_inner() % self.headdim, 0);
+        self.d_inner() / self.headdim
+    }
+
+    /// Channels through the causal conv (mamba2 convs x, B, C together).
+    pub fn conv_dim(&self) -> usize {
+        if self.arch == "mamba2" {
+            self.d_inner() + 2 * self.d_state
+        } else {
+            self.d_inner()
+        }
+    }
+}
+
+/// Serving configuration for the coordinator.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Directory holding the AOT artifacts (manifest.json etc.).
+    pub artifacts_dir: String,
+    /// Model preset name from the manifest (e.g. "tiny-mamba").
+    pub model: String,
+    /// "baseline" | "xamba".
+    pub variant: String,
+    /// Decode batch buckets available as compiled executables.
+    pub decode_buckets: Vec<usize>,
+    /// Admission queue capacity (requests beyond this are rejected).
+    pub queue_cap: usize,
+    /// Maximum resident sequences (state-cache slots).
+    pub max_slots: usize,
+    /// Default generation length when a request does not specify one.
+    pub default_max_new_tokens: usize,
+    /// Microseconds the batcher waits to fill a larger bucket.
+    pub batch_wait_us: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: "artifacts".into(),
+            model: "tiny-mamba".into(),
+            variant: "xamba".into(),
+            decode_buckets: vec![1, 2, 4, 8],
+            queue_cap: 256,
+            max_slots: 64,
+            default_max_new_tokens: 48,
+            batch_wait_us: 200,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_doc(doc: &TomlDoc, section: &str) -> Self {
+        let d = Self::default();
+        let k = |name: &str| format!("{section}.{name}");
+        let buckets = doc
+            .get(&k("decode_buckets"))
+            .and_then(|v| match v {
+                super::toml::TomlValue::Arr(a) => Some(
+                    a.iter()
+                        .filter_map(|x| x.as_i64())
+                        .map(|x| x as usize)
+                        .collect::<Vec<_>>(),
+                ),
+                _ => None,
+            })
+            .unwrap_or(d.decode_buckets.clone());
+        Self {
+            artifacts_dir: doc.str_or(&k("artifacts_dir"), &d.artifacts_dir).into(),
+            model: doc.str_or(&k("model"), &d.model).into(),
+            variant: doc.str_or(&k("variant"), &d.variant).into(),
+            decode_buckets: buckets,
+            queue_cap: doc.i64_or(&k("queue_cap"), d.queue_cap as i64) as usize,
+            max_slots: doc.i64_or(&k("max_slots"), d.max_slots as i64) as usize,
+            default_max_new_tokens: doc
+                .i64_or(&k("default_max_new_tokens"), d.default_max_new_tokens as i64)
+                as usize,
+            batch_wait_us: doc.i64_or(&k("batch_wait_us"), d.batch_wait_us as i64)
+                as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn npu_from_doc_overrides_and_defaults() {
+        let doc = TomlDoc::parse("[npu]\nmpu_rows = 16\nzvc_enabled = false\n").unwrap();
+        let c = NpuConfig::from_doc(&doc, "npu");
+        assert_eq!(c.mpu_rows, 16);
+        assert!(!c.zvc_enabled);
+        // untouched key keeps preset default
+        assert_eq!(c.dsp_lanes, NpuConfig::default().dsp_lanes);
+    }
+
+    #[test]
+    fn serve_from_doc_parses_buckets() {
+        let doc =
+            TomlDoc::parse("[serve]\nmodel = \"tiny-mamba2\"\ndecode_buckets = [1, 4]\n")
+                .unwrap();
+        let c = ServeConfig::from_doc(&doc, "serve");
+        assert_eq!(c.model, "tiny-mamba2");
+        assert_eq!(c.decode_buckets, vec![1, 4]);
+    }
+
+    #[test]
+    fn model_shape_derived_dims() {
+        let m = ModelShape {
+            name: "t".into(),
+            arch: "mamba2".into(),
+            vocab_size: 256,
+            d_model: 128,
+            n_layers: 2,
+            d_state: 32,
+            d_conv: 4,
+            expand: 2,
+            dt_rank: 0,
+            headdim: 32,
+            chunk: 16,
+        };
+        assert_eq!(m.d_inner(), 256);
+        assert_eq!(m.n_heads(), 8);
+        assert_eq!(m.conv_dim(), 256 + 64);
+        assert_eq!(m.resolved_dt_rank(), 8);
+    }
+}

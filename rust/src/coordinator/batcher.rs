@@ -1,0 +1,99 @@
+//! Bucketed dynamic batching policy.
+//!
+//! Static-shape NPU serving can only run the batch sizes it compiled
+//! (paper Step-1: fixed shapes), so the batcher picks, each iteration, the
+//! largest compiled bucket that the currently-decodable sequences fill,
+//! optionally waiting a short window for stragglers to fill a bigger
+//! bucket. Leftover sequences round-robin to the front next iteration so
+//! no sequence starves.
+
+/// Bucket-selection decision.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchPlan {
+    /// Bucket (compiled batch size) to run now; 0 = run nothing.
+    pub bucket: usize,
+    /// Whether waiting `wait_us` could upgrade to a larger bucket.
+    pub could_grow: bool,
+}
+
+/// Pick the largest bucket <= `ready` sequences. `buckets` ascending.
+pub fn plan(buckets: &[usize], ready: usize) -> BatchPlan {
+    let bucket = buckets.iter().copied().filter(|&b| b <= ready).max().unwrap_or(0);
+    let could_grow = buckets.iter().any(|&b| b > ready);
+    BatchPlan { bucket, could_grow }
+}
+
+/// Round-robin selector over active sequence slots: returns the next
+/// `count` entries starting at the rotation cursor, advancing it.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    cursor: usize,
+}
+
+impl RoundRobin {
+    /// Select `count` items from `items` (must satisfy count <= len).
+    pub fn select<T: Copy>(&mut self, items: &[T], count: usize) -> Vec<T> {
+        assert!(count <= items.len());
+        let n = items.len();
+        let start = if n == 0 { 0 } else { self.cursor % n };
+        let picked: Vec<T> = (0..count).map(|i| items[(start + i) % n]).collect();
+        self.cursor = if n == 0 { 0 } else { (start + count) % n };
+        picked
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::check;
+
+    #[test]
+    fn picks_largest_fitting_bucket() {
+        let buckets = [1, 2, 4, 8];
+        assert_eq!(plan(&buckets, 0).bucket, 0);
+        assert_eq!(plan(&buckets, 1).bucket, 1);
+        assert_eq!(plan(&buckets, 3).bucket, 2);
+        assert_eq!(plan(&buckets, 8).bucket, 8);
+        assert_eq!(plan(&buckets, 100).bucket, 8);
+    }
+
+    #[test]
+    fn growth_signal() {
+        let buckets = [1, 2, 4];
+        assert!(plan(&buckets, 3).could_grow);
+        assert!(!plan(&buckets, 4).could_grow);
+        assert!(!plan(&buckets, 9).could_grow);
+    }
+
+    #[test]
+    fn round_robin_is_fair() {
+        let mut rr = RoundRobin::default();
+        let items = [10, 20, 30];
+        // repeatedly take 2 of 3: every item must appear 2 times in 3 rounds
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..3 {
+            for x in rr.select(&items, 2) {
+                *counts.entry(x).or_insert(0) += 1;
+            }
+        }
+        assert!(counts.values().all(|&c| c == 2), "{counts:?}");
+    }
+
+    #[test]
+    fn property_bucket_never_exceeds_ready() {
+        check(
+            |r| (r.below(20), r.below(4)),
+            |&(ready, _)| {
+                let buckets = [1usize, 2, 4, 8];
+                let p = plan(&buckets, ready);
+                if p.bucket > ready {
+                    return Err(format!("bucket {} > ready {ready}", p.bucket));
+                }
+                if ready >= 1 && p.bucket == 0 {
+                    return Err("starved despite ready work".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,111 @@
+//! Serving metrics: latency histograms + throughput counters.
+
+use std::time::Instant;
+
+use crate::util::{LatencyHistogram, Table};
+
+/// Aggregated serving metrics (owned by the server loop; snapshot on read).
+#[derive(Clone, Debug)]
+pub struct Metrics {
+    pub started: Instant,
+    pub admitted: u64,
+    pub rejected: u64,
+    pub cancelled: u64,
+    pub completed: u64,
+    pub tokens_out: u64,
+    pub prefills: u64,
+    pub decode_calls: u64,
+    pub decode_batched_seqs: u64,
+    pub ttft_us: LatencyHistogram,
+    pub e2e_us: LatencyHistogram,
+    pub per_token_us: LatencyHistogram,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self {
+            started: Instant::now(),
+            admitted: 0,
+            rejected: 0,
+            cancelled: 0,
+            completed: 0,
+            tokens_out: 0,
+            prefills: 0,
+            decode_calls: 0,
+            decode_batched_seqs: 0,
+            ttft_us: LatencyHistogram::new(),
+            e2e_us: LatencyHistogram::new(),
+            per_token_us: LatencyHistogram::new(),
+        }
+    }
+}
+
+impl Metrics {
+    /// Aggregate decode throughput since start (Tokens/s — the paper's KPI).
+    pub fn tokens_per_s(&self) -> f64 {
+        let dt = self.started.elapsed().as_secs_f64();
+        if dt == 0.0 {
+            0.0
+        } else {
+            self.tokens_out as f64 / dt
+        }
+    }
+
+    /// Mean sequences per decode call (batching efficiency).
+    pub fn mean_decode_batch(&self) -> f64 {
+        if self.decode_calls == 0 {
+            0.0
+        } else {
+            self.decode_batched_seqs as f64 / self.decode_calls as f64
+        }
+    }
+
+    /// Render the serving report table.
+    pub fn report(&self) -> Table {
+        let mut t = Table::new(&["metric", "value"]).with_title("serving metrics");
+        let rows = [
+            ("admitted", format!("{}", self.admitted)),
+            ("rejected", format!("{}", self.rejected)),
+            ("cancelled", format!("{}", self.cancelled)),
+            ("completed", format!("{}", self.completed)),
+            ("tokens out", format!("{}", self.tokens_out)),
+            ("tokens/s", format!("{:.1}", self.tokens_per_s())),
+            ("prefills", format!("{}", self.prefills)),
+            ("decode calls", format!("{}", self.decode_calls)),
+            ("mean batch", format!("{:.2}", self.mean_decode_batch())),
+            ("TTFT p50", format!("{:.2} ms", self.ttft_us.percentile_us(50.0) / 1e3)),
+            ("TTFT p99", format!("{:.2} ms", self.ttft_us.percentile_us(99.0) / 1e3)),
+            ("e2e p50", format!("{:.2} ms", self.e2e_us.percentile_us(50.0) / 1e3)),
+            ("e2e p99", format!("{:.2} ms", self.e2e_us.percentile_us(99.0) / 1e3)),
+            (
+                "per-token p50",
+                format!("{:.2} ms", self.per_token_us.percentile_us(50.0) / 1e3),
+            ),
+        ];
+        for (k, v) in rows {
+            t.row(&[k.to_string(), v]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batching_efficiency_math() {
+        let mut m = Metrics::default();
+        m.decode_calls = 4;
+        m.decode_batched_seqs = 10;
+        assert!((m.mean_decode_batch() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_renders() {
+        let m = Metrics::default();
+        let s = m.report().render();
+        assert!(s.contains("tokens/s"));
+        assert!(s.contains("TTFT"));
+    }
+}

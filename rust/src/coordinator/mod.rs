@@ -1,0 +1,24 @@
+//! The serving coordinator — XAMBA's Layer-3 runtime.
+//!
+//! A thread-based engine loop (no async runtime is vendored; SSM decode is
+//! compute-bound anyway) that drives the AOT PJRT executables: byte-level
+//! tokenizer with fixed-window prefill (paper Step-1 static shapes),
+//! admission queue with backpressure, SSM state-slot cache (the O(1)
+//! "KV cache"), bucketed dynamic batcher (largest compiled batch that
+//! fills), and serving metrics (TTFT / e2e / per-token histograms,
+//! Tokens/s — the paper's §4 KPI).
+
+pub mod batcher;
+pub mod metrics;
+pub mod model;
+pub mod request;
+pub mod server;
+pub mod state_cache;
+pub mod tokenizer;
+
+pub use metrics::Metrics;
+pub use model::{MockModel, PjrtServeModel, SeqState, ServeModel};
+pub use request::{FinishReason, GenParams, Request, Response, StreamEvent};
+pub use server::{sample, start_pjrt, Server};
+pub use state_cache::StateCache;
+pub use tokenizer::Tokenizer;

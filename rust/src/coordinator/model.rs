@@ -1,0 +1,277 @@
+//! Model abstraction the scheduler drives: a fixed-window prefill plus
+//! bucketed batched decode. `PjrtServeModel` is the production binding to
+//! the AOT artifacts; `MockModel` makes the scheduler/batcher/state-cache
+//! logic unit-testable without PJRT.
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{Engine, HostTensor, Manifest, ProgramEntry};
+
+/// Recurrent state of one sequence (the serving layer's "KV cache" —
+/// fixed-size per the SSM's O(1)-state property the paper leans on).
+#[derive(Clone, Debug)]
+pub struct SeqState {
+    pub conv: HostTensor,
+    pub ssm: HostTensor,
+}
+
+/// What the coordinator needs from a model backend. Constructed inside
+/// the engine thread (PJRT clients are not `Send`), so no `Send` bound.
+pub trait ServeModel {
+    /// Static prefill window (token count).
+    fn prefill_len(&self) -> usize;
+    fn vocab(&self) -> usize;
+    /// Compiled decode batch sizes, ascending.
+    fn decode_buckets(&self) -> &[usize];
+    /// Run the fixed-window prefill; returns last-position logits + state.
+    fn prefill(&mut self, tokens: &[i32]) -> Result<(Vec<f32>, SeqState)>;
+    /// Advance `seqs.len()` sequences one token (len must be a bucket).
+    /// Returns per-sequence logits; states are updated in place.
+    fn decode(&mut self, seqs: &mut [(&mut SeqState, i32)]) -> Result<Vec<Vec<f32>>>;
+}
+
+// --- PJRT-backed implementation -----------------------------------------------
+
+/// Production backend: executes the AOT HLO artifacts on PJRT-CPU.
+pub struct PjrtServeModel {
+    engine: Engine,
+    manifest: Manifest,
+    prefill_entry: ProgramEntry,
+    decode_entries: Vec<(usize, ProgramEntry)>, // (batch, entry) ascending
+    buckets: Vec<usize>,
+    vocab: usize,
+}
+
+impl PjrtServeModel {
+    /// Load + compile prefill and all decode buckets for (model, variant).
+    pub fn load(artifacts_dir: &str, model: &str, variant: &str) -> Result<Self> {
+        Self::load_with_buckets(artifacts_dir, model, variant, None)
+    }
+
+    /// Like `load`, restricted to a subset of compiled batch buckets
+    /// (serving-policy experiments; None = everything in the manifest).
+    pub fn load_with_buckets(
+        artifacts_dir: &str,
+        model: &str,
+        variant: &str,
+        allowed: Option<&[usize]>,
+    ) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir).map_err(|e| anyhow!(e))?;
+        let mut engine = Engine::cpu()?;
+        let prefill_entry = manifest
+            .find(model, variant, "prefill")
+            .ok_or_else(|| anyhow!("no prefill program for {model}.{variant}"))?
+            .clone();
+        engine.prepare(&manifest, &prefill_entry)?;
+        let mut buckets = manifest.decode_buckets(model, variant);
+        if let Some(allow) = allowed {
+            buckets.retain(|b| allow.contains(b));
+        }
+        if buckets.is_empty() {
+            return Err(anyhow!("no decode buckets for {model}.{variant}"));
+        }
+        let mut decode_entries = Vec::new();
+        for &b in &buckets {
+            let e = manifest
+                .find(model, variant, &format!("decode_b{b}"))
+                .ok_or_else(|| anyhow!("missing decode_b{b}"))?
+                .clone();
+            engine.prepare(&manifest, &e)?;
+            decode_entries.push((b, e));
+        }
+        let vocab = prefill_entry.shape.vocab_size;
+        Ok(Self { engine, manifest, prefill_entry, decode_entries, buckets, vocab })
+    }
+
+    fn stack(tensors: Vec<&HostTensor>) -> HostTensor {
+        let one = tensors[0].shape().to_vec();
+        let mut shape = vec![tensors.len()];
+        shape.extend_from_slice(&one);
+        let mut data = Vec::with_capacity(tensors.len() * tensors[0].f32_data().len());
+        for t in &tensors {
+            debug_assert_eq!(t.shape(), one.as_slice());
+            data.extend_from_slice(t.f32_data());
+        }
+        HostTensor::F32(shape, data)
+    }
+
+    fn unstack(t: &HostTensor, b: usize) -> Vec<HostTensor> {
+        let inner_shape = t.shape()[1..].to_vec();
+        let inner: usize = inner_shape.iter().product();
+        (0..b)
+            .map(|i| {
+                HostTensor::F32(
+                    inner_shape.clone(),
+                    t.f32_data()[i * inner..(i + 1) * inner].to_vec(),
+                )
+            })
+            .collect()
+    }
+}
+
+impl ServeModel for PjrtServeModel {
+    fn prefill_len(&self) -> usize {
+        self.manifest.prefill_len
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn decode_buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn prefill(&mut self, tokens: &[i32]) -> Result<(Vec<f32>, SeqState)> {
+        let entry = self.prefill_entry.clone();
+        let tok = HostTensor::I32(vec![tokens.len()], tokens.to_vec());
+        let conv = HostTensor::zeros(&entry.inputs[2].shape);
+        let ssm = HostTensor::zeros(&entry.inputs[3].shape);
+        let outs = self
+            .engine
+            .run_with_weights(&self.manifest, &entry, &[tok, conv, ssm])?;
+        let logits = outs[0].f32_data().to_vec();
+        Ok((logits, SeqState { conv: outs[1].clone(), ssm: outs[2].clone() }))
+    }
+
+    fn decode(&mut self, seqs: &mut [(&mut SeqState, i32)]) -> Result<Vec<Vec<f32>>> {
+        let b = seqs.len();
+        let entry = self
+            .decode_entries
+            .iter()
+            .find(|(bb, _)| *bb == b)
+            .ok_or_else(|| anyhow!("no decode bucket of size {b}"))?
+            .1
+            .clone();
+        let tokens = HostTensor::I32(
+            vec![b, 1],
+            seqs.iter().map(|(_, t)| *t).collect(),
+        );
+        let conv = Self::stack(seqs.iter().map(|(s, _)| &s.conv).collect());
+        let ssm = Self::stack(seqs.iter().map(|(s, _)| &s.ssm).collect());
+        let outs = self
+            .engine
+            .run_with_weights(&self.manifest, &entry, &[tokens, conv, ssm])?;
+        let v = self.vocab;
+        let logits_all = outs[0].f32_data();
+        let convs = Self::unstack(&outs[1], b);
+        let ssms = Self::unstack(&outs[2], b);
+        let mut result = Vec::with_capacity(b);
+        for (i, (state, _)) in seqs.iter_mut().enumerate() {
+            state.conv = convs[i].clone();
+            state.ssm = ssms[i].clone();
+            result.push(logits_all[i * v..(i + 1) * v].to_vec());
+        }
+        Ok(result)
+    }
+}
+
+// --- mock backend for scheduler tests --------------------------------------------
+
+/// Deterministic toy model: next token = (last + 1) mod vocab; the state
+/// stores the running token so decode continuity is checkable.
+pub struct MockModel {
+    pub window: usize,
+    pub vocab: usize,
+    pub buckets: Vec<usize>,
+    /// Every decode batch size observed (asserts batching policy).
+    pub batch_log: Vec<usize>,
+    /// Artificial per-call latency (scheduling tests).
+    pub decode_delay: std::time::Duration,
+}
+
+impl MockModel {
+    pub fn new(window: usize, vocab: usize, buckets: Vec<usize>) -> Self {
+        Self {
+            window,
+            vocab,
+            buckets,
+            batch_log: Vec::new(),
+            decode_delay: std::time::Duration::ZERO,
+        }
+    }
+
+    fn logits_for(&self, predicted: i32) -> Vec<f32> {
+        let mut l = vec![0.0f32; self.vocab];
+        l[(predicted.rem_euclid(self.vocab as i32)) as usize] = 10.0;
+        l
+    }
+}
+
+impl ServeModel for MockModel {
+    fn prefill_len(&self) -> usize {
+        self.window
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn decode_buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn prefill(&mut self, tokens: &[i32]) -> Result<(Vec<f32>, SeqState)> {
+        let last = *tokens.last().unwrap();
+        let state = SeqState {
+            conv: HostTensor::F32(vec![1], vec![last as f32]),
+            ssm: HostTensor::F32(vec![1], vec![0.0]),
+        };
+        Ok((self.logits_for(last + 1), state))
+    }
+
+    fn decode(&mut self, seqs: &mut [(&mut SeqState, i32)]) -> Result<Vec<Vec<f32>>> {
+        self.batch_log.push(seqs.len());
+        if !self.buckets.contains(&seqs.len()) {
+            return Err(anyhow!("batch {} is not a bucket", seqs.len()));
+        }
+        if !self.decode_delay.is_zero() {
+            std::thread::sleep(self.decode_delay);
+        }
+        Ok(seqs
+            .iter_mut()
+            .map(|(state, tok)| {
+                state.conv = HostTensor::F32(vec![1], vec![*tok as f32]);
+                self.logits_for(*tok + 1)
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_model_is_a_counter() {
+        let mut m = MockModel::new(4, 256, vec![1, 2]);
+        let (logits, mut st) = m.prefill(&[5, 6, 7]).unwrap();
+        let argmax = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(argmax, 8);
+        let mut seqs = vec![(&mut st, 8i32)];
+        let l2 = m.decode(&mut seqs).unwrap();
+        let argmax2 = l2[0]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(argmax2, 9);
+        assert_eq!(m.batch_log, vec![1]);
+    }
+
+    #[test]
+    fn mock_rejects_non_bucket_batches() {
+        let mut m = MockModel::new(4, 16, vec![1, 2]);
+        let (_, mut a) = m.prefill(&[1]).unwrap();
+        let (_, mut b) = m.prefill(&[2]).unwrap();
+        let (_, mut c) = m.prefill(&[3]).unwrap();
+        let mut seqs = vec![(&mut a, 1), (&mut b, 2), (&mut c, 3)];
+        assert!(m.decode(&mut seqs).is_err());
+    }
+}

@@ -1,0 +1,153 @@
+//! Sequence-state slab: the SSM analogue of a KV-cache manager.
+//!
+//! Unlike transformer serving, state size is O(1) per sequence (the
+//! paper's core efficiency argument), so the manager is a fixed slab of
+//! slots with explicit alloc/free — no paging, no eviction pressure, but
+//! the same admission-control role: no free slot means a request waits.
+
+use super::model::SeqState;
+
+/// Slot handle into the cache.
+pub type SlotId = usize;
+
+/// Fixed-capacity slab of per-sequence recurrent states.
+#[derive(Debug, Default)]
+pub struct StateCache {
+    slots: Vec<Option<SeqState>>,
+    free: Vec<SlotId>,
+    /// Peak concurrent occupancy (observability).
+    pub high_water: usize,
+}
+
+impl StateCache {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            slots: (0..capacity).map(|_| None).collect(),
+            free: (0..capacity).rev().collect(),
+            high_water: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    pub fn has_free(&self) -> bool {
+        !self.free.is_empty()
+    }
+
+    /// Claim a slot for a new sequence; None when full.
+    pub fn alloc(&mut self, state: SeqState) -> Option<SlotId> {
+        let id = self.free.pop()?;
+        debug_assert!(self.slots[id].is_none(), "free list corruption");
+        self.slots[id] = Some(state);
+        self.high_water = self.high_water.max(self.in_use());
+        Some(id)
+    }
+
+    /// Release a finished sequence's slot.
+    pub fn release(&mut self, id: SlotId) -> SeqState {
+        let st = self.slots[id].take().expect("releasing empty slot");
+        self.free.push(id);
+        st
+    }
+
+    pub fn get_mut(&mut self, id: SlotId) -> &mut SeqState {
+        self.slots[id].as_mut().expect("empty slot")
+    }
+
+    /// Mutable access to several distinct slots at once (batched decode).
+    /// Panics on duplicate ids.
+    pub fn get_many_mut(&mut self, ids: &[SlotId]) -> Vec<&mut SeqState> {
+        for (i, a) in ids.iter().enumerate() {
+            for b in &ids[i + 1..] {
+                assert_ne!(a, b, "duplicate slot id in batch");
+            }
+        }
+        // split the slab into disjoint mutable borrows
+        let mut result: Vec<Option<&mut SeqState>> = Vec::with_capacity(ids.len());
+        let mut remaining: &mut [Option<SeqState>] = &mut self.slots;
+        let mut base = 0usize;
+        let mut order: Vec<(usize, SlotId)> =
+            ids.iter().copied().enumerate().map(|(i, s)| (i, s)).collect();
+        order.sort_by_key(|&(_, s)| s);
+        result.resize_with(ids.len(), || None);
+        for (orig_idx, slot) in order {
+            let offset = slot - base;
+            let (head, tail) = remaining.split_at_mut(offset + 1);
+            result[orig_idx] = Some(head[offset].as_mut().expect("empty slot"));
+            remaining = tail;
+            base = slot + 1;
+        }
+        result.into_iter().map(|o| o.unwrap()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostTensor;
+
+    fn st(v: f32) -> SeqState {
+        SeqState {
+            conv: HostTensor::F32(vec![1], vec![v]),
+            ssm: HostTensor::F32(vec![1], vec![v]),
+        }
+    }
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut c = StateCache::new(2);
+        let a = c.alloc(st(1.0)).unwrap();
+        let b = c.alloc(st(2.0)).unwrap();
+        assert_ne!(a, b);
+        assert!(c.alloc(st(3.0)).is_none(), "over capacity");
+        assert_eq!(c.in_use(), 2);
+        c.release(a);
+        assert!(c.has_free());
+        let d = c.alloc(st(4.0)).unwrap();
+        assert_eq!(d, a, "slot reused");
+        assert_eq!(c.high_water, 2);
+    }
+
+    #[test]
+    fn get_many_mut_disjoint() {
+        let mut c = StateCache::new(4);
+        let ids: Vec<_> = (0..4).map(|i| c.alloc(st(i as f32)).unwrap()).collect();
+        // ask out of order
+        let sel = vec![ids[2], ids[0], ids[3]];
+        let states = c.get_many_mut(&sel);
+        assert_eq!(states[0].conv.f32_data()[0], 2.0);
+        assert_eq!(states[1].conv.f32_data()[0], 0.0);
+        assert_eq!(states[2].conv.f32_data()[0], 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate slot id")]
+    fn get_many_mut_rejects_duplicates() {
+        let mut c = StateCache::new(2);
+        let a = c.alloc(st(0.0)).unwrap();
+        c.get_many_mut(&[a, a]);
+    }
+
+    #[test]
+    fn slot_leak_free_under_churn() {
+        // property: after any alloc/release interleaving, in_use is exact
+        let mut c = StateCache::new(8);
+        let mut live: Vec<SlotId> = Vec::new();
+        let mut rng = crate::util::Prng::new(3);
+        for _ in 0..1000 {
+            if !live.is_empty() && (rng.uniform() < 0.5 || !c.has_free()) {
+                let i = rng.below(live.len());
+                c.release(live.swap_remove(i));
+            } else if c.has_free() {
+                live.push(c.alloc(st(0.0)).unwrap());
+            }
+            assert_eq!(c.in_use(), live.len());
+        }
+    }
+}

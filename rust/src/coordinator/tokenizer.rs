@@ -1,0 +1,101 @@
+//! Byte-level tokenizer with fixed-window left padding.
+//!
+//! The tiny models are byte-level LMs (vocab 256), so tokenization is
+//! identity on bytes. The interesting part is XAMBA Step-1 (paper §2):
+//! NPUs want static shapes, so prefill always sees exactly `window`
+//! tokens — shorter prompts are LEFT-padded (leading pads wash out of the
+//! causal SSM state), longer prompts keep their trailing `window` bytes
+//! (the recurrent state of older bytes would have been truncated anyway).
+
+/// Padding byte (ASCII space: in-distribution for the text corpus).
+pub const PAD_BYTE: u8 = b' ';
+
+/// Byte-level tokenizer bound to a fixed prefill window.
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    pub window: usize,
+    pub vocab: usize,
+}
+
+impl Tokenizer {
+    pub fn new(window: usize, vocab: usize) -> Self {
+        assert!(vocab >= 256, "byte tokenizer needs vocab >= 256");
+        Self { window, vocab }
+    }
+
+    /// Encode a prompt into exactly `window` token ids.
+    pub fn encode_window(&self, prompt: &[u8]) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.window);
+        if prompt.len() >= self.window {
+            let tail = &prompt[prompt.len() - self.window..];
+            out.extend(tail.iter().map(|&b| b as i32));
+        } else {
+            out.resize(self.window - prompt.len(), PAD_BYTE as i32);
+            out.extend(prompt.iter().map(|&b| b as i32));
+        }
+        out
+    }
+
+    /// Decode generated ids back to bytes (ids are bytes for this vocab).
+    pub fn decode(&self, ids: &[i32]) -> Vec<u8> {
+        ids.iter().map(|&i| i.clamp(0, 255) as u8).collect()
+    }
+
+    /// Lossy UTF-8 rendering for logs / demos.
+    pub fn render(&self, ids: &[i32]) -> String {
+        String::from_utf8_lossy(&self.decode(ids)).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::check;
+    use crate::util::Prng;
+
+    #[test]
+    fn short_prompt_left_pads() {
+        let t = Tokenizer::new(8, 256);
+        let ids = t.encode_window(b"hi");
+        assert_eq!(ids.len(), 8);
+        assert_eq!(&ids[..6], &[32; 6]);
+        assert_eq!(&ids[6..], &[104, 105]);
+    }
+
+    #[test]
+    fn long_prompt_keeps_tail() {
+        let t = Tokenizer::new(4, 256);
+        let ids = t.encode_window(b"abcdefgh");
+        assert_eq!(ids, vec![101, 102, 103, 104]); // "efgh"
+    }
+
+    #[test]
+    fn exact_length_passthrough_round_trip() {
+        let t = Tokenizer::new(5, 256);
+        let ids = t.encode_window(b"hello");
+        assert_eq!(t.decode(&ids), b"hello");
+    }
+
+    #[test]
+    fn property_window_always_exact_and_tail_preserved() {
+        check(
+            |r: &mut Prng| {
+                let len = r.below(100);
+                (0..len).map(|_| r.below(256) as u8).collect::<Vec<u8>>()
+            },
+            |prompt| {
+                let t = Tokenizer::new(16, 256);
+                let ids = t.encode_window(prompt);
+                if ids.len() != 16 {
+                    return Err(format!("window {}", ids.len()));
+                }
+                let tail_len = prompt.len().min(16);
+                let got = t.decode(&ids[16 - tail_len..]);
+                if got != prompt[prompt.len() - tail_len..] {
+                    return Err("tail not preserved".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,114 @@
+//! Operator census — the machinery behind paper Fig 5 (appendix A.1).
+//!
+//! The paper contrasts Mamba and Mamba-2 by their operator mix after
+//! conversion (Mamba-2 introduces CumSum/ReduceSum, drops Gathers 18 -> 7,
+//! MatMuls 8 -> 2) and argues the shift away from MPU-friendly ops is why
+//! Mamba-2 is slower on NPUs. `Census` counts live ops in our IR graphs so
+//! the `fig5_census` bench can print the same comparison.
+
+use std::collections::BTreeMap;
+
+use super::Graph;
+use crate::util::Table;
+
+/// Operator histogram of a graph.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Census {
+    pub counts: BTreeMap<&'static str, usize>,
+    pub total: usize,
+}
+
+impl Census {
+    /// Count live (output-reachable) compute ops; Input/Const excluded.
+    pub fn of(graph: &Graph) -> Self {
+        let live = graph.live_set();
+        let mut counts = BTreeMap::new();
+        let mut total = 0;
+        for node in &graph.nodes {
+            if !live[node.id] {
+                continue;
+            }
+            let name = node.op.census_name();
+            if name == "Input" || name == "Const" {
+                continue;
+            }
+            *counts.entry(name).or_insert(0) += 1;
+            total += 1;
+        }
+        Self { counts, total }
+    }
+
+    pub fn get(&self, name: &str) -> usize {
+        self.counts.get(name).copied().unwrap_or(0)
+    }
+
+    /// Side-by-side comparison table of several censuses (Fig 5 layout).
+    pub fn comparison_table(labeled: &[(&str, &Census)]) -> Table {
+        let mut header = vec!["op"];
+        for (label, _) in labeled {
+            header.push(label);
+        }
+        let mut table = Table::new(&header);
+        let mut all_ops: Vec<&'static str> = Vec::new();
+        for (_, c) in labeled {
+            for &k in c.counts.keys() {
+                if !all_ops.contains(&k) {
+                    all_ops.push(k);
+                }
+            }
+        }
+        all_ops.sort();
+        for op in all_ops {
+            let mut row = vec![op.to_string()];
+            for (_, c) in labeled {
+                row.push(c.get(op).to_string());
+            }
+            table.row(&row);
+        }
+        let mut totals = vec!["TOTAL".to_string()];
+        for (_, c) in labeled {
+            totals.push(c.total.to_string());
+        }
+        table.row(&totals);
+        table
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    fn sample() -> Graph {
+        let mut g = Graph::new("s");
+        let a = g.input("a", vec![4, 4]);
+        let b = g.input("b", vec![4, 4]);
+        let m = g.matmul(a, b, "m");
+        let s = g.silu(m, "act");
+        let c = g.cumsum(s, 0, "cs");
+        g.output(c);
+        // dead op must not be counted
+        g.softplus(a, "dead");
+        g
+    }
+
+    #[test]
+    fn counts_live_ops_only() {
+        let c = Census::of(&sample());
+        assert_eq!(c.get("MatMul"), 1);
+        assert_eq!(c.get("Swish"), 1);
+        assert_eq!(c.get("CumSum"), 1);
+        assert_eq!(c.get("SoftPlus"), 0);
+        assert_eq!(c.total, 3);
+    }
+
+    #[test]
+    fn comparison_table_has_all_ops() {
+        let g = sample();
+        let c = Census::of(&g);
+        let t = Census::comparison_table(&[("a", &c), ("b", &c)]);
+        let s = t.render();
+        assert!(s.contains("CumSum"));
+        assert!(s.contains("TOTAL"));
+    }
+}

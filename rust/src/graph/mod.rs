@@ -1,0 +1,493 @@
+//! Tensor-operator IR: graph, builder with shape inference, census.
+//!
+//! This is the repo's stand-in for the OpenVINO IR the paper's conversion
+//! pipeline operates on: `models::` builds Mamba / Mamba-2 block graphs in
+//! it, `passes::` applies the CumBA / ReduBA / ActiBA rewrites over it,
+//! `interp::` executes it for correctness, and `npu::` costs it for
+//! latency. Nodes are single-output, append-only; passes mutate ops in
+//! place and run `dce` afterwards.
+
+pub mod census;
+pub mod op;
+pub mod tensor;
+
+pub use census::Census;
+pub use op::{BinKind, ConstKind, Op, UnKind};
+pub use tensor::{broadcast_shapes, numel, DType, Tensor};
+
+use std::sync::Arc;
+
+use crate::plu::PluTable;
+
+/// Index of a node within its graph.
+pub type NodeId = usize;
+
+/// One IR node (single output).
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub op: Op,
+    pub inputs: Vec<NodeId>,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub name: String,
+    /// Constant payload (`Op::Const` only).
+    pub value: Option<Tensor>,
+}
+
+/// An operator graph. `inputs`/`outputs` order defines the external ABI.
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    pub inputs: Vec<NodeId>,
+    pub outputs: Vec<NodeId>,
+    pub name: String,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), ..Default::default() }
+    }
+
+    fn push(
+        &mut self,
+        op: Op,
+        inputs: Vec<NodeId>,
+        shape: Vec<usize>,
+        dtype: DType,
+        name: impl Into<String>,
+    ) -> NodeId {
+        let id = self.nodes.len();
+        for &i in &inputs {
+            assert!(i < id, "forward reference {i} in node {id}");
+        }
+        self.nodes.push(Node {
+            id,
+            op,
+            inputs,
+            shape,
+            dtype,
+            name: name.into(),
+            value: None,
+        });
+        id
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn shape(&self, id: NodeId) -> &[usize] {
+        &self.nodes[id].shape
+    }
+
+    // --- graph inputs / constants ----------------------------------------
+
+    /// Declare an external f32 input.
+    pub fn input(&mut self, name: &str, shape: Vec<usize>) -> NodeId {
+        let id = self.push(
+            Op::Input { dtype: DType::F32 },
+            vec![],
+            shape,
+            DType::F32,
+            name,
+        );
+        self.inputs.push(id);
+        id
+    }
+
+    /// Declare an external i32 input (token indices).
+    pub fn input_i32(&mut self, name: &str, shape: Vec<usize>) -> NodeId {
+        let id = self.push(
+            Op::Input { dtype: DType::I32 },
+            vec![],
+            shape,
+            DType::I32,
+            name,
+        );
+        self.inputs.push(id);
+        id
+    }
+
+    /// Inline constant tensor.
+    pub fn constant(&mut self, name: &str, t: Tensor) -> NodeId {
+        self.constant_kind(name, t, ConstKind::Dense)
+    }
+
+    /// Inline constant with an explicit sparsity kind (mask constants).
+    pub fn constant_kind(&mut self, name: &str, t: Tensor, kind: ConstKind) -> NodeId {
+        let shape = t.shape.clone();
+        let dtype = t.dtype();
+        let id = self.push(Op::Const { kind }, vec![], shape, dtype, name);
+        self.nodes[id].value = Some(t);
+        id
+    }
+
+    /// The CumBA lower-triangular mask M[i,j] = (j <= i) as a constant.
+    pub fn const_tril(&mut self, name: &str, n: usize) -> NodeId {
+        self.const_tril_offset(name, n, 0)
+    }
+
+    /// Lower-triangular mask with a diagonal offset:
+    /// M[i,j] = (j <= i + offset). SSD's segsum uses offset -1.
+    pub fn const_tril_offset(&mut self, name: &str, n: usize, offset: i64) -> NodeId {
+        let mut data = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                if (j as i64) <= i as i64 + offset {
+                    data[i * n + j] = 1.0;
+                }
+            }
+        }
+        self.constant_kind(name, Tensor::f32(vec![n, n], data), ConstKind::TrilMask)
+    }
+
+    /// The ReduBA all-ones mask vector as a (1, n) constant.
+    pub fn const_ones_row(&mut self, name: &str, n: usize) -> NodeId {
+        self.constant_kind(
+            name,
+            Tensor::f32(vec![1, n], vec![1.0; n]),
+            ConstKind::OnesMask,
+        )
+    }
+
+    /// Scalar f32 constant.
+    pub fn const_scalar(&mut self, name: &str, v: f32) -> NodeId {
+        self.constant(name, Tensor::scalar(v))
+    }
+
+    // --- compute ops -------------------------------------------------------
+
+    /// Batched matmul [..., m, k] x [..., k, n].
+    pub fn matmul(&mut self, a: NodeId, b: NodeId, name: &str) -> NodeId {
+        let sa = self.shape(a).to_vec();
+        let sb = self.shape(b).to_vec();
+        let shape = matmul_shape(&sa, &sb)
+            .unwrap_or_else(|| panic!("matmul shape mismatch {sa:?} x {sb:?} at {name}"));
+        self.push(Op::MatMul, vec![a, b], shape, DType::F32, name)
+    }
+
+    fn binary(&mut self, kind: BinKind, a: NodeId, b: NodeId, name: &str) -> NodeId {
+        let sa = self.shape(a).to_vec();
+        let sb = self.shape(b).to_vec();
+        let shape = broadcast_shapes(&sa, &sb)
+            .unwrap_or_else(|| panic!("broadcast mismatch {sa:?} vs {sb:?} at {name}"));
+        self.push(Op::Binary(kind), vec![a, b], shape, DType::F32, name)
+    }
+
+    pub fn add(&mut self, a: NodeId, b: NodeId, name: &str) -> NodeId {
+        self.binary(BinKind::Add, a, b, name)
+    }
+
+    pub fn sub(&mut self, a: NodeId, b: NodeId, name: &str) -> NodeId {
+        self.binary(BinKind::Sub, a, b, name)
+    }
+
+    pub fn mul(&mut self, a: NodeId, b: NodeId, name: &str) -> NodeId {
+        self.binary(BinKind::Mul, a, b, name)
+    }
+
+    pub fn div(&mut self, a: NodeId, b: NodeId, name: &str) -> NodeId {
+        self.binary(BinKind::Div, a, b, name)
+    }
+
+    pub fn maximum(&mut self, a: NodeId, b: NodeId, name: &str) -> NodeId {
+        self.binary(BinKind::Max, a, b, name)
+    }
+
+    pub fn unary(&mut self, kind: UnKind, x: NodeId, name: &str) -> NodeId {
+        let shape = self.shape(x).to_vec();
+        self.push(Op::Unary(kind), vec![x], shape, DType::F32, name)
+    }
+
+    pub fn exp(&mut self, x: NodeId, name: &str) -> NodeId {
+        self.unary(UnKind::Exp, x, name)
+    }
+
+    pub fn silu(&mut self, x: NodeId, name: &str) -> NodeId {
+        self.unary(UnKind::SiLU, x, name)
+    }
+
+    pub fn softplus(&mut self, x: NodeId, name: &str) -> NodeId {
+        self.unary(UnKind::Softplus, x, name)
+    }
+
+    /// ActiBA PLU node (usually installed by the ActiBA pass, not by hand).
+    pub fn plu(
+        &mut self,
+        x: NodeId,
+        table: Arc<PluTable>,
+        approximates: UnKind,
+        name: &str,
+    ) -> NodeId {
+        let shape = self.shape(x).to_vec();
+        self.push(Op::Plu { table, approximates }, vec![x], shape, DType::F32, name)
+    }
+
+    pub fn cumsum(&mut self, x: NodeId, axis: usize, name: &str) -> NodeId {
+        let shape = self.shape(x).to_vec();
+        assert!(axis < shape.len(), "cumsum axis {axis} of {shape:?}");
+        self.push(Op::CumSum { axis }, vec![x], shape, DType::F32, name)
+    }
+
+    pub fn reduce_sum(&mut self, x: NodeId, axis: usize, name: &str) -> NodeId {
+        let mut shape = self.shape(x).to_vec();
+        assert!(axis < shape.len(), "reduce axis {axis} of {shape:?}");
+        shape.remove(axis);
+        self.push(Op::ReduceSum { axis }, vec![x], shape, DType::F32, name)
+    }
+
+    /// Row gather: `data[v, ...]` by i32 `indices[n]` -> `[n, ...]`.
+    pub fn gather(&mut self, data: NodeId, indices: NodeId, name: &str) -> NodeId {
+        let sd = self.shape(data).to_vec();
+        let si = self.shape(indices).to_vec();
+        assert_eq!(self.node(indices).dtype, DType::I32, "gather needs i32 idx");
+        assert_eq!(si.len(), 1, "gather indices must be rank 1");
+        let mut shape = vec![si[0]];
+        shape.extend_from_slice(&sd[1..]);
+        self.push(Op::Gather, vec![data, indices], shape, DType::F32, name)
+    }
+
+    /// Depthwise causal conv over (T, C) with zero left-context.
+    pub fn conv1d_causal(
+        &mut self,
+        x: NodeId,
+        w: NodeId,
+        b: NodeId,
+        name: &str,
+    ) -> NodeId {
+        let sx = self.shape(x).to_vec();
+        let sw = self.shape(w).to_vec();
+        assert_eq!(sx.len(), 2, "conv input must be (T, C)");
+        assert_eq!(sw.len(), 2, "conv weight must be (K, C)");
+        assert_eq!(sx[1], sw[1], "conv channel mismatch");
+        assert_eq!(self.shape(b), &[sx[1]], "conv bias mismatch");
+        let k = sw[0];
+        self.push(Op::Conv1dCausal { k }, vec![x, w, b], sx, DType::F32, name)
+    }
+
+    pub fn rmsnorm(&mut self, x: NodeId, w: NodeId, name: &str) -> NodeId {
+        let shape = self.shape(x).to_vec();
+        assert_eq!(
+            self.shape(w),
+            &shape[shape.len() - 1..],
+            "rmsnorm scale must match last dim"
+        );
+        self.push(Op::RmsNorm { eps: 1e-5 }, vec![x, w], shape, DType::F32, name)
+    }
+
+    pub fn softmax(&mut self, x: NodeId, axis: usize, name: &str) -> NodeId {
+        let shape = self.shape(x).to_vec();
+        assert!(axis < shape.len());
+        self.push(Op::Softmax { axis }, vec![x], shape, DType::F32, name)
+    }
+
+    // --- layout ops ---------------------------------------------------------
+
+    pub fn slice(
+        &mut self,
+        x: NodeId,
+        axis: usize,
+        start: usize,
+        len: usize,
+        name: &str,
+    ) -> NodeId {
+        let mut shape = self.shape(x).to_vec();
+        assert!(axis < shape.len(), "slice axis");
+        assert!(start + len <= shape[axis], "slice out of range at {name}");
+        shape[axis] = len;
+        let dtype = self.node(x).dtype;
+        self.push(Op::Slice { axis, start, len }, vec![x], shape, dtype, name)
+    }
+
+    pub fn concat(&mut self, xs: &[NodeId], axis: usize, name: &str) -> NodeId {
+        assert!(!xs.is_empty());
+        let mut shape = self.shape(xs[0]).to_vec();
+        for &x in &xs[1..] {
+            let s = self.shape(x);
+            assert_eq!(s.len(), shape.len(), "concat rank mismatch");
+            for (d, (&a, &b)) in shape.iter().zip(s).enumerate() {
+                if d != axis {
+                    assert_eq!(a, b, "concat dim {d} mismatch at {name}");
+                }
+            }
+            shape[axis] += s[axis];
+        }
+        let dtype = self.node(xs[0]).dtype;
+        self.push(Op::Concat { axis }, xs.to_vec(), shape, dtype, name)
+    }
+
+    pub fn reshape(&mut self, x: NodeId, shape: Vec<usize>, name: &str) -> NodeId {
+        assert_eq!(
+            numel(self.shape(x)),
+            numel(&shape),
+            "reshape numel mismatch at {name}"
+        );
+        let dtype = self.node(x).dtype;
+        self.push(Op::Reshape { shape: shape.clone() }, vec![x], shape, dtype, name)
+    }
+
+    pub fn transpose(&mut self, x: NodeId, perm: Vec<usize>, name: &str) -> NodeId {
+        let sx = self.shape(x).to_vec();
+        assert_eq!(perm.len(), sx.len(), "perm rank mismatch");
+        let shape: Vec<usize> = perm.iter().map(|&p| sx[p]).collect();
+        let dtype = self.node(x).dtype;
+        self.push(Op::Transpose { perm }, vec![x], shape, dtype, name)
+    }
+
+    pub fn broadcast(&mut self, x: NodeId, shape: Vec<usize>, name: &str) -> NodeId {
+        let sx = self.shape(x).to_vec();
+        assert_eq!(
+            broadcast_shapes(&sx, &shape),
+            Some(shape.clone()),
+            "cannot broadcast {sx:?} to {shape:?} at {name}"
+        );
+        let dtype = self.node(x).dtype;
+        self.push(Op::Broadcast { shape: shape.clone() }, vec![x], shape, dtype, name)
+    }
+
+    // --- graph management -----------------------------------------------------
+
+    /// Raw node append for graph rewriters (passes): shape/dtype are the
+    /// caller's responsibility, the topological (inputs < id) invariant is
+    /// still enforced.
+    pub fn add_node(
+        &mut self,
+        op: Op,
+        inputs: Vec<NodeId>,
+        shape: Vec<usize>,
+        dtype: DType,
+        name: String,
+        value: Option<Tensor>,
+    ) -> NodeId {
+        let id = self.push(op, inputs, shape, dtype, name);
+        self.nodes[id].value = value;
+        id
+    }
+
+    /// Mark a node as a graph output.
+    pub fn output(&mut self, id: NodeId) {
+        self.outputs.push(id);
+    }
+
+    /// Nodes in executable order (nodes are append-only, so identity).
+    pub fn topo_order(&self) -> impl Iterator<Item = NodeId> + '_ {
+        0..self.nodes.len()
+    }
+
+    /// Count of nodes reachable from the outputs (live nodes).
+    pub fn live_set(&self) -> Vec<bool> {
+        let mut live = vec![false; self.nodes.len()];
+        let mut stack: Vec<NodeId> = self.outputs.clone();
+        while let Some(id) = stack.pop() {
+            if live[id] {
+                continue;
+            }
+            live[id] = true;
+            stack.extend_from_slice(&self.nodes[id].inputs);
+        }
+        live
+    }
+
+    /// Number of live (reachable) nodes.
+    pub fn live_count(&self) -> usize {
+        self.live_set().iter().filter(|&&l| l).count()
+    }
+}
+
+/// Shape of a batched matmul, or None if incompatible.
+pub fn matmul_shape(a: &[usize], b: &[usize]) -> Option<Vec<usize>> {
+    if a.len() < 2 || b.len() < 2 {
+        return None;
+    }
+    let (m, ka) = (a[a.len() - 2], a[a.len() - 1]);
+    let (kb, n) = (b[b.len() - 2], b[b.len() - 1]);
+    if ka != kb {
+        return None;
+    }
+    let batch_a = &a[..a.len() - 2];
+    let batch_b = &b[..b.len() - 2];
+    let batch: Vec<usize> = if batch_b.is_empty() {
+        batch_a.to_vec()
+    } else if batch_a.is_empty() {
+        batch_b.to_vec()
+    } else if batch_a == batch_b {
+        batch_a.to_vec()
+    } else {
+        return None;
+    };
+    let mut out = batch;
+    out.push(m);
+    out.push(n);
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_infers_shapes() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![4, 8]);
+        let b = g.input("b", vec![8, 3]);
+        let m = g.matmul(a, b, "m");
+        assert_eq!(g.shape(m), &[4, 3]);
+        let s = g.slice(m, 1, 0, 2, "s");
+        assert_eq!(g.shape(s), &[4, 2]);
+        let r = g.reduce_sum(m, 0, "r");
+        assert_eq!(g.shape(r), &[3]);
+    }
+
+    #[test]
+    fn batched_matmul_shapes() {
+        assert_eq!(matmul_shape(&[5, 2, 3], &[3, 4]), Some(vec![5, 2, 4]));
+        assert_eq!(matmul_shape(&[5, 2, 3], &[5, 3, 4]), Some(vec![5, 2, 4]));
+        assert_eq!(matmul_shape(&[2, 3], &[4, 5]), None);
+        assert_eq!(matmul_shape(&[6, 2, 3], &[5, 3, 4]), None);
+    }
+
+    #[test]
+    fn tril_mask_constant_is_correct() {
+        let mut g = Graph::new("t");
+        let m = g.const_tril("mask", 3);
+        let t = g.node(m).value.as_ref().unwrap();
+        assert_eq!(
+            t.as_f32(),
+            &[1., 0., 0., 1., 1., 0., 1., 1., 1.]
+        );
+        assert!(matches!(g.node(m).op, Op::Const { kind: ConstKind::TrilMask }));
+    }
+
+    #[test]
+    fn live_set_tracks_reachability() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![2, 2]);
+        let b = g.input("b", vec![2, 2]);
+        let dead = g.add(a, b, "dead");
+        let live = g.mul(a, b, "live");
+        g.output(live);
+        let l = g.live_set();
+        assert!(l[live] && l[a] && l[b]);
+        assert!(!l[dead]);
+        assert_eq!(g.live_count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "broadcast mismatch")]
+    fn bad_broadcast_panics() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![2, 3]);
+        let b = g.input("b", vec![2, 4]);
+        g.add(a, b, "bad");
+    }
+
+    #[test]
+    fn concat_shapes() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![2, 3]);
+        let b = g.input("b", vec![2, 5]);
+        let c = g.concat(&[a, b], 1, "c");
+        assert_eq!(g.shape(c), &[2, 8]);
+    }
+}

@@ -1,0 +1,141 @@
+//! Operator set of the IR.
+//!
+//! Mirrors the OpenVINO-level operator vocabulary the paper discusses
+//! (MatMul, Add, Mul, CumSum, ReduceSum, Gather, activations, …) so the
+//! operator census (Fig 5) and the NPU cost model see the same graph a
+//! real conversion pipeline would produce. Everything is single-output;
+//! graphs list multiple output nodes instead of tuple values.
+
+use std::sync::Arc;
+
+use crate::graph::tensor::DType;
+use crate::plu::PluTable;
+
+/// Binary elementwise operator kind (numpy broadcasting semantics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BinKind {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+}
+
+/// Unary elementwise operator kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum UnKind {
+    Neg,
+    Exp,
+    Log,
+    Sqrt,
+    Abs,
+    Recip,
+    Relu,
+    Sigmoid,
+    /// Swish / SiLU — one of Mamba-1's two bottleneck activations (Fig 1).
+    SiLU,
+    /// Softplus — the other bottleneck activation.
+    Softplus,
+    Tanh,
+}
+
+/// How a constant was produced — the NPU datapath treats structured masks
+/// specially (ZVC compression + sparsity compute-skip, paper Fig 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConstKind {
+    /// Arbitrary data (weights): negligible sparsity in Mamba (paper §2.1).
+    Dense,
+    /// CumBA's lower-triangular mask: ~50 % zeros, ZVC-compressible.
+    TrilMask,
+    /// ReduBA's all-ones vector mask: reused across every output.
+    OnesMask,
+}
+
+/// An IR operator.
+#[derive(Clone, Debug)]
+pub enum Op {
+    /// External input (activations, weights, states).
+    Input { dtype: DType },
+    /// Constant tensor held inline; `kind` drives sparsity modeling.
+    Const { kind: ConstKind },
+    /// Batched matmul: [..., m, k] x [..., k, n] -> [..., m, n]
+    /// (leading dims must match or be absent on either side).
+    MatMul,
+    Binary(BinKind),
+    Unary(UnKind),
+    /// ActiBA: piecewise-linear approximation evaluated in the drain-path
+    /// PLU. `approximates` records the op it replaced (for reports).
+    Plu { table: Arc<PluTable>, approximates: UnKind },
+    /// Cumulative sum along `axis` — sequential on the DSP (paper §2.1).
+    CumSum { axis: usize },
+    /// Reduction sum along `axis` (keepdims=false).
+    ReduceSum { axis: usize },
+    /// Row gather: data [v, ...] indexed by i32 indices [n] -> [n, ...].
+    Gather,
+    /// Depthwise causal conv over (T, C): weights (K, C), bias (C,).
+    Conv1dCausal { k: usize },
+    /// RMS normalization over the last axis with learned scale.
+    RmsNorm { eps: f32 },
+    /// Softmax along `axis` (census completeness; blocks don't use it).
+    Softmax { axis: usize },
+    Slice { axis: usize, start: usize, len: usize },
+    Concat { axis: usize },
+    Reshape { shape: Vec<usize> },
+    Transpose { perm: Vec<usize> },
+    /// Numpy-style broadcast to an explicit shape.
+    Broadcast { shape: Vec<usize> },
+}
+
+impl Op {
+    /// Census label — the operator vocabulary of paper Fig 5.
+    pub fn census_name(&self) -> &'static str {
+        match self {
+            Op::Input { .. } => "Input",
+            Op::Const { .. } => "Const",
+            Op::MatMul => "MatMul",
+            Op::Binary(BinKind::Add) => "Add",
+            Op::Binary(BinKind::Sub) => "Subtract",
+            Op::Binary(BinKind::Mul) => "Multiply",
+            Op::Binary(BinKind::Div) => "Divide",
+            Op::Binary(BinKind::Max) => "Maximum",
+            Op::Unary(UnKind::Neg) => "Negative",
+            Op::Unary(UnKind::Exp) => "Exp",
+            Op::Unary(UnKind::Log) => "Log",
+            Op::Unary(UnKind::Sqrt) => "Sqrt",
+            Op::Unary(UnKind::Abs) => "Abs",
+            Op::Unary(UnKind::Recip) => "Reciprocal",
+            Op::Unary(UnKind::Relu) => "Relu",
+            Op::Unary(UnKind::Sigmoid) => "Sigmoid",
+            Op::Unary(UnKind::SiLU) => "Swish",
+            Op::Unary(UnKind::Softplus) => "SoftPlus",
+            Op::Unary(UnKind::Tanh) => "Tanh",
+            Op::Plu { .. } => "PLU",
+            Op::CumSum { .. } => "CumSum",
+            Op::ReduceSum { .. } => "ReduceSum",
+            Op::Gather => "Gather",
+            Op::Conv1dCausal { .. } => "Conv1d",
+            Op::RmsNorm { .. } => "RMSNorm",
+            Op::Softmax { .. } => "Softmax",
+            Op::Slice { .. } => "Slice",
+            Op::Concat { .. } => "Concat",
+            Op::Reshape { .. } => "Reshape",
+            Op::Transpose { .. } => "Transpose",
+            Op::Broadcast { .. } => "Broadcast",
+        }
+    }
+
+    /// True for data-movement ops that cost no compute in the NPU model
+    /// (they fold into DMA descriptors / tensor views).
+    pub fn is_layout(&self) -> bool {
+        matches!(
+            self,
+            Op::Reshape { .. }
+                | Op::Transpose { .. }
+                | Op::Broadcast { .. }
+                | Op::Slice { .. }
+                | Op::Concat { .. }
+                | Op::Input { .. }
+                | Op::Const { .. }
+        )
+    }
+}

@@ -1,0 +1,139 @@
+//! Reference interpreter for the IR: executes a `Graph` on concrete
+//! tensors, f32, row-major, no tricks.
+//!
+//! Used to (a) machine-check that the CumBA / ReduBA / ActiBA passes
+//! preserve semantics (`passes::verify`), and (b) run the Table-1
+//! substitute quality evaluation on the trained tiny models without
+//! touching PJRT. Throughput is a non-goal; clarity is.
+
+mod ops;
+
+use std::collections::HashMap;
+
+use crate::graph::{Graph, NodeId, Op, Tensor};
+
+/// Execute `graph` on the given input tensors (matched by input order).
+///
+/// Returns the output tensors in `graph.outputs` order.
+pub fn run(graph: &Graph, inputs: &[Tensor]) -> Result<Vec<Tensor>, String> {
+    if inputs.len() != graph.inputs.len() {
+        return Err(format!(
+            "graph {} expects {} inputs, got {}",
+            graph.name,
+            graph.inputs.len(),
+            inputs.len()
+        ));
+    }
+    let mut env: HashMap<NodeId, Tensor> = HashMap::with_capacity(graph.nodes.len());
+    for (&id, t) in graph.inputs.iter().zip(inputs) {
+        let node = graph.node(id);
+        if t.shape != node.shape {
+            return Err(format!(
+                "input {} ({}): expected shape {:?}, got {:?}",
+                id, node.name, node.shape, t.shape
+            ));
+        }
+        if t.dtype() != node.dtype {
+            return Err(format!("input {} ({}): dtype mismatch", id, node.name));
+        }
+        env.insert(id, t.clone());
+    }
+
+    let live = graph.live_set();
+    for id in graph.topo_order() {
+        if !live[id] || env.contains_key(&id) {
+            continue;
+        }
+        let node = graph.node(id);
+        let out = match &node.op {
+            Op::Input { .. } => {
+                return Err(format!("unbound input node {id} ({})", node.name))
+            }
+            Op::Const { .. } => node
+                .value
+                .clone()
+                .ok_or_else(|| format!("const node {id} without value"))?,
+            op => {
+                let args: Vec<&Tensor> = node
+                    .inputs
+                    .iter()
+                    .map(|i| env.get(i).expect("topo order violated"))
+                    .collect();
+                ops::eval(op, &args, &node.shape)
+                    .map_err(|e| format!("node {id} ({}): {e}", node.name))?
+            }
+        };
+        debug_assert_eq!(
+            out.shape, node.shape,
+            "node {id} ({}) shape drift",
+            node.name
+        );
+        env.insert(id, out);
+    }
+
+    graph
+        .outputs
+        .iter()
+        .map(|id| {
+            env.get(id)
+                .cloned()
+                .ok_or_else(|| format!("missing output node {id}"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    #[test]
+    fn runs_a_small_graph() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![2, 2]);
+        let b = g.input("b", vec![2, 2]);
+        let m = g.matmul(a, b, "m");
+        let two = g.const_scalar("two", 2.0);
+        let out = g.add(m, two, "out");
+        g.output(out);
+        let r = run(
+            &g,
+            &[
+                Tensor::f32(vec![2, 2], vec![1., 2., 3., 4.]),
+                Tensor::f32(vec![2, 2], vec![1., 1., 1., 1.]),
+            ],
+        )
+        .unwrap();
+        // same numbers as the /opt/xla-example smoke test
+        assert_eq!(r[0].as_f32(), &[5., 5., 9., 9.]);
+    }
+
+    #[test]
+    fn input_arity_checked() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![1]);
+        g.output(a);
+        assert!(run(&g, &[]).is_err());
+    }
+
+    #[test]
+    fn input_shape_checked() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![2]);
+        g.output(a);
+        let bad = Tensor::f32(vec![3], vec![0.0; 3]);
+        assert!(run(&g, &[bad]).is_err());
+    }
+
+    #[test]
+    fn dead_nodes_not_executed() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![2]);
+        // dead division by zero would produce inf but must not run
+        let zero = g.const_scalar("z", 0.0);
+        let _dead = g.div(a, zero, "dead");
+        g.output(a);
+        let r = run(&g, &[Tensor::f32(vec![2], vec![1., 2.])]).unwrap();
+        assert_eq!(r[0].as_f32(), &[1., 2.]);
+    }
+}

@@ -1,0 +1,519 @@
+//! Per-operator evaluation for the reference interpreter.
+
+use crate::graph::op::{BinKind, Op, UnKind};
+use crate::graph::tensor::{numel, strides, Data, Tensor};
+use crate::plu;
+
+/// Evaluate one op on its argument tensors; `out_shape` is the shape the
+/// builder inferred (layout ops rely on it).
+pub fn eval(op: &Op, args: &[&Tensor], out_shape: &[usize]) -> Result<Tensor, String> {
+    match op {
+        Op::Input { .. } | Op::Const { .. } => unreachable!("handled by caller"),
+        Op::MatMul => matmul(args[0], args[1]),
+        Op::Binary(kind) => binary(*kind, args[0], args[1], out_shape),
+        Op::Unary(kind) => Ok(unary(*kind, args[0])),
+        Op::Plu { table, .. } => {
+            let x = args[0];
+            let mut out = vec![0.0f32; x.numel()];
+            table.eval_slice(x.as_f32(), &mut out);
+            Ok(Tensor::f32(x.shape.clone(), out))
+        }
+        Op::CumSum { axis } => Ok(cumsum(args[0], *axis)),
+        Op::ReduceSum { axis } => Ok(reduce_sum(args[0], *axis)),
+        Op::Gather => gather(args[0], args[1]),
+        Op::Conv1dCausal { k } => Ok(conv1d_causal(args[0], args[1], args[2], *k)),
+        Op::RmsNorm { eps } => Ok(rmsnorm(args[0], args[1], *eps)),
+        Op::Softmax { axis } => Ok(softmax(args[0], *axis)),
+        Op::Slice { axis, start, len } => Ok(slice(args[0], *axis, *start, *len)),
+        Op::Concat { axis } => Ok(concat(args, *axis)),
+        Op::Reshape { shape } => Ok(args[0].clone().reshape(shape.clone())),
+        Op::Transpose { perm } => Ok(transpose(args[0], perm)),
+        Op::Broadcast { shape } => Ok(broadcast_to(args[0], shape)),
+    }
+}
+
+// --- elementwise ---------------------------------------------------------------
+
+/// Map an output multi-index onto a broadcast input's linear index.
+#[inline]
+fn bcast_index(out_idx: &[usize], in_shape: &[usize], in_strides: &[usize]) -> usize {
+    let off = out_idx.len() - in_shape.len();
+    let mut lin = 0;
+    for (d, &s) in in_shape.iter().enumerate() {
+        let i = if s == 1 { 0 } else { out_idx[off + d] };
+        lin += i * in_strides[d];
+    }
+    lin
+}
+
+fn binary(
+    kind: BinKind,
+    a: &Tensor,
+    b: &Tensor,
+    out_shape: &[usize],
+) -> Result<Tensor, String> {
+    let f = |x: f32, y: f32| match kind {
+        BinKind::Add => x + y,
+        BinKind::Sub => x - y,
+        BinKind::Mul => x * y,
+        BinKind::Div => x / y,
+        BinKind::Max => x.max(y),
+    };
+    let (av, bv) = (a.as_f32(), b.as_f32());
+    let n = numel(out_shape);
+    let mut out = vec![0.0f32; n];
+    if a.shape == out_shape && b.shape == out_shape {
+        // fast path: no broadcasting
+        for i in 0..n {
+            out[i] = f(av[i], bv[i]);
+        }
+    } else if b.numel() == 1 && a.shape == out_shape {
+        let s = bv[0];
+        for i in 0..n {
+            out[i] = f(av[i], s);
+        }
+    } else {
+        let (sa, sb) = (strides(&a.shape), strides(&b.shape));
+        let mut idx = vec![0usize; out_shape.len()];
+        for o in out.iter_mut() {
+            let ia = bcast_index(&idx, &a.shape, &sa);
+            let ib = bcast_index(&idx, &b.shape, &sb);
+            *o = f(av[ia], bv[ib]);
+            // increment multi-index
+            for d in (0..out_shape.len()).rev() {
+                idx[d] += 1;
+                if idx[d] < out_shape[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+    }
+    Ok(Tensor::f32(out_shape.to_vec(), out))
+}
+
+fn unary(kind: UnKind, x: &Tensor) -> Tensor {
+    let f = |v: f32| match kind {
+        UnKind::Neg => -v,
+        UnKind::Exp => v.exp(),
+        UnKind::Log => v.ln(),
+        UnKind::Sqrt => v.sqrt(),
+        UnKind::Abs => v.abs(),
+        UnKind::Recip => 1.0 / v,
+        UnKind::Relu => v.max(0.0),
+        UnKind::Sigmoid => plu::sigmoid_f32(v),
+        UnKind::SiLU => v * plu::sigmoid_f32(v),
+        UnKind::Softplus => plu::softplus_f32(v),
+        UnKind::Tanh => v.tanh(),
+    };
+    Tensor::f32(x.shape.clone(), x.as_f32().iter().map(|&v| f(v)).collect())
+}
+
+// --- matmul ----------------------------------------------------------------------
+
+fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor, String> {
+    let ra = a.rank();
+    let rb = b.rank();
+    if ra < 2 || rb < 2 {
+        return Err("matmul needs rank >= 2".into());
+    }
+    let m = a.shape[ra - 2];
+    let k = a.shape[ra - 1];
+    let k2 = b.shape[rb - 2];
+    let n = b.shape[rb - 1];
+    if k != k2 {
+        return Err(format!("matmul k mismatch {k} vs {k2}"));
+    }
+    let batch_a: usize = a.shape[..ra - 2].iter().product();
+    let batch_b: usize = b.shape[..rb - 2].iter().product();
+    let batch = batch_a.max(batch_b);
+    if batch_a != batch && batch_a != 1 && !(ra == 2) {
+        return Err("matmul batch mismatch".into());
+    }
+    let (av, bv) = (a.as_f32(), b.as_f32());
+    let mut out = vec![0.0f32; batch * m * n];
+    for bi in 0..batch {
+        let ao = if batch_a == 1 { 0 } else { bi * m * k };
+        let bo = if batch_b == 1 { 0 } else { bi * k * n };
+        let oo = bi * m * n;
+        for i in 0..m {
+            for kk in 0..k {
+                let av_ik = av[ao + i * k + kk];
+                if av_ik == 0.0 {
+                    continue;
+                }
+                let brow = bo + kk * n;
+                let orow = oo + i * n;
+                for j in 0..n {
+                    out[orow + j] += av_ik * bv[brow + j];
+                }
+            }
+        }
+    }
+    // output shape: batch dims from the higher-rank operand
+    let mut shape: Vec<usize> = if ra >= rb {
+        a.shape[..ra - 2].to_vec()
+    } else {
+        b.shape[..rb - 2].to_vec()
+    };
+    shape.push(m);
+    shape.push(n);
+    Ok(Tensor::f32(shape, out))
+}
+
+// --- scans / reductions -------------------------------------------------------------
+
+fn cumsum(x: &Tensor, axis: usize) -> Tensor {
+    let st = x.strides();
+    let shape = &x.shape;
+    let n_axis = shape[axis];
+    let stride = st[axis];
+    let xv = x.as_f32();
+    let mut out = xv.to_vec();
+    // iterate over all lines along `axis`
+    let outer: usize = shape[..axis].iter().product();
+    let inner: usize = shape[axis + 1..].iter().product();
+    for o in 0..outer {
+        for i in 0..inner {
+            let base = o * n_axis * inner + i;
+            for j in 1..n_axis {
+                out[base + j * stride] += out[base + (j - 1) * stride];
+            }
+        }
+    }
+    Tensor::f32(shape.clone(), out)
+}
+
+fn reduce_sum(x: &Tensor, axis: usize) -> Tensor {
+    let shape = &x.shape;
+    let n_axis = shape[axis];
+    let outer: usize = shape[..axis].iter().product();
+    let inner: usize = shape[axis + 1..].iter().product();
+    let xv = x.as_f32();
+    let mut out = vec![0.0f32; outer * inner];
+    for o in 0..outer {
+        for j in 0..n_axis {
+            let base = (o * n_axis + j) * inner;
+            let obase = o * inner;
+            for i in 0..inner {
+                out[obase + i] += xv[base + i];
+            }
+        }
+    }
+    let mut oshape = shape.clone();
+    oshape.remove(axis);
+    Tensor::f32(oshape, out)
+}
+
+// --- gather / conv / norms -----------------------------------------------------------
+
+fn gather(data: &Tensor, indices: &Tensor) -> Result<Tensor, String> {
+    let idx = indices.as_i32();
+    let row: usize = data.shape[1..].iter().product();
+    let v = data.shape[0] as i32;
+    let dv = data.as_f32();
+    let mut out = Vec::with_capacity(idx.len() * row);
+    for &i in idx {
+        if i < 0 || i >= v {
+            return Err(format!("gather index {i} out of range 0..{v}"));
+        }
+        out.extend_from_slice(&dv[i as usize * row..(i as usize + 1) * row]);
+    }
+    let mut shape = vec![idx.len()];
+    shape.extend_from_slice(&data.shape[1..]);
+    Ok(Tensor::f32(shape, out))
+}
+
+fn conv1d_causal(x: &Tensor, w: &Tensor, b: &Tensor, k: usize) -> Tensor {
+    let (t, c) = (x.shape[0], x.shape[1]);
+    let (xv, wv, bv) = (x.as_f32(), w.as_f32(), b.as_f32());
+    let mut out = vec![0.0f32; t * c];
+    for ti in 0..t {
+        for ci in 0..c {
+            let mut acc = bv[ci];
+            for ki in 0..k {
+                // causal: tap ki reads position ti - (k - 1 - ki)
+                let src = ti as isize - (k - 1 - ki) as isize;
+                if src >= 0 {
+                    acc += wv[ki * c + ci] * xv[src as usize * c + ci];
+                }
+            }
+            out[ti * c + ci] = acc;
+        }
+    }
+    Tensor::f32(vec![t, c], out)
+}
+
+fn rmsnorm(x: &Tensor, w: &Tensor, eps: f32) -> Tensor {
+    let d = *x.shape.last().unwrap();
+    let rows = x.numel() / d;
+    let (xv, wv) = (x.as_f32(), w.as_f32());
+    let mut out = vec![0.0f32; x.numel()];
+    for r in 0..rows {
+        let row = &xv[r * d..(r + 1) * d];
+        let ms = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        for i in 0..d {
+            out[r * d + i] = row[i] * inv * wv[i];
+        }
+    }
+    Tensor::f32(x.shape.clone(), out)
+}
+
+fn softmax(x: &Tensor, axis: usize) -> Tensor {
+    let shape = &x.shape;
+    let n_axis = shape[axis];
+    let outer: usize = shape[..axis].iter().product();
+    let inner: usize = shape[axis + 1..].iter().product();
+    let xv = x.as_f32();
+    let mut out = vec![0.0f32; x.numel()];
+    for o in 0..outer {
+        for i in 0..inner {
+            let at = |j: usize| (o * n_axis + j) * inner + i;
+            let mut mx = f32::NEG_INFINITY;
+            for j in 0..n_axis {
+                mx = mx.max(xv[at(j)]);
+            }
+            let mut z = 0.0;
+            for j in 0..n_axis {
+                let e = (xv[at(j)] - mx).exp();
+                out[at(j)] = e;
+                z += e;
+            }
+            for j in 0..n_axis {
+                out[at(j)] /= z;
+            }
+        }
+    }
+    Tensor::f32(shape.clone(), out)
+}
+
+// --- layout -------------------------------------------------------------------------
+
+fn slice(x: &Tensor, axis: usize, start: usize, len: usize) -> Tensor {
+    let shape = &x.shape;
+    let outer: usize = shape[..axis].iter().product();
+    let n_axis = shape[axis];
+    let inner: usize = shape[axis + 1..].iter().product();
+    let mut oshape = shape.clone();
+    oshape[axis] = len;
+    match &x.data {
+        Data::F32(v) => {
+            let mut out = Vec::with_capacity(outer * len * inner);
+            for o in 0..outer {
+                let base = (o * n_axis + start) * inner;
+                out.extend_from_slice(&v[base..base + len * inner]);
+            }
+            Tensor::f32(oshape, out)
+        }
+        Data::I32(v) => {
+            let mut out = Vec::with_capacity(outer * len * inner);
+            for o in 0..outer {
+                let base = (o * n_axis + start) * inner;
+                out.extend_from_slice(&v[base..base + len * inner]);
+            }
+            Tensor::i32(oshape, out)
+        }
+    }
+}
+
+fn concat(args: &[&Tensor], axis: usize) -> Tensor {
+    let shape0 = &args[0].shape;
+    let outer: usize = shape0[..axis].iter().product();
+    let inner: usize = shape0[axis + 1..].iter().product();
+    let total_axis: usize = args.iter().map(|t| t.shape[axis]).sum();
+    let mut oshape = shape0.clone();
+    oshape[axis] = total_axis;
+    let mut out = Vec::with_capacity(outer * total_axis * inner);
+    for o in 0..outer {
+        for t in args {
+            let na = t.shape[axis];
+            let v = t.as_f32();
+            out.extend_from_slice(&v[o * na * inner..(o + 1) * na * inner]);
+        }
+    }
+    Tensor::f32(oshape, out)
+}
+
+fn transpose(x: &Tensor, perm: &[usize]) -> Tensor {
+    let in_shape = &x.shape;
+    let out_shape: Vec<usize> = perm.iter().map(|&p| in_shape[p]).collect();
+    let in_strides = strides(in_shape);
+    let out_n = x.numel();
+    let xv = x.as_f32();
+    let mut out = vec![0.0f32; out_n];
+    let mut idx = vec![0usize; out_shape.len()];
+    for o in out.iter_mut() {
+        let mut lin = 0;
+        for (d, &p) in perm.iter().enumerate() {
+            lin += idx[d] * in_strides[p];
+        }
+        *o = xv[lin];
+        for d in (0..out_shape.len()).rev() {
+            idx[d] += 1;
+            if idx[d] < out_shape[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+    Tensor::f32(out_shape, out)
+}
+
+fn broadcast_to(x: &Tensor, shape: &[usize]) -> Tensor {
+    let xs = strides(&x.shape);
+    let xv = x.as_f32();
+    let n = numel(shape);
+    let mut out = vec![0.0f32; n];
+    let mut idx = vec![0usize; shape.len()];
+    for o in out.iter_mut() {
+        *o = xv[bcast_index(&idx, &x.shape, &xs)];
+        for d in (0..shape.len()).rev() {
+            idx[d] += 1;
+            if idx[d] < shape[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+    Tensor::f32(shape.to_vec(), out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t2(shape: [usize; 2], v: &[f32]) -> Tensor {
+        Tensor::f32(shape.to_vec(), v.to_vec())
+    }
+
+    #[test]
+    fn matmul_2d() {
+        let a = t2([2, 3], &[1., 2., 3., 4., 5., 6.]);
+        let b = t2([3, 2], &[7., 8., 9., 10., 11., 12.]);
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.as_f32(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_batched() {
+        // (2,1,2) x (2,2,1)
+        let a = Tensor::f32(vec![2, 1, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::f32(vec![2, 2, 1], vec![1., 1., 2., 2.]);
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.shape, vec![2, 1, 1]);
+        assert_eq!(c.as_f32(), &[3., 14.]);
+    }
+
+    #[test]
+    fn cumsum_axis0_matches_paper_def() {
+        // C[i,j] = sum_{k<=i} X[k,j]
+        let x = t2([3, 2], &[1., 10., 2., 20., 3., 30.]);
+        let c = cumsum(&x, 0);
+        assert_eq!(c.as_f32(), &[1., 10., 3., 30., 6., 60.]);
+    }
+
+    #[test]
+    fn cumsum_axis1() {
+        let x = t2([2, 3], &[1., 2., 3., 4., 5., 6.]);
+        let c = cumsum(&x, 1);
+        assert_eq!(c.as_f32(), &[1., 3., 6., 4., 9., 15.]);
+    }
+
+    #[test]
+    fn cumsum_rank3_middle_axis() {
+        // (2,2,2), axis 1
+        let x = Tensor::f32(vec![2, 2, 2], vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        let c = cumsum(&x, 1);
+        assert_eq!(c.as_f32(), &[1., 2., 4., 6., 5., 6., 12., 14.]);
+    }
+
+    #[test]
+    fn reduce_sum_is_last_cumsum_row() {
+        // R[j] = C[m,j] (paper §2.1)
+        let x = t2([3, 2], &[1., 10., 2., 20., 3., 30.]);
+        let r = reduce_sum(&x, 0);
+        let c = cumsum(&x, 0);
+        assert_eq!(r.as_f32(), &c.as_f32()[4..6]);
+        assert_eq!(r.shape, vec![2]);
+    }
+
+    #[test]
+    fn conv_is_causal() {
+        // identity tap on the last position only
+        let x = t2([3, 1], &[1., 2., 3.]);
+        let w = t2([2, 1], &[0.5, 1.0]); // out[t] = x[t] + 0.5 x[t-1]
+        let b = Tensor::f32(vec![1], vec![0.0]);
+        let y = conv1d_causal(&x, &w, &b, 2);
+        assert_eq!(y.as_f32(), &[1., 2.5, 4.]);
+    }
+
+    #[test]
+    fn gather_rows() {
+        let d = t2([3, 2], &[0., 1., 10., 11., 20., 21.]);
+        let i = Tensor::i32(vec![2], vec![2, 0]);
+        let g = gather(&d, &i).unwrap();
+        assert_eq!(g.as_f32(), &[20., 21., 0., 1.]);
+        let bad = Tensor::i32(vec![1], vec![5]);
+        assert!(gather(&d, &bad).is_err());
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let x = t2([1, 4], &[2., 2., 2., 2.]);
+        let w = Tensor::f32(vec![4], vec![1.; 4]);
+        let y = rmsnorm(&x, &w, 0.0);
+        for &v in y.as_f32() {
+            assert!((v - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = t2([2, 3], &[1., 2., 3., 0., 0., 0.]);
+        let y = softmax(&x, 1);
+        let v = y.as_f32();
+        assert!((v[0..3].iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!((v[3] - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn transpose_2d() {
+        let x = t2([2, 3], &[1., 2., 3., 4., 5., 6.]);
+        let y = transpose(&x, &[1, 0]);
+        assert_eq!(y.shape, vec![3, 2]);
+        assert_eq!(y.as_f32(), &[1., 4., 2., 5., 3., 6.]);
+    }
+
+    #[test]
+    fn broadcast_row_to_matrix() {
+        let x = Tensor::f32(vec![1, 3], vec![1., 2., 3.]);
+        let y = broadcast_to(&x, &[2, 3]);
+        assert_eq!(y.as_f32(), &[1., 2., 3., 1., 2., 3.]);
+    }
+
+    #[test]
+    fn binary_broadcast_scalar() {
+        let a = t2([2, 2], &[1., 2., 3., 4.]);
+        let s = Tensor::scalar(10.0);
+        let y = binary(BinKind::Mul, &a, &s, &[2, 2]).unwrap();
+        assert_eq!(y.as_f32(), &[10., 20., 30., 40.]);
+    }
+
+    #[test]
+    fn slice_middle_axis() {
+        let x = Tensor::f32(vec![2, 3, 2], (0..12).map(|i| i as f32).collect());
+        let y = slice(&x, 1, 1, 2);
+        assert_eq!(y.shape, vec![2, 2, 2]);
+        assert_eq!(y.as_f32(), &[2., 3., 4., 5., 8., 9., 10., 11.]);
+    }
+
+    #[test]
+    fn concat_axis1() {
+        let a = t2([2, 1], &[1., 2.]);
+        let b = t2([2, 2], &[3., 4., 5., 6.]);
+        let y = concat(&[&a, &b], 1);
+        assert_eq!(y.shape, vec![2, 3]);
+        assert_eq!(y.as_f32(), &[1., 3., 4., 2., 5., 6.]);
+    }
+}

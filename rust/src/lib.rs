@@ -1,0 +1,22 @@
+//! XAMBA — State-Space Models on resource-constrained NPUs, reproduced.
+//!
+//! Rust + JAX + Pallas three-layer reproduction of *"XAMBA: Enabling
+//! Efficient State Space Models on Resource-Constrained Neural Processing
+//! Units"*. Layer 3 (this crate) hosts the serving coordinator, the
+//! compiler passes (CumBA / ReduBA / ActiBA), the NPU cost-model simulator
+//! that substitutes for the paper's Intel Core Ultra Series 2 platform,
+//! and the PJRT runtime that executes the AOT artifacts produced by the
+//! python build path (`python/compile/`). See DESIGN.md for the map.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod npu;
+pub mod passes;
+pub mod graph;
+pub mod interp;
+pub mod models;
+pub mod plu;
+pub mod quality;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,9 @@
+//! `xamba` CLI — see `xamba help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = xamba::cli::run(&argv) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

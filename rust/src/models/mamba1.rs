@@ -1,0 +1,306 @@
+//! Mamba-1 model as an IR graph (mirror of `python/compile/mamba.py`).
+//!
+//! The selective scan is *unrolled over time* — exactly what a static-
+//! shape NPU conversion does (the paper's T=4 ONNX graphs are unrolled) —
+//! so the census and the cost model see the true operator mix: staged
+//! projections, depthwise conv, the Fig-1 bottleneck activations (Swish,
+//! Softplus), and a long chain of small elementwise ops for the scan.
+
+use std::collections::HashMap;
+
+use crate::config::ModelShape;
+use crate::graph::{Graph, NodeId};
+
+use super::params::{full_spec, ParamSpec};
+
+/// Graph + named parameter nodes under construction.
+pub(crate) struct Ctx {
+    pub g: Graph,
+    pub p: HashMap<String, NodeId>,
+}
+
+impl Ctx {
+    /// Declare every parameter in `spec` as a graph input (ABI order).
+    pub fn new(name: &str, spec: &ParamSpec) -> Self {
+        let mut g = Graph::new(name);
+        let mut p = HashMap::new();
+        for e in &spec.entries {
+            let id = g.input(&e.name, e.shape.clone());
+            p.insert(e.name.clone(), id);
+        }
+        Self { g, p }
+    }
+
+    pub fn w(&self, name: &str) -> NodeId {
+        *self
+            .p
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown param {name}"))
+    }
+}
+
+/// One Mamba-1 block over `x` (T, d_model); returns the block output
+/// (pre-residual). Ops named `l{j}.*` for profiling attribution.
+pub(crate) fn block_prefill(
+    ctx: &mut Ctx,
+    m: &ModelShape,
+    j: usize,
+    x: NodeId,
+    t: usize,
+) -> NodeId {
+    let (di, n) = (m.d_inner(), m.d_state);
+    let r = m.resolved_dt_rank();
+    let nm = |s: &str| format!("l{j}.{s}");
+    let w = |ctx: &Ctx, s: &str| ctx.w(&nm(s));
+
+    // staged projections (appendix A.1: Mamba-1 projects in stages)
+    let in_proj = w(&*ctx, "in_proj");
+    let xz = ctx.g.matmul(x, in_proj, &nm("in_proj.mm"));
+    let xi = ctx.g.slice(xz, 1, 0, di, &nm("split.x"));
+    let z = ctx.g.slice(xz, 1, di, di, &nm("split.z"));
+
+    // depthwise causal conv + SiLU (bottleneck activation #1)
+    let (cw, cb) = (w(&*ctx, "conv_w"), w(&*ctx, "conv_b"));
+    let xc = ctx.g.conv1d_causal(xi, cw, cb, &nm("conv"));
+    let xc = ctx.g.silu(xc, &nm("conv.silu"));
+
+    // selective parameters dt, B, C
+    let xp = w(&*ctx, "x_proj");
+    let xdbc = ctx.g.matmul(xc, xp, &nm("x_proj.mm"));
+    let dt_r = ctx.g.slice(xdbc, 1, 0, r, &nm("split.dt"));
+    let b_sel = ctx.g.slice(xdbc, 1, r, n, &nm("split.B"));
+    let c_sel = ctx.g.slice(xdbc, 1, r + n, n, &nm("split.C"));
+    let (dtw, dtb) = (w(&*ctx, "dt_proj_w"), w(&*ctx, "dt_proj_b"));
+    let dt_full = ctx.g.matmul(dt_r, dtw, &nm("dt_proj.mm"));
+    let dt_full = ctx.g.add(dt_full, dtb, &nm("dt_proj.bias"));
+    // Softplus (bottleneck activation #2)
+    let dt = ctx.g.softplus(dt_full, &nm("dt.softplus"));
+
+    // A = -exp(a_log)
+    let a_log = w(&*ctx, "a_log");
+    let a_exp = ctx.g.exp(a_log, &nm("A.exp"));
+    let neg1 = ctx.g.const_scalar(&nm("A.neg1"), -1.0);
+    let a = ctx.g.mul(a_exp, neg1, &nm("A"));
+    let d_skip = w(&*ctx, "d_skip");
+
+    // --- unrolled selective scan (static-shape NPU style) --------------
+    // h_t = exp(dt_t A) h_{t-1} + (dt_t x_t) B_t ; y_t = h_t C_t + D x_t
+    let mut h: Option<NodeId> = None;
+    let mut ys: Vec<NodeId> = Vec::with_capacity(t);
+    for step in 0..t {
+        let snm = |s: &str| format!("l{j}.scan{step}.{s}");
+        let x_t = ctx.g.slice(xc, 0, step, 1, &snm("x"));   // (1, di)
+        let dt_t = ctx.g.slice(dt, 0, step, 1, &snm("dt")); // (1, di)
+        let b_t = ctx.g.slice(b_sel, 0, step, 1, &snm("B")); // (1, n)
+        let c_t = ctx.g.slice(c_sel, 0, step, 1, &snm("C")); // (1, n)
+        let dt_col = ctx.g.reshape(dt_t, vec![di, 1], &snm("dt.col"));
+        let da = ctx.g.mul(dt_col, a, &snm("dtA")); // (di, n)
+        let da = ctx.g.exp(da, &snm("decay"));
+        let xdt = ctx.g.mul(dt_t, x_t, &snm("x.dt")); // (1, di)
+        let xdt_col = ctx.g.reshape(xdt, vec![di, 1], &snm("x.dt.col"));
+        let inflow = ctx.g.mul(xdt_col, b_t, &snm("inflow")); // (di, n)
+        let h_new = match h {
+            None => inflow, // h0 = 0
+            Some(prev) => {
+                let decayed = ctx.g.mul(da, prev, &snm("h.decay"));
+                ctx.g.add(decayed, inflow, &snm("h"))
+            }
+        };
+        h = Some(h_new);
+        let c_col = ctx.g.reshape(c_t, vec![n, 1], &snm("C.col"));
+        let y_t = ctx.g.matmul(h_new, c_col, &snm("y.mm")); // (di, 1)
+        let y_row = ctx.g.reshape(y_t, vec![1, di], &snm("y.row"));
+        let skip = ctx.g.mul(x_t, d_skip, &snm("y.skip"));
+        ys.push(ctx.g.add(y_row, skip, &snm("y")));
+    }
+    let y = ctx.g.concat(&ys, 0, &nm("scan.y")); // (T, di)
+
+    // gate with SiLU(z) (bottleneck activation #1 again), project out
+    let zg = ctx.g.silu(z, &nm("gate.silu"));
+    let y = ctx.g.mul(y, zg, &nm("gate.mul"));
+    let op = w(&*ctx, "out_proj");
+    ctx.g.matmul(y, op, &nm("out_proj.mm"))
+}
+
+/// Full Mamba-1 LM prefill graph: tokens (T,) i32 -> logits (T, V).
+///
+/// Inputs: every parameter (ParamSpec order), then `tokens`.
+pub fn build_prefill(m: &ModelShape, t: usize) -> Graph {
+    assert_eq!(m.arch, "mamba");
+    let spec = full_spec(m);
+    let mut ctx = Ctx::new(&format!("{}-prefill-t{t}", m.name), &spec);
+    let tokens = ctx.g.input_i32("tokens", vec![t]);
+    let emb = ctx.w("emb");
+    let mut x = ctx.g.gather(emb, tokens, "embed");
+    for j in 0..m.n_layers {
+        let norm_w = ctx.w(&format!("l{j}.norm_w"));
+        let xn = ctx.g.rmsnorm(x, norm_w, &format!("l{j}.norm"));
+        let y = block_prefill(&mut ctx, m, j, xn, t);
+        x = ctx.g.add(x, y, &format!("l{j}.residual"));
+    }
+    let fw = ctx.w("final_norm_w");
+    let x = ctx.g.rmsnorm(x, fw, "final_norm");
+    let emb_t = ctx.g.transpose(emb, vec![1, 0], "lm_head.wT");
+    let logits = ctx.g.matmul(x, emb_t, "lm_head.mm");
+    ctx.g.output(logits);
+    ctx.g
+}
+
+/// Single Mamba-1 block graph over (T, d_model) — the Fig-1 / Fig-4(c)
+/// profiling workload. Inputs: block params (block_spec order), then `x`.
+pub fn build_block(m: &ModelShape, t: usize) -> Graph {
+    assert_eq!(m.arch, "mamba");
+    let spec = super::params::block_spec(m);
+    let mut ctx = Ctx::new(&format!("{}-block-t{t}", m.name), &spec);
+    let x = ctx.g.input("x", vec![t, m.d_model]);
+    let y = block_prefill(&mut ctx, m, 0, x, t);
+    ctx.g.output(y);
+    ctx.g
+}
+
+/// Single-token decode-step graph: token (1,) i32 + per-layer states ->
+/// logits (1, V) + new states. Used by the KPI (Tokens/s) simulation.
+///
+/// Inputs: params, token, then per layer `conv_state{j}` (K-1, C) and
+/// `ssm_state{j}` (d_inner, N). Outputs: logits, then per-layer states in
+/// the same order.
+pub fn build_decode(m: &ModelShape) -> Graph {
+    assert_eq!(m.arch, "mamba");
+    let spec = full_spec(m);
+    let mut ctx = Ctx::new(&format!("{}-decode", m.name), &spec);
+    let token = ctx.g.input_i32("token", vec![1]);
+    let (di, n, k) = (m.d_inner(), m.d_state, m.d_conv);
+    let mut conv_states = Vec::new();
+    let mut ssm_states = Vec::new();
+    for j in 0..m.n_layers {
+        conv_states.push(ctx.g.input(&format!("conv_state{j}"), vec![k - 1, di]));
+        ssm_states.push(ctx.g.input(&format!("ssm_state{j}"), vec![di, n]));
+    }
+
+    let emb = ctx.w("emb");
+    let mut x = ctx.g.gather(emb, token, "embed"); // (1, d)
+    let mut out_states = Vec::new();
+    for j in 0..m.n_layers {
+        let nm = |s: &str| format!("l{j}.{s}");
+        let norm_w = ctx.w(&nm("norm_w"));
+        let xn = ctx.g.rmsnorm(x, norm_w, &nm("norm"));
+        let in_proj = ctx.w(&nm("in_proj"));
+        let xz = ctx.g.matmul(xn, in_proj, &nm("in_proj.mm"));
+        let xi = ctx.g.slice(xz, 1, 0, di, &nm("split.x"));
+        let z = ctx.g.slice(xz, 1, di, di, &nm("split.z"));
+
+        // conv step: window = [state; x_t], dot with taps
+        let window = ctx.g.concat(&[conv_states[j], xi], 0, &nm("conv.win")); // (K, di)
+        let cw = ctx.w(&nm("conv_w"));
+        let prod = ctx.g.mul(window, cw, &nm("conv.prod"));
+        let xc = ctx.g.reduce_sum(prod, 0, &nm("conv.sum")); // (di,)
+        let cb = ctx.w(&nm("conv_b"));
+        let xc = ctx.g.add(xc, cb, &nm("conv.bias"));
+        let xc = ctx.g.reshape(xc, vec![1, di], &nm("conv.row"));
+        let xc = ctx.g.silu(xc, &nm("conv.silu"));
+        let new_conv = ctx.g.slice(window, 0, 1, k - 1, &nm("conv.state"));
+
+        let xp = ctx.w(&nm("x_proj"));
+        let xdbc = ctx.g.matmul(xc, xp, &nm("x_proj.mm"));
+        let r = m.resolved_dt_rank();
+        let dt_r = ctx.g.slice(xdbc, 1, 0, r, &nm("split.dt"));
+        let b_t = ctx.g.slice(xdbc, 1, r, n, &nm("split.B"));
+        let c_t = ctx.g.slice(xdbc, 1, r + n, n, &nm("split.C"));
+        let dtw = ctx.w(&nm("dt_proj_w"));
+        let dtb = ctx.w(&nm("dt_proj_b"));
+        let dt_f = ctx.g.matmul(dt_r, dtw, &nm("dt_proj.mm"));
+        let dt_f = ctx.g.add(dt_f, dtb, &nm("dt_proj.bias"));
+        let dt = ctx.g.softplus(dt_f, &nm("dt.softplus")); // (1, di)
+
+        let a_log = ctx.w(&nm("a_log"));
+        let a_exp = ctx.g.exp(a_log, &nm("A.exp"));
+        let neg1 = ctx.g.const_scalar(&nm("A.neg1"), -1.0);
+        let a = ctx.g.mul(a_exp, neg1, &nm("A"));
+
+        let dt_col = ctx.g.reshape(dt, vec![di, 1], &nm("dt.col"));
+        let da = ctx.g.mul(dt_col, a, &nm("dtA"));
+        let da = ctx.g.exp(da, &nm("decay"));
+        let xdt = ctx.g.mul(dt, xc, &nm("x.dt"));
+        let xdt_col = ctx.g.reshape(xdt, vec![di, 1], &nm("x.dt.col"));
+        let inflow = ctx.g.mul(xdt_col, b_t, &nm("inflow"));
+        let decayed = ctx.g.mul(da, ssm_states[j], &nm("h.decay"));
+        let h_new = ctx.g.add(decayed, inflow, &nm("h"));
+        let c_col = ctx.g.reshape(c_t, vec![n, 1], &nm("C.col"));
+        let y_t = ctx.g.matmul(h_new, c_col, &nm("y.mm"));
+        let y_row = ctx.g.reshape(y_t, vec![1, di], &nm("y.row"));
+        let d_skip = ctx.w(&nm("d_skip"));
+        let skip = ctx.g.mul(xc, d_skip, &nm("y.skip"));
+        let y = ctx.g.add(y_row, skip, &nm("y"));
+
+        let zg = ctx.g.silu(z, &nm("gate.silu"));
+        let y = ctx.g.mul(y, zg, &nm("gate.mul"));
+        let op = ctx.w(&nm("out_proj"));
+        let y = ctx.g.matmul(y, op, &nm("out_proj.mm"));
+        x = ctx.g.add(x, y, &nm("residual"));
+        out_states.push((new_conv, h_new));
+    }
+    let fw = ctx.w("final_norm_w");
+    let x = ctx.g.rmsnorm(x, fw, "final_norm");
+    let emb_t = ctx.g.transpose(emb, vec![1, 0], "lm_head.wT");
+    let logits = ctx.g.matmul(x, emb_t, "lm_head.mm");
+    ctx.g.output(logits);
+    for (cs, ss) in out_states {
+        ctx.g.output(cs);
+        ctx.g.output(ss);
+    }
+    ctx.g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::graph::Census;
+
+    #[test]
+    fn prefill_graph_builds_with_expected_io() {
+        let m = presets::tiny_mamba();
+        let g = build_prefill(&m, 8);
+        // params + tokens
+        assert_eq!(g.inputs.len(), full_spec(&m).entries.len() + 1);
+        assert_eq!(g.outputs.len(), 1);
+        assert_eq!(g.shape(g.outputs[0]), &[8, 256]);
+    }
+
+    #[test]
+    fn block_census_shows_mamba1_signature() {
+        // staged projections: >= 4 MatMuls, both bottleneck activations,
+        // NO CumSum/ReduceSum (appendix A.1 operator contrast)
+        let m = presets::block130m_mamba();
+        let g = build_block(&m, 4);
+        let c = Census::of(&g);
+        assert!(c.get("MatMul") >= 4, "matmuls: {}", c.get("MatMul"));
+        assert!(c.get("Swish") >= 2);
+        assert!(c.get("SoftPlus") >= 1);
+        assert_eq!(c.get("CumSum"), 0);
+        assert_eq!(c.get("ReduceSum"), 0);
+    }
+
+    #[test]
+    fn decode_graph_outputs_states() {
+        let m = presets::tiny_mamba();
+        let g = build_decode(&m);
+        // logits + 2 states per layer
+        assert_eq!(g.outputs.len(), 1 + 2 * m.n_layers);
+        assert_eq!(g.shape(g.outputs[0]), &[1, m.vocab_size]);
+        assert_eq!(g.shape(g.outputs[1]), &[m.d_conv - 1, m.d_inner()]);
+        assert_eq!(g.shape(g.outputs[2]), &[m.d_inner(), m.d_state]);
+    }
+
+    #[test]
+    fn scan_unrolls_linearly_with_t() {
+        let m = presets::tiny_mamba();
+        let a = build_block_nodes(&m, 4);
+        let b = build_block_nodes(&m, 8);
+        assert!(b > a + 4 * 10, "t=4: {a} nodes, t=8: {b} nodes");
+    }
+
+    fn build_block_nodes(m: &ModelShape, t: usize) -> usize {
+        build_block(m, t).live_count()
+    }
+}

@@ -1,0 +1,36 @@
+//! Mamba / Mamba-2 models expressed in the IR (the simulator-side mirror
+//! of the JAX L2 models; weights load from the same AOT `.bin` files).
+
+pub mod mamba1;
+pub mod mamba2;
+pub mod params;
+
+use crate::config::ModelShape;
+use crate::graph::Graph;
+
+/// Build the full-LM prefill graph for either architecture.
+pub fn build_prefill(m: &ModelShape, t: usize) -> Graph {
+    match m.arch.as_str() {
+        "mamba" => mamba1::build_prefill(m, t),
+        "mamba2" => mamba2::build_prefill(m, t),
+        other => panic!("unknown arch {other}"),
+    }
+}
+
+/// Build the single-block profiling graph for either architecture.
+pub fn build_block(m: &ModelShape, t: usize) -> Graph {
+    match m.arch.as_str() {
+        "mamba" => mamba1::build_block(m, t),
+        "mamba2" => mamba2::build_block(m, t),
+        other => panic!("unknown arch {other}"),
+    }
+}
+
+/// Build the single-token decode graph for either architecture.
+pub fn build_decode(m: &ModelShape) -> Graph {
+    match m.arch.as_str() {
+        "mamba" => mamba1::build_decode(m),
+        "mamba2" => mamba2::build_decode(m),
+        other => panic!("unknown arch {other}"),
+    }
+}

@@ -1,0 +1,182 @@
+//! Flat-buffer parameter layout — exact mirror of
+//! `python/compile/layers.ParamSpec` + the per-arch `add_block_params`.
+//!
+//! The AOT weights `.bin` files are raw little-endian f32 in this order;
+//! keeping the layout duplicated (and tested against the manifest's
+//! `weights_len`) lets the rust interpreter and simulator consume the same
+//! trained weights the PJRT artifacts use, with no pickle in sight.
+
+use crate::config::ModelShape;
+use crate::graph::Tensor;
+
+/// One named parameter: shape + offset into the flat buffer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+/// Ordered parameter layout.
+#[derive(Clone, Debug, Default)]
+pub struct ParamSpec {
+    pub entries: Vec<ParamEntry>,
+    total: usize,
+}
+
+impl ParamSpec {
+    pub fn add(&mut self, name: &str, shape: &[usize]) {
+        let size: usize = shape.iter().product();
+        self.entries.push(ParamEntry {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            offset: self.total,
+        });
+        self.total += size;
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ParamEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Slice one named parameter out of the flat buffer.
+    pub fn extract(&self, buf: &[f32], name: &str) -> Option<Tensor> {
+        let e = self.find(name)?;
+        let size: usize = e.shape.iter().product();
+        if e.offset + size > buf.len() {
+            return None;
+        }
+        Some(Tensor::f32(
+            e.shape.clone(),
+            buf[e.offset..e.offset + size].to_vec(),
+        ))
+    }
+}
+
+/// Mamba-1 per-block parameters (order matches python `mamba.add_block_params`).
+fn add_mamba1_block(spec: &mut ParamSpec, m: &ModelShape, j: usize) {
+    let (d, di, n) = (m.d_model, m.d_inner(), m.d_state);
+    let (r, k) = (m.resolved_dt_rank(), m.d_conv);
+    let p = |s: &str| format!("l{j}.{s}");
+    spec.add(&p("norm_w"), &[d]);
+    spec.add(&p("in_proj"), &[d, 2 * di]);
+    spec.add(&p("conv_w"), &[k, di]);
+    spec.add(&p("conv_b"), &[di]);
+    spec.add(&p("x_proj"), &[di, r + 2 * n]);
+    spec.add(&p("dt_proj_w"), &[r, di]);
+    spec.add(&p("dt_proj_b"), &[di]);
+    spec.add(&p("a_log"), &[di, n]);
+    spec.add(&p("d_skip"), &[di]);
+    spec.add(&p("out_proj"), &[di, d]);
+}
+
+/// Mamba-2 per-block parameters (order matches python `mamba2.add_block_params`).
+fn add_mamba2_block(spec: &mut ParamSpec, m: &ModelShape, j: usize) {
+    let (d, di, n) = (m.d_model, m.d_inner(), m.d_state);
+    let (h, k, cd) = (m.n_heads(), m.d_conv, m.conv_dim());
+    let p = |s: &str| format!("l{j}.{s}");
+    spec.add(&p("norm_w"), &[d]);
+    spec.add(&p("in_proj"), &[d, 2 * di + 2 * n + h]);
+    spec.add(&p("conv_w"), &[k, cd]);
+    spec.add(&p("conv_b"), &[cd]);
+    spec.add(&p("dt_bias"), &[h]);
+    spec.add(&p("a_log"), &[h]);
+    spec.add(&p("d_skip"), &[h]);
+    spec.add(&p("gnorm_w"), &[di]);
+    spec.add(&p("out_proj"), &[di, d]);
+}
+
+/// Full-model parameter layout (mirror of python `model.build_spec`).
+pub fn full_spec(m: &ModelShape) -> ParamSpec {
+    let mut spec = ParamSpec::default();
+    spec.add("emb", &[m.vocab_size, m.d_model]);
+    for j in 0..m.n_layers {
+        if m.arch == "mamba" {
+            add_mamba1_block(&mut spec, m, j);
+        } else {
+            add_mamba2_block(&mut spec, m, j);
+        }
+    }
+    spec.add("final_norm_w", &[m.d_model]);
+    spec
+}
+
+/// Single-block layout (mirror of python `aot.block_spec`).
+pub fn block_spec(m: &ModelShape) -> ParamSpec {
+    let mut spec = ParamSpec::default();
+    if m.arch == "mamba" {
+        add_mamba1_block(&mut spec, m, 0);
+    } else {
+        add_mamba2_block(&mut spec, m, 0);
+    }
+    spec
+}
+
+/// `extract` that panics with the parameter name on failure (tests).
+pub fn extract_or_panic(spec: &ParamSpec, buf: &[f32], name: &str) -> Tensor {
+    spec.extract(buf, name)
+        .unwrap_or_else(|| panic!("cannot extract param {name}"))
+}
+
+/// Load a raw little-endian f32 weights file.
+pub fn load_f32_bin(path: &str) -> Result<Vec<f32>, String> {
+    let bytes = std::fs::read(path).map_err(|e| format!("read {path}: {e}"))?;
+    if bytes.len() % 4 != 0 {
+        return Err(format!("{path}: size {} not a multiple of 4", bytes.len()));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn tiny_mamba_total_matches_python() {
+        // python printed: tiny-mamba params: 266112
+        assert_eq!(full_spec(&presets::tiny_mamba()).total(), 266_112);
+    }
+
+    #[test]
+    fn tiny_mamba2_total_matches_python() {
+        // python printed: tiny-mamba2 params: 251952
+        assert_eq!(full_spec(&presets::tiny_mamba2()).total(), 251_952);
+    }
+
+    #[test]
+    fn block_specs_match_python_block_weights() {
+        // aot.py printed 3771648 / 3765320 f32 for the block .bin files
+        assert_eq!(block_spec(&presets::block130m_mamba()).total(), 3_771_648);
+        assert_eq!(block_spec(&presets::block130m_mamba2()).total(), 3_765_320);
+    }
+
+    #[test]
+    fn extract_respects_offsets() {
+        let m = presets::tiny_mamba();
+        let spec = full_spec(&m);
+        let buf: Vec<f32> = (0..spec.total()).map(|i| i as f32).collect();
+        let e = spec.find("l0.conv_b").unwrap().clone();
+        let t = spec.extract(&buf, "l0.conv_b").unwrap();
+        assert_eq!(t.shape, e.shape);
+        assert_eq!(t.as_f32()[0], e.offset as f32);
+    }
+
+    #[test]
+    fn offsets_are_contiguous() {
+        let spec = full_spec(&presets::tiny_mamba2());
+        let mut expect = 0usize;
+        for e in &spec.entries {
+            assert_eq!(e.offset, expect, "{}", e.name);
+            expect += e.shape.iter().product::<usize>();
+        }
+        assert_eq!(expect, spec.total());
+    }
+}

@@ -1,0 +1,472 @@
+//! Per-node engine assignment and cost functions of the NPU model.
+//!
+//! The model follows the paper's architecture split (Fig 2(a)): MatMul-
+//! like ops run on the high-frequency MPU MAC array; sequential /
+//! transcendental ops run on the DSP; PLU nodes ride the MPU drain path.
+//! Each node gets a compute time and a memory time (SRAM + DRAM streams);
+//! the node latency is `max(compute, memory)` — DMA overlaps compute.
+
+use crate::config::NpuConfig;
+use crate::graph::op::{ConstKind, Op, UnKind};
+use crate::graph::{numel, Graph, Node};
+
+use super::zvc;
+
+/// Execution engine a node is scheduled on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// MAC-array matrix unit.
+    Mpu,
+    /// Vector DSP (sequential ops, activations).
+    Dsp,
+    /// Piecewise-linear unit in the MPU drain path.
+    PluDrain,
+    /// Pure data movement (gathers, layout).
+    Dma,
+}
+
+impl Engine {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Mpu => "MPU",
+            Engine::Dsp => "DSP",
+            Engine::PluDrain => "PLU",
+            Engine::Dma => "DMA",
+        }
+    }
+}
+
+/// Cost record for one node.
+#[derive(Clone, Debug)]
+pub struct NodeCost {
+    pub engine: Engine,
+    pub cycles: f64,
+    pub comp_ns: f64,
+    pub sram_bytes: f64,
+    pub dram_bytes: f64,
+    pub mem_ns: f64,
+    pub total_ns: f64,
+    /// MPU utilization (MatMul only): useful-MACs / issued-MACs.
+    pub mpu_util: f64,
+}
+
+impl NodeCost {
+    fn zero(engine: Engine) -> Self {
+        Self {
+            engine,
+            cycles: 0.0,
+            comp_ns: 0.0,
+            sram_bytes: 0.0,
+            dram_bytes: 0.0,
+            mem_ns: 0.0,
+            total_ns: 0.0,
+            mpu_util: 0.0,
+        }
+    }
+}
+
+const F32B: f64 = 4.0;
+
+/// Bytes of a shape in f32.
+fn bytes(shape: &[usize]) -> f64 {
+    numel(shape) as f64 * F32B
+}
+
+/// Where a tensor streams from: true = DRAM, false = SRAM.
+fn input_from_dram(cfg: &NpuConfig, graph: &Graph, id: usize) -> bool {
+    let node = graph.node(id);
+    match node.op {
+        // weights / activations entering the NPU: DRAM first touch
+        Op::Input { .. } | Op::Const { .. } => true,
+        // intermediates stay in SRAM when they fit
+        _ => bytes(&node.shape) > (cfg.sram_kib * 1024) as f64,
+    }
+}
+
+/// Effective streamed bytes of an input, accounting for ZVC on masks and
+/// FP16 weight storage (graph inputs / constants are converted weights).
+fn input_bytes(cfg: &NpuConfig, graph: &Graph, id: usize) -> f64 {
+    let node = graph.node(id);
+    let stored = numel(&node.shape) as f64 * cfg.weight_bytes;
+    match node.op {
+        Op::Const { kind } => match kind {
+            ConstKind::TrilMask if cfg.zvc_enabled => {
+                let n = numel(&node.shape);
+                let nnz = node
+                    .value
+                    .as_ref()
+                    .map(|t| zvc::count_nnz(t.as_f32()))
+                    .unwrap_or(n / 2);
+                zvc::compressed_bytes(n, nnz) as f64 * cfg.weight_bytes / F32B
+            }
+            // the ones vector is read once and reused by every output
+            // column (ReduBA's reuse argument): count it once.
+            ConstKind::OnesMask => stored,
+            _ => stored,
+        },
+        Op::Input { .. } => stored,
+        _ => bytes(&node.shape),
+    }
+}
+
+/// Density of a MatMul operand if it is a skippable mask constant.
+fn operand_skip_density(cfg: &NpuConfig, graph: &Graph, id: usize) -> f64 {
+    if !cfg.sparsity_skip_enabled {
+        return 1.0;
+    }
+    let node = graph.node(id);
+    if let Op::Const { kind: ConstKind::TrilMask } = node.op {
+        let n = numel(&node.shape);
+        let nnz = node
+            .value
+            .as_ref()
+            .map(|t| zvc::count_nnz(t.as_f32()))
+            .unwrap_or(n / 2);
+        return nnz as f64 / n as f64;
+    }
+    1.0
+}
+
+/// Compute the cost of one node in its graph context.
+pub fn node_cost(cfg: &NpuConfig, graph: &Graph, node: &Node) -> NodeCost {
+    let mpu_ns_per_cycle = 1.0 / cfg.mpu_freq_ghz;
+    let dsp_ns_per_cycle = 1.0 / cfg.dsp_freq_ghz;
+    let out_elems = numel(&node.shape) as f64;
+
+    // default memory traffic: stream every input + write the output
+    let mut sram = 0.0f64;
+    let mut dram = 0.0f64;
+    let mut add_io = |cfgr: &NpuConfig, g: &Graph, ids: &[usize], out: &[usize]| {
+        for &i in ids {
+            let b = input_bytes(cfgr, g, i);
+            if input_from_dram(cfgr, g, i) {
+                dram += b;
+            } else {
+                sram += b;
+            }
+        }
+        let ob = bytes(out);
+        if ob > (cfgr.sram_kib * 1024) as f64 {
+            dram += ob;
+        } else {
+            sram += ob;
+        }
+    };
+
+    let mut cost = match &node.op {
+        Op::Input { .. } | Op::Const { .. } => return NodeCost::zero(Engine::Dma),
+
+        Op::MatMul => {
+            let a = graph.shape(node.inputs[0]);
+            let b = graph.shape(node.inputs[1]);
+            let m = a[a.len() - 2];
+            let k = a[a.len() - 1];
+            let n = b[b.len() - 1];
+            let batch = numel(&node.shape) / (m * n);
+            let tiles_m = m.div_ceil(cfg.mpu_rows);
+            let tiles_n = n.div_ceil(cfg.mpu_cols);
+            let density = operand_skip_density(cfg, graph, node.inputs[0])
+                * operand_skip_density(cfg, graph, node.inputs[1]);
+            let cycles =
+                (batch * tiles_m * tiles_n * k) as f64 * density;
+            let useful = (batch * m * n * k) as f64 * density;
+            let issued = (batch * tiles_m * cfg.mpu_rows * tiles_n * cfg.mpu_cols * k)
+                as f64;
+            let mut c = NodeCost::zero(Engine::Mpu);
+            c.cycles = cycles;
+            c.comp_ns = cycles * mpu_ns_per_cycle;
+            c.mpu_util = useful / issued.max(1.0);
+            add_io(cfg, graph, &node.inputs, &node.shape);
+            c
+        }
+
+        Op::Conv1dCausal { k } => {
+            // depthwise: C independent K-tap dots, mapped across the array
+            let t = node.shape[0];
+            let c_ch = node.shape[1];
+            let lanes = cfg.mpu_rows * cfg.mpu_cols;
+            let cycles = (t * *k) as f64 * (c_ch as f64 / lanes as f64).ceil();
+            let mut c = NodeCost::zero(Engine::Mpu);
+            c.cycles = cycles;
+            c.comp_ns = cycles * mpu_ns_per_cycle;
+            add_io(cfg, graph, &node.inputs, &node.shape);
+            c
+        }
+
+        Op::Binary(_) => {
+            // data-parallel elementwise: runs on the MPU's vector datapath
+            // (one lane per PE), full memory bandwidth
+            let cycles = out_elems / cfg.macs_per_cycle();
+            let mut c = NodeCost::zero(Engine::Mpu);
+            c.cycles = cycles;
+            c.comp_ns = cycles * mpu_ns_per_cycle;
+            add_io(cfg, graph, &node.inputs, &node.shape);
+            c
+        }
+
+        Op::Unary(kind) => {
+            // composite transcendentals run near-SCALAR on the DSP (no
+            // lane parallelism — the Fig-1 bottleneck); simple
+            // transcendentals vectorize across lanes; trivial unaries ride
+            // the MPU vector path like Binary.
+            let mut dispatch_ns = 0.0;
+            let (engine, cycles) = match kind {
+                UnKind::SiLU | UnKind::Softplus => {
+                    dispatch_ns = cfg.dsp_dispatch_us * 1e3;
+                    (Engine::Dsp, out_elems * cfg.dsp_act_cycles_per_elem)
+                }
+                UnKind::Sigmoid | UnKind::Tanh => {
+                    dispatch_ns = cfg.dsp_dispatch_us * 1e3;
+                    (Engine::Dsp, out_elems * cfg.dsp_act_cycles_per_elem / 2.0)
+                }
+                UnKind::Exp | UnKind::Log | UnKind::Sqrt | UnKind::Recip => (
+                    Engine::Dsp,
+                    out_elems * cfg.dsp_exp_cycles_per_elem / cfg.dsp_lanes as f64,
+                ),
+                UnKind::Neg | UnKind::Abs | UnKind::Relu => {
+                    (Engine::Mpu, out_elems / cfg.macs_per_cycle())
+                }
+            };
+            let mut c = NodeCost::zero(engine);
+            c.cycles = cycles;
+            c.comp_ns = dispatch_ns
+                + cycles
+                    * if engine == Engine::Dsp { dsp_ns_per_cycle } else { mpu_ns_per_cycle };
+            add_io(cfg, graph, &node.inputs, &node.shape);
+            c
+        }
+
+        Op::Plu { .. } => {
+            // Drain-path PLU: when the producer is an MPU op the multiply-
+            // add happens as the tile drains — no extra memory traffic
+            // ("vertical fusion", Fig 2(e)). Standalone PLU still streams.
+            let producer_is_mpu = matches!(
+                graph.node(node.inputs[0]).op,
+                Op::MatMul | Op::Conv1dCausal { .. }
+            );
+            let cycles = out_elems / cfg.plu_elems_per_cycle;
+            let mut c = NodeCost::zero(Engine::PluDrain);
+            c.cycles = cycles;
+            c.comp_ns = cycles * mpu_ns_per_cycle;
+            if !producer_is_mpu {
+                add_io(cfg, graph, &node.inputs, &node.shape);
+            }
+            c
+        }
+
+        Op::CumSum { axis } => {
+            // paper §2.1: m sequential steps of an n-wide vector adder,
+            // with an RF<->SRAM round trip per row for large tensors
+            let shape = &node.shape;
+            let rows = shape[*axis] as f64;
+            let inner: usize = shape[*axis + 1..].iter().product();
+            let outer: usize = shape[..*axis].iter().product();
+            let width_steps = (inner.max(1) as f64 / cfg.dsp_lanes as f64).ceil();
+            let spill = if (inner.max(1) as f64) * F32B > (cfg.dsp_rf_kib * 1024) as f64
+            {
+                2.0 // chunked rows spill twice as often
+            } else {
+                1.0
+            };
+            let cycles = outer as f64
+                * rows
+                * (width_steps * cfg.dsp_row_cycles
+                    + cfg.cumsum_row_overhead * spill);
+            let mut c = NodeCost::zero(Engine::Dsp);
+            c.cycles = cycles;
+            c.comp_ns = cycles * dsp_ns_per_cycle;
+            add_io(cfg, graph, &node.inputs, &node.shape);
+            // chunked sequential processing re-streams operands
+            sram *= cfg.dsp_seq_mem_amplification;
+            dram *= cfg.dsp_seq_mem_amplification;
+            c
+        }
+
+        Op::ReduceSum { axis } => {
+            let in_shape = graph.shape(node.inputs[0]);
+            let rows = in_shape[*axis] as f64;
+            let inner: usize = in_shape[*axis + 1..].iter().product();
+            let outer: usize = in_shape[..*axis].iter().product();
+            let cycles = if inner == 1 {
+                // innermost-axis reduction: lanes vectorize along the
+                // reduction itself (tree reduce per output)
+                outer as f64
+                    * ((rows / cfg.dsp_lanes as f64).ceil() * cfg.dsp_row_cycles
+                        + cfg.reducesum_row_overhead)
+            } else {
+                let width_steps = (inner as f64 / cfg.dsp_lanes as f64).ceil();
+                outer as f64
+                    * rows
+                    * (width_steps * cfg.dsp_row_cycles + cfg.reducesum_row_overhead)
+            };
+            let mut c = NodeCost::zero(Engine::Dsp);
+            c.cycles = cycles;
+            c.comp_ns = cycles * dsp_ns_per_cycle;
+            add_io(cfg, graph, &node.inputs, &node.shape);
+            c
+        }
+
+        Op::RmsNorm { .. } => {
+            // two reduction+scale passes on the vector datapath
+            let cycles = out_elems * 3.0 / cfg.macs_per_cycle();
+            let mut c = NodeCost::zero(Engine::Mpu);
+            c.cycles = cycles;
+            c.comp_ns = cycles * mpu_ns_per_cycle;
+            add_io(cfg, graph, &node.inputs, &node.shape);
+            c
+        }
+
+        Op::Softmax { .. } => {
+            let cycles = out_elems
+                * (2.0 * cfg.dsp_ew_cycles_per_elem + cfg.dsp_exp_cycles_per_elem)
+                / cfg.dsp_lanes as f64;
+            let mut c = NodeCost::zero(Engine::Dsp);
+            c.cycles = cycles;
+            c.comp_ns = cycles * dsp_ns_per_cycle;
+            add_io(cfg, graph, &node.inputs, &node.shape);
+            c
+        }
+
+        Op::Gather => {
+            // pure data movement: read rows + write output
+            let c = NodeCost::zero(Engine::Dma);
+            let ob = bytes(&node.shape);
+            sram += 2.0 * ob;
+            c
+        }
+
+        // layout ops fold into DMA descriptors: free compute, and their
+        // traffic is attributed to the consuming op
+        Op::Slice { .. }
+        | Op::Concat { .. }
+        | Op::Reshape { .. }
+        | Op::Transpose { .. }
+        | Op::Broadcast { .. } => return NodeCost::zero(Engine::Dma),
+    };
+
+    cost.sram_bytes = sram;
+    cost.dram_bytes = dram;
+    // bytes / (GB/s) = ns. DSP-resident sequential ops stream through the
+    // DSP's private DMA path instead of the MPU's wide buses.
+    // only CumSum is row-dependent (can't prefetch past the carried row);
+    // ReduceSum streams linearly and keeps the normal memory path
+    let seq_dsp = matches!(node.op, Op::CumSum { .. });
+    cost.mem_ns = if seq_dsp {
+        (sram + dram) / cfg.dsp_mem_gbps
+    } else {
+        sram / cfg.sram_gbps + dram / cfg.dram_gbps
+    };
+    cost.total_ns = cost.comp_ns.max(cost.mem_ns);
+    cost
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{npu_series2, npu_unit};
+    use crate::graph::Graph;
+
+    fn cost_of(g: &Graph, id: usize, cfg: &NpuConfig) -> NodeCost {
+        node_cost(cfg, g, g.node(id))
+    }
+
+    #[test]
+    fn unit_npu_matmul_cycles_are_mnk() {
+        let cfg = npu_unit();
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![3, 5]);
+        let b = g.input("b", vec![5, 7]);
+        let m = g.matmul(a, b, "m");
+        let c = cost_of(&g, m, &cfg);
+        assert_eq!(c.engine, Engine::Mpu);
+        assert!((c.cycles - (3 * 7 * 5) as f64).abs() < 1e-9);
+        assert!((c.mpu_util - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cumsum_cycles_scale_with_rows() {
+        let cfg = npu_unit();
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![8, 4]);
+        let cs = g.cumsum(x, 0, "cs");
+        let c = cost_of(&g, cs, &cfg);
+        assert_eq!(c.engine, Engine::Dsp);
+        // 8 rows x ceil(4/1) lane steps
+        assert!((c.cycles - 32.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cumba_mask_matmul_skips_zero_macs() {
+        let mut with = npu_series2();
+        with.sparsity_skip_enabled = true;
+        let mut without = with.clone();
+        without.sparsity_skip_enabled = false;
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![256, 64]);
+        let mask = g.const_tril("m", 256);
+        let mm = g.matmul(mask, x, "cumba");
+        let c_with = cost_of(&g, mm, &with);
+        let c_without = cost_of(&g, mm, &without);
+        let expected = zvc::tril_density(256);
+        assert!((c_with.cycles / c_without.cycles - expected).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zvc_compresses_mask_traffic() {
+        let mut on = npu_series2();
+        on.zvc_enabled = true;
+        let mut off = on.clone();
+        off.zvc_enabled = false;
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![128, 32]);
+        let mask = g.const_tril("m", 128);
+        let mm = g.matmul(mask, x, "cumba");
+        let c_on = cost_of(&g, mm, &on);
+        let c_off = cost_of(&g, mm, &off);
+        // mask nnz ~0.504: ZVC nearly halves its stored bytes
+        let saved = c_off.dram_bytes - c_on.dram_bytes;
+        let mask_stored = 128.0 * 128.0 * on.weight_bytes;
+        assert!(saved > mask_stored * 0.35, "saved {saved}");
+        assert!(c_on.dram_bytes < c_off.dram_bytes * 0.85);
+    }
+
+    #[test]
+    fn activations_cost_more_than_adds() {
+        let cfg = npu_series2();
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![64, 64]);
+        let sw = g.silu(x, "sw");
+        let ad = g.add(x, x, "ad");
+        let c_sw = cost_of(&g, sw, &cfg);
+        let c_ad = cost_of(&g, ad, &cfg);
+        assert!(c_sw.cycles > 10.0 * c_ad.cycles);
+    }
+
+    #[test]
+    fn plu_fused_into_mpu_producer_is_nearly_free() {
+        let cfg = npu_series2();
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![64, 64]);
+        let b = g.input("b", vec![64, 64]);
+        let m = g.matmul(a, b, "m");
+        let table = std::sync::Arc::new(crate::plu::default_silu());
+        let p = g.plu(m, table.clone(), UnKind::SiLU, "plu");
+        let c_p = cost_of(&g, p, &cfg);
+        assert_eq!(c_p.engine, Engine::PluDrain);
+        assert_eq!(c_p.mem_ns, 0.0); // vertical fusion: no extra traffic
+        // standalone PLU (producer on DSP) pays memory
+        let s = g.silu(a, "act");
+        let p2 = g.plu(s, table, UnKind::SiLU, "plu2");
+        assert!(cost_of(&g, p2, &cfg).mem_ns > 0.0);
+    }
+
+    #[test]
+    fn layout_ops_are_free() {
+        let cfg = npu_series2();
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![4, 4]);
+        let r = g.reshape(x, vec![16], "r");
+        let c = cost_of(&g, r, &cfg);
+        assert_eq!(c.total_ns, 0.0);
+    }
+}

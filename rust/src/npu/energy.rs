@@ -1,0 +1,111 @@
+//! Energy model: pJ-level accounting over a profiled graph.
+//!
+//! The paper motivates NPUs by energy efficiency ("improved energy
+//! efficiency", §1) without publishing energy numbers; this model makes
+//! the claim quantitative for our experiments: MAC energy on the MPU,
+//! per-element DSP op energy (a DSP op costs more than a MAC at the same
+//! element count — instruction overhead), and the dominant term, memory:
+//! SRAM vs DRAM access energy per byte (DRAM ~20x SRAM, standard 45/7 nm
+//! ballpark figures).
+
+use crate::config::NpuConfig;
+use crate::graph::Graph;
+
+use super::cost::Engine;
+use super::profile::Profile;
+
+/// Energy cost constants (picojoules). Ballpark LPDDR5 + 7 nm figures;
+/// relative magnitudes are what the experiments depend on.
+#[derive(Clone, Debug)]
+pub struct EnergyModel {
+    pub pj_per_mac: f64,
+    pub pj_per_dsp_cycle: f64,
+    pub pj_per_plu_elem: f64,
+    pub pj_per_sram_byte: f64,
+    pub pj_per_dram_byte: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        Self {
+            pj_per_mac: 0.2,
+            pj_per_dsp_cycle: 2.0,
+            pj_per_plu_elem: 0.1,
+            pj_per_sram_byte: 1.0,
+            pj_per_dram_byte: 20.0,
+        }
+    }
+}
+
+/// Energy breakdown of one graph execution (microjoules).
+#[derive(Clone, Debug, Default)]
+pub struct EnergyReport {
+    pub compute_uj: f64,
+    pub sram_uj: f64,
+    pub dram_uj: f64,
+}
+
+impl EnergyReport {
+    pub fn total_uj(&self) -> f64 {
+        self.compute_uj + self.sram_uj + self.dram_uj
+    }
+}
+
+/// Estimate the energy of executing `graph` (uses the same cost records
+/// as the latency profile, so the two are always consistent).
+pub fn estimate(cfg: &NpuConfig, graph: &Graph, em: &EnergyModel) -> EnergyReport {
+    let profile = Profile::of(cfg, graph);
+    let mut rep = EnergyReport::default();
+    for r in &profile.records {
+        let c = &r.cost;
+        let compute_pj = match c.engine {
+            // MPU cycles issue rows*cols MACs each
+            Engine::Mpu => c.cycles * cfg.macs_per_cycle() * em.pj_per_mac,
+            Engine::Dsp => c.cycles * em.pj_per_dsp_cycle,
+            Engine::PluDrain => c.cycles * cfg.plu_elems_per_cycle * em.pj_per_plu_elem,
+            Engine::Dma => 0.0,
+        };
+        rep.compute_uj += compute_pj / 1e6;
+        rep.sram_uj += c.sram_bytes * em.pj_per_sram_byte / 1e6;
+        rep.dram_uj += c.dram_bytes * em.pj_per_dram_byte / 1e6;
+    }
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{npu_series2, presets};
+    use crate::passes::{cumba::CumbaPass, reduba::RedubaPass, Pass};
+
+    #[test]
+    fn xamba_passes_also_save_energy() {
+        // the paper's "improved memory efficiency" claim, in joules:
+        // CumBA+ReduBA must cut energy (less DSP time, less re-streaming)
+        let cfg = npu_series2();
+        let em = EnergyModel::default();
+        let g = crate::models::build_block(&presets::block130m_mamba2(), 4);
+        let base = estimate(&cfg, &g, &em);
+        let opt = estimate(&cfg, &RedubaPass.apply(&CumbaPass.apply(&g)), &em);
+        // the big tensors still stream once either way; the saving is the
+        // DSP re-streaming amplification (~18% of total energy here)
+        assert!(
+            opt.total_uj() < base.total_uj() * 0.9,
+            "base {:.1} uJ vs opt {:.1} uJ",
+            base.total_uj(),
+            opt.total_uj()
+        );
+        // and the saving is memory-dominated (the paper's argument)
+        assert!(base.dram_uj > base.compute_uj);
+    }
+
+    #[test]
+    fn energy_is_additive_and_positive() {
+        let cfg = npu_series2();
+        let em = EnergyModel::default();
+        let g = crate::models::build_block(&presets::block130m_mamba(), 4);
+        let r = estimate(&cfg, &g, &em);
+        assert!(r.compute_uj > 0.0 && r.sram_uj > 0.0);
+        assert!((r.total_uj() - (r.compute_uj + r.sram_uj + r.dram_uj)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,23 @@
+//! NPU cost-model simulator — the substitute for the paper's Intel®
+//! Core™ Ultra Series 2 NPU (DESIGN.md §1).
+//!
+//! The model keeps the architectural split the paper's analysis rests on:
+//! a high-frequency output-stationary MPU MAC array for matrix ops, a
+//! slower vector DSP for sequential ops (CumSum, ReduceSum) and
+//! transcendental activations (Swish, Softplus), a drain-path PLU for
+//! piecewise-linear evaluation, and an SRAM/DRAM hierarchy with ZVC-
+//! compressed mask traffic and sparsity-bitmap compute skip (Fig 3).
+//!
+//! `Profile::of(cfg, graph)` prices every live node; the `benches/`
+//! harnesses turn profiles into the paper's figures.
+
+pub mod cost;
+pub mod energy;
+pub mod profile;
+pub mod schedule;
+pub mod zvc;
+
+pub use cost::{node_cost, Engine, NodeCost};
+pub use energy::{estimate as estimate_energy, EnergyModel, EnergyReport};
+pub use profile::{NodeRecord, OpAggregate, Profile};
+pub use schedule::{pipelined_latency, ScheduleResult};

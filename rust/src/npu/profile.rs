@@ -1,0 +1,200 @@
+//! Graph-level profiling: run the cost model over a graph and aggregate.
+//!
+//! This produces the paper's measurement artifacts: per-op latency
+//! breakdowns (Fig 1, Fig 4(b)(c)) and end-to-end latencies (Fig 4(a)).
+
+use std::collections::BTreeMap;
+
+use crate::config::NpuConfig;
+use crate::graph::Graph;
+use crate::util::Table;
+
+use super::cost::{node_cost, Engine, NodeCost};
+
+/// Cost of one executed node.
+#[derive(Clone, Debug)]
+pub struct NodeRecord {
+    pub id: usize,
+    pub name: String,
+    pub op: &'static str,
+    pub cost: NodeCost,
+}
+
+/// Aggregated per-op-kind latency (a Fig-1-style row).
+#[derive(Clone, Debug, Default)]
+pub struct OpAggregate {
+    pub count: usize,
+    pub total_ns: f64,
+    pub comp_ns: f64,
+    pub mem_ns: f64,
+    pub dram_bytes: f64,
+    pub sram_bytes: f64,
+}
+
+/// Full profile of a graph on the simulated NPU.
+#[derive(Clone, Debug)]
+pub struct Profile {
+    pub graph_name: String,
+    pub records: Vec<NodeRecord>,
+    pub total_ns: f64,
+}
+
+impl Profile {
+    /// Profile all live nodes of `graph` (sequential NPU execution).
+    pub fn of(cfg: &NpuConfig, graph: &Graph) -> Self {
+        let live = graph.live_set();
+        let mut records = Vec::new();
+        let mut total = 0.0;
+        for node in &graph.nodes {
+            if !live[node.id] {
+                continue;
+            }
+            let cost = node_cost(cfg, graph, node);
+            total += cost.total_ns;
+            records.push(NodeRecord {
+                id: node.id,
+                name: node.name.clone(),
+                op: node.op.census_name(),
+                cost,
+            });
+        }
+        Self { graph_name: graph.name.clone(), records, total_ns: total }
+    }
+
+    /// Aggregate by operator kind, descending by share.
+    pub fn by_op(&self) -> Vec<(&'static str, OpAggregate)> {
+        let mut map: BTreeMap<&'static str, OpAggregate> = BTreeMap::new();
+        for r in &self.records {
+            if r.cost.total_ns == 0.0 {
+                continue;
+            }
+            let e = map.entry(r.op).or_default();
+            e.count += 1;
+            e.total_ns += r.cost.total_ns;
+            e.comp_ns += r.cost.comp_ns;
+            e.mem_ns += r.cost.mem_ns;
+            e.dram_bytes += r.cost.dram_bytes;
+            e.sram_bytes += r.cost.sram_bytes;
+        }
+        let mut v: Vec<_> = map.into_iter().collect();
+        v.sort_by(|a, b| b.1.total_ns.partial_cmp(&a.1.total_ns).unwrap());
+        v
+    }
+
+    /// Aggregate by engine.
+    pub fn by_engine(&self) -> Vec<(&'static str, f64)> {
+        let mut map: BTreeMap<&'static str, f64> = BTreeMap::new();
+        for r in &self.records {
+            *map.entry(r.cost.engine.name()).or_default() += r.cost.total_ns;
+        }
+        let mut v: Vec<_> = map.into_iter().collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+
+    /// Total latency attributed to one op kind.
+    pub fn op_ns(&self, op: &str) -> f64 {
+        self.records
+            .iter()
+            .filter(|r| r.op == op)
+            .map(|r| r.cost.total_ns)
+            .sum()
+    }
+
+    /// Share (0..1) of total latency attributed to `op`.
+    pub fn op_share(&self, op: &str) -> f64 {
+        if self.total_ns == 0.0 {
+            0.0
+        } else {
+            self.op_ns(op) / self.total_ns
+        }
+    }
+
+    /// Total DSP time share — "how sequential is this graph".
+    pub fn engine_share(&self, engine: Engine) -> f64 {
+        let t: f64 = self
+            .records
+            .iter()
+            .filter(|r| r.cost.engine == engine)
+            .map(|r| r.cost.total_ns)
+            .sum();
+        if self.total_ns == 0.0 {
+            0.0
+        } else {
+            t / self.total_ns
+        }
+    }
+
+    /// Fig-1-style breakdown table (op, count, time, share, traffic).
+    pub fn breakdown_table(&self) -> Table {
+        let mut t = Table::new(&["op", "count", "time", "share", "DRAM", "SRAM"])
+            .with_title(&format!(
+                "{} — total {}",
+                self.graph_name,
+                crate::util::table::fmt_ns(self.total_ns)
+            ));
+        for (op, agg) in self.by_op() {
+            t.row(&[
+                op.to_string(),
+                agg.count.to_string(),
+                crate::util::table::fmt_ns(agg.total_ns),
+                format!("{:5.1}%", 100.0 * agg.total_ns / self.total_ns),
+                format!("{:.1} KiB", agg.dram_bytes / 1024.0),
+                format!("{:.1} KiB", agg.sram_bytes / 1024.0),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::npu_series2;
+    use crate::graph::Graph;
+
+    fn sample_graph() -> Graph {
+        let mut g = Graph::new("sample");
+        let x = g.input("x", vec![256, 256]);
+        let w = g.input("w", vec![256, 64]);
+        let m = g.matmul(x, w, "proj");
+        let a = g.silu(m, "act");
+        let c = g.cumsum(a, 0, "cs");
+        g.output(c);
+        g
+    }
+
+    #[test]
+    fn profile_sums_node_latencies() {
+        let p = Profile::of(&npu_series2(), &sample_graph());
+        let sum: f64 = p.records.iter().map(|r| r.cost.total_ns).sum();
+        assert!((p.total_ns - sum).abs() < 1e-9);
+        assert!(p.total_ns > 0.0);
+    }
+
+    #[test]
+    fn shares_sum_to_one() {
+        let p = Profile::of(&npu_series2(), &sample_graph());
+        let s: f64 = p.by_op().iter().map(|(_, a)| a.total_ns).sum();
+        assert!((s - p.total_ns).abs() / p.total_ns < 1e-9);
+        let share_sum = p.op_share("MatMul") + p.op_share("Swish") + p.op_share("CumSum");
+        assert!((share_sum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dead_nodes_not_profiled() {
+        let mut g = sample_graph();
+        let dead_in = g.input("dead", vec![1024, 1024]);
+        g.softplus(dead_in, "dead_act");
+        let p = Profile::of(&npu_series2(), &g);
+        assert!(p.records.iter().all(|r| r.name != "dead_act"));
+    }
+
+    #[test]
+    fn breakdown_table_renders() {
+        let p = Profile::of(&npu_series2(), &sample_graph());
+        let s = p.breakdown_table().render();
+        assert!(s.contains("CumSum"));
+        assert!(s.contains("%"));
+    }
+}

@@ -1,0 +1,146 @@
+//! ActiBA: map Swish/Softplus onto the drain-path PLU (paper §2.2).
+//!
+//! Replaces exact transcendental activation nodes with `Op::Plu` nodes
+//! carrying a fitted C-LUT. When the producer is an MPU op the PLU
+//! evaluates during the drain phase ("vertical fusion") — the cost model
+//! then charges no extra memory traffic. This is the paper's step-3
+//! accuracy-for-performance trade; the quality side is measured by the
+//! Table-1 substitute bench.
+
+use std::sync::Arc;
+
+use crate::graph::{Graph, Op, UnKind};
+use crate::plu::{self, PluTable};
+
+use super::{rebuild, Pass};
+
+/// The ActiBA rewrite pass; which activations to map is configurable so
+/// the Fig-4(c) bench can apply Softplus-only, then Softplus+SiLU.
+#[derive(Clone, Debug)]
+pub struct ActibaPass {
+    pub map_silu: bool,
+    pub map_softplus: bool,
+    pub silu_table: Arc<PluTable>,
+    pub softplus_table: Arc<PluTable>,
+}
+
+impl Default for ActibaPass {
+    fn default() -> Self {
+        Self::with_segments(32)
+    }
+}
+
+impl ActibaPass {
+    /// Both activations mapped with `segments`-entry C-LUTs on [-8, 8].
+    pub fn with_segments(segments: usize) -> Self {
+        Self {
+            map_silu: true,
+            map_softplus: true,
+            silu_table: Arc::new(plu::silu_table(segments, -8.0, 8.0)),
+            softplus_table: Arc::new(plu::softplus_table(segments, -8.0, 8.0)),
+        }
+    }
+
+    /// Softplus-only variant (the first step of Fig 4(c)).
+    pub fn softplus_only(segments: usize) -> Self {
+        Self { map_silu: false, ..Self::with_segments(segments) }
+    }
+}
+
+impl Pass for ActibaPass {
+    fn name(&self) -> &'static str {
+        "actiba"
+    }
+
+    fn apply(&self, g: &Graph) -> Graph {
+        rebuild(g, |out, node, remap| {
+            let Op::Unary(kind) = node.op else { return None };
+            let table = match kind {
+                UnKind::SiLU if self.map_silu => self.silu_table.clone(),
+                UnKind::Softplus if self.map_softplus => self.softplus_table.clone(),
+                _ => return None,
+            };
+            let x = remap(node.inputs[0]);
+            Some(out.plu(x, table, kind, &format!("{}.plu", node.name)))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Census, Graph, Tensor};
+    use crate::interp;
+    use crate::util::Prng;
+
+    fn act_graph() -> Graph {
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![4, 8]);
+        let w = g.input("w", vec![8, 8]);
+        let m = g.matmul(x, w, "mm");
+        let s = g.silu(m, "swish");
+        let p = g.softplus(s, "softplus");
+        g.output(p);
+        g
+    }
+
+    #[test]
+    fn replaces_both_activations() {
+        let g2 = ActibaPass::default().apply(&act_graph());
+        let c = Census::of(&g2);
+        assert_eq!(c.get("Swish"), 0);
+        assert_eq!(c.get("SoftPlus"), 0);
+        assert_eq!(c.get("PLU"), 2);
+    }
+
+    #[test]
+    fn softplus_only_leaves_silu() {
+        let g2 = ActibaPass::softplus_only(32).apply(&act_graph());
+        let c = Census::of(&g2);
+        assert_eq!(c.get("Swish"), 1);
+        assert_eq!(c.get("SoftPlus"), 0);
+        assert_eq!(c.get("PLU"), 1);
+    }
+
+    #[test]
+    fn approximation_error_within_lut_bound() {
+        let g = act_graph();
+        let g2 = ActibaPass::default().apply(&g);
+        let mut rng = Prng::new(4);
+        let xs = Tensor::f32(vec![4, 8], rng.normal_vec(32));
+        let ws = Tensor::f32(vec![8, 8], rng.normal_vec(64));
+        let exact = interp::run(&g, &[xs.clone(), ws.clone()]).unwrap();
+        let approx = interp::run(&g2, &[xs, ws]).unwrap();
+        // two chained 32-segment LUTs: error stays in the "negligible" regime
+        let max_err = exact[0]
+            .as_f32()
+            .iter()
+            .zip(approx[0].as_f32())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 0.05, "max_err {max_err}");
+        assert!(max_err > 0.0, "suspiciously exact");
+    }
+
+    #[test]
+    fn more_segments_reduce_model_error() {
+        let g = act_graph();
+        let mut rng = Prng::new(9);
+        let xs = Tensor::f32(vec![4, 8], rng.normal_vec(32));
+        let ws = Tensor::f32(vec![8, 8], rng.normal_vec(64));
+        let exact = interp::run(&g, &[xs.clone(), ws.clone()]).unwrap();
+        let mut errs = Vec::new();
+        for seg in [8, 32, 128] {
+            let g2 = ActibaPass::with_segments(seg).apply(&g);
+            let approx = interp::run(&g2, &[xs.clone(), ws.clone()]).unwrap();
+            let e: f32 = exact[0]
+                .as_f32()
+                .iter()
+                .zip(approx[0].as_f32())
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            errs.push(e);
+        }
+        assert!(errs[0] > errs[1] && errs[1] > errs[2], "{errs:?}");
+    }
+}

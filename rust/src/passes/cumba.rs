@@ -1,0 +1,185 @@
+//! CumBA: rewrite sequential CumSum into a masked MatMul (paper §2.1).
+//!
+//! `C[i,j] = Σ_{k<=i} X[k,j]` equals `M @ X` with the compile-time
+//! lower-triangular mask `M[i,k] = (k <= i)`. The rewrite moves the op
+//! from the DSP's m-step sequential loop onto the MPU MAC array, where the
+//! mask is ZVC-compressed (~50 % zeros) and zero MACs are skipped by the
+//! sparsity bitmap (Fig 3) — both modeled by `npu::cost`.
+//!
+//! Handles CumSum along the second-to-last axis (`M @ X`, batched over
+//! leading dims) and the last axis (`X @ M^T`). Other axes are left alone
+//! (the models never produce them).
+
+use crate::graph::{ConstKind, Graph, Op, Tensor};
+
+use super::{rebuild, Pass};
+
+/// The CumBA rewrite pass.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CumbaPass;
+
+/// Dense lower-triangular mask tensor M[i,j] = (j <= i).
+fn tril_tensor(n: usize) -> Tensor {
+    let mut data = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            data[i * n + j] = 1.0;
+        }
+    }
+    Tensor::f32(vec![n, n], data)
+}
+
+/// Upper-triangular mask M[i,j] = (i <= j) — tril transposed, used for
+/// cumsum along the last axis.
+fn triu_tensor(n: usize) -> Tensor {
+    let mut data = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in i..n {
+            data[i * n + j] = 1.0;
+        }
+    }
+    Tensor::f32(vec![n, n], data)
+}
+
+impl Pass for CumbaPass {
+    fn name(&self) -> &'static str {
+        "cumba"
+    }
+
+    fn apply(&self, g: &Graph) -> Graph {
+        rebuild(g, |out, node, remap| {
+            let Op::CumSum { axis } = node.op else { return None };
+            let rank = node.shape.len();
+            let x = remap(node.inputs[0]);
+            if rank >= 2 && axis == rank - 2 {
+                // C = M @ X (batched over leading dims)
+                let m = node.shape[axis];
+                let mask = out.constant_kind(
+                    &format!("{}.cumba_mask", node.name),
+                    tril_tensor(m),
+                    ConstKind::TrilMask,
+                );
+                Some(out.matmul(mask, x, &format!("{}.cumba", node.name)))
+            } else if rank >= 2 && axis == rank - 1 {
+                // C = X @ M^T (mask transposed = upper triangular)
+                let n = node.shape[axis];
+                let mask = out.constant_kind(
+                    &format!("{}.cumba_maskT", node.name),
+                    triu_tensor(n),
+                    ConstKind::TrilMask,
+                );
+                Some(out.matmul(x, mask, &format!("{}.cumba", node.name)))
+            } else if rank == 1 {
+                // vector cumsum: (1, n) @ M^T shaped via reshape
+                let n = node.shape[0];
+                let row = out.reshape(x, vec![1, n], &format!("{}.row", node.name));
+                let mask = out.constant_kind(
+                    &format!("{}.cumba_maskT", node.name),
+                    triu_tensor(n),
+                    ConstKind::TrilMask,
+                );
+                let mm = out.matmul(row, mask, &format!("{}.cumba", node.name));
+                Some(out.reshape(mm, vec![n], &format!("{}.flat", node.name)))
+            } else {
+                None // unusual axis: keep the sequential op
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Census, Graph, Tensor};
+    use crate::interp;
+    use crate::util::quickcheck::{assert_close, check};
+    use crate::util::Prng;
+
+    fn run_both(g: &Graph, g2: &Graph, inputs: &[Tensor]) -> (Vec<f32>, Vec<f32>) {
+        let a = interp::run(g, inputs).unwrap();
+        let b = interp::run(g2, inputs).unwrap();
+        (a[0].as_f32().to_vec(), b[0].as_f32().to_vec())
+    }
+
+    #[test]
+    fn rewrites_rank2_axis0() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![5, 3]);
+        let c = g.cumsum(x, 0, "cs");
+        g.output(c);
+        let g2 = CumbaPass.apply(&g);
+        assert_eq!(Census::of(&g2).get("CumSum"), 0);
+        assert_eq!(Census::of(&g2).get("MatMul"), 1);
+        let mut rng = Prng::new(1);
+        let xs = Tensor::f32(vec![5, 3], rng.normal_vec(15));
+        let (a, b) = run_both(&g, &g2, &[xs]);
+        assert_close(&a, &b, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn rewrites_rank3_middle_axis_batched() {
+        // the CumSum_b pattern: (H, T, T) along axis 1
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![3, 8, 8]);
+        let c = g.cumsum(x, 1, "cumsum_b");
+        g.output(c);
+        let g2 = CumbaPass.apply(&g);
+        assert_eq!(Census::of(&g2).get("CumSum"), 0);
+        let mut rng = Prng::new(2);
+        let xs = Tensor::f32(vec![3, 8, 8], rng.normal_vec(192));
+        let (a, b) = run_both(&g, &g2, &[xs]);
+        assert_close(&a, &b, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn rewrites_last_axis_and_vector() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![4, 6]);
+        let c = g.cumsum(x, 1, "cs_last");
+        g.output(c);
+        let v = g.input("v", vec![7]);
+        let cv = g.cumsum(v, 0, "cs_vec");
+        g.output(cv);
+        let g2 = CumbaPass.apply(&g);
+        assert_eq!(Census::of(&g2).get("CumSum"), 0);
+        let mut rng = Prng::new(3);
+        let xs = Tensor::f32(vec![4, 6], rng.normal_vec(24));
+        let vs = Tensor::f32(vec![7], rng.normal_vec(7));
+        let a = interp::run(&g, &[xs.clone(), vs.clone()]).unwrap();
+        let b = interp::run(&g2, &[xs, vs]).unwrap();
+        assert_close(a[0].as_f32(), b[0].as_f32(), 1e-5, 1e-5).unwrap();
+        assert_close(a[1].as_f32(), b[1].as_f32(), 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn property_equivalence_random_shapes() {
+        check(
+            |r| (2 + r.below(12), 1 + r.below(8), r.next_u64()),
+            |&(m, n, seed)| {
+                let mut g = Graph::new("p");
+                let x = g.input("x", vec![m, n]);
+                let c = g.cumsum(x, 0, "cs");
+                g.output(c);
+                let g2 = CumbaPass.apply(&g);
+                let mut rng = Prng::new(seed);
+                let xs = Tensor::f32(vec![m, n], rng.normal_vec(m * n));
+                let a = interp::run(&g, &[xs.clone()]).map_err(|e| e)?;
+                let b = interp::run(&g2, &[xs]).map_err(|e| e)?;
+                assert_close(a[0].as_f32(), b[0].as_f32(), 1e-4, 1e-4)
+            },
+        );
+    }
+
+    #[test]
+    fn mask_is_marked_for_sparsity() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![4, 4]);
+        let c = g.cumsum(x, 0, "cs");
+        g.output(c);
+        let g2 = CumbaPass.apply(&g);
+        assert!(g2.nodes.iter().any(|n| matches!(
+            n.op,
+            crate::graph::Op::Const { kind: ConstKind::TrilMask }
+        )));
+    }
+}

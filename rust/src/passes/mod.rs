@@ -1,0 +1,107 @@
+//! Conversion-time graph rewrites — XAMBA's three optimizations.
+//!
+//! The paper applies CumBA / ReduBA / ActiBA "during conversion" of the
+//! model to the NPU binary; here they are compiler passes over the IR:
+//!
+//! * [`cumba::CumbaPass`]   — CumSum -> masked MatMul on the MPU (§2.1)
+//! * [`reduba::RedubaPass`] — ReduceSum -> ones-mask MVM on the MPU (§2.1)
+//! * [`actiba::ActibaPass`] — Swish/Softplus -> drain-path PLU (§2.2)
+//!
+//! Every pass is verified by randomized differential testing against the
+//! reference interpreter ([`verify`]): exact rewrites must agree to float
+//! tolerance, ActiBA within its PLU error bound.
+
+pub mod actiba;
+pub mod cumba;
+pub mod reduba;
+pub mod verify;
+
+use crate::graph::{Graph, Node, NodeId};
+
+/// A graph-to-graph rewrite.
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    fn apply(&self, g: &Graph) -> Graph;
+}
+
+/// Apply passes in order, returning the final graph and the per-pass
+/// live-node deltas (for reports).
+pub fn run_pipeline(g: &Graph, passes: &[&dyn Pass]) -> (Graph, Vec<(String, usize)>) {
+    let mut cur = g.clone();
+    let mut log = Vec::new();
+    for p in passes {
+        cur = p.apply(&cur);
+        log.push((p.name().to_string(), cur.live_count()));
+    }
+    (cur, log)
+}
+
+/// Rebuild a graph node-by-node. For each old node, `rewrite` may emit a
+/// replacement subgraph into `out` (returning the substitute id) or return
+/// `None` to copy the node verbatim (with inputs remapped). Keeps the
+/// topological id order, so interpreter and profiler work unchanged.
+pub fn rebuild(
+    g: &Graph,
+    mut rewrite: impl FnMut(&mut Graph, &Node, &dyn Fn(NodeId) -> NodeId) -> Option<NodeId>,
+) -> Graph {
+    let mut out = Graph::new(&g.name);
+    let mut map: Vec<NodeId> = Vec::with_capacity(g.nodes.len());
+    for node in &g.nodes {
+        let remap = |id: NodeId| map[id];
+        let new_id = match rewrite(&mut out, node, &remap) {
+            Some(id) => id,
+            None => {
+                let inputs: Vec<NodeId> = node.inputs.iter().map(|&i| map[i]).collect();
+                out.add_node(
+                    node.op.clone(),
+                    inputs,
+                    node.shape.clone(),
+                    node.dtype,
+                    node.name.clone(),
+                    node.value.clone(),
+                )
+            }
+        };
+        map.push(new_id);
+    }
+    out.inputs = g.inputs.iter().map(|&i| map[i]).collect();
+    out.outputs = g.outputs.iter().map(|&i| map[i]).collect();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Graph, Tensor};
+    use crate::interp;
+
+    #[test]
+    fn identity_rebuild_preserves_semantics() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![2, 3]);
+        let b = g.input("b", vec![3, 2]);
+        let m = g.matmul(a, b, "m");
+        let s = g.silu(m, "s");
+        g.output(s);
+        let g2 = rebuild(&g, |_, _, _| None);
+        let xa = Tensor::f32(vec![2, 3], vec![1., -1., 2., 0.5, 0., 3.]);
+        let xb = Tensor::f32(vec![3, 2], vec![1., 0., 0., 1., 1., 1.]);
+        let r1 = interp::run(&g, &[xa.clone(), xb.clone()]).unwrap();
+        let r2 = interp::run(&g2, &[xa, xb]).unwrap();
+        assert_eq!(r1[0].as_f32(), r2[0].as_f32());
+    }
+
+    #[test]
+    fn rebuild_keeps_io_order() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![1]);
+        let b = g.input("b", vec![1]);
+        let s = g.add(a, b, "s");
+        g.output(s);
+        g.output(a);
+        let g2 = rebuild(&g, |_, _, _| None);
+        assert_eq!(g2.inputs.len(), 2);
+        assert_eq!(g2.outputs.len(), 2);
+        assert_eq!(g2.node(g2.inputs[0]).name, "a");
+    }
+}

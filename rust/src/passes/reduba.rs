@@ -1,0 +1,135 @@
+//! ReduBA: rewrite ReduceSum into a ones-mask MVM (paper §2.1).
+//!
+//! `R[j] = Σ_i X[i,j]` equals `1_m @ X` — a matrix-vector product against
+//! an all-ones mask. Unlike CumBA's (m x m) mask, the same length-m vector
+//! is reused by every output element, so the mask adds O(m) traffic once;
+//! the reduction itself moves from the DSP to the MPU's MAC array.
+//!
+//! Handles reductions along the last axis (`X @ 1`) and the second-to-last
+//! axis (`1^T @ X`, batched); other axes are left sequential.
+
+use crate::graph::{ConstKind, Graph, Op, Tensor};
+
+use super::{rebuild, Pass};
+
+/// The ReduBA rewrite pass.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RedubaPass;
+
+impl Pass for RedubaPass {
+    fn name(&self) -> &'static str {
+        "reduba"
+    }
+
+    fn apply(&self, g: &Graph) -> Graph {
+        rebuild(g, |out, node, remap| {
+            let Op::ReduceSum { axis } = node.op else { return None };
+            let x_old = node.inputs[0];
+            let in_shape = g.shape(x_old).to_vec();
+            let rank = in_shape.len();
+            let x = remap(x_old);
+            let nm = |s: &str| format!("{}.{s}", node.name);
+            if axis == rank - 1 {
+                // R = X @ 1 : (..., m, n) x (n, 1) -> (..., m, 1) -> drop
+                let n = in_shape[rank - 1];
+                let ones = out.constant_kind(
+                    &nm("reduba_ones"),
+                    Tensor::f32(vec![n, 1], vec![1.0; n]),
+                    ConstKind::OnesMask,
+                );
+                let mm = out.matmul(x, ones, &nm("reduba"));
+                Some(out.reshape(mm, node.shape.clone(), &nm("squeeze")))
+            } else if rank >= 2 && axis == rank - 2 {
+                // R = 1^T @ X : (1, m) x (..., m, n) -> (..., 1, n) -> drop
+                let m = in_shape[rank - 2];
+                let ones = out.constant_kind(
+                    &nm("reduba_ones"),
+                    Tensor::f32(vec![1, m], vec![1.0; m]),
+                    ConstKind::OnesMask,
+                );
+                let mm = out.matmul(ones, x, &nm("reduba"));
+                Some(out.reshape(mm, node.shape.clone(), &nm("squeeze")))
+            } else {
+                None
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Census, Graph, Tensor};
+    use crate::interp;
+    use crate::util::quickcheck::{assert_close, check};
+    use crate::util::Prng;
+
+    #[test]
+    fn rewrites_row_reduction() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![6, 4]);
+        let r = g.reduce_sum(x, 0, "rs");
+        g.output(r);
+        let g2 = RedubaPass.apply(&g);
+        assert_eq!(Census::of(&g2).get("ReduceSum"), 0);
+        assert_eq!(Census::of(&g2).get("MatMul"), 1);
+        let mut rng = Prng::new(1);
+        let xs = Tensor::f32(vec![6, 4], rng.normal_vec(24));
+        let a = interp::run(&g, &[xs.clone()]).unwrap();
+        let b = interp::run(&g2, &[xs]).unwrap();
+        assert_eq!(a[0].shape, b[0].shape);
+        assert_close(a[0].as_f32(), b[0].as_f32(), 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn rewrites_last_axis_rank3() {
+        // the cb.reducesum pattern: (Tc, Tc, N) along axis 2
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![5, 5, 7]);
+        let r = g.reduce_sum(x, 2, "rs");
+        g.output(r);
+        let g2 = RedubaPass.apply(&g);
+        assert_eq!(Census::of(&g2).get("ReduceSum"), 0);
+        let mut rng = Prng::new(2);
+        let xs = Tensor::f32(vec![5, 5, 7], rng.normal_vec(175));
+        let a = interp::run(&g, &[xs.clone()]).unwrap();
+        let b = interp::run(&g2, &[xs]).unwrap();
+        assert_eq!(b[0].shape, vec![5, 5]);
+        assert_close(a[0].as_f32(), b[0].as_f32(), 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn ones_mask_kind_set_for_reuse_modeling() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![3, 3]);
+        let r = g.reduce_sum(x, 1, "rs");
+        g.output(r);
+        let g2 = RedubaPass.apply(&g);
+        assert!(g2.nodes.iter().any(|n| matches!(
+            n.op,
+            crate::graph::Op::Const { kind: ConstKind::OnesMask }
+        )));
+    }
+
+    #[test]
+    fn property_equivalence_random_axis() {
+        check(
+            |r| (2 + r.below(6), 2 + r.below(6), r.below(2), r.next_u64()),
+            |&(m, n, axis, seed)| {
+                let mut g = Graph::new("p");
+                let x = g.input("x", vec![m, n]);
+                let r = g.reduce_sum(x, axis, "rs");
+                g.output(r);
+                let g2 = RedubaPass.apply(&g);
+                if Census::of(&g2).get("ReduceSum") != 0 {
+                    return Err("not rewritten".into());
+                }
+                let mut rng = Prng::new(seed);
+                let xs = Tensor::f32(vec![m, n], rng.normal_vec(m * n));
+                let a = interp::run(&g, &[xs.clone()]).map_err(|e| e)?;
+                let b = interp::run(&g2, &[xs]).map_err(|e| e)?;
+                assert_close(a[0].as_f32(), b[0].as_f32(), 1e-4, 1e-4)
+            },
+        );
+    }
+}

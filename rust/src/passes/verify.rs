@@ -1,0 +1,157 @@
+//! Randomized differential verification of graph rewrites.
+//!
+//! A pass is trusted only if `interp(original) ≈ interp(rewritten)` on
+//! random inputs — run for every pass on every model graph by the test
+//! suite, and available at runtime via `xamba profile --verify`.
+
+use crate::graph::{DType, Graph, Op, Tensor};
+use crate::interp;
+use crate::util::Prng;
+
+/// Outcome of one differential run.
+#[derive(Clone, Debug)]
+pub struct VerifyReport {
+    pub outputs: usize,
+    pub max_abs_err: f32,
+    pub max_rel_err: f32,
+}
+
+/// Generate a random input set for a graph. i32 inputs are bounded by the
+/// smallest gather-table first-dimension they index (token ids stay in
+/// vocab range).
+pub fn random_inputs(g: &Graph, rng: &mut Prng, scale: f32) -> Vec<Tensor> {
+    // find an upper bound for every i32 input from its gather consumers
+    let mut bounds: Vec<usize> = vec![usize::MAX; g.nodes.len()];
+    for node in &g.nodes {
+        if let Op::Gather = node.op {
+            let data_dim = g.shape(node.inputs[0])[0];
+            let idx = node.inputs[1];
+            bounds[idx] = bounds[idx].min(data_dim);
+        }
+    }
+    g.inputs
+        .iter()
+        .map(|&id| {
+            let node = g.node(id);
+            let n: usize = node.shape.iter().product();
+            match node.dtype {
+                DType::F32 => {
+                    let data: Vec<f32> =
+                        (0..n).map(|_| rng.normal() * scale).collect();
+                    Tensor::f32(node.shape.clone(), data)
+                }
+                DType::I32 => {
+                    let hi = if bounds[id] == usize::MAX { 16 } else { bounds[id] };
+                    let data: Vec<i32> =
+                        (0..n).map(|_| rng.below(hi.max(1)) as i32).collect();
+                    Tensor::i32(node.shape.clone(), data)
+                }
+            }
+        })
+        .collect()
+}
+
+/// Run both graphs on `trials` random input sets; return the worst errors.
+/// Errors out on shape mismatches or interpreter failures.
+pub fn differential(
+    original: &Graph,
+    rewritten: &Graph,
+    trials: usize,
+    seed: u64,
+    scale: f32,
+) -> Result<VerifyReport, String> {
+    if original.inputs.len() != rewritten.inputs.len() {
+        return Err("input arity changed".into());
+    }
+    if original.outputs.len() != rewritten.outputs.len() {
+        return Err("output arity changed".into());
+    }
+    let mut rng = Prng::new(seed);
+    let mut max_abs = 0.0f32;
+    let mut max_rel = 0.0f32;
+    for trial in 0..trials {
+        let inputs = random_inputs(original, &mut rng, scale);
+        let a = interp::run(original, &inputs)?;
+        let b = interp::run(rewritten, &inputs)?;
+        for (i, (ta, tb)) in a.iter().zip(&b).enumerate() {
+            if ta.shape != tb.shape {
+                return Err(format!(
+                    "trial {trial} output {i}: shape {:?} vs {:?}",
+                    ta.shape, tb.shape
+                ));
+            }
+            for (&x, &y) in ta.as_f32().iter().zip(tb.as_f32()) {
+                let abs = (x - y).abs();
+                max_abs = max_abs.max(abs);
+                if x.abs() > 1e-3 {
+                    max_rel = max_rel.max(abs / x.abs());
+                }
+                if x.is_nan() != y.is_nan() {
+                    return Err(format!("trial {trial} output {i}: NaN mismatch"));
+                }
+            }
+        }
+    }
+    Ok(VerifyReport { outputs: original.outputs.len(), max_abs_err: max_abs, max_rel_err: max_rel })
+}
+
+/// Assert a rewrite is exact to float tolerance (CumBA / ReduBA).
+pub fn assert_exact(original: &Graph, rewritten: &Graph, tol: f32) {
+    let r = differential(original, rewritten, 3, 0xD1FF, 0.5)
+        .unwrap_or_else(|e| panic!("verify {}: {e}", original.name));
+    assert!(
+        r.max_abs_err <= tol,
+        "{}: rewrite drifted: max_abs_err {} > {tol}",
+        original.name,
+        r.max_abs_err
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::passes::{cumba::CumbaPass, reduba::RedubaPass, Pass};
+
+    #[test]
+    fn detects_a_broken_rewrite() {
+        let mut g = Graph::new("ok");
+        let x = g.input("x", vec![3, 3]);
+        let y = g.cumsum(x, 0, "cs");
+        g.output(y);
+        // "rewrite" that actually changes semantics: reduce instead of scan
+        let mut bad = Graph::new("bad");
+        let xb = bad.input("x", vec![3, 3]);
+        let yb = bad.add(xb, xb, "wrong");
+        bad.output(yb);
+        let r = differential(&g, &bad, 2, 7, 1.0).unwrap();
+        assert!(r.max_abs_err > 0.1);
+    }
+
+    #[test]
+    fn passes_are_exact_on_mixed_graph() {
+        let mut g = Graph::new("mixed");
+        let x = g.input("x", vec![6, 5]);
+        let c = g.cumsum(x, 0, "cs");
+        let r = g.reduce_sum(c, 1, "rs");
+        g.output(r);
+        let g2 = CumbaPass.apply(&g);
+        let g3 = RedubaPass.apply(&g2);
+        assert_exact(&g, &g3, 1e-4);
+    }
+
+    #[test]
+    fn token_inputs_respect_vocab_bound() {
+        let mut g = Graph::new("g");
+        let emb = g.input("emb", vec![10, 4]);
+        let toks = g.input_i32("tokens", vec![32]);
+        let e = g.gather(emb, toks, "embed");
+        g.output(e);
+        let mut rng = Prng::new(1);
+        for _ in 0..10 {
+            let inputs = random_inputs(&g, &mut rng, 1.0);
+            for &t in inputs[1].as_i32() {
+                assert!((0..10).contains(&t));
+            }
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! Adaptive (non-uniform) piecewise-linear fitting.
+//!
+//! The paper cites Flex-SFU (Reggiani et al., DAC'23): non-uniform segment
+//! placement buys accuracy at equal LUT size. This greedy fitter starts
+//! from two knots and repeatedly splits the segment with the largest max
+//! error at its worst point — simple, deterministic, and enough to power
+//! the `plu-fit` CLI and the segment-count ablation bench.
+
+/// A non-uniform piecewise-linear approximation (sorted knots).
+#[derive(Clone, Debug)]
+pub struct AdaptiveTable {
+    /// Segment boundaries, ascending, len = segments + 1.
+    pub knots: Vec<f32>,
+    /// Per-segment slope (len = segments).
+    pub slopes: Vec<f32>,
+    /// Per-segment intercept.
+    pub intercepts: Vec<f32>,
+}
+
+impl AdaptiveTable {
+    /// Evaluate via binary search over the knots (the hardware analogue is
+    /// a priority encoder over range comparators).
+    pub fn eval(&self, x: f32) -> f32 {
+        let n = self.slopes.len();
+        let k = match self
+            .knots
+            .binary_search_by(|probe| probe.partial_cmp(&x).unwrap())
+        {
+            Ok(i) => i.min(n - 1),
+            Err(0) => 0,
+            Err(i) => (i - 1).min(n - 1),
+        };
+        self.slopes[k] * x + self.intercepts[k]
+    }
+
+    pub fn num_segments(&self) -> usize {
+        self.slopes.len()
+    }
+
+    /// Max |f - approx| over a dense grid of the fitted range.
+    pub fn max_abs_error(&self, f: impl Fn(f64) -> f64) -> f64 {
+        let (lo, hi) = (self.knots[0] as f64, *self.knots.last().unwrap() as f64);
+        let n = 50_001;
+        let mut worst = 0.0f64;
+        for i in 0..n {
+            let x = lo + (hi - lo) * i as f64 / (n - 1) as f64;
+            worst = worst.max((f(x) - self.eval(x as f32) as f64).abs());
+        }
+        worst
+    }
+}
+
+fn secant(f: &impl Fn(f64) -> f64, x0: f64, x1: f64) -> (f32, f32) {
+    let (y0, y1) = (f(x0), f(x1));
+    let m = (y1 - y0) / (x1 - x0);
+    (m as f32, (y0 - m * x0) as f32)
+}
+
+/// Worst-error point of the secant to `f` on `[x0, x1]` (grid probe).
+fn worst_point(f: &impl Fn(f64) -> f64, x0: f64, x1: f64) -> (f64, f64) {
+    let (m, c) = secant(f, x0, x1);
+    let mut worst_x = 0.5 * (x0 + x1);
+    let mut worst_e = 0.0;
+    for i in 1..64 {
+        let x = x0 + (x1 - x0) * i as f64 / 64.0;
+        let e = (f(x) - (m as f64 * x + c as f64)).abs();
+        if e > worst_e {
+            worst_e = e;
+            worst_x = x;
+        }
+    }
+    (worst_x, worst_e)
+}
+
+/// Greedy adaptive fit of `f` on `[lo, hi]` with `segments` pieces.
+pub fn fit_adaptive(
+    f: impl Fn(f64) -> f64,
+    lo: f32,
+    hi: f32,
+    segments: usize,
+) -> AdaptiveTable {
+    assert!(segments >= 1);
+    let mut knots: Vec<f64> = vec![lo as f64, hi as f64];
+    while knots.len() - 1 < segments {
+        // find the segment with the largest worst-case error and split it
+        // at its worst point
+        let mut best = (0usize, 0.0f64, 0.0f64); // (idx, err, split_x)
+        for i in 0..knots.len() - 1 {
+            let (wx, we) = worst_point(&f, knots[i], knots[i + 1]);
+            if we > best.1 {
+                best = (i, we, wx);
+            }
+        }
+        if best.1 == 0.0 {
+            // function already linear everywhere; split the widest segment
+            let i = (0..knots.len() - 1)
+                .max_by(|&a, &b| {
+                    (knots[a + 1] - knots[a])
+                        .partial_cmp(&(knots[b + 1] - knots[b]))
+                        .unwrap()
+                })
+                .unwrap();
+            best = (i, 0.0, 0.5 * (knots[i] + knots[i + 1]));
+        }
+        knots.insert(best.0 + 1, best.2);
+    }
+    let mut slopes = Vec::with_capacity(segments);
+    let mut intercepts = Vec::with_capacity(segments);
+    for w in knots.windows(2) {
+        let (m, c) = secant(&f, w[0], w[1]);
+        slopes.push(m);
+        intercepts.push(c);
+    }
+    AdaptiveTable {
+        knots: knots.iter().map(|&x| x as f32).collect(),
+        slopes,
+        intercepts,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{silu_exact, silu_table};
+    use super::*;
+
+    #[test]
+    fn adaptive_beats_uniform_at_equal_budget() {
+        for &k in &[8usize, 16, 32] {
+            let uni = silu_table(k, -8.0, 8.0).max_abs_error(silu_exact, 0.0);
+            let ada = fit_adaptive(silu_exact, -8.0, 8.0, k).max_abs_error(silu_exact);
+            assert!(
+                ada <= uni * 1.05,
+                "k={k}: adaptive {ada} vs uniform {uni}"
+            );
+        }
+    }
+
+    #[test]
+    fn knots_are_sorted_and_exact_count() {
+        let t = fit_adaptive(silu_exact, -4.0, 4.0, 12);
+        assert_eq!(t.num_segments(), 12);
+        assert_eq!(t.knots.len(), 13);
+        for w in t.knots.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn linear_function_fits_exactly() {
+        let t = fit_adaptive(|x| 2.0 * x + 1.0, -1.0, 1.0, 4);
+        assert!(t.max_abs_error(|x| 2.0 * x + 1.0) < 1e-6);
+    }
+
+    #[test]
+    fn eval_clamps_out_of_range() {
+        let t = fit_adaptive(silu_exact, -2.0, 2.0, 8);
+        // out-of-range evaluation extrapolates the edge segments (finite)
+        assert!(t.eval(-10.0).is_finite());
+        assert!(t.eval(10.0).is_finite());
+    }
+}

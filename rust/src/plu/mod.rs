@@ -1,0 +1,205 @@
+//! Piecewise-linear activation approximation (the ActiBA substrate).
+//!
+//! Rust mirror of `python/compile/plu.py`: fits a Configurable-LUT of
+//! (slope, intercept) pairs over uniform segments for SiLU / Softplus,
+//! evaluates it the way the NPU's drain-path PLU would, and quantifies the
+//! approximation error the paper's Table 1 trades for latency. Includes a
+//! greedy *adaptive* fitter (non-uniform knots, à la Flex-SFU) used by the
+//! ablation bench to show how segment placement buys accuracy.
+
+mod fit;
+
+pub use fit::{fit_adaptive, AdaptiveTable};
+
+/// A C-LUT: `K` uniform segments on `[lo, hi]` plus analytic linear tails.
+///
+/// Segment `k` covers `[lo + k*step, lo + (k+1)*step)`; inputs outside the
+/// range clamp to the first/last segment, whose slope/intercept the
+/// fitters set to the function's asymptote.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PluTable {
+    pub lo: f32,
+    pub hi: f32,
+    pub slopes: Vec<f32>,
+    pub intercepts: Vec<f32>,
+}
+
+impl PluTable {
+    pub fn num_segments(&self) -> usize {
+        self.slopes.len()
+    }
+
+    pub fn step(&self) -> f32 {
+        (self.hi - self.lo) / self.num_segments() as f32
+    }
+
+    /// Evaluate the PLU at one point: `m_k * x + c_k`.
+    #[inline]
+    pub fn eval(&self, x: f32) -> f32 {
+        let k = (((x - self.lo) / self.step()) as i64)
+            .clamp(0, self.num_segments() as i64 - 1) as usize;
+        self.slopes[k] * x + self.intercepts[k]
+    }
+
+    /// Evaluate elementwise over a slice.
+    pub fn eval_slice(&self, xs: &[f32], out: &mut [f32]) {
+        let inv_step = 1.0 / self.step();
+        let kmax = self.num_segments() - 1;
+        for (o, &x) in out.iter_mut().zip(xs) {
+            let k = (((x - self.lo) * inv_step) as i64).clamp(0, kmax as i64) as usize;
+            *o = self.slopes[k] * x + self.intercepts[k];
+        }
+    }
+
+    /// Max |f - plu| over a dense grid extending `span` beyond the range.
+    pub fn max_abs_error(&self, f: impl Fn(f64) -> f64, span: f32) -> f64 {
+        let n = 100_001;
+        let lo = (self.lo - span) as f64;
+        let hi = (self.hi + span) as f64;
+        let mut worst = 0.0f64;
+        for i in 0..n {
+            let x = lo + (hi - lo) * i as f64 / (n - 1) as f64;
+            let e = (f(x) - self.eval(x as f32) as f64).abs();
+            worst = worst.max(e);
+        }
+        worst
+    }
+
+    /// Bytes the C-LUT occupies (2 f32 per segment) — NPU config budget.
+    pub fn lut_bytes(&self) -> usize {
+        self.num_segments() * 8
+    }
+}
+
+/// Exact SiLU in f64 (reference for error measurement).
+pub fn silu_exact(x: f64) -> f64 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Exact Softplus in f64 (stable form).
+pub fn softplus_exact(x: f64) -> f64 {
+    x.max(0.0) + (-x.abs()).exp().ln_1p()
+}
+
+/// Exact sigmoid in f32 (used by the interpreter's exact ops).
+pub fn sigmoid_f32(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Stable softplus in f32.
+pub fn softplus_f32(x: f32) -> f32 {
+    x.max(0.0) + (-x.abs()).exp().ln_1p()
+}
+
+fn secant_fit(
+    f: impl Fn(f64) -> f64,
+    lo: f32,
+    hi: f32,
+    segments: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    assert!(segments >= 2, "need >= 2 segments");
+    let mut slopes = Vec::with_capacity(segments);
+    let mut intercepts = Vec::with_capacity(segments);
+    let step = (hi as f64 - lo as f64) / segments as f64;
+    for k in 0..segments {
+        let x0 = lo as f64 + k as f64 * step;
+        let x1 = x0 + step;
+        let (y0, y1) = (f(x0), f(x1));
+        let m = (y1 - y0) / step;
+        slopes.push(m as f32);
+        intercepts.push((y0 - m * x0) as f32);
+    }
+    (slopes, intercepts)
+}
+
+/// Fit a uniform-segment C-LUT for SiLU with analytic tails (0 / identity).
+/// Bit-for-bit the same construction as `python/compile/plu.silu_table`.
+pub fn silu_table(segments: usize, lo: f32, hi: f32) -> PluTable {
+    let (mut m, mut c) = secant_fit(silu_exact, lo, hi, segments);
+    (m[0], c[0]) = (0.0, 0.0);
+    let last = segments - 1;
+    (m[last], c[last]) = (1.0, 0.0);
+    PluTable { lo, hi, slopes: m, intercepts: c }
+}
+
+/// Fit a uniform-segment C-LUT for Softplus with analytic tails.
+pub fn softplus_table(segments: usize, lo: f32, hi: f32) -> PluTable {
+    let (mut m, mut c) = secant_fit(softplus_exact, lo, hi, segments);
+    (m[0], c[0]) = (0.0, 0.0);
+    let last = segments - 1;
+    (m[last], c[last]) = (1.0, 0.0);
+    PluTable { lo, hi, slopes: m, intercepts: c }
+}
+
+/// Default ActiBA tables (matches `ModelConfig.plu_segments/plu_range`).
+pub fn default_silu() -> PluTable {
+    silu_table(32, -8.0, 8.0)
+}
+
+pub fn default_softplus() -> PluTable {
+    softplus_table(32, -8.0, 8.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn silu_error_is_negligible_at_32_segments() {
+        let t = default_silu();
+        // "negligible accuracy loss" regime of the paper
+        assert!(t.max_abs_error(silu_exact, 4.0) < 0.02);
+    }
+
+    #[test]
+    fn softplus_error_is_negligible_at_32_segments() {
+        let t = default_softplus();
+        assert!(t.max_abs_error(softplus_exact, 4.0) < 0.02);
+    }
+
+    #[test]
+    fn more_segments_monotonically_help() {
+        let errs: Vec<f64> = [4, 8, 16, 32, 64]
+            .iter()
+            .map(|&k| silu_table(k, -8.0, 8.0).max_abs_error(silu_exact, 2.0))
+            .collect();
+        for w in errs.windows(2) {
+            assert!(w[1] <= w[0] * 1.01, "errors not decreasing: {errs:?}");
+        }
+    }
+
+    #[test]
+    fn tails_follow_asymptotes() {
+        let t = default_silu();
+        assert_eq!(t.eval(-100.0), 0.0); // silu -> 0
+        assert!((t.eval(100.0) - 100.0).abs() < 1e-4); // silu -> x
+        let s = default_softplus();
+        assert_eq!(s.eval(-50.0), 0.0);
+        assert!((s.eval(50.0) - 50.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn eval_slice_matches_eval() {
+        let t = default_silu();
+        let xs: Vec<f32> = (-40..40).map(|i| i as f32 * 0.33).collect();
+        let mut out = vec![0.0; xs.len()];
+        t.eval_slice(&xs, &mut out);
+        for (&x, &o) in xs.iter().zip(&out) {
+            assert_eq!(o, t.eval(x));
+        }
+    }
+
+    #[test]
+    fn knot_continuity_is_tight() {
+        // secant fit is continuous at interior knots by construction —
+        // except at the knots adjacent to the analytically-overridden
+        // tail segments (0 and K-1), which we skip.
+        let t = silu_table(16, -6.0, 6.0);
+        for k in 2..14 {
+            let x = t.lo + k as f32 * t.step();
+            let left = t.slopes[k - 1] * x + t.intercepts[k - 1];
+            let right = t.slopes[k] * x + t.intercepts[k];
+            assert!((left - right).abs() < 1e-5, "knot {k}: {left} vs {right}");
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Quality evaluation — the Table-1 substitute (DESIGN.md §1).
+//!
+//! The paper measures PLU-approximation quality on LAMBADA/HellaSwag/...
+//! via pretrained HF checkpoints; offline we measure the same causal
+//! chain — activation approximation -> logit divergence -> task-metric
+//! delta — on the trained tiny char-LMs over held-out synthetic corpus:
+//! next-byte perplexity, top-1 accuracy, and logit drift vs the exact
+//! model, for exact vs PLU-8/16/32 variants.
+
+use crate::config::ModelShape;
+use crate::graph::{Graph, Tensor};
+use crate::interp;
+use crate::models::params::{full_spec, ParamSpec};
+
+/// LM-quality measurement over held-out text.
+#[derive(Clone, Debug)]
+pub struct QualityReport {
+    /// Next-byte perplexity (e^mean-NLL) — Table 1's "PPL ↓" analogue.
+    pub ppl: f64,
+    /// Next-byte top-1 accuracy — Table 1's "ACC ↑" analogue.
+    pub top1: f64,
+    /// Mean |logit - exact_logit| (0 for the exact variant itself).
+    pub logit_mae: f64,
+    /// Max |logit - exact_logit|.
+    pub logit_max: f64,
+    pub windows: usize,
+}
+
+/// Slice every parameter out of the flat weights buffer, graph-input order.
+pub fn param_inputs(spec: &ParamSpec, buf: &[f32]) -> Vec<Tensor> {
+    spec.entries
+        .iter()
+        .map(|e| {
+            let size: usize = e.shape.iter().product();
+            Tensor::f32(e.shape.clone(), buf[e.offset..e.offset + size].to_vec())
+        })
+        .collect()
+}
+
+fn log_softmax_nll(logits: &[f32], target: usize) -> (f64, bool) {
+    let mx = logits.iter().cloned().fold(f32::MIN, f32::max);
+    let lse: f64 = logits.iter().map(|&l| ((l - mx) as f64).exp()).sum::<f64>().ln()
+        + mx as f64;
+    let nll = lse - logits[target] as f64;
+    let argmax = logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    (nll, argmax == target)
+}
+
+/// Evaluate a prefill graph (tokens -> all logits) as a byte LM over
+/// sliding windows of `text`. `exact_logits` (if given) must be the
+/// per-window logits of the exact model for divergence metrics.
+pub fn eval_lm(
+    shape: &ModelShape,
+    graph: &Graph,
+    weights: &[f32],
+    text: &[u8],
+    window: usize,
+    max_windows: usize,
+    exact_logits: Option<&[Vec<f32>]>,
+) -> (QualityReport, Vec<Vec<f32>>) {
+    let spec = full_spec(shape);
+    assert_eq!(spec.total(), weights.len(), "weights/spec mismatch");
+    let params = param_inputs(&spec, weights);
+    let stride = window; // non-overlapping windows
+    let mut nll_sum = 0.0f64;
+    let mut nll_n = 0usize;
+    let mut hits = 0usize;
+    let mut mae_sum = 0.0f64;
+    let mut mae_n = 0usize;
+    let mut max_err = 0.0f64;
+    let mut all_logits: Vec<Vec<f32>> = Vec::new();
+
+    let mut windows = 0usize;
+    let mut start = 0usize;
+    // params are hoisted: only the token tensor changes per window
+    // (EXPERIMENTS.md §Perf iteration 5)
+    let mut inputs = params;
+    inputs.push(Tensor::i32(vec![window], vec![0; window]));
+    while windows < max_windows && start + window + 1 <= text.len() {
+        let tokens: Vec<i32> =
+            text[start..start + window].iter().map(|&b| b as i32).collect();
+        let n = inputs.len();
+        inputs[n - 1] = Tensor::i32(vec![window], tokens);
+        let out = interp::run(graph, &inputs).expect("interp eval");
+        let logits = out[0].as_f32(); // (T, V)
+        let v = shape.vocab_size;
+        for t in 0..window - 1 {
+            let target = text[start + t + 1] as usize;
+            let row = &logits[t * v..(t + 1) * v];
+            let (nll, hit) = log_softmax_nll(row, target);
+            nll_sum += nll;
+            nll_n += 1;
+            hits += usize::from(hit);
+        }
+        if let Some(exact) = exact_logits {
+            let er = &exact[windows];
+            for (a, b) in logits.iter().zip(er) {
+                let d = (*a as f64 - *b as f64).abs();
+                mae_sum += d;
+                max_err = max_err.max(d);
+            }
+            mae_n += logits.len();
+        }
+        all_logits.push(logits.to_vec());
+        windows += 1;
+        start += stride;
+    }
+    (
+        QualityReport {
+            ppl: (nll_sum / nll_n.max(1) as f64).exp(),
+            top1: hits as f64 / nll_n.max(1) as f64,
+            logit_mae: if mae_n == 0 { 0.0 } else { mae_sum / mae_n as f64 },
+            logit_max: max_err,
+            windows,
+        },
+        all_logits,
+    )
+}
+
+/// In-context recall ("induction-head") probe: a sentence shown twice in
+/// the window should be easier to predict on its second occurrence. SSMs
+/// carry context in their recurrent state; this measures whether the
+/// trained model (and its PLU approximation) actually uses it. Returns
+/// (first-pass accuracy, second-pass accuracy).
+pub fn induction_probe(
+    shape: &ModelShape,
+    graph: &Graph,
+    weights: &[f32],
+    window: usize,
+    trials: usize,
+    seed: u64,
+) -> (f64, f64) {
+    let spec = full_spec(shape);
+    let params = param_inputs(&spec, weights);
+    let mut rng = crate::util::Prng::new(seed);
+    let (mut hit1, mut n1, mut hit2, mut n2) = (0usize, 0usize, 0usize, 0usize);
+    for _ in 0..trials {
+        // window = [pad][sentence][sentence]; compare accuracy per copy
+        let s = crate::util::corpus::sentence(&mut rng);
+        let sb = s.as_bytes();
+        let need = 2 * sb.len();
+        if need + 1 > window {
+            continue;
+        }
+        let mut text = vec![b' '; window - need];
+        text.extend_from_slice(sb);
+        text.extend_from_slice(sb);
+        let tokens: Vec<i32> = text.iter().map(|&b| b as i32).collect();
+        let mut inputs = params.clone();
+        inputs.push(Tensor::i32(vec![window], tokens));
+        let out = interp::run(graph, &inputs).expect("interp");
+        let logits = out[0].as_f32();
+        let v = shape.vocab_size;
+        let first_start = window - need;
+        for t in 0..window - 1 {
+            let target = text[t + 1] as usize;
+            if t + 1 <= first_start + 1 {
+                continue; // padding region
+            }
+            let row = &logits[t * v..(t + 1) * v];
+            let (_, hit) = log_softmax_nll(row, target);
+            if t + 1 < first_start + sb.len() {
+                hit1 += usize::from(hit);
+                n1 += 1;
+            } else if t + 1 >= first_start + sb.len() {
+                hit2 += usize::from(hit);
+                n2 += 1;
+            }
+        }
+    }
+    (
+        hit1 as f64 / n1.max(1) as f64,
+        hit2 as f64 / n2.max(1) as f64,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nll_math_is_sane() {
+        // peaked logits on the target: near-zero NLL, hit
+        let mut l = vec![0.0f32; 4];
+        l[2] = 20.0;
+        let (nll, hit) = log_softmax_nll(&l, 2);
+        assert!(nll < 1e-3 && hit);
+        let (nll_miss, hit_miss) = log_softmax_nll(&l, 0);
+        assert!(nll_miss > 10.0 && !hit_miss);
+    }
+
+    #[test]
+    fn uniform_logits_give_vocab_ppl() {
+        let l = vec![0.0f32; 256];
+        let (nll, _) = log_softmax_nll(&l, 7);
+        assert!((nll - (256f64).ln()).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,263 @@
+//! PJRT execution engine: compile AOT HLO artifacts once, run them from
+//! the serving hot path.
+//!
+//! Python never runs here — artifacts are HLO *text* (see aot.py for why
+//! text, not serialized protos) compiled by the in-process XLA CPU backend
+//! via the `xla` crate, then executed with `Literal` inputs. Weight
+//! literals are uploaded once per model and shared across programs.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{ArgDType, ArgSpec, Manifest, ProgramEntry};
+use crate::models::params::load_f32_bin;
+
+/// A host-side tensor crossing the PJRT boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<usize>, Vec<f32>),
+    I32(Vec<usize>, Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(s, _) | HostTensor::I32(s, _) => s,
+        }
+    }
+
+    pub fn f32_data(&self) -> &[f32] {
+        match self {
+            HostTensor::F32(_, d) => d,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        HostTensor::F32(shape.to_vec(), vec![0.0; shape.iter().product()])
+    }
+
+    pub(crate) fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32(_, d) => xla::Literal::vec1(d.as_slice()),
+            HostTensor::I32(_, d) => xla::Literal::vec1(d.as_slice()),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::F32(dims, lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(HostTensor::I32(dims, lit.to_vec::<i32>()?)),
+            other => Err(anyhow!("unsupported output element type {other:?}")),
+        }
+    }
+
+    /// Validate against an ArgSpec (shape + dtype).
+    pub fn matches(&self, spec: &ArgSpec) -> bool {
+        let dt_ok = matches!(
+            (self, spec.dtype),
+            (HostTensor::F32(..), ArgDType::F32) | (HostTensor::I32(..), ArgDType::I32)
+        );
+        dt_ok && self.shape() == spec.shape.as_slice()
+    }
+}
+
+/// Compiled-executable cache on a PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    weights: HashMap<String, HostTensor>,
+    /// Pre-converted weights literals — rebuilding a literal costs a
+    /// multi-MB copy per call, which dominated the decode hot path
+    /// (EXPERIMENTS.md §Perf iteration 4).
+    weight_literals: HashMap<String, xla::Literal>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine.
+    pub fn cpu() -> Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu()?,
+            executables: HashMap::new(),
+            weights: HashMap::new(),
+            weight_literals: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) a manifest program.
+    pub fn prepare(&mut self, manifest: &Manifest, entry: &ProgramEntry) -> Result<()> {
+        let key = entry.key();
+        if !self.executables.contains_key(&key) {
+            let path = manifest.path(&entry.hlo_file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parse HLO {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile {}", entry.hlo_file))?;
+            self.executables.insert(key, exe);
+        }
+        if !self.weights.contains_key(&entry.weights_file) {
+            let path = manifest.path(&entry.weights_file);
+            let data = load_f32_bin(path.to_str().context("non-utf8 path")?)
+                .map_err(|e| anyhow!(e))?;
+            if data.len() != entry.weights_len {
+                return Err(anyhow!(
+                    "{}: {} f32 on disk, manifest says {}",
+                    entry.weights_file,
+                    data.len(),
+                    entry.weights_len
+                ));
+            }
+            let host = HostTensor::F32(vec![data.len()], data);
+            self.weight_literals
+                .insert(entry.weights_file.clone(), host.to_literal()?);
+            self.weights.insert(entry.weights_file.clone(), host);
+        }
+        Ok(())
+    }
+
+    /// The loaded flat weight buffer for a program.
+    pub fn weights_for(&self, entry: &ProgramEntry) -> Result<&HostTensor> {
+        self.weights
+            .get(&entry.weights_file)
+            .ok_or_else(|| anyhow!("weights not prepared for {}", entry.key()))
+    }
+
+    /// Execute a prepared program. `args` must match `entry.inputs`
+    /// (including the leading weights buffer).
+    pub fn execute(
+        &self,
+        entry: &ProgramEntry,
+        args: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let exe = self
+            .executables
+            .get(&entry.key())
+            .ok_or_else(|| anyhow!("program {} not prepared", entry.key()))?;
+        if args.len() != entry.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} args, got {}",
+                entry.key(),
+                entry.inputs.len(),
+                args.len()
+            ));
+        }
+        for (a, spec) in args.iter().zip(&entry.inputs) {
+            if !a.matches(spec) {
+                return Err(anyhow!(
+                    "{}: arg {} expects {:?} {:?}, got {:?}",
+                    entry.key(),
+                    spec.name,
+                    spec.dtype,
+                    spec.shape,
+                    a.shape()
+                ));
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let lit = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unpack the tuple
+        let parts = lit.to_tuple()?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Hot-path execute: the weights literal comes from the prepared
+    /// cache (no per-call conversion); only `rest` is converted.
+    pub fn execute_cached(
+        &self,
+        entry: &ProgramEntry,
+        rest: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let exe = self
+            .executables
+            .get(&entry.key())
+            .ok_or_else(|| anyhow!("program {} not prepared", entry.key()))?;
+        if rest.len() + 1 != entry.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} non-weight args, got {}",
+                entry.key(),
+                entry.inputs.len() - 1,
+                rest.len()
+            ));
+        }
+        for (a, spec) in rest.iter().zip(&entry.inputs[1..]) {
+            if !a.matches(spec) {
+                return Err(anyhow!(
+                    "{}: arg {} expects {:?} {:?}, got {:?}",
+                    entry.key(),
+                    spec.name,
+                    spec.dtype,
+                    spec.shape,
+                    a.shape()
+                ));
+            }
+        }
+        let wlit = self
+            .weight_literals
+            .get(&entry.weights_file)
+            .ok_or_else(|| anyhow!("weights not prepared for {}", entry.key()))?;
+        let mut literals: Vec<&xla::Literal> = Vec::with_capacity(rest.len() + 1);
+        let rest_lits: Vec<xla::Literal> =
+            rest.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        literals.push(wlit);
+        literals.extend(rest_lits.iter());
+        let result = exe.execute::<&xla::Literal>(&literals)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Convenience: prepare + execute with the cached weights literal.
+    pub fn run_with_weights(
+        &mut self,
+        manifest: &Manifest,
+        entry: &ProgramEntry,
+        rest: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        self.prepare(manifest, entry)?;
+        self.execute_cached(entry, rest)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_literal_round_trip() {
+        let t = HostTensor::F32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+        let ti = HostTensor::I32(vec![3], vec![7, 8, 9]);
+        let back = HostTensor::from_literal(&ti.to_literal().unwrap()).unwrap();
+        assert_eq!(back, ti);
+    }
+
+    #[test]
+    fn matches_checks_shape_and_dtype() {
+        let spec = ArgSpec {
+            name: "x".into(),
+            shape: vec![2, 2],
+            dtype: ArgDType::F32,
+        };
+        assert!(HostTensor::zeros(&[2, 2]).matches(&spec));
+        assert!(!HostTensor::zeros(&[2, 3]).matches(&spec));
+        assert!(!HostTensor::I32(vec![2, 2], vec![0; 4]).matches(&spec));
+    }
+}

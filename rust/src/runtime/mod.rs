@@ -1,0 +1,10 @@
+//! Runtime layer: AOT manifest parsing + PJRT execution engine.
+//!
+//! The serving coordinator and the integration tests go through this
+//! module; nothing above it touches the `xla` crate directly.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, HostTensor};
+pub use manifest::{ArgDType, ArgSpec, Golden, GoldenOutput, Manifest, ProgramEntry};

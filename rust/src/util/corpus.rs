@@ -1,0 +1,76 @@
+//! Synthetic text corpus — same template/word distribution as
+//! `python/compile/train.make_corpus` (different PRNG, same language), so
+//! rust-side evaluation sees held-out text from the training distribution
+//! and the serve demo can sample realistic prompts.
+
+use super::prng::Prng;
+
+pub const WORDS: [&str; 16] = [
+    "state", "space", "models", "scan", "mamba", "npu", "kernel", "mask",
+    "cumsum", "matmul", "vector", "chunk", "drain", "tile", "gate", "token",
+];
+
+pub const TEMPLATES: [&str; 5] = [
+    "the {a} {b} runs on the {c} .",
+    "a {a} maps the {b} to the {c} .",
+    "every {a} needs a {b} and a {c} .",
+    "{a} plus {b} gives {c} .",
+    "fast {a} , slow {b} , tiny {c} .",
+];
+
+/// One sentence from the corpus language.
+pub fn sentence(rng: &mut Prng) -> String {
+    let t = TEMPLATES[rng.below(TEMPLATES.len())];
+    let a = WORDS[rng.below(WORDS.len())];
+    let b = WORDS[rng.below(WORDS.len())];
+    let c = WORDS[rng.below(WORDS.len())];
+    t.replace("{a}", a).replace("{b}", b).replace("{c}", c)
+}
+
+/// A corpus of `n` sentences joined by spaces (held-out eval text).
+pub fn corpus(n: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Prng::new(seed);
+    let mut out = String::new();
+    for i in 0..n {
+        if i > 0 {
+            out.push(' ');
+        }
+        out.push_str(&sentence(&mut rng));
+    }
+    out.into_bytes()
+}
+
+/// A plausible prompt: a sentence prefix of 8..24 bytes.
+pub fn prompt(rng: &mut Prng) -> Vec<u8> {
+    let s = sentence(rng);
+    let len = 8 + rng.below(17.min(s.len().saturating_sub(7)));
+    s.as_bytes()[..len.min(s.len())].to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_ascii_and_deterministic() {
+        let a = corpus(50, 1);
+        let b = corpus(50, 1);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&c| c.is_ascii()));
+        assert!(a.len() > 500);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        assert_ne!(corpus(20, 1), corpus(20, 2));
+    }
+
+    #[test]
+    fn prompts_are_short_prefixes() {
+        let mut rng = Prng::new(7);
+        for _ in 0..50 {
+            let p = prompt(&mut rng);
+            assert!(p.len() >= 8 && p.len() <= 24, "{}", p.len());
+        }
+    }
+}

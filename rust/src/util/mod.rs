@@ -1,0 +1,19 @@
+//! Small self-contained utilities the rest of the crate builds on.
+//!
+//! The build environment is fully offline with only the `xla` crate's
+//! dependency closure vendored, so the usual ecosystem crates (rand,
+//! criterion, proptest, serde) are reimplemented here at the scale this
+//! project needs: a seedable PRNG, streaming statistics and latency
+//! histograms, an ASCII table printer for the bench harnesses, and a
+//! miniature property-testing framework.
+
+pub mod corpus;
+pub mod json;
+pub mod prng;
+pub mod quickcheck;
+pub mod stats;
+pub mod table;
+
+pub use prng::Prng;
+pub use stats::{percentile, LatencyHistogram, Summary};
+pub use table::Table;

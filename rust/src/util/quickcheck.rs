@@ -1,0 +1,149 @@
+//! Miniature property-testing framework (proptest is not vendored).
+//!
+//! `check` runs a property over `n` random cases drawn from a generator;
+//! on failure it greedily shrinks the failing case with caller-provided
+//! shrinkers before panicking with the minimal reproduction and the seed,
+//! so failures are replayable (`XAMBA_QC_SEED=<n>` overrides the seed).
+
+use super::prng::Prng;
+
+/// Number of cases per property unless overridden.
+pub const DEFAULT_CASES: usize = 64;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let seed = std::env::var("XAMBA_QC_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xA1B2C3);
+        Self { cases: DEFAULT_CASES, seed, max_shrink_steps: 200 }
+    }
+}
+
+/// Run `prop` on `cases` inputs from `gen`; shrink failures via `shrink`.
+///
+/// `shrink` returns candidate *smaller* inputs; the first one that still
+/// fails is adopted, repeating until fixpoint or the step budget runs out.
+pub fn check_with<T, G, S, P>(cfg: &Config, mut gen: G, shrink: S, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Prng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Prng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            // greedy shrink
+            let mut best = input.clone();
+            let mut best_msg = first_msg;
+            let mut steps = 0;
+            'outer: while steps < cfg.max_shrink_steps {
+                for cand in shrink(&best) {
+                    steps += 1;
+                    if let Err(msg) = prop(&cand) {
+                        best = cand;
+                        best_msg = msg;
+                        continue 'outer;
+                    }
+                    if steps >= cfg.max_shrink_steps {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {seed}):\n  input: {best:?}\n  error: {best_msg}",
+                seed = cfg.seed,
+            );
+        }
+    }
+}
+
+/// `check_with` with default config and no shrinking.
+pub fn check<T, G, P>(gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Prng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    check_with(&Config::default(), gen, |_| Vec::new(), prop);
+}
+
+/// Shrinker for a dimension-like usize: halves and decrements.
+pub fn shrink_dim(n: usize, min: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    if n > min {
+        out.push(min.max(n / 2));
+        out.push(n - 1);
+    }
+    out.dedup();
+    out
+}
+
+/// Assert two f32 slices are elementwise close (returns Err for `check`).
+pub fn assert_close(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!("idx {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(|r| r.below(100), |&n| {
+            if n < 100 { Ok(()) } else { Err("out of range".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(|r| r.below(10), |&n| {
+            if n < 5 { Ok(()) } else { Err(format!("{n} >= 5")) }
+        });
+    }
+
+    #[test]
+    fn shrink_finds_smaller_counterexample() {
+        // property "n < 50" fails for n >= 50; shrinker should land near 50
+        let cfg = Config { cases: 200, seed: 1, max_shrink_steps: 500 };
+        let result = std::panic::catch_unwind(|| {
+            check_with(
+                &cfg,
+                |r| r.below(1000),
+                |&n| shrink_dim(n, 0),
+                |&n| if n < 50 { Ok(()) } else { Err("too big".into()) },
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // the minimal counterexample is exactly 50
+        assert!(msg.contains("input: 50"), "shrunk message: {msg}");
+    }
+
+    #[test]
+    fn assert_close_catches_mismatch() {
+        assert!(assert_close(&[1.0], &[1.0001], 1e-3, 0.0).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3, 0.0).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3, 0.0).is_err());
+    }
+}

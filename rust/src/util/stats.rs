@@ -1,0 +1,192 @@
+//! Streaming statistics and latency histograms for benches and metrics.
+
+/// Summary statistics over a sample of f64 values.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute a full summary (sorts a copy of the data).
+    pub fn of(xs: &[f64]) -> Self {
+        if xs.is_empty() {
+            return Self::default();
+        }
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        Self {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile(&sorted, 50.0),
+            p90: percentile(&sorted, 90.0),
+            p99: percentile(&sorted, 99.0),
+        }
+    }
+}
+
+/// Percentile of an ascending-sorted slice by linear interpolation.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Log-bucketed latency histogram (~4 % relative resolution), constant
+/// memory, lock-free-friendly (callers wrap in a mutex or per-thread copy).
+///
+/// Buckets span 1 µs .. ~70 s; used by the coordinator's metrics and the
+/// bench harness for p50/p99 reporting without storing every sample.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum_us: f64,
+}
+
+const BUCKETS_PER_DECADE: usize = 54; // ln-spaced, ~4.35% per step
+const DECADES: usize = 8; // 1us .. 1e8us
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; BUCKETS_PER_DECADE * DECADES],
+            total: 0,
+            sum_us: 0.0,
+        }
+    }
+
+    fn bucket(us: f64) -> usize {
+        if us <= 1.0 {
+            return 0;
+        }
+        let idx = (us.ln() / 10f64.ln() * BUCKETS_PER_DECADE as f64) as usize;
+        idx.min(BUCKETS_PER_DECADE * DECADES - 1)
+    }
+
+    fn bucket_value(idx: usize) -> f64 {
+        10f64.powf((idx as f64 + 0.5) / BUCKETS_PER_DECADE as f64)
+    }
+
+    /// Record one latency observation in microseconds.
+    pub fn record_us(&mut self, us: f64) {
+        self.counts[Self::bucket(us)] += 1;
+        self.total += 1;
+        self.sum_us += us;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_us / self.total as f64
+        }
+    }
+
+    /// Approximate percentile (bucket midpoint), in microseconds.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * self.total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return Self::bucket_value(i);
+            }
+        }
+        Self::bucket_value(self.counts.len() - 1)
+    }
+
+    /// Merge another histogram into this one (per-worker aggregation).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_us += other.sum_us;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_values() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 50.0) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 100.0), 10.0);
+    }
+
+    #[test]
+    fn histogram_percentiles_within_resolution() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000 {
+            h.record_us(i as f64);
+        }
+        let p50 = h.percentile_us(50.0);
+        assert!((p50 - 500.0).abs() / 500.0 < 0.06, "p50 {p50}");
+        let p99 = h.percentile_us(99.0);
+        assert!((p99 - 990.0).abs() / 990.0 < 0.06, "p99 {p99}");
+        assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn histogram_merge_adds_counts() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record_us(10.0);
+        b.record_us(100.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+
+    #[test]
+    fn empty_summary_is_zero() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+}

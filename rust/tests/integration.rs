@@ -1,0 +1,257 @@
+//! Cross-language integration tests: the rust IR interpreter and the PJRT
+//! runtime must reproduce the numbers python recorded in golden.json for
+//! the trained tiny models. Requires `make artifacts` to have run.
+
+use xamba::config::presets;
+use xamba::graph::Tensor;
+use xamba::models::{self, params};
+use xamba::passes::{actiba::ActibaPass, cumba::CumbaPass, reduba::RedubaPass, Pass};
+use xamba::runtime::{Engine, Golden, HostTensor, Manifest};
+
+const DIR: &str = "artifacts";
+
+fn golden() -> Golden {
+    Golden::load(DIR).expect("golden.json missing — run `make artifacts`")
+}
+
+fn manifest() -> Manifest {
+    Manifest::load(DIR).expect("manifest.json missing — run `make artifacts`")
+}
+
+/// Assemble interpreter inputs for a full-LM prefill graph: parameters
+/// sliced from the weights bin (spec order), then the token ids.
+fn interp_inputs(shape: &xamba::config::ModelShape, tokens: &[i32]) -> Vec<Tensor> {
+    let spec = params::full_spec(shape);
+    let buf = params::load_f32_bin(&format!("{DIR}/weights_{}.bin", shape.name))
+        .expect("weights bin");
+    assert_eq!(buf.len(), spec.total());
+    let mut inputs: Vec<Tensor> = spec
+        .entries
+        .iter()
+        .map(|e| params::extract_or_panic(&spec, &buf, &e.name))
+        .collect();
+    inputs.push(Tensor::i32(vec![tokens.len()], tokens.to_vec()));
+    inputs
+}
+
+/// The rust interpreter running the IR graph must match python's jax
+/// output for the same trained weights (last-position logits).
+fn check_interp_matches_golden(model: &str) {
+    let shape = presets::model_by_name(model).unwrap();
+    let g = golden();
+    let key = format!("{model}.baseline.prefill");
+    let outs = g.outputs(&key).expect("golden entry");
+    let tokens = g.tokens(&key).expect("golden tokens");
+    let graph = models::build_prefill(&shape, tokens.len());
+    let results = xamba::interp::run(&graph, &interp_inputs(&shape, &tokens)).unwrap();
+    // graph emits (T, V); golden recorded the last position (V,)
+    let logits = results[0].as_f32();
+    let v = shape.vocab_size;
+    let last = &logits[(tokens.len() - 1) * v..];
+    let want = &outs[0];
+    for (i, (&got, &exp)) in last.iter().zip(&want.head).enumerate() {
+        assert!(
+            (got - exp).abs() < 2e-2 + 2e-3 * exp.abs(),
+            "{model} logit[{i}]: rust {got} vs python {exp}"
+        );
+    }
+    let sum: f64 = last.iter().map(|&x| x as f64).sum();
+    assert!(
+        (sum - want.sum).abs() < 0.05 * want.sum.abs().max(10.0),
+        "{model} logit sum: rust {sum} vs python {}",
+        want.sum
+    );
+}
+
+#[test]
+fn interp_matches_python_tiny_mamba() {
+    check_interp_matches_golden("tiny-mamba");
+}
+
+#[test]
+fn interp_matches_python_tiny_mamba2() {
+    check_interp_matches_golden("tiny-mamba2");
+}
+
+/// The XAMBA passes must preserve full-model semantics on the trained
+/// weights (CumBA/ReduBA exactly; ActiBA within PLU tolerance).
+#[test]
+fn passes_preserve_full_model_logits() {
+    let shape = presets::tiny_mamba2();
+    let g = golden();
+    let key = "tiny-mamba2.baseline.prefill";
+    let tokens = g.tokens(key).expect("tokens");
+    let graph = models::build_prefill(&shape, tokens.len());
+    let inputs = interp_inputs(&shape, &tokens);
+    let base = xamba::interp::run(&graph, &inputs).unwrap();
+
+    let exact = RedubaPass.apply(&CumbaPass.apply(&graph));
+    let r = xamba::interp::run(&exact, &inputs).unwrap();
+    for (a, b) in base[0].as_f32().iter().zip(r[0].as_f32()) {
+        assert!((a - b).abs() < 1e-3, "cumba+reduba drift: {a} vs {b}");
+    }
+
+    let approx = ActibaPass::default().apply(&exact);
+    let r2 = xamba::interp::run(&approx, &inputs).unwrap();
+    let max: f32 = base[0]
+        .as_f32()
+        .iter()
+        .zip(r2[0].as_f32())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(max < 1.0, "actiba logit drift too large: {max}");
+    assert!(max > 0.0, "actiba suspiciously exact");
+}
+
+/// PJRT execution of the AOT artifacts must match python's outputs —
+/// the full L2 -> HLO text -> rust runtime path.
+fn check_pjrt_matches_golden(model: &str, variant: &str) {
+    let m = manifest();
+    let g = golden();
+    let entry = m.find(model, variant, "prefill").expect("manifest entry");
+    let key = format!("{model}.{variant}.prefill");
+    let want = &g.outputs(&key).expect("golden")[0];
+    let tokens = g.tokens(&key).expect("tokens");
+    let shape = &entry.shape;
+
+    let mut engine = Engine::cpu().expect("pjrt cpu client");
+    let conv = HostTensor::zeros(&entry.inputs[2].shape);
+    let ssm = HostTensor::zeros(&entry.inputs[3].shape);
+    let tok = HostTensor::I32(vec![tokens.len()], tokens.clone());
+    let outs = engine
+        .run_with_weights(&m, entry, &[tok, conv, ssm])
+        .expect("execute");
+    assert_eq!(outs[0].shape(), &[shape.vocab_size]);
+    for (i, (&got, &exp)) in outs[0].f32_data().iter().zip(&want.head).enumerate() {
+        assert!(
+            (got - exp).abs() < 1e-3 + 1e-4 * exp.abs(),
+            "{key} logit[{i}]: pjrt {got} vs python {exp}"
+        );
+    }
+    let sum: f64 = outs[0].f32_data().iter().map(|&x| x as f64).sum();
+    assert!((sum - want.sum).abs() < 0.01 * want.sum.abs().max(10.0));
+}
+
+#[test]
+fn pjrt_matches_python_baseline() {
+    check_pjrt_matches_golden("tiny-mamba", "baseline");
+}
+
+#[test]
+fn pjrt_matches_python_xamba_variant() {
+    // the Pallas-kernel variant (CumBA/ReduBA/ActiBA inside the HLO)
+    check_pjrt_matches_golden("tiny-mamba", "xamba");
+    check_pjrt_matches_golden("tiny-mamba2", "xamba");
+}
+
+/// Decode must continue exactly from prefill state: run prefill via PJRT,
+/// feed its states into decode_b1, and check the step against golden.
+#[test]
+fn pjrt_prefill_then_decode_roundtrip() {
+    let m = manifest();
+    let g = golden();
+    let model = "tiny-mamba";
+    let pre = m.find(model, "baseline", "prefill").unwrap();
+    let dec = m.find(model, "baseline", "decode_b1").unwrap();
+    let tokens = g.tokens(&format!("{model}.baseline.prefill")).unwrap();
+
+    let mut engine = Engine::cpu().unwrap();
+    let conv = HostTensor::zeros(&pre.inputs[2].shape);
+    let ssm = HostTensor::zeros(&pre.inputs[3].shape);
+    let tok = HostTensor::I32(vec![tokens.len()], tokens.clone());
+    let outs = engine.run_with_weights(&m, pre, &[tok, conv, ssm]).unwrap();
+    let (logits, conv1, ssm1) = (&outs[0], &outs[1], &outs[2]);
+
+    // greedy next token from prefill logits
+    let next = logits
+        .f32_data()
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0 as i32;
+
+    // decode_b1 expects batch-leading shapes (1, ...)
+    let with_batch = |t: &HostTensor| -> HostTensor {
+        let mut s = vec![1usize];
+        s.extend_from_slice(t.shape());
+        HostTensor::F32(s, t.f32_data().to_vec())
+    };
+    let outs2 = engine
+        .run_with_weights(
+            &m,
+            dec,
+            &[
+                HostTensor::I32(vec![1, 1], vec![next]),
+                with_batch(conv1),
+                with_batch(ssm1),
+            ],
+        )
+        .unwrap();
+    assert_eq!(outs2[0].shape(), &[1, 256]);
+    // the decoded distribution must be finite and non-degenerate
+    let l = outs2[0].f32_data();
+    assert!(l.iter().all(|x| x.is_finite()));
+    let mx = l.iter().cloned().fold(f32::MIN, f32::max);
+    let mn = l.iter().cloned().fold(f32::MAX, f32::min);
+    assert!(mx - mn > 1.0, "flat logits");
+}
+
+/// Full serving stack smoke test: coordinator -> PJRT -> trained model,
+/// concurrent requests with batching, streaming included.
+#[test]
+fn serving_stack_end_to_end() {
+    use xamba::config::ServeConfig;
+    use xamba::coordinator::{start_pjrt, GenParams, StreamEvent};
+
+    let cfg = ServeConfig {
+        model: "tiny-mamba".into(),
+        variant: "xamba".into(),
+        max_slots: 8,
+        ..Default::default()
+    };
+    let server = start_pjrt(&cfg).expect("start server");
+
+    // concurrent final-mode requests
+    let rxs: Vec<_> = (0..4)
+        .map(|i| {
+            server.submit(
+                b"the state space ",
+                GenParams {
+                    max_new_tokens: 12,
+                    temperature: if i % 2 == 0 { 0.0 } else { 0.7 },
+                    seed: i,
+                    ..Default::default()
+                },
+            )
+        })
+        .collect();
+    for rx in rxs {
+        let r = rx
+            .recv_timeout(std::time::Duration::from_secs(60))
+            .expect("response");
+        assert_eq!(r.generated.len(), 12);
+        assert!(r.generated.iter().all(|&b| b.is_ascii()));
+    }
+
+    // streaming request: incremental tokens then Done
+    let rx = server.submit_streaming(
+        b"every kernel ",
+        GenParams { max_new_tokens: 6, ..Default::default() },
+    );
+    let mut streamed = Vec::new();
+    loop {
+        match rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap() {
+            StreamEvent::Token(t) => streamed.push(t),
+            StreamEvent::Done(r) => {
+                assert_eq!(r.generated, streamed);
+                break;
+            }
+        }
+    }
+    assert_eq!(streamed.len(), 6);
+
+    let m = server.shutdown();
+    assert_eq!(m.completed, 5);
+    assert!(m.tokens_out >= 4 * 12 + 6);
+}

@@ -1,0 +1,111 @@
+//! Randomized pass-pipeline fuzzing: generate random op chains, apply the
+//! full XAMBA pipeline (CumBA -> ReduBA -> ActiBA), and differentially
+//! verify against the unoptimized graph. This is the machine-checked
+//! version of the paper's implicit claim that the conversion-time
+//! rewrites are semantics-preserving on ANY graph, not just Mamba's.
+
+use xamba::graph::{Graph, NodeId};
+use xamba::passes::{
+    actiba::ActibaPass, cumba::CumbaPass, reduba::RedubaPass, verify, Pass,
+};
+use xamba::util::Prng;
+
+/// Grow a random graph: start from a (m, n) input, apply a random chain
+/// of shape-preserving or shape-reducing ops, output everything left.
+fn random_graph(rng: &mut Prng, case: usize) -> Graph {
+    let mut g = Graph::new(&format!("fuzz{case}"));
+    let m = 2 + rng.below(10);
+    let n = 2 + rng.below(10);
+    let x = g.input("x", vec![m, n]);
+    let mut frontier: Vec<NodeId> = vec![x];
+    let ops = 3 + rng.below(8);
+    for i in 0..ops {
+        let src = frontier[rng.below(frontier.len())];
+        let shape = g.shape(src).to_vec();
+        let nm = format!("op{i}");
+        let new = match rng.below(8) {
+            0 if shape.len() == 2 => g.cumsum(src, rng.below(2), &nm),
+            1 if shape.len() == 2 => {
+                // reduce, then keep the result around (rank drops)
+                g.reduce_sum(src, rng.below(shape.len()), &nm)
+            }
+            2 => g.silu(src, &nm),
+            3 => g.softplus(src, &nm),
+            4 => g.exp(src, &nm),
+            5 => {
+                let half = g.const_scalar(&format!("{nm}.c"), 0.5);
+                g.mul(src, half, &nm)
+            }
+            6 if shape.len() == 2 => {
+                // square matmul keeps things composable
+                let k = shape[1];
+                let w_vals: Vec<f32> =
+                    (0..k * k).map(|_| rng.normal() * 0.3).collect();
+                let w = g.constant(
+                    &format!("{nm}.w"),
+                    xamba::graph::Tensor::f32(vec![k, k], w_vals),
+                );
+                g.matmul(src, w, &nm)
+            }
+            _ => g.add(src, src, &nm),
+        };
+        frontier.push(new);
+    }
+    for (i, &f) in frontier.iter().enumerate().skip(1) {
+        if i % 2 == 1 || i == frontier.len() - 1 {
+            g.output(f);
+        }
+    }
+    g
+}
+
+#[test]
+fn full_pipeline_preserves_semantics_on_random_graphs() {
+    let mut rng = Prng::new(0xF0_22);
+    for case in 0..40 {
+        let g = random_graph(&mut rng, case);
+        let exact = RedubaPass.apply(&CumbaPass.apply(&g));
+        let r = verify::differential(&g, &exact, 2, case as u64, 0.5)
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert!(
+            r.max_abs_err < 1e-2,
+            "case {case}: exact rewrites drifted {:.3e}",
+            r.max_abs_err
+        );
+
+        // ActiBA is approximate: just require boundedness + same shape
+        let approx = ActibaPass::default().apply(&exact);
+        let r2 = verify::differential(&g, &approx, 1, case as u64, 0.5)
+            .unwrap_or_else(|e| panic!("case {case} actiba: {e}"));
+        assert!(
+            r2.max_abs_err.is_finite(),
+            "case {case}: actiba produced non-finite drift"
+        );
+    }
+}
+
+#[test]
+fn pipeline_eliminates_all_rewritable_ops() {
+    let mut rng = Prng::new(42);
+    for case in 0..20 {
+        let g = random_graph(&mut rng, case);
+        let opt = ActibaPass::default().apply(&RedubaPass.apply(&CumbaPass.apply(&g)));
+        let c = xamba::graph::Census::of(&opt);
+        assert_eq!(c.get("CumSum"), 0, "case {case}");
+        assert_eq!(c.get("ReduceSum"), 0, "case {case}");
+        assert_eq!(c.get("Swish"), 0, "case {case}");
+        assert_eq!(c.get("SoftPlus"), 0, "case {case}");
+    }
+}
+
+#[test]
+fn pipeline_order_does_not_matter_for_exact_passes() {
+    let mut rng = Prng::new(9);
+    for case in 0..10 {
+        let g = random_graph(&mut rng, case);
+        let ab = RedubaPass.apply(&CumbaPass.apply(&g));
+        let ba = CumbaPass.apply(&RedubaPass.apply(&g));
+        let r = verify::differential(&ab, &ba, 2, case as u64, 0.5).unwrap();
+        assert!(r.max_abs_err < 1e-4, "case {case}: order-dependent result");
+    }
+}
