@@ -1,27 +1,28 @@
 //! Debug harness: run individually-lowered Pallas kernel HLOs (dumped to
-//! /tmp by a scratch python script) on the rust PJRT client and compare
+//! /tmp by a scratch python script) on the rust PJRT engine and compare
 //! against python's outputs. Used to isolate HLO-interchange issues.
+//!
+//! Goes through `runtime::Engine` + `HostTensor` like every other
+//! consumer — nothing above the runtime layer touches the `xla` crate.
 
+use xamba::runtime::{Engine, HostTensor};
 use xamba::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
     let meta = Json::parse(&std::fs::read_to_string("/tmp/k_meta.json")?)
         .map_err(|e| anyhow::anyhow!(e))?;
-    let client = xla::PjRtClient::cpu()?;
+    let engine = Engine::cpu()?;
     let Json::Obj(cases) = &meta else { panic!() };
     for (name, case) in cases {
-        let proto =
-            xla::HloModuleProto::from_text_file(&format!("/tmp/k_{name}.hlo.txt"))?;
-        let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
-        let mut lits = Vec::new();
+        let mut args = Vec::new();
         for a in case.get("args").unwrap().as_arr().unwrap() {
-            let shape: Vec<i64> = a
+            let shape: Vec<usize> = a
                 .get("shape")
                 .unwrap()
                 .as_arr()
                 .unwrap()
                 .iter()
-                .map(|d| d.as_f64().unwrap() as i64)
+                .map(|d| d.as_f64().unwrap() as usize)
                 .collect();
             let data: Vec<f32> = a
                 .get("data")
@@ -31,16 +32,15 @@ fn main() -> anyhow::Result<()> {
                 .iter()
                 .map(|x| x.as_f64().unwrap() as f32)
                 .collect();
-            lits.push(xla::Literal::vec1(&data).reshape(&shape)?);
+            args.push(HostTensor::F32(shape, data));
         }
-        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        for (i, (part, want)) in parts
+        let outs = engine.run_hlo_file(&format!("/tmp/k_{name}.hlo.txt"), &args)?;
+        for (i, (part, want)) in outs
             .iter()
             .zip(case.get("outs").unwrap().as_arr().unwrap())
             .enumerate()
         {
-            let got: Vec<f32> = part.to_vec()?;
+            let got = part.f32_data();
             let head: Vec<f32> = want
                 .get("head")
                 .unwrap()

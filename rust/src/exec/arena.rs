@@ -1,0 +1,105 @@
+//! Liveness-driven buffer arena for the planned executor.
+//!
+//! Plan compilation assigns every intermediate value to a numbered slot
+//! via [`SlotAlloc`]; slots are released at a value's last use and reused
+//! by later values, so the arena footprint tracks the graph's *live-range
+//! width*, not its node count. The [`Arena`] itself is allocated once per
+//! plan and reused across every `execute` call — steady-state execution
+//! touches the heap zero times per node.
+
+/// Compile-time slot assignment: first-fit reuse off a free list, with
+/// each slot's capacity grown to the largest value ever placed in it.
+pub(crate) struct SlotAlloc {
+    pub sizes: Vec<usize>,
+    free: Vec<usize>,
+}
+
+impl SlotAlloc {
+    pub fn new() -> Self {
+        Self { sizes: Vec::new(), free: Vec::new() }
+    }
+
+    /// Assign a slot able to hold `numel` elements.
+    pub fn alloc(&mut self, numel: usize) -> usize {
+        if let Some(s) = self.free.pop() {
+            self.sizes[s] = self.sizes[s].max(numel);
+            s
+        } else {
+            self.sizes.push(numel);
+            self.sizes.len() - 1
+        }
+    }
+
+    /// Return a slot to the free list (the value's last use has passed).
+    pub fn release(&mut self, slot: usize) {
+        debug_assert!(!self.free.contains(&slot), "double release of slot {slot}");
+        self.free.push(slot);
+    }
+}
+
+/// The runtime buffers backing the slots — owned by the plan, reused
+/// across `execute` calls.
+pub struct Arena {
+    pub(crate) f: Vec<Vec<f32>>,
+    pub(crate) i: Vec<Vec<i32>>,
+}
+
+impl Arena {
+    pub(crate) fn from_sizes(f_sizes: &[usize], i_sizes: &[usize]) -> Self {
+        Self {
+            f: f_sizes.iter().map(|&n| vec![0.0f32; n]).collect(),
+            i: i_sizes.iter().map(|&n| vec![0i32; n]).collect(),
+        }
+    }
+
+    /// Move an f32 buffer out (so the kernel can hold `&mut` to it while
+    /// reading other slots); pair with [`Arena::put_f`].
+    pub(crate) fn take_f(&mut self, slot: usize) -> Vec<f32> {
+        std::mem::take(&mut self.f[slot])
+    }
+
+    pub(crate) fn put_f(&mut self, slot: usize, buf: Vec<f32>) {
+        self.f[slot] = buf;
+    }
+
+    pub(crate) fn take_i(&mut self, slot: usize) -> Vec<i32> {
+        std::mem::take(&mut self.i[slot])
+    }
+
+    pub(crate) fn put_i(&mut self, slot: usize, buf: Vec<i32>) {
+        self.i[slot] = buf;
+    }
+
+    /// Total bytes held by the arena (footprint reporting).
+    pub fn bytes(&self) -> usize {
+        self.f.iter().map(|b| b.len() * 4).sum::<usize>()
+            + self.i.iter().map(|b| b.len() * 4).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slots_are_reused_after_release() {
+        let mut a = SlotAlloc::new();
+        let s0 = a.alloc(16);
+        let s1 = a.alloc(8);
+        assert_ne!(s0, s1);
+        a.release(s0);
+        let s2 = a.alloc(32); // reuses s0, growing it
+        assert_eq!(s2, s0);
+        assert_eq!(a.sizes[s0], 32);
+        assert_eq!(a.sizes.len(), 2);
+    }
+
+    #[test]
+    fn arena_buffers_match_sizes() {
+        let a = Arena::from_sizes(&[4, 2], &[3]);
+        assert_eq!(a.f.len(), 2);
+        assert_eq!(a.f[0].len(), 4);
+        assert_eq!(a.i[0].len(), 3);
+        assert_eq!(a.bytes(), (4 + 2 + 3) * 4);
+    }
+}

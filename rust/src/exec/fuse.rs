@@ -1,0 +1,273 @@
+//! Peephole fusion of elementwise chains.
+//!
+//! A chain like `Binary -> Unary -> Plu` whose intermediates have exactly
+//! one consumer collapses into a single pass over the data: each output
+//! element is produced by composing the per-element stages, so the
+//! intermediate tensors are never materialized. Stage arithmetic reuses
+//! the exact scalar helpers of the unfused kernels, so fusion is bitwise
+//! neutral.
+
+use std::sync::Arc;
+
+use crate::graph::op::{BinKind, Op};
+use crate::graph::tensor::DType;
+use crate::graph::{Graph, NodeId};
+use crate::plu::PluTable;
+
+use super::kernels::{apply_binary, apply_unary};
+
+/// One fused per-element stage.
+#[derive(Clone, Debug)]
+pub enum ElemStage {
+    Unary(crate::graph::op::UnKind),
+    /// PLU lookup with the reciprocal step precomputed; evaluation goes
+    /// through `PluTable::eval_premul`, the same inner `eval_slice`
+    /// uses, so fused and unfused stages pick identical segments.
+    Plu {
+        table: Arc<PluTable>,
+        inv_step: f32,
+        kmax: i64,
+    },
+    /// `x op c` with a compile-time scalar constant.
+    ScalarRight(BinKind, f32),
+    /// `c op x` (operand order preserved for Sub/Div).
+    ScalarLeft(BinKind, f32),
+}
+
+impl ElemStage {
+    fn plu(table: &Arc<PluTable>) -> ElemStage {
+        ElemStage::Plu {
+            table: table.clone(),
+            inv_step: 1.0 / table.step(),
+            kmax: table.num_segments() as i64 - 1,
+        }
+    }
+
+    /// Apply the stage to one element.
+    #[inline]
+    pub fn apply(&self, x: f32) -> f32 {
+        match self {
+            ElemStage::Unary(k) => apply_unary(*k, x),
+            ElemStage::Plu { table, inv_step, kmax } => {
+                table.eval_premul(x, *inv_step, *kmax)
+            }
+            ElemStage::ScalarRight(k, s) => apply_binary(*k, x, *s),
+            ElemStage::ScalarLeft(k, s) => apply_binary(*k, *s, x),
+        }
+    }
+}
+
+/// What feeds the first fused stage.
+#[derive(Clone, Debug)]
+pub enum ChainHead {
+    /// A single upstream value (the main input of the first stage node).
+    Value(NodeId),
+    /// A same-shape, no-broadcast binary combining two upstream values.
+    Binary(BinKind, NodeId, NodeId),
+}
+
+/// A detected chain: `nodes` in graph order; all but the last are
+/// absorbed (no slot, no step), the last carries the fused step.
+#[derive(Clone, Debug)]
+pub struct Chain {
+    pub nodes: Vec<NodeId>,
+    pub head: ChainHead,
+    pub stages: Vec<ElemStage>,
+}
+
+/// A scalar f32 constant's value, if `id` is one.
+fn const_scalar(g: &Graph, id: NodeId) -> Option<f32> {
+    let n = g.node(id);
+    if let Op::Const { .. } = n.op {
+        if let Some(v) = &n.value {
+            if v.numel() == 1 && v.dtype() == DType::F32 {
+                return Some(v.as_f32()[0]);
+            }
+        }
+    }
+    None
+}
+
+/// If `id` is a per-element stage over a single main input (same shape in
+/// and out), return (main input, stage).
+fn stage_of(g: &Graph, id: NodeId) -> Option<(NodeId, ElemStage)> {
+    let n = g.node(id);
+    if n.dtype != DType::F32 {
+        return None;
+    }
+    match &n.op {
+        Op::Unary(k) => Some((n.inputs[0], ElemStage::Unary(*k))),
+        Op::Plu { table, .. } => Some((n.inputs[0], ElemStage::plu(table))),
+        Op::Binary(k) => {
+            let (a, b) = (n.inputs[0], n.inputs[1]);
+            if let Some(s) = const_scalar(g, b) {
+                if g.shape(a) == n.shape.as_slice() {
+                    return Some((a, ElemStage::ScalarRight(*k, s)));
+                }
+            }
+            if let Some(s) = const_scalar(g, a) {
+                if g.shape(b) == n.shape.as_slice() {
+                    return Some((b, ElemStage::ScalarLeft(*k, s)));
+                }
+            }
+            None
+        }
+        _ => None,
+    }
+}
+
+/// A binary node whose operands both already have the output shape (no
+/// broadcast, so it can anchor a fused chain as a two-input head).
+fn binary_head(g: &Graph, id: NodeId) -> Option<(BinKind, NodeId, NodeId)> {
+    let n = g.node(id);
+    if n.dtype != DType::F32 {
+        return None;
+    }
+    if let Op::Binary(k) = n.op {
+        let (a, b) = (n.inputs[0], n.inputs[1]);
+        if g.shape(a) == n.shape.as_slice() && g.shape(b) == n.shape.as_slice() {
+            return Some((k, a, b));
+        }
+    }
+    None
+}
+
+/// Detect maximal fusable chains among the live nodes. A node joins the
+/// chain after its producer only if the producer has exactly one (live)
+/// consumer and is not a graph output — absorbed intermediates must be
+/// invisible to the outside.
+pub fn find_chains(g: &Graph, live: &[bool]) -> Vec<Chain> {
+    let n = g.nodes.len();
+    let mut is_output = vec![false; n];
+    for &o in &g.outputs {
+        is_output[o] = true;
+    }
+    // live-consumer counts and (when unique) the consumer id
+    let mut count = vec![0usize; n];
+    let mut sole = vec![usize::MAX; n];
+    for node in &g.nodes {
+        if !live[node.id] {
+            continue;
+        }
+        for &i in &node.inputs {
+            count[i] += 1;
+            sole[i] = node.id;
+        }
+    }
+
+    let mut absorbed = vec![false; n];
+    let mut chains = Vec::new();
+    for id in 0..n {
+        if !live[id] || absorbed[id] {
+            continue;
+        }
+        if matches!(g.node(id).op, Op::Input { .. } | Op::Const { .. }) {
+            continue;
+        }
+        let (head, mut stages) = match stage_of(g, id) {
+            Some((main, st)) => (ChainHead::Value(main), vec![st]),
+            None => match binary_head(g, id) {
+                Some((k, a, b)) => (ChainHead::Binary(k, a, b), Vec::new()),
+                None => continue,
+            },
+        };
+        let mut nodes = vec![id];
+        let mut cur = id;
+        loop {
+            if is_output[cur] || count[cur] != 1 {
+                break;
+            }
+            let next = sole[cur];
+            match stage_of(g, next) {
+                Some((main, st)) if main == cur => {
+                    stages.push(st);
+                    nodes.push(next);
+                    cur = next;
+                }
+                _ => break,
+            }
+        }
+        if nodes.len() >= 2 {
+            for &m in &nodes {
+                absorbed[m] = true;
+            }
+            chains.push(Chain { nodes, head, stages });
+        }
+    }
+    chains
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    #[test]
+    fn unary_chain_is_detected() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![4]);
+        let a = g.silu(x, "a");
+        let b = g.exp(a, "b");
+        let half = g.const_scalar("h", 0.5);
+        let c = g.mul(b, half, "c");
+        g.output(c);
+        let chains = find_chains(&g, &g.live_set());
+        assert_eq!(chains.len(), 1);
+        assert_eq!(chains[0].nodes, vec![a, b, c]);
+        assert!(matches!(chains[0].head, ChainHead::Value(h) if h == x));
+        assert_eq!(chains[0].stages.len(), 3);
+    }
+
+    #[test]
+    fn multi_consumer_intermediate_blocks_fusion() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![4]);
+        let a = g.silu(x, "a");
+        let b = g.exp(a, "b");
+        let c = g.add(a, b, "c"); // `a` feeds two nodes -> b cannot absorb it
+        g.output(c);
+        let chains = find_chains(&g, &g.live_set());
+        // `c` is a valid binary head but has no stage after it; `a`/`b`
+        // cannot chain because a has two consumers
+        assert!(chains.iter().all(|ch| !ch.nodes.contains(&a) || ch.nodes[0] == a));
+        assert!(!chains.iter().any(|ch| ch.nodes == vec![a, b]));
+    }
+
+    #[test]
+    fn output_intermediate_blocks_fusion() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![4]);
+        let a = g.silu(x, "a");
+        let b = g.exp(a, "b");
+        g.output(a); // `a` is externally visible
+        g.output(b);
+        let chains = find_chains(&g, &g.live_set());
+        assert!(chains.is_empty());
+    }
+
+    #[test]
+    fn binary_head_chain() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![2, 2]);
+        let y = g.input("y", vec![2, 2]);
+        let s = g.add(x, y, "s");
+        let t = g.silu(s, "t");
+        g.output(t);
+        let chains = find_chains(&g, &g.live_set());
+        assert_eq!(chains.len(), 1);
+        assert!(matches!(chains[0].head, ChainHead::Binary(BinKind::Add, a, b) if a == x && b == y));
+        assert_eq!(chains[0].stages.len(), 1);
+    }
+
+    #[test]
+    fn broadcast_binary_does_not_head_a_chain() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![2, 2]);
+        let row = g.input("row", vec![1, 2]);
+        let s = g.add(x, row, "s"); // broadcast -> not fusable
+        let t = g.silu(s, "t");
+        g.output(t);
+        let chains = find_chains(&g, &g.live_set());
+        assert!(chains.is_empty());
+    }
+}

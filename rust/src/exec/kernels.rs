@@ -1,0 +1,430 @@
+//! Out-buffer operator kernels for the planned executor.
+//!
+//! Every kernel writes into a caller-provided slice (an arena slot), so
+//! steady-state execution performs no heap allocation. Loop structures
+//! deliberately mirror the reference evaluator in [`super::naive`]
+//! operation-for-operation, so planned and naive execution agree
+//! *bitwise* — the differential suite in `tests/exec_differential.rs`
+//! holds them to that.
+
+use crate::graph::op::{BinKind, UnKind};
+use crate::plu::{self, PluTable};
+
+/// Scalar unary application — shared by the naive evaluator, the planned
+/// unary kernel, and fused-chain stages (identity of results by
+/// construction).
+#[inline]
+pub fn apply_unary(kind: UnKind, v: f32) -> f32 {
+    match kind {
+        UnKind::Neg => -v,
+        UnKind::Exp => v.exp(),
+        UnKind::Log => v.ln(),
+        UnKind::Sqrt => v.sqrt(),
+        UnKind::Abs => v.abs(),
+        UnKind::Recip => 1.0 / v,
+        UnKind::Relu => v.max(0.0),
+        UnKind::Sigmoid => plu::sigmoid_f32(v),
+        UnKind::SiLU => v * plu::sigmoid_f32(v),
+        UnKind::Softplus => plu::softplus_f32(v),
+        UnKind::Tanh => v.tanh(),
+    }
+}
+
+/// Scalar binary application — shared like [`apply_unary`].
+#[inline]
+pub fn apply_binary(kind: BinKind, x: f32, y: f32) -> f32 {
+    match kind {
+        BinKind::Add => x + y,
+        BinKind::Sub => x - y,
+        BinKind::Mul => x * y,
+        BinKind::Div => x / y,
+        BinKind::Max => x.max(y),
+    }
+}
+
+// --- argument views -------------------------------------------------------------
+
+/// Borrowed, dtype-tagged tensor payload.
+#[derive(Clone, Copy)]
+pub enum DataRef<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+/// Borrowed tensor: shape + payload. What planned kernels consume.
+#[derive(Clone, Copy)]
+pub struct View<'a> {
+    pub shape: &'a [usize],
+    pub data: DataRef<'a>,
+}
+
+impl<'a> View<'a> {
+    pub fn f32(&self) -> &'a [f32] {
+        match self.data {
+            DataRef::F32(v) => v,
+            DataRef::I32(_) => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn i32(&self) -> &'a [i32] {
+        match self.data {
+            DataRef::I32(v) => v,
+            DataRef::F32(_) => panic!("expected i32 tensor"),
+        }
+    }
+}
+
+// --- elementwise ----------------------------------------------------------------
+
+/// Precomputed broadcast classification of a binary op (compile-time).
+#[derive(Clone, Debug)]
+pub enum BinMode {
+    /// Both operands already have the output shape.
+    Elementwise,
+    /// `tensor op scalar` — right operand has one element.
+    ScalarRight,
+    /// `scalar op tensor` — left operand has one element.
+    ScalarLeft,
+    /// General broadcast: per-output-dim input strides (0 on broadcast
+    /// dims), precomputed at plan time.
+    Strided { sa: Vec<usize>, sb: Vec<usize> },
+}
+
+/// Per-output-dim strides of a broadcast input: 0 where the input dim is
+/// 1 (or missing), the row-major stride otherwise. Matches the reference
+/// evaluator's `bcast_index` arithmetic exactly.
+pub fn bcast_strides(out_shape: &[usize], in_shape: &[usize]) -> Vec<usize> {
+    let st = crate::graph::tensor::strides(in_shape);
+    let off = out_shape.len() - in_shape.len();
+    let mut r = vec![0usize; out_shape.len()];
+    for (d, &s) in in_shape.iter().enumerate() {
+        r[off + d] = if s == 1 { 0 } else { st[d] };
+    }
+    r
+}
+
+pub fn binary_out(
+    kind: BinKind,
+    mode: &BinMode,
+    a: &[f32],
+    b: &[f32],
+    out_shape: &[usize],
+    out: &mut [f32],
+    idx: &mut Vec<usize>,
+) {
+    match mode {
+        BinMode::Elementwise => {
+            for i in 0..out.len() {
+                out[i] = apply_binary(kind, a[i], b[i]);
+            }
+        }
+        BinMode::ScalarRight => {
+            let s = b[0];
+            for i in 0..out.len() {
+                out[i] = apply_binary(kind, a[i], s);
+            }
+        }
+        BinMode::ScalarLeft => {
+            let s = a[0];
+            for i in 0..out.len() {
+                out[i] = apply_binary(kind, s, b[i]);
+            }
+        }
+        BinMode::Strided { sa, sb } => {
+            idx.clear();
+            idx.resize(out_shape.len(), 0);
+            for o in out.iter_mut() {
+                let mut ia = 0;
+                let mut ib = 0;
+                for (d, &i) in idx.iter().enumerate() {
+                    ia += i * sa[d];
+                    ib += i * sb[d];
+                }
+                *o = apply_binary(kind, a[ia], b[ib]);
+                for d in (0..idx.len()).rev() {
+                    idx[d] += 1;
+                    if idx[d] < out_shape[d] {
+                        break;
+                    }
+                    idx[d] = 0;
+                }
+            }
+        }
+    }
+}
+
+pub fn unary_out(kind: UnKind, x: &[f32], out: &mut [f32]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = apply_unary(kind, v);
+    }
+}
+
+pub fn plu_out(table: &PluTable, x: &[f32], out: &mut [f32]) {
+    table.eval_slice(x, out);
+}
+
+// --- matmul ---------------------------------------------------------------------
+
+/// Batched matmul into a zeroed output. `a_step`/`b_step` are the
+/// per-batch element offsets (0 when the operand is not batched).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_out(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    batch: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a_step: usize,
+    b_step: usize,
+) {
+    out.fill(0.0);
+    for bi in 0..batch {
+        let ao = bi * a_step;
+        let bo = bi * b_step;
+        let oo = bi * m * n;
+        for i in 0..m {
+            for kk in 0..k {
+                let av_ik = a[ao + i * k + kk];
+                if av_ik == 0.0 {
+                    continue;
+                }
+                let brow = bo + kk * n;
+                let orow = oo + i * n;
+                for j in 0..n {
+                    out[orow + j] += av_ik * b[brow + j];
+                }
+            }
+        }
+    }
+}
+
+// --- scans / reductions ---------------------------------------------------------
+
+pub fn cumsum_out(x: &[f32], out: &mut [f32], outer: usize, n_axis: usize, inner: usize) {
+    out.copy_from_slice(x);
+    for o in 0..outer {
+        for i in 0..inner {
+            let base = o * n_axis * inner + i;
+            for j in 1..n_axis {
+                out[base + j * inner] += out[base + (j - 1) * inner];
+            }
+        }
+    }
+}
+
+pub fn reduce_sum_out(
+    x: &[f32],
+    out: &mut [f32],
+    outer: usize,
+    n_axis: usize,
+    inner: usize,
+) {
+    out.fill(0.0);
+    for o in 0..outer {
+        for j in 0..n_axis {
+            let base = (o * n_axis + j) * inner;
+            let obase = o * inner;
+            for i in 0..inner {
+                out[obase + i] += x[base + i];
+            }
+        }
+    }
+}
+
+// --- gather / conv / norms ------------------------------------------------------
+
+pub fn gather_out(
+    data: &[f32],
+    indices: &[i32],
+    out: &mut [f32],
+    row: usize,
+    vocab: usize,
+) -> Result<(), String> {
+    for (r, &i) in indices.iter().enumerate() {
+        if i < 0 || i >= vocab as i32 {
+            return Err(format!("gather index {i} out of range 0..{vocab}"));
+        }
+        out[r * row..(r + 1) * row]
+            .copy_from_slice(&data[i as usize * row..(i as usize + 1) * row]);
+    }
+    Ok(())
+}
+
+pub fn conv1d_out(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    t: usize,
+    c: usize,
+    k: usize,
+) {
+    for ti in 0..t {
+        for ci in 0..c {
+            let mut acc = b[ci];
+            for ki in 0..k {
+                // causal: tap ki reads position ti - (k - 1 - ki)
+                let src = ti as isize - (k - 1 - ki) as isize;
+                if src >= 0 {
+                    acc += w[ki * c + ci] * x[src as usize * c + ci];
+                }
+            }
+            out[ti * c + ci] = acc;
+        }
+    }
+}
+
+pub fn rmsnorm_out(x: &[f32], w: &[f32], out: &mut [f32], rows: usize, d: usize, eps: f32) {
+    for r in 0..rows {
+        let row = &x[r * d..(r + 1) * d];
+        let ms = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        for i in 0..d {
+            out[r * d + i] = row[i] * inv * w[i];
+        }
+    }
+}
+
+pub fn softmax_out(x: &[f32], out: &mut [f32], outer: usize, n_axis: usize, inner: usize) {
+    for o in 0..outer {
+        for i in 0..inner {
+            let at = |j: usize| (o * n_axis + j) * inner + i;
+            let mut mx = f32::NEG_INFINITY;
+            for j in 0..n_axis {
+                mx = mx.max(x[at(j)]);
+            }
+            let mut z = 0.0;
+            for j in 0..n_axis {
+                let e = (x[at(j)] - mx).exp();
+                out[at(j)] = e;
+                z += e;
+            }
+            for j in 0..n_axis {
+                out[at(j)] /= z;
+            }
+        }
+    }
+}
+
+// --- layout ---------------------------------------------------------------------
+
+pub fn slice_out<T: Copy>(
+    x: &[T],
+    out: &mut [T],
+    outer: usize,
+    n_axis: usize,
+    inner: usize,
+    start: usize,
+    len: usize,
+) {
+    for o in 0..outer {
+        let src = (o * n_axis + start) * inner;
+        let dst = o * len * inner;
+        out[dst..dst + len * inner].copy_from_slice(&x[src..src + len * inner]);
+    }
+}
+
+/// Row-major copy (reshape).
+pub fn copy_out<T: Copy>(x: &[T], out: &mut [T]) {
+    out.copy_from_slice(x);
+}
+
+/// Strided gather copy: walks the output row-major, reading the input at
+/// the precomputed per-output-dim strides (transpose and broadcast).
+pub fn strided_copy_out(
+    x: &[f32],
+    out: &mut [f32],
+    out_shape: &[usize],
+    strides: &[usize],
+    idx: &mut Vec<usize>,
+) {
+    idx.clear();
+    idx.resize(out_shape.len(), 0);
+    for o in out.iter_mut() {
+        let mut lin = 0;
+        for (d, &i) in idx.iter().enumerate() {
+            lin += i * strides[d];
+        }
+        *o = x[lin];
+        for d in (0..out_shape.len()).rev() {
+            idx[d] += 1;
+            if idx[d] < out_shape[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_out_2d() {
+        let a = [1., 2., 3., 4., 5., 6.];
+        let b = [7., 8., 9., 10., 11., 12.];
+        let mut out = [0.0f32; 4];
+        matmul_out(&a, &b, &mut out, 1, 2, 3, 2, 0, 0);
+        assert_eq!(out, [58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn binary_out_strided_matches_scalar_path() {
+        // (2,2) * scalar via Strided must equal the ScalarRight fast path
+        let a = [1., 2., 3., 4.];
+        let b = [10.0f32];
+        let mut fast = [0.0f32; 4];
+        let mut slow = [0.0f32; 4];
+        let mut idx = Vec::new();
+        binary_out(BinKind::Mul, &BinMode::ScalarRight, &a, &b, &[2, 2], &mut fast, &mut idx);
+        let mode = BinMode::Strided {
+            sa: bcast_strides(&[2, 2], &[2, 2]),
+            sb: bcast_strides(&[2, 2], &[]),
+        };
+        binary_out(BinKind::Mul, &mode, &a, &b, &[2, 2], &mut slow, &mut idx);
+        assert_eq!(fast, slow);
+        assert_eq!(fast, [10., 20., 30., 40.]);
+    }
+
+    #[test]
+    fn scalar_left_is_not_commuted() {
+        // scalar - tensor must compute s - x, not x - s
+        let a = [10.0f32];
+        let b = [1., 2., 3., 4.];
+        let mut out = [0.0f32; 4];
+        let mut idx = Vec::new();
+        binary_out(BinKind::Sub, &BinMode::ScalarLeft, &a, &b, &[4], &mut out, &mut idx);
+        assert_eq!(out, [9., 8., 7., 6.]);
+    }
+
+    #[test]
+    fn cumsum_out_axis0() {
+        let x = [1., 10., 2., 20., 3., 30.];
+        let mut out = [0.0f32; 6];
+        cumsum_out(&x, &mut out, 1, 3, 2);
+        assert_eq!(out, [1., 10., 3., 30., 6., 60.]);
+    }
+
+    #[test]
+    fn strided_copy_transposes() {
+        let x = [1., 2., 3., 4., 5., 6.];
+        let mut out = [0.0f32; 6];
+        let mut idx = Vec::new();
+        // (2,3) -> (3,2): out dim 0 walks input columns (stride 1), out
+        // dim 1 walks input rows (stride 3)
+        strided_copy_out(&x, &mut out, &[3, 2], &[1, 3], &mut idx);
+        assert_eq!(out, [1., 4., 2., 5., 3., 6.]);
+    }
+
+    #[test]
+    fn gather_out_checks_range() {
+        let data = [0., 1., 10., 11., 20., 21.];
+        let mut out = [0.0f32; 4];
+        assert!(gather_out(&data, &[2, 0], &mut out, 2, 3).is_ok());
+        assert_eq!(out, [20., 21., 0., 1.]);
+        assert!(gather_out(&data, &[5], &mut out[..2], 2, 3).is_err());
+    }
+}

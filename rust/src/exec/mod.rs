@@ -1,0 +1,87 @@
+//! Graph execution — the unified `Backend` seam.
+//!
+//! Everything that evaluates an IR [`Graph`] on concrete tensors goes
+//! through [`Backend::plan`] → [`Plan::execute`]:
+//!
+//! * [`PlannedBackend`] — the production path: a one-time compilation
+//!   into an [`ExecutionPlan`] (cached live-set schedule, liveness-based
+//!   buffer arena with slot reuse, precomputed broadcast strides, fused
+//!   elementwise chains). Zero per-node heap allocation in steady state.
+//! * [`NaiveBackend`] — the original HashMap walker, kept verbatim as an
+//!   independent reference for differential testing.
+//! * [`PjrtBackend`] — a thin adapter over the PJRT
+//!   [`runtime::Engine`](crate::runtime::Engine), mapping graphs onto
+//!   AOT-compiled manifest programs.
+//!
+//! `passes::verify`, `quality::eval_lm`, the figure benches, and the
+//! examples all consume this seam; future backends (threaded batch
+//! execution, quantized eval) plug in here.
+
+pub mod arena;
+pub mod fuse;
+pub mod kernels;
+pub mod naive;
+pub mod pjrt;
+pub mod plan;
+
+pub use naive::NaiveBackend;
+pub use pjrt::PjrtBackend;
+pub use plan::{ExecutionPlan, PlannedBackend, Schedule};
+
+use crate::graph::{Graph, Tensor};
+
+/// A way of turning graphs into executable plans.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// Analyze `graph` once, producing a plan that can run many times.
+    fn plan(&self, graph: &Graph) -> Result<Box<dyn Plan>, String>;
+}
+
+/// A compiled graph, ready for repeated execution. `execute` takes
+/// `&mut self` so plans may reuse internal buffers across calls.
+pub trait Plan {
+    /// Run on `inputs` (graph input order); returns tensors in graph
+    /// output order.
+    fn execute(&mut self, inputs: &[Tensor]) -> Result<Vec<Tensor>, String>;
+}
+
+/// One-shot convenience: compile an [`ExecutionPlan`] and run it once.
+/// Callers that execute a graph more than once should plan explicitly.
+pub fn run_once(graph: &Graph, inputs: &[Tensor]) -> Result<Vec<Tensor>, String> {
+    ExecutionPlan::compile(graph)?.run(inputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backends_are_interchangeable_behind_the_trait() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![4]);
+        let y = g.silu(x, "y");
+        g.output(y);
+        let inputs = [Tensor::f32(vec![4], vec![-1., 0., 1., 2.])];
+        let backends: Vec<Box<dyn Backend>> =
+            vec![Box::new(PlannedBackend), Box::new(NaiveBackend)];
+        let mut results = Vec::new();
+        for b in &backends {
+            let mut plan = b.plan(&g).unwrap();
+            results.push(plan.execute(&inputs).unwrap());
+        }
+        assert_eq!(results[0][0].as_f32(), results[1][0].as_f32());
+    }
+
+    #[test]
+    fn run_once_matches_planned() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![3]);
+        let y = g.exp(x, "y");
+        g.output(y);
+        let t = [Tensor::f32(vec![3], vec![0., 1., 2.])];
+        let a = run_once(&g, &t).unwrap();
+        let b = naive::run(&g, &t).unwrap();
+        assert_eq!(a[0].as_f32(), b[0].as_f32());
+    }
+}

@@ -1,8 +1,122 @@
-//! Per-operator evaluation for the reference interpreter.
+//! Reference graph walker — the original `interp` evaluator, kept as
+//! the semantic baseline the planned executor is differentially tested
+//! against.
+//!
+//! It re-walks the graph per call, re-computes topo order and liveness,
+//! allocates a fresh tensor per node, and moves values through a
+//! `HashMap` — deliberately simple and allocation-heavy. Use
+//! [`super::ExecutionPlan`] for anything performance-sensitive.
+//!
+//! Scope of the "second opinion": the per-element scalar math
+//! (`apply_unary` / `apply_binary`, PLU segment select) is deliberately
+//! SHARED with the planned kernels so fusion stays bitwise neutral —
+//! the differential suite therefore checks scheduling, arena reuse,
+//! fusion, and indexing/broadcast arithmetic, not the scalar formulas
+//! themselves. Those are covered by the kernel unit tests here and the
+//! artifact-gated golden tests against python.
+
+use std::collections::HashMap;
 
 use crate::graph::op::{BinKind, Op, UnKind};
 use crate::graph::tensor::{numel, strides, Data, Tensor};
-use crate::plu;
+use crate::graph::{Graph, NodeId};
+
+use super::kernels::{apply_binary, apply_unary};
+use super::{Backend, Plan};
+
+/// The naive walker behind the [`Backend`] seam. "Planning" is a graph
+/// clone; every `execute` re-walks it.
+pub struct NaiveBackend;
+
+struct NaivePlan {
+    graph: Graph,
+}
+
+impl Backend for NaiveBackend {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn plan(&self, graph: &Graph) -> Result<Box<dyn Plan>, String> {
+        Ok(Box::new(NaivePlan { graph: graph.clone() }))
+    }
+}
+
+impl Plan for NaivePlan {
+    fn execute(&mut self, inputs: &[Tensor]) -> Result<Vec<Tensor>, String> {
+        run(&self.graph, inputs)
+    }
+}
+
+/// Execute `graph` on the given input tensors (matched by input order).
+///
+/// Returns the output tensors in `graph.outputs` order.
+pub fn run(graph: &Graph, inputs: &[Tensor]) -> Result<Vec<Tensor>, String> {
+    if inputs.len() != graph.inputs.len() {
+        return Err(format!(
+            "graph {} expects {} inputs, got {}",
+            graph.name,
+            graph.inputs.len(),
+            inputs.len()
+        ));
+    }
+    let mut env: HashMap<NodeId, Tensor> = HashMap::with_capacity(graph.nodes.len());
+    for (&id, t) in graph.inputs.iter().zip(inputs) {
+        let node = graph.node(id);
+        if t.shape != node.shape {
+            return Err(format!(
+                "input {} ({}): expected shape {:?}, got {:?}",
+                id, node.name, node.shape, t.shape
+            ));
+        }
+        if t.dtype() != node.dtype {
+            return Err(format!("input {} ({}): dtype mismatch", id, node.name));
+        }
+        env.insert(id, t.clone());
+    }
+
+    let live = graph.live_set();
+    for id in graph.topo_order() {
+        if !live[id] || env.contains_key(&id) {
+            continue;
+        }
+        let node = graph.node(id);
+        let out = match &node.op {
+            Op::Input { .. } => {
+                return Err(format!("unbound input node {id} ({})", node.name))
+            }
+            Op::Const { .. } => node
+                .value
+                .clone()
+                .ok_or_else(|| format!("const node {id} without value"))?,
+            op => {
+                let args: Vec<&Tensor> = node
+                    .inputs
+                    .iter()
+                    .map(|i| env.get(i).expect("topo order violated"))
+                    .collect();
+                eval(op, &args, &node.shape)
+                    .map_err(|e| format!("node {id} ({}): {e}", node.name))?
+            }
+        };
+        debug_assert_eq!(
+            out.shape, node.shape,
+            "node {id} ({}) shape drift",
+            node.name
+        );
+        env.insert(id, out);
+    }
+
+    graph
+        .outputs
+        .iter()
+        .map(|id| {
+            env.get(id)
+                .cloned()
+                .ok_or_else(|| format!("missing output node {id}"))
+        })
+        .collect()
+}
 
 /// Evaluate one op on its argument tensors; `out_shape` is the shape the
 /// builder inferred (layout ops rely on it).
@@ -32,7 +146,7 @@ pub fn eval(op: &Op, args: &[&Tensor], out_shape: &[usize]) -> Result<Tensor, St
     }
 }
 
-// --- elementwise ---------------------------------------------------------------
+// --- elementwise ----------------------------------------------------------------
 
 /// Map an output multi-index onto a broadcast input's linear index.
 #[inline]
@@ -52,13 +166,7 @@ fn binary(
     b: &Tensor,
     out_shape: &[usize],
 ) -> Result<Tensor, String> {
-    let f = |x: f32, y: f32| match kind {
-        BinKind::Add => x + y,
-        BinKind::Sub => x - y,
-        BinKind::Mul => x * y,
-        BinKind::Div => x / y,
-        BinKind::Max => x.max(y),
-    };
+    let f = |x: f32, y: f32| apply_binary(kind, x, y);
     let (av, bv) = (a.as_f32(), b.as_f32());
     let n = numel(out_shape);
     let mut out = vec![0.0f32; n];
@@ -71,6 +179,13 @@ fn binary(
         let s = bv[0];
         for i in 0..n {
             out[i] = f(av[i], s);
+        }
+    } else if a.numel() == 1 && b.shape == out_shape {
+        // scalar-on-left fast path (`scalar op tensor`): same result as
+        // the generic strided loop below, without the odometer
+        let s = av[0];
+        for i in 0..n {
+            out[i] = f(s, bv[i]);
         }
     } else {
         let (sa, sb) = (strides(&a.shape), strides(&b.shape));
@@ -93,23 +208,13 @@ fn binary(
 }
 
 fn unary(kind: UnKind, x: &Tensor) -> Tensor {
-    let f = |v: f32| match kind {
-        UnKind::Neg => -v,
-        UnKind::Exp => v.exp(),
-        UnKind::Log => v.ln(),
-        UnKind::Sqrt => v.sqrt(),
-        UnKind::Abs => v.abs(),
-        UnKind::Recip => 1.0 / v,
-        UnKind::Relu => v.max(0.0),
-        UnKind::Sigmoid => plu::sigmoid_f32(v),
-        UnKind::SiLU => v * plu::sigmoid_f32(v),
-        UnKind::Softplus => plu::softplus_f32(v),
-        UnKind::Tanh => v.tanh(),
-    };
-    Tensor::f32(x.shape.clone(), x.as_f32().iter().map(|&v| f(v)).collect())
+    Tensor::f32(
+        x.shape.clone(),
+        x.as_f32().iter().map(|&v| apply_unary(kind, v)).collect(),
+    )
 }
 
-// --- matmul ----------------------------------------------------------------------
+// --- matmul ---------------------------------------------------------------------
 
 fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor, String> {
     let ra = a.rank();
@@ -161,7 +266,7 @@ fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor, String> {
     Ok(Tensor::f32(shape, out))
 }
 
-// --- scans / reductions -------------------------------------------------------------
+// --- scans / reductions ---------------------------------------------------------
 
 fn cumsum(x: &Tensor, axis: usize) -> Tensor {
     let st = x.strides();
@@ -205,7 +310,7 @@ fn reduce_sum(x: &Tensor, axis: usize) -> Tensor {
     Tensor::f32(oshape, out)
 }
 
-// --- gather / conv / norms -----------------------------------------------------------
+// --- gather / conv / norms ------------------------------------------------------
 
 fn gather(data: &Tensor, indices: &Tensor) -> Result<Tensor, String> {
     let idx = indices.as_i32();
@@ -288,7 +393,7 @@ fn softmax(x: &Tensor, axis: usize) -> Tensor {
     Tensor::f32(shape.clone(), out)
 }
 
-// --- layout -------------------------------------------------------------------------
+// --- layout ---------------------------------------------------------------------
 
 fn slice(x: &Tensor, axis: usize, start: usize, len: usize) -> Tensor {
     let shape = &x.shape;
@@ -498,6 +603,20 @@ mod tests {
         let s = Tensor::scalar(10.0);
         let y = binary(BinKind::Mul, &a, &s, &[2, 2]).unwrap();
         assert_eq!(y.as_f32(), &[10., 20., 30., 40.]);
+    }
+
+    #[test]
+    fn binary_scalar_on_left_fast_path() {
+        // `scalar op tensor` for a non-commutative op must hit the new
+        // fast path and still compute s - x
+        let s = Tensor::scalar(10.0);
+        let b = t2([2, 2], &[1., 2., 3., 4.]);
+        let y = binary(BinKind::Sub, &s, &b, &[2, 2]).unwrap();
+        assert_eq!(y.as_f32(), &[9., 8., 7., 6.]);
+        // and agree with the generic strided loop on a (1,1) scalar
+        let s11 = Tensor::f32(vec![1, 1], vec![10.0]);
+        let y2 = binary(BinKind::Sub, &s11, &b, &[2, 2]).unwrap();
+        assert_eq!(y.as_f32(), y2.as_f32());
     }
 
     #[test]

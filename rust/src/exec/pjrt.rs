@@ -1,0 +1,124 @@
+//! PJRT adapter: the AOT-compiled manifest programs behind the
+//! [`Backend`] seam.
+//!
+//! The python build path compiles each (model, variant, stage) to an HLO
+//! artifact; this backend maps a graph named `"model.variant.stage"`
+//! onto the matching manifest program, converts `Tensor` ↔ `HostTensor`
+//! at the boundary, and executes through the cached
+//! [`Engine`](crate::runtime::Engine) executables. Unlike the planned
+//! executor it does not interpret the graph body — the graph is the
+//! *name and ABI* of an already-compiled program.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::graph::tensor::Data;
+use crate::graph::{Graph, Tensor};
+use crate::runtime::{Engine, HostTensor, Manifest, ProgramEntry};
+
+use super::{Backend, Plan};
+
+/// Backend over a PJRT engine + AOT manifest.
+pub struct PjrtBackend {
+    engine: Rc<RefCell<Engine>>,
+    manifest: Rc<Manifest>,
+}
+
+impl PjrtBackend {
+    /// Load the manifest from `artifacts_dir` and start a PJRT CPU
+    /// client. Fails cleanly when the runtime is unavailable (offline
+    /// stub build) or the artifacts are missing.
+    pub fn new(artifacts_dir: &str) -> Result<Self, String> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let engine = Engine::cpu().map_err(|e| e.to_string())?;
+        Ok(Self {
+            engine: Rc::new(RefCell::new(engine)),
+            manifest: Rc::new(manifest),
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    /// `graph.name` must be `"model.variant.stage"` (the manifest
+    /// program key, e.g. `"tiny-mamba.xamba.prefill"`).
+    fn plan(&self, graph: &Graph) -> Result<Box<dyn Plan>, String> {
+        let mut parts = graph.name.splitn(3, '.');
+        let (model, variant, stage) = match (parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(v), Some(s)) => (m, v, s),
+            _ => {
+                return Err(format!(
+                    "pjrt backend: graph name {:?} is not model.variant.stage",
+                    graph.name
+                ))
+            }
+        };
+        let entry = self
+            .manifest
+            .find(model, variant, stage)
+            .ok_or_else(|| format!("no manifest program for {}", graph.name))?
+            .clone();
+        self.engine
+            .borrow_mut()
+            .prepare(&self.manifest, &entry)
+            .map_err(|e| e.to_string())?;
+        Ok(Box::new(PjrtPlan { engine: self.engine.clone(), entry }))
+    }
+}
+
+struct PjrtPlan {
+    engine: Rc<RefCell<Engine>>,
+    entry: ProgramEntry,
+}
+
+impl Plan for PjrtPlan {
+    /// `inputs` are the program's non-weight arguments (the weights
+    /// literal is cached engine-side at prepare time).
+    fn execute(&mut self, inputs: &[Tensor]) -> Result<Vec<Tensor>, String> {
+        let args: Vec<HostTensor> = inputs.iter().map(to_host).collect();
+        let outs = self
+            .engine
+            .borrow()
+            .execute_cached(&self.entry, &args)
+            .map_err(|e| e.to_string())?;
+        Ok(outs.iter().map(from_host).collect())
+    }
+}
+
+/// `Tensor` → `HostTensor` at the PJRT boundary.
+pub fn to_host(t: &Tensor) -> HostTensor {
+    match &t.data {
+        Data::F32(v) => HostTensor::F32(t.shape.clone(), v.clone()),
+        Data::I32(v) => HostTensor::I32(t.shape.clone(), v.clone()),
+    }
+}
+
+/// `HostTensor` → `Tensor` at the PJRT boundary.
+pub fn from_host(h: &HostTensor) -> Tensor {
+    match h {
+        HostTensor::F32(s, v) => Tensor::f32(s.clone(), v.clone()),
+        HostTensor::I32(s, v) => Tensor::i32(s.clone(), v.clone()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_conversion_round_trips() {
+        let t = Tensor::f32(vec![2, 2], vec![1., 2., 3., 4.]);
+        assert_eq!(from_host(&to_host(&t)), t);
+        let i = Tensor::i32(vec![3], vec![7, 8, 9]);
+        assert_eq!(from_host(&to_host(&i)), i);
+    }
+
+    #[test]
+    fn backend_construction_fails_cleanly_without_artifacts() {
+        // no artifacts dir in unit-test CWD — must error, not panic
+        assert!(PjrtBackend::new("definitely-not-a-dir").is_err());
+    }
+}

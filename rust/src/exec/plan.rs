@@ -1,0 +1,901 @@
+//! Plan compilation: one-time analysis of a [`Graph`] into an
+//! [`ExecutionPlan`] that executes with zero per-node heap allocation.
+//!
+//! Compilation produces (a) a topo schedule restricted to the live set,
+//! (b) a liveness-based slot assignment into a reusable buffer
+//! [`Arena`], (c) per-node kernels with broadcast strides and loop
+//! bounds precomputed, and (d) fused elementwise chains
+//! ([`super::fuse`]). Executing the plan repeatedly reuses the same
+//! arena buffers — the steady-state heap traffic is just the output
+//! materialization at the API boundary.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::graph::op::{BinKind, Op, UnKind};
+use crate::graph::tensor::{numel, strides, Data, DType, Tensor};
+use crate::graph::{Graph, Node, NodeId};
+use crate::plu::PluTable;
+
+use super::arena::{Arena, SlotAlloc};
+use super::fuse::{self, ChainHead, ElemStage};
+use super::kernels::{self, BinMode, DataRef, View};
+use super::{Backend, Plan};
+
+/// Topological schedule over the live (output-reachable) nodes. Shared
+/// between plan compilation and the NPU cost profiler so both price and
+/// execute exactly the same node set.
+pub struct Schedule {
+    pub live: Vec<bool>,
+    /// Live node ids in executable (ascending) order — includes Input
+    /// and Const nodes.
+    pub order: Vec<NodeId>,
+}
+
+impl Schedule {
+    pub fn of(g: &Graph) -> Self {
+        let live = g.live_set();
+        let order: Vec<NodeId> = g.topo_order().filter(|&id| live[id]).collect();
+        Self { live, order }
+    }
+}
+
+/// Where a value lives at execution time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Loc {
+    /// Borrowed from the caller's input slice.
+    Input(usize),
+    /// A constant payload owned by the plan.
+    Const(usize),
+    /// An f32 arena slot.
+    SlotF(usize),
+    /// An i32 arena slot.
+    SlotI(usize),
+}
+
+/// A value reference: location plus the static shape metadata kernels
+/// need (precomputed so execution never re-derives it).
+#[derive(Clone, Debug)]
+struct ValueRef {
+    loc: Loc,
+    shape: Vec<usize>,
+    numel: usize,
+}
+
+/// A compiled operator with its loop bounds / strides resolved.
+#[derive(Clone, Debug)]
+enum Kernel {
+    MatMul { batch: usize, m: usize, k: usize, n: usize, a_step: usize, b_step: usize },
+    Binary { kind: BinKind, mode: BinMode },
+    Unary(UnKind),
+    Plu(Arc<PluTable>),
+    CumSum { outer: usize, n_axis: usize, inner: usize },
+    ReduceSum { outer: usize, n_axis: usize, inner: usize },
+    Gather { row: usize, vocab: usize },
+    Conv1d { t: usize, c: usize, k: usize },
+    RmsNorm { rows: usize, d: usize, eps: f32 },
+    Softmax { outer: usize, n_axis: usize, inner: usize },
+    Slice { outer: usize, n_axis: usize, inner: usize, start: usize, len: usize },
+    Concat { outer: usize, inner: usize, parts: Vec<usize> },
+    Copy,
+    /// Transpose / Broadcast: per-output-dim input strides.
+    StridedCopy { strides: Vec<usize> },
+}
+
+/// What feeds a fused chain at execution time.
+#[derive(Clone, Debug)]
+enum FusedHead {
+    Value(ValueRef),
+    Binary(BinKind, ValueRef, ValueRef),
+}
+
+#[derive(Clone, Debug)]
+enum StepKind {
+    Kernel { kernel: Kernel, args: Vec<ValueRef> },
+    Fused { head: FusedHead, stages: Vec<ElemStage> },
+}
+
+#[derive(Clone, Debug)]
+struct Step {
+    out: Loc,
+    out_shape: Vec<usize>,
+    out_numel: usize,
+    kind: StepKind,
+    /// `node <id> (<name>)` — error attribution, matches the walker.
+    label: String,
+}
+
+/// A graph compiled for repeated execution.
+pub struct ExecutionPlan {
+    graph_name: String,
+    input_ids: Vec<NodeId>,
+    input_names: Vec<String>,
+    input_shapes: Vec<Vec<usize>>,
+    input_dtypes: Vec<DType>,
+    consts: Vec<Tensor>,
+    steps: Vec<Step>,
+    outputs: Vec<ValueRef>,
+    arena: Arena,
+    /// Odometer scratch for strided kernels (capacity reserved once).
+    scratch: Vec<usize>,
+    fused_away: usize,
+    live_compute_nodes: usize,
+}
+
+impl ExecutionPlan {
+    /// Compile `graph`. Shape/arity problems the walker would hit at run
+    /// time (matmul mismatches, missing const payloads, unbound inputs)
+    /// surface here instead.
+    pub fn compile(g: &Graph) -> Result<ExecutionPlan, String> {
+        let schedule = Schedule::of(g);
+        let n = g.nodes.len();
+
+        // --- locations for inputs and constants --------------------------
+        let mut loc: Vec<Option<Loc>> = vec![None; n];
+        for (k, &id) in g.inputs.iter().enumerate() {
+            loc[id] = Some(Loc::Input(k));
+        }
+        let mut consts: Vec<Tensor> = Vec::new();
+        for &id in &schedule.order {
+            let node = g.node(id);
+            match &node.op {
+                Op::Const { .. } => {
+                    let v = node
+                        .value
+                        .clone()
+                        .ok_or_else(|| format!("const node {id} without value"))?;
+                    loc[id] = Some(Loc::Const(consts.len()));
+                    consts.push(v);
+                }
+                Op::Input { .. } if loc[id].is_none() => {
+                    return Err(format!("unbound input node {id} ({})", node.name));
+                }
+                _ => {}
+            }
+        }
+
+        // --- fusion + per-node kernel selection ---------------------------
+        let chains = fuse::find_chains(g, &schedule.live);
+        let mut mid = vec![false; n];
+        let mut chain_of_last: HashMap<NodeId, usize> = HashMap::new();
+        for (ci, ch) in chains.iter().enumerate() {
+            for &m in &ch.nodes[..ch.nodes.len() - 1] {
+                mid[m] = true;
+            }
+            chain_of_last.insert(*ch.nodes.last().unwrap(), ci);
+        }
+
+        enum ProtoKind {
+            Kernel(Kernel, Vec<NodeId>),
+            Fused(ChainHead, Vec<ElemStage>),
+        }
+        struct Proto {
+            out: NodeId,
+            kind: ProtoKind,
+        }
+
+        let mut protos: Vec<Proto> = Vec::new();
+        let mut live_compute_nodes = 0usize;
+        for &id in &schedule.order {
+            let node = g.node(id);
+            if matches!(node.op, Op::Input { .. } | Op::Const { .. }) {
+                continue;
+            }
+            live_compute_nodes += 1;
+            if mid[id] {
+                continue; // absorbed into a fused chain
+            }
+            let kind = if let Some(&ci) = chain_of_last.get(&id) {
+                let ch = &chains[ci];
+                ProtoKind::Fused(ch.head.clone(), ch.stages.clone())
+            } else {
+                let kernel = kernel_for(g, node)
+                    .map_err(|e| format!("node {id} ({}): {e}", node.name))?;
+                if node.dtype == DType::I32
+                    && !matches!(
+                        kernel,
+                        Kernel::Copy | Kernel::Slice { .. } | Kernel::Concat { .. }
+                    )
+                {
+                    return Err(format!(
+                        "node {id} ({}): i32 output unsupported for {}",
+                        node.name,
+                        node.op.census_name()
+                    ));
+                }
+                ProtoKind::Kernel(kernel, node.inputs.clone())
+            };
+            protos.push(Proto { out: id, kind });
+        }
+
+        // --- use counts (graph outputs pinned) ----------------------------
+        let mut uses = vec![0usize; n];
+        for p in &protos {
+            match &p.kind {
+                ProtoKind::Kernel(_, args) => {
+                    for &a in args {
+                        uses[a] += 1;
+                    }
+                }
+                ProtoKind::Fused(head, _) => match head {
+                    ChainHead::Value(x) => uses[*x] += 1,
+                    ChainHead::Binary(_, a, b) => {
+                        uses[*a] += 1;
+                        uses[*b] += 1;
+                    }
+                },
+            }
+        }
+        for &o in &g.outputs {
+            uses[o] += 1; // never decremented: output slots are never reused
+        }
+
+        // --- slot assignment with last-use release ------------------------
+        let mut falloc = SlotAlloc::new();
+        let mut ialloc = SlotAlloc::new();
+        let mut fused_away = 0usize;
+        let mut steps: Vec<Step> = Vec::with_capacity(protos.len());
+
+        let vref = |loc: &Vec<Option<Loc>>, id: NodeId| -> ValueRef {
+            let node = g.node(id);
+            ValueRef {
+                loc: loc[id].expect("value location resolved in topo order"),
+                shape: node.shape.clone(),
+                numel: numel(&node.shape),
+            }
+        };
+
+        for p in &protos {
+            let node = g.node(p.out);
+            let nel = numel(&node.shape);
+            // the output slot is assigned BEFORE the argument slots are
+            // released, so a step never aliases its own inputs
+            let out_loc = match node.dtype {
+                DType::F32 => Loc::SlotF(falloc.alloc(nel)),
+                DType::I32 => Loc::SlotI(ialloc.alloc(nel)),
+            };
+            loc[p.out] = Some(out_loc);
+
+            let mut arg_ids: Vec<NodeId> = Vec::new();
+            let kind = match &p.kind {
+                ProtoKind::Kernel(kernel, args) => {
+                    arg_ids.extend_from_slice(args);
+                    StepKind::Kernel {
+                        kernel: kernel.clone(),
+                        args: args.iter().map(|&a| vref(&loc, a)).collect(),
+                    }
+                }
+                ProtoKind::Fused(head, stages) => {
+                    let fh = match head {
+                        ChainHead::Value(x) => {
+                            arg_ids.push(*x);
+                            FusedHead::Value(vref(&loc, *x))
+                        }
+                        ChainHead::Binary(k, a, b) => {
+                            arg_ids.push(*a);
+                            arg_ids.push(*b);
+                            FusedHead::Binary(*k, vref(&loc, *a), vref(&loc, *b))
+                        }
+                    };
+                    fused_away += stages.len().saturating_sub(
+                        usize::from(matches!(head, ChainHead::Value(_))),
+                    );
+                    StepKind::Fused { head: fh, stages: stages.clone() }
+                }
+            };
+            steps.push(Step {
+                out: out_loc,
+                out_shape: node.shape.clone(),
+                out_numel: nel,
+                kind,
+                label: format!("node {} ({})", p.out, node.name),
+            });
+
+            for &a in &arg_ids {
+                uses[a] -= 1;
+                if uses[a] == 0 {
+                    match loc[a] {
+                        Some(Loc::SlotF(s)) => falloc.release(s),
+                        Some(Loc::SlotI(s)) => ialloc.release(s),
+                        _ => {}
+                    }
+                }
+            }
+        }
+
+        // --- outputs ------------------------------------------------------
+        let outputs: Vec<ValueRef> =
+            g.outputs.iter().map(|&o| vref(&loc, o)).collect();
+
+        let max_rank = g
+            .nodes
+            .iter()
+            .map(|nd| nd.shape.len())
+            .max()
+            .unwrap_or(0);
+
+        Ok(ExecutionPlan {
+            graph_name: g.name.clone(),
+            input_ids: g.inputs.clone(),
+            input_names: g.inputs.iter().map(|&i| g.node(i).name.clone()).collect(),
+            input_shapes: g.inputs.iter().map(|&i| g.node(i).shape.clone()).collect(),
+            input_dtypes: g.inputs.iter().map(|&i| g.node(i).dtype).collect(),
+            consts,
+            steps,
+            outputs,
+            arena: Arena::from_sizes(&falloc.sizes, &ialloc.sizes),
+            scratch: Vec::with_capacity(max_rank),
+            fused_away,
+            live_compute_nodes,
+        })
+    }
+
+    /// Execute the plan on `inputs` (graph input order). Arena slots are
+    /// reused across calls; only the returned output tensors allocate.
+    pub fn run(&mut self, inputs: &[Tensor]) -> Result<Vec<Tensor>, String> {
+        if inputs.len() != self.input_shapes.len() {
+            return Err(format!(
+                "graph {} expects {} inputs, got {}",
+                self.graph_name,
+                self.input_shapes.len(),
+                inputs.len()
+            ));
+        }
+        for (k, t) in inputs.iter().enumerate() {
+            if t.shape != self.input_shapes[k] {
+                return Err(format!(
+                    "input {} ({}): expected shape {:?}, got {:?}",
+                    self.input_ids[k], self.input_names[k], self.input_shapes[k], t.shape
+                ));
+            }
+            if t.dtype() != self.input_dtypes[k] {
+                return Err(format!(
+                    "input {} ({}): dtype mismatch",
+                    self.input_ids[k], self.input_names[k]
+                ));
+            }
+        }
+
+        let Self { steps, arena, consts, scratch, .. } = self;
+        for step in steps.iter() {
+            exec_step(step, arena, consts, inputs, scratch)?;
+        }
+
+        self.outputs
+            .iter()
+            .map(|r| {
+                Ok(match r.loc {
+                    Loc::Input(k) => inputs[k].clone(),
+                    Loc::Const(c) => self.consts[c].clone(),
+                    Loc::SlotF(s) => {
+                        Tensor::f32(r.shape.clone(), self.arena.f[s][..r.numel].to_vec())
+                    }
+                    Loc::SlotI(s) => {
+                        Tensor::i32(r.shape.clone(), self.arena.i[s][..r.numel].to_vec())
+                    }
+                })
+            })
+            .collect()
+    }
+
+    /// Number of executable steps (after fusion).
+    pub fn step_count(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// How many live compute nodes were absorbed into fused chains.
+    pub fn fused_node_count(&self) -> usize {
+        self.fused_away
+    }
+
+    /// Live compute nodes in the source graph (pre-fusion).
+    pub fn compute_node_count(&self) -> usize {
+        self.live_compute_nodes
+    }
+
+    /// Number of distinct arena slots (f32 + i32) — the live-range width,
+    /// typically far below the node count thanks to slot reuse.
+    pub fn slot_count(&self) -> usize {
+        self.arena.f.len() + self.arena.i.len()
+    }
+
+    /// Bytes held by the reusable arena.
+    pub fn arena_bytes(&self) -> usize {
+        self.arena.bytes()
+    }
+}
+
+impl Plan for ExecutionPlan {
+    fn execute(&mut self, inputs: &[Tensor]) -> Result<Vec<Tensor>, String> {
+        self.run(inputs)
+    }
+}
+
+/// The planned-executor [`Backend`].
+pub struct PlannedBackend;
+
+impl Backend for PlannedBackend {
+    fn name(&self) -> &'static str {
+        "planned"
+    }
+
+    fn plan(&self, graph: &Graph) -> Result<Box<dyn Plan>, String> {
+        Ok(Box::new(ExecutionPlan::compile(graph)?))
+    }
+}
+
+// --- compile helpers ------------------------------------------------------------
+
+fn kernel_for(g: &Graph, node: &Node) -> Result<Kernel, String> {
+    Ok(match &node.op {
+        Op::Input { .. } | Op::Const { .. } => unreachable!("handled by caller"),
+        Op::MatMul => {
+            let sa = g.shape(node.inputs[0]);
+            let sb = g.shape(node.inputs[1]);
+            let (ra, rb) = (sa.len(), sb.len());
+            if ra < 2 || rb < 2 {
+                return Err("matmul needs rank >= 2".into());
+            }
+            let (m, k) = (sa[ra - 2], sa[ra - 1]);
+            let (k2, nn) = (sb[rb - 2], sb[rb - 1]);
+            if k != k2 {
+                return Err(format!("matmul k mismatch {k} vs {k2}"));
+            }
+            let batch_a: usize = sa[..ra - 2].iter().product();
+            let batch_b: usize = sb[..rb - 2].iter().product();
+            let batch = batch_a.max(batch_b);
+            if batch_a != batch && batch_a != 1 && ra != 2 {
+                return Err("matmul batch mismatch".into());
+            }
+            if batch * m * nn != numel(&node.shape) {
+                return Err(format!(
+                    "matmul output shape {:?} does not hold {batch}x{m}x{nn}",
+                    node.shape
+                ));
+            }
+            Kernel::MatMul {
+                batch,
+                m,
+                k,
+                n: nn,
+                a_step: if batch_a == 1 { 0 } else { m * k },
+                b_step: if batch_b == 1 { 0 } else { k * nn },
+            }
+        }
+        Op::Binary(kind) => {
+            let sa = g.shape(node.inputs[0]);
+            let sb = g.shape(node.inputs[1]);
+            let out = node.shape.as_slice();
+            let mode = if sa == out && sb == out {
+                BinMode::Elementwise
+            } else if numel(sb) == 1 && sa == out {
+                BinMode::ScalarRight
+            } else if numel(sa) == 1 && sb == out {
+                BinMode::ScalarLeft
+            } else {
+                BinMode::Strided {
+                    sa: kernels::bcast_strides(out, sa),
+                    sb: kernels::bcast_strides(out, sb),
+                }
+            };
+            Kernel::Binary { kind: *kind, mode }
+        }
+        Op::Unary(k) => Kernel::Unary(*k),
+        Op::Plu { table, .. } => Kernel::Plu(table.clone()),
+        Op::CumSum { axis } => {
+            let s = g.shape(node.inputs[0]);
+            Kernel::CumSum {
+                outer: s[..*axis].iter().product(),
+                n_axis: s[*axis],
+                inner: s[*axis + 1..].iter().product(),
+            }
+        }
+        Op::ReduceSum { axis } => {
+            let s = g.shape(node.inputs[0]);
+            Kernel::ReduceSum {
+                outer: s[..*axis].iter().product(),
+                n_axis: s[*axis],
+                inner: s[*axis + 1..].iter().product(),
+            }
+        }
+        Op::Gather => {
+            let sd = g.shape(node.inputs[0]);
+            Kernel::Gather { row: sd[1..].iter().product(), vocab: sd[0] }
+        }
+        Op::Conv1dCausal { k } => {
+            let sx = g.shape(node.inputs[0]);
+            Kernel::Conv1d { t: sx[0], c: sx[1], k: *k }
+        }
+        Op::RmsNorm { eps } => {
+            let sx = g.shape(node.inputs[0]);
+            let d = *sx.last().unwrap();
+            Kernel::RmsNorm { rows: numel(sx) / d, d, eps: *eps }
+        }
+        Op::Softmax { axis } => {
+            let s = g.shape(node.inputs[0]);
+            Kernel::Softmax {
+                outer: s[..*axis].iter().product(),
+                n_axis: s[*axis],
+                inner: s[*axis + 1..].iter().product(),
+            }
+        }
+        Op::Slice { axis, start, len } => {
+            let s = g.shape(node.inputs[0]);
+            Kernel::Slice {
+                outer: s[..*axis].iter().product(),
+                n_axis: s[*axis],
+                inner: s[*axis + 1..].iter().product(),
+                start: *start,
+                len: *len,
+            }
+        }
+        Op::Concat { axis } => {
+            let s0 = g.shape(node.inputs[0]);
+            Kernel::Concat {
+                outer: s0[..*axis].iter().product(),
+                inner: s0[*axis + 1..].iter().product(),
+                parts: node.inputs.iter().map(|&i| g.shape(i)[*axis]).collect(),
+            }
+        }
+        Op::Reshape { .. } => Kernel::Copy,
+        Op::Transpose { perm } => {
+            let st = strides(g.shape(node.inputs[0]));
+            Kernel::StridedCopy { strides: perm.iter().map(|&p| st[p]).collect() }
+        }
+        Op::Broadcast { .. } => Kernel::StridedCopy {
+            strides: kernels::bcast_strides(&node.shape, g.shape(node.inputs[0])),
+        },
+    })
+}
+
+// --- execution ------------------------------------------------------------------
+
+fn view<'a>(
+    r: &'a ValueRef,
+    arena: &'a Arena,
+    consts: &'a [Tensor],
+    inputs: &'a [Tensor],
+) -> View<'a> {
+    let data = match r.loc {
+        Loc::Input(k) => tensor_ref(&inputs[k]),
+        Loc::Const(c) => tensor_ref(&consts[c]),
+        Loc::SlotF(s) => DataRef::F32(&arena.f[s][..r.numel]),
+        Loc::SlotI(s) => DataRef::I32(&arena.i[s][..r.numel]),
+    };
+    View { shape: &r.shape, data }
+}
+
+fn tensor_ref(t: &Tensor) -> DataRef<'_> {
+    match &t.data {
+        Data::F32(v) => DataRef::F32(v),
+        Data::I32(v) => DataRef::I32(v),
+    }
+}
+
+fn exec_step(
+    step: &Step,
+    arena: &mut Arena,
+    consts: &[Tensor],
+    inputs: &[Tensor],
+    scratch: &mut Vec<usize>,
+) -> Result<(), String> {
+    match step.out {
+        Loc::SlotF(s) => {
+            let mut buf = arena.take_f(s);
+            let res = run_f(step, &mut buf[..step.out_numel], arena, consts, inputs, scratch);
+            arena.put_f(s, buf);
+            res.map_err(|e| format!("{}: {e}", step.label))
+        }
+        Loc::SlotI(s) => {
+            let mut buf = arena.take_i(s);
+            let res = run_i(step, &mut buf[..step.out_numel], arena, consts, inputs);
+            arena.put_i(s, buf);
+            res.map_err(|e| format!("{}: {e}", step.label))
+        }
+        Loc::Input(_) | Loc::Const(_) => unreachable!("compute step writes to a slot"),
+    }
+}
+
+fn run_f(
+    step: &Step,
+    out: &mut [f32],
+    arena: &Arena,
+    consts: &[Tensor],
+    inputs: &[Tensor],
+    scratch: &mut Vec<usize>,
+) -> Result<(), String> {
+    match &step.kind {
+        StepKind::Fused { head, stages } => {
+            match head {
+                FusedHead::Value(x) => {
+                    let xv = view(x, arena, consts, inputs).f32();
+                    for (o, &v) in out.iter_mut().zip(xv) {
+                        let mut acc = v;
+                        for st in stages {
+                            acc = st.apply(acc);
+                        }
+                        *o = acc;
+                    }
+                }
+                FusedHead::Binary(kind, a, b) => {
+                    let av = view(a, arena, consts, inputs).f32();
+                    let bv = view(b, arena, consts, inputs).f32();
+                    for i in 0..out.len() {
+                        let mut acc = kernels::apply_binary(*kind, av[i], bv[i]);
+                        for st in stages {
+                            acc = st.apply(acc);
+                        }
+                        out[i] = acc;
+                    }
+                }
+            }
+            Ok(())
+        }
+        StepKind::Kernel { kernel, args } => {
+            let v = |i: usize| view(&args[i], arena, consts, inputs);
+            match kernel {
+                Kernel::MatMul { batch, m, k, n, a_step, b_step } => {
+                    kernels::matmul_out(
+                        v(0).f32(),
+                        v(1).f32(),
+                        out,
+                        *batch,
+                        *m,
+                        *k,
+                        *n,
+                        *a_step,
+                        *b_step,
+                    );
+                    Ok(())
+                }
+                Kernel::Binary { kind, mode } => {
+                    kernels::binary_out(
+                        *kind,
+                        mode,
+                        v(0).f32(),
+                        v(1).f32(),
+                        &step.out_shape,
+                        out,
+                        scratch,
+                    );
+                    Ok(())
+                }
+                Kernel::Unary(k) => {
+                    kernels::unary_out(*k, v(0).f32(), out);
+                    Ok(())
+                }
+                Kernel::Plu(table) => {
+                    kernels::plu_out(table, v(0).f32(), out);
+                    Ok(())
+                }
+                Kernel::CumSum { outer, n_axis, inner } => {
+                    kernels::cumsum_out(v(0).f32(), out, *outer, *n_axis, *inner);
+                    Ok(())
+                }
+                Kernel::ReduceSum { outer, n_axis, inner } => {
+                    kernels::reduce_sum_out(v(0).f32(), out, *outer, *n_axis, *inner);
+                    Ok(())
+                }
+                Kernel::Gather { row, vocab } => {
+                    kernels::gather_out(v(0).f32(), v(1).i32(), out, *row, *vocab)
+                }
+                Kernel::Conv1d { t, c, k } => {
+                    kernels::conv1d_out(v(0).f32(), v(1).f32(), v(2).f32(), out, *t, *c, *k);
+                    Ok(())
+                }
+                Kernel::RmsNorm { rows, d, eps } => {
+                    kernels::rmsnorm_out(v(0).f32(), v(1).f32(), out, *rows, *d, *eps);
+                    Ok(())
+                }
+                Kernel::Softmax { outer, n_axis, inner } => {
+                    kernels::softmax_out(v(0).f32(), out, *outer, *n_axis, *inner);
+                    Ok(())
+                }
+                Kernel::Slice { outer, n_axis, inner, start, len } => {
+                    kernels::slice_out(v(0).f32(), out, *outer, *n_axis, *inner, *start, *len);
+                    Ok(())
+                }
+                Kernel::Concat { outer, inner, parts } => {
+                    concat_into(out, *outer, *inner, parts, |i| v(i).f32());
+                    Ok(())
+                }
+                Kernel::Copy => {
+                    kernels::copy_out(v(0).f32(), out);
+                    Ok(())
+                }
+                Kernel::StridedCopy { strides } => {
+                    kernels::strided_copy_out(v(0).f32(), out, &step.out_shape, strides, scratch);
+                    Ok(())
+                }
+            }
+        }
+    }
+}
+
+/// Concatenate along the compile-time-resolved axis: `view_of(i)` yields
+/// the i-th argument's payload. Shared between the f32 and i32 paths;
+/// copies straight into the arena slot, no per-part staging.
+fn concat_into<'a, T: Copy + 'a>(
+    out: &mut [T],
+    outer: usize,
+    inner: usize,
+    parts: &[usize],
+    mut view_of: impl FnMut(usize) -> &'a [T],
+) {
+    let total: usize = parts.iter().sum();
+    for o in 0..outer {
+        let mut dst = o * total * inner;
+        for (ai, &na) in parts.iter().enumerate() {
+            let av = view_of(ai);
+            let chunk = na * inner;
+            out[dst..dst + chunk].copy_from_slice(&av[o * chunk..(o + 1) * chunk]);
+            dst += chunk;
+        }
+    }
+}
+
+/// i32 outputs: only data-movement ops (plan compilation guarantees it).
+fn run_i(
+    step: &Step,
+    out: &mut [i32],
+    arena: &Arena,
+    consts: &[Tensor],
+    inputs: &[Tensor],
+) -> Result<(), String> {
+    match &step.kind {
+        StepKind::Kernel { kernel, args } => {
+            let v = |i: usize| view(&args[i], arena, consts, inputs);
+            match kernel {
+                Kernel::Copy => kernels::copy_out(v(0).i32(), out),
+                Kernel::Slice { outer, n_axis, inner, start, len } => {
+                    kernels::slice_out(v(0).i32(), out, *outer, *n_axis, *inner, *start, *len);
+                }
+                Kernel::Concat { outer, inner, parts } => {
+                    concat_into(out, *outer, *inner, parts, |i| v(i).i32());
+                }
+                other => unreachable!("i32 kernel {other:?} rejected at plan time"),
+            }
+            Ok(())
+        }
+        StepKind::Fused { .. } => unreachable!("fused chains are f32-only"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan_of(g: &Graph) -> ExecutionPlan {
+        ExecutionPlan::compile(g).expect("plan compiles")
+    }
+
+    #[test]
+    fn plan_matches_walker_on_small_graph() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![2, 2]);
+        let b = g.input("b", vec![2, 2]);
+        let m = g.matmul(a, b, "m");
+        let two = g.const_scalar("two", 2.0);
+        let out = g.add(m, two, "out");
+        g.output(out);
+        let inputs = [
+            Tensor::f32(vec![2, 2], vec![1., 2., 3., 4.]),
+            Tensor::f32(vec![2, 2], vec![1., 1., 1., 1.]),
+        ];
+        let mut p = plan_of(&g);
+        let r = p.run(&inputs).unwrap();
+        assert_eq!(r[0].as_f32(), &[5., 5., 9., 9.]);
+        // repeated execution reuses the arena and stays identical
+        let r2 = p.run(&inputs).unwrap();
+        assert_eq!(r[0].as_f32(), r2[0].as_f32());
+    }
+
+    #[test]
+    fn elementwise_chain_collapses_to_one_step() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![8]);
+        let a = g.silu(x, "a");
+        let b = g.exp(a, "b");
+        let half = g.const_scalar("h", 0.5);
+        let c = g.mul(b, half, "c");
+        g.output(c);
+        let mut p = plan_of(&g);
+        assert_eq!(p.step_count(), 1, "chain should fuse into a single step");
+        assert_eq!(p.fused_node_count(), 2);
+        assert_eq!(p.slot_count(), 1, "intermediates get no slots");
+        let xs = Tensor::f32(vec![8], (0..8).map(|i| i as f32 - 4.0).collect());
+        let got = p.run(&[xs.clone()]).unwrap();
+        let want = super::super::naive::run(&g, &[xs]).unwrap();
+        // fusion must be bitwise neutral
+        assert_eq!(got[0].as_f32(), want[0].as_f32());
+    }
+
+    #[test]
+    fn slots_are_reused_along_a_chain() {
+        // a long non-fusable chain: live-range width is 2, so the arena
+        // must stay at 2 slots however deep the chain gets
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![4, 4]);
+        let mut cur = x;
+        for i in 0..10 {
+            cur = g.cumsum(cur, i % 2, &format!("cs{i}"));
+        }
+        g.output(cur);
+        let p = plan_of(&g);
+        assert_eq!(p.step_count(), 10);
+        assert!(p.slot_count() <= 2, "slots: {}", p.slot_count());
+    }
+
+    #[test]
+    fn outputs_that_are_inputs_or_consts_pass_through() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![3]);
+        let c = g.constant("c", Tensor::f32(vec![2], vec![7., 8.]));
+        g.output(a);
+        g.output(c);
+        g.output(a);
+        let mut p = plan_of(&g);
+        let t = Tensor::f32(vec![3], vec![1., 2., 3.]);
+        let r = p.run(&[t.clone()]).unwrap();
+        assert_eq!(r[0], t);
+        assert_eq!(r[1].as_f32(), &[7., 8.]);
+        assert_eq!(r[2], t);
+    }
+
+    #[test]
+    fn output_slots_survive_downstream_reuse() {
+        // y is both an output and an intermediate consumed later; its
+        // slot must not be recycled by the second cumsum
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![4]);
+        let y = g.cumsum(x, 0, "y");
+        let z = g.cumsum(y, 0, "z");
+        g.output(y);
+        g.output(z);
+        let mut p = plan_of(&g);
+        let r = p
+            .run(&[Tensor::f32(vec![4], vec![1., 1., 1., 1.])])
+            .unwrap();
+        assert_eq!(r[0].as_f32(), &[1., 2., 3., 4.]);
+        assert_eq!(r[1].as_f32(), &[1., 3., 6., 10.]);
+    }
+
+    #[test]
+    fn input_validation_matches_walker() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![2]);
+        g.output(a);
+        let mut p = plan_of(&g);
+        assert!(p.run(&[]).is_err());
+        assert!(p.run(&[Tensor::f32(vec![3], vec![0.0; 3])]).is_err());
+        assert!(p.run(&[Tensor::i32(vec![2], vec![0, 0])]).is_err());
+    }
+
+    #[test]
+    fn gather_out_of_range_is_an_execute_error() {
+        let mut g = Graph::new("t");
+        let data = g.input("d", vec![3, 2]);
+        let idx = g.input_i32("i", vec![2]);
+        let e = g.gather(data, idx, "emb");
+        g.output(e);
+        let mut p = plan_of(&g);
+        let d = Tensor::f32(vec![3, 2], vec![0., 1., 10., 11., 20., 21.]);
+        let ok = p.run(&[d.clone(), Tensor::i32(vec![2], vec![2, 0])]).unwrap();
+        assert_eq!(ok[0].as_f32(), &[20., 21., 0., 1.]);
+        let err = p.run(&[d, Tensor::i32(vec![2], vec![9, 0])]);
+        assert!(err.unwrap_err().contains("out of range"));
+    }
+
+    #[test]
+    fn dead_nodes_are_not_planned() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![2]);
+        let zero = g.const_scalar("z", 0.0);
+        let _dead = g.div(a, zero, "dead");
+        g.output(a);
+        let mut p = plan_of(&g);
+        assert_eq!(p.step_count(), 0);
+        let r = p.run(&[Tensor::f32(vec![2], vec![1., 2.])]).unwrap();
+        assert_eq!(r[0].as_f32(), &[1., 2.]);
+    }
+}

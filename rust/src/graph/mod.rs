@@ -3,9 +3,9 @@
 //! This is the repo's stand-in for the OpenVINO IR the paper's conversion
 //! pipeline operates on: `models::` builds Mamba / Mamba-2 block graphs in
 //! it, `passes::` applies the CumBA / ReduBA / ActiBA rewrites over it,
-//! `interp::` executes it for correctness, and `npu::` costs it for
-//! latency. Nodes are single-output, append-only; passes mutate ops in
-//! place and run `dce` afterwards.
+//! `exec::` compiles and executes it for correctness, and `npu::` costs
+//! it for latency. Nodes are single-output, append-only; passes mutate
+//! ops in place and run `dce` afterwards.
 
 pub mod census;
 pub mod op;

@@ -1,85 +1,24 @@
-//! Reference interpreter for the IR: executes a `Graph` on concrete
-//! tensors, f32, row-major, no tricks.
+//! Compatibility shim over the [`exec`](crate::exec) subsystem.
 //!
-//! Used to (a) machine-check that the CumBA / ReduBA / ActiBA passes
-//! preserve semantics (`passes::verify`), and (b) run the Table-1
-//! substitute quality evaluation on the trained tiny models without
-//! touching PJRT. Throughput is a non-goal; clarity is.
+//! The reference interpreter grew into a planned executor (`exec/`):
+//! `interp::run` now compiles a one-shot [`ExecutionPlan`]
+//! (schedule + arena + fused chains) and executes it, so every caller —
+//! `passes::verify` differential testing, the quality eval, the ablation
+//! benches — got faster without changing call sites. Callers that
+//! evaluate one graph repeatedly should plan once via
+//! [`exec::Backend`](crate::exec::Backend) instead. The original
+//! HashMap walker lives on as [`exec::naive`](crate::exec::naive) for
+//! differential testing (same structure and tests; scalar math is
+//! shared with the planned kernels — see that module's header for the
+//! exact independence boundary).
 
-mod ops;
-
-use std::collections::HashMap;
-
-use crate::graph::{Graph, NodeId, Op, Tensor};
+use crate::graph::{Graph, Tensor};
 
 /// Execute `graph` on the given input tensors (matched by input order).
 ///
 /// Returns the output tensors in `graph.outputs` order.
 pub fn run(graph: &Graph, inputs: &[Tensor]) -> Result<Vec<Tensor>, String> {
-    if inputs.len() != graph.inputs.len() {
-        return Err(format!(
-            "graph {} expects {} inputs, got {}",
-            graph.name,
-            graph.inputs.len(),
-            inputs.len()
-        ));
-    }
-    let mut env: HashMap<NodeId, Tensor> = HashMap::with_capacity(graph.nodes.len());
-    for (&id, t) in graph.inputs.iter().zip(inputs) {
-        let node = graph.node(id);
-        if t.shape != node.shape {
-            return Err(format!(
-                "input {} ({}): expected shape {:?}, got {:?}",
-                id, node.name, node.shape, t.shape
-            ));
-        }
-        if t.dtype() != node.dtype {
-            return Err(format!("input {} ({}): dtype mismatch", id, node.name));
-        }
-        env.insert(id, t.clone());
-    }
-
-    let live = graph.live_set();
-    for id in graph.topo_order() {
-        if !live[id] || env.contains_key(&id) {
-            continue;
-        }
-        let node = graph.node(id);
-        let out = match &node.op {
-            Op::Input { .. } => {
-                return Err(format!("unbound input node {id} ({})", node.name))
-            }
-            Op::Const { .. } => node
-                .value
-                .clone()
-                .ok_or_else(|| format!("const node {id} without value"))?,
-            op => {
-                let args: Vec<&Tensor> = node
-                    .inputs
-                    .iter()
-                    .map(|i| env.get(i).expect("topo order violated"))
-                    .collect();
-                ops::eval(op, &args, &node.shape)
-                    .map_err(|e| format!("node {id} ({}): {e}", node.name))?
-            }
-        };
-        debug_assert_eq!(
-            out.shape, node.shape,
-            "node {id} ({}) shape drift",
-            node.name
-        );
-        env.insert(id, out);
-    }
-
-    graph
-        .outputs
-        .iter()
-        .map(|id| {
-            env.get(id)
-                .cloned()
-                .ok_or_else(|| format!("missing output node {id}"))
-        })
-        .collect()
+    crate::exec::run_once(graph, inputs)
 }
 
 #[cfg(test)]
@@ -135,5 +74,19 @@ mod tests {
         g.output(a);
         let r = run(&g, &[Tensor::f32(vec![2], vec![1., 2.])]).unwrap();
         assert_eq!(r[0].as_f32(), &[1., 2.]);
+    }
+
+    #[test]
+    fn shim_agrees_with_naive_walker() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![3, 4]);
+        let c = g.cumsum(x, 0, "c");
+        let s = g.silu(c, "s");
+        let r = g.reduce_sum(s, 1, "r");
+        g.output(r);
+        let t = Tensor::f32(vec![3, 4], (0..12).map(|i| i as f32 * 0.25 - 1.0).collect());
+        let a = run(&g, &[t.clone()]).unwrap();
+        let b = crate::exec::naive::run(&g, &[t]).unwrap();
+        assert_eq!(a[0].as_f32(), b[0].as_f32());
     }
 }

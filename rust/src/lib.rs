@@ -11,6 +11,7 @@
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod exec;
 pub mod npu;
 pub mod passes;
 pub mod graph;

@@ -6,6 +6,7 @@
 use std::collections::BTreeMap;
 
 use crate::config::NpuConfig;
+use crate::exec::Schedule;
 use crate::graph::Graph;
 use crate::util::Table;
 
@@ -41,14 +42,15 @@ pub struct Profile {
 
 impl Profile {
     /// Profile all live nodes of `graph` (sequential NPU execution).
+    /// Uses the same live-set schedule the planned executor compiles
+    /// from (`exec::Schedule`), so cost model and executor price/run an
+    /// identical node set.
     pub fn of(cfg: &NpuConfig, graph: &Graph) -> Self {
-        let live = graph.live_set();
+        let schedule = Schedule::of(graph);
         let mut records = Vec::new();
         let mut total = 0.0;
-        for node in &graph.nodes {
-            if !live[node.id] {
-                continue;
-            }
+        for &id in &schedule.order {
+            let node = graph.node(id);
             let cost = node_cost(cfg, graph, node);
             total += cost.total_ns;
             records.push(NodeRecord {

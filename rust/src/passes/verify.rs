@@ -1,11 +1,14 @@
 //! Randomized differential verification of graph rewrites.
 //!
-//! A pass is trusted only if `interp(original) ≈ interp(rewritten)` on
+//! A pass is trusted only if `exec(original) ≈ exec(rewritten)` on
 //! random inputs — run for every pass on every model graph by the test
 //! suite, and available at runtime via `xamba profile --verify`.
+//! Both graphs go through the planned-executor [`Backend`] seam: each is
+//! compiled once and executed per trial, which also makes every
+//! differential run an arena-reuse test of the `ExecutionPlan`.
 
+use crate::exec::{Backend, Plan, PlannedBackend};
 use crate::graph::{DType, Graph, Op, Tensor};
-use crate::interp;
 use crate::util::Prng;
 
 /// Outcome of one differential run.
@@ -69,10 +72,12 @@ pub fn differential(
     let mut rng = Prng::new(seed);
     let mut max_abs = 0.0f32;
     let mut max_rel = 0.0f32;
+    let mut plan_a = PlannedBackend.plan(original)?;
+    let mut plan_b = PlannedBackend.plan(rewritten)?;
     for trial in 0..trials {
         let inputs = random_inputs(original, &mut rng, scale);
-        let a = interp::run(original, &inputs)?;
-        let b = interp::run(rewritten, &inputs)?;
+        let a = plan_a.execute(&inputs)?;
+        let b = plan_b.execute(&inputs)?;
         for (i, (ta, tb)) in a.iter().zip(&b).enumerate() {
             if ta.shape != tb.shape {
                 return Err(format!(

@@ -41,13 +41,23 @@ impl PluTable {
         self.slopes[k] * x + self.intercepts[k]
     }
 
+    /// One element with the reciprocal step precomputed — the shared
+    /// inner of [`PluTable::eval_slice`], the planned PLU kernel, and
+    /// fused PLU stages (`exec::fuse`). Keeping a single copy of the
+    /// segment-select arithmetic is what makes fused and unfused PLU
+    /// evaluation bitwise identical.
+    #[inline]
+    pub fn eval_premul(&self, x: f32, inv_step: f32, kmax: i64) -> f32 {
+        let k = (((x - self.lo) * inv_step) as i64).clamp(0, kmax) as usize;
+        self.slopes[k] * x + self.intercepts[k]
+    }
+
     /// Evaluate elementwise over a slice.
     pub fn eval_slice(&self, xs: &[f32], out: &mut [f32]) {
         let inv_step = 1.0 / self.step();
-        let kmax = self.num_segments() - 1;
+        let kmax = self.num_segments() as i64 - 1;
         for (o, &x) in out.iter_mut().zip(xs) {
-            let k = (((x - self.lo) * inv_step) as i64).clamp(0, kmax as i64) as usize;
-            *o = self.slopes[k] * x + self.intercepts[k];
+            *o = self.eval_premul(x, inv_step, kmax);
         }
     }
 

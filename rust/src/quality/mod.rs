@@ -8,8 +8,8 @@
 //! model, for exact vs PLU-8/16/32 variants.
 
 use crate::config::ModelShape;
+use crate::exec::{Backend, Plan, PlannedBackend};
 use crate::graph::{Graph, Tensor};
-use crate::interp;
 use crate::models::params::{full_spec, ParamSpec};
 
 /// LM-quality measurement over held-out text.
@@ -78,15 +78,17 @@ pub fn eval_lm(
     let mut windows = 0usize;
     let mut start = 0usize;
     // params are hoisted: only the token tensor changes per window
-    // (EXPERIMENTS.md §Perf iteration 5)
+    // (EXPERIMENTS.md §Perf iteration 5); the plan is compiled once and
+    // its arena reused across every window
     let mut inputs = params;
     inputs.push(Tensor::i32(vec![window], vec![0; window]));
+    let mut plan = PlannedBackend.plan(graph).expect("plan compiles");
     while windows < max_windows && start + window + 1 <= text.len() {
         let tokens: Vec<i32> =
             text[start..start + window].iter().map(|&b| b as i32).collect();
         let n = inputs.len();
         inputs[n - 1] = Tensor::i32(vec![window], tokens);
-        let out = interp::run(graph, &inputs).expect("interp eval");
+        let out = plan.execute(&inputs).expect("planned eval");
         let logits = out[0].as_f32(); // (T, V)
         let v = shape.vocab_size;
         for t in 0..window - 1 {
@@ -138,6 +140,7 @@ pub fn induction_probe(
     let spec = full_spec(shape);
     let params = param_inputs(&spec, weights);
     let mut rng = crate::util::Prng::new(seed);
+    let mut plan = PlannedBackend.plan(graph).expect("plan compiles");
     let (mut hit1, mut n1, mut hit2, mut n2) = (0usize, 0usize, 0usize, 0usize);
     for _ in 0..trials {
         // window = [pad][sentence][sentence]; compare accuracy per copy
@@ -153,7 +156,7 @@ pub fn induction_probe(
         let tokens: Vec<i32> = text.iter().map(|&b| b as i32).collect();
         let mut inputs = params.clone();
         inputs.push(Tensor::i32(vec![window], tokens));
-        let out = interp::run(graph, &inputs).expect("interp");
+        let out = plan.execute(&inputs).expect("planned eval");
         let logits = out[0].as_f32();
         let v = shape.vocab_size;
         let first_start = window - need;

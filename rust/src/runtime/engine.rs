@@ -169,11 +169,7 @@ impl Engine {
         }
         let literals: Vec<xla::Literal> =
             args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
-        let result = exe.execute::<xla::Literal>(&literals)?;
-        let lit = result[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: unpack the tuple
-        let parts = lit.to_tuple()?;
-        parts.iter().map(HostTensor::from_literal).collect()
+        unpack_result(exe.execute::<xla::Literal>(&literals)?)
     }
 
     /// Hot-path execute: the weights literal comes from the prepared
@@ -216,10 +212,22 @@ impl Engine {
             rest.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
         literals.push(wlit);
         literals.extend(rest_lits.iter());
-        let result = exe.execute::<&xla::Literal>(&literals)?;
-        let lit = result[0][0].to_literal_sync()?;
-        let parts = lit.to_tuple()?;
-        parts.iter().map(HostTensor::from_literal).collect()
+        unpack_result(exe.execute::<&xla::Literal>(&literals)?)
+    }
+
+    /// Compile an HLO text file that is NOT part of a manifest and run it
+    /// once on raw host tensors (kernel debugging harnesses). Keeps the
+    /// `xla` types out of everything above this module.
+    pub fn run_hlo_file(&self, path: &str, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO {path}"))?;
+        let exe = self
+            .client
+            .compile(&xla::XlaComputation::from_proto(&proto))
+            .with_context(|| format!("compile {path}"))?;
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        unpack_result(exe.execute::<xla::Literal>(&literals)?)
     }
 
     /// Convenience: prepare + execute with the cached weights literal.
@@ -232,6 +240,14 @@ impl Engine {
         self.prepare(manifest, entry)?;
         self.execute_cached(entry, rest)
     }
+}
+
+/// Unpack an executed program's result into host tensors. aot.py lowers
+/// with return_tuple=True, so every program returns one tuple literal.
+fn unpack_result(result: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<HostTensor>> {
+    let lit = result[0][0].to_literal_sync()?;
+    let parts = lit.to_tuple()?;
+    parts.iter().map(HostTensor::from_literal).collect()
 }
 
 #[cfg(test)]

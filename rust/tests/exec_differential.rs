@@ -1,0 +1,201 @@
+//! Differential property testing of the planned executor.
+//!
+//! Randomized graphs — mixed ops, broadcasts, and their CumBA / ReduBA /
+//! ActiBA-rewritten variants — run through both the naive reference
+//! walker (`exec::naive`, the original interpreter) and the compiled
+//! `ExecutionPlan`. Outputs must agree *bitwise*: the planned kernels
+//! mirror the reference loops op-for-op, and fusion composes the exact
+//! same scalar functions. Every plan is also executed repeatedly (same
+//! and different inputs) to catch arena-reuse bugs — stale buffers, slot
+//! aliasing, cross-call state leaks.
+
+use xamba::exec::{naive, Backend, Plan, PlannedBackend};
+use xamba::graph::{Graph, NodeId, Tensor};
+use xamba::passes::{
+    actiba::ActibaPass, cumba::CumbaPass, reduba::RedubaPass, verify, Pass,
+};
+use xamba::util::Prng;
+
+/// Grow a random graph over a (m, n) input: elementwise chains (fusion
+/// fodder), scalar-left/right binaries, broadcast adds, scans,
+/// reductions, layout ops, matmuls, softmax, rmsnorm.
+fn random_graph(rng: &mut Prng, case: usize) -> Graph {
+    let mut g = Graph::new(&format!("exec_fuzz{case}"));
+    let m = 2 + rng.below(6);
+    let n = 2 + rng.below(6);
+    let x = g.input("x", vec![m, n]);
+    let mut frontier: Vec<NodeId> = vec![x];
+    let ops = 4 + rng.below(10);
+    for i in 0..ops {
+        let src = frontier[rng.below(frontier.len())];
+        let shape = g.shape(src).to_vec();
+        let nm = format!("op{i}");
+        let new = match rng.below(14) {
+            0 if shape.len() == 2 => g.cumsum(src, rng.below(2), &nm),
+            1 if !shape.is_empty() => g.reduce_sum(src, rng.below(shape.len()), &nm),
+            2 => g.silu(src, &nm),
+            3 => g.softplus(src, &nm),
+            4 => g.exp(src, &nm),
+            5 => {
+                let c = g.const_scalar(&format!("{nm}.c"), 0.5);
+                g.mul(src, c, &nm)
+            }
+            6 => {
+                // scalar-on-left, non-commutative: exercises the new
+                // ScalarLeft fast path on both executors
+                let c = g.const_scalar(&format!("{nm}.c"), 1.5);
+                g.sub(c, src, &nm)
+            }
+            7 if shape.len() == 2 => {
+                let row = Tensor::f32(vec![1, shape[1]], rng.normal_vec(shape[1]));
+                let c = g.constant(&format!("{nm}.row"), row);
+                g.add(src, c, &nm)
+            }
+            8 if shape.len() == 2 => g.transpose(src, vec![1, 0], &nm),
+            9 if shape.len() == 2 && shape[1] >= 2 => {
+                let len = 1 + rng.below(shape[1] - 1);
+                let start = rng.below(shape[1] - len + 1);
+                g.slice(src, 1, start, len, &nm)
+            }
+            10 if shape.len() == 2 => {
+                let k = shape[1];
+                let w: Vec<f32> = rng.normal_vec(k * k).iter().map(|v| v * 0.3).collect();
+                let c = g.constant(&format!("{nm}.w"), Tensor::f32(vec![k, k], w));
+                g.matmul(src, c, &nm)
+            }
+            11 if shape.len() == 2 => g.softmax(src, rng.below(2), &nm),
+            12 if !shape.is_empty() => {
+                let d = *shape.last().unwrap();
+                let w = g.constant(
+                    &format!("{nm}.w"),
+                    Tensor::f32(vec![d], rng.range_vec(d, 0.5, 1.5)),
+                );
+                g.rmsnorm(src, w, &nm)
+            }
+            13 if shape.len() == 2 => g.concat(&[src, src], rng.below(2), &nm),
+            _ => g.add(src, src, &nm),
+        };
+        frontier.push(new);
+    }
+    for (i, &f) in frontier.iter().enumerate() {
+        if i % 2 == 0 || i + 1 == frontier.len() {
+            g.output(f);
+        }
+    }
+    g
+}
+
+fn assert_bitwise(label: &str, want: &[Tensor], got: &[Tensor]) {
+    assert_eq!(want.len(), got.len(), "{label}: output arity");
+    for (o, (w, t)) in want.iter().zip(got).enumerate() {
+        assert_eq!(w.shape, t.shape, "{label}: output {o} shape");
+        assert_eq!(w.dtype(), t.dtype(), "{label}: output {o} dtype");
+        match w.dtype() {
+            xamba::graph::DType::F32 => {
+                for (i, (&a, &b)) in w.as_f32().iter().zip(t.as_f32()).enumerate() {
+                    assert!(
+                        a.to_bits() == b.to_bits(),
+                        "{label}: output {o}[{i}]: naive {a} ({:08x}) vs planned {b} ({:08x})",
+                        a.to_bits(),
+                        b.to_bits()
+                    );
+                }
+            }
+            xamba::graph::DType::I32 => {
+                assert_eq!(w.as_i32(), t.as_i32(), "{label}: output {o} payload");
+            }
+        }
+    }
+}
+
+/// One plan, several input sets, every input set executed twice — the
+/// second run must match the first exactly (arena-reuse determinism) and
+/// both must match a fresh naive walk.
+fn check_graph(g: &Graph, label: &str, rng: &mut Prng) {
+    let mut plan = PlannedBackend
+        .plan(g)
+        .unwrap_or_else(|e| panic!("{label}: plan failed: {e}"));
+    for trial in 0..3 {
+        let inputs = verify::random_inputs(g, rng, 0.5);
+        let want = naive::run(g, &inputs)
+            .unwrap_or_else(|e| panic!("{label} trial {trial}: naive: {e}"));
+        let got = plan
+            .execute(&inputs)
+            .unwrap_or_else(|e| panic!("{label} trial {trial}: planned: {e}"));
+        assert_bitwise(&format!("{label} trial {trial}"), &want, &got);
+        let again = plan
+            .execute(&inputs)
+            .unwrap_or_else(|e| panic!("{label} trial {trial}: re-execute: {e}"));
+        assert_bitwise(&format!("{label} trial {trial} (arena reuse)"), &got, &again);
+    }
+}
+
+#[test]
+fn planned_matches_naive_on_random_graphs() {
+    let mut rng = Prng::new(0xEC5_EC);
+    for case in 0..50 {
+        let g = random_graph(&mut rng, case);
+        check_graph(&g, &format!("case {case} base"), &mut rng);
+
+        // the XAMBA rewrites introduce tril-mask matmuls (CumBA),
+        // ones-mask MVMs (ReduBA) and PLU nodes (ActiBA) — all must
+        // execute identically under the plan
+        let exact = RedubaPass.apply(&CumbaPass.apply(&g));
+        check_graph(&exact, &format!("case {case} cumba+reduba"), &mut rng);
+        let approx = ActibaPass::default().apply(&exact);
+        check_graph(&approx, &format!("case {case} actiba"), &mut rng);
+    }
+}
+
+#[test]
+fn planned_matches_naive_on_gather_graphs() {
+    let mut rng = Prng::new(7);
+    for case in 0..8 {
+        let mut g = Graph::new(&format!("gather{case}"));
+        let v = 4 + rng.below(12);
+        let d = 2 + rng.below(6);
+        let t = 3 + rng.below(9);
+        let emb = g.input("emb", vec![v, d]);
+        let toks = g.input_i32("tokens", vec![t]);
+        let e = g.gather(emb, toks, "embed");
+        let s = g.silu(e, "act");
+        let r = g.reduce_sum(s, 0, "pool");
+        g.output(r);
+        g.output(e);
+        check_graph(&g, &format!("gather case {case}"), &mut rng);
+    }
+}
+
+#[test]
+fn plan_state_does_not_leak_across_differing_inputs() {
+    // same plan, alternating input sets — results must always equal a
+    // fresh naive run (no stale arena contents bleeding through)
+    let mut g = Graph::new("leak");
+    let x = g.input("x", vec![4, 4]);
+    let c = g.cumsum(x, 0, "c");
+    let sm = g.softmax(c, 1, "sm");
+    let mm = g.matmul(sm, x, "mm");
+    g.output(mm);
+    let mut plan = PlannedBackend.plan(&g).unwrap();
+    let mut rng = Prng::new(11);
+    let sets: Vec<Vec<Tensor>> =
+        (0..4).map(|_| verify::random_inputs(&g, &mut rng, 1.0)).collect();
+    for round in 0..3 {
+        for (si, inputs) in sets.iter().enumerate() {
+            let want = naive::run(&g, inputs).unwrap();
+            let got = plan.execute(inputs).unwrap();
+            assert_bitwise(&format!("round {round} set {si}"), &want, &got);
+        }
+    }
+}
+
+#[test]
+fn full_model_prefill_graph_matches_naive() {
+    // the big one: a tiny-mamba full prefill graph (gather, conv, scan
+    // unroll, rmsnorm, tied lm head) with random weights
+    use xamba::config::presets;
+    let shape = presets::tiny_mamba();
+    let g = xamba::models::build_prefill(&shape, 6);
+    let mut rng = Prng::new(3);
+    check_graph(&g, "tiny-mamba prefill", &mut rng);
+}

@@ -1,0 +1,131 @@
+//! Minimal offline re-implementation of the `anyhow` API surface xamba
+//! uses: `Error`, `Result`, the `anyhow!` macro, and the `Context`
+//! extension trait for `Result` and `Option`.
+//!
+//! The build environment has no crates.io access, so the real crate is
+//! replaced by this shim. Errors are a message string with the source
+//! chain flattened in at construction time — enough for every call site
+//! in the crate (display, `{e:#}` formatting, propagation via `?`).
+
+use std::fmt;
+
+/// An error message with its cause chain flattened into the text.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Any std error converts via `?` (the real anyhow's blanket impl). The
+// source chain is flattened into the message with ": " separators.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `anyhow::Result` — `Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error of a `Result` or the absence of an `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {}", e.into())))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{}: {}", f(), e.into())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn macro_forms() {
+        let a: Error = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let b: Error = anyhow!("x = {}", 3);
+        assert_eq!(b.to_string(), "x = 3");
+        let s = String::from("owned");
+        let c: Error = anyhow!(s);
+        assert_eq!(c.to_string(), "owned");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().to_string(), "gone");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest: gone");
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+    }
+}

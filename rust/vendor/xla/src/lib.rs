@@ -1,0 +1,230 @@
+//! API-compatible stub for the `xla` (xla-rs) crate.
+//!
+//! The offline build image does not carry the XLA C++ dependency closure,
+//! so this stub keeps the crate compiling and the *host-side* `Literal`
+//! type fully functional (construction, reshape, readback — what
+//! `runtime::HostTensor` round-trips through). Anything that would need a
+//! real PJRT client — compiling HLO, executing on a device — returns
+//! [`Error`] with an explanatory message at runtime.
+//!
+//! Replacing the `xla` path dependency in `rust/Cargo.toml` with a real
+//! vendored xla-rs checkout restores full PJRT execution; no call site
+//! changes are needed.
+
+use std::fmt;
+
+const UNAVAILABLE: &str = "XLA PJRT runtime is unavailable in this offline build \
+     (rust/vendor/xla is an API stub; vendor the real xla-rs crate to enable it)";
+
+/// Stub error type (string message).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(UNAVAILABLE.to_string()))
+}
+
+/// Element types we can represent host-side (plus a few placeholders so
+/// `match ... other => ...` arms in callers stay reachable).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    F64,
+    Pred,
+    U8,
+}
+
+/// Internal payload representation (public only because [`NativeType`]
+/// mentions it; treat as opaque).
+#[doc(hidden)]
+#[derive(Clone, Debug)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Host-side array literal: dims + row-major payload.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: LiteralData,
+}
+
+/// Shape (dims + element type) of an array literal.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Rust scalar types that map onto XLA element types.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn wrap(v: Vec<Self>) -> LiteralData;
+    fn unwrap(d: &LiteralData) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn wrap(v: Vec<Self>) -> LiteralData {
+        LiteralData::F32(v)
+    }
+    fn unwrap(d: &LiteralData) -> Option<Vec<Self>> {
+        match d {
+            LiteralData::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn wrap(v: Vec<Self>) -> LiteralData {
+        LiteralData::I32(v)
+    }
+    fn unwrap(d: &LiteralData) -> Option<Vec<Self>> {
+        match d {
+            LiteralData::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::wrap(v.to_vec()) }
+    }
+
+    /// Same payload under new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = match &self.data {
+            LiteralData::F32(v) => v.len() as i64,
+            LiteralData::I32(v) => v.len() as i64,
+        };
+        if want != have {
+            return Err(Error(format!("reshape {dims:?}: {want} elements vs {have}")));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.data {
+            LiteralData::F32(_) => ElementType::F32,
+            LiteralData::I32(_) => ElementType::S32,
+        };
+        Ok(ArrayShape { dims: self.dims.clone(), ty })
+    }
+
+    /// Copy the payload out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .ok_or_else(|| Error(format!("to_vec: literal is not {:?}", T::TY)))
+    }
+
+    /// Stub literals are never tuples (tuples only come from execution).
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (opaque; parsing needs the real XLA).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client handle. `cpu()` always fails in the stub.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+/// Compiled executable handle (unreachable in the stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// Device buffer handle (unreachable in the stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        let s = r.array_shape().unwrap();
+        assert_eq!(s.dims(), &[2, 2]);
+        assert_eq!(s.ty(), ElementType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nope").is_err());
+    }
+}
