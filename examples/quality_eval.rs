@@ -19,6 +19,9 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv).expect("args");
     let max_windows = args.get_usize("windows").unwrap_or(24);
+    // window evaluation is data-parallel on the exec pool; results are
+    // bitwise-identical at every worker count
+    let workers = args.get_usize("workers").unwrap_or(4);
     let window = 64usize;
     // held-out: seed differs from train.make_corpus(seed=7)
     let text = corpus::corpus(2500, 1234);
@@ -35,7 +38,8 @@ fn main() {
                 .expect("weights (run `make artifacts`)");
         let g = models::build_prefill(&shape, window);
         let (exact_rep, exact_logits) =
-            eval_lm(&shape, &g, &weights, &text, window, max_windows, None);
+            eval_lm(&shape, &g, &weights, &text, window, max_windows, None, workers)
+                .expect("exact eval");
         table.row(&[
             format!("{name} (exact)"),
             format!("{:.3}", exact_rep.ppl),
@@ -47,8 +51,9 @@ fn main() {
             let gp = ActibaPass::with_segments(segments).apply(&g);
             let (rep, _) = eval_lm(
                 &shape, &gp, &weights, &text, window, max_windows,
-                Some(&exact_logits),
-            );
+                Some(&exact_logits), workers,
+            )
+            .expect("plu eval");
             table.row(&[
                 format!("{name} PLU-{segments}"),
                 format!("{:.3}", rep.ppl),
@@ -79,8 +84,9 @@ fn main() {
                 Some(k) => ActibaPass::with_segments(k).apply(&g),
             };
             let (a1, a2) = xamba::quality::induction_probe(
-                &shape, &g, &weights, window, 12, 42,
-            );
+                &shape, &g, &weights, window, 12, 42, workers,
+            )
+            .expect("induction probe");
             t2.row(&[
                 format!("{name} ({label})"),
                 format!("{a1:.3}"),

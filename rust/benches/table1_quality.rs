@@ -14,6 +14,7 @@ use xamba::util::{corpus, Table};
 fn main() {
     let window = 64usize;
     let max_windows = 8; // bench-sized; examples/quality_eval.rs runs more
+    let workers = 4; // pooled window eval; bitwise-identical to serial
     let text = corpus::corpus(1200, 1234);
     let mut table = Table::new(&["model", "PPL ↓", "ACC ↑", "Δacc vs exact"])
         .with_title("Table 1 (substitute): PLU quality on held-out corpus");
@@ -23,7 +24,9 @@ fn main() {
         let weights = params::load_f32_bin(&format!("artifacts/weights_{name}.bin"))
             .expect("run `make artifacts` first");
         let g = models::build_prefill(&shape, window);
-        let (exact, _) = eval_lm(&shape, &g, &weights, &text, window, max_windows, None);
+        let (exact, _) =
+            eval_lm(&shape, &g, &weights, &text, window, max_windows, None, workers)
+                .expect("exact eval");
         table.row(&[
             format!("{name} (exact)"),
             format!("{:.3}", exact.ppl),
@@ -31,7 +34,9 @@ fn main() {
             "-".into(),
         ]);
         let gp = ActibaPass::with_segments(32).apply(&g);
-        let (plu, _) = eval_lm(&shape, &gp, &weights, &text, window, max_windows, None);
+        let (plu, _) =
+            eval_lm(&shape, &gp, &weights, &text, window, max_windows, None, workers)
+                .expect("plu eval");
         let dacc = plu.top1 - exact.top1;
         table.row(&[
             format!("{name} PLU-32"),

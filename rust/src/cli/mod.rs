@@ -12,7 +12,7 @@ mod args;
 pub use args::Args;
 
 use crate::config::{self, presets, NpuConfig, ServeConfig};
-use crate::coordinator::{start_pjrt, GenParams};
+use crate::coordinator::{start_backend, GenParams};
 use crate::graph::Census;
 use crate::npu::Profile;
 use crate::passes::{actiba::ActibaPass, cumba::CumbaPass, reduba::RedubaPass, Pass};
@@ -41,9 +41,12 @@ xamba — SSMs on resource-constrained NPUs (paper reproduction)
 USAGE: xamba <command> [--flag value ...]
 
 COMMANDS:
-  serve     --model tiny-mamba --variant xamba [--artifacts DIR]
+  serve     --model tiny-mamba --variant xamba [--backend planned|pjrt]
+            [--artifacts DIR] [--weights FILE] [--window 32] [--workers 0]
             [--max-new 48] [--temperature 0.0]
-            reads prompts from stdin (one per line), prints completions
+            reads prompts from stdin (one per line), prints completions;
+            the default planned backend needs no artifacts (untrained
+            weights are random-initialized when no .bin file is found)
   profile   --model block130m-mamba2 [--t 4] [--passes cumba,reduba,actiba]
             [--config FILE] [--pipelined] [--energy]
             simulated-NPU per-op latency breakdown
@@ -60,6 +63,9 @@ fn npu_from(args: &Args) -> Result<NpuConfig, String> {
 
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let mut cfg = ServeConfig::default();
+    if let Some(b) = args.get("backend") {
+        cfg.backend = b.to_string();
+    }
     if let Some(d) = args.get("artifacts") {
         cfg.artifacts_dir = d.to_string();
     }
@@ -69,12 +75,31 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     if let Some(v) = args.get("variant") {
         cfg.variant = v.to_string();
     }
+    if let Some(w) = args.get("weights") {
+        cfg.weights_path = w.to_string();
+    }
+    if let Some(w) = args.get_usize("window") {
+        cfg.prefill_window = w;
+    }
+    if let Some(w) = args.get_usize("workers") {
+        cfg.workers = w;
+    }
+    if cfg.backend == "pjrt" {
+        for flag in ["weights", "window", "workers"] {
+            if args.get(flag).is_some() {
+                eprintln!(
+                    "warning: --{flag} only applies to the planned backend; \
+                     the pjrt backend takes it from the manifest"
+                );
+            }
+        }
+    }
     let max_new = args.get_usize("max-new").unwrap_or(48);
     let temperature = args.get_f32("temperature").unwrap_or(0.0);
-    let server = start_pjrt(&cfg).map_err(|e| format!("{e:#}"))?;
+    let server = start_backend(&cfg).map_err(|e| format!("{e:#}"))?;
     eprintln!(
-        "serving {} ({}) from {} — type a prompt per line, ctrl-d to stop",
-        cfg.model, cfg.variant, cfg.artifacts_dir
+        "serving {} ({}) on the {} backend — type a prompt per line, ctrl-d to stop",
+        cfg.model, cfg.variant, cfg.backend
     );
     let stdin = std::io::stdin();
     let mut line = String::new();

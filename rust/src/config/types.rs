@@ -183,6 +183,9 @@ impl ModelShape {
 /// Serving configuration for the coordinator.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeConfig {
+    /// Model backend: "planned" (IR graphs on the planned executor — no
+    /// artifacts required) | "pjrt" (AOT executables).
+    pub backend: String,
     /// Directory holding the AOT artifacts (manifest.json etc.).
     pub artifacts_dir: String,
     /// Model preset name from the manifest (e.g. "tiny-mamba").
@@ -199,11 +202,22 @@ pub struct ServeConfig {
     pub default_max_new_tokens: usize,
     /// Microseconds the batcher waits to fill a larger bucket.
     pub batch_wait_us: u64,
+    /// Prefill window of the planned backend (PJRT takes it from the
+    /// manifest).
+    pub prefill_window: usize,
+    /// Execution-pool worker threads for the planned backend; 0 = auto
+    /// (available parallelism, capped at 4), 1 = serial.
+    pub workers: usize,
+    /// Explicit weights file for the planned backend; "" = use
+    /// `{artifacts_dir}/weights_{model}.bin` if present, else a
+    /// deterministic random init.
+    pub weights_path: String,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
         Self {
+            backend: "planned".into(),
             artifacts_dir: "artifacts".into(),
             model: "tiny-mamba".into(),
             variant: "xamba".into(),
@@ -212,6 +226,9 @@ impl Default for ServeConfig {
             max_slots: 64,
             default_max_new_tokens: 48,
             batch_wait_us: 200,
+            prefill_window: 32,
+            workers: 0,
+            weights_path: String::new(),
         }
     }
 }
@@ -233,6 +250,7 @@ impl ServeConfig {
             })
             .unwrap_or(d.decode_buckets.clone());
         Self {
+            backend: doc.str_or(&k("backend"), &d.backend).into(),
             artifacts_dir: doc.str_or(&k("artifacts_dir"), &d.artifacts_dir).into(),
             model: doc.str_or(&k("model"), &d.model).into(),
             variant: doc.str_or(&k("variant"), &d.variant).into(),
@@ -244,6 +262,13 @@ impl ServeConfig {
                 as usize,
             batch_wait_us: doc.i64_or(&k("batch_wait_us"), d.batch_wait_us as i64)
                 as u64,
+            // clamp: a negative value would wrap through `as usize` into
+            // an enormous thread count / unroll length
+            prefill_window: doc
+                .i64_or(&k("prefill_window"), d.prefill_window as i64)
+                .max(1) as usize,
+            workers: doc.i64_or(&k("workers"), d.workers as i64).max(0) as usize,
+            weights_path: doc.str_or(&k("weights_path"), &d.weights_path).into(),
         }
     }
 }
@@ -270,6 +295,17 @@ mod tests {
         let c = ServeConfig::from_doc(&doc, "serve");
         assert_eq!(c.model, "tiny-mamba2");
         assert_eq!(c.decode_buckets, vec![1, 4]);
+        // untouched backend knobs keep defaults
+        assert_eq!(c.backend, "planned");
+        assert_eq!(c.workers, 0);
+    }
+
+    #[test]
+    fn serve_from_doc_clamps_negative_backend_knobs() {
+        let doc = TomlDoc::parse("[serve]\nworkers = -1\nprefill_window = -3\n").unwrap();
+        let c = ServeConfig::from_doc(&doc, "serve");
+        assert_eq!(c.workers, 0, "negative workers must not wrap");
+        assert_eq!(c.prefill_window, 1, "negative window must not wrap");
     }
 
     #[test]

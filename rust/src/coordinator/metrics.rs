@@ -11,6 +11,8 @@ pub struct Metrics {
     pub admitted: u64,
     pub rejected: u64,
     pub cancelled: u64,
+    /// Requests ended by a backend decode failure (FinishReason::Failed).
+    pub failed: u64,
     pub completed: u64,
     pub tokens_out: u64,
     pub prefills: u64,
@@ -19,6 +21,8 @@ pub struct Metrics {
     pub ttft_us: LatencyHistogram,
     pub e2e_us: LatencyHistogram,
     pub per_token_us: LatencyHistogram,
+    /// Wall latency of each whole decode batch call (all bucket sizes).
+    pub decode_batch_us: LatencyHistogram,
 }
 
 impl Default for Metrics {
@@ -28,6 +32,7 @@ impl Default for Metrics {
             admitted: 0,
             rejected: 0,
             cancelled: 0,
+            failed: 0,
             completed: 0,
             tokens_out: 0,
             prefills: 0,
@@ -36,6 +41,7 @@ impl Default for Metrics {
             ttft_us: LatencyHistogram::new(),
             e2e_us: LatencyHistogram::new(),
             per_token_us: LatencyHistogram::new(),
+            decode_batch_us: LatencyHistogram::new(),
         }
     }
 }
@@ -60,13 +66,24 @@ impl Metrics {
         }
     }
 
+    /// Decode-batch latency percentiles in microseconds: (p50, p95, p99).
+    pub fn decode_batch_percentiles_us(&self) -> (f64, f64, f64) {
+        (
+            self.decode_batch_us.percentile_us(50.0),
+            self.decode_batch_us.percentile_us(95.0),
+            self.decode_batch_us.percentile_us(99.0),
+        )
+    }
+
     /// Render the serving report table.
     pub fn report(&self) -> Table {
+        let (batch_p50, batch_p95, batch_p99) = self.decode_batch_percentiles_us();
         let mut t = Table::new(&["metric", "value"]).with_title("serving metrics");
         let rows = [
             ("admitted", format!("{}", self.admitted)),
             ("rejected", format!("{}", self.rejected)),
             ("cancelled", format!("{}", self.cancelled)),
+            ("failed", format!("{}", self.failed)),
             ("completed", format!("{}", self.completed)),
             ("tokens out", format!("{}", self.tokens_out)),
             ("tokens/s", format!("{:.1}", self.tokens_per_s())),
@@ -81,6 +98,9 @@ impl Metrics {
                 "per-token p50",
                 format!("{:.2} ms", self.per_token_us.percentile_us(50.0) / 1e3),
             ),
+            ("decode batch p50", format!("{:.2} ms", batch_p50 / 1e3)),
+            ("decode batch p95", format!("{:.2} ms", batch_p95 / 1e3)),
+            ("decode batch p99", format!("{:.2} ms", batch_p99 / 1e3)),
         ];
         for (k, v) in rows {
             t.row(&[k.to_string(), v]);
@@ -107,5 +127,18 @@ mod tests {
         let s = m.report().render();
         assert!(s.contains("tokens/s"));
         assert!(s.contains("TTFT"));
+        assert!(s.contains("decode batch p95"));
+    }
+
+    #[test]
+    fn decode_batch_percentiles_track_recordings() {
+        let mut m = Metrics::default();
+        for us in 1..=1000 {
+            m.decode_batch_us.record_us(us as f64);
+        }
+        let (p50, p95, p99) = m.decode_batch_percentiles_us();
+        assert!((p50 - 500.0).abs() / 500.0 < 0.06, "p50 {p50}");
+        assert!(p50 < p95 && p95 < p99, "{p50} {p95} {p99}");
+        assert!((p99 - 990.0).abs() / 990.0 < 0.06, "p99 {p99}");
     }
 }

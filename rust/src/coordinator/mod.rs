@@ -17,8 +17,8 @@ pub mod state_cache;
 pub mod tokenizer;
 
 pub use metrics::Metrics;
-pub use model::{MockModel, PjrtServeModel, SeqState, ServeModel};
+pub use model::{MockModel, PjrtServeModel, PlannedServeModel, SeqState, ServeModel};
 pub use request::{FinishReason, GenParams, Request, Response, StreamEvent};
-pub use server::{sample, start_pjrt, Server};
+pub use server::{sample, start_backend, start_pjrt, start_planned, Server};
 pub use state_cache::StateCache;
 pub use tokenizer::Tokenizer;

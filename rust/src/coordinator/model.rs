@@ -1,15 +1,27 @@
 //! Model abstraction the scheduler drives: a fixed-window prefill plus
-//! bucketed batched decode. `PjrtServeModel` is the production binding to
+//! bucketed batched decode. `PlannedServeModel` is the production binding
+//! for the planned executor (IR graphs compiled once into cached
+//! `ExecutionPlan`s, no PJRT artifacts needed); `PjrtServeModel` binds to
 //! the AOT artifacts; `MockModel` makes the scheduler/batcher/state-cache
-//! logic unit-testable without PJRT.
+//! logic unit-testable without either.
+
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
+use crate::config::{presets, ModelShape, ServeConfig};
+use crate::exec::{ExecJob, PlanCache, WorkerPool};
+use crate::graph::{Graph, Tensor};
+use crate::models::params::{full_spec, load_f32_bin};
+use crate::models::{build_decode_batched, build_prefill_serve};
+use crate::passes::{actiba::ActibaPass, Pass};
+use crate::quality::param_inputs;
 use crate::runtime::{Engine, HostTensor, Manifest, ProgramEntry};
+use crate::util::Prng;
 
 /// Recurrent state of one sequence (the serving layer's "KV cache" —
 /// fixed-size per the SSM's O(1)-state property the paper leans on).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SeqState {
     pub conv: HostTensor,
     pub ssm: HostTensor,
@@ -163,6 +175,376 @@ impl ServeModel for PjrtServeModel {
             result.push(logits_all[i * v..(i + 1) * v].to_vec());
         }
         Ok(result)
+    }
+}
+
+// --- planned-executor implementation ------------------------------------------
+
+/// Production backend for environments without PJRT artifacts: serves
+/// directly off IR graphs through the planned executor.
+///
+/// At construction it builds the serve-prefill graph plus one batched
+/// decode graph per bucket and compiles each into a cached
+/// [`ExecutionPlan`](crate::exec::ExecutionPlan) — compile once at server
+/// start, reuse across all requests. Recurrent state travels as plain
+/// host tensors (`SeqState`), stacked `(n_layers, ...)` per sequence.
+///
+/// With `workers > 1` a [`WorkerPool`] shards decode buckets into
+/// smaller compiled buckets, one sub-batch per worker; every worker owns
+/// its own plans and arenas (no shared mutable state), and pooled
+/// results are bitwise-identical to the serial path.
+pub struct PlannedServeModel {
+    shape: ModelShape,
+    window: usize,
+    buckets: Vec<usize>, // ascending, deduped
+    vocab: usize,
+    params: Arc<Vec<Tensor>>,
+    cache: PlanCache,
+    decode_graphs: Vec<DecodeEntry>,
+    pool: Option<WorkerPool>,
+}
+
+/// One compiled decode bucket: size, plan-cache key (precomputed — the
+/// decode hot path clones refcounts, not strings), and the IR graph the
+/// pool workers compile from.
+struct DecodeEntry {
+    bucket: usize,
+    key: Arc<str>,
+    graph: Arc<Graph>,
+}
+
+impl PlannedServeModel {
+    /// Compile prefill + every decode bucket for `shape` over `weights`
+    /// (flat `full_spec` order). `variant` mirrors the AOT pipeline:
+    /// `"baseline"` executes exact activations, `"xamba"` applies the
+    /// ActiBA PLU rewrite to every graph before compilation.
+    pub fn new(
+        shape: &ModelShape,
+        weights: &[f32],
+        window: usize,
+        buckets: &[usize],
+        workers: usize,
+        variant: &str,
+    ) -> Result<Self> {
+        if shape.arch != "mamba" {
+            return Err(anyhow!(
+                "planned serving supports arch \"mamba\" (got {:?})",
+                shape.arch
+            ));
+        }
+        let spec = full_spec(shape);
+        if spec.total() != weights.len() {
+            return Err(anyhow!(
+                "weights length {} does not match spec total {} for {}",
+                weights.len(),
+                spec.total(),
+                shape.name
+            ));
+        }
+        if window < shape.d_conv.saturating_sub(1).max(1) {
+            return Err(anyhow!(
+                "prefill window {window} shorter than conv state {}",
+                shape.d_conv.saturating_sub(1)
+            ));
+        }
+        let mut buckets = buckets.to_vec();
+        buckets.sort_unstable();
+        buckets.dedup();
+        if buckets.is_empty() || buckets[0] == 0 {
+            return Err(anyhow!("decode buckets must be non-empty and positive"));
+        }
+        let rewrite = |g: Graph| -> Result<Graph> {
+            match variant {
+                "" | "baseline" => Ok(g),
+                "xamba" => Ok(ActibaPass::default().apply(&g)),
+                other => Err(anyhow!("unknown variant {other:?} (want baseline|xamba)")),
+            }
+        };
+
+        let params = Arc::new(param_inputs(&spec, weights));
+        let mut cache = PlanCache::new();
+        let prefill = rewrite(build_prefill_serve(shape, window))?;
+        cache.insert_with("prefill", &prefill, &params).map_err(|e| anyhow!(e))?;
+        let mut decode_graphs = Vec::with_capacity(buckets.len());
+        for &b in &buckets {
+            let g = Arc::new(rewrite(build_decode_batched(shape, b))?);
+            let key: Arc<str> = format!("decode_b{b}").into();
+            cache.insert_with(&key, &g, &params).map_err(|e| anyhow!(e))?;
+            decode_graphs.push(DecodeEntry { bucket: b, key, graph: g });
+        }
+
+        let model = Self {
+            shape: shape.clone(),
+            window,
+            buckets,
+            vocab: shape.vocab_size,
+            params,
+            cache,
+            decode_graphs,
+            pool: if workers > 1 { Some(WorkerPool::new(workers)) } else { None },
+        };
+        model.warm_pool()?;
+        Ok(model)
+    }
+
+    /// Build from serving config: weights come from `weights_path`, else
+    /// the trained artifacts file if present, else a deterministic random
+    /// init (keeps `xamba serve` runnable with no `artifacts/` at all —
+    /// useful output still requires trained weights).
+    pub fn from_config(cfg: &ServeConfig) -> Result<Self> {
+        let shape = presets::model_by_name(&cfg.model)
+            .ok_or_else(|| anyhow!("unknown model {:?}", cfg.model))?;
+        let weights = if !cfg.weights_path.is_empty() {
+            load_f32_bin(&cfg.weights_path).map_err(|e| anyhow!(e))?
+        } else {
+            let trained = format!("{}/weights_{}.bin", cfg.artifacts_dir, cfg.model);
+            if std::path::Path::new(&trained).exists() {
+                load_f32_bin(&trained).map_err(|e| anyhow!(e))?
+            } else {
+                Self::random_weights(&shape, 42)
+            }
+        };
+        let workers = if cfg.workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4)
+        } else {
+            cfg.workers
+        };
+        Self::new(
+            &shape,
+            &weights,
+            cfg.prefill_window,
+            &cfg.decode_buckets,
+            workers,
+            &cfg.variant,
+        )
+    }
+
+    /// Deterministic random weights in `full_spec` order — small and
+    /// symmetric so the untrained tiny nets stay numerically tame.
+    pub fn random_weights(shape: &ModelShape, seed: u64) -> Vec<f32> {
+        let spec = full_spec(shape);
+        let mut rng = Prng::new(seed);
+        rng.range_vec(spec.total(), -0.08, 0.08)
+    }
+
+    /// How many plan compilations construction performed (stays flat
+    /// under traffic: one per (program, bucket)).
+    pub fn plan_compiles(&self) -> usize {
+        self.cache.compile_count()
+    }
+
+    /// Worker threads backing pooled decode (1 = serial).
+    pub fn pool_workers(&self) -> usize {
+        self.pool.as_ref().map(|p| p.workers()).unwrap_or(1)
+    }
+
+    fn dims(&self) -> (usize, usize, usize) {
+        (self.shape.d_conv, self.shape.d_inner(), self.shape.d_state)
+    }
+
+    /// First decode of a chunk size on a worker compiles that worker's
+    /// private plan; run a zero-state batch per (worker, chunk) up front
+    /// so no live request pays the compile. Only chunk sizes the pool
+    /// can actually dispatch (`pool_chunk` over the configured buckets)
+    /// are warmed — full-size buckets always run on the serial cache.
+    fn warm_pool(&self) -> Result<()> {
+        if let Some(pool) = &self.pool {
+            let (k, di, n) = self.dims();
+            let mut chunks: Vec<usize> =
+                self.buckets.iter().filter_map(|&b| self.pool_chunk(b)).collect();
+            chunks.sort_unstable();
+            chunks.dedup();
+            for &b in &chunks {
+                let entry = self
+                    .decode_graphs
+                    .iter()
+                    .find(|e| e.bucket == b)
+                    .expect("pool chunk is a compiled bucket");
+                let jobs: Vec<ExecJob> = (0..pool.workers())
+                    .map(|_| {
+                        let mut tail = Vec::with_capacity(1 + 2 * self.shape.n_layers);
+                        tail.push(Tensor::i32(vec![b], vec![0; b]));
+                        for _ in 0..self.shape.n_layers {
+                            tail.push(Tensor::zeros(vec![b, k - 1, di]));
+                            tail.push(Tensor::zeros(vec![b, di, n]));
+                        }
+                        ExecJob {
+                            graph: entry.graph.clone(),
+                            key: entry.key.clone(),
+                            shared: self.params.clone(),
+                            tail,
+                        }
+                    })
+                    .collect();
+                for r in pool.execute_batch(jobs) {
+                    r.map_err(|e| anyhow!("pool warmup (chunk {b}): {e}"))?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-call decode inputs after the bound parameter prefix: tokens,
+    /// then per layer the batch-stacked conv and ssm states.
+    fn decode_tail(&self, seqs: &[(&mut SeqState, i32)]) -> Vec<Tensor> {
+        let b = seqs.len();
+        let (k, di, n) = self.dims();
+        let conv_len = (k - 1) * di;
+        let ssm_len = di * n;
+        let mut tail = Vec::with_capacity(1 + 2 * self.shape.n_layers);
+        tail.push(Tensor::i32(vec![b], seqs.iter().map(|(_, t)| *t).collect()));
+        for j in 0..self.shape.n_layers {
+            let mut conv = Vec::with_capacity(b * conv_len);
+            let mut ssm = Vec::with_capacity(b * ssm_len);
+            for (s, _) in seqs {
+                conv.extend_from_slice(
+                    &s.conv.f32_data()[j * conv_len..(j + 1) * conv_len],
+                );
+                ssm.extend_from_slice(&s.ssm.f32_data()[j * ssm_len..(j + 1) * ssm_len]);
+            }
+            tail.push(Tensor::f32(vec![b, k - 1, di], conv));
+            tail.push(Tensor::f32(vec![b, di, n], ssm));
+        }
+        tail
+    }
+
+    /// Unpack one decode call's outputs into the sequences' states and
+    /// append each sequence's logits row to `logits`.
+    fn apply_outputs(
+        &self,
+        seqs: &mut [(&mut SeqState, i32)],
+        outs: &[Tensor],
+        logits: &mut Vec<Vec<f32>>,
+    ) {
+        let (k, di, n) = self.dims();
+        let conv_len = (k - 1) * di;
+        let ssm_len = di * n;
+        let nl = self.shape.n_layers;
+        let v = self.vocab;
+        let logits_all = outs[0].as_f32();
+        for (i, (state, _)) in seqs.iter_mut().enumerate() {
+            let mut conv = Vec::with_capacity(nl * conv_len);
+            let mut ssm = Vec::with_capacity(nl * ssm_len);
+            for j in 0..nl {
+                conv.extend_from_slice(
+                    &outs[1 + 2 * j].as_f32()[i * conv_len..(i + 1) * conv_len],
+                );
+                ssm.extend_from_slice(
+                    &outs[2 + 2 * j].as_f32()[i * ssm_len..(i + 1) * ssm_len],
+                );
+            }
+            state.conv = HostTensor::F32(vec![nl, k - 1, di], conv);
+            state.ssm = HostTensor::F32(vec![nl, di, n], ssm);
+            logits.push(logits_all[i * v..(i + 1) * v].to_vec());
+        }
+    }
+
+    /// Split bucket `b` into equal sub-buckets for the pool: the largest
+    /// worker count that divides `b` into compiled bucket sizes wins.
+    /// None = run serially (no pool, or no clean split exists).
+    fn pool_chunk(&self, b: usize) -> Option<usize> {
+        let w = self.pool.as_ref()?.workers();
+        if w <= 1 || b < 2 {
+            return None;
+        }
+        for parts in (2..=w.min(b)).rev() {
+            if b % parts == 0 && self.buckets.binary_search(&(b / parts)).is_ok() {
+                return Some(b / parts);
+            }
+        }
+        None
+    }
+}
+
+impl ServeModel for PlannedServeModel {
+    fn prefill_len(&self) -> usize {
+        self.window
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn decode_buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn prefill(&mut self, tokens: &[i32]) -> Result<(Vec<f32>, SeqState)> {
+        if tokens.len() != self.window {
+            return Err(anyhow!(
+                "prefill expects exactly {} tokens, got {}",
+                self.window,
+                tokens.len()
+            ));
+        }
+        let tail = vec![Tensor::i32(vec![self.window], tokens.to_vec())];
+        let outs = self.cache.run("prefill", tail).map_err(|e| anyhow!(e))?;
+        let logits = outs[0].as_f32().to_vec(); // (1, V) row
+        let (k, di, n) = self.dims();
+        let nl = self.shape.n_layers;
+        let mut conv = Vec::with_capacity(nl * (k - 1) * di);
+        let mut ssm = Vec::with_capacity(nl * di * n);
+        for j in 0..nl {
+            conv.extend_from_slice(outs[1 + 2 * j].as_f32());
+            ssm.extend_from_slice(outs[2 + 2 * j].as_f32());
+        }
+        Ok((
+            logits,
+            SeqState {
+                conv: HostTensor::F32(vec![nl, k - 1, di], conv),
+                ssm: HostTensor::F32(vec![nl, di, n], ssm),
+            },
+        ))
+    }
+
+    fn decode(&mut self, seqs: &mut [(&mut SeqState, i32)]) -> Result<Vec<Vec<f32>>> {
+        let b = seqs.len();
+        if self.buckets.binary_search(&b).is_err() {
+            return Err(anyhow!("no decode bucket of size {b}"));
+        }
+        let mut logits = Vec::with_capacity(b);
+        if let Some(chunk) = self.pool_chunk(b) {
+            let entry = self
+                .decode_graphs
+                .iter()
+                .find(|e| e.bucket == chunk)
+                .expect("pool chunk is a compiled bucket");
+            let jobs: Vec<ExecJob> = seqs
+                .chunks(chunk)
+                .map(|sub| ExecJob {
+                    graph: entry.graph.clone(),
+                    key: entry.key.clone(),
+                    shared: self.params.clone(),
+                    tail: self.decode_tail(sub),
+                })
+                .collect();
+            let results =
+                self.pool.as_ref().expect("pool_chunk implies pool").execute_batch(jobs);
+            // collect every chunk BEFORE touching any state, so a failed
+            // chunk leaves all sequences exactly as they were
+            let mut all_outs = Vec::with_capacity(results.len());
+            for r in results {
+                all_outs.push(r.map_err(|e| anyhow!("pooled decode: {e}"))?);
+            }
+            for (ch, outs) in all_outs.iter().enumerate() {
+                self.apply_outputs(
+                    &mut seqs[ch * chunk..(ch + 1) * chunk],
+                    outs,
+                    &mut logits,
+                );
+            }
+        } else {
+            let entry = self
+                .decode_graphs
+                .iter()
+                .find(|e| e.bucket == b)
+                .expect("bucket membership checked above");
+            let key = entry.key.clone();
+            let tail = self.decode_tail(seqs);
+            let outs = self.cache.run(&key, tail).map_err(|e| anyhow!(e))?;
+            self.apply_outputs(seqs, &outs, &mut logits);
+        }
+        Ok(logits)
     }
 }
 

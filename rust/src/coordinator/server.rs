@@ -322,6 +322,7 @@ fn engine_loop(
                             m.decode_batched_seqs += idxs.len() as u64;
                             m.tokens_out += idxs.len() as u64;
                             m.per_token_us.record_us(step_us / idxs.len() as f64);
+                            m.decode_batch_us.record_us(step_us);
                         }
                         let mut finished: Vec<usize> = Vec::new();
                         let mut cancelled: Vec<usize> = Vec::new();
@@ -414,6 +415,30 @@ fn engine_loop(
                         for i in sorted {
                             let seq = active.swap_remove(i);
                             cache.release(seq.slot);
+                            // tell the client instead of letting it stare
+                            // at a dead channel until its recv times out
+                            let now = Instant::now();
+                            {
+                                let mut m = metrics.lock().unwrap();
+                                m.failed += 1;
+                            }
+                            seq.reply.finish(Response {
+                                id: seq.id,
+                                prompt: seq.prompt,
+                                generated: seq
+                                    .generated
+                                    .iter()
+                                    .map(|&t| t.clamp(0, 255) as u8)
+                                    .collect(),
+                                finish: FinishReason::Failed,
+                                ttft_us: seq
+                                    .first_token_at
+                                    .duration_since(seq.arrived)
+                                    .as_micros() as f64,
+                                e2e_us: now.duration_since(seq.arrived).as_micros()
+                                    as f64,
+                                batch_trace: seq.batch_trace,
+                            });
                         }
                         continue;
                     }
@@ -457,6 +482,32 @@ pub fn start_pjrt(cfg: &ServeConfig) -> Result<Server> {
         },
         cfg.clone(),
     )
+}
+
+/// Convenience: start a server on the planned executor (no PJRT, no
+/// artifacts required). The model — graphs, cached plans, and the
+/// execution pool — is constructed and owned inside the engine thread;
+/// shutdown drops it there, which joins the pool's workers.
+pub fn start_planned(cfg: &ServeConfig) -> Result<Server> {
+    let c = cfg.clone();
+    Server::start(
+        move || {
+            Ok(Box::new(super::model::PlannedServeModel::from_config(&c)?)
+                as Box<dyn ServeModel>)
+        },
+        cfg.clone(),
+    )
+}
+
+/// Start the backend `cfg.backend` selects ("planned" | "pjrt").
+pub fn start_backend(cfg: &ServeConfig) -> Result<Server> {
+    match cfg.backend.as_str() {
+        "" | "planned" => start_planned(cfg),
+        "pjrt" => start_pjrt(cfg),
+        other => Err(anyhow::anyhow!(
+            "unknown serve backend {other:?} (want planned|pjrt)"
+        )),
+    }
 }
 
 #[cfg(test)]
@@ -618,6 +669,48 @@ mod tests {
         assert_eq!(r.finish, FinishReason::Length);
         let m = server.shutdown();
         assert_eq!(m.cancelled, 1);
+    }
+
+    #[test]
+    fn decode_failure_reports_failed_response() {
+        use crate::coordinator::model::SeqState;
+
+        // prefill succeeds (first token delivered), every decode errors
+        struct FailingDecode(MockModel);
+        impl ServeModel for FailingDecode {
+            fn prefill_len(&self) -> usize {
+                self.0.prefill_len()
+            }
+            fn vocab(&self) -> usize {
+                self.0.vocab()
+            }
+            fn decode_buckets(&self) -> &[usize] {
+                self.0.decode_buckets()
+            }
+            fn prefill(&mut self, tokens: &[i32]) -> Result<(Vec<f32>, SeqState)> {
+                self.0.prefill(tokens)
+            }
+            fn decode(
+                &mut self,
+                _seqs: &mut [(&mut SeqState, i32)],
+            ) -> Result<Vec<Vec<f32>>> {
+                Err(anyhow::anyhow!("synthetic decode failure"))
+            }
+        }
+
+        let model = FailingDecode(MockModel::new(8, 256, vec![1]));
+        let server =
+            Server::start(move || Ok(Box::new(model) as _), test_cfg(2)).unwrap();
+        let rx = server.submit(
+            b"a",
+            GenParams { max_new_tokens: 5, ..Default::default() },
+        );
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.finish, FinishReason::Failed);
+        assert_eq!(resp.generated, b"b", "the prefill token was already delivered");
+        let m = server.shutdown();
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.completed, 0);
     }
 
     #[test]

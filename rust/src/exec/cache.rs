@@ -1,0 +1,182 @@
+//! Compile-once plan cache with an `Arc`-shared input prefix.
+//!
+//! The coordinator's serving path and the worker pool both execute the
+//! same graphs over and over with a large, constant input prefix (the
+//! model parameters) and a small per-call tail (token + recurrent
+//! states). A [`PlanCache`] compiles each graph exactly once under a
+//! caller-chosen key and holds ONE `Arc` to the shared prefix for the
+//! whole cache — every key in a cache must share the same prefix (they
+//! do: one cache serves one model). Execution goes through
+//! [`ExecutionPlan::run_with_prefix`], so neither insertion nor a
+//! steady-state call copies a single parameter tensor: the parameters
+//! exist once per process however many caches (pool workers) share the
+//! `Arc`.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::graph::{Graph, Tensor};
+
+use super::plan::ExecutionPlan;
+
+/// Keyed store of compiled [`ExecutionPlan`]s. Keys identify a
+/// (program, bucket) pair — e.g. `"prefill"`, `"decode_b4"` — and each
+/// key is compiled at most once for the cache's lifetime.
+#[derive(Default)]
+pub struct PlanCache {
+    plans: HashMap<String, ExecutionPlan>,
+    /// Input prefix shared by every plan in the cache; bound (by `Arc`
+    /// clone) at first insert.
+    shared: Arc<Vec<Tensor>>,
+    compiles: usize,
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Compile `graph` under `key`. The first insert binds `shared` as
+    /// the cache-wide input prefix; later inserts must pass the same
+    /// prefix (one cache serves one model's parameter set). A second
+    /// insert under an existing key is a no-op (the existing plan wins),
+    /// preserving compile-once semantics.
+    pub fn insert_with(
+        &mut self,
+        key: &str,
+        graph: &Graph,
+        shared: &Arc<Vec<Tensor>>,
+    ) -> Result<(), String> {
+        if self.plans.contains_key(key) {
+            return Ok(());
+        }
+        if self.plans.is_empty() {
+            self.shared = shared.clone();
+        } else if !Arc::ptr_eq(&self.shared, shared) {
+            // one cache <=> one prefix Arc; a different allocation would
+            // silently execute later keys against the wrong parameters
+            return Err(format!(
+                "PlanCache is bound to a {}-tensor shared prefix; key {key:?} \
+                 brought a different prefix ({} tensors)",
+                self.shared.len(),
+                shared.len()
+            ));
+        }
+        let plan = ExecutionPlan::compile(graph)?;
+        self.compiles += 1;
+        self.plans.insert(key.to_string(), plan);
+        Ok(())
+    }
+
+    /// Like [`PlanCache::insert_with`] followed by [`PlanCache::run`] —
+    /// the get-or-compile entry point the pool workers use.
+    pub fn run_or_compile(
+        &mut self,
+        key: &str,
+        graph: &Graph,
+        shared: &Arc<Vec<Tensor>>,
+        tail: Vec<Tensor>,
+    ) -> Result<Vec<Tensor>, String> {
+        self.insert_with(key, graph, shared)?;
+        self.run(key, tail)
+    }
+
+    /// Execute the cached plan for `key` on `shared ++ tail`.
+    pub fn run(&mut self, key: &str, tail: Vec<Tensor>) -> Result<Vec<Tensor>, String> {
+        let plan = self
+            .plans
+            .get_mut(key)
+            .ok_or_else(|| format!("no cached plan for key {key:?}"))?;
+        plan.run_with_prefix(&self.shared, &tail)
+    }
+
+    /// Direct access to a cached plan (introspection: step/slot counts).
+    pub fn plan(&self, key: &str) -> Option<&ExecutionPlan> {
+        self.plans.get(key)
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.plans.contains_key(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.plans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.plans.is_empty()
+    }
+
+    /// How many plan compilations this cache has performed — stays flat
+    /// under serving traffic once every (program, bucket) is inserted.
+    pub fn compile_count(&self) -> usize {
+        self.compiles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn add_graph() -> Graph {
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![2]);
+        let b = g.input("b", vec![2]);
+        let c = g.add(a, b, "c");
+        g.output(c);
+        g
+    }
+
+    #[test]
+    fn compiles_once_per_key() {
+        let g = add_graph();
+        let shared = Arc::new(vec![Tensor::f32(vec![2], vec![1.0, 2.0])]);
+        let mut cache = PlanCache::new();
+        cache.insert_with("k", &g, &shared).unwrap();
+        cache.insert_with("k", &g, &shared).unwrap();
+        assert_eq!(cache.compile_count(), 1);
+        assert_eq!(cache.len(), 1);
+        let r = cache.run("k", vec![Tensor::f32(vec![2], vec![10.0, 20.0])]).unwrap();
+        assert_eq!(r[0].as_f32(), &[11.0, 22.0]);
+    }
+
+    #[test]
+    fn tail_swaps_between_runs() {
+        let g = add_graph();
+        let shared = Arc::new(vec![Tensor::f32(vec![2], vec![1.0, 1.0])]);
+        let mut cache = PlanCache::new();
+        for v in [0.0f32, 5.0, -3.0] {
+            let r = cache
+                .run_or_compile("k", &g, &shared, vec![Tensor::f32(vec![2], vec![v, v])])
+                .unwrap();
+            assert_eq!(r[0].as_f32(), &[1.0 + v, 1.0 + v]);
+        }
+        assert_eq!(cache.compile_count(), 1);
+    }
+
+    #[test]
+    fn keys_share_one_prefix_binding() {
+        // two keys, one Arc'd prefix: the parameters are never copied
+        let g = add_graph();
+        let shared = Arc::new(vec![Tensor::f32(vec![2], vec![3.0, 4.0])]);
+        let mut cache = PlanCache::new();
+        cache.insert_with("k1", &g, &shared).unwrap();
+        cache.insert_with("k2", &g, &shared).unwrap();
+        let r1 = cache.run("k1", vec![Tensor::f32(vec![2], vec![1.0, 1.0])]).unwrap();
+        let r2 = cache.run("k2", vec![Tensor::f32(vec![2], vec![2.0, 2.0])]).unwrap();
+        assert_eq!(r1[0].as_f32(), &[4.0, 5.0]);
+        assert_eq!(r2[0].as_f32(), &[5.0, 6.0]);
+        // ANY other prefix allocation is rejected, not silently rebound —
+        // even one with identical length/content
+        let err = cache.insert_with("k3", &g, &Arc::new(Vec::new()));
+        assert!(err.unwrap_err().contains("shared prefix"));
+        let same_content = Arc::new(vec![Tensor::f32(vec![2], vec![3.0, 4.0])]);
+        assert!(cache.insert_with("k4", &g, &same_content).is_err());
+    }
+
+    #[test]
+    fn missing_key_is_an_error() {
+        let mut cache = PlanCache::new();
+        assert!(cache.run("nope", vec![]).is_err());
+    }
+}

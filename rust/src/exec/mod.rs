@@ -13,20 +13,34 @@
 //!   [`runtime::Engine`](crate::runtime::Engine), mapping graphs onto
 //!   AOT-compiled manifest programs.
 //!
-//! `passes::verify`, `quality::eval_lm`, the figure benches, and the
-//! examples all consume this seam; future backends (threaded batch
-//! execution, quantized eval) plug in here.
+//! On top of the seam sit two serving-side building blocks:
+//!
+//! * [`PlanCache`] — compile-once storage of plans keyed by
+//!   (program, bucket), with the constant input prefix (model
+//!   parameters) bound into a reusable template.
+//! * [`WorkerPool`] — persistent threads for data-parallel
+//!   [`pool::ExecJob`] batches; each worker owns a private `PlanCache`
+//!   (plans are cheap to compile, arenas are single-threaded), and
+//!   batch results are bitwise-independent of the worker count.
+//!
+//! `passes::verify`, `quality::eval_lm`, the coordinator's
+//! `PlannedServeModel`, the figure benches, and the examples all consume
+//! this seam; future backends (quantized eval) plug in here.
 
 pub mod arena;
+pub mod cache;
 pub mod fuse;
 pub mod kernels;
 pub mod naive;
 pub mod pjrt;
 pub mod plan;
+pub mod pool;
 
+pub use cache::PlanCache;
 pub use naive::NaiveBackend;
 pub use pjrt::PjrtBackend;
 pub use plan::{ExecutionPlan, PlannedBackend, Schedule};
+pub use pool::{ExecJob, WorkerPool};
 
 use crate::graph::{Graph, Tensor};
 

@@ -333,6 +333,25 @@ impl ExecutionPlan {
     /// Execute the plan on `inputs` (graph input order). Arena slots are
     /// reused across calls; only the returned output tensors allocate.
     pub fn run(&mut self, inputs: &[Tensor]) -> Result<Vec<Tensor>, String> {
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        self.run_refs(&refs)
+    }
+
+    /// Execute on `prefix ++ tail` without materializing a contiguous
+    /// input vector — the serving plan cache shares `prefix` (the model
+    /// parameters) across plans and pool workers through an `Arc`, so a
+    /// call costs a handful of pointer pushes instead of a parameter
+    /// copy.
+    pub fn run_with_prefix(
+        &mut self,
+        prefix: &[Tensor],
+        tail: &[Tensor],
+    ) -> Result<Vec<Tensor>, String> {
+        let refs: Vec<&Tensor> = prefix.iter().chain(tail.iter()).collect();
+        self.run_refs(&refs)
+    }
+
+    fn run_refs(&mut self, inputs: &[&Tensor]) -> Result<Vec<Tensor>, String> {
         if inputs.len() != self.input_shapes.len() {
             return Err(format!(
                 "graph {} expects {} inputs, got {}",
@@ -554,10 +573,10 @@ fn view<'a>(
     r: &'a ValueRef,
     arena: &'a Arena,
     consts: &'a [Tensor],
-    inputs: &'a [Tensor],
+    inputs: &'a [&'a Tensor],
 ) -> View<'a> {
     let data = match r.loc {
-        Loc::Input(k) => tensor_ref(&inputs[k]),
+        Loc::Input(k) => tensor_ref(inputs[k]),
         Loc::Const(c) => tensor_ref(&consts[c]),
         Loc::SlotF(s) => DataRef::F32(&arena.f[s][..r.numel]),
         Loc::SlotI(s) => DataRef::I32(&arena.i[s][..r.numel]),
@@ -576,7 +595,7 @@ fn exec_step(
     step: &Step,
     arena: &mut Arena,
     consts: &[Tensor],
-    inputs: &[Tensor],
+    inputs: &[&Tensor],
     scratch: &mut Vec<usize>,
 ) -> Result<(), String> {
     match step.out {
@@ -601,7 +620,7 @@ fn run_f(
     out: &mut [f32],
     arena: &Arena,
     consts: &[Tensor],
-    inputs: &[Tensor],
+    inputs: &[&Tensor],
     scratch: &mut Vec<usize>,
 ) -> Result<(), String> {
     match &step.kind {
@@ -740,7 +759,7 @@ fn run_i(
     out: &mut [i32],
     arena: &Arena,
     consts: &[Tensor],
-    inputs: &[Tensor],
+    inputs: &[&Tensor],
 ) -> Result<(), String> {
     match &step.kind {
         StepKind::Kernel { kernel, args } => {

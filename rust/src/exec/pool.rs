@@ -1,0 +1,209 @@
+//! Persistent worker-thread pool for data-parallel plan execution.
+//!
+//! Plans are cheap to compile and their arenas are inherently
+//! single-threaded (`execute` takes `&mut self`), so the pool does NOT
+//! share plans: each worker owns a private [`PlanCache`] and compiles
+//! its own copy of every graph it is handed, on first use. Jobs carry an
+//! `Arc<Graph>` plus a cache key, an `Arc`-shared input prefix (model
+//! parameters — one allocation process-wide, never copied), and a
+//! per-job tail — no mutable state crosses threads.
+//!
+//! [`WorkerPool::execute_batch`] is deterministic by construction: job
+//! `i` always runs on worker `i % workers`, jobs never interact, and
+//! results are returned in submission order — so pooled output is
+//! bitwise-identical to a serial loop over the same jobs, at any worker
+//! count.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::graph::{Graph, Tensor};
+
+use super::cache::PlanCache;
+
+/// One unit of work: run `graph` (compiled at most once per worker under
+/// `key`) on `shared ++ tail`.
+pub struct ExecJob {
+    pub graph: Arc<Graph>,
+    /// Plan-cache key; jobs with equal keys must carry the same graph
+    /// and shared prefix (the worker binds both on first use). `Arc`'d
+    /// so hot-path callers clone a refcount, not a string.
+    pub key: Arc<str>,
+    /// Constant input prefix (e.g. model parameters) — shared through
+    /// the `Arc` by every worker's cache, never copied.
+    pub shared: Arc<Vec<Tensor>>,
+    /// Per-job inputs appended after the shared prefix.
+    pub tail: Vec<Tensor>,
+}
+
+enum Msg {
+    Run {
+        idx: usize,
+        job: ExecJob,
+        reply: Sender<(usize, Result<Vec<Tensor>, String>)>,
+    },
+}
+
+/// Fixed set of worker threads, each owning its plans and arenas.
+/// Dropping the pool disconnects and joins every worker.
+pub struct WorkerPool {
+    txs: Vec<Sender<Msg>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads (at least 1).
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        let mut txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = channel::<Msg>();
+            let handle = std::thread::Builder::new()
+                .name(format!("xamba-exec-{w}"))
+                .spawn(move || worker_loop(rx))
+                .expect("spawn pool worker");
+            txs.push(tx);
+            handles.push(handle);
+        }
+        WorkerPool { txs, handles }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Run every job and return results in submission order. Assignment
+    /// is static round-robin, so a batch's output does not depend on
+    /// scheduling; a job whose worker died reports an error instead of
+    /// wedging the caller.
+    pub fn execute_batch(&self, jobs: Vec<ExecJob>) -> Vec<Result<Vec<Tensor>, String>> {
+        let n = jobs.len();
+        let (reply_tx, reply_rx) = channel();
+        let mut sent = 0usize;
+        let mut out: Vec<Result<Vec<Tensor>, String>> =
+            (0..n).map(|_| Err("pool worker died".to_string())).collect();
+        for (i, job) in jobs.into_iter().enumerate() {
+            let msg = Msg::Run { idx: i, job, reply: reply_tx.clone() };
+            if self.txs[i % self.txs.len()].send(msg).is_ok() {
+                sent += 1;
+            }
+        }
+        drop(reply_tx);
+        for _ in 0..sent {
+            match reply_rx.recv() {
+                Ok((i, r)) => out[i] = r,
+                Err(_) => break, // every live sender finished or died
+            }
+        }
+        out
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // disconnecting the channels ends each worker's recv loop
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Receiver<Msg>) {
+    let mut cache = PlanCache::new();
+    while let Ok(Msg::Run { idx, job, reply }) = rx.recv() {
+        let r = cache.run_or_compile(&job.key, &job.graph, &job.shared, job.tail);
+        let _ = reply.send((idx, r));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn square_graph() -> Graph {
+        let mut g = Graph::new("sq");
+        let x = g.input("x", vec![4]);
+        let y = g.mul(x, x, "y");
+        g.output(y);
+        g
+    }
+
+    fn jobs_for(graph: &Arc<Graph>, count: usize) -> Vec<ExecJob> {
+        let shared = Arc::new(Vec::new());
+        (0..count)
+            .map(|i| ExecJob {
+                graph: graph.clone(),
+                key: "sq".into(),
+                shared: shared.clone(),
+                tail: vec![Tensor::f32(
+                    vec![4],
+                    (0..4).map(|d| (i * 4 + d) as f32).collect(),
+                )],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batch_results_keep_submission_order() {
+        let g = Arc::new(square_graph());
+        let pool = WorkerPool::new(3);
+        let results = pool.execute_batch(jobs_for(&g, 7));
+        assert_eq!(results.len(), 7);
+        for (i, r) in results.iter().enumerate() {
+            let got = r.as_ref().unwrap()[0].as_f32();
+            let want: Vec<f32> =
+                (0..4).map(|d| ((i * 4 + d) as f32).powi(2)).collect();
+            assert_eq!(got, want.as_slice(), "job {i}");
+        }
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let g = Arc::new(square_graph());
+        let baseline: Vec<_> = WorkerPool::new(1)
+            .execute_batch(jobs_for(&g, 8))
+            .into_iter()
+            .map(|r| r.unwrap())
+            .collect();
+        for w in [2usize, 4] {
+            let got: Vec<_> = WorkerPool::new(w)
+                .execute_batch(jobs_for(&g, 8))
+                .into_iter()
+                .map(|r| r.unwrap())
+                .collect();
+            assert_eq!(got, baseline, "{w} workers diverged");
+        }
+    }
+
+    #[test]
+    fn bad_graph_reports_error_without_poisoning_pool() {
+        use crate::graph::{DType, Op};
+        let mut bad = Graph::new("bad");
+        let a = bad.input("a", vec![2, 3]);
+        let b = bad.input("b", vec![4, 5]);
+        // raw append bypasses the builder's shape check; the k mismatch
+        // must surface as a plan-compile error on the worker
+        let m = bad.add_node(Op::MatMul, vec![a, b], vec![2, 5], DType::F32, "m".into(), None);
+        bad.output(m);
+        let pool = WorkerPool::new(2);
+        let g = Arc::new(bad);
+        let shared = Arc::new(Vec::new());
+        let r = pool.execute_batch(vec![ExecJob {
+            graph: g,
+            key: "bad".into(),
+            shared,
+            tail: vec![
+                Tensor::f32(vec![2, 3], vec![0.0; 6]),
+                Tensor::f32(vec![4, 5], vec![0.0; 20]),
+            ],
+        }]);
+        assert!(r[0].is_err());
+        // the pool still serves good jobs afterwards
+        let g2 = Arc::new(square_graph());
+        let ok = pool.execute_batch(jobs_for(&g2, 2));
+        assert!(ok.iter().all(|r| r.is_ok()));
+    }
+}

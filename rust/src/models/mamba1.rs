@@ -48,6 +48,20 @@ pub(crate) fn block_prefill(
     x: NodeId,
     t: usize,
 ) -> NodeId {
+    block_prefill_with_state(ctx, m, j, x, t).0
+}
+
+/// Like `block_prefill` but also returns the nodes a serving prefill
+/// needs to seed decode: the conv input sequence `xi` (T, d_inner) —
+/// its last K-1 rows are the decode-time conv state — and the final
+/// scan state `h_T` (d_inner, d_state).
+pub(crate) fn block_prefill_with_state(
+    ctx: &mut Ctx,
+    m: &ModelShape,
+    j: usize,
+    x: NodeId,
+    t: usize,
+) -> (NodeId, NodeId, NodeId) {
     let (di, n) = (m.d_inner(), m.d_state);
     let r = m.resolved_dt_rank();
     let nm = |s: &str| format!("l{j}.{s}");
@@ -119,7 +133,8 @@ pub(crate) fn block_prefill(
     let zg = ctx.g.silu(z, &nm("gate.silu"));
     let y = ctx.g.mul(y, zg, &nm("gate.mul"));
     let op = w(&*ctx, "out_proj");
-    ctx.g.matmul(y, op, &nm("out_proj.mm"))
+    let out = ctx.g.matmul(y, op, &nm("out_proj.mm"));
+    (out, xi, h.expect("scan needs t >= 1"))
 }
 
 /// Full Mamba-1 LM prefill graph: tokens (T,) i32 -> logits (T, V).
@@ -143,6 +158,45 @@ pub fn build_prefill(m: &ModelShape, t: usize) -> Graph {
     let emb_t = ctx.g.transpose(emb, vec![1, 0], "lm_head.wT");
     let logits = ctx.g.matmul(x, emb_t, "lm_head.mm");
     ctx.g.output(logits);
+    ctx.g
+}
+
+/// Serving prefill graph: tokens (T,) i32 -> last-position logits (1, V)
+/// plus per-layer decode-ready recurrent state. Output order matches
+/// [`build_decode_batched`]: logits, then per layer `conv_state{j}`
+/// (K-1, d_inner) and `ssm_state{j}` (d_inner, d_state).
+///
+/// Requires `t >= d_conv - 1` so the conv state can be sliced off the
+/// prefill window.
+pub fn build_prefill_serve(m: &ModelShape, t: usize) -> Graph {
+    assert_eq!(m.arch, "mamba");
+    let k = m.d_conv;
+    assert!(t >= k - 1, "serve prefill window {t} shorter than conv state {}", k - 1);
+    let spec = full_spec(m);
+    let mut ctx = Ctx::new(&format!("{}-serve-prefill-t{t}", m.name), &spec);
+    let tokens = ctx.g.input_i32("tokens", vec![t]);
+    let emb = ctx.w("emb");
+    let mut x = ctx.g.gather(emb, tokens, "embed");
+    let mut states: Vec<(NodeId, NodeId)> = Vec::with_capacity(m.n_layers);
+    for j in 0..m.n_layers {
+        let norm_w = ctx.w(&format!("l{j}.norm_w"));
+        let xn = ctx.g.rmsnorm(x, norm_w, &format!("l{j}.norm"));
+        let (y, conv_seq, h_last) = block_prefill_with_state(&mut ctx, m, j, xn, t);
+        let conv_state =
+            ctx.g.slice(conv_seq, 0, t - (k - 1), k - 1, &format!("l{j}.conv.state"));
+        states.push((conv_state, h_last));
+        x = ctx.g.add(x, y, &format!("l{j}.residual"));
+    }
+    let fw = ctx.w("final_norm_w");
+    let x = ctx.g.rmsnorm(x, fw, "final_norm");
+    let x_last = ctx.g.slice(x, 0, t - 1, 1, "last_pos");
+    let emb_t = ctx.g.transpose(emb, vec![1, 0], "lm_head.wT");
+    let logits = ctx.g.matmul(x_last, emb_t, "lm_head.mm"); // (1, V)
+    ctx.g.output(logits);
+    for (cs, ss) in states {
+        ctx.g.output(cs);
+        ctx.g.output(ss);
+    }
     ctx.g
 }
 
@@ -251,6 +305,106 @@ pub fn build_decode(m: &ModelShape) -> Graph {
     ctx.g
 }
 
+/// Batched decode-step graph for a fixed batch bucket `b`: tokens (b,)
+/// i32 + per-layer stacked states -> logits (b, V) + new states. This is
+/// the serving hot path of the planned backend — one compiled plan per
+/// bucket, reused for every step.
+///
+/// Inputs: params, tokens, then per layer `conv_state{j}` (b, K-1, C)
+/// and `ssm_state{j}` (b, d_inner, N). Outputs: logits, then per-layer
+/// states in the same order. Every kernel in the graph treats the batch
+/// dimension independently, so per-sequence results are bitwise
+/// identical across bucket sizes (the pool leans on this to shard a
+/// bucket across workers).
+pub fn build_decode_batched(m: &ModelShape, b: usize) -> Graph {
+    assert_eq!(m.arch, "mamba");
+    assert!(b >= 1, "decode bucket must be >= 1");
+    let spec = full_spec(m);
+    let mut ctx = Ctx::new(&format!("{}-decode-b{b}", m.name), &spec);
+    let tokens = ctx.g.input_i32("tokens", vec![b]);
+    let (di, n, k) = (m.d_inner(), m.d_state, m.d_conv);
+    let r = m.resolved_dt_rank();
+    let mut conv_states = Vec::new();
+    let mut ssm_states = Vec::new();
+    for j in 0..m.n_layers {
+        conv_states.push(ctx.g.input(&format!("conv_state{j}"), vec![b, k - 1, di]));
+        ssm_states.push(ctx.g.input(&format!("ssm_state{j}"), vec![b, di, n]));
+    }
+
+    let emb = ctx.w("emb");
+    let mut x = ctx.g.gather(emb, tokens, "embed"); // (b, d)
+    let mut out_states = Vec::new();
+    for j in 0..m.n_layers {
+        let nm = |s: &str| format!("l{j}.{s}");
+        let norm_w = ctx.w(&nm("norm_w"));
+        let xn = ctx.g.rmsnorm(x, norm_w, &nm("norm"));
+        let in_proj = ctx.w(&nm("in_proj"));
+        let xz = ctx.g.matmul(xn, in_proj, &nm("in_proj.mm")); // (b, 2di)
+        let xi = ctx.g.slice(xz, 1, 0, di, &nm("split.x"));
+        let z = ctx.g.slice(xz, 1, di, di, &nm("split.z"));
+
+        // conv step: window = [state; x_t] along time, dot with taps
+        let xi_row = ctx.g.reshape(xi, vec![b, 1, di], &nm("conv.xrow"));
+        let window = ctx.g.concat(&[conv_states[j], xi_row], 1, &nm("conv.win")); // (b, K, di)
+        let cw = ctx.w(&nm("conv_w"));
+        let prod = ctx.g.mul(window, cw, &nm("conv.prod"));
+        let xc = ctx.g.reduce_sum(prod, 1, &nm("conv.sum")); // (b, di)
+        let cb = ctx.w(&nm("conv_b"));
+        let xc = ctx.g.add(xc, cb, &nm("conv.bias"));
+        let xc = ctx.g.silu(xc, &nm("conv.silu"));
+        let new_conv = ctx.g.slice(window, 1, 1, k - 1, &nm("conv.state"));
+
+        let xp = ctx.w(&nm("x_proj"));
+        let xdbc = ctx.g.matmul(xc, xp, &nm("x_proj.mm")); // (b, r+2n)
+        let dt_r = ctx.g.slice(xdbc, 1, 0, r, &nm("split.dt"));
+        let b_t = ctx.g.slice(xdbc, 1, r, n, &nm("split.B"));
+        let c_t = ctx.g.slice(xdbc, 1, r + n, n, &nm("split.C"));
+        let dtw = ctx.w(&nm("dt_proj_w"));
+        let dtb = ctx.w(&nm("dt_proj_b"));
+        let dt_f = ctx.g.matmul(dt_r, dtw, &nm("dt_proj.mm"));
+        let dt_f = ctx.g.add(dt_f, dtb, &nm("dt_proj.bias"));
+        let dt = ctx.g.softplus(dt_f, &nm("dt.softplus")); // (b, di)
+
+        let a_log = ctx.w(&nm("a_log"));
+        let a_exp = ctx.g.exp(a_log, &nm("A.exp"));
+        let neg1 = ctx.g.const_scalar(&nm("A.neg1"), -1.0);
+        let a = ctx.g.mul(a_exp, neg1, &nm("A")); // (di, n)
+
+        let dt_col = ctx.g.reshape(dt, vec![b, di, 1], &nm("dt.col"));
+        let da = ctx.g.mul(dt_col, a, &nm("dtA")); // (b, di, n)
+        let da = ctx.g.exp(da, &nm("decay"));
+        let xdt = ctx.g.mul(dt, xc, &nm("x.dt")); // (b, di)
+        let xdt_col = ctx.g.reshape(xdt, vec![b, di, 1], &nm("x.dt.col"));
+        let b_row = ctx.g.reshape(b_t, vec![b, 1, n], &nm("B.row"));
+        let inflow = ctx.g.mul(xdt_col, b_row, &nm("inflow")); // (b, di, n)
+        let decayed = ctx.g.mul(da, ssm_states[j], &nm("h.decay"));
+        let h_new = ctx.g.add(decayed, inflow, &nm("h")); // (b, di, n)
+        let c_col = ctx.g.reshape(c_t, vec![b, n, 1], &nm("C.col"));
+        let y_t = ctx.g.matmul(h_new, c_col, &nm("y.mm")); // (b, di, 1)
+        let y_row = ctx.g.reshape(y_t, vec![b, di], &nm("y.row"));
+        let d_skip = ctx.w(&nm("d_skip"));
+        let skip = ctx.g.mul(xc, d_skip, &nm("y.skip"));
+        let y = ctx.g.add(y_row, skip, &nm("y"));
+
+        let zg = ctx.g.silu(z, &nm("gate.silu"));
+        let y = ctx.g.mul(y, zg, &nm("gate.mul"));
+        let op = ctx.w(&nm("out_proj"));
+        let y = ctx.g.matmul(y, op, &nm("out_proj.mm"));
+        x = ctx.g.add(x, y, &nm("residual"));
+        out_states.push((new_conv, h_new));
+    }
+    let fw = ctx.w("final_norm_w");
+    let x = ctx.g.rmsnorm(x, fw, "final_norm");
+    let emb_t = ctx.g.transpose(emb, vec![1, 0], "lm_head.wT");
+    let logits = ctx.g.matmul(x, emb_t, "lm_head.mm"); // (b, V)
+    ctx.g.output(logits);
+    for (cs, ss) in out_states {
+        ctx.g.output(cs);
+        ctx.g.output(ss);
+    }
+    ctx.g
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -290,6 +444,105 @@ mod tests {
         assert_eq!(g.shape(g.outputs[0]), &[1, m.vocab_size]);
         assert_eq!(g.shape(g.outputs[1]), &[m.d_conv - 1, m.d_inner()]);
         assert_eq!(g.shape(g.outputs[2]), &[m.d_inner(), m.d_state]);
+    }
+
+    #[test]
+    fn serve_prefill_outputs_last_logits_and_states() {
+        let m = presets::tiny_mamba();
+        let g = build_prefill_serve(&m, 8);
+        assert_eq!(g.outputs.len(), 1 + 2 * m.n_layers);
+        assert_eq!(g.shape(g.outputs[0]), &[1, m.vocab_size]);
+        assert_eq!(g.shape(g.outputs[1]), &[m.d_conv - 1, m.d_inner()]);
+        assert_eq!(g.shape(g.outputs[2]), &[m.d_inner(), m.d_state]);
+    }
+
+    #[test]
+    fn batched_decode_io_shapes() {
+        let m = presets::tiny_mamba();
+        let b = 4;
+        let g = build_decode_batched(&m, b);
+        // params + tokens + 2 states per layer
+        assert_eq!(g.inputs.len(), full_spec(&m).entries.len() + 1 + 2 * m.n_layers);
+        assert_eq!(g.outputs.len(), 1 + 2 * m.n_layers);
+        assert_eq!(g.shape(g.outputs[0]), &[b, m.vocab_size]);
+        assert_eq!(g.shape(g.outputs[1]), &[b, m.d_conv - 1, m.d_inner()]);
+        assert_eq!(g.shape(g.outputs[2]), &[b, m.d_inner(), m.d_state]);
+    }
+
+    #[test]
+    fn batched_decode_is_bitwise_per_sequence() {
+        // a b=2 batch must reproduce the two b=1 runs exactly
+        use crate::exec::run_once;
+        use crate::graph::Tensor;
+        use crate::quality::param_inputs;
+
+        let m = presets::tiny_mamba();
+        let spec = full_spec(&m);
+        let mut rng = crate::util::Prng::new(11);
+        let weights = rng.range_vec(spec.total(), -0.1, 0.1);
+        let params = param_inputs(&spec, &weights);
+        let (di, n, k) = (m.d_inner(), m.d_state, m.d_conv);
+        let state_f = |seed: u64, len: usize| {
+            let mut r = crate::util::Prng::new(seed);
+            r.range_vec(len, -0.5, 0.5)
+        };
+
+        let conv_seed = |s: usize, j: usize| 1000 + 100 * s as u64 + j as u64;
+        let ssm_seed = |s: usize, j: usize| 2000 + 100 * s as u64 + j as u64;
+
+        let g1 = build_decode_batched(&m, 1);
+        let g2 = build_decode_batched(&m, 2);
+        let mut singles = Vec::new();
+        for s in 0..2usize {
+            let mut inputs = params.clone();
+            inputs.push(Tensor::i32(vec![1], vec![40 + s as i32]));
+            for j in 0..m.n_layers {
+                inputs.push(Tensor::f32(
+                    vec![1, k - 1, di],
+                    state_f(conv_seed(s, j), (k - 1) * di),
+                ));
+                inputs.push(Tensor::f32(
+                    vec![1, di, n],
+                    state_f(ssm_seed(s, j), di * n),
+                ));
+            }
+            singles.push(run_once(&g1, &inputs).expect("b=1 decode"));
+        }
+        let mut inputs = params.clone();
+        inputs.push(Tensor::i32(vec![2], vec![40, 41]));
+        for j in 0..m.n_layers {
+            let mut conv = Vec::new();
+            let mut ssm = Vec::new();
+            for s in 0..2usize {
+                conv.extend(state_f(conv_seed(s, j), (k - 1) * di));
+                ssm.extend(state_f(ssm_seed(s, j), di * n));
+            }
+            inputs.push(Tensor::f32(vec![2, k - 1, di], conv));
+            inputs.push(Tensor::f32(vec![2, di, n], ssm));
+        }
+        let batched = run_once(&g2, &inputs).expect("b=2 decode");
+        let v = m.vocab_size;
+        for s in 0..2 {
+            assert_eq!(
+                &batched[0].as_f32()[s * v..(s + 1) * v],
+                singles[s][0].as_f32(),
+                "logits diverge for sequence {s}"
+            );
+            for j in 0..m.n_layers {
+                let cl = (k - 1) * di;
+                assert_eq!(
+                    &batched[1 + 2 * j].as_f32()[s * cl..(s + 1) * cl],
+                    singles[s][1 + 2 * j].as_f32(),
+                    "conv state diverges (seq {s}, layer {j})"
+                );
+                let sl = di * n;
+                assert_eq!(
+                    &batched[2 + 2 * j].as_f32()[s * sl..(s + 1) * sl],
+                    singles[s][2 + 2 * j].as_f32(),
+                    "ssm state diverges (seq {s}, layer {j})"
+                );
+            }
+        }
     }
 
     #[test]

@@ -34,3 +34,5 @@ pub fn build_decode(m: &ModelShape) -> Graph {
         other => panic!("unknown arch {other}"),
     }
 }
+
+pub use mamba1::{build_decode_batched, build_prefill_serve};

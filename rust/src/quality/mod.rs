@@ -7,8 +7,10 @@
 //! next-byte perplexity, top-1 accuracy, and logit drift vs the exact
 //! model, for exact vs PLU-8/16/32 variants.
 
+use std::sync::Arc;
+
 use crate::config::ModelShape;
-use crate::exec::{Backend, Plan, PlannedBackend};
+use crate::exec::{ExecJob, PlanCache, WorkerPool};
 use crate::graph::{Graph, Tensor};
 use crate::models::params::{full_spec, ParamSpec};
 
@@ -51,9 +53,56 @@ fn log_softmax_nll(logits: &[f32], target: usize) -> (f64, bool) {
     (nll, argmax == target)
 }
 
+/// Execute a prefill graph over many token windows, either serially
+/// (one cached plan, arena reused per window) or data-parallel across a
+/// [`WorkerPool`] (`workers > 1`; each worker compiles its own plan).
+/// Results come back in window order, so the two paths — and every
+/// worker count — produce bitwise-identical logits.
+fn run_windows(
+    graph: &Graph,
+    params: Vec<Tensor>,
+    window: usize,
+    token_windows: Vec<Vec<i32>>,
+    workers: usize,
+) -> Result<Vec<Vec<f32>>, String> {
+    let shared = Arc::new(params);
+    if workers <= 1 || token_windows.len() <= 1 {
+        // params are hoisted: only the token tensor changes per window
+        // (EXPERIMENTS.md §Perf iteration 5); the plan is compiled once
+        // and its arena reused across every window
+        let mut cache = PlanCache::new();
+        cache.insert_with("eval", graph, &shared)?;
+        token_windows
+            .into_iter()
+            .map(|toks| {
+                let out = cache.run("eval", vec![Tensor::i32(vec![window], toks)])?;
+                Ok(out[0].as_f32().to_vec())
+            })
+            .collect()
+    } else {
+        let pool = WorkerPool::new(workers.min(token_windows.len()));
+        let g = Arc::new(graph.clone());
+        let jobs: Vec<ExecJob> = token_windows
+            .into_iter()
+            .map(|toks| ExecJob {
+                graph: g.clone(),
+                key: "eval".into(),
+                shared: shared.clone(),
+                tail: vec![Tensor::i32(vec![window], toks)],
+            })
+            .collect();
+        pool.execute_batch(jobs)
+            .into_iter()
+            .map(|r| r.map(|outs| outs[0].as_f32().to_vec()))
+            .collect()
+    }
+}
+
 /// Evaluate a prefill graph (tokens -> all logits) as a byte LM over
 /// sliding windows of `text`. `exact_logits` (if given) must be the
 /// per-window logits of the exact model for divergence metrics.
+/// `workers > 1` evaluates windows data-parallel on an execution pool;
+/// the report is bitwise-independent of the worker count.
 pub fn eval_lm(
     shape: &ModelShape,
     graph: &Graph,
@@ -62,37 +111,41 @@ pub fn eval_lm(
     window: usize,
     max_windows: usize,
     exact_logits: Option<&[Vec<f32>]>,
-) -> (QualityReport, Vec<Vec<f32>>) {
+    workers: usize,
+) -> Result<(QualityReport, Vec<Vec<f32>>), String> {
     let spec = full_spec(shape);
-    assert_eq!(spec.total(), weights.len(), "weights/spec mismatch");
+    if spec.total() != weights.len() {
+        return Err(format!(
+            "weights/spec mismatch: {} vs {} for {}",
+            weights.len(),
+            spec.total(),
+            shape.name
+        ));
+    }
     let params = param_inputs(&spec, weights);
     let stride = window; // non-overlapping windows
+    let mut starts: Vec<usize> = Vec::new();
+    let mut start = 0usize;
+    while starts.len() < max_windows && start + window + 1 <= text.len() {
+        starts.push(start);
+        start += stride;
+    }
+    let token_windows: Vec<Vec<i32>> = starts
+        .iter()
+        .map(|&s| text[s..s + window].iter().map(|&b| b as i32).collect())
+        .collect();
+    let all_logits = run_windows(graph, params, window, token_windows, workers)?;
+
     let mut nll_sum = 0.0f64;
     let mut nll_n = 0usize;
     let mut hits = 0usize;
     let mut mae_sum = 0.0f64;
     let mut mae_n = 0usize;
     let mut max_err = 0.0f64;
-    let mut all_logits: Vec<Vec<f32>> = Vec::new();
-
-    let mut windows = 0usize;
-    let mut start = 0usize;
-    // params are hoisted: only the token tensor changes per window
-    // (EXPERIMENTS.md §Perf iteration 5); the plan is compiled once and
-    // its arena reused across every window
-    let mut inputs = params;
-    inputs.push(Tensor::i32(vec![window], vec![0; window]));
-    let mut plan = PlannedBackend.plan(graph).expect("plan compiles");
-    while windows < max_windows && start + window + 1 <= text.len() {
-        let tokens: Vec<i32> =
-            text[start..start + window].iter().map(|&b| b as i32).collect();
-        let n = inputs.len();
-        inputs[n - 1] = Tensor::i32(vec![window], tokens);
-        let out = plan.execute(&inputs).expect("planned eval");
-        let logits = out[0].as_f32(); // (T, V)
-        let v = shape.vocab_size;
+    let v = shape.vocab_size;
+    for (wi, (&s, logits)) in starts.iter().zip(&all_logits).enumerate() {
         for t in 0..window - 1 {
-            let target = text[start + t + 1] as usize;
+            let target = text[s + t + 1] as usize;
             let row = &logits[t * v..(t + 1) * v];
             let (nll, hit) = log_softmax_nll(row, target);
             nll_sum += nll;
@@ -100,7 +153,7 @@ pub fn eval_lm(
             hits += usize::from(hit);
         }
         if let Some(exact) = exact_logits {
-            let er = &exact[windows];
+            let er = &exact[wi];
             for (a, b) in logits.iter().zip(er) {
                 let d = (*a as f64 - *b as f64).abs();
                 mae_sum += d;
@@ -108,20 +161,17 @@ pub fn eval_lm(
             }
             mae_n += logits.len();
         }
-        all_logits.push(logits.to_vec());
-        windows += 1;
-        start += stride;
     }
-    (
+    Ok((
         QualityReport {
             ppl: (nll_sum / nll_n.max(1) as f64).exp(),
             top1: hits as f64 / nll_n.max(1) as f64,
             logit_mae: if mae_n == 0 { 0.0 } else { mae_sum / mae_n as f64 },
             logit_max: max_err,
-            windows,
+            windows: starts.len(),
         },
         all_logits,
-    )
+    ))
 }
 
 /// In-context recall ("induction-head") probe: a sentence shown twice in
@@ -136,12 +186,22 @@ pub fn induction_probe(
     window: usize,
     trials: usize,
     seed: u64,
-) -> (f64, f64) {
+    workers: usize,
+) -> Result<(f64, f64), String> {
     let spec = full_spec(shape);
+    if spec.total() != weights.len() {
+        return Err(format!(
+            "weights/spec mismatch: {} vs {} for {}",
+            weights.len(),
+            spec.total(),
+            shape.name
+        ));
+    }
     let params = param_inputs(&spec, weights);
     let mut rng = crate::util::Prng::new(seed);
-    let mut plan = PlannedBackend.plan(graph).expect("plan compiles");
-    let (mut hit1, mut n1, mut hit2, mut n2) = (0usize, 0usize, 0usize, 0usize);
+    // draw every trial window up front (rng order is execution-
+    // independent), then evaluate serial or data-parallel
+    let mut texts: Vec<(Vec<u8>, usize)> = Vec::new(); // (window text, |sentence|)
     for _ in 0..trials {
         // window = [pad][sentence][sentence]; compare accuracy per copy
         let s = crate::util::corpus::sentence(&mut rng);
@@ -153,12 +213,18 @@ pub fn induction_probe(
         let mut text = vec![b' '; window - need];
         text.extend_from_slice(sb);
         text.extend_from_slice(sb);
-        let tokens: Vec<i32> = text.iter().map(|&b| b as i32).collect();
-        let mut inputs = params.clone();
-        inputs.push(Tensor::i32(vec![window], tokens));
-        let out = plan.execute(&inputs).expect("planned eval");
-        let logits = out[0].as_f32();
-        let v = shape.vocab_size;
+        texts.push((text, sb.len()));
+    }
+    let token_windows: Vec<Vec<i32>> = texts
+        .iter()
+        .map(|(text, _)| text.iter().map(|&b| b as i32).collect())
+        .collect();
+    let all_logits = run_windows(graph, params, window, token_windows, workers)?;
+
+    let (mut hit1, mut n1, mut hit2, mut n2) = (0usize, 0usize, 0usize, 0usize);
+    let v = shape.vocab_size;
+    for ((text, slen), logits) in texts.iter().zip(&all_logits) {
+        let need = 2 * slen;
         let first_start = window - need;
         for t in 0..window - 1 {
             let target = text[t + 1] as usize;
@@ -167,19 +233,19 @@ pub fn induction_probe(
             }
             let row = &logits[t * v..(t + 1) * v];
             let (_, hit) = log_softmax_nll(row, target);
-            if t + 1 < first_start + sb.len() {
+            if t + 1 < first_start + slen {
                 hit1 += usize::from(hit);
                 n1 += 1;
-            } else if t + 1 >= first_start + sb.len() {
+            } else {
                 hit2 += usize::from(hit);
                 n2 += 1;
             }
         }
     }
-    (
+    Ok((
         hit1 as f64 / n1.max(1) as f64,
         hit2 as f64 / n2.max(1) as f64,
-    )
+    ))
 }
 
 #[cfg(test)]
@@ -202,5 +268,31 @@ mod tests {
         let l = vec![0.0f32; 256];
         let (nll, _) = log_softmax_nll(&l, 7);
         assert!((nll - (256f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn eval_lm_rejects_bad_weights_len() {
+        let shape = crate::config::presets::tiny_mamba();
+        let g = crate::models::build_prefill(&shape, 8);
+        let r = eval_lm(&shape, &g, &[0.0; 3], b"hello world hello", 8, 1, None, 1);
+        assert!(r.unwrap_err().contains("weights/spec mismatch"));
+    }
+
+    #[test]
+    fn eval_lm_is_bitwise_identical_across_worker_counts() {
+        let shape = crate::config::presets::tiny_mamba();
+        let window = 16usize;
+        let g = crate::models::build_prefill(&shape, window);
+        let spec = full_spec(&shape);
+        let mut rng = crate::util::Prng::new(5);
+        let weights = rng.range_vec(spec.total(), -0.1, 0.1);
+        let text = crate::util::corpus::corpus(200, 99);
+        let (rep1, logits1) =
+            eval_lm(&shape, &g, &weights, &text, window, 3, None, 1).unwrap();
+        let (rep4, logits4) =
+            eval_lm(&shape, &g, &weights, &text, window, 3, None, 4).unwrap();
+        assert_eq!(logits1, logits4, "pooled eval diverged from serial");
+        assert_eq!(rep1.ppl.to_bits(), rep4.ppl.to_bits());
+        assert_eq!(rep1.windows, 3);
     }
 }
