@@ -1,5 +1,6 @@
 //! Serving-decode micro-bench: serial vs pooled batched decode on the
-//! Mamba-1 130M block shape at buckets 1/4/8.
+//! 130M-class block shapes of BOTH model families (Mamba-1 and Mamba-2)
+//! at buckets 1/4/8.
 //!
 //! Both paths run the same compiled per-bucket decode graphs through
 //! `PlannedServeModel`; the pooled model shards each bucket into equal
@@ -11,7 +12,7 @@
 
 use std::time::Instant;
 
-use xamba::config::presets;
+use xamba::config::{presets, ModelShape};
 use xamba::coordinator::{PlannedServeModel, SeqState, ServeModel};
 use xamba::util::Table;
 
@@ -39,27 +40,28 @@ fn decode_step(model: &mut PlannedServeModel, states: &mut [SeqState], toks: &[i
     model.decode(&mut seqs).expect("decode");
 }
 
-fn main() {
-    let shape = presets::block130m_mamba(); // the paper's profiling block
+fn bench_family(label: &str, shape: &ModelShape) {
     let window = 8usize;
     let workers = 4usize;
     let buckets = [1usize, 2, 4, 8];
     let iters = 3usize;
 
-    let weights = PlannedServeModel::random_weights(&shape, 42);
+    let weights = PlannedServeModel::random_weights(shape, 42);
     let mut serial =
-        PlannedServeModel::new(&shape, &weights, window, &buckets, 1, "baseline")
+        PlannedServeModel::new(shape, &weights, window, &buckets, 1, "baseline")
             .expect("serial model");
     let mut pooled =
-        PlannedServeModel::new(&shape, &weights, window, &buckets, workers, "baseline")
+        PlannedServeModel::new(shape, &weights, window, &buckets, workers, "baseline")
             .expect("pooled model");
 
     let mut table = Table::new(&["bucket", "serial", "pooled", "speedup", "tok/s pooled"])
-        .with_title(format!(
-            "serve_decode: serial vs {workers}-worker pooled batched decode \
-             (Mamba-1 130M block)"
-        )
-        .as_str());
+        .with_title(
+            format!(
+                "serve_decode: serial vs {workers}-worker pooled batched decode \
+                 ({label})"
+            )
+            .as_str(),
+        );
 
     for &bucket in &[1usize, 4, 8] {
         let mut states: Vec<SeqState> = Vec::with_capacity(bucket);
@@ -104,8 +106,15 @@ fn main() {
         ]);
     }
     println!("{table}");
+}
+
+fn main() {
+    // the paper's two profiling blocks: the perf trajectory covers both
+    // families now that the planned serving path does
+    bench_family("Mamba-1 130M block", &presets::block130m_mamba());
+    bench_family("Mamba-2 130M block", &presets::block130m_mamba2());
     println!(
-        "serve_decode: pooled decode is bitwise-identical to serial; speedup is \
-         wall-clock only."
+        "serve_decode: pooled decode is bitwise-identical to serial for both \
+         families; speedup is wall-clock only."
     );
 }

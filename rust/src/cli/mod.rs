@@ -41,11 +41,13 @@ xamba — SSMs on resource-constrained NPUs (paper reproduction)
 USAGE: xamba <command> [--flag value ...]
 
 COMMANDS:
-  serve     --model tiny-mamba --variant xamba [--backend planned|pjrt]
-            [--artifacts DIR] [--weights FILE] [--window 32] [--workers 0]
+  serve     --model tiny-mamba|tiny-mamba2 --variant xamba
+            [--backend planned|pjrt] [--artifacts DIR] [--weights FILE]
+            [--window 32] [--workers 0] [--buckets 1,2,4,8]
             [--max-new 48] [--temperature 0.0]
             reads prompts from stdin (one per line), prints completions;
-            the default planned backend needs no artifacts (untrained
+            the default planned backend serves BOTH model families
+            (mamba-1 and mamba-2) and needs no artifacts (untrained
             weights are random-initialized when no .bin file is found)
   profile   --model block130m-mamba2 [--t 4] [--passes cumba,reduba,actiba]
             [--config FILE] [--pipelined] [--energy]
@@ -83,6 +85,16 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     }
     if let Some(w) = args.get_usize("workers") {
         cfg.workers = w;
+    }
+    if let Some(list) = args.get("buckets") {
+        cfg.decode_buckets = list
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<usize>()
+                    .map_err(|_| format!("--buckets: {s:?} is not a batch size"))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
     }
     if cfg.backend == "pjrt" {
         for flag in ["weights", "window", "workers"] {

@@ -160,6 +160,17 @@ pub fn mamba2_130m() -> ModelShape {
     ModelShape { n_layers: 24, name: "mamba2-130m".into(), ..block130m_mamba2() }
 }
 
+/// Every model preset name [`model_by_name`] resolves — config
+/// validation quotes this list in its error messages.
+pub const MODEL_NAMES: &[&str] = &[
+    "tiny-mamba",
+    "tiny-mamba2",
+    "block130m-mamba",
+    "block130m-mamba2",
+    "mamba130m",
+    "mamba2-130m",
+];
+
 /// Look up a model preset by name.
 pub fn model_by_name(name: &str) -> Option<ModelShape> {
     match name {
@@ -192,6 +203,10 @@ mod tests {
     fn lookup_by_name() {
         assert!(model_by_name("tiny-mamba").is_some());
         assert!(model_by_name("nope").is_none());
+        // the advertised list and the lookup table stay in sync
+        for name in MODEL_NAMES {
+            assert!(model_by_name(name).is_some(), "{name} not resolvable");
+        }
     }
 
     #[test]

@@ -234,6 +234,47 @@ impl Default for ServeConfig {
 }
 
 impl ServeConfig {
+    /// Check the code-path-selecting knobs up front and return one clear,
+    /// actionable message instead of letting an unknown string panic (or
+    /// surface a confusing downstream error) inside the engine thread.
+    /// `coordinator::start_backend` calls this before spawning anything.
+    pub fn validate(&self) -> Result<(), String> {
+        let planned = match self.backend.as_str() {
+            "" | "planned" => true,
+            "pjrt" => false,
+            other => {
+                return Err(format!(
+                    "unknown serve backend {other:?} (want \"planned\" or \"pjrt\")"
+                ))
+            }
+        };
+        // only the planned backend draws models from the preset table;
+        // pjrt resolves the name against the artifacts manifest, which can
+        // carry custom converted shapes
+        if planned && super::presets::model_by_name(&self.model).is_none() {
+            return Err(format!(
+                "unknown serve model {:?} (known presets: {})",
+                self.model,
+                super::presets::MODEL_NAMES.join(", ")
+            ));
+        }
+        match self.variant.as_str() {
+            "" | "baseline" | "xamba" => {}
+            other => {
+                return Err(format!(
+                    "unknown serve variant {other:?} (want \"baseline\" or \"xamba\")"
+                ))
+            }
+        }
+        if self.decode_buckets.is_empty() || self.decode_buckets.contains(&0) {
+            return Err(
+                "serve decode_buckets must be a non-empty list of positive batch sizes"
+                    .into(),
+            );
+        }
+        Ok(())
+    }
+
     pub fn from_doc(doc: &TomlDoc, section: &str) -> Self {
         let d = Self::default();
         let k = |name: &str| format!("{section}.{name}");
@@ -306,6 +347,40 @@ mod tests {
         let c = ServeConfig::from_doc(&doc, "serve");
         assert_eq!(c.workers, 0, "negative workers must not wrap");
         assert_eq!(c.prefill_window, 1, "negative window must not wrap");
+    }
+
+    #[test]
+    fn validate_flags_unknown_backend_model_and_variant() {
+        let ok = ServeConfig::default();
+        assert_eq!(ok.validate(), Ok(()));
+
+        let bad = ServeConfig { backend: "cuda".into(), ..Default::default() };
+        let msg = bad.validate().unwrap_err();
+        assert!(msg.contains("unknown serve backend") && msg.contains("cuda"), "{msg}");
+        assert!(msg.contains("planned") && msg.contains("pjrt"), "{msg}");
+
+        let bad = ServeConfig { model: "gpt-5".into(), ..Default::default() };
+        let msg = bad.validate().unwrap_err();
+        assert!(msg.contains("unknown serve model") && msg.contains("gpt-5"), "{msg}");
+        // actionable: the message lists what WOULD work
+        assert!(msg.contains("tiny-mamba2"), "{msg}");
+        // ...but pjrt models come from the artifacts manifest, not the
+        // preset table — a non-preset name must pass config validation
+        let pjrt = ServeConfig {
+            backend: "pjrt".into(),
+            model: "custom-converted".into(),
+            ..Default::default()
+        };
+        assert_eq!(pjrt.validate(), Ok(()));
+
+        let bad = ServeConfig { variant: "int8".into(), ..Default::default() };
+        let msg = bad.validate().unwrap_err();
+        assert!(msg.contains("unknown serve variant") && msg.contains("int8"), "{msg}");
+
+        let bad = ServeConfig { decode_buckets: vec![], ..Default::default() };
+        assert!(bad.validate().unwrap_err().contains("decode_buckets"));
+        let bad = ServeConfig { decode_buckets: vec![1, 0], ..Default::default() };
+        assert!(bad.validate().unwrap_err().contains("decode_buckets"));
     }
 
     #[test]

@@ -10,10 +10,10 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use crate::config::{presets, ModelShape, ServeConfig};
-use crate::exec::{ExecJob, PlanCache, WorkerPool};
+use crate::exec::{plan_key, ExecJob, PlanCache, WorkerPool};
 use crate::graph::{Graph, Tensor};
 use crate::models::params::{full_spec, load_f32_bin};
-use crate::models::{build_decode_batched, build_prefill_serve};
+use crate::models::ServeFamily;
 use crate::passes::{actiba::ActibaPass, Pass};
 use crate::quality::param_inputs;
 use crate::runtime::{Engine, HostTensor, Manifest, ProgramEntry};
@@ -183,11 +183,18 @@ impl ServeModel for PjrtServeModel {
 /// Production backend for environments without PJRT artifacts: serves
 /// directly off IR graphs through the planned executor.
 ///
-/// At construction it builds the serve-prefill graph plus one batched
-/// decode graph per bucket and compiles each into a cached
+/// Model-generic: the architecture string of the configured `ModelShape`
+/// resolves to a [`ServeFamily`] (mamba-1 or mamba-2), which supplies the
+/// serve-prefill / batched-decode graph builders and the per-layer state
+/// layout — nothing below here hardcodes a family. At construction it
+/// builds the serve-prefill graph plus one batched decode graph per
+/// bucket and compiles each into a cached
 /// [`ExecutionPlan`](crate::exec::ExecutionPlan) — compile once at server
 /// start, reuse across all requests. Recurrent state travels as plain
-/// host tensors (`SeqState`), stacked `(n_layers, ...)` per sequence.
+/// host tensors (`SeqState`), stacked `(n_layers, ...)` per sequence;
+/// per-layer shapes come from the family (`(K-1, C)` conv + `(d_inner,
+/// N)` scan state for mamba-1, `(K-1, d_inner+2N)` conv + `(H, P, N)`
+/// SSD state for mamba-2).
 ///
 /// With `workers > 1` a [`WorkerPool`] shards decode buckets into
 /// smaller compiled buckets, one sub-batch per worker; every worker owns
@@ -195,11 +202,16 @@ impl ServeModel for PjrtServeModel {
 /// results are bitwise-identical to the serial path.
 pub struct PlannedServeModel {
     shape: ModelShape,
+    family: ServeFamily,
+    /// Per-layer, per-sequence state shapes (family-dependent).
+    conv_shape: Vec<usize>,
+    ssm_shape: Vec<usize>,
     window: usize,
     buckets: Vec<usize>, // ascending, deduped
     vocab: usize,
     params: Arc<Vec<Tensor>>,
     cache: PlanCache,
+    prefill_key: Arc<str>,
     decode_graphs: Vec<DecodeEntry>,
     pool: Option<WorkerPool>,
 }
@@ -226,12 +238,7 @@ impl PlannedServeModel {
         workers: usize,
         variant: &str,
     ) -> Result<Self> {
-        if shape.arch != "mamba" {
-            return Err(anyhow!(
-                "planned serving supports arch \"mamba\" (got {:?})",
-                shape.arch
-            ));
-        }
+        let family = ServeFamily::from_arch(&shape.arch).map_err(|e| anyhow!(e))?;
         let spec = full_spec(shape);
         if spec.total() != weights.len() {
             return Err(anyhow!(
@@ -263,23 +270,28 @@ impl PlannedServeModel {
 
         let params = Arc::new(param_inputs(&spec, weights));
         let mut cache = PlanCache::new();
-        let prefill = rewrite(build_prefill_serve(shape, window))?;
-        cache.insert_with("prefill", &prefill, &params).map_err(|e| anyhow!(e))?;
+        let prefill_key = plan_key(family.arch(), "prefill");
+        let prefill = rewrite(family.build_prefill_serve(shape, window))?;
+        cache.insert_with(&prefill_key, &prefill, &params).map_err(|e| anyhow!(e))?;
         let mut decode_graphs = Vec::with_capacity(buckets.len());
         for &b in &buckets {
-            let g = Arc::new(rewrite(build_decode_batched(shape, b))?);
-            let key: Arc<str> = format!("decode_b{b}").into();
+            let g = Arc::new(rewrite(family.build_decode_batched(shape, b))?);
+            let key = plan_key(family.arch(), &format!("decode_b{b}"));
             cache.insert_with(&key, &g, &params).map_err(|e| anyhow!(e))?;
             decode_graphs.push(DecodeEntry { bucket: b, key, graph: g });
         }
 
         let model = Self {
             shape: shape.clone(),
+            family,
+            conv_shape: family.conv_state_shape(shape),
+            ssm_shape: family.ssm_state_shape(shape),
             window,
             buckets,
             vocab: shape.vocab_size,
             params,
             cache,
+            prefill_key,
             decode_graphs,
             pool: if workers > 1 { Some(WorkerPool::new(workers)) } else { None },
         };
@@ -338,8 +350,26 @@ impl PlannedServeModel {
         self.pool.as_ref().map(|p| p.workers()).unwrap_or(1)
     }
 
-    fn dims(&self) -> (usize, usize, usize) {
-        (self.shape.d_conv, self.shape.d_inner(), self.shape.d_state)
+    /// The model family this backend serves (selected by `shape.arch`).
+    pub fn family(&self) -> ServeFamily {
+        self.family
+    }
+
+    /// Flat length of one layer's per-sequence conv / ssm state.
+    fn conv_len(&self) -> usize {
+        self.conv_shape.iter().product()
+    }
+
+    fn ssm_len(&self) -> usize {
+        self.ssm_shape.iter().product()
+    }
+
+    /// `[b] ++ per-layer shape` — the stacked decode-input layout.
+    fn batched(b: usize, per_seq: &[usize]) -> Vec<usize> {
+        let mut s = Vec::with_capacity(1 + per_seq.len());
+        s.push(b);
+        s.extend_from_slice(per_seq);
+        s
     }
 
     /// First decode of a chunk size on a worker compiles that worker's
@@ -349,7 +379,6 @@ impl PlannedServeModel {
     /// are warmed — full-size buckets always run on the serial cache.
     fn warm_pool(&self) -> Result<()> {
         if let Some(pool) = &self.pool {
-            let (k, di, n) = self.dims();
             let mut chunks: Vec<usize> =
                 self.buckets.iter().filter_map(|&b| self.pool_chunk(b)).collect();
             chunks.sort_unstable();
@@ -365,8 +394,8 @@ impl PlannedServeModel {
                         let mut tail = Vec::with_capacity(1 + 2 * self.shape.n_layers);
                         tail.push(Tensor::i32(vec![b], vec![0; b]));
                         for _ in 0..self.shape.n_layers {
-                            tail.push(Tensor::zeros(vec![b, k - 1, di]));
-                            tail.push(Tensor::zeros(vec![b, di, n]));
+                            tail.push(Tensor::zeros(Self::batched(b, &self.conv_shape)));
+                            tail.push(Tensor::zeros(Self::batched(b, &self.ssm_shape)));
                         }
                         ExecJob {
                             graph: entry.graph.clone(),
@@ -388,9 +417,8 @@ impl PlannedServeModel {
     /// then per layer the batch-stacked conv and ssm states.
     fn decode_tail(&self, seqs: &[(&mut SeqState, i32)]) -> Vec<Tensor> {
         let b = seqs.len();
-        let (k, di, n) = self.dims();
-        let conv_len = (k - 1) * di;
-        let ssm_len = di * n;
+        let conv_len = self.conv_len();
+        let ssm_len = self.ssm_len();
         let mut tail = Vec::with_capacity(1 + 2 * self.shape.n_layers);
         tail.push(Tensor::i32(vec![b], seqs.iter().map(|(_, t)| *t).collect()));
         for j in 0..self.shape.n_layers {
@@ -402,8 +430,8 @@ impl PlannedServeModel {
                 );
                 ssm.extend_from_slice(&s.ssm.f32_data()[j * ssm_len..(j + 1) * ssm_len]);
             }
-            tail.push(Tensor::f32(vec![b, k - 1, di], conv));
-            tail.push(Tensor::f32(vec![b, di, n], ssm));
+            tail.push(Tensor::f32(Self::batched(b, &self.conv_shape), conv));
+            tail.push(Tensor::f32(Self::batched(b, &self.ssm_shape), ssm));
         }
         tail
     }
@@ -416,9 +444,8 @@ impl PlannedServeModel {
         outs: &[Tensor],
         logits: &mut Vec<Vec<f32>>,
     ) {
-        let (k, di, n) = self.dims();
-        let conv_len = (k - 1) * di;
-        let ssm_len = di * n;
+        let conv_len = self.conv_len();
+        let ssm_len = self.ssm_len();
         let nl = self.shape.n_layers;
         let v = self.vocab;
         let logits_all = outs[0].as_f32();
@@ -433,8 +460,8 @@ impl PlannedServeModel {
                     &outs[2 + 2 * j].as_f32()[i * ssm_len..(i + 1) * ssm_len],
                 );
             }
-            state.conv = HostTensor::F32(vec![nl, k - 1, di], conv);
-            state.ssm = HostTensor::F32(vec![nl, di, n], ssm);
+            state.conv = HostTensor::F32(Self::batched(nl, &self.conv_shape), conv);
+            state.ssm = HostTensor::F32(Self::batched(nl, &self.ssm_shape), ssm);
             logits.push(logits_all[i * v..(i + 1) * v].to_vec());
         }
     }
@@ -478,12 +505,12 @@ impl ServeModel for PlannedServeModel {
             ));
         }
         let tail = vec![Tensor::i32(vec![self.window], tokens.to_vec())];
-        let outs = self.cache.run("prefill", tail).map_err(|e| anyhow!(e))?;
+        let key = self.prefill_key.clone();
+        let outs = self.cache.run(&key, tail).map_err(|e| anyhow!(e))?;
         let logits = outs[0].as_f32().to_vec(); // (1, V) row
-        let (k, di, n) = self.dims();
         let nl = self.shape.n_layers;
-        let mut conv = Vec::with_capacity(nl * (k - 1) * di);
-        let mut ssm = Vec::with_capacity(nl * di * n);
+        let mut conv = Vec::with_capacity(nl * self.conv_len());
+        let mut ssm = Vec::with_capacity(nl * self.ssm_len());
         for j in 0..nl {
             conv.extend_from_slice(outs[1 + 2 * j].as_f32());
             ssm.extend_from_slice(outs[2 + 2 * j].as_f32());
@@ -491,8 +518,8 @@ impl ServeModel for PlannedServeModel {
         Ok((
             logits,
             SeqState {
-                conv: HostTensor::F32(vec![nl, k - 1, di], conv),
-                ssm: HostTensor::F32(vec![nl, di, n], ssm),
+                conv: HostTensor::F32(Self::batched(nl, &self.conv_shape), conv),
+                ssm: HostTensor::F32(Self::batched(nl, &self.ssm_shape), ssm),
             },
         ))
     }

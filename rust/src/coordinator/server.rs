@@ -500,12 +500,19 @@ pub fn start_planned(cfg: &ServeConfig) -> Result<Server> {
 }
 
 /// Start the backend `cfg.backend` selects ("planned" | "pjrt").
+///
+/// Validates the config first ([`ServeConfig::validate`]): an unknown
+/// backend/model/variant string fails here with one actionable message
+/// instead of panicking (or erroring obscurely) inside the engine thread.
 pub fn start_backend(cfg: &ServeConfig) -> Result<Server> {
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     match cfg.backend.as_str() {
         "" | "planned" => start_planned(cfg),
         "pjrt" => start_pjrt(cfg),
+        // validate() already rejected everything else; keep a real error
+        // (not a panic) so the two admitted-sets can never drift apart
         other => Err(anyhow::anyhow!(
-            "unknown serve backend {other:?} (want planned|pjrt)"
+            "unknown serve backend {other:?} (want \"planned\" or \"pjrt\")"
         )),
     }
 }

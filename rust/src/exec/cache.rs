@@ -19,9 +19,20 @@ use crate::graph::{Graph, Tensor};
 
 use super::plan::ExecutionPlan;
 
+/// Canonical cache key for a (model family, program) pair — e.g.
+/// `plan_key("mamba2", "decode_b4")` → `"mamba2.decode_b4"`. Serving
+/// callers qualify every key with the family so a cache (or a pool
+/// worker's private cache) can never conflate same-named programs of
+/// different model families. Returned as `Arc<str>` because the decode
+/// hot path clones refcounts, not strings.
+pub fn plan_key(family: &str, program: &str) -> Arc<str> {
+    format!("{family}.{program}").into()
+}
+
 /// Keyed store of compiled [`ExecutionPlan`]s. Keys identify a
-/// (program, bucket) pair — e.g. `"prefill"`, `"decode_b4"` — and each
-/// key is compiled at most once for the cache's lifetime.
+/// (model family, program, bucket) triple — e.g. `"mamba.prefill"`,
+/// `"mamba2.decode_b4"` (see [`plan_key`]) — and each key is compiled at
+/// most once for the cache's lifetime.
 #[derive(Default)]
 pub struct PlanCache {
     plans: HashMap<String, ExecutionPlan>,
@@ -178,5 +189,12 @@ mod tests {
     fn missing_key_is_an_error() {
         let mut cache = PlanCache::new();
         assert!(cache.run("nope", vec![]).is_err());
+    }
+
+    #[test]
+    fn plan_keys_carry_the_model_family() {
+        assert_eq!(&*plan_key("mamba", "prefill"), "mamba.prefill");
+        assert_eq!(&*plan_key("mamba2", "decode_b4"), "mamba2.decode_b4");
+        assert_ne!(plan_key("mamba", "decode_b1"), plan_key("mamba2", "decode_b1"));
     }
 }

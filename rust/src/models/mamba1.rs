@@ -172,32 +172,22 @@ pub fn build_prefill_serve(m: &ModelShape, t: usize) -> Graph {
     assert_eq!(m.arch, "mamba");
     let k = m.d_conv;
     assert!(t >= k - 1, "serve prefill window {t} shorter than conv state {}", k - 1);
-    let spec = full_spec(m);
-    let mut ctx = Ctx::new(&format!("{}-serve-prefill-t{t}", m.name), &spec);
-    let tokens = ctx.g.input_i32("tokens", vec![t]);
-    let emb = ctx.w("emb");
-    let mut x = ctx.g.gather(emb, tokens, "embed");
-    let mut states: Vec<(NodeId, NodeId)> = Vec::with_capacity(m.n_layers);
-    for j in 0..m.n_layers {
-        let norm_w = ctx.w(&format!("l{j}.norm_w"));
-        let xn = ctx.g.rmsnorm(x, norm_w, &format!("l{j}.norm"));
-        let (y, conv_seq, h_last) = block_prefill_with_state(&mut ctx, m, j, xn, t);
-        let conv_state =
-            ctx.g.slice(conv_seq, 0, t - (k - 1), k - 1, &format!("l{j}.conv.state"));
-        states.push((conv_state, h_last));
-        x = ctx.g.add(x, y, &format!("l{j}.residual"));
-    }
-    let fw = ctx.w("final_norm_w");
-    let x = ctx.g.rmsnorm(x, fw, "final_norm");
-    let x_last = ctx.g.slice(x, 0, t - 1, 1, "last_pos");
-    let emb_t = ctx.g.transpose(emb, vec![1, 0], "lm_head.wT");
-    let logits = ctx.g.matmul(x_last, emb_t, "lm_head.mm"); // (1, V)
-    ctx.g.output(logits);
-    for (cs, ss) in states {
-        ctx.g.output(cs);
-        ctx.g.output(ss);
-    }
-    ctx.g
+    super::serve::lm_serve_scaffold(
+        &format!("{}-serve-prefill-t{t}", m.name),
+        m,
+        t,
+        |ctx, j, xn| {
+            let (y, conv_seq, h_last) = block_prefill_with_state(ctx, m, j, xn, t);
+            let conv_state = ctx.g.slice(
+                conv_seq,
+                0,
+                t - (k - 1),
+                k - 1,
+                &format!("l{j}.conv.state"),
+            );
+            (y, (conv_state, h_last))
+        },
+    )
 }
 
 /// Single Mamba-1 block graph over (T, d_model) — the Fig-1 / Fig-4(c)

@@ -113,10 +113,39 @@ pub(crate) fn block_prefill_with_state(
     x: NodeId,
     t: usize,
 ) -> (NodeId, NodeId) {
+    let (out, _xbc_raw, state) = block_prefill_inner(ctx, m, j, x, t, true);
+    (out, state)
+}
+
+/// One Mamba-2 block, shared by the conversion-time and serving prefill
+/// builders. `pad_to_chunk` selects the sequence-length policy:
+///
+/// * `true` — conversion-time lowering: right-pad to a chunk multiple
+///   (this is what keeps the paper's 256x256 CumSum_b in the T=4 graph)
+///   and slice the pads back off the block output. The returned state is
+///   the *padded* chunk state — fine for profiling/census, wrong for
+///   decode (`dt` on pads is `softplus(dt_bias)` ≠ 0, so padding keeps
+///   decaying the state through zero-inflow steps);
+/// * `false` — serving: no padding, full chunks plus a real-length
+///   remainder chunk (`ssd_chunk` is generic over the chunk length), so
+///   the returned state is exactly the recurrence state after `t` real
+///   tokens and continues bit-exactly into the decode graphs.
+///
+/// Returns `(block_out, raw pre-conv xbc sequence (T, conv_dim), ssd
+/// state (H, P, N))`; the serve builder slices the decode conv state off
+/// the raw xbc sequence.
+fn block_prefill_inner(
+    ctx: &mut Ctx,
+    m: &ModelShape,
+    j: usize,
+    x: NodeId,
+    t: usize,
+    pad_to_chunk: bool,
+) -> (NodeId, NodeId, NodeId) {
     let (di, n) = (m.d_inner(), m.d_state);
     let (h, p) = (m.n_heads(), m.headdim);
     let chunk = m.chunk;
-    let t_pad = t.div_ceil(chunk) * chunk;
+    let t_eff = if pad_to_chunk { t.div_ceil(chunk) * chunk } else { t };
     let nm_s = move |j: usize, s: &str| format!("l{j}.{s}");
     let nm = |s: &str| nm_s(j, s);
 
@@ -124,12 +153,12 @@ pub(crate) fn block_prefill_with_state(
     let in_proj = ctx.w(&nm("in_proj"));
     let zxbcdt = ctx.g.matmul(x, in_proj, &nm("in_proj.mm"));
     let z = ctx.g.slice(zxbcdt, 1, 0, di, &nm("split.z"));
-    let xbc = ctx.g.slice(zxbcdt, 1, di, di + 2 * n, &nm("split.xbc"));
+    let xbc_raw = ctx.g.slice(zxbcdt, 1, di, di + 2 * n, &nm("split.xbc"));
     let dt_raw = ctx.g.slice(zxbcdt, 1, 2 * di + 2 * n, h, &nm("split.dt"));
 
     // conv over (x, B, C) together, then SiLU
     let (cw, cb) = (ctx.w(&nm("conv_w")), ctx.w(&nm("conv_b")));
-    let xbc = ctx.g.conv1d_causal(xbc, cw, cb, &nm("conv"));
+    let xbc = ctx.g.conv1d_causal(xbc_raw, cw, cb, &nm("conv"));
     let xbc = ctx.g.silu(xbc, &nm("conv.silu"));
     let xi = ctx.g.slice(xbc, 1, 0, di, &nm("split.x"));
     let b_sel = ctx.g.slice(xbc, 1, di, n, &nm("split.B"));
@@ -149,7 +178,7 @@ pub(crate) fn block_prefill_with_state(
 
     // pad sequence dim to chunk multiple (zeros: dt rows are garbage on
     // pads but dt only multiplies x = 0 there, and y pads are sliced off)
-    let pad = t_pad - t;
+    let pad = t_eff - t;
     let (xi, b_sel, c_sel, dt) = if pad > 0 {
         let zx = crate::graph::Tensor::zeros(vec![pad, di]);
         let zn = crate::graph::Tensor::zeros(vec![pad, n]);
@@ -169,31 +198,36 @@ pub(crate) fn block_prefill_with_state(
     };
 
     // head layout: (T, di) -> (H, T, P); dt -> (H, T)
-    let xh3 = ctx.g.reshape(xi, vec![t_pad, h, p], &nm("heads"));
+    let xh3 = ctx.g.reshape(xi, vec![t_eff, h, p], &nm("heads"));
     let xh = ctx.g.transpose(xh3, vec![1, 0, 2], &nm("heads.T"));
     let dt_h = ctx.g.transpose(dt, vec![1, 0], &nm("dt.T"));
 
-    // chunked SSD with state carry
-    let n_chunks = t_pad / chunk;
+    // chunked SSD with state carry; padded mode walks equal chunks, serve
+    // mode ends on a real-length remainder chunk
     let mut state: Option<NodeId> = None;
-    let mut ys = Vec::with_capacity(n_chunks);
-    for ci in 0..n_chunks {
+    let mut ys = Vec::new();
+    let mut off = 0usize;
+    let mut ci = 0usize;
+    while off < t_eff {
+        let tc = chunk.min(t_eff - off);
         let cname = format!("l{j}.ssd.c{ci}");
         let nmc = move |s: &str| format!("{cname}.{s}");
-        let xh_c = ctx.g.slice(xh, 1, ci * chunk, chunk, &nmc("x"));
-        let dt_c = ctx.g.slice(dt_h, 1, ci * chunk, chunk, &nmc("dt"));
-        let b_c = ctx.g.slice(b_sel, 0, ci * chunk, chunk, &nmc("b"));
-        let c_c = ctx.g.slice(c_sel, 0, ci * chunk, chunk, &nmc("c"));
+        let xh_c = ctx.g.slice(xh, 1, off, tc, &nmc("x"));
+        let dt_c = ctx.g.slice(dt_h, 1, off, tc, &nmc("dt"));
+        let b_c = ctx.g.slice(b_sel, 0, off, tc, &nmc("b"));
+        let c_c = ctx.g.slice(c_sel, 0, off, tc, &nmc("c"));
         let (y_c, s_c) =
-            ssd_chunk(ctx, &nmc, chunk, h, p, n, xh_c, dt_c, a, b_c, c_c, state);
+            ssd_chunk(ctx, &nmc, tc, h, p, n, xh_c, dt_c, a, b_c, c_c, state);
         ys.push(y_c);
         state = Some(s_c);
+        off += tc;
+        ci += 1;
     }
     let y = if ys.len() == 1 {
         ys[0]
     } else {
         ctx.g.concat(&ys, 1, &nm("ssd.y"))
-    }; // (H, T_pad, P)
+    }; // (H, T_eff, P)
 
     // D skip: y += D[h] * x
     let d_skip = ctx.w(&nm("d_skip"));
@@ -202,8 +236,8 @@ pub(crate) fn block_prefill_with_state(
     let y = ctx.g.add(y, skip, &nm("y.skip"));
 
     // back to (T, di), drop padding
-    let y = ctx.g.transpose(y, vec![1, 0, 2], &nm("y.T")); // (T_pad, H, P)
-    let y = ctx.g.reshape(y, vec![t_pad, di], &nm("y.flat"));
+    let y = ctx.g.transpose(y, vec![1, 0, 2], &nm("y.T")); // (T_eff, H, P)
+    let y = ctx.g.reshape(y, vec![t_eff, di], &nm("y.flat"));
     let y = if pad > 0 {
         ctx.g.slice(y, 0, 0, t, &nm("y.unpad"))
     } else {
@@ -217,7 +251,7 @@ pub(crate) fn block_prefill_with_state(
     let yn = ctx.g.rmsnorm(gated, gw, &nm("gnorm"));
     let op = ctx.w(&nm("out_proj"));
     let out = ctx.g.matmul(yn, op, &nm("out_proj.mm"));
-    (out, state.expect("at least one chunk"))
+    (out, xbc_raw, state.expect("at least one chunk"))
 }
 
 /// Full Mamba-2 LM prefill graph: tokens (T,) i32 -> logits (T, V).
@@ -253,6 +287,161 @@ pub fn build_block(m: &ModelShape, t: usize) -> Graph {
     let (y, state) = block_prefill_with_state(&mut ctx, m, 0, x, t);
     ctx.g.output(y);
     ctx.g.output(state); // prefill caches the SSD state for decode
+    ctx.g
+}
+
+/// One Mamba-2 block for the *serving* prefill: `block_prefill_inner`
+/// with `pad_to_chunk = false`, so the returned SSD state is decode-exact
+/// (see the inner builder's doc for why padding would corrupt it), plus
+/// the decode conv state — the last K-1 rows of the raw pre-conv `xbc`
+/// sequence, the exact window `build_decode_batched` concatenates its
+/// next token onto.
+fn block_prefill_serve(
+    ctx: &mut Ctx,
+    m: &ModelShape,
+    j: usize,
+    x: NodeId,
+    t: usize,
+) -> (NodeId, NodeId, NodeId) {
+    let k = m.d_conv;
+    let (out, xbc_raw, state) = block_prefill_inner(ctx, m, j, x, t, false);
+    let conv_state =
+        ctx.g.slice(xbc_raw, 0, t - (k - 1), k - 1, &format!("l{j}.conv.state"));
+    (out, conv_state, state)
+}
+
+/// Serving prefill graph: tokens (T,) i32 -> last-position logits (1, V)
+/// plus per-layer decode-ready recurrent state. Output order matches
+/// [`build_decode_batched`]: logits, then per layer `conv_state{j}`
+/// (K-1, conv_dim) and `ssm_state{j}` (H, P, N).
+///
+/// Requires `t >= d_conv - 1` so the conv state can be sliced off the
+/// prefill window. Any `t` works relative to `chunk` — the SSD runs a
+/// real-length remainder chunk instead of padding, so the state outputs
+/// are bit-exact continuations for the decode graphs.
+pub fn build_prefill_serve(m: &ModelShape, t: usize) -> Graph {
+    assert_eq!(m.arch, "mamba2");
+    let k = m.d_conv;
+    assert!(t >= k - 1, "serve prefill window {t} shorter than conv state {}", k - 1);
+    super::serve::lm_serve_scaffold(
+        &format!("{}-serve-prefill-t{t}", m.name),
+        m,
+        t,
+        |ctx, j, xn| {
+            let (y, conv_state, ssd_state) = block_prefill_serve(ctx, m, j, xn, t);
+            (y, (conv_state, ssd_state))
+        },
+    )
+}
+
+/// Batched decode-step graph for a fixed batch bucket `b`: tokens (b,)
+/// i32 + per-layer stacked states -> logits (b, V) + new states. The
+/// Mamba-2 counterpart of `mamba1::build_decode_batched`, and the
+/// serving hot path of the planned backend for the SSD family.
+///
+/// Inputs: params, tokens, then per layer `conv_state{j}` (b, K-1,
+/// conv_dim) and `ssm_state{j}` (b, H, P, N). Outputs: logits, then
+/// per-layer states in the same order. Every kernel treats the batch
+/// dimension independently — elementwise ops broadcast per element,
+/// reductions and matmuls loop rows/batches independently — so
+/// per-sequence results are bitwise identical across bucket sizes (the
+/// pool leans on this to shard a bucket across workers).
+pub fn build_decode_batched(m: &ModelShape, b: usize) -> Graph {
+    assert_eq!(m.arch, "mamba2");
+    assert!(b >= 1, "decode bucket must be >= 1");
+    let spec = full_spec(m);
+    let mut ctx = Ctx::new(&format!("{}-decode-b{b}", m.name), &spec);
+    let tokens = ctx.g.input_i32("tokens", vec![b]);
+    let (di, n, k) = (m.d_inner(), m.d_state, m.d_conv);
+    let (h, p) = (m.n_heads(), m.headdim);
+    let cd = m.conv_dim();
+    let mut conv_states = Vec::new();
+    let mut ssm_states = Vec::new();
+    for j in 0..m.n_layers {
+        conv_states.push(ctx.g.input(&format!("conv_state{j}"), vec![b, k - 1, cd]));
+        ssm_states.push(ctx.g.input(&format!("ssm_state{j}"), vec![b, h, p, n]));
+    }
+
+    let emb = ctx.w("emb");
+    let mut x = ctx.g.gather(emb, tokens, "embed"); // (b, d)
+    let mut out_states = Vec::new();
+    for j in 0..m.n_layers {
+        let nm = |s: &str| format!("l{j}.{s}");
+        let norm_w = ctx.w(&nm("norm_w"));
+        let xn = ctx.g.rmsnorm(x, norm_w, &nm("norm"));
+        let in_proj = ctx.w(&nm("in_proj"));
+        let zxbcdt = ctx.g.matmul(xn, in_proj, &nm("in_proj.mm")); // (b, 2di+2n+h)
+        let z = ctx.g.slice(zxbcdt, 1, 0, di, &nm("split.z"));
+        let xbc = ctx.g.slice(zxbcdt, 1, di, di + 2 * n, &nm("split.xbc"));
+        let dt_raw = ctx.g.slice(zxbcdt, 1, 2 * di + 2 * n, h, &nm("split.dtr"));
+
+        // conv step: window = [state; x_t] along time, dot with taps
+        let xbc_row = ctx.g.reshape(xbc, vec![b, 1, cd], &nm("conv.xrow"));
+        let window =
+            ctx.g.concat(&[conv_states[j], xbc_row], 1, &nm("conv.win")); // (b, K, cd)
+        let cw = ctx.w(&nm("conv_w"));
+        let prod = ctx.g.mul(window, cw, &nm("conv.prod"));
+        let xbc1 = ctx.g.reduce_sum(prod, 1, &nm("conv.sum")); // (b, cd)
+        let cb = ctx.w(&nm("conv_b"));
+        let xbc1 = ctx.g.add(xbc1, cb, &nm("conv.bias"));
+        let xbc1 = ctx.g.silu(xbc1, &nm("conv.silu"));
+        let new_conv = ctx.g.slice(window, 1, 1, k - 1, &nm("conv.state"));
+
+        let xi = ctx.g.slice(xbc1, 1, 0, di, &nm("split.x"));
+        let b_t = ctx.g.slice(xbc1, 1, di, n, &nm("split.B")); // (b, n)
+        let c_t = ctx.g.slice(xbc1, 1, di + n, n, &nm("split.C"));
+
+        let dtb = ctx.w(&nm("dt_bias"));
+        let dt = ctx.g.add(dt_raw, dtb, &nm("dt.bias"));
+        let dt = ctx.g.softplus(dt, &nm("dt.softplus")); // (b, h)
+
+        let a_log = ctx.w(&nm("a_log"));
+        let a_exp = ctx.g.exp(a_log, &nm("A.exp"));
+        let neg1 = ctx.g.const_scalar(&nm("A.neg1"), -1.0);
+        let a = ctx.g.mul(a_exp, neg1, &nm("A")); // (h,)
+
+        // state' = state * exp(dt a)[b,h,1,1] + (x dt)[b,h,p,1] * B[b,1,1,n]
+        let da = ctx.g.mul(dt, a, &nm("da")); // (b, h)
+        let da = ctx.g.exp(da, &nm("decay"));
+        let da4 = ctx.g.reshape(da, vec![b, h, 1, 1], &nm("decay.4d"));
+        let decayed = ctx.g.mul(ssm_states[j], da4, &nm("h.decay"));
+        let xh = ctx.g.reshape(xi, vec![b, h, p], &nm("x.heads"));
+        let dt_col = ctx.g.reshape(dt, vec![b, h, 1], &nm("dt.col"));
+        let xdt = ctx.g.mul(xh, dt_col, &nm("x.dt")); // (b, h, p)
+        let xdt4 = ctx.g.reshape(xdt, vec![b, h, p, 1], &nm("x.dt.4d"));
+        let b4 = ctx.g.reshape(b_t, vec![b, 1, 1, n], &nm("B.4d"));
+        let inflow = ctx.g.mul(xdt4, b4, &nm("inflow")); // (b, h, p, n)
+        let h_new = ctx.g.add(decayed, inflow, &nm("h"));
+
+        // y = state' · C : (b, h, p, n) x (b, h, n, 1) -> (b, h, p, 1)
+        let c_mid = ctx.g.reshape(c_t, vec![b, 1, n, 1], &nm("C.mid"));
+        let c_col = ctx.g.broadcast(c_mid, vec![b, h, n, 1], &nm("C.col"));
+        let y4 = ctx.g.matmul(h_new, c_col, &nm("y.mm"));
+        let y = ctx.g.reshape(y4, vec![b, h, p], &nm("y.hp"));
+        let d_skip = ctx.w(&nm("d_skip"));
+        let d_col = ctx.g.reshape(d_skip, vec![h, 1], &nm("D.col"));
+        let skip = ctx.g.mul(xh, d_col, &nm("y.skip"));
+        let y = ctx.g.add(y, skip, &nm("y.skipped"));
+        let y = ctx.g.reshape(y, vec![b, di], &nm("y.flat"));
+
+        let zg = ctx.g.silu(z, &nm("gate.silu"));
+        let gated = ctx.g.mul(y, zg, &nm("gate.mul"));
+        let gw = ctx.w(&nm("gnorm_w"));
+        let yn = ctx.g.rmsnorm(gated, gw, &nm("gnorm"));
+        let op = ctx.w(&nm("out_proj"));
+        let y = ctx.g.matmul(yn, op, &nm("out_proj.mm"));
+        x = ctx.g.add(x, y, &nm("residual"));
+        out_states.push((new_conv, h_new));
+    }
+    let fw = ctx.w("final_norm_w");
+    let x = ctx.g.rmsnorm(x, fw, "final_norm");
+    let emb_t = ctx.g.transpose(emb, vec![1, 0], "lm_head.wT");
+    let logits = ctx.g.matmul(x, emb_t, "lm_head.mm"); // (b, V)
+    ctx.g.output(logits);
+    for (cs, ss) in out_states {
+        ctx.g.output(cs);
+        ctx.g.output(ss);
+    }
     ctx.g
 }
 
@@ -415,5 +604,116 @@ mod tests {
             g.shape(g.outputs[2]),
             &[m.n_heads(), m.headdim, m.d_state]
         );
+    }
+
+    #[test]
+    fn serve_prefill_outputs_last_logits_and_states() {
+        let m = presets::tiny_mamba2();
+        // t = 24 is deliberately NOT a chunk multiple (chunk 16): the
+        // serve builder must run a remainder chunk, never pad
+        let g = build_prefill_serve(&m, 24);
+        assert_eq!(g.outputs.len(), 1 + 2 * m.n_layers);
+        assert_eq!(g.shape(g.outputs[0]), &[1, m.vocab_size]);
+        assert_eq!(g.shape(g.outputs[1]), &[m.d_conv - 1, m.conv_dim()]);
+        assert_eq!(
+            g.shape(g.outputs[2]),
+            &[m.n_heads(), m.headdim, m.d_state]
+        );
+        // remainder chunking: a second chunk exists and carries state...
+        assert!(g.nodes.iter().any(|nd| nd.name.contains("c1.off.mm")));
+        // ...and no pad constants were materialized
+        assert!(!g.nodes.iter().any(|nd| nd.name.contains("pad.")));
+    }
+
+    #[test]
+    fn batched_decode_io_shapes() {
+        let m = presets::tiny_mamba2();
+        let b = 4;
+        let g = build_decode_batched(&m, b);
+        let n_params = full_spec(&m).entries.len();
+        assert_eq!(g.inputs.len(), n_params + 1 + 2 * m.n_layers);
+        assert_eq!(g.outputs.len(), 1 + 2 * m.n_layers);
+        assert_eq!(g.shape(g.outputs[0]), &[b, m.vocab_size]);
+        assert_eq!(g.shape(g.outputs[1]), &[b, m.d_conv - 1, m.conv_dim()]);
+        assert_eq!(
+            g.shape(g.outputs[2]),
+            &[b, m.n_heads(), m.headdim, m.d_state]
+        );
+    }
+
+    #[test]
+    fn batched_decode_is_bitwise_per_sequence() {
+        // a b=2 batch must reproduce the two b=1 runs exactly
+        use crate::exec::run_once;
+        use crate::graph::Tensor;
+        use crate::quality::param_inputs;
+
+        let m = presets::tiny_mamba2();
+        let spec = full_spec(&m);
+        let mut rng = crate::util::Prng::new(13);
+        let weights = rng.range_vec(spec.total(), -0.1, 0.1);
+        let params = param_inputs(&spec, &weights);
+        let (k, cd) = (m.d_conv, m.conv_dim());
+        let (h, p, n) = (m.n_heads(), m.headdim, m.d_state);
+        let conv_len = (k - 1) * cd;
+        let ssm_len = h * p * n;
+        let state_f = |seed: u64, len: usize| {
+            let mut r = crate::util::Prng::new(seed);
+            r.range_vec(len, -0.5, 0.5)
+        };
+        let conv_seed = |s: usize, j: usize| 3000 + 100 * s as u64 + j as u64;
+        let ssm_seed = |s: usize, j: usize| 4000 + 100 * s as u64 + j as u64;
+
+        let g1 = build_decode_batched(&m, 1);
+        let g2 = build_decode_batched(&m, 2);
+        let mut singles = Vec::new();
+        for s in 0..2usize {
+            let mut inputs = params.clone();
+            inputs.push(Tensor::i32(vec![1], vec![50 + s as i32]));
+            for j in 0..m.n_layers {
+                inputs.push(Tensor::f32(
+                    vec![1, k - 1, cd],
+                    state_f(conv_seed(s, j), conv_len),
+                ));
+                inputs.push(Tensor::f32(
+                    vec![1, h, p, n],
+                    state_f(ssm_seed(s, j), ssm_len),
+                ));
+            }
+            singles.push(run_once(&g1, &inputs).expect("b=1 decode"));
+        }
+        let mut inputs = params.clone();
+        inputs.push(Tensor::i32(vec![2], vec![50, 51]));
+        for j in 0..m.n_layers {
+            let mut conv = Vec::new();
+            let mut ssm = Vec::new();
+            for s in 0..2usize {
+                conv.extend(state_f(conv_seed(s, j), conv_len));
+                ssm.extend(state_f(ssm_seed(s, j), ssm_len));
+            }
+            inputs.push(Tensor::f32(vec![2, k - 1, cd], conv));
+            inputs.push(Tensor::f32(vec![2, h, p, n], ssm));
+        }
+        let batched = run_once(&g2, &inputs).expect("b=2 decode");
+        let v = m.vocab_size;
+        for s in 0..2 {
+            assert_eq!(
+                &batched[0].as_f32()[s * v..(s + 1) * v],
+                singles[s][0].as_f32(),
+                "logits diverge for sequence {s}"
+            );
+            for j in 0..m.n_layers {
+                assert_eq!(
+                    &batched[1 + 2 * j].as_f32()[s * conv_len..(s + 1) * conv_len],
+                    singles[s][1 + 2 * j].as_f32(),
+                    "conv state diverges (seq {s}, layer {j})"
+                );
+                assert_eq!(
+                    &batched[2 + 2 * j].as_f32()[s * ssm_len..(s + 1) * ssm_len],
+                    singles[s][2 + 2 * j].as_f32(),
+                    "ssm state diverges (seq {s}, layer {j})"
+                );
+            }
+        }
     }
 }

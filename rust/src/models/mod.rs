@@ -4,6 +4,7 @@
 pub mod mamba1;
 pub mod mamba2;
 pub mod params;
+pub mod serve;
 
 use crate::config::ModelShape;
 use crate::graph::Graph;
@@ -35,4 +36,19 @@ pub fn build_decode(m: &ModelShape) -> Graph {
     }
 }
 
-pub use mamba1::{build_decode_batched, build_prefill_serve};
+pub use serve::ServeFamily;
+
+/// Build the serving prefill graph (last-position logits + per-layer
+/// decode state) for either architecture.
+pub fn build_prefill_serve(m: &ModelShape, t: usize) -> Graph {
+    ServeFamily::from_arch(&m.arch)
+        .unwrap_or_else(|e| panic!("{e}"))
+        .build_prefill_serve(m, t)
+}
+
+/// Build the bucket-`b` batched decode-step graph for either architecture.
+pub fn build_decode_batched(m: &ModelShape, b: usize) -> Graph {
+    ServeFamily::from_arch(&m.arch)
+        .unwrap_or_else(|e| panic!("{e}"))
+        .build_decode_batched(m, b)
+}

@@ -1,0 +1,148 @@
+//! Model-generic serving builders — the seam `coordinator::PlannedServeModel`
+//! selects a model family through.
+//!
+//! Both Mamba families serve through the same two graph shapes:
+//!
+//! * a **serve prefill** (tokens → last-position logits + per-layer
+//!   decode-ready recurrent state), and
+//! * a per-bucket **batched decode step** (tokens (b,) + stacked states →
+//!   logits (b, V) + new states).
+//!
+//! What differs per family is the block math and the *state layout*:
+//! Mamba-1 carries `conv (K-1, d_inner)` + `ssm (d_inner, N)`, Mamba-2
+//! carries `conv (K-1, d_inner + 2N)` (x, B, C conv together) +
+//! the SSD state `ssm (H, P, N)`. [`ServeFamily`] owns both the builder
+//! dispatch and the layout so the coordinator never hardcodes either.
+
+use crate::config::ModelShape;
+use crate::graph::{Graph, NodeId};
+
+use super::mamba1::Ctx;
+use super::params::full_spec;
+use super::{mamba1, mamba2};
+
+/// The LM-level scaffolding shared by every serve-prefill graph: embed →
+/// per-layer (rmsnorm → block → residual) → final norm → last-position
+/// logits, with per-layer `(conv_state, ssm_state)` outputs appended in
+/// [`ServeFamily`] order. `block` builds one family-specific block over
+/// the normalized input and returns `(block_out, (conv_state, ssm_state))`.
+pub(crate) fn lm_serve_scaffold(
+    graph_name: &str,
+    m: &ModelShape,
+    t: usize,
+    mut block: impl FnMut(&mut Ctx, usize, NodeId) -> (NodeId, (NodeId, NodeId)),
+) -> Graph {
+    let spec = full_spec(m);
+    let mut ctx = Ctx::new(graph_name, &spec);
+    let tokens = ctx.g.input_i32("tokens", vec![t]);
+    let emb = ctx.w("emb");
+    let mut x = ctx.g.gather(emb, tokens, "embed");
+    let mut states: Vec<(NodeId, NodeId)> = Vec::with_capacity(m.n_layers);
+    for j in 0..m.n_layers {
+        let norm_w = ctx.w(&format!("l{j}.norm_w"));
+        let xn = ctx.g.rmsnorm(x, norm_w, &format!("l{j}.norm"));
+        let (y, st) = block(&mut ctx, j, xn);
+        states.push(st);
+        x = ctx.g.add(x, y, &format!("l{j}.residual"));
+    }
+    let fw = ctx.w("final_norm_w");
+    let x = ctx.g.rmsnorm(x, fw, "final_norm");
+    let x_last = ctx.g.slice(x, 0, t - 1, 1, "last_pos");
+    let emb_t = ctx.g.transpose(emb, vec![1, 0], "lm_head.wT");
+    let logits = ctx.g.matmul(x_last, emb_t, "lm_head.mm"); // (1, V)
+    ctx.g.output(logits);
+    for (cs, ss) in states {
+        ctx.g.output(cs);
+        ctx.g.output(ss);
+    }
+    ctx.g
+}
+
+/// Which model family a serving backend drives. Constructed from
+/// `ModelShape.arch` via [`ServeFamily::from_arch`]; every family-specific
+/// decision on the planned serving path (graph builders, state-tensor
+/// layout, plan-cache key prefix) dispatches through here.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeFamily {
+    Mamba1,
+    Mamba2,
+}
+
+impl ServeFamily {
+    /// Resolve an architecture string; unknown arch is a clear error, not
+    /// a panic (the coordinator surfaces it as a config error).
+    pub fn from_arch(arch: &str) -> Result<ServeFamily, String> {
+        match arch {
+            "mamba" => Ok(ServeFamily::Mamba1),
+            "mamba2" => Ok(ServeFamily::Mamba2),
+            other => Err(format!(
+                "no planned serving family for arch {other:?} (want \"mamba\" or \"mamba2\")"
+            )),
+        }
+    }
+
+    /// The `ModelShape.arch` string this family serves — also the model
+    /// half of every plan-cache key (e.g. `mamba2.decode_b4`).
+    pub fn arch(self) -> &'static str {
+        match self {
+            ServeFamily::Mamba1 => "mamba",
+            ServeFamily::Mamba2 => "mamba2",
+        }
+    }
+
+    /// Serving prefill graph: tokens (T,) i32 → last-position logits
+    /// (1, V) + per-layer `(conv_state, ssm_state)` in layer order.
+    pub fn build_prefill_serve(self, m: &ModelShape, t: usize) -> Graph {
+        match self {
+            ServeFamily::Mamba1 => mamba1::build_prefill_serve(m, t),
+            ServeFamily::Mamba2 => mamba2::build_prefill_serve(m, t),
+        }
+    }
+
+    /// Batched decode-step graph for bucket `b`: tokens (b,) i32 +
+    /// per-layer stacked states → logits (b, V) + new states.
+    pub fn build_decode_batched(self, m: &ModelShape, b: usize) -> Graph {
+        match self {
+            ServeFamily::Mamba1 => mamba1::build_decode_batched(m, b),
+            ServeFamily::Mamba2 => mamba2::build_decode_batched(m, b),
+        }
+    }
+
+    /// Per-layer, per-sequence conv-state shape.
+    pub fn conv_state_shape(self, m: &ModelShape) -> Vec<usize> {
+        vec![m.d_conv - 1, m.conv_dim()]
+    }
+
+    /// Per-layer, per-sequence recurrent-state shape: `(d_inner, N)` for
+    /// Mamba-1's selective scan, `(H, P, N)` for Mamba-2's SSD heads.
+    pub fn ssm_state_shape(self, m: &ModelShape) -> Vec<usize> {
+        match self {
+            ServeFamily::Mamba1 => vec![m.d_inner(), m.d_state],
+            ServeFamily::Mamba2 => vec![m.n_heads(), m.headdim, m.d_state],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn family_resolves_known_archs_only() {
+        assert_eq!(ServeFamily::from_arch("mamba"), Ok(ServeFamily::Mamba1));
+        assert_eq!(ServeFamily::from_arch("mamba2"), Ok(ServeFamily::Mamba2));
+        let err = ServeFamily::from_arch("transformer").unwrap_err();
+        assert!(err.contains("transformer") && err.contains("mamba2"), "{err}");
+    }
+
+    #[test]
+    fn state_layouts_match_the_decode_graph_io() {
+        for m in [presets::tiny_mamba(), presets::tiny_mamba2()] {
+            let f = ServeFamily::from_arch(&m.arch).unwrap();
+            let g = f.build_decode_batched(&m, 2);
+            assert_eq!(&g.shape(g.outputs[1])[1..], f.conv_state_shape(&m).as_slice());
+            assert_eq!(&g.shape(g.outputs[2])[1..], f.ssm_state_shape(&m).as_slice());
+        }
+    }
+}

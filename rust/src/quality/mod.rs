@@ -295,4 +295,39 @@ mod tests {
         assert_eq!(rep1.ppl.to_bits(), rep4.ppl.to_bits());
         assert_eq!(rep1.windows, 3);
     }
+
+    #[test]
+    fn eval_lm_mamba2_is_bitwise_identical_across_worker_counts() {
+        // the mamba-2 prefill graph (chunked SSD, CumSum_b, ReduceSum)
+        // must evaluate data-parallel on the pool exactly like mamba-1
+        let shape = crate::config::presets::tiny_mamba2();
+        let window = 16usize;
+        let g = crate::models::build_prefill(&shape, window);
+        let spec = full_spec(&shape);
+        let mut rng = crate::util::Prng::new(6);
+        let weights = rng.range_vec(spec.total(), -0.1, 0.1);
+        let text = crate::util::corpus::corpus(200, 77);
+        let (rep1, logits1) =
+            eval_lm(&shape, &g, &weights, &text, window, 3, None, 1).unwrap();
+        let (rep4, logits4) =
+            eval_lm(&shape, &g, &weights, &text, window, 3, None, 4).unwrap();
+        assert_eq!(logits1, logits4, "pooled mamba-2 eval diverged from serial");
+        assert_eq!(rep1.ppl.to_bits(), rep4.ppl.to_bits());
+        assert!(rep1.ppl.is_finite());
+    }
+
+    #[test]
+    fn induction_probe_runs_mamba2_on_the_pool() {
+        let shape = crate::config::presets::tiny_mamba2();
+        // >= 2*max-sentence+1 (~85) so every trial window actually scores
+        let window = 96usize;
+        let g = crate::models::build_prefill(&shape, window);
+        let spec = full_spec(&shape);
+        let mut rng = crate::util::Prng::new(8);
+        let weights = rng.range_vec(spec.total(), -0.1, 0.1);
+        let serial = induction_probe(&shape, &g, &weights, window, 2, 123, 1).unwrap();
+        let pooled = induction_probe(&shape, &g, &weights, window, 2, 123, 2).unwrap();
+        assert_eq!(serial, pooled, "probe diverged across worker counts");
+        assert!(serial.0.is_finite() && serial.1.is_finite());
+    }
 }

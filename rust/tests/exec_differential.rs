@@ -199,3 +199,59 @@ fn full_model_prefill_graph_matches_naive() {
     let mut rng = Prng::new(3);
     check_graph(&g, "tiny-mamba prefill", &mut rng);
 }
+
+#[test]
+fn full_model_mamba2_prefill_graph_matches_naive() {
+    // the mamba-2 counterpart: chunked SSD (segsum CumSum_b, broadcast-Mul
+    // + ReduceSum einsum decomposition), grouped conv, gated RMSNorm
+    use xamba::config::presets;
+    let shape = presets::tiny_mamba2();
+    let g = xamba::models::build_prefill(&shape, 6);
+    let mut rng = Prng::new(4);
+    check_graph(&g, "tiny-mamba2 prefill", &mut rng);
+}
+
+/// Small shapes for the serving-graph corpus (debug-mode friendly).
+fn nano_shape(arch: &str) -> xamba::config::ModelShape {
+    xamba::config::ModelShape {
+        name: format!("nano-{arch}"),
+        arch: arch.into(),
+        vocab_size: 64,
+        d_model: 32,
+        n_layers: 2,
+        d_state: 8,
+        d_conv: 3,
+        expand: 2,
+        dt_rank: 4,
+        headdim: 16,
+        chunk: 8,
+    }
+}
+
+#[test]
+fn serve_and_decode_graphs_match_naive_for_both_families() {
+    // the planned serving path's graphs — serve prefill (last-position
+    // logits + per-layer state outputs) and per-bucket batched decode —
+    // differentially covered for BOTH model families, plus their
+    // pass-rewritten variants (CumBA tril matmuls, ReduBA ones-mask MVMs,
+    // ActiBA PLUs all execute on the serving hot path)
+    let mut rng = Prng::new(0x5E_B5);
+    for shape in [nano_shape("mamba"), nano_shape("mamba2")] {
+        let label = shape.name.clone();
+        // t = 10 with chunk 8: mamba-2 runs a carried remainder chunk
+        let serve = xamba::models::build_prefill_serve(&shape, 10);
+        check_graph(&serve, &format!("{label} serve-prefill"), &mut rng);
+        let exact = RedubaPass.apply(&CumbaPass.apply(&serve));
+        check_graph(&exact, &format!("{label} serve-prefill cumba+reduba"), &mut rng);
+        let approx = ActibaPass::default().apply(&exact);
+        check_graph(&approx, &format!("{label} serve-prefill actiba"), &mut rng);
+        for b in [1usize, 2] {
+            let dec = xamba::models::build_decode_batched(&shape, b);
+            check_graph(&dec, &format!("{label} decode b{b}"), &mut rng);
+            let exact = RedubaPass.apply(&CumbaPass.apply(&dec));
+            check_graph(&exact, &format!("{label} decode b{b} cumba+reduba"), &mut rng);
+            let approx = ActibaPass::default().apply(&exact);
+            check_graph(&approx, &format!("{label} decode b{b} actiba"), &mut rng);
+        }
+    }
+}

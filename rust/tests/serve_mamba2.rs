@@ -1,0 +1,349 @@
+//! Integration tests of Mamba-2 on the planned serving path — the
+//! mirror of `serve_planned.rs` for the SSD family. `PlannedServeModel`
+//! resolves `arch = "mamba2"` to its serve-prefill / batched-decode
+//! builders and the (H, P, N) state layout; everything here runs with no
+//! `artifacts/` directory and no PJRT.
+
+use std::time::Duration;
+
+use xamba::config::{ModelShape, ServeConfig};
+use xamba::coordinator::{
+    start_backend, FinishReason, GenParams, PlannedServeModel, SeqState, ServeModel,
+    Server, StreamEvent,
+};
+
+/// A deliberately small Mamba-2 so debug-mode tests stay fast. Vocab
+/// stays 256 (byte tokenizer); chunk 8 so multi-chunk SSD prefill is
+/// exercised at tiny windows.
+fn nano2() -> ModelShape {
+    ModelShape {
+        name: "nano-mamba2".into(),
+        arch: "mamba2".into(),
+        vocab_size: 256,
+        d_model: 32,
+        n_layers: 2,
+        d_state: 8,
+        d_conv: 3,
+        expand: 2,
+        dt_rank: 0,
+        headdim: 16,
+        chunk: 8,
+    }
+}
+
+fn argmax(logits: &[f32]) -> i32 {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i as i32)
+        .unwrap_or(0)
+}
+
+fn prompt(i: usize, window: usize) -> Vec<i32> {
+    (0..window).map(|t| ((i * 29 + t * 11) % 256) as i32).collect()
+}
+
+#[test]
+fn batched_decode_matches_single_step_semantics() {
+    // per-sequence bitwise identity across bucket sizes: one bucket-4
+    // call must reproduce four bucket-1 calls exactly
+    let shape = nano2();
+    let window = 8;
+    let weights = PlannedServeModel::random_weights(&shape, 7);
+    let mut single =
+        PlannedServeModel::new(&shape, &weights, window, &[1], 1, "baseline").unwrap();
+    let mut batched =
+        PlannedServeModel::new(&shape, &weights, window, &[1, 2, 4], 1, "baseline")
+            .unwrap();
+
+    let mut st_single: Vec<SeqState> = Vec::new();
+    let mut st_batched: Vec<SeqState> = Vec::new();
+    let mut toks: Vec<i32> = Vec::new();
+    for i in 0..4 {
+        let p = prompt(i, window);
+        let (l1, s1) = single.prefill(&p).unwrap();
+        let (l2, s2) = batched.prefill(&p).unwrap();
+        assert_eq!(l1, l2, "prefill logits diverge for prompt {i}");
+        toks.push(argmax(&l1));
+        st_single.push(s1);
+        st_batched.push(s2);
+    }
+
+    let mut logits_single: Vec<Vec<f32>> = Vec::new();
+    for (s, t) in st_single.iter_mut().zip(toks.iter().copied()) {
+        let mut seqs = vec![(s, t)];
+        logits_single.push(single.decode(&mut seqs).unwrap().remove(0));
+    }
+    let mut seqs: Vec<(&mut SeqState, i32)> =
+        st_batched.iter_mut().zip(toks.iter().copied()).collect();
+    let logits_batched = batched.decode(&mut seqs).unwrap();
+    drop(seqs);
+    assert_eq!(logits_batched, logits_single, "bucket-4 decode diverged");
+    for (i, (a, b)) in st_single.iter().zip(&st_batched).enumerate() {
+        assert_eq!(a, b, "recurrent state diverged for sequence {i}");
+    }
+}
+
+#[test]
+fn decode_continues_the_prefill_graph() {
+    // cross-builder differential: prefill(window) + one decode step must
+    // agree with the ORIGINAL `build_prefill` graph evaluated over the
+    // extended token sequence. The window deliberately straddles a chunk
+    // boundary (12 = 8 + 4 at chunk 8) so the serve prefill's remainder
+    // chunk and carried SSD state are both on the hook. Approximate, not
+    // bitwise: chunked SSD vs the decode recurrence reassociate floats.
+    let shape = nano2();
+    let window = 12;
+    let weights = PlannedServeModel::random_weights(&shape, 17);
+    let mut model =
+        PlannedServeModel::new(&shape, &weights, window, &[1], 1, "baseline").unwrap();
+    let p = prompt(3, window);
+    let (logits, mut st) = model.prefill(&p).unwrap();
+    let tok = argmax(&logits);
+    let mut seqs = vec![(&mut st, tok)];
+    let step = model.decode(&mut seqs).unwrap().remove(0);
+    drop(seqs);
+
+    let spec = xamba::models::params::full_spec(&shape);
+    let mut inputs = xamba::quality::param_inputs(&spec, &weights);
+    let mut extended = p.clone();
+    extended.push(tok);
+    inputs.push(xamba::graph::Tensor::i32(vec![window + 1], extended));
+    let reference_graph = xamba::models::build_prefill(&shape, window + 1);
+    let out = xamba::exec::run_once(&reference_graph, &inputs).unwrap();
+    let v = shape.vocab_size;
+    let reference = &out[0].as_f32()[window * v..(window + 1) * v];
+    for (i, (a, b)) in step.iter().zip(reference).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-3,
+            "logit {i}: decode {a} vs prefill-continuation {b}"
+        );
+    }
+    assert_eq!(argmax(&step), argmax(reference));
+}
+
+#[test]
+fn pooled_decode_is_bitwise_identical_to_serial() {
+    let shape = nano2();
+    let window = 8;
+    let weights = PlannedServeModel::random_weights(&shape, 9);
+    let mut reference: Option<(Vec<Vec<Vec<f32>>>, Vec<SeqState>)> = None;
+    for workers in [1usize, 2, 4] {
+        let mut model = PlannedServeModel::new(
+            &shape, &weights, window, &[1, 2, 4], workers, "baseline",
+        )
+        .unwrap();
+        assert_eq!(model.pool_workers(), workers.max(1));
+        let mut states: Vec<SeqState> = Vec::new();
+        let mut toks: Vec<i32> = Vec::new();
+        for i in 0..4 {
+            let (logits, st) = model.prefill(&prompt(i, window)).unwrap();
+            toks.push(argmax(&logits));
+            states.push(st);
+        }
+        // several steps so the SSD state flows through the pool too
+        let mut all_logits: Vec<Vec<Vec<f32>>> = Vec::new();
+        for _ in 0..3 {
+            let mut seqs: Vec<(&mut SeqState, i32)> =
+                states.iter_mut().zip(toks.iter().copied()).collect();
+            let step = model.decode(&mut seqs).unwrap();
+            drop(seqs);
+            toks = step.iter().map(|l| argmax(l)).collect();
+            all_logits.push(step);
+        }
+        match &reference {
+            None => reference = Some((all_logits, states)),
+            Some((ref_logits, ref_states)) => {
+                assert_eq!(
+                    &all_logits, ref_logits,
+                    "{workers} workers: logits diverged from serial"
+                );
+                assert_eq!(
+                    &states, ref_states,
+                    "{workers} workers: states diverged from serial"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn serve_plans_compile_once_and_reuse_arenas() {
+    let shape = nano2();
+    let window = 8;
+    let weights = PlannedServeModel::random_weights(&shape, 3);
+    let mut model =
+        PlannedServeModel::new(&shape, &weights, window, &[1, 2], 1, "baseline").unwrap();
+    // one plan per (program, bucket), all compiled at construction
+    assert_eq!(model.plan_compiles(), 3);
+
+    let p = prompt(0, window);
+    let (l1, mut s1) = model.prefill(&p).unwrap();
+    let (l2, mut s2) = model.prefill(&p).unwrap();
+    assert_eq!(l1, l2, "prefill re-execution must reuse the arena cleanly");
+    assert_eq!(s1, s2);
+
+    // identical states + token through the cached decode plan twice:
+    // arena reuse must be bitwise neutral
+    let out1 = {
+        let mut seqs = vec![(&mut s1, 42)];
+        model.decode(&mut seqs).unwrap()
+    };
+    let out2 = {
+        let mut seqs = vec![(&mut s2, 42)];
+        model.decode(&mut seqs).unwrap()
+    };
+    assert_eq!(out1, out2);
+    assert_eq!(s1, s2);
+    assert_eq!(model.plan_compiles(), 3, "serving traffic must not recompile");
+}
+
+#[test]
+fn planned_server_round_trip_streams_with_no_artifacts() {
+    let shape = nano2();
+    let window = 8;
+    let weights = PlannedServeModel::random_weights(&shape, 21);
+    let cfg = ServeConfig {
+        max_slots: 4,
+        queue_cap: 16,
+        batch_wait_us: 100,
+        prefill_window: window,
+        ..Default::default()
+    };
+    let server = Server::start(
+        move || {
+            Ok(Box::new(PlannedServeModel::new(
+                &shape, &weights, window, &[1, 2], 2, "xamba",
+            )?) as Box<dyn ServeModel>)
+        },
+        cfg,
+    )
+    .unwrap();
+
+    let rx = server.submit_streaming(
+        b"the quick brown fox",
+        GenParams { max_new_tokens: 6, ..Default::default() },
+    );
+    let mut streamed = Vec::new();
+    let mut done = None;
+    while let Ok(ev) = rx.recv_timeout(Duration::from_secs(60)) {
+        match ev {
+            StreamEvent::Token(t) => streamed.push(t),
+            StreamEvent::Done(r) => {
+                done = Some(r);
+                break;
+            }
+        }
+    }
+    let resp = done.expect("stream never finished");
+    assert_eq!(resp.finish, FinishReason::Length);
+    assert_eq!(resp.generated.len(), 6);
+    assert_eq!(streamed, resp.generated);
+
+    let m = server.shutdown();
+    assert_eq!(m.completed, 1);
+    assert!(m.prefills >= 1, "no prefill recorded");
+    assert!(m.decode_calls >= 1, "no decode recorded");
+}
+
+#[test]
+fn tiny_mamba2_serves_end_to_end_through_the_config_path() {
+    // the acceptance path: `ServeConfig { model: "tiny-mamba2", backend:
+    // "planned" }` through `start_backend`, exactly what `xamba serve
+    // --model tiny-mamba2` runs — random-initialized weights, no
+    // artifacts, streaming prefill + decode round trip
+    let cfg = ServeConfig {
+        model: "tiny-mamba2".into(),
+        backend: "planned".into(),
+        variant: "baseline".into(),
+        decode_buckets: vec![1, 2],
+        max_slots: 2,
+        queue_cap: 8,
+        batch_wait_us: 100,
+        prefill_window: 8,
+        workers: 2,
+        ..Default::default()
+    };
+    let server = start_backend(&cfg).unwrap();
+    let rx = server.submit_streaming(
+        b"hello mamba2",
+        GenParams { max_new_tokens: 3, ..Default::default() },
+    );
+    let mut tokens = Vec::new();
+    let mut done = None;
+    while let Ok(ev) = rx.recv_timeout(Duration::from_secs(120)) {
+        match ev {
+            StreamEvent::Token(t) => tokens.push(t),
+            StreamEvent::Done(r) => {
+                done = Some(r);
+                break;
+            }
+        }
+    }
+    let resp = done.expect("stream never finished");
+    assert_eq!(resp.finish, FinishReason::Length);
+    assert_eq!(tokens, resp.generated);
+    let m = server.shutdown();
+    assert_eq!(m.completed, 1);
+}
+
+#[test]
+fn planned_server_greedy_output_is_deterministic_across_worker_counts() {
+    let shape = nano2();
+    let window = 8;
+    let weights = PlannedServeModel::random_weights(&shape, 33);
+    let mut outputs: Vec<Vec<u8>> = Vec::new();
+    for workers in [1usize, 4] {
+        let (shape, weights) = (shape.clone(), weights.clone());
+        let cfg = ServeConfig {
+            max_slots: 2,
+            queue_cap: 8,
+            batch_wait_us: 100,
+            prefill_window: window,
+            ..Default::default()
+        };
+        let server = Server::start(
+            move || {
+                Ok(Box::new(PlannedServeModel::new(
+                    &shape, &weights, window, &[1, 2], workers, "baseline",
+                )?) as Box<dyn ServeModel>)
+            },
+            cfg,
+        )
+        .unwrap();
+        let rx = server.submit(
+            b"hello",
+            GenParams { max_new_tokens: 8, ..Default::default() },
+        );
+        let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(r.finish, FinishReason::Length);
+        outputs.push(r.generated);
+        server.shutdown();
+    }
+    assert_eq!(outputs[0], outputs[1], "worker count changed greedy output");
+}
+
+#[test]
+fn unknown_model_and_backend_are_clear_config_errors() {
+    // the guarded path: bad `ServeConfig.model` / `.backend` strings fail
+    // fast in `start_backend` with an actionable message, never a panic
+    let cfg = ServeConfig { backend: "cuda".into(), ..Default::default() };
+    let err = start_backend(&cfg).err().expect("bad backend must be rejected");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("unknown serve backend") && msg.contains("cuda"),
+        "{msg}"
+    );
+    assert!(msg.contains("planned") && msg.contains("pjrt"), "{msg}");
+
+    let cfg = ServeConfig { model: "mamba3-9b".into(), ..Default::default() };
+    let err = start_backend(&cfg).err().expect("bad model must be rejected");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("unknown serve model") && msg.contains("mamba3-9b"),
+        "{msg}"
+    );
+    // the message lists what WOULD work, including the mamba-2 presets
+    assert!(msg.contains("tiny-mamba2"), "{msg}");
+}
