@@ -3,18 +3,24 @@
 //! at buckets 1/4/8.
 //!
 //! Both paths run the same compiled per-bucket decode graphs through
-//! `PlannedServeModel`; the pooled model shards each bucket into equal
-//! sub-buckets across 4 workers. Workers own their plans and arenas,
-//! while the ~170 MB parameter set is `Arc`-shared — one copy per
-//! model. Outputs are asserted bitwise-identical before timing.
+//! `PlannedServeModel`; the pooled model splits each bucket into chunks
+//! on the pool's work-stealing queue across 4 workers. Workers own their
+//! plans and arenas, while the ~170 MB parameter set is `Arc`-shared —
+//! one copy per model. Outputs are asserted bitwise-identical before
+//! timing.
 //!
 //! Run: `cargo bench --bench serve_decode`
+//!
+//! CI (`bench-smoke`) runs it with `XAMBA_BENCH_QUICK=1` (one timed
+//! iteration) and `XAMBA_BENCH_JSON=BENCH_pr.json`, which appends the
+//! pooled tokens/sec per (family, bucket) to the artifact that `xamba
+//! bench-check` gates against the committed baseline.
 
 use std::time::Instant;
 
 use xamba::config::{presets, ModelShape};
 use xamba::coordinator::{PlannedServeModel, SeqState, ServeModel};
-use xamba::util::Table;
+use xamba::util::{bench, Table};
 
 fn argmax(logits: &[f32]) -> i32 {
     logits
@@ -40,11 +46,11 @@ fn decode_step(model: &mut PlannedServeModel, states: &mut [SeqState], toks: &[i
     model.decode(&mut seqs).expect("decode");
 }
 
-fn bench_family(label: &str, shape: &ModelShape) {
+fn bench_family(key: &str, label: &str, shape: &ModelShape) {
     let window = 8usize;
     let workers = 4usize;
     let buckets = [1usize, 2, 4, 8];
-    let iters = 3usize;
+    let iters = if bench::quick_mode() { 1usize } else { 3 };
 
     let weights = PlannedServeModel::random_weights(shape, 42);
     let mut serial =
@@ -57,12 +63,13 @@ fn bench_family(label: &str, shape: &ModelShape) {
     let mut table = Table::new(&["bucket", "serial", "pooled", "speedup", "tok/s pooled"])
         .with_title(
             format!(
-                "serve_decode: serial vs {workers}-worker pooled batched decode \
-                 ({label})"
+                "serve_decode: serial vs {workers}-worker work-stealing pooled \
+                 batched decode ({label})"
             )
             .as_str(),
         );
 
+    let mut metrics: Vec<(String, f64)> = Vec::new();
     for &bucket in &[1usize, 4, 8] {
         let mut states: Vec<SeqState> = Vec::with_capacity(bucket);
         let mut toks: Vec<i32> = Vec::with_capacity(bucket);
@@ -96,23 +103,31 @@ fn bench_family(label: &str, shape: &ModelShape) {
         let mut st_pooled = states.clone();
         let pooled_ms =
             time_ms(iters, || decode_step(&mut pooled, &mut st_pooled, &toks));
+        let pooled_tok_per_s = bucket as f64 / (pooled_ms / 1e3);
 
         table.row(&[
             bucket.to_string(),
             format!("{serial_ms:8.2} ms"),
             format!("{pooled_ms:8.2} ms"),
             format!("{:.2}x", serial_ms / pooled_ms),
-            format!("{:.1}", bucket as f64 / (pooled_ms / 1e3)),
+            format!("{pooled_tok_per_s:.1}"),
         ]);
+        metrics.push((
+            format!("serve_decode_{key}_b{bucket}_tok_per_s"),
+            pooled_tok_per_s,
+        ));
     }
     println!("{table}");
+    if let Some(path) = bench::metrics_path() {
+        bench::record(&path, &metrics).expect("record bench metrics");
+    }
 }
 
 fn main() {
     // the paper's two profiling blocks: the perf trajectory covers both
     // families now that the planned serving path does
-    bench_family("Mamba-1 130M block", &presets::block130m_mamba());
-    bench_family("Mamba-2 130M block", &presets::block130m_mamba2());
+    bench_family("mamba1", "Mamba-1 130M block", &presets::block130m_mamba());
+    bench_family("mamba2", "Mamba-2 130M block", &presets::block130m_mamba2());
     println!(
         "serve_decode: pooled decode is bitwise-identical to serial for both \
          families; speedup is wall-clock only."

@@ -1,0 +1,113 @@
+//! Serving-prefill micro-bench: batched vs serial admission prefill TTFT
+//! on the 130M-class block shapes of BOTH model families at admission
+//! rates 1/4/8.
+//!
+//! Under concurrent admissions the serial path prefills one request at a
+//! time, so request i's first token waits for i earlier prefills — mean
+//! TTFT grows linearly with the admission rate. The batched path runs
+//! one compiled prefill graph per bucket; per-sequence outputs are
+//! asserted bitwise-identical to the serial path before timing.
+//!
+//! Run: `cargo bench --bench serve_prefill`
+//!
+//! CI (`bench-smoke`) runs it with `XAMBA_BENCH_QUICK=1` (shorter window,
+//! one timed iteration) and `XAMBA_BENCH_JSON=BENCH_pr.json`, appending
+//! the batched mean TTFT per (family, admission rate) to the artifact
+//! `xamba bench-check` gates against the committed baseline.
+
+use std::time::Instant;
+
+use xamba::config::{presets, ModelShape};
+use xamba::coordinator::{PlannedServeModel, ServeModel};
+use xamba::util::{bench, Table};
+
+fn bench_family(key: &str, label: &str, shape: &ModelShape) {
+    let quick = bench::quick_mode();
+    let window = if quick { 8usize } else { 16 };
+    let iters = if quick { 1usize } else { 3 };
+    let rates = [1usize, 4, 8];
+
+    let weights = PlannedServeModel::random_weights(shape, 42);
+    let mut model =
+        PlannedServeModel::new(shape, &weights, window, &[1], 1, "baseline")
+            .expect("model")
+            .with_prefill_buckets(&[1, 2, 4, 8])
+            .expect("prefill buckets");
+
+    let mut table = Table::new(&[
+        "admissions",
+        "serial mean TTFT",
+        "batched mean TTFT",
+        "speedup",
+    ])
+    .with_title(
+        format!("serve_prefill: serial vs batched admission prefill ({label})").as_str(),
+    );
+
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+    for &r in &rates {
+        let prompts: Vec<Vec<i32>> = (0..r)
+            .map(|i| (0..window).map(|t| ((i * 13 + t * 7) % 256) as i32).collect())
+            .collect();
+        let refs: Vec<&[i32]> = prompts.iter().map(|p| p.as_slice()).collect();
+
+        // correctness gate: batched must reproduce serial bitwise
+        {
+            let singles: Vec<_> =
+                refs.iter().map(|s| model.prefill(s).expect("prefill")).collect();
+            let batched = model.prefill_batched(&refs).expect("batched prefill");
+            for (i, (a, b)) in singles.iter().zip(&batched).enumerate() {
+                assert_eq!(a.0, b.0, "admission {i}: batched logits diverged");
+                assert_eq!(a.1, b.1, "admission {i}: batched state diverged");
+            }
+        }
+
+        // serial: request i's TTFT is the prefix sum of the i+1 prefills
+        let mut serial_mean_ms = 0.0f64;
+        for _ in 0..iters {
+            let mut elapsed = 0.0f64;
+            let mut ttft_sum = 0.0f64;
+            for s in &refs {
+                let t0 = Instant::now();
+                model.prefill(s).expect("prefill");
+                elapsed += t0.elapsed().as_secs_f64() * 1e3;
+                ttft_sum += elapsed;
+            }
+            serial_mean_ms += ttft_sum / r as f64;
+        }
+        serial_mean_ms /= iters as f64;
+
+        // batched: every request's first token lands when the round ends
+        let mut batched_mean_ms = 0.0f64;
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            model.prefill_batched(&refs).expect("batched prefill");
+            batched_mean_ms += t0.elapsed().as_secs_f64() * 1e3;
+        }
+        batched_mean_ms /= iters as f64;
+
+        table.row(&[
+            r.to_string(),
+            format!("{serial_mean_ms:8.2} ms"),
+            format!("{batched_mean_ms:8.2} ms"),
+            format!("{:.2}x", serial_mean_ms / batched_mean_ms),
+        ]);
+        metrics.push((
+            format!("serve_prefill_{key}_r{r}_ttft_ms"),
+            batched_mean_ms,
+        ));
+    }
+    println!("{table}");
+    if let Some(path) = bench::metrics_path() {
+        bench::record(&path, &metrics).expect("record bench metrics");
+    }
+}
+
+fn main() {
+    bench_family("mamba1", "Mamba-1 130M block", &presets::block130m_mamba());
+    bench_family("mamba2", "Mamba-2 130M block", &presets::block130m_mamba2());
+    println!(
+        "serve_prefill: batched prefill is bitwise-identical per sequence to the \
+         serial path for both families; TTFT deltas are wall-clock only."
+    );
+}

@@ -27,6 +27,7 @@ pub fn run(argv: &[String]) -> Result<(), String> {
         "census" => cmd_census(&args),
         "plu-fit" => cmd_plu_fit(&args),
         "verify" => cmd_verify(&args),
+        "bench-check" => cmd_bench_check(&args),
         "help" | "" => {
             print!("{}", HELP);
             Ok(())
@@ -44,23 +45,43 @@ COMMANDS:
   serve     --model tiny-mamba|tiny-mamba2 --variant xamba
             [--backend planned|pjrt] [--artifacts DIR] [--weights FILE]
             [--window 32] [--workers 0] [--buckets 1,2,4,8]
+            [--prefill-buckets 1,2,4,8] [--steal-chunk 0]
             [--max-new 48] [--temperature 0.0]
             reads prompts from stdin (one per line), prints completions;
             the default planned backend serves BOTH model families
             (mamba-1 and mamba-2) and needs no artifacts (untrained
-            weights are random-initialized when no .bin file is found)
+            weights are random-initialized when no .bin file is found).
+            --prefill-buckets batches concurrent admissions into one
+            prefill graph call per length-class (cuts TTFT under load);
+            --steal-chunk sets the pool's work-stealing decode chunk
+            (0 = auto)
   profile   --model block130m-mamba2 [--t 4] [--passes cumba,reduba,actiba]
             [--config FILE] [--pipelined] [--energy]
             simulated-NPU per-op latency breakdown
   census    [--t 4]           Fig-5 operator census, Mamba vs Mamba-2
   plu-fit   [--fn silu|softplus] [--segments 32] [--adaptive]
   verify    --model tiny-mamba2 [--t 16]   differential pass verification
+  bench-check --pr BENCH_pr.json --baseline benches/baseline_serve.json
+            [--max-regress 0.20]
+            compare a bench metrics file against the committed baseline;
+            exits non-zero on any >20% tokens/sec or TTFT regression
+            (the CI bench-smoke gate)
   help
 ";
 
 fn npu_from(args: &Args) -> Result<NpuConfig, String> {
     let doc = config::load(args.get("config"))?;
     Ok(NpuConfig::from_doc(&doc, "npu"))
+}
+
+fn parse_bucket_list(flag: &str, list: &str) -> Result<Vec<usize>, String> {
+    list.split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<usize>()
+                .map_err(|_| format!("--{flag}: {s:?} is not a batch size"))
+        })
+        .collect()
 }
 
 fn cmd_serve(args: &Args) -> Result<(), String> {
@@ -87,17 +108,18 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         cfg.workers = w;
     }
     if let Some(list) = args.get("buckets") {
-        cfg.decode_buckets = list
-            .split(',')
-            .map(|s| {
-                s.trim()
-                    .parse::<usize>()
-                    .map_err(|_| format!("--buckets: {s:?} is not a batch size"))
-            })
-            .collect::<Result<Vec<_>, _>>()?;
+        cfg.decode_buckets = parse_bucket_list("buckets", list)?;
+    }
+    if let Some(list) = args.get("prefill-buckets") {
+        cfg.prefill_buckets = parse_bucket_list("prefill-buckets", list)?;
+    }
+    if let Some(v) = args.get("steal-chunk") {
+        cfg.steal_chunk = v
+            .parse::<usize>()
+            .map_err(|_| format!("--steal-chunk: {v:?} is not a chunk size"))?;
     }
     if cfg.backend == "pjrt" {
-        for flag in ["weights", "window", "workers"] {
+        for flag in ["weights", "window", "workers", "prefill-buckets", "steal-chunk"] {
             if args.get(flag).is_some() {
                 eprintln!(
                     "warning: --{flag} only applies to the planned backend; \
@@ -234,6 +256,43 @@ fn cmd_plu_fit(args: &Args) -> Result<(), String> {
         println!("adaptive C-LUT  max |err| = {ada_err:.3e} (Flex-SFU-style)");
     }
     Ok(())
+}
+
+fn cmd_bench_check(args: &Args) -> Result<(), String> {
+    let pr = args.get("pr").ok_or("bench-check needs --pr FILE")?;
+    let baseline = args
+        .get("baseline")
+        .ok_or("bench-check needs --baseline FILE")?;
+    let tolerance = args.get_f32("max-regress").unwrap_or(0.20) as f64;
+    let checks = crate::util::bench::check_files(pr, baseline, tolerance)?;
+    let mut table = crate::util::Table::new(&["metric", "baseline", "pr", "change", "ok"])
+        .with_title(&format!("bench regression gate (tolerance {:.0}%)", tolerance * 100.0));
+    let mut regressed = Vec::new();
+    for c in &checks {
+        table.row(&[
+            c.key.clone(),
+            format!("{:.2}", c.baseline),
+            format!("{:.2}", c.got),
+            format!("{:+.1}%", c.change_pct),
+            if c.regressed { "REGRESSED".into() } else { "ok".into() },
+        ]);
+        if c.regressed {
+            regressed.push(c.key.clone());
+        }
+    }
+    println!("{}", table.render());
+    if regressed.is_empty() {
+        println!("bench-check: {} metrics within tolerance", checks.len());
+        Ok(())
+    } else {
+        Err(format!(
+            "bench-check: {} of {} metrics regressed more than {:.0}%: {}",
+            regressed.len(),
+            checks.len(),
+            tolerance * 100.0,
+            regressed.join(", ")
+        ))
+    }
 }
 
 fn cmd_verify(args: &Args) -> Result<(), String> {

@@ -194,6 +194,16 @@ pub struct ServeConfig {
     pub variant: String,
     /// Decode batch buckets available as compiled executables.
     pub decode_buckets: Vec<usize>,
+    /// Batched-prefill admission buckets of the planned backend: how
+    /// many concurrently admitted, equal-length requests one prefill
+    /// graph call may cover. Graphs compile lazily per (bucket,
+    /// length-class); bucket 1 is always available.
+    pub prefill_buckets: Vec<usize>,
+    /// Work-stealing decode chunk size of the planned backend's pool
+    /// (sequences per stolen chunk; must be a compiled decode bucket to
+    /// take effect). 0 = auto: the largest compiled bucket that fits
+    /// ceil(bucket / workers).
+    pub steal_chunk: usize,
     /// Admission queue capacity (requests beyond this are rejected).
     pub queue_cap: usize,
     /// Maximum resident sequences (state-cache slots).
@@ -222,6 +232,8 @@ impl Default for ServeConfig {
             model: "tiny-mamba".into(),
             variant: "xamba".into(),
             decode_buckets: vec![1, 2, 4, 8],
+            prefill_buckets: vec![1, 2, 4, 8],
+            steal_chunk: 0,
             queue_cap: 256,
             max_slots: 64,
             default_max_new_tokens: 48,
@@ -272,30 +284,40 @@ impl ServeConfig {
                     .into(),
             );
         }
+        if self.prefill_buckets.is_empty() || self.prefill_buckets.contains(&0) {
+            return Err(
+                "serve prefill_buckets must be a non-empty list of positive batch sizes"
+                    .into(),
+            );
+        }
         Ok(())
     }
 
     pub fn from_doc(doc: &TomlDoc, section: &str) -> Self {
         let d = Self::default();
         let k = |name: &str| format!("{section}.{name}");
-        let buckets = doc
-            .get(&k("decode_buckets"))
-            .and_then(|v| match v {
-                super::toml::TomlValue::Arr(a) => Some(
-                    a.iter()
-                        .filter_map(|x| x.as_i64())
-                        .map(|x| x as usize)
-                        .collect::<Vec<_>>(),
-                ),
-                _ => None,
-            })
-            .unwrap_or(d.decode_buckets.clone());
+        let bucket_list = |name: &str, default: &[usize]| -> Vec<usize> {
+            doc.get(&k(name))
+                .and_then(|v| match v {
+                    super::toml::TomlValue::Arr(a) => Some(
+                        a.iter()
+                            .filter_map(|x| x.as_i64())
+                            .map(|x| x as usize)
+                            .collect::<Vec<_>>(),
+                    ),
+                    _ => None,
+                })
+                .unwrap_or_else(|| default.to_vec())
+        };
         Self {
             backend: doc.str_or(&k("backend"), &d.backend).into(),
             artifacts_dir: doc.str_or(&k("artifacts_dir"), &d.artifacts_dir).into(),
             model: doc.str_or(&k("model"), &d.model).into(),
             variant: doc.str_or(&k("variant"), &d.variant).into(),
-            decode_buckets: buckets,
+            decode_buckets: bucket_list("decode_buckets", &d.decode_buckets),
+            prefill_buckets: bucket_list("prefill_buckets", &d.prefill_buckets),
+            steal_chunk: doc.i64_or(&k("steal_chunk"), d.steal_chunk as i64).max(0)
+                as usize,
             queue_cap: doc.i64_or(&k("queue_cap"), d.queue_cap as i64) as usize,
             max_slots: doc.i64_or(&k("max_slots"), d.max_slots as i64) as usize,
             default_max_new_tokens: doc
@@ -330,15 +352,27 @@ mod tests {
 
     #[test]
     fn serve_from_doc_parses_buckets() {
-        let doc =
-            TomlDoc::parse("[serve]\nmodel = \"tiny-mamba2\"\ndecode_buckets = [1, 4]\n")
-                .unwrap();
+        let doc = TomlDoc::parse(
+            "[serve]\nmodel = \"tiny-mamba2\"\ndecode_buckets = [1, 4]\n\
+             prefill_buckets = [1, 2]\nsteal_chunk = 2\n",
+        )
+        .unwrap();
         let c = ServeConfig::from_doc(&doc, "serve");
         assert_eq!(c.model, "tiny-mamba2");
         assert_eq!(c.decode_buckets, vec![1, 4]);
+        assert_eq!(c.prefill_buckets, vec![1, 2]);
+        assert_eq!(c.steal_chunk, 2);
         // untouched backend knobs keep defaults
         assert_eq!(c.backend, "planned");
         assert_eq!(c.workers, 0);
+    }
+
+    #[test]
+    fn serve_from_doc_defaults_admission_knobs() {
+        let doc = TomlDoc::parse("[serve]\nsteal_chunk = -3\n").unwrap();
+        let c = ServeConfig::from_doc(&doc, "serve");
+        assert_eq!(c.prefill_buckets, ServeConfig::default().prefill_buckets);
+        assert_eq!(c.steal_chunk, 0, "negative steal_chunk must clamp to auto");
     }
 
     #[test]
@@ -381,6 +415,10 @@ mod tests {
         assert!(bad.validate().unwrap_err().contains("decode_buckets"));
         let bad = ServeConfig { decode_buckets: vec![1, 0], ..Default::default() };
         assert!(bad.validate().unwrap_err().contains("decode_buckets"));
+        let bad = ServeConfig { prefill_buckets: vec![], ..Default::default() };
+        assert!(bad.validate().unwrap_err().contains("prefill_buckets"));
+        let bad = ServeConfig { prefill_buckets: vec![0, 2], ..Default::default() };
+        assert!(bad.validate().unwrap_err().contains("prefill_buckets"));
     }
 
     #[test]

@@ -23,6 +23,39 @@ pub fn plan(buckets: &[usize], ready: usize) -> BatchPlan {
     BatchPlan { bucket, could_grow }
 }
 
+/// Greedy decomposition of `total` sequences into compiled bucket sizes,
+/// each at most `cap` where possible: repeatedly take the largest bucket
+/// that fits the remainder (preferring buckets <= `cap`, falling back to
+/// any bucket that still fits). E.g. buckets [1, 2, 4], total 7, cap 4
+/// -> [4, 2, 1]. Returns None when the GREEDY walk strands a remainder
+/// no bucket fits — which can happen even though some non-greedy
+/// combination sums to `total` (e.g. buckets [3, 4], total 10 -> greedy
+/// 4, 4, stranded 2, though 4+3+3 works). That miss is deliberate: the
+/// caller treats None as "run the batch unsplit", a safe fallback, and
+/// any bucket set containing 1 (the serving default — bucket 1 is
+/// always compiled) never misses.
+///
+/// Both consumers lean on the "uneven chunks are fine" property: the
+/// pool's work-stealing split feeds the chunks to whichever worker is
+/// free, and the admission loop runs a length-class's remainder as
+/// smaller batches without padding anything.
+pub fn decompose(buckets: &[usize], total: usize, cap: usize) -> Option<Vec<usize>> {
+    let mut out = Vec::new();
+    let mut remaining = total;
+    while remaining > 0 {
+        let capped = remaining.min(cap);
+        let pick = buckets
+            .iter()
+            .copied()
+            .filter(|&b| b > 0 && b <= capped)
+            .max()
+            .or_else(|| buckets.iter().copied().filter(|&b| b > 0 && b <= remaining).max())?;
+        out.push(pick);
+        remaining -= pick;
+    }
+    Some(out)
+}
+
 /// Round-robin selector over active sequence slots: returns the next
 /// `count` entries starting at the rotation cursor, advancing it.
 #[derive(Debug, Default)]
@@ -63,6 +96,44 @@ mod tests {
         assert!(plan(&buckets, 3).could_grow);
         assert!(!plan(&buckets, 4).could_grow);
         assert!(!plan(&buckets, 9).could_grow);
+    }
+
+    #[test]
+    fn decompose_prefers_capped_buckets_and_covers_remainders() {
+        let buckets = [1usize, 2, 4];
+        assert_eq!(decompose(&buckets, 8, 4), Some(vec![4, 4]));
+        assert_eq!(decompose(&buckets, 7, 4), Some(vec![4, 2, 1]));
+        assert_eq!(decompose(&buckets, 8, 2), Some(vec![2, 2, 2, 2]));
+        // uneven split: cap 3 admits bucket 2 twice, then the 1-remainder
+        assert_eq!(decompose(&buckets, 5, 3), Some(vec![2, 2, 1]));
+        // cap smaller than every bucket falls back to what fits at all
+        assert_eq!(decompose(&[2, 4], 4, 1), Some(vec![4]));
+        // no combination sums to the total -> None (caller runs unsplit)
+        assert_eq!(decompose(&[2], 5, 2), None);
+        assert_eq!(decompose(&[4, 8], 6, 8), None);
+        // documented greedy miss: 4+3+3 would work, but greedy strands a
+        // 2-remainder — None means "run unsplit", never a wrong split
+        assert_eq!(decompose(&[3, 4], 10, 5), None);
+        assert_eq!(decompose(&buckets, 0, 4), Some(vec![]));
+    }
+
+    #[test]
+    fn property_decompose_sums_to_total() {
+        check(
+            |r| (1 + r.below(30), 1 + r.below(6)),
+            |&(total, cap)| {
+                let buckets = [1usize, 2, 4, 8];
+                let chunks = decompose(&buckets, total, cap)
+                    .ok_or("buckets include 1, must always decompose")?;
+                if chunks.iter().sum::<usize>() != total {
+                    return Err(format!("chunks {chunks:?} != total {total}"));
+                }
+                if chunks.iter().any(|c| !buckets.contains(c)) {
+                    return Err(format!("non-bucket chunk in {chunks:?}"));
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

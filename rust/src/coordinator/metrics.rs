@@ -16,6 +16,10 @@ pub struct Metrics {
     pub completed: u64,
     pub tokens_out: u64,
     pub prefills: u64,
+    /// Batched-prefill admission rounds (each covers >= 1 sequence).
+    pub prefill_calls: u64,
+    /// Sequences prefilled across those rounds — occupancy numerator.
+    pub prefill_batched_seqs: u64,
     pub decode_calls: u64,
     pub decode_batched_seqs: u64,
     pub ttft_us: LatencyHistogram,
@@ -23,6 +27,8 @@ pub struct Metrics {
     pub per_token_us: LatencyHistogram,
     /// Wall latency of each whole decode batch call (all bucket sizes).
     pub decode_batch_us: LatencyHistogram,
+    /// Wall latency of each batched-prefill admission round.
+    pub prefill_batch_us: LatencyHistogram,
 }
 
 impl Default for Metrics {
@@ -36,12 +42,15 @@ impl Default for Metrics {
             completed: 0,
             tokens_out: 0,
             prefills: 0,
+            prefill_calls: 0,
+            prefill_batched_seqs: 0,
             decode_calls: 0,
             decode_batched_seqs: 0,
             ttft_us: LatencyHistogram::new(),
             e2e_us: LatencyHistogram::new(),
             per_token_us: LatencyHistogram::new(),
             decode_batch_us: LatencyHistogram::new(),
+            prefill_batch_us: LatencyHistogram::new(),
         }
     }
 }
@@ -66,6 +75,16 @@ impl Metrics {
         }
     }
 
+    /// Mean sequences per batched-prefill round (admission occupancy —
+    /// 1.0 means every admission still prefills alone).
+    pub fn mean_prefill_batch(&self) -> f64 {
+        if self.prefill_calls == 0 {
+            0.0
+        } else {
+            self.prefill_batched_seqs as f64 / self.prefill_calls as f64
+        }
+    }
+
     /// Decode-batch latency percentiles in microseconds: (p50, p95, p99).
     pub fn decode_batch_percentiles_us(&self) -> (f64, f64, f64) {
         (
@@ -75,9 +94,20 @@ impl Metrics {
         )
     }
 
+    /// Time-to-first-token percentiles in microseconds: (p50, p95, p99)
+    /// — the KPI the batched admission path exists to cut.
+    pub fn ttft_percentiles_us(&self) -> (f64, f64, f64) {
+        (
+            self.ttft_us.percentile_us(50.0),
+            self.ttft_us.percentile_us(95.0),
+            self.ttft_us.percentile_us(99.0),
+        )
+    }
+
     /// Render the serving report table.
     pub fn report(&self) -> Table {
         let (batch_p50, batch_p95, batch_p99) = self.decode_batch_percentiles_us();
+        let (ttft_p50, ttft_p95, ttft_p99) = self.ttft_percentiles_us();
         let mut t = Table::new(&["metric", "value"]).with_title("serving metrics");
         let rows = [
             ("admitted", format!("{}", self.admitted)),
@@ -88,10 +118,17 @@ impl Metrics {
             ("tokens out", format!("{}", self.tokens_out)),
             ("tokens/s", format!("{:.1}", self.tokens_per_s())),
             ("prefills", format!("{}", self.prefills)),
+            ("prefill rounds", format!("{}", self.prefill_calls)),
+            ("mean prefill batch", format!("{:.2}", self.mean_prefill_batch())),
+            (
+                "prefill batch p50",
+                format!("{:.2} ms", self.prefill_batch_us.percentile_us(50.0) / 1e3),
+            ),
             ("decode calls", format!("{}", self.decode_calls)),
             ("mean batch", format!("{:.2}", self.mean_decode_batch())),
-            ("TTFT p50", format!("{:.2} ms", self.ttft_us.percentile_us(50.0) / 1e3)),
-            ("TTFT p99", format!("{:.2} ms", self.ttft_us.percentile_us(99.0) / 1e3)),
+            ("TTFT p50", format!("{:.2} ms", ttft_p50 / 1e3)),
+            ("TTFT p95", format!("{:.2} ms", ttft_p95 / 1e3)),
+            ("TTFT p99", format!("{:.2} ms", ttft_p99 / 1e3)),
             ("e2e p50", format!("{:.2} ms", self.e2e_us.percentile_us(50.0) / 1e3)),
             ("e2e p99", format!("{:.2} ms", self.e2e_us.percentile_us(99.0) / 1e3)),
             (
@@ -126,8 +163,29 @@ mod tests {
         let m = Metrics::default();
         let s = m.report().render();
         assert!(s.contains("tokens/s"));
-        assert!(s.contains("TTFT"));
+        assert!(s.contains("TTFT p95"));
         assert!(s.contains("decode batch p95"));
+        assert!(s.contains("mean prefill batch"));
+    }
+
+    #[test]
+    fn prefill_occupancy_math() {
+        let mut m = Metrics::default();
+        assert_eq!(m.mean_prefill_batch(), 0.0);
+        m.prefill_calls = 3;
+        m.prefill_batched_seqs = 7;
+        assert!((m.mean_prefill_batch() - 7.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ttft_percentiles_track_recordings() {
+        let mut m = Metrics::default();
+        for us in 1..=1000 {
+            m.ttft_us.record_us(us as f64);
+        }
+        let (p50, p95, p99) = m.ttft_percentiles_us();
+        assert!(p50 < p95 && p95 < p99, "{p50} {p95} {p99}");
+        assert!((p95 - 950.0).abs() / 950.0 < 0.06, "p95 {p95}");
     }
 
     #[test]

@@ -30,13 +30,33 @@ pub struct SeqState {
 /// What the coordinator needs from a model backend. Constructed inside
 /// the engine thread (PJRT clients are not `Send`), so no `Send` bound.
 pub trait ServeModel {
-    /// Static prefill window (token count).
+    /// Static prefill window (token count) — the longest prefill the
+    /// backend accepts, and the tokenizer's truncation window.
     fn prefill_len(&self) -> usize;
     fn vocab(&self) -> usize;
     /// Compiled decode batch sizes, ascending.
     fn decode_buckets(&self) -> &[usize];
-    /// Run the fixed-window prefill; returns last-position logits + state.
+    /// Inclusive (min, max) prefill lengths the backend accepts.
+    /// Backends with a single compiled window report (window, window);
+    /// variable-length backends let the scheduler prefill each prompt at
+    /// its true length so no pad token ever touches SSM state.
+    fn prefill_len_range(&self) -> (usize, usize) {
+        (self.prefill_len(), self.prefill_len())
+    }
+    /// Batched-prefill batch sizes, ascending. `[1]` (the default) means
+    /// the scheduler admits one sequence per prefill round.
+    fn prefill_buckets(&self) -> &[usize] {
+        &[1]
+    }
+    /// Run the prefill; returns last-position logits + state.
     fn prefill(&mut self, tokens: &[i32]) -> Result<(Vec<f32>, SeqState)>;
+    /// Prefill several **equal-length** sequences in one round (the
+    /// scheduler groups admissions into length-classes first). Default:
+    /// a serial loop of single-sequence prefills — backends with batched
+    /// prefill graphs override this with one graph call per bucket.
+    fn prefill_batched(&mut self, seqs: &[&[i32]]) -> Result<Vec<(Vec<f32>, SeqState)>> {
+        seqs.iter().map(|s| self.prefill(s)).collect()
+    }
     /// Advance `seqs.len()` sequences one token (len must be a bucket).
     /// Returns per-sequence logits; states are updated in place.
     fn decode(&mut self, seqs: &mut [(&mut SeqState, i32)]) -> Result<Vec<Vec<f32>>>;
@@ -196,24 +216,54 @@ impl ServeModel for PjrtServeModel {
 /// N)` scan state for mamba-1, `(K-1, d_inner+2N)` conv + `(H, P, N)`
 /// SSD state for mamba-2).
 ///
-/// With `workers > 1` a [`WorkerPool`] shards decode buckets into
-/// smaller compiled buckets, one sub-batch per worker; every worker owns
-/// its own plans and arenas (no shared mutable state), and pooled
-/// results are bitwise-identical to the serial path.
+/// With `workers > 1` a [`WorkerPool`] splits decode buckets into
+/// compiled chunk sizes (`steal_chunk`, auto by default; uneven chunks
+/// are fine) on a work-stealing queue; every worker owns its own plans
+/// and arenas (no shared mutable state), and submission-order
+/// reassembly keeps pooled results bitwise-identical to the serial
+/// path at any worker count.
+///
+/// Prefill admits in batches too: `prefill_buckets` selects the batched
+/// prefill graphs, compiled lazily per (bucket, length-class) into the
+/// same cache; per-sequence prefill results are bitwise identical to
+/// the single-sequence graph, and variable-length prompts run at their
+/// true length (no pad token ever touches SSM state).
 pub struct PlannedServeModel {
     shape: ModelShape,
     family: ServeFamily,
+    /// Graph rewrite selector ("baseline" | "xamba"), kept for the
+    /// lazily-compiled prefill length-class / bucket graphs.
+    variant: String,
     /// Per-layer, per-sequence state shapes (family-dependent).
     conv_shape: Vec<usize>,
     ssm_shape: Vec<usize>,
     window: usize,
+    /// Shortest accepted prefill (the conv state must fit the window).
+    min_prefill: usize,
     buckets: Vec<usize>, // ascending, deduped
+    /// Batched-prefill batch sizes, ascending, always containing 1;
+    /// their graphs compile lazily, one per (bucket, length) on first
+    /// use, into the same `cache` as everything else.
+    prefill_buckets: Vec<usize>,
+    /// Work-stealing decode chunk size; 0 = auto (largest compiled
+    /// bucket <= ceil(bucket / workers)).
+    steal_chunk: usize,
     vocab: usize,
     params: Arc<Vec<Tensor>>,
     cache: PlanCache,
     prefill_key: Arc<str>,
     decode_graphs: Vec<DecodeEntry>,
     pool: Option<WorkerPool>,
+}
+
+/// Apply the serving variant's graph rewrite: `"baseline"` executes
+/// exact activations, `"xamba"` applies the ActiBA PLU rewrite.
+fn rewrite_graph(variant: &str, g: Graph) -> Result<Graph, String> {
+    match variant {
+        "" | "baseline" => Ok(g),
+        "xamba" => Ok(ActibaPass::default().apply(&g)),
+        other => Err(format!("unknown variant {other:?} (want baseline|xamba)")),
+    }
 }
 
 /// One compiled decode bucket: size, plan-cache key (precomputed — the
@@ -261,11 +311,7 @@ impl PlannedServeModel {
             return Err(anyhow!("decode buckets must be non-empty and positive"));
         }
         let rewrite = |g: Graph| -> Result<Graph> {
-            match variant {
-                "" | "baseline" => Ok(g),
-                "xamba" => Ok(ActibaPass::default().apply(&g)),
-                other => Err(anyhow!("unknown variant {other:?} (want baseline|xamba)")),
-            }
+            rewrite_graph(variant, g).map_err(|e| anyhow!(e))
         };
 
         let params = Arc::new(param_inputs(&spec, weights));
@@ -284,10 +330,14 @@ impl PlannedServeModel {
         let model = Self {
             shape: shape.clone(),
             family,
+            variant: variant.to_string(),
             conv_shape: family.conv_state_shape(shape),
             ssm_shape: family.ssm_state_shape(shape),
             window,
+            min_prefill: shape.d_conv.saturating_sub(1).max(1),
             buckets,
+            prefill_buckets: vec![1],
+            steal_chunk: 0,
             vocab: shape.vocab_size,
             params,
             cache,
@@ -297,6 +347,41 @@ impl PlannedServeModel {
         };
         model.warm_pool()?;
         Ok(model)
+    }
+
+    /// Enable batched admission prefill for these bucket sizes. Bucket 1
+    /// is always kept; graphs compile lazily on the first use of a
+    /// (bucket, length-class) pair, so unused buckets cost nothing.
+    pub fn with_prefill_buckets(mut self, buckets: &[usize]) -> Result<Self> {
+        if buckets.contains(&0) {
+            return Err(anyhow!("prefill buckets must be positive batch sizes"));
+        }
+        let mut pb = buckets.to_vec();
+        pb.push(1);
+        pb.sort_unstable();
+        pb.dedup();
+        self.prefill_buckets = pb;
+        Ok(self)
+    }
+
+    /// Set the work-stealing decode chunk size (0 = auto: the largest
+    /// compiled bucket that fits ceil(bucket / workers)). Warms any
+    /// chunk sizes the new decomposition introduces so no live request
+    /// pays a chunk-plan compile; chunk sets the construction-time warm
+    /// already covered are not re-executed.
+    pub fn with_steal_chunk(mut self, chunk: usize) -> Result<Self> {
+        if chunk == self.steal_chunk {
+            return Ok(self);
+        }
+        let before = self.warm_chunk_set();
+        self.steal_chunk = chunk;
+        let fresh: Vec<usize> = self
+            .warm_chunk_set()
+            .into_iter()
+            .filter(|c| !before.contains(c))
+            .collect();
+        self.warm_pool_chunks(&fresh)?;
+        Ok(self)
     }
 
     /// Build from serving config: weights come from `weights_path`, else
@@ -328,7 +413,9 @@ impl PlannedServeModel {
             &cfg.decode_buckets,
             workers,
             &cfg.variant,
-        )
+        )?
+        .with_prefill_buckets(&cfg.prefill_buckets)?
+        .with_steal_chunk(cfg.steal_chunk)
     }
 
     /// Deterministic random weights in `full_spec` order — small and
@@ -372,18 +459,36 @@ impl PlannedServeModel {
         s
     }
 
+    /// Every chunk size the pool can currently dispatch (`pool_chunks`
+    /// over the configured buckets), sorted and deduped — the set the
+    /// warmup must cover.
+    fn warm_chunk_set(&self) -> Vec<usize> {
+        let mut chunks: Vec<usize> = self
+            .buckets
+            .iter()
+            .filter_map(|&b| self.pool_chunks(b))
+            .flatten()
+            .collect();
+        chunks.sort_unstable();
+        chunks.dedup();
+        chunks
+    }
+
     /// First decode of a chunk size on a worker compiles that worker's
     /// private plan; run a zero-state batch per (worker, chunk) up front
     /// so no live request pays the compile. Only chunk sizes the pool
-    /// can actually dispatch (`pool_chunk` over the configured buckets)
-    /// are warmed — full-size buckets always run on the serial cache.
+    /// can actually dispatch are warmed — and since the stealing queue
+    /// lets ANY worker run ANY chunk, the warm jobs go through
+    /// `execute_per_worker` so every worker compiles every chunk plan.
     fn warm_pool(&self) -> Result<()> {
+        self.warm_pool_chunks(&self.warm_chunk_set())
+    }
+
+    /// Warm exactly `chunks` on every worker (each must be a compiled
+    /// bucket size).
+    fn warm_pool_chunks(&self, chunks: &[usize]) -> Result<()> {
         if let Some(pool) = &self.pool {
-            let mut chunks: Vec<usize> =
-                self.buckets.iter().filter_map(|&b| self.pool_chunk(b)).collect();
-            chunks.sort_unstable();
-            chunks.dedup();
-            for &b in &chunks {
+            for &b in chunks {
                 let entry = self
                     .decode_graphs
                     .iter()
@@ -405,7 +510,7 @@ impl PlannedServeModel {
                         }
                     })
                     .collect();
-                for r in pool.execute_batch(jobs) {
+                for r in pool.execute_per_worker(jobs) {
                     r.map_err(|e| anyhow!("pool warmup (chunk {b}): {e}"))?;
                 }
             }
@@ -466,20 +571,23 @@ impl PlannedServeModel {
         }
     }
 
-    /// Split bucket `b` into equal sub-buckets for the pool: the largest
-    /// worker count that divides `b` into compiled bucket sizes wins.
-    /// None = run serially (no pool, or no clean split exists).
-    fn pool_chunk(&self, b: usize) -> Option<usize> {
+    /// Decompose bucket `b` into compiled chunk sizes for the pool's
+    /// work-stealing queue — uneven chunks are fine (the queue feeds
+    /// whichever worker is free, and submission-order reassembly keeps
+    /// pooled output bitwise-identical to serial). The target chunk size
+    /// is `steal_chunk`, or ceil(b / workers) when 0 (auto). None = run
+    /// serially (no pool, or no multi-chunk decomposition exists).
+    fn pool_chunks(&self, b: usize) -> Option<Vec<usize>> {
         let w = self.pool.as_ref()?.workers();
         if w <= 1 || b < 2 {
             return None;
         }
-        for parts in (2..=w.min(b)).rev() {
-            if b % parts == 0 && self.buckets.binary_search(&(b / parts)).is_ok() {
-                return Some(b / parts);
-            }
+        let cap = if self.steal_chunk > 0 { self.steal_chunk } else { b.div_ceil(w) };
+        let chunks = super::batcher::decompose(&self.buckets, b, cap)?;
+        if chunks.len() < 2 {
+            return None;
         }
-        None
+        Some(chunks)
     }
 }
 
@@ -496,17 +604,42 @@ impl ServeModel for PlannedServeModel {
         &self.buckets
     }
 
+    /// Variable-length prefill: the full window runs the eagerly
+    /// compiled plan; shorter lengths (length-classes) compile lazily,
+    /// once each, so no prompt is ever padded to the window.
+    fn prefill_len_range(&self) -> (usize, usize) {
+        (self.min_prefill, self.window)
+    }
+
+    fn prefill_buckets(&self) -> &[usize] {
+        &self.prefill_buckets
+    }
+
     fn prefill(&mut self, tokens: &[i32]) -> Result<(Vec<f32>, SeqState)> {
-        if tokens.len() != self.window {
+        let t = tokens.len();
+        if t < self.min_prefill || t > self.window {
             return Err(anyhow!(
-                "prefill expects exactly {} tokens, got {}",
-                self.window,
-                tokens.len()
+                "prefill length {t} outside the supported range {}..={}",
+                self.min_prefill,
+                self.window
             ));
         }
-        let tail = vec![Tensor::i32(vec![self.window], tokens.to_vec())];
-        let key = self.prefill_key.clone();
-        let outs = self.cache.run(&key, tail).map_err(|e| anyhow!(e))?;
+        let tail = vec![Tensor::i32(vec![t], tokens.to_vec())];
+        let outs = if t == self.window {
+            let key = self.prefill_key.clone();
+            self.cache.run(&key, tail)
+        } else {
+            let key = plan_key(self.family.arch(), &format!("prefill_t{t}"));
+            let Self { cache, family, shape, variant, params, .. } = self;
+            let family = *family;
+            cache.run_or_compile_with(
+                &key,
+                || rewrite_graph(variant, family.build_prefill_serve(shape, t)),
+                params,
+                tail,
+            )
+        }
+        .map_err(|e| anyhow!(e))?;
         let logits = outs[0].as_f32().to_vec(); // (1, V) row
         let nl = self.shape.n_layers;
         let mut conv = Vec::with_capacity(nl * self.conv_len());
@@ -524,41 +657,117 @@ impl ServeModel for PlannedServeModel {
         ))
     }
 
+    /// One batched-prefill graph call per (bucket, length-class) — the
+    /// graph replicates the single-sequence prefill per sequence, so
+    /// every returned (logits, state) pair is bitwise identical to a
+    /// lone [`ServeModel::prefill`] of the same tokens. Non-bucket batch
+    /// sizes (the scheduler's per-sequence remainder) fall back to the
+    /// serial loop.
+    fn prefill_batched(&mut self, seqs: &[&[i32]]) -> Result<Vec<(Vec<f32>, SeqState)>> {
+        let b = seqs.len();
+        if b == 0 {
+            return Ok(Vec::new());
+        }
+        let t = seqs[0].len();
+        if seqs.iter().any(|s| s.len() != t) {
+            return Err(anyhow!(
+                "prefill_batched needs equal-length sequences \
+                 (length-class grouping is the scheduler's job)"
+            ));
+        }
+        if b == 1 || self.prefill_buckets.binary_search(&b).is_err() {
+            return seqs.iter().map(|s| self.prefill(s)).collect();
+        }
+        if t < self.min_prefill || t > self.window {
+            return Err(anyhow!(
+                "prefill length {t} outside the supported range {}..={}",
+                self.min_prefill,
+                self.window
+            ));
+        }
+        let key = plan_key(self.family.arch(), &format!("prefill_b{b}_t{t}"));
+        let mut flat = Vec::with_capacity(b * t);
+        for s in seqs {
+            flat.extend_from_slice(s);
+        }
+        let tail = vec![Tensor::i32(vec![b, t], flat)];
+        let outs = {
+            let Self { cache, family, shape, variant, params, .. } = self;
+            let family = *family;
+            cache
+                .run_or_compile_with(
+                    &key,
+                    || rewrite_graph(variant, family.build_prefill_batched(shape, b, t)),
+                    params,
+                    tail,
+                )
+                .map_err(|e| anyhow!(e))?
+        };
+        let v = self.vocab;
+        let nl = self.shape.n_layers;
+        let (conv_len, ssm_len) = (self.conv_len(), self.ssm_len());
+        let logits_all = outs[0].as_f32();
+        let mut result = Vec::with_capacity(b);
+        for s in 0..b {
+            let mut conv = Vec::with_capacity(nl * conv_len);
+            let mut ssm = Vec::with_capacity(nl * ssm_len);
+            for j in 0..nl {
+                conv.extend_from_slice(
+                    &outs[1 + 2 * j].as_f32()[s * conv_len..(s + 1) * conv_len],
+                );
+                ssm.extend_from_slice(
+                    &outs[2 + 2 * j].as_f32()[s * ssm_len..(s + 1) * ssm_len],
+                );
+            }
+            result.push((
+                logits_all[s * v..(s + 1) * v].to_vec(),
+                SeqState {
+                    conv: HostTensor::F32(Self::batched(nl, &self.conv_shape), conv),
+                    ssm: HostTensor::F32(Self::batched(nl, &self.ssm_shape), ssm),
+                },
+            ));
+        }
+        Ok(result)
+    }
+
     fn decode(&mut self, seqs: &mut [(&mut SeqState, i32)]) -> Result<Vec<Vec<f32>>> {
         let b = seqs.len();
         if self.buckets.binary_search(&b).is_err() {
             return Err(anyhow!("no decode bucket of size {b}"));
         }
         let mut logits = Vec::with_capacity(b);
-        if let Some(chunk) = self.pool_chunk(b) {
-            let entry = self
-                .decode_graphs
-                .iter()
-                .find(|e| e.bucket == chunk)
-                .expect("pool chunk is a compiled bucket");
-            let jobs: Vec<ExecJob> = seqs
-                .chunks(chunk)
-                .map(|sub| ExecJob {
+        if let Some(chunks) = self.pool_chunks(b) {
+            let mut jobs = Vec::with_capacity(chunks.len());
+            let mut off = 0usize;
+            for &c in &chunks {
+                let entry = self
+                    .decode_graphs
+                    .iter()
+                    .find(|e| e.bucket == c)
+                    .expect("pool chunk is a compiled bucket");
+                jobs.push(ExecJob {
                     graph: entry.graph.clone(),
                     key: entry.key.clone(),
                     shared: self.params.clone(),
-                    tail: self.decode_tail(sub),
-                })
-                .collect();
-            let results =
-                self.pool.as_ref().expect("pool_chunk implies pool").execute_batch(jobs);
+                    tail: self.decode_tail(&seqs[off..off + c]),
+                });
+                off += c;
+            }
+            let results = self
+                .pool
+                .as_ref()
+                .expect("pool_chunks implies pool")
+                .execute_batch(jobs);
             // collect every chunk BEFORE touching any state, so a failed
             // chunk leaves all sequences exactly as they were
             let mut all_outs = Vec::with_capacity(results.len());
             for r in results {
                 all_outs.push(r.map_err(|e| anyhow!("pooled decode: {e}"))?);
             }
-            for (ch, outs) in all_outs.iter().enumerate() {
-                self.apply_outputs(
-                    &mut seqs[ch * chunk..(ch + 1) * chunk],
-                    outs,
-                    &mut logits,
-                );
+            let mut off = 0usize;
+            for (outs, &c) in all_outs.iter().zip(&chunks) {
+                self.apply_outputs(&mut seqs[off..off + c], outs, &mut logits);
+                off += c;
             }
         } else {
             let entry = self
@@ -583,10 +792,20 @@ pub struct MockModel {
     pub window: usize,
     pub vocab: usize,
     pub buckets: Vec<usize>,
+    /// Batched-prefill bucket sizes the mock advertises (default [1]).
+    pub prefill_buckets: Vec<usize>,
     /// Every decode batch size observed (asserts batching policy).
     pub batch_log: Vec<usize>,
+    /// Every prefill batch size observed (asserts admission batching).
+    pub prefill_batch_log: Vec<usize>,
     /// Artificial per-call latency (scheduling tests).
     pub decode_delay: std::time::Duration,
+    /// Artificial per-prefill-round latency (scheduling tests).
+    pub prefill_delay: std::time::Duration,
+    /// Optional shared engine-event trace: ('p', batch) per prefill
+    /// round, ('d', batch) per decode call, in call order. Interleaving
+    /// tests read it from outside the engine thread.
+    pub event_log: Option<std::sync::Arc<std::sync::Mutex<Vec<(char, usize)>>>>,
 }
 
 impl MockModel {
@@ -595,8 +814,12 @@ impl MockModel {
             window,
             vocab,
             buckets,
+            prefill_buckets: vec![1],
             batch_log: Vec::new(),
+            prefill_batch_log: Vec::new(),
             decode_delay: std::time::Duration::ZERO,
+            prefill_delay: std::time::Duration::ZERO,
+            event_log: None,
         }
     }
 
@@ -604,6 +827,12 @@ impl MockModel {
         let mut l = vec![0.0f32; self.vocab];
         l[(predicted.rem_euclid(self.vocab as i32)) as usize] = 10.0;
         l
+    }
+
+    fn log_event(&self, kind: char, batch: usize) {
+        if let Some(log) = &self.event_log {
+            log.lock().unwrap().push((kind, batch));
+        }
     }
 }
 
@@ -620,6 +849,10 @@ impl ServeModel for MockModel {
         &self.buckets
     }
 
+    fn prefill_buckets(&self) -> &[usize] {
+        &self.prefill_buckets
+    }
+
     fn prefill(&mut self, tokens: &[i32]) -> Result<(Vec<f32>, SeqState)> {
         let last = *tokens.last().unwrap();
         let state = SeqState {
@@ -629,8 +862,18 @@ impl ServeModel for MockModel {
         Ok((self.logits_for(last + 1), state))
     }
 
+    fn prefill_batched(&mut self, seqs: &[&[i32]]) -> Result<Vec<(Vec<f32>, SeqState)>> {
+        self.prefill_batch_log.push(seqs.len());
+        self.log_event('p', seqs.len());
+        if !self.prefill_delay.is_zero() {
+            std::thread::sleep(self.prefill_delay);
+        }
+        seqs.iter().map(|s| self.prefill(s)).collect()
+    }
+
     fn decode(&mut self, seqs: &mut [(&mut SeqState, i32)]) -> Result<Vec<Vec<f32>>> {
         self.batch_log.push(seqs.len());
+        self.log_event('d', seqs.len());
         if !self.buckets.contains(&seqs.len()) {
             return Err(anyhow!("batch {} is not a bucket", seqs.len()));
         }
@@ -682,5 +925,20 @@ mod tests {
         let (_, mut c) = m.prefill(&[3]).unwrap();
         let mut seqs = vec![(&mut a, 1), (&mut b, 2), (&mut c, 3)];
         assert!(m.decode(&mut seqs).is_err());
+    }
+
+    #[test]
+    fn mock_batched_prefill_matches_serial_and_logs_occupancy() {
+        let mut m = MockModel::new(4, 256, vec![1, 2]);
+        m.prefill_buckets = vec![1, 2];
+        let seqs: Vec<&[i32]> = vec![&[5, 6], &[10, 11]];
+        let batched = m.prefill_batched(&seqs).unwrap();
+        assert_eq!(batched.len(), 2);
+        let (l0, _) = m.prefill(&[5, 6]).unwrap();
+        assert_eq!(batched[0].0, l0);
+        assert_eq!(m.prefill_batch_log, vec![2]);
+        assert_eq!(m.prefill_buckets(), &[1, 2]);
+        // the default range is the fixed window
+        assert_eq!(m.prefill_len_range(), (4, 4));
     }
 }

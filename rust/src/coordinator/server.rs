@@ -242,44 +242,84 @@ fn engine_loop(
             return;
         }
 
-        // --- prefill priority ----------------------------------------------
-        if cache.has_free() {
-            if let Some((req, reply)) = waiting.pop_front() {
-                let tokens = tokenizer.encode_window(&req.prompt);
-                match model.prefill(&tokens) {
-                    Ok((logits, state)) => {
-                        let slot = cache.alloc(state).expect("checked has_free");
-                        let mut rng = Prng::new(req.params.seed ^ req.id);
-                        let tok = sample(&logits, req.params.temperature, &mut rng);
-                        let now = Instant::now();
-                        {
-                            let mut m = metrics.lock().unwrap();
-                            m.prefills += 1;
-                            m.tokens_out += 1;
-                            m.ttft_us.record_us(
-                                now.duration_since(req.arrived).as_micros() as f64,
-                            );
-                        }
-                        if !reply.push_token(tok.clamp(0, 255) as u8) {
-                            // client vanished before the first token
-                            cache.release(slot);
-                            continue;
-                        }
-                        active.push(ActiveSeq {
-                            id: req.id,
-                            slot,
-                            last_token: tok,
-                            generated: vec![tok],
-                            prompt: req.prompt,
-                            params: req.params,
-                            arrived: req.arrived,
-                            first_token_at: now,
-                            reply,
-                            rng,
-                            batch_trace: Vec::new(),
-                        });
-                        continue; // re-check ingress + maybe prefill again
+        // --- prefill: one batched admission round --------------------------
+        //
+        // At most ONE prefill bucket runs per loop iteration, then control
+        // falls through to decode — so admissions arriving while sequences
+        // decode can never stall the decode loop by more than one prefill
+        // batch. Waiting requests are grouped into the front request's
+        // length-class (equal encoded token counts — no prompt is ever
+        // padded to batch it with a longer one); the class's leftover
+        // stays queued and drains on later rounds, down to per-sequence
+        // remainder batches.
+        if cache.has_free() && !waiting.is_empty() {
+            let min_len = model.prefill_len_range().0;
+            let enc_len = |prompt: &[u8]| tokenizer.encoded_len(prompt, min_len);
+            let free = cache.capacity() - cache.in_use();
+            let cap = model
+                .prefill_buckets()
+                .last()
+                .copied()
+                .unwrap_or(1)
+                .min(free)
+                .max(1);
+            let class = enc_len(&waiting[0].0.prompt);
+            let mut take: Vec<usize> = vec![0];
+            for i in 1..waiting.len() {
+                if take.len() >= cap {
+                    break;
+                }
+                if enc_len(&waiting[i].0.prompt) == class {
+                    take.push(i);
+                }
+            }
+            // the largest compiled prefill bucket the class fills now
+            let b = plan(model.prefill_buckets(), take.len()).bucket.max(1);
+            take.truncate(b);
+            let mut batch: Vec<(Request, Reply)> = Vec::with_capacity(b);
+            for &i in take.iter().rev() {
+                batch.push(waiting.remove(i).expect("selected index in range"));
+            }
+            batch.reverse();
+            let tokens: Vec<Vec<i32>> = batch
+                .iter()
+                .map(|(req, _)| tokenizer.encode_ranged(&req.prompt, min_len))
+                .collect();
+            let token_refs: Vec<&[i32]> = tokens.iter().map(|t| t.as_slice()).collect();
+            let t0 = Instant::now();
+            // a failed BATCH retries each request alone, so one broken
+            // (bucket, length-class) graph — or one poison request —
+            // keeps the blast radius of the old per-request path: only
+            // the sequence that actually fails gets rejected
+            let mut fell_back = false;
+            let results: Vec<Result<(Vec<f32>, super::model::SeqState)>> =
+                match model.prefill_batched(&token_refs) {
+                    Ok(rs) => rs.into_iter().map(Ok).collect(),
+                    Err(e) => {
+                        eprintln!(
+                            "batched prefill failed for {} requests: {e:#}; \
+                             retrying per-sequence",
+                            batch.len()
+                        );
+                        fell_back = true;
+                        token_refs.iter().map(|t| model.prefill(t)).collect()
                     }
+                };
+            let round_us = t0.elapsed().as_micros() as f64;
+            let now = Instant::now();
+            {
+                let mut m = metrics.lock().unwrap();
+                // a serial fallback counts as one round PER sequence, so
+                // mean_prefill_batch honestly drops to 1.0 exactly when
+                // batching is broken instead of masking it
+                let rounds = if fell_back { batch.len() as u64 } else { 1 };
+                m.prefill_calls += rounds;
+                m.prefill_batched_seqs += batch.len() as u64;
+                m.prefill_batch_us.record_us(round_us);
+            }
+            for ((req, reply), result) in batch.into_iter().zip(results) {
+                let (logits, state) = match result {
+                    Ok(r) => r,
                     Err(e) => {
                         eprintln!("prefill failed for request {}: {e:#}", req.id);
                         reply.finish(Response {
@@ -293,8 +333,40 @@ fn engine_loop(
                         });
                         continue;
                     }
+                };
+                let slot = cache.alloc(state).expect("round capped at free slots");
+                let mut rng = Prng::new(req.params.seed ^ req.id);
+                let tok = sample(&logits, req.params.temperature, &mut rng);
+                {
+                    let mut m = metrics.lock().unwrap();
+                    m.prefills += 1;
+                    m.tokens_out += 1;
+                    m.ttft_us
+                        .record_us(now.duration_since(req.arrived).as_micros() as f64);
                 }
+                if !reply.push_token(tok.clamp(0, 255) as u8) {
+                    // client vanished before the first token
+                    cache.release(slot);
+                    let mut m = metrics.lock().unwrap();
+                    m.cancelled += 1;
+                    continue;
+                }
+                active.push(ActiveSeq {
+                    id: req.id,
+                    slot,
+                    last_token: tok,
+                    generated: vec![tok],
+                    prompt: req.prompt,
+                    params: req.params,
+                    arrived: req.arrived,
+                    first_token_at: now,
+                    reply,
+                    rng,
+                    batch_trace: Vec::new(),
+                });
             }
+            // NO `continue`: fall through so pending decodes advance
+            // between admission rounds (the interleave invariant).
         }
 
         // --- batched decode --------------------------------------------------
@@ -718,6 +790,89 @@ mod tests {
         let m = server.shutdown();
         assert_eq!(m.failed, 1);
         assert_eq!(m.completed, 0);
+    }
+
+    #[test]
+    fn concurrent_admissions_prefill_in_batches() {
+        // a slow prefill lets the queue build up; the admission loop must
+        // then batch the backlog instead of prefilling one-by-one
+        let mut model = MockModel::new(8, 256, vec![1, 2, 4]);
+        model.prefill_buckets = vec![1, 2, 4];
+        model.prefill_delay = Duration::from_millis(5);
+        let server = Server::start(move || Ok(Box::new(model) as _), test_cfg(8)).unwrap();
+        let rxs: Vec<_> = (0..5)
+            .map(|_| {
+                server.submit(
+                    b"q",
+                    GenParams { max_new_tokens: 4, ..Default::default() },
+                )
+            })
+            .collect();
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(r.finish, FinishReason::Length);
+        }
+        let m = server.shutdown();
+        assert_eq!(m.prefills, 5);
+        assert!(
+            m.prefill_calls < m.prefills,
+            "admissions never batched: {} rounds for {} prefills",
+            m.prefill_calls,
+            m.prefills
+        );
+        assert!(m.mean_prefill_batch() > 1.0, "occupancy {}", m.mean_prefill_batch());
+        assert!(m.prefill_batch_us.count() >= 1);
+    }
+
+    #[test]
+    fn decode_never_stalls_more_than_one_prefill_batch() {
+        // admissions arriving while a sequence decodes must interleave:
+        // one prefill bucket, then a decode step, never two admission
+        // rounds back-to-back while decodable work is pending
+        let mut model = MockModel::new(8, 256, vec![1, 2, 4]);
+        model.prefill_buckets = vec![1, 2];
+        model.prefill_delay = Duration::from_millis(2);
+        model.decode_delay = Duration::from_millis(1);
+        let log = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        model.event_log = Some(log.clone());
+        let server = Server::start(move || Ok(Box::new(model) as _), test_cfg(8)).unwrap();
+
+        // get one sequence decoding before the flood
+        let rx0 = server.submit_streaming(
+            b"a",
+            GenParams { max_new_tokens: 24, ..Default::default() },
+        );
+        let _first = rx0.recv_timeout(Duration::from_secs(5)).unwrap();
+        let rxs: Vec<_> = (0..6)
+            .map(|_| {
+                server.submit(
+                    b"b",
+                    GenParams { max_new_tokens: 12, ..Default::default() },
+                )
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        }
+        while let Ok(ev) = rx0.recv_timeout(Duration::from_secs(10)) {
+            if matches!(ev, StreamEvent::Done(_)) {
+                break;
+            }
+        }
+        server.shutdown();
+
+        let log = log.lock().unwrap();
+        let first_decode = log
+            .iter()
+            .position(|&(k, _)| k == 'd')
+            .expect("no decode event recorded");
+        for w in log[first_decode..].windows(2) {
+            assert!(
+                !(w[0].0 == 'p' && w[1].0 == 'p'),
+                "two prefill rounds back-to-back while decode work was pending: {:?}",
+                &log[..]
+            );
+        }
     }
 
     #[test]

@@ -36,6 +36,35 @@ impl Tokenizer {
         out
     }
 
+    /// Encode a prompt at its REAL length for variable-length prefill:
+    /// prompts longer than the window keep their trailing `window` bytes
+    /// (exactly like [`Tokenizer::encode_window`]), shorter prompts come
+    /// back at their true length — left-padded only up to `min_len` (the
+    /// backend's shortest compiled prefill, e.g. the conv-state floor),
+    /// so beyond that floor no pad token ever touches SSM state. With
+    /// `min_len == window` this degenerates to `encode_window` (the
+    /// fixed-window backends).
+    pub fn encode_ranged(&self, prompt: &[u8], min_len: usize) -> Vec<i32> {
+        let min_len = min_len.max(1).min(self.window);
+        if prompt.len() >= self.window {
+            return self.encode_window(prompt);
+        }
+        let mut out = Vec::with_capacity(prompt.len().max(min_len));
+        if prompt.len() < min_len {
+            out.resize(min_len - prompt.len(), PAD_BYTE as i32);
+        }
+        out.extend(prompt.iter().map(|&b| b as i32));
+        out
+    }
+
+    /// Length of the id sequence [`Tokenizer::encode_ranged`] would
+    /// produce — the admission scheduler's length-class key. Kept next
+    /// to the encoder so the grouping rule and the encoding rule cannot
+    /// drift apart (a mismatch would make every batch look ragged).
+    pub fn encoded_len(&self, prompt: &[u8], min_len: usize) -> usize {
+        prompt.len().clamp(min_len.max(1).min(self.window), self.window)
+    }
+
     /// Decode generated ids back to bytes (ids are bytes for this vocab).
     pub fn decode(&self, ids: &[i32]) -> Vec<u8> {
         ids.iter().map(|&i| i.clamp(0, 255) as u8).collect()
@@ -67,6 +96,32 @@ mod tests {
         let t = Tokenizer::new(4, 256);
         let ids = t.encode_window(b"abcdefgh");
         assert_eq!(ids, vec![101, 102, 103, 104]); // "efgh"
+    }
+
+    #[test]
+    fn ranged_encoding_keeps_true_lengths() {
+        let t = Tokenizer::new(8, 256);
+        // between the floor and the window: identity, no pads
+        assert_eq!(t.encode_ranged(b"hello", 2), vec![104, 101, 108, 108, 111]);
+        // below the floor: padded up to the floor only
+        assert_eq!(t.encode_ranged(b"h", 3), vec![32, 32, 104]);
+        // above the window: trailing-window truncation, like encode_window
+        assert_eq!(
+            t.encode_ranged(b"abcdefghij", 2),
+            t.encode_window(b"abcdefghij")
+        );
+        // floor == window degenerates to the fixed-window encoding
+        assert_eq!(t.encode_ranged(b"hi", 8), t.encode_window(b"hi"));
+        // the length-class key always equals the encoded length
+        for prompt in [&b""[..], b"h", b"hi", b"hello", b"exactly8", b"well past it"] {
+            for min_len in [0usize, 1, 3, 8, 20] {
+                assert_eq!(
+                    t.encode_ranged(prompt, min_len).len(),
+                    t.encoded_len(prompt, min_len),
+                    "prompt {prompt:?} min {min_len}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -92,6 +92,25 @@ impl PlanCache {
         self.run(key, tail)
     }
 
+    /// [`PlanCache::run_or_compile`] with a *deferred* graph: `make_graph`
+    /// runs only on a cache miss, so callers with many lazily-materialized
+    /// programs (the serving path's per-(bucket, length-class) prefill
+    /// graphs) pay graph construction exactly once per key — a steady-state
+    /// hit is a pure lookup.
+    pub fn run_or_compile_with(
+        &mut self,
+        key: &str,
+        make_graph: impl FnOnce() -> Result<Graph, String>,
+        shared: &Arc<Vec<Tensor>>,
+        tail: Vec<Tensor>,
+    ) -> Result<Vec<Tensor>, String> {
+        if !self.plans.contains_key(key) {
+            let graph = make_graph()?;
+            self.insert_with(key, &graph, shared)?;
+        }
+        self.run(key, tail)
+    }
+
     /// Execute the cached plan for `key` on `shared ++ tail`.
     pub fn run(&mut self, key: &str, tail: Vec<Tensor>) -> Result<Vec<Tensor>, String> {
         let plan = self
@@ -189,6 +208,38 @@ mod tests {
     fn missing_key_is_an_error() {
         let mut cache = PlanCache::new();
         assert!(cache.run("nope", vec![]).is_err());
+    }
+
+    #[test]
+    fn deferred_graph_builds_only_on_miss() {
+        let shared = Arc::new(vec![Tensor::f32(vec![2], vec![1.0, 1.0])]);
+        let mut cache = PlanCache::new();
+        let mut builds = 0usize;
+        for v in [2.0f32, 3.0] {
+            let r = cache
+                .run_or_compile_with(
+                    "lazy",
+                    || {
+                        builds += 1;
+                        Ok(add_graph())
+                    },
+                    &shared,
+                    vec![Tensor::f32(vec![2], vec![v, v])],
+                )
+                .unwrap();
+            assert_eq!(r[0].as_f32(), &[1.0 + v, 1.0 + v]);
+        }
+        assert_eq!(builds, 1, "graph must be constructed once, on the miss");
+        assert_eq!(cache.compile_count(), 1);
+        // a failing builder surfaces its error and caches nothing
+        let err = cache.run_or_compile_with(
+            "broken",
+            || Err("no such graph".into()),
+            &shared,
+            vec![],
+        );
+        assert!(err.unwrap_err().contains("no such graph"));
+        assert!(!cache.contains("broken"));
     }
 
     #[test]

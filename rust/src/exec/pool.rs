@@ -8,14 +8,20 @@
 //! parameters — one allocation process-wide, never copied), and a
 //! per-job tail — no mutable state crosses threads.
 //!
-//! [`WorkerPool::execute_batch`] is deterministic by construction: job
-//! `i` always runs on worker `i % workers`, jobs never interact, and
-//! results are returned in submission order — so pooled output is
-//! bitwise-identical to a serial loop over the same jobs, at any worker
-//! count.
+//! [`WorkerPool::execute_batch`] is a **work-stealing chunk queue**: the
+//! batch goes into one shared FIFO and every worker drains it until
+//! empty, so a ragged batch (uneven job costs, uneven chunk sizes) never
+//! leaves workers idle the way a static equal shard does. It is still
+//! deterministic by construction: jobs never interact, a job's result
+//! depends only on the job itself (every worker compiles the identical
+//! plan from the identical graph), and results are reassembled in
+//! submission order — so pooled output is bitwise-identical to a serial
+//! loop over the same jobs, at any worker count and under any stealing
+//! schedule.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::graph::{Graph, Tensor};
@@ -37,10 +43,23 @@ pub struct ExecJob {
     pub tail: Vec<Tensor>,
 }
 
+/// Shared FIFO the workers steal from. Jobs keep their submission index
+/// so the caller reassembles results in order regardless of which worker
+/// ran what.
+struct JobQueue {
+    jobs: Mutex<VecDeque<(usize, ExecJob)>>,
+}
+
+impl JobQueue {
+    fn pop(&self) -> Option<(usize, ExecJob)> {
+        self.jobs.lock().unwrap().pop_front()
+    }
+}
+
 enum Msg {
-    Run {
-        idx: usize,
-        job: ExecJob,
+    /// Drain `queue` until empty, reporting each job's result on `reply`.
+    Drain {
+        queue: Arc<JobQueue>,
         reply: Sender<(usize, Result<Vec<Tensor>, String>)>,
     },
 }
@@ -74,27 +93,80 @@ impl WorkerPool {
         self.txs.len()
     }
 
-    /// Run every job and return results in submission order. Assignment
-    /// is static round-robin, so a batch's output does not depend on
-    /// scheduling; a job whose worker died reports an error instead of
-    /// wedging the caller.
+    /// Run every job and return results in submission order. All workers
+    /// steal from one shared queue, so uneven jobs balance themselves;
+    /// a job whose worker died reports an error instead of wedging the
+    /// caller.
     pub fn execute_batch(&self, jobs: Vec<ExecJob>) -> Vec<Result<Vec<Tensor>, String>> {
         let n = jobs.len();
-        let (reply_tx, reply_rx) = channel();
-        let mut sent = 0usize;
         let mut out: Vec<Result<Vec<Tensor>, String>> =
             (0..n).map(|_| Err("pool worker died".to_string())).collect();
-        for (i, job) in jobs.into_iter().enumerate() {
-            let msg = Msg::Run { idx: i, job, reply: reply_tx.clone() };
-            if self.txs[i % self.txs.len()].send(msg).is_ok() {
-                sent += 1;
+        if n == 0 {
+            return out;
+        }
+        let queue = Arc::new(JobQueue {
+            jobs: Mutex::new(jobs.into_iter().enumerate().collect()),
+        });
+        let (reply_tx, reply_rx) = channel();
+        let mut notified = 0usize;
+        for tx in &self.txs {
+            let msg = Msg::Drain { queue: queue.clone(), reply: reply_tx.clone() };
+            if tx.send(msg).is_ok() {
+                notified += 1;
             }
         }
         drop(reply_tx);
-        for _ in 0..sent {
+        if notified == 0 {
+            return out; // every worker is gone
+        }
+        let mut received = 0usize;
+        while received < n {
             match reply_rx.recv() {
-                Ok((i, r)) => out[i] = r,
-                Err(_) => break, // every live sender finished or died
+                Ok((i, r)) => {
+                    out[i] = r;
+                    received += 1;
+                }
+                // every live worker finished or died; unreported jobs
+                // keep their "worker died" error
+                Err(_) => break,
+            }
+        }
+        out
+    }
+
+    /// Run exactly one job on each worker (jobs.len() must equal
+    /// `workers()`), bypassing the stealing queue. Warmup uses this to
+    /// guarantee EVERY worker compiles a plan — under stealing, a fast
+    /// worker could otherwise grab all the warm jobs and leave its
+    /// siblings cold.
+    pub fn execute_per_worker(
+        &self,
+        jobs: Vec<ExecJob>,
+    ) -> Vec<Result<Vec<Tensor>, String>> {
+        assert_eq!(jobs.len(), self.txs.len(), "one warm job per worker");
+        let n = jobs.len();
+        let mut out: Vec<Result<Vec<Tensor>, String>> =
+            (0..n).map(|_| Err("pool worker died".to_string())).collect();
+        let (reply_tx, reply_rx) = channel();
+        let mut notified = 0usize;
+        for (i, job) in jobs.into_iter().enumerate() {
+            let queue = Arc::new(JobQueue {
+                jobs: Mutex::new(VecDeque::from([(i, job)])),
+            });
+            let msg = Msg::Drain { queue, reply: reply_tx.clone() };
+            if self.txs[i].send(msg).is_ok() {
+                notified += 1;
+            }
+        }
+        drop(reply_tx);
+        let mut received = 0usize;
+        while received < notified {
+            match reply_rx.recv() {
+                Ok((i, r)) => {
+                    out[i] = r;
+                    received += 1;
+                }
+                Err(_) => break,
             }
         }
         out
@@ -113,9 +185,13 @@ impl Drop for WorkerPool {
 
 fn worker_loop(rx: Receiver<Msg>) {
     let mut cache = PlanCache::new();
-    while let Ok(Msg::Run { idx, job, reply }) = rx.recv() {
-        let r = cache.run_or_compile(&job.key, &job.graph, &job.shared, job.tail);
-        let _ = reply.send((idx, r));
+    while let Ok(Msg::Drain { queue, reply }) = rx.recv() {
+        while let Some((idx, job)) = queue.pop() {
+            let r = cache.run_or_compile(&job.key, &job.graph, &job.shared, job.tail);
+            if reply.send((idx, r)).is_err() {
+                break; // caller stopped listening; stop draining
+            }
+        }
     }
 }
 
@@ -175,6 +251,35 @@ mod tests {
                 .map(|r| r.unwrap())
                 .collect();
             assert_eq!(got, baseline, "{w} workers diverged");
+        }
+    }
+
+    #[test]
+    fn stealing_handles_more_jobs_than_workers_and_vice_versa() {
+        let g = Arc::new(square_graph());
+        let pool = WorkerPool::new(4);
+        // fewer jobs than workers: idle workers drain an empty queue
+        for count in [1usize, 3, 11] {
+            let results = pool.execute_batch(jobs_for(&g, count));
+            assert_eq!(results.len(), count);
+            for (i, r) in results.iter().enumerate() {
+                assert!(r.is_ok(), "job {i} of {count} failed");
+            }
+        }
+        assert!(pool.execute_batch(Vec::new()).is_empty());
+    }
+
+    #[test]
+    fn per_worker_execution_reaches_every_worker() {
+        let g = Arc::new(square_graph());
+        let pool = WorkerPool::new(3);
+        let results = pool.execute_per_worker(jobs_for(&g, 3));
+        assert_eq!(results.len(), 3);
+        for (i, r) in results.iter().enumerate() {
+            let got = r.as_ref().unwrap()[0].as_f32();
+            let want: Vec<f32> =
+                (0..4).map(|d| ((i * 4 + d) as f32).powi(2)).collect();
+            assert_eq!(got, want.as_slice(), "worker {i}");
         }
     }
 

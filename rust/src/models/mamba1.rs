@@ -190,6 +190,34 @@ pub fn build_prefill_serve(m: &ModelShape, t: usize) -> Graph {
     )
 }
 
+/// Batched serving prefill for prefill bucket `b`: tokens (b, T) i32 →
+/// logits (b, V) + per-layer batch-stacked decode states. Each sequence
+/// replicates [`build_prefill_serve`] node-for-node, so per-sequence
+/// results are bitwise identical to the single-sequence graph (see
+/// `serve::lm_serve_scaffold_batched` for the batching invariants).
+pub fn build_prefill_serve_batched(m: &ModelShape, b: usize, t: usize) -> Graph {
+    assert_eq!(m.arch, "mamba");
+    let k = m.d_conv;
+    assert!(t >= k - 1, "serve prefill window {t} shorter than conv state {}", k - 1);
+    super::serve::lm_serve_scaffold_batched(
+        &format!("{}-serve-prefill-b{b}-t{t}", m.name),
+        m,
+        b,
+        t,
+        |ctx, j, xn| {
+            let (y, conv_seq, h_last) = block_prefill_with_state(ctx, m, j, xn, t);
+            let conv_state = ctx.g.slice(
+                conv_seq,
+                0,
+                t - (k - 1),
+                k - 1,
+                &format!("l{j}.conv.state"),
+            );
+            (y, (conv_state, h_last))
+        },
+    )
+}
+
 /// Single Mamba-1 block graph over (T, d_model) — the Fig-1 / Fig-4(c)
 /// profiling workload. Inputs: block params (block_spec order), then `x`.
 pub fn build_block(m: &ModelShape, t: usize) -> Graph {
@@ -444,6 +472,19 @@ mod tests {
         assert_eq!(g.shape(g.outputs[0]), &[1, m.vocab_size]);
         assert_eq!(g.shape(g.outputs[1]), &[m.d_conv - 1, m.d_inner()]);
         assert_eq!(g.shape(g.outputs[2]), &[m.d_inner(), m.d_state]);
+    }
+
+    #[test]
+    fn batched_prefill_io_shapes() {
+        let m = presets::tiny_mamba();
+        let (b, t) = (2usize, 8usize);
+        let g = build_prefill_serve_batched(&m, b, t);
+        // params + the (b, t) token matrix
+        assert_eq!(g.inputs.len(), full_spec(&m).entries.len() + 1);
+        assert_eq!(g.outputs.len(), 1 + 2 * m.n_layers);
+        assert_eq!(g.shape(g.outputs[0]), &[b, m.vocab_size]);
+        assert_eq!(g.shape(g.outputs[1]), &[b, m.d_conv - 1, m.d_inner()]);
+        assert_eq!(g.shape(g.outputs[2]), &[b, m.d_inner(), m.d_state]);
     }
 
     #[test]

@@ -334,6 +334,28 @@ pub fn build_prefill_serve(m: &ModelShape, t: usize) -> Graph {
     )
 }
 
+/// Batched serving prefill for prefill bucket `b`: tokens (b, T) i32 →
+/// logits (b, V) + per-layer batch-stacked decode states. Each sequence
+/// replicates [`build_prefill_serve`] node-for-node — including the
+/// no-padding real-length remainder chunk, so every stacked SSD state is
+/// decode-exact and bitwise identical to the single-sequence graph (see
+/// `serve::lm_serve_scaffold_batched` for the batching invariants).
+pub fn build_prefill_serve_batched(m: &ModelShape, b: usize, t: usize) -> Graph {
+    assert_eq!(m.arch, "mamba2");
+    let k = m.d_conv;
+    assert!(t >= k - 1, "serve prefill window {t} shorter than conv state {}", k - 1);
+    super::serve::lm_serve_scaffold_batched(
+        &format!("{}-serve-prefill-b{b}-t{t}", m.name),
+        m,
+        b,
+        t,
+        |ctx, j, xn| {
+            let (y, conv_state, ssd_state) = block_prefill_serve(ctx, m, j, xn, t);
+            (y, (conv_state, ssd_state))
+        },
+    )
+}
+
 /// Batched decode-step graph for a fixed batch bucket `b`: tokens (b,)
 /// i32 + per-layer stacked states -> logits (b, V) + new states. The
 /// Mamba-2 counterpart of `mamba1::build_decode_batched`, and the
@@ -622,6 +644,22 @@ mod tests {
         // remainder chunking: a second chunk exists and carries state...
         assert!(g.nodes.iter().any(|nd| nd.name.contains("c1.off.mm")));
         // ...and no pad constants were materialized
+        assert!(!g.nodes.iter().any(|nd| nd.name.contains("pad.")));
+    }
+
+    #[test]
+    fn batched_prefill_keeps_the_no_padding_invariant() {
+        let m = presets::tiny_mamba2();
+        // t = 24 is not a chunk multiple (chunk 16): every sequence must
+        // run a carried remainder chunk, and no pad constants may exist
+        let g = build_prefill_serve_batched(&m, 3, 24);
+        assert_eq!(g.shape(g.outputs[0]), &[3, m.vocab_size]);
+        assert_eq!(g.shape(g.outputs[1]), &[3, m.d_conv - 1, m.conv_dim()]);
+        assert_eq!(
+            g.shape(g.outputs[2]),
+            &[3, m.n_heads(), m.headdim, m.d_state]
+        );
+        assert!(g.nodes.iter().any(|nd| nd.name.contains("c1.off.mm")));
         assert!(!g.nodes.iter().any(|nd| nd.name.contains("pad.")));
     }
 

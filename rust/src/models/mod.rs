@@ -52,3 +52,11 @@ pub fn build_decode_batched(m: &ModelShape, b: usize) -> Graph {
         .unwrap_or_else(|e| panic!("{e}"))
         .build_decode_batched(m, b)
 }
+
+/// Build the bucket-`b` batched serving-prefill graph (per-sequence
+/// bitwise identical to `build_prefill_serve`) for either architecture.
+pub fn build_prefill_batched(m: &ModelShape, b: usize, t: usize) -> Graph {
+    ServeFamily::from_arch(&m.arch)
+        .unwrap_or_else(|e| panic!("{e}"))
+        .build_prefill_batched(m, b, t)
+}

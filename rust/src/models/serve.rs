@@ -58,6 +58,82 @@ pub(crate) fn lm_serve_scaffold(
     ctx.g
 }
 
+/// Batched counterpart of [`lm_serve_scaffold`]: tokens (b, t) i32 →
+/// logits (b, V) + per-layer batch-stacked `(conv, ssm)` states, the
+/// same I/O layout as the batched decode graphs.
+///
+/// Each sequence's computation REPLICATES the single-sequence scaffold
+/// node-for-node — same ops over the same values — so every per-sequence
+/// result is **bitwise identical** to the b=1 serve-prefill graph (the
+/// invariant the admission scheduler's parity tests pin down). Only pure
+/// layout ops (slice / reshape / concat) do the batching: no pad token
+/// and no cross-sequence arithmetic ever touches SSM state. Batching
+/// still pays: one plan execution, one parameter binding, and one
+/// schedule walk amortize the per-admission dispatch cost that
+/// serialized TTFT under concurrent admissions.
+pub(crate) fn lm_serve_scaffold_batched(
+    graph_name: &str,
+    m: &ModelShape,
+    b: usize,
+    t: usize,
+    mut block: impl FnMut(&mut Ctx, usize, NodeId) -> (NodeId, (NodeId, NodeId)),
+) -> Graph {
+    assert!(b >= 1, "prefill bucket must be >= 1");
+    let spec = full_spec(m);
+    let mut ctx = Ctx::new(graph_name, &spec);
+    let tokens = ctx.g.input_i32("tokens", vec![b, t]);
+    let emb = ctx.w("emb");
+    // sequence-independent, so built once: every sequence's lm-head
+    // matmul consumes the identical transpose values (bitwise-neutral
+    // vs. the single-sequence graph's own transpose of the same `emb`)
+    let emb_t = ctx.g.transpose(emb, vec![1, 0], "lm_head.wT");
+    let mut logits_rows: Vec<NodeId> = Vec::with_capacity(b);
+    let mut conv_rows: Vec<Vec<NodeId>> = vec![Vec::with_capacity(b); m.n_layers];
+    let mut ssm_rows: Vec<Vec<NodeId>> = vec![Vec::with_capacity(b); m.n_layers];
+    for s in 0..b {
+        let tok_row = ctx.g.slice(tokens, 0, s, 1, &format!("s{s}.tokens.row"));
+        let tok = ctx.g.reshape(tok_row, vec![t], &format!("s{s}.tokens"));
+        let mut x = ctx.g.gather(emb, tok, &format!("s{s}.embed"));
+        let mut states: Vec<(NodeId, NodeId)> = Vec::with_capacity(m.n_layers);
+        for j in 0..m.n_layers {
+            let norm_w = ctx.w(&format!("l{j}.norm_w"));
+            let xn = ctx.g.rmsnorm(x, norm_w, &format!("l{j}.norm"));
+            let (y, st) = block(&mut ctx, j, xn);
+            states.push(st);
+            x = ctx.g.add(x, y, &format!("l{j}.residual"));
+        }
+        let fw = ctx.w("final_norm_w");
+        let xf = ctx.g.rmsnorm(x, fw, &format!("s{s}.final_norm"));
+        let x_last = ctx.g.slice(xf, 0, t - 1, 1, &format!("s{s}.last_pos"));
+        logits_rows.push(ctx.g.matmul(x_last, emb_t, &format!("s{s}.lm_head.mm")));
+        for (j, (cs, ss)) in states.into_iter().enumerate() {
+            let cs_shape = stacked1(ctx.g.shape(cs));
+            let ss_shape = stacked1(ctx.g.shape(ss));
+            conv_rows[j]
+                .push(ctx.g.reshape(cs, cs_shape, &format!("s{s}.l{j}.conv.stack")));
+            ssm_rows[j]
+                .push(ctx.g.reshape(ss, ss_shape, &format!("s{s}.l{j}.ssm.stack")));
+        }
+    }
+    let logits = ctx.g.concat(&logits_rows, 0, "logits.batch"); // (b, V)
+    ctx.g.output(logits);
+    for j in 0..m.n_layers {
+        let cs = ctx.g.concat(&conv_rows[j], 0, &format!("l{j}.conv.batch"));
+        let ss = ctx.g.concat(&ssm_rows[j], 0, &format!("l{j}.ssm.batch"));
+        ctx.g.output(cs);
+        ctx.g.output(ss);
+    }
+    ctx.g
+}
+
+/// `[1] ++ shape` — one sequence's slot in the batch-stacked state.
+fn stacked1(shape: &[usize]) -> Vec<usize> {
+    let mut s = Vec::with_capacity(1 + shape.len());
+    s.push(1);
+    s.extend_from_slice(shape);
+    s
+}
+
 /// Which model family a serving backend drives. Constructed from
 /// `ModelShape.arch` via [`ServeFamily::from_arch`]; every family-specific
 /// decision on the planned serving path (graph builders, state-tensor
@@ -108,6 +184,18 @@ impl ServeFamily {
         }
     }
 
+    /// Batched serving-prefill graph for prefill bucket `b`: tokens
+    /// (b, t) i32 → logits (b, V) + per-layer batch-stacked states,
+    /// per-sequence bitwise identical to
+    /// [`ServeFamily::build_prefill_serve`] at the same `t` (see
+    /// [`lm_serve_scaffold_batched`]).
+    pub fn build_prefill_batched(self, m: &ModelShape, b: usize, t: usize) -> Graph {
+        match self {
+            ServeFamily::Mamba1 => mamba1::build_prefill_serve_batched(m, b, t),
+            ServeFamily::Mamba2 => mamba2::build_prefill_serve_batched(m, b, t),
+        }
+    }
+
     /// Per-layer, per-sequence conv-state shape.
     pub fn conv_state_shape(self, m: &ModelShape) -> Vec<usize> {
         vec![m.d_conv - 1, m.conv_dim()]
@@ -143,6 +231,26 @@ mod tests {
             let g = f.build_decode_batched(&m, 2);
             assert_eq!(&g.shape(g.outputs[1])[1..], f.conv_state_shape(&m).as_slice());
             assert_eq!(&g.shape(g.outputs[2])[1..], f.ssm_state_shape(&m).as_slice());
+        }
+    }
+
+    #[test]
+    fn batched_prefill_io_matches_the_decode_layout() {
+        // the batched prefill's outputs must stack exactly like the
+        // batched decode inputs, so the coordinator can unpack both with
+        // one code path
+        let (b, t) = (3usize, 9usize);
+        for m in [presets::tiny_mamba(), presets::tiny_mamba2()] {
+            let f = ServeFamily::from_arch(&m.arch).unwrap();
+            let g = f.build_prefill_batched(&m, b, t);
+            assert_eq!(g.outputs.len(), 1 + 2 * m.n_layers);
+            assert_eq!(g.shape(g.outputs[0]), &[b, m.vocab_size]);
+            let mut conv = vec![b];
+            conv.extend(f.conv_state_shape(&m));
+            let mut ssm = vec![b];
+            ssm.extend(f.ssm_state_shape(&m));
+            assert_eq!(g.shape(g.outputs[1]), conv.as_slice(), "{}", m.arch);
+            assert_eq!(g.shape(g.outputs[2]), ssm.as_slice(), "{}", m.arch);
         }
     }
 }

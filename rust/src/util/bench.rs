@@ -1,0 +1,179 @@
+//! Perf-tracking plumbing for the CI `bench-smoke` gate.
+//!
+//! The serving benches (`benches/serve_decode.rs`, `benches/serve_prefill.rs`)
+//! run in two modes: full reports for humans, and a quick mode
+//! (`XAMBA_BENCH_QUICK=1`) for CI. When `XAMBA_BENCH_JSON=<path>` is set
+//! they additionally merge their headline numbers (tokens/sec, TTFT)
+//! into one flat JSON object — the `BENCH_pr.json` artifact — which
+//! `xamba bench-check` then compares against the committed baseline,
+//! failing the build on any regression beyond the tolerance.
+//!
+//! Metric keys carry their own direction: `*_per_s` is higher-is-better,
+//! `*_ms` / `*_us` lower-is-better. A key the baseline tracks but the
+//! bench no longer emits is an error, so the gate cannot silently decay.
+
+use std::collections::BTreeMap;
+
+use super::json::Json;
+
+/// CI quick mode: fewer iterations / smaller sweeps, same metric keys.
+pub fn quick_mode() -> bool {
+    std::env::var("XAMBA_BENCH_QUICK").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+}
+
+/// Where to merge this bench's metrics, if anywhere.
+pub fn metrics_path() -> Option<String> {
+    std::env::var("XAMBA_BENCH_JSON").ok().filter(|s| !s.is_empty())
+}
+
+/// Merge `metrics` into the flat JSON object at `path` (created if
+/// absent) — benches run sequentially in CI and accumulate one artifact.
+pub fn record(path: &str, metrics: &[(String, f64)]) -> Result<(), String> {
+    let mut obj = match std::fs::read_to_string(path) {
+        Ok(src) => match Json::parse(&src)? {
+            Json::Obj(m) => m,
+            other => return Err(format!("{path}: expected a JSON object, got {other:?}")),
+        },
+        Err(_) => BTreeMap::new(),
+    };
+    for (k, v) in metrics {
+        obj.insert(k.clone(), Json::Num(*v));
+    }
+    std::fs::write(path, Json::Obj(obj).to_string_compact())
+        .map_err(|e| format!("write {path}: {e}"))
+}
+
+/// One baseline-vs-PR comparison.
+#[derive(Clone, Debug)]
+pub struct Check {
+    pub key: String,
+    pub baseline: f64,
+    pub got: f64,
+    /// Signed change in percent, oriented so positive = improvement.
+    pub change_pct: f64,
+    pub regressed: bool,
+}
+
+fn higher_is_better(key: &str) -> Result<bool, String> {
+    if key.ends_with("_per_s") {
+        Ok(true)
+    } else if key.ends_with("_ms") || key.ends_with("_us") {
+        Ok(false)
+    } else {
+        Err(format!(
+            "metric {key:?} has no direction suffix (want *_per_s, *_ms, or *_us)"
+        ))
+    }
+}
+
+/// Compare every baseline metric against the PR metrics. `tolerance` is
+/// the fractional regression allowed (0.20 = fail beyond 20%). Keys the
+/// PR emits but the baseline does not track are ignored (new metrics
+/// join the baseline when it is refreshed); keys the baseline tracks but
+/// the PR file lacks are an error.
+pub fn compare(pr: &Json, baseline: &Json, tolerance: f64) -> Result<Vec<Check>, String> {
+    let base = match baseline {
+        Json::Obj(m) => m,
+        _ => return Err("baseline is not a JSON object".into()),
+    };
+    let mut out = Vec::with_capacity(base.len());
+    for (key, bval) in base {
+        let b = bval
+            .as_f64()
+            .ok_or_else(|| format!("baseline metric {key:?} is not a number"))?;
+        let p = pr
+            .get(key)
+            .ok_or_else(|| format!("PR metrics no longer emit {key:?} — bench decayed?"))?
+            .as_f64()
+            .ok_or_else(|| format!("PR metric {key:?} is not a number"))?;
+        let higher = higher_is_better(key)?;
+        if b <= 0.0 {
+            return Err(format!("baseline metric {key:?} must be positive, got {b}"));
+        }
+        let (regressed, change_pct) = if higher {
+            (p < b * (1.0 - tolerance), (p - b) / b * 100.0)
+        } else {
+            (p > b * (1.0 + tolerance), (b - p) / b * 100.0)
+        };
+        out.push(Check { key: key.clone(), baseline: b, got: p, change_pct, regressed });
+    }
+    Ok(out)
+}
+
+/// [`compare`] over files on disk (the `xamba bench-check` entry point).
+pub fn check_files(
+    pr_path: &str,
+    baseline_path: &str,
+    tolerance: f64,
+) -> Result<Vec<Check>, String> {
+    let pr_src = std::fs::read_to_string(pr_path)
+        .map_err(|e| format!("read {pr_path}: {e} (did the benches run?)"))?;
+    let base_src = std::fs::read_to_string(baseline_path)
+        .map_err(|e| format!("read {baseline_path}: {e}"))?;
+    compare(&Json::parse(&pr_src)?, &Json::parse(&base_src)?, tolerance)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obj(pairs: &[(&str, f64)]) -> Json {
+        let mut m = BTreeMap::new();
+        for (k, v) in pairs {
+            m.insert(k.to_string(), Json::Num(*v));
+        }
+        Json::Obj(m)
+    }
+
+    #[test]
+    fn throughput_regressions_fail_in_the_right_direction() {
+        let base = obj(&[("decode_tok_per_s", 100.0)]);
+        // 25% slower -> regressed; 25% faster -> fine
+        let slow = compare(&obj(&[("decode_tok_per_s", 75.0)]), &base, 0.20).unwrap();
+        assert!(slow[0].regressed && slow[0].change_pct < 0.0);
+        let fast = compare(&obj(&[("decode_tok_per_s", 125.0)]), &base, 0.20).unwrap();
+        assert!(!fast[0].regressed && fast[0].change_pct > 0.0);
+        // within tolerance
+        let ok = compare(&obj(&[("decode_tok_per_s", 85.0)]), &base, 0.20).unwrap();
+        assert!(!ok[0].regressed);
+    }
+
+    #[test]
+    fn latency_regressions_fail_in_the_right_direction() {
+        let base = obj(&[("ttft_ms", 10.0)]);
+        let slow = compare(&obj(&[("ttft_ms", 13.0)]), &base, 0.20).unwrap();
+        assert!(slow[0].regressed, "TTFT +30% must regress");
+        let fast = compare(&obj(&[("ttft_ms", 7.0)]), &base, 0.20).unwrap();
+        assert!(!fast[0].regressed && fast[0].change_pct > 0.0);
+    }
+
+    #[test]
+    fn missing_or_directionless_metrics_are_errors() {
+        let base = obj(&[("ttft_ms", 10.0)]);
+        let err = compare(&obj(&[]), &base, 0.2).unwrap_err();
+        assert!(err.contains("ttft_ms"), "{err}");
+        let base = obj(&[("mystery", 1.0)]);
+        let err = compare(&obj(&[("mystery", 1.0)]), &base, 0.2).unwrap_err();
+        assert!(err.contains("direction suffix"), "{err}");
+        // extra PR-side keys are fine (they join the baseline later)
+        let base = obj(&[("a_ms", 1.0)]);
+        let pr = obj(&[("a_ms", 1.0), ("b_ms", 9.0)]);
+        assert_eq!(compare(&pr, &base, 0.2).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn record_merges_into_one_artifact() {
+        let path = std::env::temp_dir().join(format!(
+            "xamba_bench_test_{}.json",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        record(&path, &[("a_ms".into(), 1.5)]).unwrap();
+        record(&path, &[("b_per_s".into(), 42.0)]).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("a_ms").unwrap().as_f64(), Some(1.5));
+        assert_eq!(j.get("b_per_s").unwrap().as_f64(), Some(42.0));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -7,6 +7,7 @@
 //! histograms, an ASCII table printer for the bench harnesses, and a
 //! miniature property-testing framework.
 
+pub mod bench;
 pub mod corpus;
 pub mod json;
 pub mod prng;

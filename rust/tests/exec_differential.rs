@@ -229,6 +229,86 @@ fn nano_shape(arch: &str) -> xamba::config::ModelShape {
 }
 
 #[test]
+fn batched_prefill_is_bitwise_identical_per_sequence_for_both_families() {
+    // the admission scheduler's core invariant: a bucket-b batched
+    // prefill reproduces b single-sequence serve prefills bitwise —
+    // logits AND every per-layer state row — for BOTH model families,
+    // on the base graphs and their CumBA/ReduBA/ActiBA rewrites. The
+    // batched graph itself is also held to planned-vs-naive parity.
+    use xamba::models::params::full_spec;
+    use xamba::quality::param_inputs;
+
+    let mut rng = Prng::new(0xBA7C);
+    let (b, t) = (3usize, 10usize); // t=10, chunk 8: mamba-2 remainder chunk
+    for shape in [nano_shape("mamba"), nano_shape("mamba2")] {
+        let label = shape.name.clone();
+        let single = xamba::models::build_prefill_serve(&shape, t);
+        let batched = xamba::models::build_prefill_batched(&shape, b, t);
+        check_graph(&batched, &format!("{label} batched-prefill"), &mut rng);
+
+        let spec = full_spec(&shape);
+        let weights = rng.range_vec(spec.total(), -0.1, 0.1);
+        let params = param_inputs(&spec, &weights);
+        let tokens: Vec<Vec<i32>> = (0..b)
+            .map(|s| {
+                (0..t)
+                    .map(|i| ((s * 23 + i * 11) % shape.vocab_size) as i32)
+                    .collect()
+            })
+            .collect();
+
+        let variants: [(&str, Box<dyn Fn(&Graph) -> Graph>); 3] = [
+            ("base", Box::new(|g: &Graph| g.clone())),
+            (
+                "cumba+reduba",
+                Box::new(|g: &Graph| RedubaPass.apply(&CumbaPass.apply(g))),
+            ),
+            (
+                "actiba",
+                Box::new(|g: &Graph| ActibaPass::default().apply(g)),
+            ),
+        ];
+        for (vname, rewrite) in &variants {
+            let s_g = rewrite(&single);
+            let b_g = rewrite(&batched);
+            let mut singles = Vec::with_capacity(b);
+            for toks in &tokens {
+                let mut inputs = params.clone();
+                inputs.push(Tensor::i32(vec![t], toks.clone()));
+                singles.push(
+                    xamba::exec::run_once(&s_g, &inputs)
+                        .unwrap_or_else(|e| panic!("{label} {vname} single: {e}")),
+                );
+            }
+            let mut inputs = params.clone();
+            let flat: Vec<i32> = tokens.iter().flatten().copied().collect();
+            inputs.push(Tensor::i32(vec![b, t], flat));
+            let stacked = xamba::exec::run_once(&b_g, &inputs)
+                .unwrap_or_else(|e| panic!("{label} {vname} batched: {e}"));
+
+            let v = shape.vocab_size;
+            for s in 0..b {
+                assert_eq!(
+                    &stacked[0].as_f32()[s * v..(s + 1) * v],
+                    singles[s][0].as_f32(),
+                    "{label} {vname}: logits diverge for sequence {s}"
+                );
+                for j in 0..shape.n_layers {
+                    for (o, what) in [(1 + 2 * j, "conv"), (2 + 2 * j, "ssm")] {
+                        let row: usize = stacked[o].shape[1..].iter().product();
+                        assert_eq!(
+                            &stacked[o].as_f32()[s * row..(s + 1) * row],
+                            singles[s][o].as_f32(),
+                            "{label} {vname}: {what} state diverges (seq {s}, layer {j})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn serve_and_decode_graphs_match_naive_for_both_families() {
     // the planned serving path's graphs — serve prefill (last-position
     // logits + per-layer state outputs) and per-bucket batched decode —

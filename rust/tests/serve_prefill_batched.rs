@@ -1,0 +1,298 @@
+//! Integration tests of the batched-admission serving path: batched
+//! prefill buckets (per-sequence bitwise identical to single-sequence
+//! prefill), variable-length length-classes (no pad token ever touches
+//! SSM state), and the pool's work-stealing decode split (bitwise
+//! identical to serial at any worker count and chunk size).
+
+use std::time::Duration;
+
+use xamba::config::{ModelShape, ServeConfig};
+use xamba::coordinator::{
+    FinishReason, GenParams, PlannedServeModel, SeqState, ServeModel, Server,
+};
+
+/// Deliberately small shapes so debug-mode tests stay fast; vocab stays
+/// 256 (byte tokenizer).
+fn nano(arch: &str) -> ModelShape {
+    ModelShape {
+        name: format!("nano-{arch}"),
+        arch: arch.into(),
+        vocab_size: 256,
+        d_model: 32,
+        n_layers: 2,
+        d_state: 8,
+        d_conv: 3,
+        expand: 2,
+        dt_rank: 4,
+        headdim: 16,
+        chunk: 8,
+    }
+}
+
+fn prompt(i: usize, len: usize) -> Vec<i32> {
+    (0..len).map(|t| ((i * 31 + t * 7) % 256) as i32).collect()
+}
+
+#[test]
+fn batched_prefill_is_bitwise_identical_per_sequence() {
+    // both families, both variants, at the full window AND a shorter
+    // length-class (t = 6 < window = 8, exercising the lazily compiled
+    // graphs); every logits row and state must be bitwise equal to a
+    // lone prefill of the same tokens
+    for shape in [nano("mamba"), nano("mamba2")] {
+        for variant in ["baseline", "xamba"] {
+            let window = 8;
+            let weights = PlannedServeModel::random_weights(&shape, 7);
+            let mut model =
+                PlannedServeModel::new(&shape, &weights, window, &[1], 1, variant)
+                    .unwrap()
+                    .with_prefill_buckets(&[1, 2, 4])
+                    .unwrap();
+            for t in [window, 6usize] {
+                let prompts: Vec<Vec<i32>> = (0..4).map(|i| prompt(i, t)).collect();
+                let refs: Vec<&[i32]> = prompts.iter().map(|p| p.as_slice()).collect();
+                let singles: Vec<(Vec<f32>, SeqState)> =
+                    refs.iter().map(|s| model.prefill(s).unwrap()).collect();
+                let batched = model.prefill_batched(&refs).unwrap();
+                assert_eq!(batched.len(), 4);
+                for (i, (single, got)) in singles.iter().zip(&batched).enumerate() {
+                    assert_eq!(
+                        single.0, got.0,
+                        "{} {variant} t={t}: logits diverge for sequence {i}",
+                        shape.arch
+                    );
+                    assert_eq!(
+                        single.1, got.1,
+                        "{} {variant} t={t}: state diverges for sequence {i}",
+                        shape.arch
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prefill_length_classes_compile_once_and_reject_ragged_batches() {
+    let shape = nano("mamba");
+    let window = 8;
+    let weights = PlannedServeModel::random_weights(&shape, 11);
+    let mut model = PlannedServeModel::new(&shape, &weights, window, &[1], 1, "baseline")
+        .unwrap()
+        .with_prefill_buckets(&[1, 2])
+        .unwrap();
+    let base_compiles = model.plan_compiles();
+
+    // a ragged batch is the scheduler's bug, not a silent pad
+    let a = prompt(0, 8);
+    let b = prompt(1, 6);
+    let err = model
+        .prefill_batched(&[a.as_slice(), b.as_slice()])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("equal-length"), "{err}");
+
+    // out-of-range lengths are clear errors (min = d_conv - 1 = 2)
+    assert!(model.prefill(&prompt(0, 1)).is_err());
+    assert!(model.prefill(&prompt(0, 9)).is_err());
+
+    // each (bucket, length-class) pair compiles exactly once
+    let c = prompt(2, 6);
+    for _ in 0..3 {
+        model
+            .prefill_batched(&[b.as_slice(), c.as_slice()])
+            .unwrap();
+    }
+    let after_bucket2_t6 = model.plan_compiles();
+    assert_eq!(after_bucket2_t6, base_compiles + 1, "bucket-2/t-6 compiles once");
+    for _ in 0..2 {
+        model.prefill(&b).unwrap();
+    }
+    assert_eq!(
+        model.plan_compiles(),
+        after_bucket2_t6 + 1,
+        "single/t-6 length-class compiles once"
+    );
+
+    // non-bucket batch sizes fall back to the serial loop, no new plans
+    let d = prompt(3, 6);
+    model
+        .prefill_batched(&[b.as_slice(), c.as_slice(), d.as_slice()])
+        .unwrap();
+    assert_eq!(model.plan_compiles(), after_bucket2_t6 + 1);
+}
+
+#[test]
+fn work_stealing_pooled_decode_is_bitwise_identical_at_any_worker_count() {
+    // buckets [1, 2, 3, 4] make the auto and explicit chunkings uneven
+    // (e.g. bucket 4 with steal_chunk 3 -> [3, 1]); every combination
+    // must reproduce the serial reference bitwise, states included
+    let shape = nano("mamba2");
+    let window = 8;
+    let weights = PlannedServeModel::random_weights(&shape, 9);
+    let buckets = [1usize, 2, 3, 4];
+
+    let decode_rounds = |model: &mut PlannedServeModel| {
+        let mut states: Vec<SeqState> = Vec::new();
+        let mut toks: Vec<i32> = Vec::new();
+        for i in 0..4 {
+            let (logits, st) = model.prefill(&prompt(i, window)).unwrap();
+            let top = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i as i32)
+                .unwrap();
+            toks.push(top);
+            states.push(st);
+        }
+        let mut all_logits: Vec<Vec<Vec<f32>>> = Vec::new();
+        for _ in 0..3 {
+            let mut seqs: Vec<(&mut SeqState, i32)> =
+                states.iter_mut().zip(toks.iter().copied()).collect();
+            let step = model.decode(&mut seqs).unwrap();
+            drop(seqs);
+            toks = step
+                .iter()
+                .map(|l| {
+                    l.iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i as i32)
+                        .unwrap()
+                })
+                .collect();
+            all_logits.push(step);
+        }
+        (all_logits, states)
+    };
+
+    let mut serial =
+        PlannedServeModel::new(&shape, &weights, window, &buckets, 1, "baseline").unwrap();
+    let reference = decode_rounds(&mut serial);
+
+    for workers in [2usize, 4] {
+        for steal in [0usize, 1, 2, 3] {
+            let mut model = PlannedServeModel::new(
+                &shape, &weights, window, &buckets, workers, "baseline",
+            )
+            .unwrap()
+            .with_steal_chunk(steal)
+            .unwrap();
+            let got = decode_rounds(&mut model);
+            assert_eq!(
+                got, reference,
+                "{workers} workers / steal_chunk {steal} diverged from serial"
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_admissions_serve_end_to_end_with_mixed_prompt_lengths() {
+    // the full loop: concurrent requests in DIFFERENT length-classes
+    // (prompts shorter than, equal to, and longer than the window) are
+    // admitted in batches, decode interleaves, and everyone completes
+    let shape = nano("mamba");
+    let window = 8;
+    let weights = PlannedServeModel::random_weights(&shape, 21);
+    let cfg = ServeConfig {
+        max_slots: 8,
+        queue_cap: 32,
+        batch_wait_us: 100,
+        prefill_window: window,
+        ..Default::default()
+    };
+    let server = Server::start(
+        move || {
+            Ok(Box::new(
+                PlannedServeModel::new(&shape, &weights, window, &[1, 2, 4], 2, "xamba")?
+                    .with_prefill_buckets(&[1, 2, 4])?,
+            ) as Box<dyn ServeModel>)
+        },
+        cfg,
+    )
+    .unwrap();
+
+    let prompts: [&[u8]; 6] = [
+        b"hi",                        // shorter than the window
+        b"hello",                     //   (another class)
+        b"exactly8",                  // the full window
+        b"exactly8",                  //   (same class, batches together)
+        b"longer than the window",    // truncated to the trailing window
+        b"also longer than window!!", //   (same class)
+    ];
+    let rxs: Vec<_> = prompts
+        .iter()
+        .map(|p| server.submit(p, GenParams { max_new_tokens: 4, ..Default::default() }))
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(r.finish, FinishReason::Length, "request {i}");
+        assert_eq!(r.generated.len(), 4, "request {i}");
+    }
+    let m = server.shutdown();
+    assert_eq!(m.completed, 6);
+    assert_eq!(m.prefills, 6);
+    assert!(
+        m.prefill_calls >= 3,
+        "three length-classes cannot share a prefill round: {} rounds",
+        m.prefill_calls
+    );
+    assert!(m.prefill_batch_us.count() >= 1);
+}
+
+#[test]
+fn server_output_is_deterministic_across_workers_and_prefill_buckets() {
+    // greedy output must not depend on worker count, steal chunk, or
+    // whether admissions were batched — the bitwise invariants end-to-end
+    let shape = nano("mamba2");
+    let window = 8;
+    let weights = PlannedServeModel::random_weights(&shape, 33);
+    let mut outputs: Vec<Vec<Vec<u8>>> = Vec::new();
+    for (workers, steal, prefill_buckets) in
+        [(1usize, 0usize, vec![1usize]), (4, 1, vec![1, 2, 4])]
+    {
+        let (shape, weights) = (shape.clone(), weights.clone());
+        let cfg = ServeConfig {
+            max_slots: 4,
+            queue_cap: 16,
+            batch_wait_us: 100,
+            prefill_window: window,
+            ..Default::default()
+        };
+        let server = Server::start(
+            move || {
+                Ok(Box::new(
+                    PlannedServeModel::new(
+                        &shape, &weights, window, &[1, 2, 4], workers, "baseline",
+                    )?
+                    .with_prefill_buckets(&prefill_buckets)?
+                    .with_steal_chunk(steal)?,
+                ) as Box<dyn ServeModel>)
+            },
+            cfg,
+        )
+        .unwrap();
+        let rxs: Vec<_> = (0..3)
+            .map(|i| {
+                server.submit(
+                    &[b'a' + i as u8; 5],
+                    GenParams { max_new_tokens: 6, ..Default::default() },
+                )
+            })
+            .collect();
+        let mut generated = Vec::new();
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert_eq!(r.finish, FinishReason::Length);
+            generated.push(r.generated);
+        }
+        outputs.push(generated);
+        server.shutdown();
+    }
+    assert_eq!(
+        outputs[0], outputs[1],
+        "worker count / steal chunk / prefill buckets changed greedy output"
+    );
+}
