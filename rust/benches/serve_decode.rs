@@ -1,25 +1,29 @@
 //! Serving-decode micro-bench: serial vs pooled batched decode on the
 //! 130M-class block shapes of BOTH model families (Mamba-1 and Mamba-2)
-//! at buckets 1/4/8.
+//! at buckets 1/4/8 — and the f32 pooled path vs the reduced-precision
+//! serving dtypes (f16, i8).
 //!
-//! Both paths run the same compiled per-bucket decode graphs through
-//! `PlannedServeModel`; the pooled model splits each bucket into chunks
+//! All paths run compiled per-bucket decode graphs through
+//! `PlannedServeModel`; the pooled models split each bucket into chunks
 //! on the pool's work-stealing queue across 4 workers. Workers own their
-//! plans and arenas, while the ~170 MB parameter set is `Arc`-shared —
-//! one copy per model. Outputs are asserted bitwise-identical before
-//! timing.
+//! plans and arenas, while the parameter set is `Arc`-shared — one copy
+//! per (model, dtype): ~170 MB at f32, half at f16, a quarter at i8.
+//! f32 outputs are asserted bitwise-identical between serial and pooled
+//! before timing; quantized outputs are asserted finite (their
+//! correctness contract lives in the differential suites).
 //!
 //! Run: `cargo bench --bench serve_decode`
 //!
 //! CI (`bench-smoke`) runs it with `XAMBA_BENCH_QUICK=1` (one timed
 //! iteration) and `XAMBA_BENCH_JSON=BENCH_pr.json`, which appends the
-//! pooled tokens/sec per (family, bucket) to the artifact that `xamba
-//! bench-check` gates against the committed baseline.
+//! pooled tokens/sec per (family, dtype, bucket) to the artifact that
+//! `xamba bench-check` gates against the committed baseline.
 
 use std::time::Instant;
 
 use xamba::config::{presets, ModelShape};
 use xamba::coordinator::{PlannedServeModel, SeqState, ServeModel};
+use xamba::graph::DType;
 use xamba::util::{bench, Table};
 
 fn argmax(logits: &[f32]) -> i32 {
@@ -46,10 +50,29 @@ fn decode_step(model: &mut PlannedServeModel, states: &mut [SeqState], toks: &[i
     model.decode(&mut seqs).expect("decode");
 }
 
+/// Prefill `bucket` prompts on `model`, returning decode-ready states
+/// and first tokens.
+fn prefill_bucket(
+    model: &mut PlannedServeModel,
+    bucket: usize,
+    window: usize,
+) -> (Vec<SeqState>, Vec<i32>) {
+    let mut states = Vec::with_capacity(bucket);
+    let mut toks = Vec::with_capacity(bucket);
+    for i in 0..bucket {
+        let p: Vec<i32> = (0..window).map(|t| ((i * 17 + t * 5) % 256) as i32).collect();
+        let (l, s) = model.prefill(&p).expect("prefill");
+        states.push(s);
+        toks.push(argmax(&l));
+    }
+    (states, toks)
+}
+
 fn bench_family(key: &str, label: &str, shape: &ModelShape) {
     let window = 8usize;
     let workers = 4usize;
     let buckets = [1usize, 2, 4, 8];
+    let timed = [1usize, 4, 8];
     let iters = if bench::quick_mode() { 1usize } else { 3 };
 
     let weights = PlannedServeModel::random_weights(shape, 42);
@@ -64,22 +87,15 @@ fn bench_family(key: &str, label: &str, shape: &ModelShape) {
         .with_title(
             format!(
                 "serve_decode: serial vs {workers}-worker work-stealing pooled \
-                 batched decode ({label})"
+                 batched decode ({label}, f32)"
             )
             .as_str(),
         );
 
     let mut metrics: Vec<(String, f64)> = Vec::new();
-    for &bucket in &[1usize, 4, 8] {
-        let mut states: Vec<SeqState> = Vec::with_capacity(bucket);
-        let mut toks: Vec<i32> = Vec::with_capacity(bucket);
-        for i in 0..bucket {
-            let p: Vec<i32> =
-                (0..window).map(|t| ((i * 17 + t * 5) % 256) as i32).collect();
-            let (l, s) = serial.prefill(&p).expect("prefill");
-            states.push(s);
-            toks.push(argmax(&l));
-        }
+    let mut pooled_f32_ms: Vec<(usize, f64)> = Vec::new();
+    for &bucket in &timed {
+        let (states, toks) = prefill_bucket(&mut serial, bucket, window);
 
         // correctness gate: one step from identical states must agree
         {
@@ -104,6 +120,7 @@ fn bench_family(key: &str, label: &str, shape: &ModelShape) {
         let pooled_ms =
             time_ms(iters, || decode_step(&mut pooled, &mut st_pooled, &toks));
         let pooled_tok_per_s = bucket as f64 / (pooled_ms / 1e3);
+        pooled_f32_ms.push((bucket, pooled_ms));
 
         table.row(&[
             bucket.to_string(),
@@ -118,6 +135,55 @@ fn bench_family(key: &str, label: &str, shape: &ModelShape) {
         ));
     }
     println!("{table}");
+    drop(serial);
+
+    // reduced-precision serving dtypes: same pooled configuration, new
+    // plans + converted parameters per dtype; compared against the f32
+    // pooled wall clock at each bucket
+    for dtype in [DType::F16, DType::I8] {
+        let mut qmodel = PlannedServeModel::new_dtyped(
+            shape, &weights, window, &buckets, workers, "baseline", dtype,
+        )
+        .expect("quantized model");
+        let mut qtable =
+            Table::new(&["bucket", "f32 pooled", "pooled", "speedup vs f32", "tok/s"])
+                .with_title(
+                    format!("serve_decode: {label} at --dtype {}", dtype.name()).as_str(),
+                );
+        for (ti, &bucket) in timed.iter().enumerate() {
+            let (states, toks) = prefill_bucket(&mut qmodel, bucket, window);
+            {
+                // sanity gate: quantized decode emits finite logits
+                let mut st = states.clone();
+                let mut seqs: Vec<(&mut SeqState, i32)> =
+                    st.iter_mut().zip(toks.iter().copied()).collect();
+                let l = qmodel.decode(&mut seqs).expect("quantized decode");
+                drop(seqs);
+                assert!(
+                    l.iter().all(|row| row.iter().all(|v| v.is_finite())),
+                    "bucket {bucket}: non-finite {} logits",
+                    dtype.name()
+                );
+            }
+            let mut st = states.clone();
+            let ms = time_ms(iters, || decode_step(&mut qmodel, &mut st, &toks));
+            let tok_per_s = bucket as f64 / (ms / 1e3);
+            let f32_ms = pooled_f32_ms[ti].1;
+            qtable.row(&[
+                bucket.to_string(),
+                format!("{f32_ms:8.2} ms"),
+                format!("{ms:8.2} ms"),
+                format!("{:.2}x", f32_ms / ms),
+                format!("{tok_per_s:.1}"),
+            ]);
+            metrics.push((
+                format!("serve_decode_{key}_{}_b{bucket}_tok_per_s", dtype.name()),
+                tok_per_s,
+            ));
+        }
+        println!("{qtable}");
+    }
+
     if let Some(path) = bench::metrics_path() {
         bench::record(&path, &metrics).expect("record bench metrics");
     }
@@ -129,7 +195,8 @@ fn main() {
     bench_family("mamba1", "Mamba-1 130M block", &presets::block130m_mamba());
     bench_family("mamba2", "Mamba-2 130M block", &presets::block130m_mamba2());
     println!(
-        "serve_decode: pooled decode is bitwise-identical to serial for both \
-         families; speedup is wall-clock only."
+        "serve_decode: pooled f32 decode is bitwise-identical to serial for both \
+         families; f16/i8 rows run the quantized plans (differentially tested in \
+         tests/exec_differential.rs). Speedups are wall-clock only."
     );
 }

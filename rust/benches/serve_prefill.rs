@@ -19,6 +19,7 @@ use std::time::Instant;
 
 use xamba::config::{presets, ModelShape};
 use xamba::coordinator::{PlannedServeModel, ServeModel};
+use xamba::graph::DType;
 use xamba::util::{bench, Table};
 
 fn bench_family(key: &str, label: &str, shape: &ModelShape) {
@@ -98,6 +99,55 @@ fn bench_family(key: &str, label: &str, shape: &ModelShape) {
         ));
     }
     println!("{table}");
+    drop(model);
+
+    // reduced-precision prefill: one batched admission round (rate 4)
+    // per serving dtype, against the f32 batched round above
+    let qrate = 4usize;
+    let prompts: Vec<Vec<i32>> = (0..qrate)
+        .map(|i| (0..window).map(|t| ((i * 13 + t * 7) % 256) as i32).collect())
+        .collect();
+    let refs: Vec<&[i32]> = prompts.iter().map(|p| p.as_slice()).collect();
+    let mut qtable = Table::new(&["dtype", "batched mean TTFT (r=4)"]).with_title(
+        format!("serve_prefill: quantized admission prefill ({label})").as_str(),
+    );
+    for dtype in [DType::F16, DType::I8] {
+        let mut qmodel = PlannedServeModel::new_dtyped(
+            shape,
+            &weights,
+            window,
+            &[1],
+            1,
+            "baseline",
+            dtype,
+        )
+        .expect("quantized model")
+        .with_prefill_buckets(&[1, 4])
+        .expect("prefill buckets");
+        {
+            // sanity gate: quantized batched prefill emits finite logits
+            let out = qmodel.prefill_batched(&refs).expect("quantized prefill");
+            assert!(
+                out.iter().all(|(l, _)| l.iter().all(|v| v.is_finite())),
+                "{}: non-finite prefill logits",
+                dtype.name()
+            );
+        }
+        let mut ms = 0.0f64;
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            qmodel.prefill_batched(&refs).expect("quantized prefill");
+            ms += t0.elapsed().as_secs_f64() * 1e3;
+        }
+        ms /= iters as f64;
+        qtable.row(&[dtype.name().into(), format!("{ms:8.2} ms")]);
+        metrics.push((
+            format!("serve_prefill_{key}_{}_r{qrate}_ttft_ms", dtype.name()),
+            ms,
+        ));
+    }
+    println!("{qtable}");
+
     if let Some(path) = bench::metrics_path() {
         bench::record(&path, &metrics).expect("record bench metrics");
     }

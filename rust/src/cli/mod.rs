@@ -27,6 +27,7 @@ pub fn run(argv: &[String]) -> Result<(), String> {
         "census" => cmd_census(&args),
         "plu-fit" => cmd_plu_fit(&args),
         "verify" => cmd_verify(&args),
+        "quality" => cmd_quality(&args),
         "bench-check" => cmd_bench_check(&args),
         "help" | "" => {
             print!("{}", HELP);
@@ -43,7 +44,8 @@ USAGE: xamba <command> [--flag value ...]
 
 COMMANDS:
   serve     --model tiny-mamba|tiny-mamba2 --variant xamba
-            [--backend planned|pjrt] [--artifacts DIR] [--weights FILE]
+            [--backend planned|pjrt] [--dtype f32|f16|i8]
+            [--artifacts DIR] [--weights FILE]
             [--window 32] [--workers 0] [--buckets 1,2,4,8]
             [--prefill-buckets 1,2,4,8] [--steal-chunk 0]
             [--max-new 48] [--temperature 0.0]
@@ -51,16 +53,25 @@ COMMANDS:
             the default planned backend serves BOTH model families
             (mamba-1 and mamba-2) and needs no artifacts (untrained
             weights are random-initialized when no .bin file is found).
-            --prefill-buckets batches concurrent admissions into one
-            prefill graph call per length-class (cuts TTFT under load);
-            --steal-chunk sets the pool's work-stealing decode chunk
-            (0 = auto)
+            --dtype picks the serving precision (planned backend only):
+            f16 halves weight bytes, i8 runs the projection GEMMs on
+            int8 with dynamic activation scales; --prefill-buckets
+            batches concurrent admissions into one prefill graph call
+            per length-class (cuts TTFT under load); --steal-chunk sets
+            the pool's work-stealing decode chunk (0 = auto)
   profile   --model block130m-mamba2 [--t 4] [--passes cumba,reduba,actiba]
             [--config FILE] [--pipelined] [--energy]
             simulated-NPU per-op latency breakdown
   census    [--t 4]           Fig-5 operator census, Mamba vs Mamba-2
   plu-fit   [--fn silu|softplus] [--segments 32] [--adaptive]
   verify    --model tiny-mamba2 [--t 16]   differential pass verification
+  quality   --model tiny-mamba [--dtype f16|i8] [--window 16]
+            [--windows 8] [--weights FILE] [--workers 1]
+            [--budget 0.05]
+            evaluate LM quality (perplexity / top-1 / logit drift) at a
+            serving dtype against the f32 path; with --budget, exits
+            non-zero when the quantized perplexity regresses past the
+            given fraction (the CI quality-smoke gate)
   bench-check --pr BENCH_pr.json --baseline benches/baseline_serve.json
             [--max-regress 0.20]
             compare a bench metrics file against the committed baseline;
@@ -98,6 +109,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     if let Some(v) = args.get("variant") {
         cfg.variant = v.to_string();
     }
+    if let Some(d) = args.get("dtype") {
+        cfg.dtype = d.to_string();
+    }
     if let Some(w) = args.get("weights") {
         cfg.weights_path = w.to_string();
     }
@@ -120,6 +134,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     }
     if cfg.backend == "pjrt" {
         for flag in ["weights", "window", "workers", "prefill-buckets", "steal-chunk"] {
+            // --dtype is validated (not just warned about): see
+            // ServeConfig::validate via start_backend
             if args.get(flag).is_some() {
                 eprintln!(
                     "warning: --{flag} only applies to the planned backend; \
@@ -132,8 +148,12 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let temperature = args.get_f32("temperature").unwrap_or(0.0);
     let server = start_backend(&cfg).map_err(|e| format!("{e:#}"))?;
     eprintln!(
-        "serving {} ({}) on the {} backend — type a prompt per line, ctrl-d to stop",
-        cfg.model, cfg.variant, cfg.backend
+        "serving {} ({}, dtype {}) on the {} backend — type a prompt per line, \
+         ctrl-d to stop",
+        cfg.model,
+        cfg.variant,
+        if cfg.dtype.is_empty() { "f32" } else { &cfg.dtype },
+        cfg.backend
     );
     let stdin = std::io::stdin();
     let mut line = String::new();
@@ -293,6 +313,87 @@ fn cmd_bench_check(args: &Args) -> Result<(), String> {
             regressed.join(", ")
         ))
     }
+}
+
+fn cmd_quality(args: &Args) -> Result<(), String> {
+    use crate::graph::tensor::DType;
+
+    let name = args.get("model").unwrap_or("tiny-mamba");
+    let shape = presets::model_by_name(name).ok_or(format!("unknown model {name}"))?;
+    let dtype_str = args.get("dtype").unwrap_or("i8");
+    let dtype = DType::parse_serve(dtype_str)
+        .ok_or(format!("--dtype {dtype_str:?} unsupported (want f32, f16, or i8)"))?;
+    let window = args.get_usize("window").unwrap_or(16);
+    let windows = args.get_usize("windows").unwrap_or(8);
+    let workers = args.get_usize("workers").unwrap_or(1);
+    let weights = match args.get("weights") {
+        Some(path) => crate::models::params::load_f32_bin(path)?,
+        None => crate::coordinator::PlannedServeModel::random_weights(&shape, 42),
+    };
+    let graph = crate::models::build_prefill(&shape, window);
+    let text = crate::util::corpus::corpus(windows * (window + 1) + window, 1234);
+
+    let (exact, logits) = crate::quality::eval_lm(
+        &shape, &graph, &weights, &text, window, windows, None, workers,
+    )?;
+    let (quant, _) = crate::quality::eval_lm_dtyped(
+        &shape,
+        &graph,
+        &weights,
+        dtype,
+        &text,
+        window,
+        windows,
+        Some(&logits),
+        workers,
+    )?;
+
+    let mut table = crate::util::Table::new(&["variant", "ppl", "top1", "logit mae", "logit max"])
+        .with_title(&format!(
+            "quality: {} over {} windows of {} (f32 vs {})",
+            shape.name,
+            exact.windows,
+            window,
+            dtype.name()
+        ));
+    table.row(&[
+        "f32".into(),
+        format!("{:.4}", exact.ppl),
+        format!("{:.4}", exact.top1),
+        "0".into(),
+        "0".into(),
+    ]);
+    table.row(&[
+        dtype.name().into(),
+        format!("{:.4}", quant.ppl),
+        format!("{:.4}", quant.top1),
+        format!("{:.3e}", quant.logit_mae),
+        format!("{:.3e}", quant.logit_max),
+    ]);
+    println!("{}", table.render());
+    let delta = (quant.ppl - exact.ppl) / exact.ppl;
+    println!(
+        "ppl delta vs f32: {:+.3}% (top1 {:+.4})",
+        delta * 100.0,
+        quant.top1 - exact.top1
+    );
+    if let Some(budget) = args.get_f32("budget") {
+        if delta > budget as f64 {
+            return Err(format!(
+                "quality: {} perplexity regressed {:.3}% past the {:.3}% budget",
+                dtype.name(),
+                delta * 100.0,
+                budget * 100.0
+            ));
+        }
+        println!(
+            "quality: {} ppl delta {:+.3}% within the {:.3}% budget",
+            dtype.name(),
+            delta * 100.0,
+            budget * 100.0
+        );
+    }
+    Ok(())
 }
 
 fn cmd_verify(args: &Args) -> Result<(), String> {

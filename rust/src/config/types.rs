@@ -192,6 +192,11 @@ pub struct ServeConfig {
     pub model: String,
     /// "baseline" | "xamba".
     pub variant: String,
+    /// Serving dtype of the planned backend: "f32" (default) | "f16"
+    /// (half-precision weights + compute, f32 accumulation) | "i8"
+    /// (per-tensor symmetric int8 projection GEMMs, dynamic activation
+    /// scales). The pjrt backend executes f32 artifacts only.
+    pub dtype: String,
     /// Decode batch buckets available as compiled executables.
     pub decode_buckets: Vec<usize>,
     /// Batched-prefill admission buckets of the planned backend: how
@@ -231,6 +236,7 @@ impl Default for ServeConfig {
             artifacts_dir: "artifacts".into(),
             model: "tiny-mamba".into(),
             variant: "xamba".into(),
+            dtype: "f32".into(),
             decode_buckets: vec![1, 2, 4, 8],
             prefill_buckets: vec![1, 2, 4, 8],
             steal_chunk: 0,
@@ -278,6 +284,28 @@ impl ServeConfig {
                 ))
             }
         }
+        match crate::graph::tensor::DType::parse_serve(&self.dtype) {
+            None => {
+                let supported = crate::graph::tensor::SERVE_DTYPES
+                    .iter()
+                    .map(|d| d.name())
+                    .collect::<Vec<_>>()
+                    .join(", ");
+                return Err(format!(
+                    "unknown serve dtype {:?} (supported dtypes: {supported})",
+                    self.dtype
+                ));
+            }
+            Some(crate::graph::tensor::DType::F32) => {}
+            Some(d) if !planned => {
+                return Err(format!(
+                    "serve dtype {:?} requires the planned backend \
+                     (the pjrt backend executes f32 AOT artifacts)",
+                    d.name()
+                ));
+            }
+            Some(_) => {}
+        }
         if self.decode_buckets.is_empty() || self.decode_buckets.contains(&0) {
             return Err(
                 "serve decode_buckets must be a non-empty list of positive batch sizes"
@@ -314,6 +342,7 @@ impl ServeConfig {
             artifacts_dir: doc.str_or(&k("artifacts_dir"), &d.artifacts_dir).into(),
             model: doc.str_or(&k("model"), &d.model).into(),
             variant: doc.str_or(&k("variant"), &d.variant).into(),
+            dtype: doc.str_or(&k("dtype"), &d.dtype).into(),
             decode_buckets: bucket_list("decode_buckets", &d.decode_buckets),
             prefill_buckets: bucket_list("prefill_buckets", &d.prefill_buckets),
             steal_chunk: doc.i64_or(&k("steal_chunk"), d.steal_chunk as i64).max(0)
@@ -410,6 +439,35 @@ mod tests {
         let bad = ServeConfig { variant: "int8".into(), ..Default::default() };
         let msg = bad.validate().unwrap_err();
         assert!(msg.contains("unknown serve variant") && msg.contains("int8"), "{msg}");
+
+        // dtype validation: unknown strings name every supported dtype
+        for wrong in ["int8", "fp16", "bf16", "f64"] {
+            let bad = ServeConfig { dtype: wrong.into(), ..Default::default() };
+            let msg = bad.validate().unwrap_err();
+            assert!(msg.contains("unknown serve dtype") && msg.contains(wrong), "{msg}");
+            assert!(
+                msg.contains("f32") && msg.contains("f16") && msg.contains("i8"),
+                "actionable list missing: {msg}"
+            );
+        }
+        for ok_dtype in ["", "f32", "f16", "i8"] {
+            let c = ServeConfig { dtype: ok_dtype.into(), ..Default::default() };
+            assert_eq!(c.validate(), Ok(()), "dtype {ok_dtype:?} must validate");
+        }
+        // quantized serving is a planned-backend feature
+        let bad = ServeConfig {
+            backend: "pjrt".into(),
+            dtype: "i8".into(),
+            ..Default::default()
+        };
+        let msg = bad.validate().unwrap_err();
+        assert!(msg.contains("planned backend"), "{msg}");
+        let ok_pjrt = ServeConfig {
+            backend: "pjrt".into(),
+            dtype: "f32".into(),
+            ..Default::default()
+        };
+        assert_eq!(ok_pjrt.validate(), Ok(()));
 
         let bad = ServeConfig { decode_buckets: vec![], ..Default::default() };
         assert!(bad.validate().unwrap_err().contains("decode_buckets"));

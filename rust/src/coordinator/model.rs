@@ -10,11 +10,12 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use crate::config::{presets, ModelShape, ServeConfig};
-use crate::exec::{plan_key, ExecJob, PlanCache, WorkerPool};
+use crate::exec::{plan_key_dtyped, ExecJob, PlanCache, WorkerPool};
+use crate::graph::tensor::DType;
 use crate::graph::{Graph, Tensor};
 use crate::models::params::{full_spec, load_f32_bin};
 use crate::models::ServeFamily;
-use crate::passes::{actiba::ActibaPass, Pass};
+use crate::passes::{actiba::ActibaPass, quantize, Pass};
 use crate::quality::param_inputs;
 use crate::runtime::{Engine, HostTensor, Manifest, ProgramEntry};
 use crate::util::Prng;
@@ -234,6 +235,15 @@ pub struct PlannedServeModel {
     /// Graph rewrite selector ("baseline" | "xamba"), kept for the
     /// lazily-compiled prefill length-class / bucket graphs.
     variant: String,
+    /// Serving dtype (f32 | f16 | i8): selects the quantization pass
+    /// applied after the variant rewrite and the `.f16`/`.i8` plan-key
+    /// suffix. The external ABI is dtype-oblivious — tokens stay i32,
+    /// states stay f32 host tensors.
+    dtype: DType,
+    /// Per-parameter serving dtypes (planned once from the serve-prefill
+    /// graph; every lazily-built graph reuses the same assignment, so
+    /// the `Arc`-shared converted parameters fit all of them).
+    weight_dtypes: Vec<DType>,
     /// Per-layer, per-sequence state shapes (family-dependent).
     conv_shape: Vec<usize>,
     ssm_shape: Vec<usize>,
@@ -266,6 +276,20 @@ fn rewrite_graph(variant: &str, g: Graph) -> Result<Graph, String> {
     }
 }
 
+/// The full serving pipeline for one graph: variant rewrite first, then
+/// the quantization pass (so CumBA/ReduBA/ActiBA rewrites are retyped,
+/// never undone). `weight_dtypes` must be the model-wide plan — every
+/// graph of the model shares one converted parameter set.
+fn build_serve_graph(
+    variant: &str,
+    dtype: DType,
+    weight_dtypes: &[DType],
+    g: Graph,
+) -> Result<Graph, String> {
+    let g = rewrite_graph(variant, g)?;
+    quantize::quantize_graph(&g, dtype, weight_dtypes)
+}
+
 /// One compiled decode bucket: size, plan-cache key (precomputed — the
 /// decode hot path clones refcounts, not strings), and the IR graph the
 /// pool workers compile from.
@@ -287,6 +311,25 @@ impl PlannedServeModel {
         buckets: &[usize],
         workers: usize,
         variant: &str,
+    ) -> Result<Self> {
+        Self::new_dtyped(shape, weights, window, buckets, workers, variant, DType::F32)
+    }
+
+    /// [`PlannedServeModel::new`] at an explicit serving dtype. f16/i8
+    /// graphs come out of `passes::quantize` (applied after the variant
+    /// rewrite), parameters are converted once per model to the planned
+    /// per-weight dtypes and `Arc`-shared as usual, and every plan-cache
+    /// key carries the dtype suffix (`mamba2.decode_b4.i8`) so one cache
+    /// can hold several precisions of the same program.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_dtyped(
+        shape: &ModelShape,
+        weights: &[f32],
+        window: usize,
+        buckets: &[usize],
+        workers: usize,
+        variant: &str,
+        dtype: DType,
     ) -> Result<Self> {
         let family = ServeFamily::from_arch(&shape.arch).map_err(|e| anyhow!(e))?;
         let spec = full_spec(shape);
@@ -310,19 +353,35 @@ impl PlannedServeModel {
         if buckets.is_empty() || buckets[0] == 0 {
             return Err(anyhow!("decode buckets must be non-empty and positive"));
         }
-        let rewrite = |g: Graph| -> Result<Graph> {
-            rewrite_graph(variant, g).map_err(|e| anyhow!(e))
+
+        // plan per-weight dtypes ONCE, from the (variant-rewritten)
+        // serve-prefill graph; the decision is structural, so decode and
+        // batched-prefill graphs reach the same assignment — and if one
+        // ever disagreed, quantize_graph inserts an explicit widen
+        // instead of corrupting the shared parameters
+        let base_prefill = rewrite_graph(variant, family.build_prefill_serve(shape, window))
+            .map_err(|e| anyhow!(e))?;
+        let weight_dtypes =
+            quantize::plan_weight_dtypes(&base_prefill, spec.entries.len(), dtype);
+        let build = |g: Graph| -> Result<Graph> {
+            build_serve_graph(variant, dtype, &weight_dtypes, g).map_err(|e| anyhow!(e))
         };
 
-        let params = Arc::new(param_inputs(&spec, weights));
+        let params: Vec<Tensor> = param_inputs(&spec, weights)
+            .into_iter()
+            .zip(&weight_dtypes)
+            .map(|(t, &d)| if t.dtype() == d { t } else { t.to_dtype(d) })
+            .collect();
+        let params = Arc::new(params);
         let mut cache = PlanCache::new();
-        let prefill_key = plan_key(family.arch(), "prefill");
-        let prefill = rewrite(family.build_prefill_serve(shape, window))?;
+        let prefill_key = plan_key_dtyped(family.arch(), "prefill", dtype);
+        let prefill = quantize::quantize_graph(&base_prefill, dtype, &weight_dtypes)
+            .map_err(|e| anyhow!(e))?;
         cache.insert_with(&prefill_key, &prefill, &params).map_err(|e| anyhow!(e))?;
         let mut decode_graphs = Vec::with_capacity(buckets.len());
         for &b in &buckets {
-            let g = Arc::new(rewrite(family.build_decode_batched(shape, b))?);
-            let key = plan_key(family.arch(), &format!("decode_b{b}"));
+            let g = Arc::new(build(family.build_decode_batched(shape, b))?);
+            let key = plan_key_dtyped(family.arch(), &format!("decode_b{b}"), dtype);
             cache.insert_with(&key, &g, &params).map_err(|e| anyhow!(e))?;
             decode_graphs.push(DecodeEntry { bucket: b, key, graph: g });
         }
@@ -331,6 +390,8 @@ impl PlannedServeModel {
             shape: shape.clone(),
             family,
             variant: variant.to_string(),
+            dtype,
+            weight_dtypes,
             conv_shape: family.conv_state_shape(shape),
             ssm_shape: family.ssm_state_shape(shape),
             window,
@@ -406,13 +467,17 @@ impl PlannedServeModel {
         } else {
             cfg.workers
         };
-        Self::new(
+        let dtype = DType::parse_serve(&cfg.dtype).ok_or_else(|| {
+            anyhow!("unknown serve dtype {:?} (supported: f32, f16, i8)", cfg.dtype)
+        })?;
+        Self::new_dtyped(
             &shape,
             &weights,
             cfg.prefill_window,
             &cfg.decode_buckets,
             workers,
             &cfg.variant,
+            dtype,
         )?
         .with_prefill_buckets(&cfg.prefill_buckets)?
         .with_steal_chunk(cfg.steal_chunk)
@@ -440,6 +505,20 @@ impl PlannedServeModel {
     /// The model family this backend serves (selected by `shape.arch`).
     pub fn family(&self) -> ServeFamily {
         self.family
+    }
+
+    /// The serving dtype every graph of this model executes at.
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    /// How many parameters were converted to reduced precision by the
+    /// quantization plan (0 at f32).
+    pub fn quantized_weight_count(&self) -> usize {
+        self.weight_dtypes
+            .iter()
+            .filter(|d| matches!(d, DType::F16 | DType::I8))
+            .count()
     }
 
     /// Flat length of one layer's per-sequence conv / ssm state.
@@ -577,9 +656,17 @@ impl PlannedServeModel {
     /// pooled output bitwise-identical to serial). The target chunk size
     /// is `steal_chunk`, or ceil(b / workers) when 0 (auto). None = run
     /// serially (no pool, or no multi-chunk decomposition exists).
+    ///
+    /// i8 buckets never split: dynamic per-tensor activation scales
+    /// couple the batch rows (a bucket-4 graph quantizes one stacked
+    /// activation tensor), so chunked execution would legitimately
+    /// differ from the whole-bucket plan. Running the compiled bucket
+    /// graph unsplit keeps i8 decode deterministic and identical at
+    /// every worker count. f16 rounding is elementwise, so f16 keeps
+    /// the full work-stealing split.
     fn pool_chunks(&self, b: usize) -> Option<Vec<usize>> {
         let w = self.pool.as_ref()?.workers();
-        if w <= 1 || b < 2 {
+        if w <= 1 || b < 2 || self.dtype == DType::I8 {
             return None;
         }
         let cap = if self.steal_chunk > 0 { self.steal_chunk } else { b.div_ceil(w) };
@@ -629,12 +716,22 @@ impl ServeModel for PlannedServeModel {
             let key = self.prefill_key.clone();
             self.cache.run(&key, tail)
         } else {
-            let key = plan_key(self.family.arch(), &format!("prefill_t{t}"));
-            let Self { cache, family, shape, variant, params, .. } = self;
+            let key =
+                plan_key_dtyped(self.family.arch(), &format!("prefill_t{t}"), self.dtype);
+            let Self { cache, family, shape, variant, params, dtype, weight_dtypes, .. } =
+                self;
             let family = *family;
+            let dtype = *dtype;
             cache.run_or_compile_with(
                 &key,
-                || rewrite_graph(variant, family.build_prefill_serve(shape, t)),
+                || {
+                    build_serve_graph(
+                        variant,
+                        dtype,
+                        weight_dtypes,
+                        family.build_prefill_serve(shape, t),
+                    )
+                },
                 params,
                 tail,
             )
@@ -685,19 +782,32 @@ impl ServeModel for PlannedServeModel {
                 self.window
             ));
         }
-        let key = plan_key(self.family.arch(), &format!("prefill_b{b}_t{t}"));
+        let key = plan_key_dtyped(
+            self.family.arch(),
+            &format!("prefill_b{b}_t{t}"),
+            self.dtype,
+        );
         let mut flat = Vec::with_capacity(b * t);
         for s in seqs {
             flat.extend_from_slice(s);
         }
         let tail = vec![Tensor::i32(vec![b, t], flat)];
         let outs = {
-            let Self { cache, family, shape, variant, params, .. } = self;
+            let Self { cache, family, shape, variant, params, dtype, weight_dtypes, .. } =
+                self;
             let family = *family;
+            let dtype = *dtype;
             cache
                 .run_or_compile_with(
                     &key,
-                    || rewrite_graph(variant, family.build_prefill_batched(shape, b, t)),
+                    || {
+                        build_serve_graph(
+                            variant,
+                            dtype,
+                            weight_dtypes,
+                            family.build_prefill_batched(shape, b, t),
+                        )
+                    },
                     params,
                     tail,
                 )

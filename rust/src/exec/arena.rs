@@ -1,14 +1,21 @@
-//! Liveness-driven buffer arena for the planned executor.
+//! Liveness-driven, byte-addressed buffer arena for the planned executor.
 //!
 //! Plan compilation assigns every intermediate value to a numbered slot
 //! via [`SlotAlloc`]; slots are released at a value's last use and reused
 //! by later values, so the arena footprint tracks the graph's *live-range
-//! width*, not its node count. The [`Arena`] itself is allocated once per
-//! plan and reused across every `execute` call — steady-state execution
-//! touches the heap zero times per node.
+//! width*, not its node count. Slots are sized in BYTES and backed by
+//! 8-byte-aligned buffers, so liveness reuse works across dtypes: an f32
+//! value's slot can later hold an i8 or f16 value of any numel that fits
+//! (mixed-precision plans share one slot pool instead of one pool per
+//! dtype). Each slot also carries a dynamic per-tensor scale — written by
+//! whichever kernel last produced an i8 value there, read by its
+//! consumers. The [`Arena`] itself is allocated once per plan and reused
+//! across every `execute` call — steady-state execution touches the heap
+//! zero times per node.
 
 /// Compile-time slot assignment: first-fit reuse off a free list, with
-/// each slot's capacity grown to the largest value ever placed in it.
+/// each slot's capacity (in bytes) grown to the largest value ever
+/// placed in it.
 pub(crate) struct SlotAlloc {
     pub sizes: Vec<usize>,
     free: Vec<usize>,
@@ -19,13 +26,13 @@ impl SlotAlloc {
         Self { sizes: Vec::new(), free: Vec::new() }
     }
 
-    /// Assign a slot able to hold `numel` elements.
-    pub fn alloc(&mut self, numel: usize) -> usize {
+    /// Assign a slot able to hold `bytes` bytes.
+    pub fn alloc(&mut self, bytes: usize) -> usize {
         if let Some(s) = self.free.pop() {
-            self.sizes[s] = self.sizes[s].max(numel);
+            self.sizes[s] = self.sizes[s].max(bytes);
             s
         } else {
-            self.sizes.push(numel);
+            self.sizes.push(bytes);
             self.sizes.len() - 1
         }
     }
@@ -37,43 +44,75 @@ impl SlotAlloc {
     }
 }
 
+/// Marker for element types the arena may reinterpret its byte buffers
+/// as. Everything here is plain-old-data with alignment <= 8 (the
+/// `u64`-backed buffers' alignment), which is what makes the casts in
+/// [`cast_slice`] / [`cast_slice_mut`] sound.
+pub(crate) trait Pod: Copy {}
+impl Pod for f32 {}
+impl Pod for i32 {}
+impl Pod for u16 {}
+impl Pod for i8 {}
+
+/// Reinterpret an 8-byte-aligned buffer as `n` elements of `T`. The
+/// length bound is a real assert (not debug-only): it is the entire
+/// memory-safety argument, and its cost is nothing next to the kernel
+/// loop behind every call.
+pub(crate) fn cast_slice<T: Pod>(buf: &[u64], n: usize) -> &[T] {
+    assert!(n * std::mem::size_of::<T>() <= buf.len() * 8, "slot too small");
+    // SAFETY: T is Pod (any bit pattern valid, no drop), align_of::<T>()
+    // <= 8 == align_of::<u64>(), and the length is asserted above.
+    unsafe { std::slice::from_raw_parts(buf.as_ptr() as *const T, n) }
+}
+
+/// Mutable variant of [`cast_slice`].
+pub(crate) fn cast_slice_mut<T: Pod>(buf: &mut [u64], n: usize) -> &mut [T] {
+    assert!(n * std::mem::size_of::<T>() <= buf.len() * 8, "slot too small");
+    // SAFETY: as in `cast_slice`, plus exclusive access via `&mut`.
+    unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut T, n) }
+}
+
 /// The runtime buffers backing the slots — owned by the plan, reused
 /// across `execute` calls.
 pub struct Arena {
-    pub(crate) f: Vec<Vec<f32>>,
-    pub(crate) i: Vec<Vec<i32>>,
+    /// 8-byte-aligned backing storage, `sizes[i].div_ceil(8)` words each.
+    pub(crate) bufs: Vec<Vec<u64>>,
+    /// Per-slot dynamic i8 scale: set when an i8 value is produced into
+    /// the slot, read when it is consumed. Meaningless for other dtypes.
+    pub(crate) scales: Vec<f32>,
 }
 
 impl Arena {
-    pub(crate) fn from_sizes(f_sizes: &[usize], i_sizes: &[usize]) -> Self {
+    pub(crate) fn from_sizes(byte_sizes: &[usize]) -> Self {
         Self {
-            f: f_sizes.iter().map(|&n| vec![0.0f32; n]).collect(),
-            i: i_sizes.iter().map(|&n| vec![0i32; n]).collect(),
+            bufs: byte_sizes.iter().map(|&b| vec![0u64; b.div_ceil(8)]).collect(),
+            scales: vec![1.0; byte_sizes.len()],
         }
     }
 
-    /// Move an f32 buffer out (so the kernel can hold `&mut` to it while
-    /// reading other slots); pair with [`Arena::put_f`].
-    pub(crate) fn take_f(&mut self, slot: usize) -> Vec<f32> {
-        std::mem::take(&mut self.f[slot])
+    /// Move a slot's buffer out (so the kernel can hold `&mut` to it
+    /// while reading other slots); pair with [`Arena::put`].
+    pub(crate) fn take(&mut self, slot: usize) -> Vec<u64> {
+        std::mem::take(&mut self.bufs[slot])
     }
 
-    pub(crate) fn put_f(&mut self, slot: usize, buf: Vec<f32>) {
-        self.f[slot] = buf;
+    pub(crate) fn put(&mut self, slot: usize, buf: Vec<u64>) {
+        self.bufs[slot] = buf;
     }
 
-    pub(crate) fn take_i(&mut self, slot: usize) -> Vec<i32> {
-        std::mem::take(&mut self.i[slot])
+    /// Borrow `n` elements of slot `slot` as `T`.
+    pub(crate) fn view<T: Pod>(&self, slot: usize, n: usize) -> &[T] {
+        cast_slice(&self.bufs[slot], n)
     }
 
-    pub(crate) fn put_i(&mut self, slot: usize, buf: Vec<i32>) {
-        self.i[slot] = buf;
+    /// Number of slots.
+    pub(crate) fn slots(&self) -> usize {
+        self.bufs.len()
     }
 
     /// Total bytes held by the arena (footprint reporting).
     pub fn bytes(&self) -> usize {
-        self.f.iter().map(|b| b.len() * 4).sum::<usize>()
-            + self.i.iter().map(|b| b.len() * 4).sum::<usize>()
+        self.bufs.iter().map(|b| b.len() * 8).sum()
     }
 }
 
@@ -95,11 +134,54 @@ mod tests {
     }
 
     #[test]
-    fn arena_buffers_match_sizes() {
-        let a = Arena::from_sizes(&[4, 2], &[3]);
-        assert_eq!(a.f.len(), 2);
-        assert_eq!(a.f[0].len(), 4);
-        assert_eq!(a.i[0].len(), 3);
-        assert_eq!(a.bytes(), (4 + 2 + 3) * 4);
+    fn cross_dtype_reuse_shares_one_slot_pool() {
+        // 16 f32 elements (64 B) release, then 60 i8 elements (60 B)
+        // fit in the same slot — the byte arena does not care what the
+        // bits mean
+        let mut a = SlotAlloc::new();
+        let s0 = a.alloc(16 * 4);
+        a.release(s0);
+        let s1 = a.alloc(60);
+        assert_eq!(s1, s0);
+        assert_eq!(a.sizes[s0], 64);
+    }
+
+    #[test]
+    fn arena_buffers_round_up_to_words() {
+        let a = Arena::from_sizes(&[16, 7, 3]);
+        assert_eq!(a.bufs.len(), 3);
+        assert_eq!(a.bufs[0].len(), 2);
+        assert_eq!(a.bufs[1].len(), 1);
+        assert_eq!(a.bytes(), 16 + 8 + 8);
+        assert_eq!(a.scales.len(), 3);
+    }
+
+    #[test]
+    fn typed_views_read_what_was_written() {
+        let mut a = Arena::from_sizes(&[12]);
+        {
+            let mut buf = a.take(0);
+            let f = cast_slice_mut::<f32>(&mut buf, 3);
+            f.copy_from_slice(&[1.5, -2.0, 3.25]);
+            a.put(0, buf);
+        }
+        assert_eq!(a.view::<f32>(0, 3), &[1.5, -2.0, 3.25]);
+        // the same bytes reinterpreted as i8 see the f32 bit patterns,
+        // which is exactly what cross-dtype slot reuse relies on
+        {
+            let mut buf = a.take(0);
+            let q = cast_slice_mut::<i8>(&mut buf, 5);
+            q.copy_from_slice(&[1, -2, 3, -4, 5]);
+            a.put(0, buf);
+        }
+        assert_eq!(a.view::<i8>(0, 5), &[1, -2, 3, -4, 5]);
+        // f16 bits in the same slot
+        {
+            let mut buf = a.take(0);
+            let hsl = cast_slice_mut::<u16>(&mut buf, 2);
+            hsl.copy_from_slice(&[0x3c00, 0xc000]); // 1.0, -2.0
+            a.put(0, buf);
+        }
+        assert_eq!(a.view::<u16>(0, 2), &[0x3c00, 0xc000]);
     }
 }

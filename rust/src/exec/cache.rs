@@ -15,7 +15,7 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::graph::{Graph, Tensor};
+use crate::graph::{DType, Graph, Tensor};
 
 use super::plan::ExecutionPlan;
 
@@ -27,6 +27,18 @@ use super::plan::ExecutionPlan;
 /// hot path clones refcounts, not strings.
 pub fn plan_key(family: &str, program: &str) -> Arc<str> {
     format!("{family}.{program}").into()
+}
+
+/// [`plan_key`] qualified by serving dtype — `mamba2.decode_b4.i8`.
+/// f32 keeps the unsuffixed key, so pre-quantization cache keys (and
+/// everything logging them) are unchanged. Mixed-precision serving
+/// compiles once per (program, bucket, dtype): the same program at two
+/// dtypes is two different plans with different kernels and arenas.
+pub fn plan_key_dtyped(family: &str, program: &str, dtype: DType) -> Arc<str> {
+    match dtype {
+        DType::F32 => plan_key(family, program),
+        d => format!("{family}.{program}.{}", d.name()).into(),
+    }
 }
 
 /// Keyed store of compiled [`ExecutionPlan`]s. Keys identify a
@@ -247,5 +259,22 @@ mod tests {
         assert_eq!(&*plan_key("mamba", "prefill"), "mamba.prefill");
         assert_eq!(&*plan_key("mamba2", "decode_b4"), "mamba2.decode_b4");
         assert_ne!(plan_key("mamba", "decode_b1"), plan_key("mamba2", "decode_b1"));
+    }
+
+    #[test]
+    fn dtyped_plan_keys_separate_precisions() {
+        assert_eq!(
+            &*plan_key_dtyped("mamba2", "decode_b4", DType::F32),
+            "mamba2.decode_b4",
+            "f32 keeps the legacy unsuffixed key"
+        );
+        assert_eq!(
+            &*plan_key_dtyped("mamba2", "decode_b4", DType::I8),
+            "mamba2.decode_b4.i8"
+        );
+        assert_eq!(
+            &*plan_key_dtyped("mamba", "prefill_t8", DType::F16),
+            "mamba.prefill_t8.f16"
+        );
     }
 }

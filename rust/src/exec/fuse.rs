@@ -6,6 +6,17 @@
 //! intermediate tensors are never materialized. Stage arithmetic reuses
 //! the exact scalar helpers of the unfused kernels, so fusion is bitwise
 //! neutral.
+//!
+//! Chains also see **through `Reshape`**: a reshape is a row-major
+//! identity on the data, so it joins a chain as a transparent member
+//! (contributing no stage) instead of materializing a copy —
+//! `Unary -> Reshape -> Unary` is one fused pass, and a reshape between
+//! a producer and its elementwise epilogue no longer breaks fusion.
+//!
+//! Chains form at f32 and f16 alike (a chain is dtype-homogeneous by
+//! construction: every stage preserves its node's dtype). The f16
+//! executor rounds to storage precision after every stage, keeping
+//! fusion bitwise-identical to running the nodes one by one.
 
 use std::sync::Arc;
 
@@ -13,6 +24,7 @@ use crate::graph::op::{BinKind, Op};
 use crate::graph::tensor::DType;
 use crate::graph::{Graph, NodeId};
 use crate::plu::PluTable;
+use crate::util::f16::f16_to_f32;
 
 use super::kernels::{apply_binary, apply_unary};
 
@@ -75,39 +87,53 @@ pub struct Chain {
     pub stages: Vec<ElemStage>,
 }
 
-/// A scalar f32 constant's value, if `id` is one.
+/// A scalar constant's value, if `id` is one (f32 or f16 — an f16 graph
+/// carries f16 scalar constants; the stage holds the widened value, and
+/// per-stage rounding keeps the fused result equal to the unfused
+/// `ScalarRight` kernel).
 fn const_scalar(g: &Graph, id: NodeId) -> Option<f32> {
     let n = g.node(id);
     if let Op::Const { .. } = n.op {
         if let Some(v) = &n.value {
-            if v.numel() == 1 && v.dtype() == DType::F32 {
-                return Some(v.as_f32()[0]);
+            if v.numel() == 1 {
+                match v.dtype() {
+                    DType::F32 => return Some(v.as_f32()[0]),
+                    DType::F16 => return Some(f16_to_f32(v.as_f16()[0])),
+                    _ => return None,
+                }
             }
         }
     }
     None
 }
 
-/// If `id` is a per-element stage over a single main input (same shape in
-/// and out), return (main input, stage).
-fn stage_of(g: &Graph, id: NodeId) -> Option<(NodeId, ElemStage)> {
-    let n = g.node(id);
-    if n.dtype != DType::F32 {
+/// Dtype at which a node may join a fused chain (f32 or f16).
+fn fusable_dtype(g: &Graph, id: NodeId) -> bool {
+    matches!(g.node(id).dtype, DType::F32 | DType::F16)
+}
+
+/// If `id` can ride a chain over a single main input, return the main
+/// input and the stage it contributes — `None` stage for a transparent
+/// member (`Reshape`: row-major identity, no arithmetic).
+fn stage_of(g: &Graph, id: NodeId) -> Option<(NodeId, Option<ElemStage>)> {
+    if !fusable_dtype(g, id) {
         return None;
     }
+    let n = g.node(id);
     match &n.op {
-        Op::Unary(k) => Some((n.inputs[0], ElemStage::Unary(*k))),
-        Op::Plu { table, .. } => Some((n.inputs[0], ElemStage::plu(table))),
+        Op::Unary(k) => Some((n.inputs[0], Some(ElemStage::Unary(*k)))),
+        Op::Plu { table, .. } => Some((n.inputs[0], Some(ElemStage::plu(table)))),
+        Op::Reshape { .. } => Some((n.inputs[0], None)),
         Op::Binary(k) => {
             let (a, b) = (n.inputs[0], n.inputs[1]);
             if let Some(s) = const_scalar(g, b) {
                 if g.shape(a) == n.shape.as_slice() {
-                    return Some((a, ElemStage::ScalarRight(*k, s)));
+                    return Some((a, Some(ElemStage::ScalarRight(*k, s))));
                 }
             }
             if let Some(s) = const_scalar(g, a) {
                 if g.shape(b) == n.shape.as_slice() {
-                    return Some((b, ElemStage::ScalarLeft(*k, s)));
+                    return Some((b, Some(ElemStage::ScalarLeft(*k, s))));
                 }
             }
             None
@@ -119,10 +145,10 @@ fn stage_of(g: &Graph, id: NodeId) -> Option<(NodeId, ElemStage)> {
 /// A binary node whose operands both already have the output shape (no
 /// broadcast, so it can anchor a fused chain as a two-input head).
 fn binary_head(g: &Graph, id: NodeId) -> Option<(BinKind, NodeId, NodeId)> {
-    let n = g.node(id);
-    if n.dtype != DType::F32 {
+    if !fusable_dtype(g, id) {
         return None;
     }
+    let n = g.node(id);
     if let Op::Binary(k) = n.op {
         let (a, b) = (n.inputs[0], n.inputs[1]);
         if g.shape(a) == n.shape.as_slice() && g.shape(b) == n.shape.as_slice() {
@@ -165,7 +191,7 @@ pub fn find_chains(g: &Graph, live: &[bool]) -> Vec<Chain> {
             continue;
         }
         let (head, mut stages) = match stage_of(g, id) {
-            Some((main, st)) => (ChainHead::Value(main), vec![st]),
+            Some((main, st)) => (ChainHead::Value(main), st.into_iter().collect()),
             None => match binary_head(g, id) {
                 Some((k, a, b)) => (ChainHead::Binary(k, a, b), Vec::new()),
                 None => continue,
@@ -180,7 +206,9 @@ pub fn find_chains(g: &Graph, live: &[bool]) -> Vec<Chain> {
             let next = sole[cur];
             match stage_of(g, next) {
                 Some((main, st)) if main == cur => {
-                    stages.push(st);
+                    if let Some(st) = st {
+                        stages.push(st);
+                    }
                     nodes.push(next);
                     cur = next;
                 }
@@ -269,5 +297,54 @@ mod tests {
         g.output(t);
         let chains = find_chains(&g, &g.live_set());
         assert!(chains.is_empty());
+    }
+
+    #[test]
+    fn chains_fuse_through_reshape() {
+        // silu -> reshape -> exp: the reshape is a transparent member
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![2, 4]);
+        let a = g.silu(x, "a");
+        let r = g.reshape(a, vec![8], "r");
+        let b = g.exp(r, "b");
+        g.output(b);
+        let chains = find_chains(&g, &g.live_set());
+        assert_eq!(chains.len(), 1);
+        assert_eq!(chains[0].nodes, vec![a, r, b]);
+        assert_eq!(chains[0].stages.len(), 2, "reshape contributes no stage");
+    }
+
+    #[test]
+    fn reshape_can_start_a_chain() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![2, 3]);
+        let r = g.reshape(x, vec![6], "r");
+        let a = g.silu(r, "a");
+        g.output(a);
+        let chains = find_chains(&g, &g.live_set());
+        assert_eq!(chains.len(), 1);
+        assert_eq!(chains[0].nodes, vec![r, a]);
+        assert!(matches!(chains[0].head, ChainHead::Value(h) if h == x));
+        assert_eq!(chains[0].stages.len(), 1);
+    }
+
+    #[test]
+    fn f16_nodes_form_chains_and_i8_nodes_do_not() {
+        use crate::graph::DType;
+        let mut g = Graph::new("t");
+        let x = g.input_dtype("x", vec![4], DType::F16);
+        let a = g.silu(x, "a");
+        let b = g.exp(a, "b");
+        g.output(b);
+        let chains = find_chains(&g, &g.live_set());
+        assert_eq!(chains.len(), 1);
+        assert_eq!(chains[0].nodes, vec![a, b]);
+
+        let mut q = Graph::new("q");
+        let xq = q.input_dtype("x", vec![4], DType::I8);
+        let aq = q.silu(xq, "a");
+        let bq = q.exp(aq, "b");
+        q.output(bq);
+        assert!(find_chains(&q, &q.live_set()).is_empty(), "i8 stays unfused");
     }
 }

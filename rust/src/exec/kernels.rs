@@ -8,7 +8,9 @@
 //! holds them to that.
 
 use crate::graph::op::{BinKind, UnKind};
+use crate::graph::tensor::{amax_abs, dequantize_i8_one, i8_scale, quantize_i8_one};
 use crate::plu::{self, PluTable};
+use crate::util::f16::{f16_to_f32, f32_to_f16};
 
 /// Scalar unary application — shared by the naive evaluator, the planned
 /// unary kernel, and fused-chain stages (identity of results by
@@ -42,6 +44,40 @@ pub fn apply_binary(kind: BinKind, x: f32, y: f32) -> f32 {
     }
 }
 
+// --- storage element types ------------------------------------------------------
+
+/// A storage element the dtype-generic kernels load/store through: every
+/// value widens to f32 for arithmetic and narrows on store. `f32` is the
+/// identity instance (the generic loops then compile to the plain f32
+/// loops), `u16` holds raw IEEE-754 half bits.
+pub trait Elem: Copy {
+    fn to_f32(self) -> f32;
+    fn from_f32(v: f32) -> Self;
+}
+
+impl Elem for f32 {
+    #[inline]
+    fn to_f32(self) -> f32 {
+        self
+    }
+    #[inline]
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+}
+
+/// Raw IEEE-754 half bits (the `Data::F16` payload type).
+impl Elem for u16 {
+    #[inline]
+    fn to_f32(self) -> f32 {
+        f16_to_f32(self)
+    }
+    #[inline]
+    fn from_f32(v: f32) -> Self {
+        f32_to_f16(v)
+    }
+}
+
 // --- argument views -------------------------------------------------------------
 
 /// Borrowed, dtype-tagged tensor payload.
@@ -49,6 +85,10 @@ pub fn apply_binary(kind: BinKind, x: f32, y: f32) -> f32 {
 pub enum DataRef<'a> {
     F32(&'a [f32]),
     I32(&'a [i32]),
+    /// Raw half bits.
+    F16(&'a [u16]),
+    /// Quantized values + their per-tensor symmetric scale.
+    I8(&'a [i8], f32),
 }
 
 /// Borrowed tensor: shape + payload. What planned kernels consume.
@@ -62,14 +102,28 @@ impl<'a> View<'a> {
     pub fn f32(&self) -> &'a [f32] {
         match self.data {
             DataRef::F32(v) => v,
-            DataRef::I32(_) => panic!("expected f32 tensor"),
+            _ => panic!("expected f32 tensor"),
         }
     }
 
     pub fn i32(&self) -> &'a [i32] {
         match self.data {
             DataRef::I32(v) => v,
-            DataRef::F32(_) => panic!("expected i32 tensor"),
+            _ => panic!("expected i32 tensor"),
+        }
+    }
+
+    pub fn f16(&self) -> &'a [u16] {
+        match self.data {
+            DataRef::F16(v) => v,
+            _ => panic!("expected f16 tensor"),
+        }
+    }
+
+    pub fn i8(&self) -> (&'a [i8], f32) {
+        match self.data {
+            DataRef::I8(v, s) => (v, s),
+            _ => panic!("expected i8 tensor"),
         }
     }
 }
@@ -103,6 +157,9 @@ pub fn bcast_strides(out_shape: &[usize], in_shape: &[usize]) -> Vec<usize> {
     r
 }
 
+/// The f32 binary kernel is the `Elem`-generic one at its identity
+/// instance (`to_f32`/`from_f32` compile away), so the two can never
+/// drift apart.
 pub fn binary_out(
     kind: BinKind,
     mode: &BinMode,
@@ -112,51 +169,11 @@ pub fn binary_out(
     out: &mut [f32],
     idx: &mut Vec<usize>,
 ) {
-    match mode {
-        BinMode::Elementwise => {
-            for i in 0..out.len() {
-                out[i] = apply_binary(kind, a[i], b[i]);
-            }
-        }
-        BinMode::ScalarRight => {
-            let s = b[0];
-            for i in 0..out.len() {
-                out[i] = apply_binary(kind, a[i], s);
-            }
-        }
-        BinMode::ScalarLeft => {
-            let s = a[0];
-            for i in 0..out.len() {
-                out[i] = apply_binary(kind, s, b[i]);
-            }
-        }
-        BinMode::Strided { sa, sb } => {
-            idx.clear();
-            idx.resize(out_shape.len(), 0);
-            for o in out.iter_mut() {
-                let mut ia = 0;
-                let mut ib = 0;
-                for (d, &i) in idx.iter().enumerate() {
-                    ia += i * sa[d];
-                    ib += i * sb[d];
-                }
-                *o = apply_binary(kind, a[ia], b[ib]);
-                for d in (0..idx.len()).rev() {
-                    idx[d] += 1;
-                    if idx[d] < out_shape[d] {
-                        break;
-                    }
-                    idx[d] = 0;
-                }
-            }
-        }
-    }
+    binary_out_g::<f32>(kind, mode, a, b, out_shape, out, idx);
 }
 
 pub fn unary_out(kind: UnKind, x: &[f32], out: &mut [f32]) {
-    for (o, &v) in out.iter_mut().zip(x) {
-        *o = apply_unary(kind, v);
-    }
+    unary_out_g::<f32>(kind, x, out);
 }
 
 pub fn plu_out(table: &PluTable, x: &[f32], out: &mut [f32]) {
@@ -202,16 +219,10 @@ pub fn matmul_out(
 
 // --- scans / reductions ---------------------------------------------------------
 
+/// Delegates to the generic scan (identical f32 addition sequence: the
+/// running accumulator IS the previously stored element at f32).
 pub fn cumsum_out(x: &[f32], out: &mut [f32], outer: usize, n_axis: usize, inner: usize) {
-    out.copy_from_slice(x);
-    for o in 0..outer {
-        for i in 0..inner {
-            let base = o * n_axis * inner + i;
-            for j in 1..n_axis {
-                out[base + j * inner] += out[base + (j - 1) * inner];
-            }
-        }
-    }
+    cumsum_out_g::<f32>(x, out, outer, n_axis, inner);
 }
 
 pub fn reduce_sum_out(
@@ -235,10 +246,10 @@ pub fn reduce_sum_out(
 
 // --- gather / conv / norms ------------------------------------------------------
 
-pub fn gather_out(
-    data: &[f32],
+pub fn gather_out<T: Copy>(
+    data: &[T],
     indices: &[i32],
-    out: &mut [f32],
+    out: &mut [T],
     row: usize,
     vocab: usize,
 ) -> Result<(), String> {
@@ -261,30 +272,11 @@ pub fn conv1d_out(
     c: usize,
     k: usize,
 ) {
-    for ti in 0..t {
-        for ci in 0..c {
-            let mut acc = b[ci];
-            for ki in 0..k {
-                // causal: tap ki reads position ti - (k - 1 - ki)
-                let src = ti as isize - (k - 1 - ki) as isize;
-                if src >= 0 {
-                    acc += w[ki * c + ci] * x[src as usize * c + ci];
-                }
-            }
-            out[ti * c + ci] = acc;
-        }
-    }
+    conv1d_out_g::<f32>(x, w, b, out, t, c, k);
 }
 
 pub fn rmsnorm_out(x: &[f32], w: &[f32], out: &mut [f32], rows: usize, d: usize, eps: f32) {
-    for r in 0..rows {
-        let row = &x[r * d..(r + 1) * d];
-        let ms = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
-        let inv = 1.0 / (ms + eps).sqrt();
-        for i in 0..d {
-            out[r * d + i] = row[i] * inv * w[i];
-        }
-    }
+    rmsnorm_out_g::<f32>(x, w, out, rows, d, eps);
 }
 
 pub fn softmax_out(x: &[f32], out: &mut [f32], outer: usize, n_axis: usize, inner: usize) {
@@ -333,9 +325,9 @@ pub fn copy_out<T: Copy>(x: &[T], out: &mut [T]) {
 
 /// Strided gather copy: walks the output row-major, reading the input at
 /// the precomputed per-output-dim strides (transpose and broadcast).
-pub fn strided_copy_out(
-    x: &[f32],
-    out: &mut [f32],
+pub fn strided_copy_out<T: Copy>(
+    x: &[T],
+    out: &mut [T],
     out_shape: &[usize],
     strides: &[usize],
     idx: &mut Vec<usize>,
@@ -354,6 +346,440 @@ pub fn strided_copy_out(
                 break;
             }
             idx[d] = 0;
+        }
+    }
+}
+
+// --- dtype-generic (f16) kernels ------------------------------------------------
+//
+// Mirrors of the f32 kernels above over any `Elem` storage type: load →
+// widen to f32 → identical arithmetic → narrow on store. Loop structure
+// and evaluation order match the f32 kernels exactly, so the naive
+// walker's widen-evaluate-narrow reference produces bitwise-identical
+// halves (all rounding happens at stores, never inside accumulators).
+
+pub fn unary_out_g<T: Elem>(kind: UnKind, x: &[T], out: &mut [T]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = T::from_f32(apply_unary(kind, v.to_f32()));
+    }
+}
+
+pub fn plu_out_g<T: Elem>(table: &PluTable, x: &[T], out: &mut [T]) {
+    // eval_premul is the same inner evaluation eval_slice uses, so the
+    // f16 PLU picks identical segments to the f32 path for equal inputs
+    let inv_step = 1.0 / table.step();
+    let kmax = table.num_segments() as i64 - 1;
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = T::from_f32(table.eval_premul(v.to_f32(), inv_step, kmax));
+    }
+}
+
+pub fn binary_out_g<T: Elem>(
+    kind: BinKind,
+    mode: &BinMode,
+    a: &[T],
+    b: &[T],
+    out_shape: &[usize],
+    out: &mut [T],
+    idx: &mut Vec<usize>,
+) {
+    match mode {
+        BinMode::Elementwise => {
+            for i in 0..out.len() {
+                out[i] = T::from_f32(apply_binary(kind, a[i].to_f32(), b[i].to_f32()));
+            }
+        }
+        BinMode::ScalarRight => {
+            let s = b[0].to_f32();
+            for i in 0..out.len() {
+                out[i] = T::from_f32(apply_binary(kind, a[i].to_f32(), s));
+            }
+        }
+        BinMode::ScalarLeft => {
+            let s = a[0].to_f32();
+            for i in 0..out.len() {
+                out[i] = T::from_f32(apply_binary(kind, s, b[i].to_f32()));
+            }
+        }
+        BinMode::Strided { sa, sb } => {
+            idx.clear();
+            idx.resize(out_shape.len(), 0);
+            for o in out.iter_mut() {
+                let mut ia = 0;
+                let mut ib = 0;
+                for (d, &i) in idx.iter().enumerate() {
+                    ia += i * sa[d];
+                    ib += i * sb[d];
+                }
+                *o = T::from_f32(apply_binary(kind, a[ia].to_f32(), b[ib].to_f32()));
+                for d in (0..idx.len()).rev() {
+                    idx[d] += 1;
+                    if idx[d] < out_shape[d] {
+                        break;
+                    }
+                    idx[d] = 0;
+                }
+            }
+        }
+    }
+}
+
+/// Batched matmul with f32 accumulation, storage-rounded output.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_out_g<T: Elem>(
+    a: &[T],
+    b: &[T],
+    out: &mut [T],
+    batch: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a_step: usize,
+    b_step: usize,
+) {
+    let mut row = vec![0.0f32; n]; // f32 accumulator row (rounding only at store)
+    for bi in 0..batch {
+        let ao = bi * a_step;
+        let bo = bi * b_step;
+        let oo = bi * m * n;
+        for i in 0..m {
+            row.fill(0.0);
+            for kk in 0..k {
+                let av_ik = a[ao + i * k + kk].to_f32();
+                if av_ik == 0.0 {
+                    continue;
+                }
+                let brow = bo + kk * n;
+                for (j, r) in row.iter_mut().enumerate() {
+                    *r += av_ik * b[brow + j].to_f32();
+                }
+            }
+            let orow = oo + i * n;
+            for (j, &r) in row.iter().enumerate() {
+                out[orow + j] = T::from_f32(r);
+            }
+        }
+    }
+}
+
+/// CumSum with an f32 running accumulator; each prefix rounds at store
+/// only, so precision does not decay along the scan. The first element
+/// is a copy and later sums are `x[j] + acc` — the exact value sequence
+/// of the in-place reference scan (`out[j] += out[j-1]`), including
+/// signed zeros and NaN-payload propagation order.
+pub fn cumsum_out_g<T: Elem>(
+    x: &[T],
+    out: &mut [T],
+    outer: usize,
+    n_axis: usize,
+    inner: usize,
+) {
+    if n_axis == 0 {
+        return;
+    }
+    for o in 0..outer {
+        for i in 0..inner {
+            let base = o * n_axis * inner + i;
+            let mut acc = x[base].to_f32();
+            out[base] = T::from_f32(acc);
+            for j in 1..n_axis {
+                acc = x[base + j * inner].to_f32() + acc;
+                out[base + j * inner] = T::from_f32(acc);
+            }
+        }
+    }
+}
+
+pub fn reduce_sum_out_g<T: Elem>(
+    x: &[T],
+    out: &mut [T],
+    outer: usize,
+    n_axis: usize,
+    inner: usize,
+) {
+    // accumulate the whole output in f32, store rounded once at the end
+    // (mirrors the f32 kernel's accumulation order exactly)
+    for o in 0..outer {
+        for i in 0..inner {
+            let mut acc = 0.0f32;
+            for j in 0..n_axis {
+                acc += x[(o * n_axis + j) * inner + i].to_f32();
+            }
+            out[o * inner + i] = T::from_f32(acc);
+        }
+    }
+}
+
+pub fn conv1d_out_g<T: Elem>(
+    x: &[T],
+    w: &[T],
+    b: &[T],
+    out: &mut [T],
+    t: usize,
+    c: usize,
+    k: usize,
+) {
+    for ti in 0..t {
+        for ci in 0..c {
+            let mut acc = b[ci].to_f32();
+            for ki in 0..k {
+                // causal: tap ki reads position ti - (k - 1 - ki)
+                let src = ti as isize - (k - 1 - ki) as isize;
+                if src >= 0 {
+                    acc += w[ki * c + ci].to_f32() * x[src as usize * c + ci].to_f32();
+                }
+            }
+            out[ti * c + ci] = T::from_f32(acc);
+        }
+    }
+}
+
+pub fn rmsnorm_out_g<T: Elem>(
+    x: &[T],
+    w: &[T],
+    out: &mut [T],
+    rows: usize,
+    d: usize,
+    eps: f32,
+) {
+    for r in 0..rows {
+        let mut ms = 0.0f32;
+        for i in 0..d {
+            let v = x[r * d + i].to_f32();
+            ms += v * v;
+        }
+        let ms = ms / d as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        for i in 0..d {
+            out[r * d + i] = T::from_f32(x[r * d + i].to_f32() * inv * w[i].to_f32());
+        }
+    }
+}
+
+pub fn softmax_out_g<T: Elem>(
+    x: &[T],
+    out: &mut [T],
+    outer: usize,
+    n_axis: usize,
+    inner: usize,
+) {
+    // two passes recompute exp instead of staging rounded intermediates,
+    // so every stored value is round(e_j / z) with e_j and z in f32 —
+    // identical to narrowing an f32 softmax after the fact
+    for o in 0..outer {
+        for i in 0..inner {
+            let at = |j: usize| (o * n_axis + j) * inner + i;
+            let mut mx = f32::NEG_INFINITY;
+            for j in 0..n_axis {
+                mx = mx.max(x[at(j)].to_f32());
+            }
+            let mut z = 0.0f32;
+            for j in 0..n_axis {
+                z += (x[at(j)].to_f32() - mx).exp();
+            }
+            for j in 0..n_axis {
+                out[at(j)] = T::from_f32((x[at(j)].to_f32() - mx).exp() / z);
+            }
+        }
+    }
+}
+
+// --- precision conversion kernels ----------------------------------------------
+
+/// f32 -> f16, round-to-nearest-even per element.
+pub fn quantize_f16_out(x: &[f32], out: &mut [u16]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = f32_to_f16(v);
+    }
+}
+
+/// f32 -> i8 with a dynamically computed per-tensor symmetric scale.
+/// Returns the scale (the caller owns where it lives: `Data::I8` for
+/// tensors, the arena's per-slot scale table for planned execution).
+pub fn quantize_i8_out(x: &[f32], out: &mut [i8]) -> f32 {
+    requantize_i8(x, out)
+}
+
+pub fn dequantize_f16_out(x: &[u16], out: &mut [f32]) {
+    for (o, &b) in out.iter_mut().zip(x) {
+        *o = f16_to_f32(b);
+    }
+}
+
+pub fn dequantize_i8_out(q: &[i8], scale: f32, out: &mut [f32]) {
+    for (o, &v) in out.iter_mut().zip(q) {
+        *o = dequantize_i8_one(v, scale);
+    }
+}
+
+// --- i8 kernels -----------------------------------------------------------------
+//
+// Elementwise / scan / reduce i8 kernels follow one shape: dequantize on
+// load, run the EXACT f32 arithmetic of the reference kernels into an
+// f32 scratch, then requantize the whole result with a dynamic
+// per-tensor scale (`requantize_i8`). The naive walker reaches bitwise-
+// identical results by construction: widen → f32 eval → same
+// requantize. MatMul is the exception — it consumes i8 operands
+// directly with exact i32 accumulation (the real int8-GEMM datapath).
+
+/// Quantize `src` into `out` with a fresh per-tensor scale; returns it.
+pub fn requantize_i8(src: &[f32], out: &mut [i8]) -> f32 {
+    let scale = i8_scale(amax_abs(src));
+    for (o, &v) in out.iter_mut().zip(src) {
+        *o = quantize_i8_one(v, scale);
+    }
+    scale
+}
+
+// local shorthand over the ONE shared i8 mapping in `graph::tensor`
+// (planned, naive, and `Tensor::to_dtype` must stay bit-identical)
+#[inline]
+fn deq(q: i8, scale: f32) -> f32 {
+    dequantize_i8_one(q, scale)
+}
+
+/// i8 unary into an f32 staging slice (requantized by the caller).
+pub fn unary_i8_into(kind: UnKind, q: &[i8], scale: f32, scratch: &mut [f32]) {
+    for (o, &v) in scratch.iter_mut().zip(q) {
+        *o = apply_unary(kind, deq(v, scale));
+    }
+}
+
+/// i8 binary into an f32 staging slice, all broadcast modes.
+#[allow(clippy::too_many_arguments)]
+pub fn binary_i8_into(
+    kind: BinKind,
+    mode: &BinMode,
+    a: &[i8],
+    sa_q: f32,
+    b: &[i8],
+    sb_q: f32,
+    out_shape: &[usize],
+    scratch: &mut [f32],
+    idx: &mut Vec<usize>,
+) {
+    match mode {
+        BinMode::Elementwise => {
+            for i in 0..scratch.len() {
+                scratch[i] = apply_binary(kind, deq(a[i], sa_q), deq(b[i], sb_q));
+            }
+        }
+        BinMode::ScalarRight => {
+            let s = deq(b[0], sb_q);
+            for i in 0..scratch.len() {
+                scratch[i] = apply_binary(kind, deq(a[i], sa_q), s);
+            }
+        }
+        BinMode::ScalarLeft => {
+            let s = deq(a[0], sa_q);
+            for i in 0..scratch.len() {
+                scratch[i] = apply_binary(kind, s, deq(b[i], sb_q));
+            }
+        }
+        BinMode::Strided { sa, sb } => {
+            idx.clear();
+            idx.resize(out_shape.len(), 0);
+            for o in scratch.iter_mut() {
+                let mut ia = 0;
+                let mut ib = 0;
+                for (d, &i) in idx.iter().enumerate() {
+                    ia += i * sa[d];
+                    ib += i * sb[d];
+                }
+                *o = apply_binary(kind, deq(a[ia], sa_q), deq(b[ib], sb_q));
+                for d in (0..idx.len()).rev() {
+                    idx[d] += 1;
+                    if idx[d] < out_shape[d] {
+                        break;
+                    }
+                    idx[d] = 0;
+                }
+            }
+        }
+    }
+}
+
+/// i8 cumsum into an f32 staging slice: the running accumulator stays
+/// f32 end to end (the scan never requantizes mid-prefix).
+pub fn cumsum_i8_into(
+    q: &[i8],
+    scale: f32,
+    scratch: &mut [f32],
+    outer: usize,
+    n_axis: usize,
+    inner: usize,
+) {
+    for o in 0..outer {
+        for i in 0..inner {
+            let base = o * n_axis * inner + i;
+            let mut acc = 0.0f32;
+            for j in 0..n_axis {
+                acc += deq(q[base + j * inner], scale);
+                scratch[base + j * inner] = acc;
+            }
+        }
+    }
+}
+
+/// i8 reduce-sum into an f32 staging slice (f32 accumulation).
+pub fn reduce_sum_i8_into(
+    q: &[i8],
+    scale: f32,
+    scratch: &mut [f32],
+    outer: usize,
+    n_axis: usize,
+    inner: usize,
+) {
+    for o in 0..outer {
+        for i in 0..inner {
+            let mut acc = 0.0f32;
+            for j in 0..n_axis {
+                acc += deq(q[(o * n_axis + j) * inner + i], scale);
+            }
+            scratch[o * inner + i] = acc;
+        }
+    }
+}
+
+/// i8 x i8 batched matmul: exact i32 accumulation per dot product,
+/// dequantized into f32 by the product of the operand scales.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_i8_out(
+    a: &[i8],
+    sa: f32,
+    b: &[i8],
+    sb: f32,
+    out: &mut [f32],
+    batch: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a_step: usize,
+    b_step: usize,
+) {
+    let s = sa * sb;
+    let mut row = vec![0i32; n];
+    for bi in 0..batch {
+        let ao = bi * a_step;
+        let bo = bi * b_step;
+        let oo = bi * m * n;
+        for i in 0..m {
+            row.fill(0);
+            for kk in 0..k {
+                let av_ik = a[ao + i * k + kk];
+                if av_ik == 0 {
+                    continue;
+                }
+                let av = i32::from(av_ik);
+                let brow = bo + kk * n;
+                for (j, r) in row.iter_mut().enumerate() {
+                    *r += av * i32::from(b[brow + j]);
+                }
+            }
+            let orow = oo + i * n;
+            for (j, &r) in row.iter().enumerate() {
+                out[orow + j] = r as f32 * s;
+            }
         }
     }
 }
@@ -426,5 +852,96 @@ mod tests {
         assert!(gather_out(&data, &[2, 0], &mut out, 2, 3).is_ok());
         assert_eq!(out, [20., 21., 0., 1.]);
         assert!(gather_out(&data, &[5], &mut out[..2], 2, 3).is_err());
+    }
+
+    fn h(v: f32) -> u16 {
+        f32_to_f16(v)
+    }
+
+    #[test]
+    fn generic_kernels_instantiated_at_f32_match_the_f32_kernels() {
+        let x = [0.5f32, -1.25, 2.0, -3.5];
+        let mut a = [0.0f32; 4];
+        let mut b = [0.0f32; 4];
+        unary_out(UnKind::SiLU, &x, &mut a);
+        unary_out_g::<f32>(UnKind::SiLU, &x, &mut b);
+        assert_eq!(a, b);
+        let mut ma = [0.0f32; 4];
+        let mut mb = [0.0f32; 4];
+        let p = [1.0f32, 2., 3., 4., 5., 6.];
+        let q = [1.0f32, 0., 0., 1., 1., 1.];
+        matmul_out(&p, &q, &mut ma, 1, 2, 3, 2, 0, 0);
+        matmul_out_g::<f32>(&p, &q, &mut mb, 1, 2, 3, 2, 0, 0);
+        assert_eq!(ma, mb);
+        let mut ca = [0.0f32; 6];
+        let mut cb = [0.0f32; 6];
+        let cx = [1.0f32, 10., 2., 20., 3., 30.];
+        cumsum_out(&cx, &mut ca, 1, 3, 2);
+        cumsum_out_g::<f32>(&cx, &mut cb, 1, 3, 2);
+        assert_eq!(ca, cb);
+    }
+
+    #[test]
+    fn f16_matmul_accumulates_in_f32() {
+        // 1024 + 1 is not representable in f16; a dot of [1024-as-one-
+        // product, then 1, then -1024] only survives if the accumulator
+        // stays f32 between taps
+        let a = [h(1.0), h(1.0), h(1.0)];
+        let b = [h(1024.0), h(1.0), h(-1024.0)];
+        let mut out = [0u16; 1];
+        matmul_out_g::<u16>(&a, &b, &mut out, 1, 1, 3, 1, 0, 0);
+        assert_eq!(f16_to_f32(out[0]), 1.0);
+    }
+
+    #[test]
+    fn f16_cumsum_rounds_only_at_stores() {
+        // acc in f32: 1024 + 0.5 + 0.5 = 1025 (exact in f16: 1024+1);
+        // a rounded-accumulator scan would stick at 1024
+        let x = [h(1024.0), h(0.5), h(0.5)];
+        let mut out = [0u16; 3];
+        cumsum_out_g::<u16>(&x, &mut out, 1, 3, 1);
+        assert_eq!(f16_to_f32(out[2]), 1025.0);
+        // intermediate prefix rounds at its store: 1024.5 -> 1024 (RNE)
+        assert_eq!(f16_to_f32(out[1]), 1024.0);
+    }
+
+    #[test]
+    fn i8_matmul_is_exact_int_accumulation() {
+        // q values well inside range; result must be (sum qa*qb) * sa*sb
+        let a = [10i8, -20, 30];
+        let b = [1i8, 2, 3];
+        let (sa, sb) = (0.5f32, 0.25f32);
+        let mut out = [0.0f32; 1];
+        matmul_i8_out(&a, sa, &b, sb, &mut out, 1, 1, 3, 1, 0, 0);
+        let acc = (10 * 1 - 20 * 2 + 30 * 3) as f32;
+        assert_eq!(out[0], acc * sa * sb);
+    }
+
+    #[test]
+    fn requantize_round_trips_within_half_a_step() {
+        let src = [0.9f32, -0.3, 0.0, 1.27];
+        let mut q = [0i8; 4];
+        let scale = requantize_i8(&src, &mut q);
+        assert_eq!(scale, 1.27 / 127.0);
+        let mut back = [0.0f32; 4];
+        dequantize_i8_out(&q, scale, &mut back);
+        for (a, b) in back.iter().zip(&src) {
+            assert!((a - b).abs() <= scale * 0.5 + 1e-7, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn quantize_f16_kernel_matches_scalar_conversion() {
+        let x = [0.1f32, -2.5, 65504.0, 1e-9];
+        let mut out = [0u16; 4];
+        quantize_f16_out(&x, &mut out);
+        for (o, &v) in out.iter().zip(&x) {
+            assert_eq!(*o, f32_to_f16(v));
+        }
+        let mut wide = [0.0f32; 4];
+        dequantize_f16_out(&out, &mut wide);
+        for (w, o) in wide.iter().zip(&out) {
+            assert_eq!(*w, f16_to_f32(*o));
+        }
     }
 }

@@ -36,7 +36,7 @@ pub mod pjrt;
 pub mod plan;
 pub mod pool;
 
-pub use cache::{plan_key, PlanCache};
+pub use cache::{plan_key, plan_key_dtyped, PlanCache};
 pub use naive::NaiveBackend;
 pub use pjrt::PjrtBackend;
 pub use plan::{ExecutionPlan, PlannedBackend, Schedule};

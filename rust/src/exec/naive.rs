@@ -18,10 +18,10 @@
 use std::collections::HashMap;
 
 use crate::graph::op::{BinKind, Op, UnKind};
-use crate::graph::tensor::{numel, strides, Data, Tensor};
+use crate::graph::tensor::{numel, strides, Data, DType, Tensor};
 use crate::graph::{Graph, NodeId};
 
-use super::kernels::{apply_binary, apply_unary};
+use super::kernels::{self, apply_binary, apply_unary};
 use super::{Backend, Plan};
 
 /// The naive walker behind the [`Backend`] seam. "Planning" is a graph
@@ -70,7 +70,13 @@ pub fn run(graph: &Graph, inputs: &[Tensor]) -> Result<Vec<Tensor>, String> {
             ));
         }
         if t.dtype() != node.dtype {
-            return Err(format!("input {} ({}): dtype mismatch", id, node.name));
+            return Err(format!(
+                "input {} ({}): dtype mismatch (expected {}, got {})",
+                id,
+                node.name,
+                node.dtype.name(),
+                t.dtype().name()
+            ));
         }
         env.insert(id, t.clone());
     }
@@ -120,9 +126,177 @@ pub fn run(graph: &Graph, inputs: &[Tensor]) -> Result<Vec<Tensor>, String> {
 
 /// Evaluate one op on its argument tensors; `out_shape` is the shape the
 /// builder inferred (layout ops rely on it).
+///
+/// The reference semantics for the reduced-precision dtypes live here:
+/// f16 ops widen every operand to f32, evaluate the f32 reference, and
+/// narrow the result (rounding exactly once per stored element — the
+/// same contract the planned f16 kernels implement in one pass); i8
+/// compute ops additionally requantize the f32 result with a dynamic
+/// per-tensor scale through the SAME `kernels::requantize_i8` the
+/// planned executor uses, while i8 MatMul accumulates exactly in i32.
+/// Planned-vs-naive differential tests therefore hold quantized graphs
+/// to bitwise equality, like the f32 corpus.
 pub fn eval(op: &Op, args: &[&Tensor], out_shape: &[usize]) -> Result<Tensor, String> {
     match op {
+        Op::Quantize { dtype } => return Ok(args[0].to_dtype(*dtype)),
+        Op::Dequantize => {
+            return Ok(Tensor::f32(args[0].shape.clone(), args[0].to_f32_vec()))
+        }
+        _ => {}
+    }
+    // the op's value dtype = dtype of its first non-index operand
+    let vdt = args
+        .iter()
+        .map(|t| t.dtype())
+        .find(|d| *d != DType::I32)
+        .unwrap_or(DType::I32);
+    match vdt {
+        DType::F32 | DType::I32 => eval_f32(op, args, out_shape),
+        DType::F16 => eval_f16(op, args, out_shape),
+        DType::I8 => eval_i8(op, args, out_shape),
+    }
+}
+
+/// Widen-evaluate-narrow f16 reference: exact for layout ops (every f16
+/// value round-trips through f32), one store-rounding for compute ops.
+fn eval_f16(op: &Op, args: &[&Tensor], out_shape: &[usize]) -> Result<Tensor, String> {
+    let wide: Vec<Tensor> = args
+        .iter()
+        .map(|t| {
+            if t.dtype() == DType::I32 {
+                (*t).clone()
+            } else {
+                Tensor::f32(t.shape.clone(), t.to_f32_vec())
+            }
+        })
+        .collect();
+    let refs: Vec<&Tensor> = wide.iter().collect();
+    let f = eval_f32(op, &refs, out_shape)?;
+    Ok(f.to_dtype(DType::F16))
+}
+
+/// i8 reference. Layout ops move raw quantized bytes and carry the scale
+/// (no requantization: data movement must be lossless); compute ops go
+/// widen → f32 reference → shared requantize; MatMul is the exact-i32
+/// int8 GEMM.
+fn eval_i8(op: &Op, args: &[&Tensor], out_shape: &[usize]) -> Result<Tensor, String> {
+    match op {
+        Op::MatMul => {
+            let (qa, sa) = args[0].as_i8();
+            let (qb, sb) = args[1].as_i8();
+            let a_shape = &args[0].shape;
+            let b_shape = &args[1].shape;
+            let (ra, rb) = (a_shape.len(), b_shape.len());
+            let (m, k) = (a_shape[ra - 2], a_shape[ra - 1]);
+            let n = b_shape[rb - 1];
+            let batch = numel(out_shape) / (m * n);
+            let batch_a: usize = a_shape[..ra - 2].iter().product();
+            let batch_b: usize = b_shape[..rb - 2].iter().product();
+            let mut out = vec![0.0f32; numel(out_shape)];
+            kernels::matmul_i8_out(
+                qa,
+                sa,
+                qb,
+                sb,
+                &mut out,
+                batch,
+                m,
+                k,
+                n,
+                if batch_a == 1 { 0 } else { m * k },
+                if batch_b == 1 { 0 } else { k * n },
+            );
+            Ok(Tensor::f32(out_shape.to_vec(), out))
+        }
+        Op::Slice { axis, start, len } => {
+            let (q, scale) = args[0].as_i8();
+            let shape = &args[0].shape;
+            let outer: usize = shape[..*axis].iter().product();
+            let n_axis = shape[*axis];
+            let inner: usize = shape[*axis + 1..].iter().product();
+            let mut out = Vec::with_capacity(outer * len * inner);
+            for o in 0..outer {
+                let base = (o * n_axis + start) * inner;
+                out.extend_from_slice(&q[base..base + len * inner]);
+            }
+            Ok(Tensor::i8(out_shape.to_vec(), out, scale))
+        }
+        Op::Concat { axis } => {
+            let scale = args[0].as_i8().1;
+            for t in args {
+                if t.as_i8().1 != scale {
+                    return Err(
+                        "i8 concat needs equal per-tensor scales (got a mix)".into()
+                    );
+                }
+            }
+            let shape0 = &args[0].shape;
+            let outer: usize = shape0[..*axis].iter().product();
+            let inner: usize = shape0[*axis + 1..].iter().product();
+            let mut out = Vec::with_capacity(numel(out_shape));
+            for o in 0..outer {
+                for t in args {
+                    let na = t.shape[*axis];
+                    let q = t.as_i8().0;
+                    out.extend_from_slice(&q[o * na * inner..(o + 1) * na * inner]);
+                }
+            }
+            Ok(Tensor::i8(out_shape.to_vec(), out, scale))
+        }
+        Op::Reshape { shape } => Ok((*args[0]).clone().reshape(shape.clone())),
+        Op::Transpose { perm } => {
+            let (q, scale) = args[0].as_i8();
+            let in_strides = strides(&args[0].shape);
+            let st: Vec<usize> = perm.iter().map(|&p| in_strides[p]).collect();
+            let mut out = vec![0i8; numel(out_shape)];
+            let mut idx = Vec::new();
+            kernels::strided_copy_out(q, &mut out, out_shape, &st, &mut idx);
+            Ok(Tensor::i8(out_shape.to_vec(), out, scale))
+        }
+        Op::Broadcast { shape } => {
+            let (q, scale) = args[0].as_i8();
+            let st = kernels::bcast_strides(shape, &args[0].shape);
+            let mut out = vec![0i8; numel(out_shape)];
+            let mut idx = Vec::new();
+            kernels::strided_copy_out(q, &mut out, out_shape, &st, &mut idx);
+            Ok(Tensor::i8(out_shape.to_vec(), out, scale))
+        }
+        Op::Gather => {
+            let (q, scale) = args[0].as_i8();
+            let row: usize = args[0].shape[1..].iter().product();
+            let vocab = args[0].shape[0];
+            let mut out = vec![0i8; numel(out_shape)];
+            kernels::gather_out(q, args[1].as_i32(), &mut out, row, vocab)?;
+            Ok(Tensor::i8(out_shape.to_vec(), out, scale))
+        }
+        // compute ops: widen, evaluate the f32 reference, requantize with
+        // the same dynamic-scale helper the planned kernels use
+        _ => {
+            let wide: Vec<Tensor> = args
+                .iter()
+                .map(|t| {
+                    if t.dtype() == DType::I32 {
+                        (*t).clone()
+                    } else {
+                        Tensor::f32(t.shape.clone(), t.to_f32_vec())
+                    }
+                })
+                .collect();
+            let refs: Vec<&Tensor> = wide.iter().collect();
+            let f = eval_f32(op, &refs, out_shape)?;
+            let mut q = vec![0i8; f.numel()];
+            let scale = kernels::requantize_i8(f.as_f32(), &mut q);
+            Ok(Tensor::i8(f.shape.clone(), q, scale))
+        }
+    }
+}
+
+/// The f32 (and i32 data-movement) reference evaluator — the original
+/// walker semantics, untouched by the dtype generalization.
+fn eval_f32(op: &Op, args: &[&Tensor], out_shape: &[usize]) -> Result<Tensor, String> {
+    match op {
         Op::Input { .. } | Op::Const { .. } => unreachable!("handled by caller"),
+        Op::Quantize { .. } | Op::Dequantize => unreachable!("handled by eval"),
         Op::MatMul => matmul(args[0], args[1]),
         Op::Binary(kind) => binary(*kind, args[0], args[1], out_shape),
         Op::Unary(kind) => Ok(unary(*kind, args[0])),

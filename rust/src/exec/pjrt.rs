@@ -88,11 +88,16 @@ impl Plan for PjrtPlan {
     }
 }
 
-/// `Tensor` → `HostTensor` at the PJRT boundary.
+/// `Tensor` → `HostTensor` at the PJRT boundary. PJRT programs are
+/// compiled for f32/i32 ABIs, so reduced-precision tensors widen to f32
+/// here (quantized serving is a planned-backend feature).
 pub fn to_host(t: &Tensor) -> HostTensor {
     match &t.data {
         Data::F32(v) => HostTensor::F32(t.shape.clone(), v.clone()),
         Data::I32(v) => HostTensor::I32(t.shape.clone(), v.clone()),
+        Data::F16(_) | Data::I8 { .. } => {
+            HostTensor::F32(t.shape.clone(), t.to_f32_vec())
+        }
     }
 }
 

@@ -2,12 +2,23 @@
 //! [`ExecutionPlan`] that executes with zero per-node heap allocation.
 //!
 //! Compilation produces (a) a topo schedule restricted to the live set,
-//! (b) a liveness-based slot assignment into a reusable buffer
-//! [`Arena`], (c) per-node kernels with broadcast strides and loop
-//! bounds precomputed, and (d) fused elementwise chains
-//! ([`super::fuse`]). Executing the plan repeatedly reuses the same
-//! arena buffers — the steady-state heap traffic is just the output
-//! materialization at the API boundary.
+//! (b) a liveness-based slot assignment into a reusable byte-addressed
+//! buffer [`Arena`] (slots are dtype-agnostic: f32, f16, i8 and i32
+//! values share one slot pool, so liveness reuse crosses precision
+//! boundaries in mixed-precision plans), (c) per-node kernels with
+//! dtypes, broadcast strides and loop bounds precomputed, and (d) fused
+//! elementwise chains ([`super::fuse`]) at f32 and f16. Executing the
+//! plan repeatedly reuses the same arena buffers — the steady-state heap
+//! traffic is just the output materialization at the API boundary.
+//!
+//! Dtype rules are validated here at compile time (the walker would
+//! panic at run time): matmul takes equal-dtype operands (i8 operands
+//! accumulate exactly in i32 and emit f32; f16 operands accumulate in
+//! f32 and round once at store), elementwise/scan/reduce ops are
+//! dtype-preserving, and `Quantize`/`Dequantize` are the only precision
+//! boundaries. i8 compute steps stage their f32 result in a scratch
+//! buffer and requantize with a dynamic per-tensor scale kept in the
+//! arena's per-slot scale table.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -16,8 +27,9 @@ use crate::graph::op::{BinKind, Op, UnKind};
 use crate::graph::tensor::{numel, strides, Data, DType, Tensor};
 use crate::graph::{Graph, Node, NodeId};
 use crate::plu::PluTable;
+use crate::util::f16::{f16_to_f32, f32_to_f16};
 
-use super::arena::{Arena, SlotAlloc};
+use super::arena::{cast_slice_mut, Arena, SlotAlloc};
 use super::fuse::{self, ChainHead, ElemStage};
 use super::kernels::{self, BinMode, DataRef, View};
 use super::{Backend, Plan};
@@ -47,17 +59,16 @@ enum Loc {
     Input(usize),
     /// A constant payload owned by the plan.
     Const(usize),
-    /// An f32 arena slot.
-    SlotF(usize),
-    /// An i32 arena slot.
-    SlotI(usize),
+    /// A byte-arena slot (dtype carried by the [`ValueRef`]).
+    Slot(usize),
 }
 
-/// A value reference: location plus the static shape metadata kernels
-/// need (precomputed so execution never re-derives it).
+/// A value reference: location plus the static dtype/shape metadata
+/// kernels need (precomputed so execution never re-derives it).
 #[derive(Clone, Debug)]
 struct ValueRef {
     loc: Loc,
+    dtype: DType,
     shape: Vec<usize>,
     numel: usize,
 }
@@ -80,6 +91,10 @@ enum Kernel {
     Copy,
     /// Transpose / Broadcast: per-output-dim input strides.
     StridedCopy { strides: Vec<usize> },
+    /// f32 -> f16 / i8 narrowing (i8 computes its scale dynamically).
+    Quantize(DType),
+    /// f16 / i8 -> f32 widening.
+    Dequantize,
 }
 
 /// What feeds a fused chain at execution time.
@@ -98,6 +113,7 @@ enum StepKind {
 #[derive(Clone, Debug)]
 struct Step {
     out: Loc,
+    out_dtype: DType,
     out_shape: Vec<usize>,
     out_numel: usize,
     kind: StepKind,
@@ -118,14 +134,17 @@ pub struct ExecutionPlan {
     arena: Arena,
     /// Odometer scratch for strided kernels (capacity reserved once).
     scratch: Vec<usize>,
+    /// f32 staging buffer for i8 compute steps (allocated once at
+    /// compile to the largest i8 result in the plan).
+    fscratch: Vec<f32>,
     fused_away: usize,
     live_compute_nodes: usize,
 }
 
 impl ExecutionPlan {
-    /// Compile `graph`. Shape/arity problems the walker would hit at run
-    /// time (matmul mismatches, missing const payloads, unbound inputs)
-    /// surface here instead.
+    /// Compile `graph`. Shape/arity/dtype problems the walker would hit
+    /// at run time (matmul mismatches, missing const payloads, unbound
+    /// inputs, unsupported dtype combinations) surface here instead.
     pub fn compile(g: &Graph) -> Result<ExecutionPlan, String> {
         let schedule = Schedule::of(g);
         let n = g.nodes.len();
@@ -176,6 +195,7 @@ impl ExecutionPlan {
 
         let mut protos: Vec<Proto> = Vec::new();
         let mut live_compute_nodes = 0usize;
+        let mut fused_away = 0usize;
         for &id in &schedule.order {
             let node = g.node(id);
             if matches!(node.op, Op::Input { .. } | Op::Const { .. }) {
@@ -187,8 +207,23 @@ impl ExecutionPlan {
             }
             let kind = if let Some(&ci) = chain_of_last.get(&id) {
                 let ch = &chains[ci];
+                if !matches!(node.dtype, DType::F32 | DType::F16) {
+                    return Err(format!(
+                        "node {id} ({}): fused chain at unsupported dtype {:?}",
+                        node.name, node.dtype
+                    ));
+                }
+                // chain members get the same compile-time dtype checks
+                // as standalone kernels (a malformed hand-assembled node
+                // must fail here, not panic inside the fused loop)
+                for &m in &ch.nodes {
+                    check_dtypes(g, g.node(m))
+                        .map_err(|e| format!("node {m} ({}): {e}", g.node(m).name))?;
+                }
+                fused_away += ch.nodes.len() - 1;
                 ProtoKind::Fused(ch.head.clone(), ch.stages.clone())
             } else {
+                check_dtypes(g, node).map_err(|e| format!("node {id} ({}): {e}", node.name))?;
                 let kernel = kernel_for(g, node)
                     .map_err(|e| format!("node {id} ({}): {e}", node.name))?;
                 if node.dtype == DType::I32
@@ -231,15 +266,15 @@ impl ExecutionPlan {
         }
 
         // --- slot assignment with last-use release ------------------------
-        let mut falloc = SlotAlloc::new();
-        let mut ialloc = SlotAlloc::new();
-        let mut fused_away = 0usize;
+        let mut alloc = SlotAlloc::new();
         let mut steps: Vec<Step> = Vec::with_capacity(protos.len());
+        let mut fscratch_len = 0usize;
 
         let vref = |loc: &Vec<Option<Loc>>, id: NodeId| -> ValueRef {
             let node = g.node(id);
             ValueRef {
                 loc: loc[id].expect("value location resolved in topo order"),
+                dtype: node.dtype,
                 shape: node.shape.clone(),
                 numel: numel(&node.shape),
             }
@@ -250,11 +285,11 @@ impl ExecutionPlan {
             let nel = numel(&node.shape);
             // the output slot is assigned BEFORE the argument slots are
             // released, so a step never aliases its own inputs
-            let out_loc = match node.dtype {
-                DType::F32 => Loc::SlotF(falloc.alloc(nel)),
-                DType::I32 => Loc::SlotI(ialloc.alloc(nel)),
-            };
+            let out_loc = Loc::Slot(alloc.alloc(nel * node.dtype.size_bytes()));
             loc[p.out] = Some(out_loc);
+            if node.dtype == DType::I8 {
+                fscratch_len = fscratch_len.max(nel);
+            }
 
             let mut arg_ids: Vec<NodeId> = Vec::new();
             let kind = match &p.kind {
@@ -277,14 +312,12 @@ impl ExecutionPlan {
                             FusedHead::Binary(*k, vref(&loc, *a), vref(&loc, *b))
                         }
                     };
-                    fused_away += stages.len().saturating_sub(
-                        usize::from(matches!(head, ChainHead::Value(_))),
-                    );
                     StepKind::Fused { head: fh, stages: stages.clone() }
                 }
             };
             steps.push(Step {
                 out: out_loc,
+                out_dtype: node.dtype,
                 out_shape: node.shape.clone(),
                 out_numel: nel,
                 kind,
@@ -294,10 +327,8 @@ impl ExecutionPlan {
             for &a in &arg_ids {
                 uses[a] -= 1;
                 if uses[a] == 0 {
-                    match loc[a] {
-                        Some(Loc::SlotF(s)) => falloc.release(s),
-                        Some(Loc::SlotI(s)) => ialloc.release(s),
-                        _ => {}
+                    if let Some(Loc::Slot(s)) = loc[a] {
+                        alloc.release(s);
                     }
                 }
             }
@@ -323,8 +354,9 @@ impl ExecutionPlan {
             consts,
             steps,
             outputs,
-            arena: Arena::from_sizes(&falloc.sizes, &ialloc.sizes),
+            arena: Arena::from_sizes(&alloc.sizes),
             scratch: Vec::with_capacity(max_rank),
+            fscratch: vec![0.0; fscratch_len],
             fused_away,
             live_compute_nodes,
         })
@@ -369,15 +401,18 @@ impl ExecutionPlan {
             }
             if t.dtype() != self.input_dtypes[k] {
                 return Err(format!(
-                    "input {} ({}): dtype mismatch",
-                    self.input_ids[k], self.input_names[k]
+                    "input {} ({}): dtype mismatch (expected {}, got {})",
+                    self.input_ids[k],
+                    self.input_names[k],
+                    self.input_dtypes[k].name(),
+                    t.dtype().name()
                 ));
             }
         }
 
-        let Self { steps, arena, consts, scratch, .. } = self;
+        let Self { steps, arena, consts, scratch, fscratch, .. } = self;
         for step in steps.iter() {
-            exec_step(step, arena, consts, inputs, scratch)?;
+            exec_step(step, arena, consts, inputs, scratch, fscratch)?;
         }
 
         self.outputs
@@ -386,12 +421,25 @@ impl ExecutionPlan {
                 Ok(match r.loc {
                     Loc::Input(k) => inputs[k].clone(),
                     Loc::Const(c) => self.consts[c].clone(),
-                    Loc::SlotF(s) => {
-                        Tensor::f32(r.shape.clone(), self.arena.f[s][..r.numel].to_vec())
-                    }
-                    Loc::SlotI(s) => {
-                        Tensor::i32(r.shape.clone(), self.arena.i[s][..r.numel].to_vec())
-                    }
+                    Loc::Slot(s) => match r.dtype {
+                        DType::F32 => Tensor::f32(
+                            r.shape.clone(),
+                            self.arena.view::<f32>(s, r.numel).to_vec(),
+                        ),
+                        DType::I32 => Tensor::i32(
+                            r.shape.clone(),
+                            self.arena.view::<i32>(s, r.numel).to_vec(),
+                        ),
+                        DType::F16 => Tensor::f16(
+                            r.shape.clone(),
+                            self.arena.view::<u16>(s, r.numel).to_vec(),
+                        ),
+                        DType::I8 => Tensor::i8(
+                            r.shape.clone(),
+                            self.arena.view::<i8>(s, r.numel).to_vec(),
+                            self.arena.scales[s],
+                        ),
+                    },
                 })
             })
             .collect()
@@ -412,10 +460,10 @@ impl ExecutionPlan {
         self.live_compute_nodes
     }
 
-    /// Number of distinct arena slots (f32 + i32) — the live-range width,
-    /// typically far below the node count thanks to slot reuse.
+    /// Number of distinct arena slots — the live-range width, typically
+    /// far below the node count thanks to (cross-dtype) slot reuse.
     pub fn slot_count(&self) -> usize {
-        self.arena.f.len() + self.arena.i.len()
+        self.arena.slots()
     }
 
     /// Bytes held by the reusable arena.
@@ -444,6 +492,94 @@ impl Backend for PlannedBackend {
 }
 
 // --- compile helpers ------------------------------------------------------------
+
+/// Validate a node's dtype signature (the builder enforces these for
+/// builder-built graphs; pass-rewritten and hand-assembled graphs get
+/// the same rules re-checked here, where a violation is a compile error
+/// instead of a kernel panic).
+fn check_dtypes(g: &Graph, node: &Node) -> Result<(), String> {
+    let dt = node.dtype;
+    let in_dt = |i: usize| g.node(node.inputs[i]).dtype;
+    let value = |d: DType| matches!(d, DType::F32 | DType::F16 | DType::I8);
+    let float = |d: DType| matches!(d, DType::F32 | DType::F16);
+    match &node.op {
+        Op::MatMul => {
+            let (a, b) = (in_dt(0), in_dt(1));
+            if a != b || !value(a) {
+                return Err(format!("matmul operand dtypes {a:?} x {b:?} unsupported"));
+            }
+            let want = if a == DType::I8 { DType::F32 } else { a };
+            if dt != want {
+                return Err(format!("matmul {a:?} operands must emit {want:?}, not {dt:?}"));
+            }
+        }
+        Op::Binary(_) => {
+            if in_dt(0) != dt || in_dt(1) != dt || !value(dt) {
+                return Err(format!(
+                    "binary needs matching value dtypes, got {:?} op {:?} -> {dt:?}",
+                    in_dt(0),
+                    in_dt(1)
+                ));
+            }
+        }
+        Op::Unary(_) | Op::CumSum { .. } | Op::ReduceSum { .. } => {
+            if in_dt(0) != dt || !value(dt) {
+                return Err(format!("dtype {:?} -> {dt:?} unsupported here", in_dt(0)));
+            }
+        }
+        Op::Plu { .. } | Op::Softmax { .. } => {
+            if in_dt(0) != dt || !float(dt) {
+                return Err(format!("needs f32/f16, got {:?} -> {dt:?}", in_dt(0)));
+            }
+        }
+        Op::Conv1dCausal { .. } => {
+            if !float(dt) || in_dt(0) != dt || in_dt(1) != dt || in_dt(2) != dt {
+                return Err("conv1d needs uniform f32/f16 operands".into());
+            }
+        }
+        Op::RmsNorm { .. } => {
+            if !float(dt) || in_dt(0) != dt || in_dt(1) != dt {
+                return Err("rmsnorm needs uniform f32/f16 operands".into());
+            }
+        }
+        Op::Gather => {
+            if in_dt(0) != dt || !value(dt) || in_dt(1) != DType::I32 {
+                return Err(format!(
+                    "gather needs value-dtype data + i32 indices, got {:?}[{:?}]",
+                    in_dt(0),
+                    in_dt(1)
+                ));
+            }
+        }
+        Op::Quantize { dtype } => {
+            if in_dt(0) != DType::F32 || dt != *dtype
+                || !matches!(dtype, DType::F16 | DType::I8)
+            {
+                return Err(format!("quantize f32 -> {dtype:?} got {:?} -> {dt:?}", in_dt(0)));
+            }
+        }
+        Op::Dequantize => {
+            if !matches!(in_dt(0), DType::F16 | DType::I8) || dt != DType::F32 {
+                return Err(format!("dequantize {:?} -> {dt:?} unsupported", in_dt(0)));
+            }
+        }
+        Op::Slice { .. } | Op::Reshape { .. } | Op::Transpose { .. }
+        | Op::Broadcast { .. } => {
+            if in_dt(0) != dt {
+                return Err(format!("layout op changed dtype {:?} -> {dt:?}", in_dt(0)));
+            }
+        }
+        Op::Concat { .. } => {
+            for (i, _) in node.inputs.iter().enumerate() {
+                if in_dt(i) != dt {
+                    return Err(format!("concat operand {i} dtype {:?} != {dt:?}", in_dt(i)));
+                }
+            }
+        }
+        Op::Input { .. } | Op::Const { .. } => {}
+    }
+    Ok(())
+}
 
 fn kernel_for(g: &Graph, node: &Node) -> Result<Kernel, String> {
     Ok(match &node.op {
@@ -564,6 +700,8 @@ fn kernel_for(g: &Graph, node: &Node) -> Result<Kernel, String> {
         Op::Broadcast { .. } => Kernel::StridedCopy {
             strides: kernels::bcast_strides(&node.shape, g.shape(node.inputs[0])),
         },
+        Op::Quantize { dtype } => Kernel::Quantize(*dtype),
+        Op::Dequantize => Kernel::Dequantize,
     })
 }
 
@@ -578,8 +716,12 @@ fn view<'a>(
     let data = match r.loc {
         Loc::Input(k) => tensor_ref(inputs[k]),
         Loc::Const(c) => tensor_ref(&consts[c]),
-        Loc::SlotF(s) => DataRef::F32(&arena.f[s][..r.numel]),
-        Loc::SlotI(s) => DataRef::I32(&arena.i[s][..r.numel]),
+        Loc::Slot(s) => match r.dtype {
+            DType::F32 => DataRef::F32(arena.view::<f32>(s, r.numel)),
+            DType::I32 => DataRef::I32(arena.view::<i32>(s, r.numel)),
+            DType::F16 => DataRef::F16(arena.view::<u16>(s, r.numel)),
+            DType::I8 => DataRef::I8(arena.view::<i8>(s, r.numel), arena.scales[s]),
+        },
     };
     View { shape: &r.shape, data }
 }
@@ -588,6 +730,8 @@ fn tensor_ref(t: &Tensor) -> DataRef<'_> {
     match &t.data {
         Data::F32(v) => DataRef::F32(v),
         Data::I32(v) => DataRef::I32(v),
+        Data::F16(v) => DataRef::F16(v),
+        Data::I8 { data, scale } => DataRef::I8(data, *scale),
     }
 }
 
@@ -597,25 +741,62 @@ fn exec_step(
     consts: &[Tensor],
     inputs: &[&Tensor],
     scratch: &mut Vec<usize>,
+    fscratch: &mut [f32],
 ) -> Result<(), String> {
-    match step.out {
-        Loc::SlotF(s) => {
-            let mut buf = arena.take_f(s);
-            let res = run_f(step, &mut buf[..step.out_numel], arena, consts, inputs, scratch);
-            arena.put_f(s, buf);
-            res.map_err(|e| format!("{}: {e}", step.label))
+    let Loc::Slot(s) = step.out else {
+        unreachable!("compute step writes to a slot")
+    };
+    let mut buf = arena.take(s);
+    let res = match step.out_dtype {
+        DType::F32 => run_f32(
+            step,
+            cast_slice_mut::<f32>(&mut buf, step.out_numel),
+            arena,
+            consts,
+            inputs,
+            scratch,
+        )
+        .map(|()| None),
+        DType::F16 => run_f16(
+            step,
+            cast_slice_mut::<u16>(&mut buf, step.out_numel),
+            arena,
+            consts,
+            inputs,
+            scratch,
+        )
+        .map(|()| None),
+        DType::I8 => run_i8(
+            step,
+            cast_slice_mut::<i8>(&mut buf, step.out_numel),
+            arena,
+            consts,
+            inputs,
+            scratch,
+            fscratch,
+        )
+        .map(Some),
+        DType::I32 => run_i32(
+            step,
+            cast_slice_mut::<i32>(&mut buf, step.out_numel),
+            arena,
+            consts,
+            inputs,
+        )
+        .map(|()| None),
+    };
+    arena.put(s, buf);
+    match res {
+        Ok(Some(scale)) => {
+            arena.scales[s] = scale;
+            Ok(())
         }
-        Loc::SlotI(s) => {
-            let mut buf = arena.take_i(s);
-            let res = run_i(step, &mut buf[..step.out_numel], arena, consts, inputs);
-            arena.put_i(s, buf);
-            res.map_err(|e| format!("{}: {e}", step.label))
-        }
-        Loc::Input(_) | Loc::Const(_) => unreachable!("compute step writes to a slot"),
+        Ok(None) => Ok(()),
+        Err(e) => Err(format!("{}: {e}", step.label)),
     }
 }
 
-fn run_f(
+fn run_f32(
     step: &Step,
     out: &mut [f32],
     arena: &Arena,
@@ -654,17 +835,25 @@ fn run_f(
             let v = |i: usize| view(&args[i], arena, consts, inputs);
             match kernel {
                 Kernel::MatMul { batch, m, k, n, a_step, b_step } => {
-                    kernels::matmul_out(
-                        v(0).f32(),
-                        v(1).f32(),
-                        out,
-                        *batch,
-                        *m,
-                        *k,
-                        *n,
-                        *a_step,
-                        *b_step,
-                    );
+                    if args[0].dtype == DType::I8 {
+                        let (qa, sa) = v(0).i8();
+                        let (qb, sb) = v(1).i8();
+                        kernels::matmul_i8_out(
+                            qa, sa, qb, sb, out, *batch, *m, *k, *n, *a_step, *b_step,
+                        );
+                    } else {
+                        kernels::matmul_out(
+                            v(0).f32(),
+                            v(1).f32(),
+                            out,
+                            *batch,
+                            *m,
+                            *k,
+                            *n,
+                            *a_step,
+                            *b_step,
+                        );
+                    }
                     Ok(())
                 }
                 Kernel::Binary { kind, mode } => {
@@ -726,13 +915,249 @@ fn run_f(
                     kernels::strided_copy_out(v(0).f32(), out, &step.out_shape, strides, scratch);
                     Ok(())
                 }
+                Kernel::Dequantize => {
+                    match v(0).data {
+                        DataRef::F16(x) => kernels::dequantize_f16_out(x, out),
+                        DataRef::I8(q, s) => kernels::dequantize_i8_out(q, s, out),
+                        _ => unreachable!("dequantize input dtype checked at compile"),
+                    }
+                    Ok(())
+                }
+                Kernel::Quantize(_) => unreachable!("quantize never emits f32"),
             }
         }
     }
 }
 
+/// One widen-round trip: the value an f16 store would produce, kept in
+/// f32. Fused f16 chains round after EVERY stage, so fusion stays
+/// bitwise-identical to executing the chain's nodes one at a time.
+#[inline]
+fn round_f16(v: f32) -> f32 {
+    f16_to_f32(f32_to_f16(v))
+}
+
+fn run_f16(
+    step: &Step,
+    out: &mut [u16],
+    arena: &Arena,
+    consts: &[Tensor],
+    inputs: &[&Tensor],
+    scratch: &mut Vec<usize>,
+) -> Result<(), String> {
+    match &step.kind {
+        StepKind::Fused { head, stages } => {
+            match head {
+                FusedHead::Value(x) => {
+                    let xv = view(x, arena, consts, inputs).f16();
+                    for (o, &v) in out.iter_mut().zip(xv) {
+                        let mut acc = f16_to_f32(v);
+                        for st in stages {
+                            acc = round_f16(st.apply(acc));
+                        }
+                        *o = f32_to_f16(acc);
+                    }
+                }
+                FusedHead::Binary(kind, a, b) => {
+                    let av = view(a, arena, consts, inputs).f16();
+                    let bv = view(b, arena, consts, inputs).f16();
+                    for i in 0..out.len() {
+                        let mut acc = round_f16(kernels::apply_binary(
+                            *kind,
+                            f16_to_f32(av[i]),
+                            f16_to_f32(bv[i]),
+                        ));
+                        for st in stages {
+                            acc = round_f16(st.apply(acc));
+                        }
+                        out[i] = f32_to_f16(acc);
+                    }
+                }
+            }
+            Ok(())
+        }
+        StepKind::Kernel { kernel, args } => {
+            let v = |i: usize| view(&args[i], arena, consts, inputs);
+            match kernel {
+                Kernel::MatMul { batch, m, k, n, a_step, b_step } => {
+                    kernels::matmul_out_g::<u16>(
+                        v(0).f16(),
+                        v(1).f16(),
+                        out,
+                        *batch,
+                        *m,
+                        *k,
+                        *n,
+                        *a_step,
+                        *b_step,
+                    );
+                    Ok(())
+                }
+                Kernel::Binary { kind, mode } => {
+                    kernels::binary_out_g::<u16>(
+                        *kind,
+                        mode,
+                        v(0).f16(),
+                        v(1).f16(),
+                        &step.out_shape,
+                        out,
+                        scratch,
+                    );
+                    Ok(())
+                }
+                Kernel::Unary(k) => {
+                    kernels::unary_out_g::<u16>(*k, v(0).f16(), out);
+                    Ok(())
+                }
+                Kernel::Plu(table) => {
+                    kernels::plu_out_g::<u16>(table, v(0).f16(), out);
+                    Ok(())
+                }
+                Kernel::CumSum { outer, n_axis, inner } => {
+                    kernels::cumsum_out_g::<u16>(v(0).f16(), out, *outer, *n_axis, *inner);
+                    Ok(())
+                }
+                Kernel::ReduceSum { outer, n_axis, inner } => {
+                    kernels::reduce_sum_out_g::<u16>(v(0).f16(), out, *outer, *n_axis, *inner);
+                    Ok(())
+                }
+                Kernel::Gather { row, vocab } => {
+                    kernels::gather_out(v(0).f16(), v(1).i32(), out, *row, *vocab)
+                }
+                Kernel::Conv1d { t, c, k } => {
+                    kernels::conv1d_out_g::<u16>(
+                        v(0).f16(),
+                        v(1).f16(),
+                        v(2).f16(),
+                        out,
+                        *t,
+                        *c,
+                        *k,
+                    );
+                    Ok(())
+                }
+                Kernel::RmsNorm { rows, d, eps } => {
+                    kernels::rmsnorm_out_g::<u16>(v(0).f16(), v(1).f16(), out, *rows, *d, *eps);
+                    Ok(())
+                }
+                Kernel::Softmax { outer, n_axis, inner } => {
+                    kernels::softmax_out_g::<u16>(v(0).f16(), out, *outer, *n_axis, *inner);
+                    Ok(())
+                }
+                Kernel::Slice { outer, n_axis, inner, start, len } => {
+                    kernels::slice_out(v(0).f16(), out, *outer, *n_axis, *inner, *start, *len);
+                    Ok(())
+                }
+                Kernel::Concat { outer, inner, parts } => {
+                    concat_into(out, *outer, *inner, parts, |i| v(i).f16());
+                    Ok(())
+                }
+                Kernel::Copy => {
+                    kernels::copy_out(v(0).f16(), out);
+                    Ok(())
+                }
+                Kernel::StridedCopy { strides } => {
+                    kernels::strided_copy_out(v(0).f16(), out, &step.out_shape, strides, scratch);
+                    Ok(())
+                }
+                Kernel::Quantize(DType::F16) => {
+                    kernels::quantize_f16_out(v(0).f32(), out);
+                    Ok(())
+                }
+                other => unreachable!("f16 kernel {other:?} rejected at plan time"),
+            }
+        }
+    }
+}
+
+/// i8 steps return the produced value's dynamic scale, recorded in the
+/// arena's per-slot scale table. Compute kernels stage their exact f32
+/// result in `fscratch` and requantize once; layout kernels move raw
+/// quantized bytes and carry the input scale through unchanged.
+#[allow(clippy::too_many_arguments)]
+fn run_i8(
+    step: &Step,
+    out: &mut [i8],
+    arena: &Arena,
+    consts: &[Tensor],
+    inputs: &[&Tensor],
+    scratch: &mut Vec<usize>,
+    fscratch: &mut [f32],
+) -> Result<f32, String> {
+    let StepKind::Kernel { kernel, args } = &step.kind else {
+        unreachable!("i8 fused chains rejected at plan time")
+    };
+    let v = |i: usize| view(&args[i], arena, consts, inputs);
+    let n = step.out_numel;
+    match kernel {
+        Kernel::Quantize(DType::I8) => Ok(kernels::quantize_i8_out(v(0).f32(), out)),
+        Kernel::Unary(k) => {
+            let (q, s) = v(0).i8();
+            kernels::unary_i8_into(*k, q, s, &mut fscratch[..n]);
+            Ok(kernels::requantize_i8(&fscratch[..n], out))
+        }
+        Kernel::Binary { kind, mode } => {
+            let (qa, sa) = v(0).i8();
+            let (qb, sb) = v(1).i8();
+            kernels::binary_i8_into(
+                *kind,
+                mode,
+                qa,
+                sa,
+                qb,
+                sb,
+                &step.out_shape,
+                &mut fscratch[..n],
+                scratch,
+            );
+            Ok(kernels::requantize_i8(&fscratch[..n], out))
+        }
+        Kernel::CumSum { outer, n_axis, inner } => {
+            let (q, s) = v(0).i8();
+            kernels::cumsum_i8_into(q, s, &mut fscratch[..n], *outer, *n_axis, *inner);
+            Ok(kernels::requantize_i8(&fscratch[..n], out))
+        }
+        Kernel::ReduceSum { outer, n_axis, inner } => {
+            let (q, s) = v(0).i8();
+            kernels::reduce_sum_i8_into(q, s, &mut fscratch[..n], *outer, *n_axis, *inner);
+            Ok(kernels::requantize_i8(&fscratch[..n], out))
+        }
+        Kernel::Gather { row, vocab } => {
+            let (q, s) = v(0).i8();
+            kernels::gather_out(q, v(1).i32(), out, *row, *vocab)?;
+            Ok(s)
+        }
+        Kernel::Slice { outer, n_axis, inner, start, len } => {
+            let (q, s) = v(0).i8();
+            kernels::slice_out(q, out, *outer, *n_axis, *inner, *start, *len);
+            Ok(s)
+        }
+        Kernel::Concat { outer, inner, parts } => {
+            let s0 = v(0).i8().1;
+            for i in 1..args.len() {
+                if v(i).i8().1 != s0 {
+                    return Err("i8 concat needs equal per-tensor scales (got a mix)".into());
+                }
+            }
+            concat_into(out, *outer, *inner, parts, |i| v(i).i8().0);
+            Ok(s0)
+        }
+        Kernel::Copy => {
+            let (q, s) = v(0).i8();
+            kernels::copy_out(q, out);
+            Ok(s)
+        }
+        Kernel::StridedCopy { strides } => {
+            let (q, s) = v(0).i8();
+            kernels::strided_copy_out(q, out, &step.out_shape, strides, scratch);
+            Ok(s)
+        }
+        other => unreachable!("i8 kernel {other:?} rejected at plan time"),
+    }
+}
+
 /// Concatenate along the compile-time-resolved axis: `view_of(i)` yields
-/// the i-th argument's payload. Shared between the f32 and i32 paths;
+/// the i-th argument's payload. Shared between every dtype's path;
 /// copies straight into the arena slot, no per-part staging.
 fn concat_into<'a, T: Copy + 'a>(
     out: &mut [T],
@@ -754,7 +1179,7 @@ fn concat_into<'a, T: Copy + 'a>(
 }
 
 /// i32 outputs: only data-movement ops (plan compilation guarantees it).
-fn run_i(
+fn run_i32(
     step: &Step,
     out: &mut [i32],
     arena: &Arena,
@@ -776,7 +1201,7 @@ fn run_i(
             }
             Ok(())
         }
-        StepKind::Fused { .. } => unreachable!("fused chains are f32-only"),
+        StepKind::Fused { .. } => unreachable!("fused chains are f32/f16-only"),
     }
 }
 
@@ -830,6 +1255,26 @@ mod tests {
     }
 
     #[test]
+    fn chains_fuse_through_reshape_bitwise() {
+        // silu -> reshape -> exp collapses to one step and still matches
+        // the walker (which materializes the reshape) exactly
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![2, 4]);
+        let a = g.silu(x, "a");
+        let r = g.reshape(a, vec![8], "r");
+        let b = g.exp(r, "b");
+        g.output(b);
+        let mut p = plan_of(&g);
+        assert_eq!(p.step_count(), 1, "reshape must not break the chain");
+        assert_eq!(p.fused_node_count(), 2);
+        let xs = Tensor::f32(vec![2, 4], (0..8).map(|i| i as f32 - 3.5).collect());
+        let got = p.run(&[xs.clone()]).unwrap();
+        let want = super::super::naive::run(&g, &[xs]).unwrap();
+        assert_eq!(got[0].as_f32(), want[0].as_f32());
+        assert_eq!(got[0].shape, vec![8]);
+    }
+
+    #[test]
     fn slots_are_reused_along_a_chain() {
         // a long non-fusable chain: live-range width is 2, so the arena
         // must stay at 2 slots however deep the chain gets
@@ -843,6 +1288,25 @@ mod tests {
         let p = plan_of(&g);
         assert_eq!(p.step_count(), 10);
         assert!(p.slot_count() <= 2, "slots: {}", p.slot_count());
+    }
+
+    #[test]
+    fn mixed_dtype_values_share_the_slot_pool() {
+        // f32 -> quantize(i8) -> dequantize -> f32 chain: the byte arena
+        // reuses released f32 slots for the narrower i8 value
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![16]);
+        let a = g.cumsum(x, 0, "a");
+        let q = g.quantize(a, DType::I8, "q");
+        let d = g.dequantize(q, "d");
+        let b = g.cumsum(d, 0, "b");
+        g.output(b);
+        let mut p = plan_of(&g);
+        assert!(p.slot_count() <= 2, "slots: {}", p.slot_count());
+        let xs = Tensor::f32(vec![16], (0..16).map(|i| (i as f32) * 0.25 - 2.0).collect());
+        let got = p.run(&[xs.clone()]).unwrap();
+        let want = super::super::naive::run(&g, &[xs]).unwrap();
+        assert_eq!(got[0].as_f32(), want[0].as_f32(), "planned vs naive i8 round trip");
     }
 
     #[test]
@@ -888,6 +1352,10 @@ mod tests {
         assert!(p.run(&[]).is_err());
         assert!(p.run(&[Tensor::f32(vec![3], vec![0.0; 3])]).is_err());
         assert!(p.run(&[Tensor::i32(vec![2], vec![0, 0])]).is_err());
+        // a reduced-precision tensor is also a dtype mismatch for an f32
+        // input, with the dtype names in the message
+        let err = p.run(&[Tensor::f16(vec![2], vec![0, 0])]).unwrap_err();
+        assert!(err.contains("f16") && err.contains("f32"), "{err}");
     }
 
     #[test]
@@ -916,5 +1384,93 @@ mod tests {
         assert_eq!(p.step_count(), 0);
         let r = p.run(&[Tensor::f32(vec![2], vec![1., 2.])]).unwrap();
         assert_eq!(r[0].as_f32(), &[1., 2.]);
+    }
+
+    #[test]
+    fn f16_plan_matches_naive_bitwise() {
+        use crate::graph::op::UnKind;
+        let mut g = Graph::new("t");
+        let x = g.input_dtype("x", vec![3, 4], DType::F16);
+        let w = g.input_dtype("w", vec![4, 2], DType::F16);
+        let m = g.matmul(x, w, "m");
+        let s = g.unary(UnKind::SiLU, m, "s");
+        let r = g.reduce_sum(s, 0, "r");
+        g.output(r);
+        let mut p = plan_of(&g);
+        let xs = Tensor::f32(vec![3, 4], (0..12).map(|i| (i as f32) * 0.3 - 2.0).collect())
+            .to_dtype(DType::F16);
+        let ws = Tensor::f32(vec![4, 2], (0..8).map(|i| (i as f32) * 0.1 - 0.4).collect())
+            .to_dtype(DType::F16);
+        let got = p.run(&[xs.clone(), ws.clone()]).unwrap();
+        let want = super::super::naive::run(&g, &[xs, ws]).unwrap();
+        assert_eq!(got[0].as_f16(), want[0].as_f16(), "f16 planned vs naive");
+    }
+
+    #[test]
+    fn i8_matmul_emits_f32_and_matches_naive() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![2, 3]);
+        let w = g.input_dtype("w", vec![3, 2], DType::I8);
+        let aq = g.quantize(a, DType::I8, "aq");
+        let m = g.matmul(aq, w, "m");
+        g.output(m);
+        let mut p = plan_of(&g);
+        let at = Tensor::f32(vec![2, 3], vec![0.5, -1.0, 2.0, 1.5, 0.0, -0.5]);
+        let wt = Tensor::f32(vec![3, 2], vec![0.1, 0.2, -0.3, 0.4, 0.5, -0.6])
+            .to_dtype(DType::I8);
+        let got = p.run(&[at.clone(), wt.clone()]).unwrap();
+        let want = super::super::naive::run(&g, &[at.clone(), wt]).unwrap();
+        assert_eq!(got[0].dtype(), DType::F32);
+        assert_eq!(got[0].as_f32(), want[0].as_f32(), "i8 planned vs naive");
+        // and close to the exact f32 product (per-tensor 8-bit budget)
+        let mut exact = Graph::new("e");
+        let ea = exact.input("a", vec![2, 3]);
+        let ew = exact.input("w", vec![3, 2]);
+        let em = exact.matmul(ea, ew, "m");
+        exact.output(em);
+        let wf = Tensor::f32(vec![3, 2], vec![0.1, 0.2, -0.3, 0.4, 0.5, -0.6]);
+        let ref_out = super::super::naive::run(&exact, &[at, wf]).unwrap();
+        for (q, e) in got[0].as_f32().iter().zip(ref_out[0].as_f32()) {
+            assert!((q - e).abs() < 0.1, "quantized {q} vs exact {e}");
+        }
+    }
+
+    #[test]
+    fn i8_scale_travels_through_layout_ops() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![2, 4]);
+        let q = g.quantize(x, DType::I8, "q");
+        let t = g.transpose(q, vec![1, 0], "t");
+        let s = g.slice(t, 0, 1, 2, "s");
+        g.output(s);
+        let mut p = plan_of(&g);
+        let xs = Tensor::f32(vec![2, 4], vec![1., 2., 3., 4., -1., -2., -3., -4.]);
+        let got = p.run(&[xs.clone()]).unwrap();
+        let want = super::super::naive::run(&g, &[xs]).unwrap();
+        let (gq, gs) = got[0].as_i8();
+        let (wq, ws) = want[0].as_i8();
+        assert_eq!(gq, wq);
+        assert_eq!(gs, ws);
+        assert_eq!(gs, 4.0 / 127.0, "layout ops must carry the scale unchanged");
+    }
+
+    #[test]
+    fn unsupported_dtype_combos_fail_at_compile_time() {
+        use crate::graph::op::Op;
+        // softmax on i8 sneaks past the builder via add_node; the plan
+        // compiler must reject it with attribution
+        let mut g = Graph::new("t");
+        let x = g.input_dtype("x", vec![4], DType::I8);
+        let sm = g.add_node(
+            Op::Softmax { axis: 0 },
+            vec![x],
+            vec![4],
+            DType::I8,
+            "sm".into(),
+            None,
+        );
+        g.output(sm);
+        let err = ExecutionPlan::compile(&g).unwrap_err();
+        assert!(err.contains("sm") && err.contains("f32/f16"), "{err}");
     }
 }

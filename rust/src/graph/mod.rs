@@ -83,30 +83,22 @@ impl Graph {
 
     // --- graph inputs / constants ----------------------------------------
 
-    /// Declare an external f32 input.
-    pub fn input(&mut self, name: &str, shape: Vec<usize>) -> NodeId {
-        let id = self.push(
-            Op::Input { dtype: DType::F32 },
-            vec![],
-            shape,
-            DType::F32,
-            name,
-        );
+    /// Declare an external input of an explicit dtype (quantized serving
+    /// graphs declare their weight inputs f16/i8).
+    pub fn input_dtype(&mut self, name: &str, shape: Vec<usize>, dtype: DType) -> NodeId {
+        let id = self.push(Op::Input { dtype }, vec![], shape, dtype, name);
         self.inputs.push(id);
         id
     }
 
+    /// Declare an external f32 input.
+    pub fn input(&mut self, name: &str, shape: Vec<usize>) -> NodeId {
+        self.input_dtype(name, shape, DType::F32)
+    }
+
     /// Declare an external i32 input (token indices).
     pub fn input_i32(&mut self, name: &str, shape: Vec<usize>) -> NodeId {
-        let id = self.push(
-            Op::Input { dtype: DType::I32 },
-            vec![],
-            shape,
-            DType::I32,
-            name,
-        );
-        self.inputs.push(id);
-        id
+        self.input_dtype(name, shape, DType::I32)
     }
 
     /// Inline constant tensor.
@@ -158,13 +150,27 @@ impl Graph {
 
     // --- compute ops -------------------------------------------------------
 
-    /// Batched matmul [..., m, k] x [..., k, n].
+    /// Dtype of a value-typed (non-i32) operand pair; both sides must
+    /// agree — mixed-precision arithmetic goes through explicit
+    /// Quantize/Dequantize nodes, never implicit promotion.
+    fn value_dtype2(&self, a: NodeId, b: NodeId, name: &str) -> DType {
+        let (da, db) = (self.node(a).dtype, self.node(b).dtype);
+        assert_eq!(da, db, "dtype mismatch {da:?} vs {db:?} at {name}");
+        assert_ne!(da, DType::I32, "i32 is an index type, not a value type, at {name}");
+        da
+    }
+
+    /// Batched matmul [..., m, k] x [..., k, n]. Operand dtypes must
+    /// match; i8 x i8 accumulates exactly (i32) and emits f32, f16 x f16
+    /// accumulates in f32 and rounds the result back to f16.
     pub fn matmul(&mut self, a: NodeId, b: NodeId, name: &str) -> NodeId {
         let sa = self.shape(a).to_vec();
         let sb = self.shape(b).to_vec();
         let shape = matmul_shape(&sa, &sb)
             .unwrap_or_else(|| panic!("matmul shape mismatch {sa:?} x {sb:?} at {name}"));
-        self.push(Op::MatMul, vec![a, b], shape, DType::F32, name)
+        let dt = self.value_dtype2(a, b, name);
+        let out_dt = if dt == DType::I8 { DType::F32 } else { dt };
+        self.push(Op::MatMul, vec![a, b], shape, out_dt, name)
     }
 
     fn binary(&mut self, kind: BinKind, a: NodeId, b: NodeId, name: &str) -> NodeId {
@@ -172,7 +178,8 @@ impl Graph {
         let sb = self.shape(b).to_vec();
         let shape = broadcast_shapes(&sa, &sb)
             .unwrap_or_else(|| panic!("broadcast mismatch {sa:?} vs {sb:?} at {name}"));
-        self.push(Op::Binary(kind), vec![a, b], shape, DType::F32, name)
+        let dt = self.value_dtype2(a, b, name);
+        self.push(Op::Binary(kind), vec![a, b], shape, dt, name)
     }
 
     pub fn add(&mut self, a: NodeId, b: NodeId, name: &str) -> NodeId {
@@ -197,7 +204,9 @@ impl Graph {
 
     pub fn unary(&mut self, kind: UnKind, x: NodeId, name: &str) -> NodeId {
         let shape = self.shape(x).to_vec();
-        self.push(Op::Unary(kind), vec![x], shape, DType::F32, name)
+        let dt = self.node(x).dtype;
+        assert_ne!(dt, DType::I32, "unary {kind:?} needs a value dtype at {name}");
+        self.push(Op::Unary(kind), vec![x], shape, dt, name)
     }
 
     pub fn exp(&mut self, x: NodeId, name: &str) -> NodeId {
@@ -221,31 +230,44 @@ impl Graph {
         name: &str,
     ) -> NodeId {
         let shape = self.shape(x).to_vec();
-        self.push(Op::Plu { table, approximates }, vec![x], shape, DType::F32, name)
+        let dt = self.node(x).dtype;
+        assert!(
+            matches!(dt, DType::F32 | DType::F16),
+            "PLU needs f32/f16 input at {name}"
+        );
+        self.push(Op::Plu { table, approximates }, vec![x], shape, dt, name)
     }
 
     pub fn cumsum(&mut self, x: NodeId, axis: usize, name: &str) -> NodeId {
         let shape = self.shape(x).to_vec();
         assert!(axis < shape.len(), "cumsum axis {axis} of {shape:?}");
-        self.push(Op::CumSum { axis }, vec![x], shape, DType::F32, name)
+        let dt = self.node(x).dtype;
+        assert_ne!(dt, DType::I32, "cumsum needs a value dtype at {name}");
+        self.push(Op::CumSum { axis }, vec![x], shape, dt, name)
     }
 
     pub fn reduce_sum(&mut self, x: NodeId, axis: usize, name: &str) -> NodeId {
         let mut shape = self.shape(x).to_vec();
         assert!(axis < shape.len(), "reduce axis {axis} of {shape:?}");
         shape.remove(axis);
-        self.push(Op::ReduceSum { axis }, vec![x], shape, DType::F32, name)
+        let dt = self.node(x).dtype;
+        assert_ne!(dt, DType::I32, "reduce_sum needs a value dtype at {name}");
+        self.push(Op::ReduceSum { axis }, vec![x], shape, dt, name)
     }
 
     /// Row gather: `data[v, ...]` by i32 `indices[n]` -> `[n, ...]`.
+    /// Pure data movement: the output keeps the table's dtype (an f16 /
+    /// i8 embedding table gathers without widening).
     pub fn gather(&mut self, data: NodeId, indices: NodeId, name: &str) -> NodeId {
         let sd = self.shape(data).to_vec();
         let si = self.shape(indices).to_vec();
         assert_eq!(self.node(indices).dtype, DType::I32, "gather needs i32 idx");
         assert_eq!(si.len(), 1, "gather indices must be rank 1");
+        let dt = self.node(data).dtype;
+        assert_ne!(dt, DType::I32, "gather data needs a value dtype at {name}");
         let mut shape = vec![si[0]];
         shape.extend_from_slice(&sd[1..]);
-        self.push(Op::Gather, vec![data, indices], shape, DType::F32, name)
+        self.push(Op::Gather, vec![data, indices], shape, dt, name)
     }
 
     /// Depthwise causal conv over (T, C) with zero left-context.
@@ -263,7 +285,13 @@ impl Graph {
         assert_eq!(sx[1], sw[1], "conv channel mismatch");
         assert_eq!(self.shape(b), &[sx[1]], "conv bias mismatch");
         let k = sw[0];
-        self.push(Op::Conv1dCausal { k }, vec![x, w, b], sx, DType::F32, name)
+        let dt = self.value_dtype2(x, w, name);
+        assert_eq!(self.node(b).dtype, dt, "conv bias dtype mismatch at {name}");
+        assert!(
+            matches!(dt, DType::F32 | DType::F16),
+            "conv1d needs f32/f16 operands at {name}"
+        );
+        self.push(Op::Conv1dCausal { k }, vec![x, w, b], sx, dt, name)
     }
 
     pub fn rmsnorm(&mut self, x: NodeId, w: NodeId, name: &str) -> NodeId {
@@ -273,13 +301,45 @@ impl Graph {
             &shape[shape.len() - 1..],
             "rmsnorm scale must match last dim"
         );
-        self.push(Op::RmsNorm { eps: 1e-5 }, vec![x, w], shape, DType::F32, name)
+        let dt = self.value_dtype2(x, w, name);
+        assert!(
+            matches!(dt, DType::F32 | DType::F16),
+            "rmsnorm needs f32/f16 operands at {name}"
+        );
+        self.push(Op::RmsNorm { eps: 1e-5 }, vec![x, w], shape, dt, name)
     }
 
     pub fn softmax(&mut self, x: NodeId, axis: usize, name: &str) -> NodeId {
         let shape = self.shape(x).to_vec();
         assert!(axis < shape.len());
-        self.push(Op::Softmax { axis }, vec![x], shape, DType::F32, name)
+        let dt = self.node(x).dtype;
+        assert!(
+            matches!(dt, DType::F32 | DType::F16),
+            "softmax needs f32/f16 input at {name}"
+        );
+        self.push(Op::Softmax { axis }, vec![x], shape, dt, name)
+    }
+
+    /// Narrow f32 to `dtype` (f16 or i8; i8 computes a dynamic per-tensor
+    /// symmetric scale at execution time). Installed by `passes::quantize`.
+    pub fn quantize(&mut self, x: NodeId, dtype: DType, name: &str) -> NodeId {
+        assert_eq!(self.node(x).dtype, DType::F32, "quantize takes f32 at {name}");
+        assert!(
+            matches!(dtype, DType::F16 | DType::I8),
+            "quantize target must be f16/i8 at {name}"
+        );
+        let shape = self.shape(x).to_vec();
+        self.push(Op::Quantize { dtype }, vec![x], shape, dtype, name)
+    }
+
+    /// Widen f16 / i8 back to f32.
+    pub fn dequantize(&mut self, x: NodeId, name: &str) -> NodeId {
+        assert!(
+            matches!(self.node(x).dtype, DType::F16 | DType::I8),
+            "dequantize takes f16/i8 at {name}"
+        );
+        let shape = self.shape(x).to_vec();
+        self.push(Op::Dequantize, vec![x], shape, DType::F32, name)
     }
 
     // --- layout ops ---------------------------------------------------------
@@ -489,5 +549,37 @@ mod tests {
         let b = g.input("b", vec![2, 5]);
         let c = g.concat(&[a, b], 1, "c");
         assert_eq!(g.shape(c), &[2, 8]);
+    }
+
+    #[test]
+    fn dtypes_propagate_through_the_builder() {
+        let mut g = Graph::new("t");
+        let w = g.input_dtype("w", vec![4, 3], DType::I8);
+        let x = g.input("x", vec![2, 4]);
+        let xq = g.quantize(x, DType::I8, "xq");
+        assert_eq!(g.node(xq).dtype, DType::I8);
+        // i8 x i8 matmul emits f32 (exact accumulation, dequantized out)
+        let m = g.matmul(xq, w, "m");
+        assert_eq!(g.node(m).dtype, DType::F32);
+        // f16 stays f16 through elementwise and matmul
+        let h = g.input_dtype("h", vec![3, 3], DType::F16);
+        let h2 = g.silu(h, "h2");
+        assert_eq!(g.node(h2).dtype, DType::F16);
+        let hm = g.matmul(h2, h, "hm");
+        assert_eq!(g.node(hm).dtype, DType::F16);
+        let hd = g.dequantize(hm, "hd");
+        assert_eq!(g.node(hd).dtype, DType::F32);
+        // layout ops preserve reduced precision
+        let ht = g.transpose(h, vec![1, 0], "ht");
+        assert_eq!(g.node(ht).dtype, DType::F16);
+    }
+
+    #[test]
+    #[should_panic(expected = "dtype mismatch")]
+    fn mixed_dtype_binary_panics() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![2]);
+        let b = g.input_dtype("b", vec![2], DType::F16);
+        g.add(a, b, "bad");
     }
 }

@@ -76,6 +76,12 @@ pub enum Op {
     Conv1dCausal { k: usize },
     /// RMS normalization over the last axis with learned scale.
     RmsNorm { eps: f32 },
+    /// Narrow f32 to a reduced-precision dtype (f16 round-to-nearest-even
+    /// or per-tensor symmetric i8 with a dynamically computed scale).
+    /// Inserted by `passes::quantize`, not by model builders.
+    Quantize { dtype: DType },
+    /// Widen f16 / i8 back to f32 (exact for f16).
+    Dequantize,
     /// Softmax along `axis` (census completeness; blocks don't use it).
     Softmax { axis: usize },
     Slice { axis: usize, start: usize, len: usize },
@@ -115,6 +121,8 @@ impl Op {
             Op::Gather => "Gather",
             Op::Conv1dCausal { .. } => "Conv1d",
             Op::RmsNorm { .. } => "RMSNorm",
+            Op::Quantize { .. } => "Quantize",
+            Op::Dequantize => "Dequantize",
             Op::Softmax { .. } => "Softmax",
             Op::Slice { .. } => "Slice",
             Op::Concat { .. } => "Concat",

@@ -1,10 +1,53 @@
-//! Dense tensors for the IR interpreter (row-major, f32 or i32).
+//! Dense tensors for the IR interpreter (row-major; f32, i32, and the
+//! reduced-precision serving dtypes f16 + per-tensor-symmetric i8).
+
+use crate::util::f16::{f16_to_f32, f32_to_f16};
 
 /// Element type of a tensor.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum DType {
     F32,
     I32,
+    /// IEEE-754 half, stored as raw bits in `u16`.
+    F16,
+    /// Symmetric per-tensor int8: real value = `q * scale`.
+    I8,
+}
+
+/// The serving dtypes `--dtype` accepts (i32 is an index type, not a
+/// compute dtype).
+pub const SERVE_DTYPES: [DType; 3] = [DType::F32, DType::F16, DType::I8];
+
+impl DType {
+    /// Bytes per element as stored.
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F16 => 2,
+            DType::I8 => 1,
+        }
+    }
+
+    /// Canonical lowercase name (`f32`/`i32`/`f16`/`i8`) — the `--dtype`
+    /// flag vocabulary and the plan-key suffix.
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::F16 => "f16",
+            DType::I8 => "i8",
+        }
+    }
+
+    /// Parse a serving dtype name ("" = f32). `None` for anything else.
+    pub fn parse_serve(s: &str) -> Option<DType> {
+        match s {
+            "" | "f32" => Some(DType::F32),
+            "f16" => Some(DType::F16),
+            "i8" => Some(DType::I8),
+            _ => None,
+        }
+    }
 }
 
 /// Tensor payload.
@@ -12,6 +55,10 @@ pub enum DType {
 pub enum Data {
     F32(Vec<f32>),
     I32(Vec<i32>),
+    /// Raw IEEE-754 half bits.
+    F16(Vec<u16>),
+    /// Symmetric per-tensor quantized: real value = `data[i] * scale`.
+    I8 { data: Vec<i8>, scale: f32 },
 }
 
 /// A dense row-major tensor.
@@ -19,6 +66,50 @@ pub enum Data {
 pub struct Tensor {
     pub shape: Vec<usize>,
     pub data: Data,
+}
+
+// --- shared quantization scalar math -------------------------------------------
+//
+// ONE implementation of the f32 <-> i8 mapping, used by `Tensor::to_dtype`,
+// the planned executor's quantize kernels, and the naive reference walker —
+// so quantized planned-vs-naive differential tests can hold results to
+// bitwise equality.
+
+/// Largest |x| over a slice (non-finite values saturate the scale).
+pub fn amax_abs(xs: &[f32]) -> f32 {
+    let mut m = 0.0f32;
+    for &x in xs {
+        let a = x.abs();
+        if a > m {
+            m = a;
+        }
+    }
+    m
+}
+
+/// Per-tensor symmetric scale for a given amax. All-zero tensors map to
+/// scale 1.0 so dequantization stays exact (0 * 1.0 = 0).
+pub fn i8_scale(amax: f32) -> f32 {
+    if amax > 0.0 {
+        amax / 127.0
+    } else {
+        1.0
+    }
+}
+
+/// Quantize one value: round-half-away-from-zero, clamped to the
+/// symmetric range [-127, 127] (no -128: symmetry keeps `q*scale`
+/// sign-exact).
+#[inline]
+pub fn quantize_i8_one(v: f32, scale: f32) -> i8 {
+    let q = (v / scale).round();
+    q.clamp(-127.0, 127.0) as i8
+}
+
+/// Dequantize one value.
+#[inline]
+pub fn dequantize_i8_one(q: i8, scale: f32) -> f32 {
+    f32::from(q) * scale
 }
 
 impl Tensor {
@@ -30,6 +121,18 @@ impl Tensor {
     pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
         assert_eq!(numel(&shape), data.len(), "shape/data mismatch");
         Self { shape, data: Data::I32(data) }
+    }
+
+    /// Half-precision tensor from raw IEEE-754 half bits.
+    pub fn f16(shape: Vec<usize>, bits: Vec<u16>) -> Self {
+        assert_eq!(numel(&shape), bits.len(), "shape/data mismatch");
+        Self { shape, data: Data::F16(bits) }
+    }
+
+    /// Symmetric per-tensor int8 tensor.
+    pub fn i8(shape: Vec<usize>, data: Vec<i8>, scale: f32) -> Self {
+        assert_eq!(numel(&shape), data.len(), "shape/data mismatch");
+        Self { shape, data: Data::I8 { data, scale } }
     }
 
     pub fn zeros(shape: Vec<usize>) -> Self {
@@ -45,6 +148,8 @@ impl Tensor {
         match self.data {
             Data::F32(_) => DType::F32,
             Data::I32(_) => DType::I32,
+            Data::F16(_) => DType::F16,
+            Data::I8 { .. } => DType::I8,
         }
     }
 
@@ -60,21 +165,76 @@ impl Tensor {
     pub fn as_f32(&self) -> &[f32] {
         match &self.data {
             Data::F32(v) => v,
-            Data::I32(_) => panic!("expected f32 tensor"),
+            _ => panic!("expected f32 tensor"),
         }
     }
 
     pub fn as_f32_mut(&mut self) -> &mut [f32] {
         match &mut self.data {
             Data::F32(v) => v,
-            Data::I32(_) => panic!("expected f32 tensor"),
+            _ => panic!("expected f32 tensor"),
         }
     }
 
     pub fn as_i32(&self) -> &[i32] {
         match &self.data {
             Data::I32(v) => v,
-            Data::F32(_) => panic!("expected i32 tensor"),
+            _ => panic!("expected i32 tensor"),
+        }
+    }
+
+    /// Borrow as raw half bits; panics on dtype mismatch.
+    pub fn as_f16(&self) -> &[u16] {
+        match &self.data {
+            Data::F16(v) => v,
+            _ => panic!("expected f16 tensor"),
+        }
+    }
+
+    /// Borrow the quantized payload `(q, scale)`; panics on dtype mismatch.
+    pub fn as_i8(&self) -> (&[i8], f32) {
+        match &self.data {
+            Data::I8 { data, scale } => (data, *scale),
+            _ => panic!("expected i8 tensor"),
+        }
+    }
+
+    /// Widen any numeric payload to an f32 vector (i32 excluded — it is
+    /// an index type, not a value type).
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        match &self.data {
+            Data::F32(v) => v.clone(),
+            Data::F16(v) => v.iter().map(|&b| f16_to_f32(b)).collect(),
+            Data::I8 { data, scale } => {
+                data.iter().map(|&q| dequantize_i8_one(q, *scale)).collect()
+            }
+            Data::I32(_) => panic!("i32 tensors do not widen to f32"),
+        }
+    }
+
+    /// Convert to `dtype`. f32 <-> f16 and f32 <-> i8 (per-tensor
+    /// symmetric, dynamic scale) are supported; i32 converts only to
+    /// itself. Same-dtype conversion is a clone.
+    pub fn to_dtype(&self, dtype: DType) -> Tensor {
+        if self.dtype() == dtype {
+            return self.clone();
+        }
+        match dtype {
+            DType::F32 => Tensor::f32(self.shape.clone(), self.to_f32_vec()),
+            DType::F16 => {
+                let f = self.to_f32_vec();
+                Tensor::f16(self.shape.clone(), f.iter().map(|&v| f32_to_f16(v)).collect())
+            }
+            DType::I8 => {
+                let f = self.to_f32_vec();
+                let scale = i8_scale(amax_abs(&f));
+                Tensor::i8(
+                    self.shape.clone(),
+                    f.iter().map(|&v| quantize_i8_one(v, scale)).collect(),
+                    scale,
+                )
+            }
+            DType::I32 => panic!("cannot convert {:?} to i32", self.dtype()),
         }
     }
 
@@ -160,5 +320,56 @@ mod tests {
         assert_eq!(t.numel(), 1);
         assert_eq!(t.rank(), 0);
         assert_eq!(t.as_f32(), &[3.5]);
+    }
+
+    #[test]
+    fn dtype_sizes_and_names() {
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::F16.size_bytes(), 2);
+        assert_eq!(DType::I8.size_bytes(), 1);
+        assert_eq!(DType::I8.name(), "i8");
+        assert_eq!(DType::parse_serve("f16"), Some(DType::F16));
+        assert_eq!(DType::parse_serve(""), Some(DType::F32));
+        assert_eq!(DType::parse_serve("int8"), None);
+        assert_eq!(DType::parse_serve("i32"), None, "i32 is not a serving dtype");
+    }
+
+    #[test]
+    fn f16_round_trip_through_tensor() {
+        let t = Tensor::f32(vec![4], vec![1.0, -0.5, 0.0, 1024.0]);
+        let h = t.to_dtype(DType::F16);
+        assert_eq!(h.dtype(), DType::F16);
+        let back = h.to_dtype(DType::F32);
+        // all values exactly representable in f16
+        assert_eq!(back.as_f32(), t.as_f32());
+    }
+
+    #[test]
+    fn i8_quantization_is_symmetric_and_bounded() {
+        let t = Tensor::f32(vec![5], vec![-2.0, -1.0, 0.0, 1.0, 2.0]);
+        let q = t.to_dtype(DType::I8);
+        let (qs, scale) = q.as_i8();
+        assert_eq!(scale, 2.0 / 127.0);
+        assert_eq!(qs, &[-127, -64, 0, 64, 127]);
+        let back = q.to_dtype(DType::F32);
+        for (a, b) in back.as_f32().iter().zip(t.as_f32()) {
+            assert!((a - b).abs() <= scale * 0.5 + 1e-7, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn all_zero_i8_dequantizes_exactly() {
+        let t = Tensor::zeros(vec![3]);
+        let q = t.to_dtype(DType::I8);
+        assert_eq!(q.as_i8().1, 1.0);
+        assert_eq!(q.to_dtype(DType::F32).as_f32(), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn same_dtype_conversion_is_identity() {
+        let t = Tensor::f32(vec![2], vec![1.5, -2.5]);
+        assert_eq!(t.to_dtype(DType::F32), t);
+        let q = t.to_dtype(DType::I8);
+        assert_eq!(q.to_dtype(DType::I8), q);
     }
 }

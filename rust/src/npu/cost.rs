@@ -335,6 +335,17 @@ pub fn node_cost(cfg: &NpuConfig, graph: &Graph, node: &Node) -> NodeCost {
             c
         }
 
+        Op::Quantize { .. } | Op::Dequantize => {
+            // precision conversion rides the MPU vector datapath like
+            // plain elementwise arithmetic (drain-path cast on real NPUs)
+            let cycles = out_elems / cfg.macs_per_cycle();
+            let mut c = NodeCost::zero(Engine::Mpu);
+            c.cycles = cycles;
+            c.comp_ns = cycles * mpu_ns_per_cycle;
+            add_io(cfg, graph, &node.inputs, &node.shape);
+            c
+        }
+
         // layout ops fold into DMA descriptors: free compute, and their
         // traffic is attributed to the consuming op
         Op::Slice { .. }

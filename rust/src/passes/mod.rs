@@ -13,6 +13,7 @@
 
 pub mod actiba;
 pub mod cumba;
+pub mod quantize;
 pub mod reduba;
 pub mod verify;
 

@@ -1,0 +1,401 @@
+//! Dtype-propagation + quantize/dequantize-insertion pass — the
+//! compile-time half of reduced-precision serving.
+//!
+//! Runs LAST in the pass pipeline (after CumBA / ReduBA / ActiBA), so
+//! every XAMBA rewrite is preserved: the pass sees masked matmuls and
+//! PLU nodes like any other op and retypes them in place.
+//!
+//! Two policies, one mechanism:
+//!
+//! * **f16** — the whole f32 body moves to f16 storage: weight inputs
+//!   are redeclared f16 (the serving layer converts its parameter
+//!   tensors once, halving resident weight bytes), f32 constants
+//!   (including the CumBA/ReduBA 0/1 masks, which are exact in f16)
+//!   convert in place, and every f32 compute node becomes f16. Kernels
+//!   accumulate in f32 and round only at stores.
+//! * **i8** — dynamic per-tensor symmetric quantization around the
+//!   *weight matmuls* (the projection GEMMs that dominate decode):
+//!   rank-2 weight inputs consumed exclusively by `MatMul` are
+//!   redeclared i8, the activation side of each such matmul gets a
+//!   `Quantize` node (one per activation value, shared by all its
+//!   consumers), and the matmul itself accumulates exactly in i32 and
+//!   emits f32. Everything else — conv, norms, the SSM scan chain, and
+//!   the CumBA/ReduBA mask matmuls — stays f32, so scan arithmetic
+//!   never quantizes.
+//!
+//! Both policies keep the external ABI stable where it matters: i32
+//! token inputs and f32 activation/state inputs stay as declared (f16
+//! graphs quantize them on entry), and any reduced-precision graph
+//! output is dequantized back to f32 — the serving layer's state
+//! plumbing is dtype-oblivious.
+
+use std::collections::HashMap;
+
+use crate::graph::tensor::DType;
+use crate::graph::{Graph, NodeId, Op};
+
+/// Decide the serving dtype of each of the first `n_weights` graph
+/// inputs (the parameter prefix) under `dtype`. The decision is purely
+/// structural, so every graph of one model family (prefill, decode
+/// buckets, batched prefill length-classes) planning over the same
+/// parameter list reaches the same assignment — the serving layer
+/// converts its shared parameter tensors exactly once.
+pub fn plan_weight_dtypes(g: &Graph, n_weights: usize, dtype: DType) -> Vec<DType> {
+    assert!(n_weights <= g.inputs.len(), "weight prefix exceeds input count");
+    let declared: Vec<DType> =
+        g.inputs[..n_weights].iter().map(|&id| g.node(id).dtype).collect();
+    match dtype {
+        DType::F32 => declared,
+        DType::F16 => declared
+            .into_iter()
+            .map(|d| if d == DType::F32 { DType::F16 } else { d })
+            .collect(),
+        DType::I8 => {
+            // a weight quantizes iff it is a rank-2 f32 matrix consumed
+            // by MatMul nodes only (a projection); unused weights stay
+            // f32 so graphs that do use them elsewhere agree
+            let mut consumers: HashMap<NodeId, (usize, bool)> = HashMap::new();
+            for node in &g.nodes {
+                for &i in &node.inputs {
+                    let e = consumers.entry(i).or_insert((0, true));
+                    e.0 += 1;
+                    e.1 &= matches!(node.op, Op::MatMul);
+                }
+            }
+            g.inputs[..n_weights]
+                .iter()
+                .map(|&id| {
+                    let node = g.node(id);
+                    let (uses, all_mm) = consumers.get(&id).copied().unwrap_or((0, false));
+                    if node.dtype == DType::F32 && node.shape.len() == 2 && uses > 0 && all_mm
+                    {
+                        DType::I8
+                    } else {
+                        node.dtype
+                    }
+                })
+                .collect()
+        }
+        DType::I32 => panic!("i32 is not a serving dtype"),
+    }
+}
+
+/// Rewrite `g` for reduced-precision execution under `dtype`, with the
+/// first `weight_dtypes.len()` inputs redeclared per `weight_dtypes`
+/// (from [`plan_weight_dtypes`] — callers serving several graphs off one
+/// parameter set pass the same plan to every graph). `DType::F32` is the
+/// identity.
+pub fn quantize_graph(
+    g: &Graph,
+    dtype: DType,
+    weight_dtypes: &[DType],
+) -> Result<Graph, String> {
+    if dtype == DType::F32 {
+        return Ok(g.clone());
+    }
+    if !matches!(dtype, DType::F16 | DType::I8) {
+        return Err(format!("{} is not a quantization target", dtype.name()));
+    }
+    // the rewrite emits inputs in node order; the ABI only survives if
+    // that matches the declared input order
+    if g.inputs.windows(2).any(|w| w[0] >= w[1]) {
+        return Err("quantize_graph needs inputs declared in node order".into());
+    }
+    let input_pos: HashMap<NodeId, usize> =
+        g.inputs.iter().enumerate().map(|(k, &id)| (id, k)).collect();
+
+    let mut out = Graph::new(&format!("{}.{}", g.name, dtype.name()));
+    // consumer-visible mapping old id -> new id (an input that gained a
+    // Quantize maps to the Quantize node, so consumers see one dtype)
+    let mut map: Vec<NodeId> = Vec::with_capacity(g.nodes.len());
+    // one Quantize/Dequantize per source value, shared by its consumers
+    let mut quant_of: HashMap<NodeId, NodeId> = HashMap::new();
+    let mut deq_of: HashMap<NodeId, NodeId> = HashMap::new();
+
+    for node in &g.nodes {
+        let new_id = match &node.op {
+            Op::Input { .. } => {
+                let pos = input_pos[&node.id];
+                let want = weight_dtypes.get(pos).copied().unwrap_or(node.dtype);
+                if want != node.dtype {
+                    // weight redeclared at the serving dtype; the caller
+                    // provides converted parameter tensors
+                    out.input_dtype(&node.name, node.shape.clone(), want)
+                } else {
+                    let id = out.input_dtype(&node.name, node.shape.clone(), node.dtype);
+                    if dtype == DType::F16 && node.dtype == DType::F32 {
+                        // activation/state input keeps its f32 ABI and is
+                        // narrowed on entry
+                        out.quantize(id, DType::F16, &format!("{}.q", node.name))
+                    } else {
+                        id
+                    }
+                }
+            }
+            Op::Const { kind } => {
+                let v = node
+                    .value
+                    .clone()
+                    .ok_or_else(|| format!("const node {} without value", node.id))?;
+                let v = if dtype == DType::F16 && v.dtype() == DType::F32 {
+                    v.to_dtype(DType::F16)
+                } else {
+                    v
+                };
+                out.constant_kind(&node.name, v, *kind)
+            }
+            Op::MatMul if dtype == DType::I8 => {
+                let a = map[node.inputs[0]];
+                let b = map[node.inputs[1]];
+                if out.node(a).dtype == DType::I8 || out.node(b).dtype == DType::I8 {
+                    let aq = coerce_i8(&mut out, a, &mut quant_of);
+                    let bq = coerce_i8(&mut out, b, &mut quant_of);
+                    // builder rule: i8 x i8 emits f32
+                    out.matmul(aq, bq, &node.name)
+                } else {
+                    copy_node(&mut out, node, &map, dtype)
+                }
+            }
+            _ => {
+                if dtype == DType::I8 {
+                    // a quantized weight reached a non-matmul consumer
+                    // (possible when the weight plan came from a sibling
+                    // graph): widen it back explicitly — "explicitly i8
+                    // already in the source graph" stays i8
+                    let mut inputs: Vec<NodeId> =
+                        node.inputs.iter().map(|&i| map[i]).collect();
+                    for (k, x) in inputs.iter_mut().enumerate() {
+                        if out.node(*x).dtype == DType::I8
+                            && g.node(node.inputs[k]).dtype != DType::I8
+                        {
+                            *x = dequantize_cached(&mut out, *x, &mut deq_of);
+                        }
+                    }
+                    copy_node_with_inputs(&mut out, node, inputs, node.dtype)
+                } else {
+                    copy_node(&mut out, node, &map, dtype)
+                }
+            }
+        };
+        map.push(new_id);
+    }
+
+    for &o in &g.outputs {
+        let mo = map[o];
+        let id = match out.node(mo).dtype {
+            DType::F16 | DType::I8 => dequantize_cached(&mut out, mo, &mut deq_of),
+            _ => mo,
+        };
+        out.output(id);
+    }
+    Ok(out)
+}
+
+/// Re-emit `node` with remapped inputs; in f16 mode every f32 node
+/// dtype moves to f16 (operands are f16 by induction).
+fn copy_node(out: &mut Graph, node: &crate::graph::Node, map: &[NodeId], dtype: DType) -> NodeId {
+    let dt = if dtype == DType::F16 && node.dtype == DType::F32 {
+        DType::F16
+    } else {
+        node.dtype
+    };
+    let inputs: Vec<NodeId> = node.inputs.iter().map(|&i| map[i]).collect();
+    copy_node_with_inputs(out, node, inputs, dt)
+}
+
+fn copy_node_with_inputs(
+    out: &mut Graph,
+    node: &crate::graph::Node,
+    inputs: Vec<NodeId>,
+    dt: DType,
+) -> NodeId {
+    out.add_node(
+        node.op.clone(),
+        inputs,
+        node.shape.clone(),
+        dt,
+        node.name.clone(),
+        node.value.clone(),
+    )
+}
+
+/// `x` as an i8 value: identity for i8, a (cached) `Quantize` for f32.
+fn coerce_i8(out: &mut Graph, x: NodeId, cache: &mut HashMap<NodeId, NodeId>) -> NodeId {
+    if out.node(x).dtype == DType::I8 {
+        return x;
+    }
+    if let Some(&q) = cache.get(&x) {
+        return q;
+    }
+    let name = format!("{}.q8", out.node(x).name);
+    let q = out.quantize(x, DType::I8, &name);
+    cache.insert(x, q);
+    q
+}
+
+fn dequantize_cached(
+    out: &mut Graph,
+    x: NodeId,
+    cache: &mut HashMap<NodeId, NodeId>,
+) -> NodeId {
+    if let Some(&d) = cache.get(&x) {
+        return d;
+    }
+    let name = format!("{}.dq", out.node(x).name);
+    let d = out.dequantize(x, &name);
+    cache.insert(x, d);
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec;
+    use crate::graph::Tensor;
+
+    /// tokens -> gather -> norm-ish mul -> matmul(W) -> +bias graph with a
+    /// 2-input parameter prefix [W, bias] — the minimal serving shape.
+    fn toy_graph() -> Graph {
+        let mut g = Graph::new("toy");
+        let w = g.input("w", vec![4, 3]);
+        let bias = g.input("bias", vec![3]);
+        let x = g.input("x", vec![2, 4]);
+        let m = g.matmul(x, w, "proj");
+        let y = g.add(m, bias, "biased");
+        let s = g.silu(y, "act");
+        g.output(s);
+        g
+    }
+
+    #[test]
+    fn f32_plan_is_identity() {
+        let g = toy_graph();
+        let wd = plan_weight_dtypes(&g, 2, DType::F32);
+        assert_eq!(wd, vec![DType::F32, DType::F32]);
+        let q = quantize_graph(&g, DType::F32, &wd).unwrap();
+        assert_eq!(q.nodes.len(), g.nodes.len());
+    }
+
+    #[test]
+    fn i8_plan_targets_matmul_only_rank2_weights() {
+        let g = toy_graph();
+        let wd = plan_weight_dtypes(&g, 2, DType::I8);
+        // W is a rank-2 matmul-only weight -> i8; bias feeds an Add -> f32
+        assert_eq!(wd, vec![DType::I8, DType::F32]);
+    }
+
+    #[test]
+    fn f16_plan_converts_every_f32_weight() {
+        let g = toy_graph();
+        let wd = plan_weight_dtypes(&g, 2, DType::F16);
+        assert_eq!(wd, vec![DType::F16, DType::F16]);
+    }
+
+    #[test]
+    fn i8_graph_quantizes_the_activation_side_and_keeps_the_abi() {
+        let g = toy_graph();
+        let wd = plan_weight_dtypes(&g, 2, DType::I8);
+        let q = quantize_graph(&g, DType::I8, &wd).unwrap();
+        // ABI: same number of inputs, x still f32, tokens-free toy has no i32
+        assert_eq!(q.inputs.len(), 3);
+        assert_eq!(q.node(q.inputs[0]).dtype, DType::I8);
+        assert_eq!(q.node(q.inputs[2]).dtype, DType::F32);
+        // outputs stay f32
+        for &o in &q.outputs {
+            assert_eq!(q.node(o).dtype, DType::F32);
+        }
+        // exactly one Quantize was inserted (the activation side)
+        let quants = q
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Quantize { .. }))
+            .count();
+        assert_eq!(quants, 1);
+
+        // numerically close to the f32 graph on real tensors
+        let wt = Tensor::f32(vec![4, 3], (0..12).map(|i| (i as f32) * 0.05 - 0.3).collect());
+        let bt = Tensor::f32(vec![3], vec![0.1, -0.2, 0.3]);
+        let xt = Tensor::f32(vec![2, 4], (0..8).map(|i| (i as f32) * 0.25 - 1.0).collect());
+        let exact = exec::run_once(&g, &[wt.clone(), bt.clone(), xt.clone()]).unwrap();
+        let quant = exec::run_once(
+            &q,
+            &[wt.to_dtype(DType::I8), bt.clone(), xt.clone()],
+        )
+        .unwrap();
+        for (a, b) in exact[0].as_f32().iter().zip(quant[0].as_f32()) {
+            assert!((a - b).abs() < 0.05, "exact {a} vs i8 {b}");
+        }
+        // and bitwise-identical between planned and naive execution
+        let planned = exec::run_once(
+            &q,
+            &[wt.to_dtype(DType::I8), bt.clone(), xt.clone()],
+        )
+        .unwrap();
+        let naive =
+            exec::naive::run(&q, &[wt.to_dtype(DType::I8), bt, xt]).unwrap();
+        assert_eq!(planned[0].as_f32(), naive[0].as_f32());
+    }
+
+    #[test]
+    fn f16_graph_moves_the_body_to_f16_and_dequantizes_outputs() {
+        let g = toy_graph();
+        let wd = plan_weight_dtypes(&g, 2, DType::F16);
+        let q = quantize_graph(&g, DType::F16, &wd).unwrap();
+        assert_eq!(q.node(q.inputs[0]).dtype, DType::F16);
+        assert_eq!(q.node(q.inputs[1]).dtype, DType::F16);
+        // activation input keeps its f32 ABI
+        assert_eq!(q.node(q.inputs[2]).dtype, DType::F32);
+        for &o in &q.outputs {
+            assert_eq!(q.node(o).dtype, DType::F32, "outputs widen back to f32");
+        }
+        // the compute body is f16
+        let body_f16 = q
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::MatMul | Op::Binary(_) | Op::Unary(_)))
+            .all(|n| n.dtype == DType::F16);
+        assert!(body_f16);
+
+        let wt = Tensor::f32(vec![4, 3], (0..12).map(|i| (i as f32) * 0.05 - 0.3).collect());
+        let bt = Tensor::f32(vec![3], vec![0.1, -0.2, 0.3]);
+        let xt = Tensor::f32(vec![2, 4], (0..8).map(|i| (i as f32) * 0.25 - 1.0).collect());
+        let exact = exec::run_once(&g, &[wt.clone(), bt.clone(), xt.clone()]).unwrap();
+        let half = exec::run_once(
+            &q,
+            &[wt.to_dtype(DType::F16), bt.to_dtype(DType::F16), xt.clone()],
+        )
+        .unwrap();
+        assert_eq!(half[0].dtype(), DType::F32);
+        for (a, b) in exact[0].as_f32().iter().zip(half[0].as_f32()) {
+            assert!((a - b).abs() < 2e-2, "exact {a} vs f16 {b}");
+        }
+    }
+
+    #[test]
+    fn tokens_and_masks_survive_quantization() {
+        // gather + tril-mask matmul (the CumBA shape): tokens stay i32,
+        // the mask matmul stays f32 under i8 (scans never quantize)
+        let mut g = Graph::new("m");
+        let emb = g.input("emb", vec![8, 4]);
+        let toks = g.input_i32("tokens", vec![3]);
+        let x = g.gather(emb, toks, "embed");
+        let mask = g.const_tril("mask", 3);
+        let cs = g.matmul(mask, x, "cumba.mm");
+        g.output(cs);
+        let wd = plan_weight_dtypes(&g, 1, DType::I8);
+        // emb feeds Gather -> stays f32
+        assert_eq!(wd, vec![DType::F32]);
+        let q = quantize_graph(&g, DType::I8, &wd).unwrap();
+        assert_eq!(q.node(q.inputs[1]).dtype, DType::I32);
+        assert!(
+            q.nodes.iter().all(|n| !matches!(n.op, Op::Quantize { .. })),
+            "no weight quantized -> no quantize nodes"
+        );
+        // under f16 the same graph converts the mask const and gathers f16
+        let wd16 = plan_weight_dtypes(&g, 1, DType::F16);
+        let q16 = quantize_graph(&g, DType::F16, &wd16).unwrap();
+        let mask_node = q16.nodes.iter().find(|n| n.name == "mask").unwrap();
+        assert_eq!(mask_node.dtype, DType::F16);
+        assert_eq!(mask_node.value.as_ref().unwrap().dtype(), DType::F16);
+    }
+}

@@ -49,6 +49,13 @@ pub fn random_inputs(g: &Graph, rng: &mut Prng, scale: f32) -> Vec<Tensor> {
                         (0..n).map(|_| rng.below(hi.max(1)) as i32).collect();
                     Tensor::i32(node.shape.clone(), data)
                 }
+                // reduced-precision inputs: draw f32, convert (quantized
+                // graphs declare their weight inputs f16/i8)
+                DType::F16 | DType::I8 => {
+                    let data: Vec<f32> =
+                        (0..n).map(|_| rng.normal() * scale).collect();
+                    Tensor::f32(node.shape.clone(), data).to_dtype(node.dtype)
+                }
             }
         })
         .collect()

@@ -11,8 +11,10 @@ use std::sync::Arc;
 
 use crate::config::ModelShape;
 use crate::exec::{ExecJob, PlanCache, WorkerPool};
+use crate::graph::tensor::DType;
 use crate::graph::{Graph, Tensor};
 use crate::models::params::{full_spec, ParamSpec};
+use crate::passes::quantize;
 
 /// LM-quality measurement over held-out text.
 #[derive(Clone, Debug)]
@@ -113,6 +115,37 @@ pub fn eval_lm(
     exact_logits: Option<&[Vec<f32>]>,
     workers: usize,
 ) -> Result<(QualityReport, Vec<Vec<f32>>), String> {
+    eval_lm_dtyped(
+        shape,
+        graph,
+        weights,
+        DType::F32,
+        text,
+        window,
+        max_windows,
+        exact_logits,
+        workers,
+    )
+}
+
+/// [`eval_lm`] at an explicit serving dtype: the graph goes through
+/// `passes::quantize` (the same pipeline `xamba serve --dtype` uses) and
+/// the f32 weights are converted to the planned per-weight dtypes before
+/// evaluation. Pass the f32 run's logits as `exact_logits` to have the
+/// report carry the quantization-induced logit drift — the accuracy
+/// delta the `--dtype` flag trades for latency.
+#[allow(clippy::too_many_arguments)]
+pub fn eval_lm_dtyped(
+    shape: &ModelShape,
+    graph: &Graph,
+    weights: &[f32],
+    dtype: DType,
+    text: &[u8],
+    window: usize,
+    max_windows: usize,
+    exact_logits: Option<&[Vec<f32>]>,
+    workers: usize,
+) -> Result<(QualityReport, Vec<Vec<f32>>), String> {
     let spec = full_spec(shape);
     if spec.total() != weights.len() {
         return Err(format!(
@@ -122,7 +155,19 @@ pub fn eval_lm(
             shape.name
         ));
     }
-    let params = param_inputs(&spec, weights);
+    let mut quantized: Option<Graph> = None;
+    let params = if dtype == DType::F32 {
+        param_inputs(&spec, weights)
+    } else {
+        let wd = quantize::plan_weight_dtypes(graph, spec.entries.len(), dtype);
+        quantized = Some(quantize::quantize_graph(graph, dtype, &wd)?);
+        param_inputs(&spec, weights)
+            .into_iter()
+            .zip(&wd)
+            .map(|(t, &d)| if t.dtype() == d { t } else { t.to_dtype(d) })
+            .collect()
+    };
+    let graph = quantized.as_ref().unwrap_or(graph);
     let stride = window; // non-overlapping windows
     let mut starts: Vec<usize> = Vec::new();
     let mut start = 0usize;
@@ -314,6 +359,48 @@ mod tests {
         assert_eq!(logits1, logits4, "pooled mamba-2 eval diverged from serial");
         assert_eq!(rep1.ppl.to_bits(), rep4.ppl.to_bits());
         assert!(rep1.ppl.is_finite());
+    }
+
+    #[test]
+    fn eval_lm_dtyped_reports_the_quantization_delta() {
+        let shape = crate::config::presets::tiny_mamba();
+        let window = 16usize;
+        let g = crate::models::build_prefill(&shape, window);
+        let spec = full_spec(&shape);
+        let mut rng = crate::util::Prng::new(11);
+        let weights = rng.range_vec(spec.total(), -0.1, 0.1);
+        let text = crate::util::corpus::corpus(200, 42);
+        let (exact, logits) =
+            eval_lm(&shape, &g, &weights, &text, window, 2, None, 1).unwrap();
+        for dtype in [DType::F16, DType::I8] {
+            let (rep, _) = eval_lm_dtyped(
+                &shape,
+                &g,
+                &weights,
+                dtype,
+                &text,
+                window,
+                2,
+                Some(&logits),
+                1,
+            )
+            .unwrap();
+            assert!(rep.ppl.is_finite(), "{dtype:?} ppl");
+            // f32-vs-quantized drift is recorded and small on a tiny net
+            assert!(rep.logit_max > 0.0, "{dtype:?} must drift a little");
+            let rel = (rep.ppl - exact.ppl).abs() / exact.ppl;
+            assert!(rel < 0.1, "{dtype:?} ppl {} vs f32 {}", rep.ppl, exact.ppl);
+        }
+        // f16 is a strictly finer approximation than i8 here
+        let (rep16, _) = eval_lm_dtyped(
+            &shape, &g, &weights, DType::F16, &text, window, 2, Some(&logits), 1,
+        )
+        .unwrap();
+        let (rep8, _) = eval_lm_dtyped(
+            &shape, &g, &weights, DType::I8, &text, window, 2, Some(&logits), 1,
+        )
+        .unwrap();
+        assert!(rep16.logit_mae <= rep8.logit_mae);
     }
 
     #[test]

@@ -1,0 +1,150 @@
+//! Software IEEE-754 binary16 ("half") conversion.
+//!
+//! The build environment is fully offline (no `half` crate), so the f16
+//! serving dtype stores raw half bits in `u16` and converts through
+//! these two functions. Conversion is exact in the f16→f32 direction and
+//! rounds to nearest-even in the f32→f16 direction — the same semantics
+//! hardware fp16 units implement, so a future real-NPU backend can swap
+//! in native halves without changing results.
+
+/// Widen half bits to f32 (exact: every f16 value is representable).
+#[inline]
+pub fn f16_to_f32(bits: u16) -> f32 {
+    let sign = u32::from(bits >> 15) << 31;
+    let exp = u32::from((bits >> 10) & 0x1f);
+    let frac = u32::from(bits & 0x3ff);
+    let out = if exp == 0 {
+        if frac == 0 {
+            sign // signed zero
+        } else {
+            // subnormal half: value = frac * 2^-24; normalize into f32
+            let shift = frac.leading_zeros() - 21; // frac has <= 10 bits
+            let frac_n = (frac << shift) & 0x3ff;
+            let exp_n = 127 - 15 - shift + 1;
+            sign | (exp_n << 23) | (frac_n << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (frac << 13) // inf / nan (payload kept)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (frac << 13)
+    };
+    f32::from_bits(out)
+}
+
+/// Round an f32 to half bits, nearest-even; overflow goes to ±inf.
+#[inline]
+pub fn f32_to_f16(v: f32) -> u16 {
+    let x = v.to_bits();
+    let sign = ((x >> 16) & 0x8000) as u16;
+    let exp = ((x >> 23) & 0xff) as i32;
+    let frac = x & 0x007f_ffff;
+
+    if exp == 0xff {
+        // inf / nan: keep a nan payload bit so nan stays nan
+        let f = if frac == 0 { 0 } else { 0x200 | (frac >> 13) as u16 };
+        return sign | 0x7c00 | f;
+    }
+    // unbiased exponent of the f32 value
+    let e = exp - 127;
+    if e > 15 {
+        return sign | 0x7c00; // overflows half range -> inf
+    }
+    if e >= -14 {
+        // normal half: round the 23-bit fraction to 10 bits, nearest-even
+        let mut mant = frac >> 13;
+        let rem = frac & 0x1fff;
+        if rem > 0x1000 || (rem == 0x1000 && (mant & 1) == 1) {
+            mant += 1;
+        }
+        let mut he = (e + 15) as u32;
+        if mant == 0x400 {
+            mant = 0;
+            he += 1;
+            if he >= 0x1f {
+                return sign | 0x7c00;
+            }
+        }
+        return sign | ((he as u16) << 10) | (mant as u16);
+    }
+    if e < -25 {
+        return sign; // underflows past the smallest subnormal -> signed 0
+    }
+    // subnormal half: implicit leading 1 joins the fraction, then shift
+    let full = 0x0080_0000 | frac; // 24-bit significand
+    let shift = (-14 - e) as u32 + 13; // bits dropped below the half lsb
+    let mant = full >> shift;
+    let rem = full & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    let mut m = mant;
+    if rem > half || (rem == half && (m & 1) == 1) {
+        m += 1; // may carry into the exponent: 0x400 encodes the smallest normal
+    }
+    sign | m as u16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_round_trip() {
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 0.25] {
+            let b = f32_to_f16(v);
+            assert_eq!(f16_to_f32(b), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn every_half_bit_pattern_round_trips() {
+        // f16 -> f32 -> f16 must be the identity on all finite halves
+        for bits in 0u16..=0xffff {
+            let exp = (bits >> 10) & 0x1f;
+            if exp == 0x1f {
+                continue; // inf/nan handled below
+            }
+            let v = f16_to_f32(bits);
+            assert_eq!(f32_to_f16(v), bits, "bits {bits:#06x} -> {v}");
+        }
+    }
+
+    #[test]
+    fn specials() {
+        assert_eq!(f16_to_f32(0x7c00), f32::INFINITY);
+        assert_eq!(f16_to_f32(0xfc00), f32::NEG_INFINITY);
+        assert!(f16_to_f32(0x7e00).is_nan());
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16(f32::NEG_INFINITY), 0xfc00);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        // overflow saturates to inf
+        assert_eq!(f32_to_f16(1e6), 0x7c00);
+        assert_eq!(f32_to_f16(-1e6), 0xfc00);
+        // underflow flushes to signed zero
+        assert_eq!(f32_to_f16(1e-10), 0x0000);
+        assert_eq!(f32_to_f16(-1e-10), 0x8000);
+    }
+
+    #[test]
+    fn rounding_is_nearest_even() {
+        // 1.0 + 2^-11 sits exactly between 1.0 and the next half
+        // (1.0 + 2^-10): ties to even -> 1.0
+        let tie = 1.0f32 + 2f32.powi(-11);
+        assert_eq!(f16_to_f32(f32_to_f16(tie)), 1.0);
+        // just above the tie rounds up
+        let above = 1.0f32 + 2f32.powi(-11) + 2f32.powi(-20);
+        assert_eq!(f16_to_f32(f32_to_f16(above)), 1.0 + 2f32.powi(-10));
+    }
+
+    #[test]
+    fn subnormal_halves() {
+        // smallest positive subnormal half = 2^-24
+        let tiny = 2f32.powi(-24);
+        assert_eq!(f32_to_f16(tiny), 0x0001);
+        assert_eq!(f16_to_f32(0x0001), tiny);
+        // largest subnormal
+        let big_sub = f16_to_f32(0x03ff);
+        assert_eq!(f32_to_f16(big_sub), 0x03ff);
+        // rounding a subnormal up into the normal range
+        let just_below_normal = 2f32.powi(-14) - 2f32.powi(-26);
+        assert_eq!(f32_to_f16(just_below_normal), 0x0400);
+    }
+}

@@ -9,6 +9,7 @@
 
 pub mod bench;
 pub mod corpus;
+pub mod f16;
 pub mod json;
 pub mod prng;
 pub mod quickcheck;

@@ -30,7 +30,7 @@ fn random_graph(rng: &mut Prng, case: usize) -> Graph {
         let src = frontier[rng.below(frontier.len())];
         let shape = g.shape(src).to_vec();
         let nm = format!("op{i}");
-        let new = match rng.below(14) {
+        let new = match rng.below(15) {
             0 if shape.len() == 2 => g.cumsum(src, rng.below(2), &nm),
             1 if !shape.is_empty() => g.reduce_sum(src, rng.below(shape.len()), &nm),
             2 => g.silu(src, &nm),
@@ -73,6 +73,12 @@ fn random_graph(rng: &mut Prng, case: usize) -> Graph {
                 g.rmsnorm(src, w, &nm)
             }
             13 if shape.len() == 2 => g.concat(&[src, src], rng.below(2), &nm),
+            14 if !shape.is_empty() => {
+                // reshape mid-graph: fusion must see through it (pure
+                // row-major identity) without perturbing results
+                let n: usize = shape.iter().product();
+                g.reshape(src, vec![n], &nm)
+            }
             _ => g.add(src, src, &nm),
         };
         frontier.push(new);
@@ -103,6 +109,19 @@ fn assert_bitwise(label: &str, want: &[Tensor], got: &[Tensor]) {
             }
             xamba::graph::DType::I32 => {
                 assert_eq!(w.as_i32(), t.as_i32(), "{label}: output {o} payload");
+            }
+            xamba::graph::DType::F16 => {
+                assert_eq!(w.as_f16(), t.as_f16(), "{label}: output {o} f16 bits");
+            }
+            xamba::graph::DType::I8 => {
+                let (wq, ws) = w.as_i8();
+                let (tq, ts) = t.as_i8();
+                assert_eq!(wq, tq, "{label}: output {o} i8 payload");
+                assert_eq!(
+                    ws.to_bits(),
+                    ts.to_bits(),
+                    "{label}: output {o} i8 scale {ws} vs {ts}"
+                );
             }
         }
     }
@@ -301,6 +320,149 @@ fn batched_prefill_is_bitwise_identical_per_sequence_for_both_families() {
                             singles[s][o].as_f32(),
                             "{label} {vname}: {what} state diverges (seq {s}, layer {j})"
                         );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn reshape_fusion_cases_match_naive() {
+    // chains interrupted (or started, or ended) by reshapes: fusion sees
+    // through them; results stay bitwise-equal to the walker, which
+    // materializes every reshape as a copy
+    let mut rng = Prng::new(0xF0_5E);
+
+    // silu -> reshape -> exp -> reshape -> *0.5 (reshape sandwich)
+    let mut g1 = Graph::new("sandwich");
+    let x = g1.input("x", vec![3, 4]);
+    let a = g1.silu(x, "a");
+    let r1 = g1.reshape(a, vec![12], "r1");
+    let b = g1.exp(r1, "b");
+    let r2 = g1.reshape(b, vec![2, 6], "r2");
+    let c = g1.const_scalar("half", 0.5);
+    let m = g1.mul(r2, c, "m");
+    g1.output(m);
+    check_graph(&g1, "reshape sandwich", &mut rng);
+
+    // binary head feeding a reshape-then-unary tail
+    let mut g2 = Graph::new("head");
+    let p = g2.input("p", vec![2, 3]);
+    let q = g2.input("q", vec![2, 3]);
+    let s = g2.add(p, q, "s");
+    let r = g2.reshape(s, vec![6], "r");
+    let t = g2.softplus(r, "t");
+    g2.output(t);
+    check_graph(&g2, "binary head through reshape", &mut rng);
+
+    // reshape whose producer is multi-consumer must NOT fuse away
+    let mut g3 = Graph::new("pinned");
+    let u = g3.input("u", vec![4]);
+    let a3 = g3.silu(u, "a");
+    let r3 = g3.reshape(a3, vec![2, 2], "r");
+    let b3 = g3.exp(r3, "b");
+    g3.output(a3); // `a` externally visible: chain may not absorb it
+    g3.output(b3);
+    check_graph(&g3, "output-pinned reshape", &mut rng);
+
+    // back-to-back reshapes collapse to one fused copy
+    let mut g4 = Graph::new("reshapes");
+    let v = g4.input("v", vec![2, 6]);
+    let ra = g4.reshape(v, vec![12], "ra");
+    let rb = g4.reshape(ra, vec![3, 4], "rb");
+    let rc = g4.reshape(rb, vec![4, 3], "rc");
+    g4.output(rc);
+    check_graph(&g4, "reshape-only chain", &mut rng);
+}
+
+#[test]
+fn quantized_serve_graphs_match_naive_bitwise_and_f32_within_budget() {
+    // the quantized differential corpus: serve-prefill + batched-decode
+    // graphs of BOTH families through passes::quantize at f16 and i8
+    // (base and ActiBA-rewritten), held to (a) planned-vs-naive bitwise
+    // equality — the same contract as the f32 corpus — and (b) a loose
+    // numeric envelope around the exact f32 results
+    use xamba::graph::DType;
+    use xamba::models::params::full_spec;
+    use xamba::passes::quantize::{plan_weight_dtypes, quantize_graph};
+
+    let mut rng = Prng::new(0xD7_17);
+    for shape in [nano_shape("mamba"), nano_shape("mamba2")] {
+        let spec = full_spec(&shape);
+        let n_weights = spec.entries.len();
+        let graphs: Vec<(&str, Graph)> = vec![
+            ("serve-prefill", xamba::models::build_prefill_serve(&shape, 10)),
+            ("decode b2", xamba::models::build_decode_batched(&shape, 2)),
+        ];
+        for (gname, base) in &graphs {
+            let variants: Vec<(&str, Graph)> = vec![
+                ("base", base.clone()),
+                ("actiba", ActibaPass::default().apply(base)),
+            ];
+            for (vname, g) in &variants {
+                let inputs_f32 = verify::random_inputs(g, &mut rng, 0.3);
+                let exact = xamba::exec::run_once(g, &inputs_f32)
+                    .unwrap_or_else(|e| panic!("{} {gname} {vname} f32: {e}", shape.name));
+                // loose envelopes: bitwise correctness is carried by the
+                // planned-vs-naive assertion; these only rule out
+                // catastrophic numeric breakage (wrong kernel, wrong
+                // scale) without flaking on legitimate rounding
+                for (dtype, tol) in [(DType::F16, 0.1f32), (DType::I8, 0.6f32)] {
+                    let label = format!(
+                        "{} {gname} {vname} {}",
+                        shape.name,
+                        dtype.name()
+                    );
+                    let wd = plan_weight_dtypes(g, n_weights, dtype);
+                    let qg = quantize_graph(g, dtype, &wd)
+                        .unwrap_or_else(|e| panic!("{label}: quantize: {e}"));
+                    if dtype == DType::I8 {
+                        assert!(
+                            qg.nodes.iter().any(|n| matches!(
+                                n.op,
+                                xamba::graph::Op::Quantize { .. }
+                            )),
+                            "{label}: i8 policy quantized no matmul"
+                        );
+                    }
+                    let inputs_q: Vec<Tensor> = inputs_f32
+                        .iter()
+                        .enumerate()
+                        .map(|(i, t)| {
+                            if i < n_weights {
+                                t.to_dtype(wd[i])
+                            } else {
+                                t.clone()
+                            }
+                        })
+                        .collect();
+                    // bitwise: planned vs naive, plus arena-reuse re-run
+                    let want = naive::run(&qg, &inputs_q)
+                        .unwrap_or_else(|e| panic!("{label}: naive: {e}"));
+                    let mut plan = PlannedBackend
+                        .plan(&qg)
+                        .unwrap_or_else(|e| panic!("{label}: plan: {e}"));
+                    let got = plan
+                        .execute(&inputs_q)
+                        .unwrap_or_else(|e| panic!("{label}: planned: {e}"));
+                    assert_bitwise(&label, &want, &got);
+                    let again = plan.execute(&inputs_q).unwrap();
+                    assert_bitwise(&format!("{label} (arena reuse)"), &got, &again);
+                    // envelope: quantized outputs track the f32 outputs
+                    for (o, (qo, eo)) in got.iter().zip(&exact).enumerate() {
+                        assert_eq!(qo.shape, eo.shape, "{label}: output {o} shape");
+                        assert_eq!(
+                            qo.dtype(),
+                            DType::F32,
+                            "{label}: quantized graphs emit f32 outputs"
+                        );
+                        for (a, b) in qo.as_f32().iter().zip(eo.as_f32()) {
+                            assert!(
+                                (a - b).abs() <= tol * (1.0 + b.abs()),
+                                "{label}: output {o}: quantized {a} vs exact {b}"
+                            );
+                        }
                     }
                 }
             }

@@ -1,0 +1,322 @@
+//! Integration tests of reduced-precision (f16 / i8) serving on the
+//! planned backend: mixed-dtype plan caching (compile-once per
+//! (program, bucket, dtype)), pool determinism at several worker counts,
+//! arena-reuse re-execution parity, full streaming round trips through
+//! `start_backend` with `--dtype`, and the committed quality budget of
+//! the i8 path vs f32.
+
+use std::time::Duration;
+
+use xamba::config::{ModelShape, ServeConfig};
+use xamba::coordinator::{
+    start_backend, FinishReason, GenParams, PlannedServeModel, SeqState, ServeModel,
+};
+use xamba::graph::DType;
+
+fn nano(arch: &str) -> ModelShape {
+    ModelShape {
+        name: format!("nano-{arch}"),
+        arch: arch.into(),
+        vocab_size: 256,
+        d_model: 32,
+        n_layers: 2,
+        d_state: 8,
+        d_conv: 3,
+        expand: 2,
+        dt_rank: 4,
+        headdim: 16,
+        chunk: 8,
+    }
+}
+
+fn argmax(logits: &[f32]) -> i32 {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i as i32)
+        .unwrap_or(0)
+}
+
+fn prompt(i: usize, window: usize) -> Vec<i32> {
+    (0..window).map(|t| ((i * 31 + t * 7) % 256) as i32).collect()
+}
+
+#[test]
+fn quantized_models_serve_both_families() {
+    // f16 and i8 models of BOTH families complete prefill + multi-step
+    // decode with finite logits and states, no artifacts, no PJRT
+    let window = 8;
+    for arch in ["mamba", "mamba2"] {
+        let shape = nano(arch);
+        let weights = PlannedServeModel::random_weights(&shape, 5);
+        for dtype in [DType::F16, DType::I8] {
+            let mut model = PlannedServeModel::new_dtyped(
+                &shape, &weights, window, &[1, 2], 1, "baseline", dtype,
+            )
+            .unwrap_or_else(|e| panic!("{arch} {}: {e}", dtype.name()));
+            assert_eq!(model.dtype(), dtype);
+            assert!(
+                model.quantized_weight_count() > 0,
+                "{arch} {}: no weight went reduced-precision",
+                dtype.name()
+            );
+            let (logits, mut st) = model.prefill(&prompt(0, window)).unwrap();
+            assert_eq!(logits.len(), shape.vocab_size);
+            assert!(logits.iter().all(|v| v.is_finite()), "{arch} prefill logits");
+            let mut tok = argmax(&logits);
+            for step in 0..3 {
+                let mut seqs = vec![(&mut st, tok)];
+                let l = model.decode(&mut seqs).unwrap().remove(0);
+                drop(seqs);
+                assert!(
+                    l.iter().all(|v| v.is_finite()),
+                    "{arch} {} decode step {step}",
+                    dtype.name()
+                );
+                tok = argmax(&l);
+            }
+        }
+    }
+}
+
+#[test]
+fn quantized_outputs_track_the_f32_model() {
+    // the same weights served at f16/i8 must stay close to the f32
+    // logits (8-bit projections on a nano net: loose envelope) and make
+    // the SAME greedy decision most of the time; here: on the argmax of
+    // the prefill logits for several prompts
+    let window = 8;
+    let shape = nano("mamba");
+    let weights = PlannedServeModel::random_weights(&shape, 23);
+    let mut f32_model =
+        PlannedServeModel::new(&shape, &weights, window, &[1], 1, "baseline").unwrap();
+    for dtype in [DType::F16, DType::I8] {
+        let mut q_model = PlannedServeModel::new_dtyped(
+            &shape, &weights, window, &[1], 1, "baseline", dtype,
+        )
+        .unwrap();
+        let mut agree = 0usize;
+        for i in 0..4 {
+            let p = prompt(i, window);
+            let (le, _) = f32_model.prefill(&p).unwrap();
+            let (lq, _) = q_model.prefill(&p).unwrap();
+            let max_abs = le
+                .iter()
+                .zip(&lq)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                max_abs < 0.5,
+                "{} prompt {i}: logits drifted {max_abs}",
+                dtype.name()
+            );
+            agree += usize::from(argmax(&le) == argmax(&lq));
+        }
+        // f16 drift (~1e-3) cannot plausibly flip a greedy decision on
+        // these logits; i8 only gets the drift envelope above, since a
+        // near-tie CAN legitimately flip under 8-bit projections
+        if dtype == DType::F16 {
+            assert!(agree >= 3, "f16: greedy argmax agreed only {agree}/4");
+        }
+    }
+}
+
+#[test]
+fn i8_pooled_decode_is_bitwise_identical_across_worker_counts() {
+    // quantized plans are deterministic (dynamic activation scales are a
+    // pure function of the inputs), and i8 buckets deliberately never
+    // split on the work-stealing pool — per-tensor scales couple the
+    // batch rows, so a chunked bucket would legitimately drift from the
+    // whole-bucket graph. Decode output must therefore be bitwise
+    // identical at every worker count.
+    let shape = nano("mamba");
+    let window = 8;
+    let weights = PlannedServeModel::random_weights(&shape, 9);
+    let mut reference: Option<(Vec<Vec<Vec<f32>>>, Vec<SeqState>)> = None;
+    for workers in [1usize, 2, 4] {
+        let mut model = PlannedServeModel::new_dtyped(
+            &shape,
+            &weights,
+            window,
+            &[1, 2, 4],
+            workers,
+            "baseline",
+            DType::I8,
+        )
+        .unwrap();
+        assert_eq!(model.pool_workers(), workers.max(1));
+        let mut states: Vec<SeqState> = Vec::new();
+        let mut toks: Vec<i32> = Vec::new();
+        for i in 0..4 {
+            let (logits, st) = model.prefill(&prompt(i, window)).unwrap();
+            toks.push(argmax(&logits));
+            states.push(st);
+        }
+        let mut all_logits: Vec<Vec<Vec<f32>>> = Vec::new();
+        for _ in 0..3 {
+            let mut seqs: Vec<(&mut SeqState, i32)> =
+                states.iter_mut().zip(toks.iter().copied()).collect();
+            let step = model.decode(&mut seqs).unwrap();
+            drop(seqs);
+            toks = step.iter().map(|l| argmax(l)).collect();
+            all_logits.push(step);
+        }
+        match &reference {
+            None => reference = Some((all_logits, states)),
+            Some((ref_logits, ref_states)) => {
+                assert_eq!(
+                    &all_logits, ref_logits,
+                    "{workers} workers: i8 logits diverged from serial"
+                );
+                assert_eq!(
+                    &states, ref_states,
+                    "{workers} workers: i8 states diverged from serial"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn quantized_plans_compile_once_and_reuse_arenas() {
+    // compile-once per (program, bucket, dtype): construction compiles
+    // prefill + both buckets, traffic recompiles nothing, and re-running
+    // identical inputs through the cached plans (arena reuse) is
+    // bitwise-neutral — for both quantized dtypes
+    let shape = nano("mamba2");
+    let window = 8;
+    let weights = PlannedServeModel::random_weights(&shape, 3);
+    for dtype in [DType::F16, DType::I8] {
+        let mut model = PlannedServeModel::new_dtyped(
+            &shape, &weights, window, &[1, 2], 1, "baseline", dtype,
+        )
+        .unwrap();
+        assert_eq!(model.plan_compiles(), 3, "{}: prefill + 2 buckets", dtype.name());
+
+        let p = prompt(0, window);
+        let (l1, mut s1) = model.prefill(&p).unwrap();
+        let (l2, mut s2) = model.prefill(&p).unwrap();
+        assert_eq!(l1, l2, "{}: prefill arena reuse drifted", dtype.name());
+        assert_eq!(s1, s2);
+
+        let out1 = {
+            let mut seqs = vec![(&mut s1, 42)];
+            model.decode(&mut seqs).unwrap()
+        };
+        let out2 = {
+            let mut seqs = vec![(&mut s2, 42)];
+            model.decode(&mut seqs).unwrap()
+        };
+        assert_eq!(out1, out2, "{}: decode arena reuse drifted", dtype.name());
+        assert_eq!(s1, s2);
+        // a shorter prefill length-class compiles lazily, exactly once
+        let (l3, _) = model.prefill(&prompt(1, window - 2)).unwrap();
+        let (l4, _) = model.prefill(&prompt(1, window - 2)).unwrap();
+        assert_eq!(l3, l4);
+        assert_eq!(
+            model.plan_compiles(),
+            4,
+            "{}: length-class must compile once",
+            dtype.name()
+        );
+    }
+}
+
+#[test]
+fn quantized_streaming_round_trip_through_start_backend() {
+    // the full `xamba serve --backend planned --dtype i8|f16` path:
+    // config validation, engine thread, streaming prefill + decode round
+    // trip — with no `artifacts/` directory
+    for dtype in ["f16", "i8"] {
+        for model in ["tiny-mamba", "tiny-mamba2"] {
+            let cfg = ServeConfig {
+                model: model.into(),
+                dtype: dtype.into(),
+                decode_buckets: vec![1, 2],
+                prefill_buckets: vec![1, 2],
+                prefill_window: 8,
+                workers: 2,
+                max_slots: 4,
+                queue_cap: 8,
+                batch_wait_us: 100,
+                ..Default::default()
+            };
+            let server = start_backend(&cfg)
+                .unwrap_or_else(|e| panic!("{model} {dtype}: {e:#}"));
+            let rx = server.submit(
+                b"quantized fox",
+                GenParams { max_new_tokens: 4, ..Default::default() },
+            );
+            let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+            assert_eq!(r.finish, FinishReason::Length, "{model} {dtype}");
+            assert_eq!(r.generated.len(), 4, "{model} {dtype}");
+            let m = server.shutdown();
+            assert_eq!(m.completed, 1);
+            assert!(m.failed == 0, "{model} {dtype}: failed requests");
+        }
+    }
+}
+
+#[test]
+fn start_backend_rejects_bad_dtype_configs_with_actionable_errors() {
+    let bad = ServeConfig { dtype: "fp16".into(), ..Default::default() };
+    let msg = format!("{:#}", start_backend(&bad).unwrap_err());
+    assert!(msg.contains("unknown serve dtype") && msg.contains("fp16"), "{msg}");
+    assert!(
+        msg.contains("f32") && msg.contains("f16") && msg.contains("i8"),
+        "supported dtypes must be listed: {msg}"
+    );
+
+    let pjrt = ServeConfig {
+        backend: "pjrt".into(),
+        dtype: "i8".into(),
+        ..Default::default()
+    };
+    let msg = format!("{:#}", start_backend(&pjrt).unwrap_err());
+    assert!(msg.contains("planned backend"), "{msg}");
+}
+
+#[test]
+fn i8_eval_lm_stays_within_the_committed_quality_budget() {
+    // the committed accuracy budget of the ISSUE's acceptance criterion:
+    // i8 perplexity within 5% of f32, f16 within 1% (CI additionally
+    // gates this via `xamba quality --dtype i8 --budget 0.05`)
+    use xamba::models::params::full_spec;
+    use xamba::quality::{eval_lm, eval_lm_dtyped};
+
+    let shape = nano("mamba");
+    let window = 16usize;
+    let g = xamba::models::build_prefill(&shape, window);
+    let spec = full_spec(&shape);
+    let mut rng = xamba::util::Prng::new(77);
+    let weights = rng.range_vec(spec.total(), -0.1, 0.1);
+    let text = xamba::util::corpus::corpus(300, 13);
+    let (exact, logits) =
+        eval_lm(&shape, &g, &weights, &text, window, 3, None, 1).unwrap();
+    for (dtype, budget) in [(DType::F16, 0.01f64), (DType::I8, 0.05f64)] {
+        let (rep, _) = eval_lm_dtyped(
+            &shape,
+            &g,
+            &weights,
+            dtype,
+            &text,
+            window,
+            3,
+            Some(&logits),
+            1,
+        )
+        .unwrap();
+        let rel = (rep.ppl - exact.ppl).abs() / exact.ppl;
+        assert!(
+            rel <= budget,
+            "{}: ppl {} vs f32 {} — {:.3}% past the {:.1}% budget",
+            dtype.name(),
+            rep.ppl,
+            exact.ppl,
+            rel * 100.0,
+            budget * 100.0
+        );
+        assert!(rep.logit_max.is_finite());
+    }
+}
