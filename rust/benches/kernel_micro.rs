@@ -1,0 +1,241 @@
+//! Per-kernel microbench for the blocked/fused kernel core: GEMM at
+//! decode and prefill shapes (f32 / f16-storage / i8), the sequential
+//! scan, softmax, and a fused elementwise chain, each against its scalar
+//! reference.
+//!
+//! The scalar columns exist for the printed speedup ratio only; the
+//! gated metrics are the blocked kernels' absolute throughputs, with
+//! deliberately loose committed floors (machine-independent sanity, not
+//! a perf lock — the serve benches own the end-to-end numbers).
+//!
+//! Run: `cargo bench --bench kernel_micro`
+//!
+//! CI (`bench-smoke`) runs it with `XAMBA_BENCH_QUICK=1` (smaller shapes,
+//! fewer reps) and `XAMBA_BENCH_JSON=BENCH_pr.json`, appending
+//! `kernel_micro_*_per_s` keys to the artifact `xamba bench-check`
+//! gates against the committed baseline.
+
+use std::time::Instant;
+
+use xamba::exec::{kernels, naive, ExecutionPlan};
+use xamba::graph::{Graph, Tensor};
+use xamba::util::f16::f32_to_f16;
+use xamba::util::{bench, Table};
+
+/// Deterministic pseudo-data in [-0.5, 0.5) — no RNG state to carry.
+fn fill(len: usize, salt: usize) -> Vec<f32> {
+    (0..len)
+        .map(|i| ((i.wrapping_add(salt).wrapping_mul(2654435761)) % 1000) as f32 / 1000.0 - 0.5)
+        .collect()
+}
+
+/// Repetitions per second of `f` (one untimed warmup call first).
+fn reps_per_sec(reps: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    reps as f64 / t0.elapsed().as_secs_f64().max(1e-9)
+}
+
+fn gemm_section(metrics: &mut Vec<(String, f64)>) {
+    let quick = bench::quick_mode();
+    let reps = if quick { 2usize } else { 10 };
+    // 130M-class projection shapes: (m, k) x (k, n)
+    let (k, n) = if quick { (256usize, 512usize) } else { (768, 1536) };
+    let m_prefill = if quick { 64usize } else { 256 };
+
+    let mut table = Table::new(&["shape", "scalar ref", "blocked", "speedup"])
+        .with_title("kernel_micro: GEMM (MFLOP/s)");
+
+    for (label, m, key) in [
+        ("decode  m=1", 1usize, "kernel_micro_gemm_decode_f32_mflop_per_s"),
+        ("prefill", m_prefill, "kernel_micro_gemm_prefill_f32_mflop_per_s"),
+    ] {
+        let a = fill(m * k, 1);
+        let b = fill(k * n, 2);
+        let mut out_ref = vec![0.0f32; m * n];
+        let mut out_blk = vec![0.0f32; m * n];
+        let mflop = (2 * m * k * n) as f64 / 1e6;
+        let r_ref = reps_per_sec(reps, || {
+            kernels::matmul_ref(&a, &b, &mut out_ref, 1, m, k, n, 0, 0);
+        }) * mflop;
+        let r_blk = reps_per_sec(reps, || {
+            kernels::matmul_out(&a, &b, &mut out_blk, 1, m, k, n, 0, 0);
+        }) * mflop;
+        assert_eq!(out_ref, out_blk, "{label}: blocked GEMM diverged from reference");
+        table.row(&[
+            format!("{label} ({m}x{k}x{n})"),
+            format!("{r_ref:10.1}"),
+            format!("{r_blk:10.1}"),
+            format!("{:.2}x", r_blk / r_ref),
+        ]);
+        metrics.push((key.to_string(), r_blk));
+    }
+
+    // f16-storage GEMM: widen once, f32 accumulate, round at store
+    {
+        let m = m_prefill;
+        let af = fill(m * k, 3);
+        let bf = fill(k * n, 4);
+        let a: Vec<u16> = af.iter().map(|&v| f32_to_f16(v)).collect();
+        let b: Vec<u16> = bf.iter().map(|&v| f32_to_f16(v)).collect();
+        let mut out = vec![0u16; m * n];
+        let mflop = (2 * m * k * n) as f64 / 1e6;
+        let r = reps_per_sec(reps, || {
+            kernels::matmul_out_g::<u16>(&a, &b, &mut out, 1, m, k, n, 0, 0);
+        }) * mflop;
+        table.row(&[
+            format!("prefill f16 ({m}x{k}x{n})"),
+            "-".into(),
+            format!("{r:10.1}"),
+            "-".into(),
+        ]);
+        metrics.push(("kernel_micro_gemm_prefill_f16_mflop_per_s".into(), r));
+    }
+
+    // i8 GEMM: exact i32 dot products, dequantized by the scale product
+    {
+        let m = m_prefill;
+        let af = fill(m * k, 5);
+        let bf = fill(k * n, 6);
+        let mut a = vec![0i8; m * k];
+        let mut b = vec![0i8; k * n];
+        let sa = kernels::quantize_i8_out(&af, &mut a);
+        let sb = kernels::quantize_i8_out(&bf, &mut b);
+        let mut out = vec![0.0f32; m * n];
+        let mflop = (2 * m * k * n) as f64 / 1e6;
+        let r = reps_per_sec(reps, || {
+            kernels::matmul_i8_out(&a, sa, &b, sb, &mut out, 1, m, k, n, 0, 0);
+        }) * mflop;
+        table.row(&[
+            format!("prefill i8 ({m}x{k}x{n})"),
+            "-".into(),
+            format!("{r:10.1}"),
+            "-".into(),
+        ]);
+        metrics.push(("kernel_micro_gemm_prefill_i8_mflop_per_s".into(), r));
+    }
+    println!("{table}");
+}
+
+/// In-place reference scan: `out[j] += out[j - 1]` along the axis.
+fn cumsum_ref(x: &[f32], out: &mut [f32], outer: usize, n_axis: usize, inner: usize) {
+    out.copy_from_slice(x);
+    for o in 0..outer {
+        for j in 1..n_axis {
+            for i in 0..inner {
+                out[(o * n_axis + j) * inner + i] += out[(o * n_axis + j - 1) * inner + i];
+            }
+        }
+    }
+}
+
+fn scan_softmax_section(metrics: &mut Vec<(String, f64)>) {
+    let quick = bench::quick_mode();
+    let reps = if quick { 4usize } else { 20 };
+    let (rows, cols) = if quick { (256usize, 256usize) } else { (1024, 1024) };
+    let melem = (rows * cols) as f64 / 1e6;
+    let x = fill(rows * cols, 7);
+
+    let mut table = Table::new(&["kernel", "scalar ref", "lane-chunked", "speedup"])
+        .with_title("kernel_micro: scan / softmax (Melem/s)");
+
+    {
+        let mut out_ref = vec![0.0f32; rows * cols];
+        let mut out = vec![0.0f32; rows * cols];
+        let r_ref = reps_per_sec(reps, || {
+            cumsum_ref(&x, &mut out_ref, rows, cols, 1);
+        }) * melem;
+        let r = reps_per_sec(reps, || {
+            kernels::cumsum_out(&x, &mut out, rows, cols, 1);
+        }) * melem;
+        assert_eq!(out_ref, out, "scan diverged from reference");
+        table.row(&[
+            format!("cumsum ({rows}x{cols})"),
+            format!("{r_ref:10.1}"),
+            format!("{r:10.1}"),
+            format!("{:.2}x", r / r_ref),
+        ]);
+        metrics.push(("kernel_micro_scan_melem_per_s".into(), r));
+    }
+
+    {
+        let mut out = vec![0.0f32; rows * cols];
+        let r = reps_per_sec(reps, || {
+            kernels::softmax_out(&x, &mut out, rows, cols, 1);
+        }) * melem;
+        table.row(&[
+            format!("softmax ({rows}x{cols})"),
+            "-".into(),
+            format!("{r:10.1}"),
+            "-".into(),
+        ]);
+        metrics.push(("kernel_micro_softmax_melem_per_s".into(), r));
+    }
+    println!("{table}");
+}
+
+fn fused_chain_section(metrics: &mut Vec<(String, f64)>) {
+    let quick = bench::quick_mode();
+    let reps = if quick { 4usize } else { 20 };
+    let len = if quick { 1usize << 16 } else { 1 << 20 };
+    let melem = len as f64 / 1e6;
+
+    // add -> silu -> exp: the planner collapses this to ONE fused step
+    // (single pass, no intermediate arena round-trips); the naive walker
+    // materializes every node
+    let mut g = Graph::new("kernel_micro-fused");
+    let x = g.input("x", vec![len]);
+    let y = g.input("y", vec![len]);
+    let h = g.add(x, y, "h");
+    let s = g.silu(h, "s");
+    let e = g.exp(s, "e");
+    g.output(e);
+
+    let inputs = [
+        Tensor::f32(vec![len], fill(len, 8)),
+        Tensor::f32(vec![len], fill(len, 9)),
+    ];
+    let mut plan = ExecutionPlan::compile(&g).expect("compile fused chain");
+    let fused_out = plan.run(&inputs).expect("fused run");
+    let naive_out = naive::run(&g, &inputs).expect("naive run");
+    assert_eq!(
+        fused_out[0].as_f32(),
+        naive_out[0].as_f32(),
+        "fused chain diverged from the naive walker"
+    );
+
+    let r_naive = reps_per_sec(reps, || {
+        naive::run(&g, &inputs).expect("naive run");
+    }) * melem;
+    let r_fused = reps_per_sec(reps, || {
+        plan.run(&inputs).expect("fused run");
+    }) * melem;
+
+    let mut table = Table::new(&["chain", "naive walker", "fused", "speedup"])
+        .with_title("kernel_micro: fused elementwise chain (Melem/s)");
+    table.row(&[
+        format!("add+silu+exp ({len} elems)"),
+        format!("{r_naive:10.1}"),
+        format!("{r_fused:10.1}"),
+        format!("{:.2}x", r_fused / r_naive),
+    ]);
+    println!("{table}");
+    metrics.push(("kernel_micro_fused_chain_melem_per_s".into(), r_fused));
+}
+
+fn main() {
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+    gemm_section(&mut metrics);
+    scan_softmax_section(&mut metrics);
+    fused_chain_section(&mut metrics);
+    if let Some(path) = bench::metrics_path() {
+        bench::record(&path, &metrics).expect("record bench metrics");
+    }
+    println!(
+        "kernel_micro: blocked kernels verified bitwise against their scalar \
+         references before timing."
+    );
+}

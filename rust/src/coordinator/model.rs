@@ -754,12 +754,15 @@ impl ServeModel for PlannedServeModel {
         ))
     }
 
-    /// One batched-prefill graph call per (bucket, length-class) — the
-    /// graph replicates the single-sequence prefill per sequence, so
-    /// every returned (logits, state) pair is bitwise identical to a
-    /// lone [`ServeModel::prefill`] of the same tokens. Non-bucket batch
-    /// sizes (the scheduler's per-sequence remainder) fall back to the
-    /// serial loop.
+    /// One batched-prefill graph call per (bucket, length-class). For
+    /// f32/f16 the graph batches along a true batch dimension — one
+    /// (b, t)-shaped node per op, so the planned step count stays flat
+    /// in `b` — while i8 falls back to the per-sequence replicated graph
+    /// (its dynamic per-tensor requantize scales would couple co-batched
+    /// sequences inside one node). Either way every returned (logits,
+    /// state) pair is bitwise identical to a lone [`ServeModel::prefill`]
+    /// of the same tokens. Non-bucket batch sizes (the scheduler's
+    /// per-sequence remainder) fall back to the serial loop.
     fn prefill_batched(&mut self, seqs: &[&[i32]]) -> Result<Vec<(Vec<f32>, SeqState)>> {
         let b = seqs.len();
         if b == 0 {
@@ -801,12 +804,12 @@ impl ServeModel for PlannedServeModel {
                 .run_or_compile_with(
                     &key,
                     || {
-                        build_serve_graph(
-                            variant,
-                            dtype,
-                            weight_dtypes,
-                            family.build_prefill_batched(shape, b, t),
-                        )
+                        let g = if dtype == DType::I8 {
+                            family.build_prefill_batched_replicated(shape, b, t)
+                        } else {
+                            family.build_prefill_batched(shape, b, t)
+                        };
+                        build_serve_graph(variant, dtype, weight_dtypes, g)
                     },
                     params,
                     tail,

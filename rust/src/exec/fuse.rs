@@ -76,6 +76,11 @@ pub enum ChainHead {
     Value(NodeId),
     /// A same-shape, no-broadcast binary combining two upstream values.
     Binary(BinKind, NodeId, NodeId),
+    /// A matmul node anchoring an epilogue chain: the GEMM computes into
+    /// the chain's output slot and the stages run as an in-place second
+    /// pass, so the matmul's activation epilogue (SiLU/PLU/scalar ops)
+    /// never materializes an intermediate.
+    MatMul(NodeId),
 }
 
 /// A detected chain: `nodes` in graph order; all but the last are
@@ -158,6 +163,13 @@ fn binary_head(g: &Graph, id: NodeId) -> Option<(BinKind, NodeId, NodeId)> {
     None
 }
 
+/// A matmul that may anchor an epilogue chain. Its output dtype must be
+/// f32/f16 (i8-operand matmuls emit f32, so they qualify too); whether a
+/// chain actually forms depends on a fusable stage following it.
+fn matmul_head(g: &Graph, id: NodeId) -> bool {
+    fusable_dtype(g, id) && matches!(g.node(id).op, Op::MatMul)
+}
+
 /// Detect maximal fusable chains among the live nodes. A node joins the
 /// chain after its producer only if the producer has exactly one (live)
 /// consumer and is not a graph output — absorbed intermediates must be
@@ -194,6 +206,7 @@ pub fn find_chains(g: &Graph, live: &[bool]) -> Vec<Chain> {
             Some((main, st)) => (ChainHead::Value(main), st.into_iter().collect()),
             None => match binary_head(g, id) {
                 Some((k, a, b)) => (ChainHead::Binary(k, a, b), Vec::new()),
+                None if matmul_head(g, id) => (ChainHead::MatMul(id), Vec::new()),
                 None => continue,
             },
         };
@@ -326,6 +339,42 @@ mod tests {
         assert_eq!(chains[0].nodes, vec![r, a]);
         assert!(matches!(chains[0].head, ChainHead::Value(h) if h == x));
         assert_eq!(chains[0].stages.len(), 1);
+    }
+
+    #[test]
+    fn matmul_heads_an_epilogue_chain() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![2, 3]);
+        let w = g.input("w", vec![3, 4]);
+        let m = g.matmul(x, w, "m");
+        let s = g.silu(m, "s");
+        g.output(s);
+        let chains = find_chains(&g, &g.live_set());
+        assert_eq!(chains.len(), 1);
+        assert_eq!(chains[0].nodes, vec![m, s]);
+        assert!(matches!(chains[0].head, ChainHead::MatMul(h) if h == m));
+        assert_eq!(chains[0].stages.len(), 1);
+    }
+
+    #[test]
+    fn bare_or_multi_consumer_matmul_does_not_chain() {
+        // no epilogue stage -> no chain (the plain kernel path runs it)
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![2, 3]);
+        let w = g.input("w", vec![3, 4]);
+        let m = g.matmul(x, w, "m");
+        g.output(m);
+        assert!(find_chains(&g, &g.live_set()).is_empty());
+        // output matmul with a downstream stage: the intermediate is
+        // externally visible, so the epilogue must not absorb it
+        let mut g2 = Graph::new("t2");
+        let x2 = g2.input("x", vec![2, 3]);
+        let w2 = g2.input("w", vec![3, 4]);
+        let m2 = g2.matmul(x2, w2, "m");
+        let s2 = g2.silu(m2, "s");
+        g2.output(m2);
+        g2.output(s2);
+        assert!(find_chains(&g2, &g2.live_set()).is_empty());
     }
 
     #[test]

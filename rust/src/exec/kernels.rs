@@ -12,6 +12,28 @@ use crate::graph::tensor::{amax_abs, dequantize_i8_one, i8_scale, quantize_i8_on
 use crate::plu::{self, PluTable};
 use crate::util::f16::{f16_to_f32, f32_to_f16};
 
+use super::pool::parallel_chunks_mut;
+
+// --- intra-op threading thresholds ----------------------------------------------
+//
+// The `*_mt` kernel variants split one large node across scoped worker
+// threads. Chunk boundaries depend on the node's shape and a fixed grain
+// only — NEVER on the worker count — and every chunk is a disjoint
+// output region computed with the serial kernel's exact per-element
+// order, so results are bitwise identical at any worker count by
+// construction. The thresholds are sized so per-decode-step nodes stay
+// serial (no spawn overhead on the latency path) while prefill-scale
+// nodes parallelize.
+
+/// Below this many flops (2·batch·m·k·n) a GEMM never splits.
+pub const INTRA_GEMM_MIN_FLOPS: usize = 1 << 21;
+/// Flop grain of one intra-op GEMM row chunk.
+const INTRA_GEMM_GRAIN_FLOPS: usize = 1 << 19;
+/// Below this many elements an elementwise/scan/norm kernel never splits.
+pub const INTRA_ELEM_MIN: usize = 1 << 15;
+/// Element grain of one elementwise/scan/norm chunk.
+pub const INTRA_ELEM_GRAIN: usize = 1 << 14;
+
 /// Scalar unary application — shared by the naive evaluator, the planned
 /// unary kernel, and fused-chain stages (identity of results by
 /// construction).
@@ -181,11 +203,32 @@ pub fn plu_out(table: &PluTable, x: &[f32], out: &mut [f32]) {
 }
 
 // --- matmul ---------------------------------------------------------------------
+//
+// The GEMM core is one register-tiled f32 micro-kernel shared by the
+// f32, f16-storage, and (structurally) i8 paths. An MR x NR tile holds
+// one accumulator per output element in registers for the whole k loop,
+// so the inner j-lane loop autovectorizes and each loaded B row is
+// reused across MR A rows. Every output element is still accumulated
+// k-ascending into a single f32 (or i32) accumulator with zero-valued A
+// entries skipped — the exact value sequence of [`matmul_ref`] — so the
+// blocked kernels stay bitwise identical to the scalar reference and the
+// naive evaluator (which routes through [`matmul_out`] itself).
 
-/// Batched matmul into a zeroed output. `a_step`/`b_step` are the
-/// per-batch element offsets (0 when the operand is not batched).
+/// Register-tile height: one loaded B row is reused across this many
+/// A rows.
+const GEMM_MR: usize = 4;
+/// Register-tile width: the j-lane block the inner loop vectorizes over.
+const GEMM_NR: usize = 16;
+
+/// Scalar reference GEMM — the pre-blocking loop shape, kept as the
+/// comparison point for the differential suite's ULP tier and the kernel
+/// microbenches. The blocked kernels reproduce its per-element
+/// accumulation order exactly (k-ascending, one accumulator per output
+/// element, exact-zero A entries skipped), so today they match it
+/// bitwise; the ULP tier is the contract that stays checkable if the
+/// blocking ever reassociates.
 #[allow(clippy::too_many_arguments)]
-pub fn matmul_out(
+pub fn matmul_ref(
     a: &[f32],
     b: &[f32],
     out: &mut [f32],
@@ -217,6 +260,157 @@ pub fn matmul_out(
     }
 }
 
+/// Rows `[i0, i1)` of one batch slice of the `(m, k) x (k, n)` product,
+/// written to `out_rows[(i - i0) * n + j]` (the caller passes the
+/// sub-slice holding exactly those rows). `ao`/`bo` are the operands'
+/// batch-slice element offsets.
+#[allow(clippy::too_many_arguments)]
+fn matmul_panel<T: Elem>(
+    a: &[f32],
+    b: &[f32],
+    out_rows: &mut [T],
+    ao: usize,
+    bo: usize,
+    i0: usize,
+    i1: usize,
+    k: usize,
+    n: usize,
+) {
+    let mut i = i0;
+    while i < i1 {
+        let rows = GEMM_MR.min(i1 - i);
+        let mut j = 0;
+        while j < n {
+            let jw = GEMM_NR.min(n - j);
+            let mut acc = [[0.0f32; GEMM_NR]; GEMM_MR];
+            for kk in 0..k {
+                let brow = &b[bo + kk * n + j..bo + kk * n + j + jw];
+                for (r, acc_r) in acc.iter_mut().enumerate().take(rows) {
+                    // zero-skip: exact zeros (tril masks, ZVC-style
+                    // sparsity) contribute no adds — matching the
+                    // reference even when B holds inf/NaN
+                    let av = a[ao + (i + r) * k + kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    for (l, &bv) in brow.iter().enumerate() {
+                        acc_r[l] += av * bv;
+                    }
+                }
+            }
+            for (r, acc_r) in acc.iter().enumerate().take(rows) {
+                let orow = (i - i0 + r) * n + j;
+                for (o, &v) in out_rows[orow..orow + jw].iter_mut().zip(acc_r.iter()) {
+                    *o = T::from_f32(v);
+                }
+            }
+            j += jw;
+        }
+        i += rows;
+    }
+}
+
+/// Rows `[r0, r0 + rows)` of the flat `(batch * m, n)` output, spanning
+/// batch boundaries; `chunk` holds exactly those rows.
+#[allow(clippy::too_many_arguments)]
+fn matmul_rows<T: Elem>(
+    a: &[f32],
+    b: &[f32],
+    chunk: &mut [T],
+    r0: usize,
+    rows: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a_step: usize,
+    b_step: usize,
+) {
+    let mut done = 0;
+    while done < rows {
+        let r = r0 + done;
+        let bi = r / m;
+        let i_local = r % m;
+        let take = (m - i_local).min(rows - done);
+        matmul_panel(
+            a,
+            b,
+            &mut chunk[done * n..(done + take) * n],
+            bi * a_step,
+            bi * b_step,
+            i_local,
+            i_local + take,
+            k,
+            n,
+        );
+        done += take;
+    }
+}
+
+/// Row grain for intra-op GEMM splitting: sized by per-row flops so
+/// chunk boundaries depend on the shape only (never the worker count),
+/// rounded to the register-tile height.
+fn gemm_grain_rows(k: usize, n: usize) -> usize {
+    let per_row = (2 * k * n).max(1);
+    (INTRA_GEMM_GRAIN_FLOPS / per_row)
+        .max(GEMM_MR)
+        .next_multiple_of(GEMM_MR)
+}
+
+/// Batched blocked matmul. `a_step`/`b_step` are the per-batch element
+/// offsets (0 when the operand is not batched). The output needs no
+/// pre-zeroing: tile accumulators start at zero and every element is
+/// stored exactly once.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_out(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    batch: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a_step: usize,
+    b_step: usize,
+) {
+    for bi in 0..batch {
+        matmul_panel(
+            a,
+            b,
+            &mut out[bi * m * n..(bi + 1) * m * n],
+            bi * a_step,
+            bi * b_step,
+            0,
+            m,
+            k,
+            n,
+        );
+    }
+}
+
+/// [`matmul_out`] split across `workers` intra-op threads by row panels.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_out_mt(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    batch: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a_step: usize,
+    b_step: usize,
+    workers: usize,
+) {
+    if workers <= 1 || 2 * batch * m * k * n < INTRA_GEMM_MIN_FLOPS {
+        matmul_out(a, b, out, batch, m, k, n, a_step, b_step);
+        return;
+    }
+    let grain = gemm_grain_rows(k, n);
+    parallel_chunks_mut(out, grain * n, workers, |off, chunk| {
+        matmul_rows(a, b, chunk, off / n, chunk.len() / n, m, k, n, a_step, b_step);
+    });
+}
+
 // --- scans / reductions ---------------------------------------------------------
 
 /// Delegates to the generic scan (identical f32 addition sequence: the
@@ -240,6 +434,160 @@ pub fn reduce_sum_out(
             for i in 0..inner {
                 out[obase + i] += x[base + i];
             }
+        }
+    }
+}
+
+/// [`cumsum_out_g`] split across intra-op workers by outer slabs (each
+/// scan runs along the axis inside one slab, so slabs are independent).
+pub fn cumsum_out_mt<T: Elem>(
+    x: &[T],
+    out: &mut [T],
+    outer: usize,
+    n_axis: usize,
+    inner: usize,
+    workers: usize,
+) {
+    let slab = n_axis * inner;
+    if workers <= 1 || out.len() < INTRA_ELEM_MIN || slab == 0 {
+        cumsum_out_g(x, out, outer, n_axis, inner);
+        return;
+    }
+    let grain = (INTRA_ELEM_GRAIN / slab).max(1);
+    parallel_chunks_mut(out, grain * slab, workers, |off, chunk| {
+        cumsum_out_g(&x[off..off + chunk.len()], chunk, chunk.len() / slab, n_axis, inner);
+    });
+}
+
+/// [`reduce_sum_out_g`] split across intra-op workers by outer slabs.
+pub fn reduce_sum_out_mt<T: Elem>(
+    x: &[T],
+    out: &mut [T],
+    outer: usize,
+    n_axis: usize,
+    inner: usize,
+    workers: usize,
+) {
+    let _ = outer;
+    if workers <= 1 || x.len() < INTRA_ELEM_MIN || inner == 0 || n_axis == 0 {
+        reduce_sum_out_g(x, out, outer, n_axis, inner);
+        return;
+    }
+    let grain = (INTRA_ELEM_GRAIN / (n_axis * inner)).max(1);
+    parallel_chunks_mut(out, grain * inner, workers, |off, chunk| {
+        let o0 = off / inner;
+        let co = chunk.len() / inner;
+        reduce_sum_out_g(
+            &x[o0 * n_axis * inner..(o0 + co) * n_axis * inner],
+            chunk,
+            co,
+            n_axis,
+            inner,
+        );
+    });
+}
+
+// --- fused Binary -> ReduceSum reduction epilogue -------------------------------
+//
+// Accumulates `binary(a, b)` straight into the reduction output without
+// materializing the (often much larger) binary intermediate in the
+// arena. Loop order and per-element arithmetic mirror the unfused
+// `binary_out_g` store followed by `reduce_sum_out` / `reduce_sum_out_g`
+// exactly — each output element sums axis-ascending rounded-per-stage
+// stage values — so fusing is bitwise neutral.
+
+/// Advance a row-major odometer over `shape` one step, updating both
+/// operands' strided offsets.
+#[inline]
+fn bump2(
+    idx: &mut [usize],
+    shape: &[usize],
+    sa: &[usize],
+    sb: &[usize],
+    ia: &mut usize,
+    ib: &mut usize,
+) {
+    for d in (0..shape.len()).rev() {
+        idx[d] += 1;
+        if idx[d] < shape[d] {
+            *ia += sa[d];
+            *ib += sb[d];
+            return;
+        }
+        idx[d] = 0;
+        *ia -= sa[d] * (shape[d] - 1);
+        *ib -= sb[d] * (shape[d] - 1);
+    }
+}
+
+/// f32 fused binary+reduce: `out[o, i] = sum_j binary(a, b)[o, j, i]`
+/// where `shape` is the binary's (virtual) output shape, reduced along
+/// `axis`, and `sa`/`sb` are the operands' broadcast strides over it.
+#[allow(clippy::too_many_arguments)]
+pub fn binary_reduce_sum_out(
+    kind: BinKind,
+    a: &[f32],
+    b: &[f32],
+    sa: &[usize],
+    sb: &[usize],
+    shape: &[usize],
+    axis: usize,
+    out: &mut [f32],
+    idx: &mut Vec<usize>,
+) {
+    let n_axis = shape[axis];
+    let inner: usize = shape[axis + 1..].iter().product();
+    let outer: usize = shape[..axis].iter().product();
+    idx.clear();
+    idx.resize(shape.len(), 0);
+    out.fill(0.0);
+    let (mut ia, mut ib) = (0usize, 0usize);
+    for o in 0..outer {
+        let obase = o * inner;
+        for _ in 0..n_axis {
+            for i in 0..inner {
+                out[obase + i] += apply_binary(kind, a[ia], b[ib]);
+                bump2(idx, shape, sa, sb, &mut ia, &mut ib);
+            }
+        }
+    }
+}
+
+/// Storage-generic fused binary+reduce: each virtual stage value rounds
+/// to the storage type (as the unfused binary store would) and the
+/// reduction accumulates those widened values in f32, rounding once at
+/// the final store (as `reduce_sum_out_g` would).
+#[allow(clippy::too_many_arguments)]
+pub fn binary_reduce_sum_out_g<T: Elem>(
+    kind: BinKind,
+    a: &[T],
+    b: &[T],
+    sa: &[usize],
+    sb: &[usize],
+    shape: &[usize],
+    axis: usize,
+    out: &mut [T],
+    idx: &mut Vec<usize>,
+) {
+    let n_axis = shape[axis];
+    let inner: usize = shape[axis + 1..].iter().product();
+    let outer: usize = shape[..axis].iter().product();
+    idx.clear();
+    idx.resize(shape.len(), 0);
+    let mut row = vec![0.0f32; inner];
+    let (mut ia, mut ib) = (0usize, 0usize);
+    for o in 0..outer {
+        row.fill(0.0);
+        for _ in 0..n_axis {
+            for r in row.iter_mut() {
+                let v = apply_binary(kind, a[ia].to_f32(), b[ib].to_f32());
+                *r += T::from_f32(v).to_f32();
+                bump2(idx, shape, sa, sb, &mut ia, &mut ib);
+            }
+        }
+        let obase = o * inner;
+        for (o_el, &r) in out[obase..obase + inner].iter_mut().zip(row.iter()) {
+            *o_el = T::from_f32(r);
         }
     }
 }
@@ -268,15 +616,175 @@ pub fn conv1d_out(
     w: &[f32],
     b: &[f32],
     out: &mut [f32],
+    batch: usize,
     t: usize,
     c: usize,
     k: usize,
 ) {
-    conv1d_out_g::<f32>(x, w, b, out, t, c, k);
+    conv1d_out_g::<f32>(x, w, b, out, batch, t, c, k);
+}
+
+/// [`conv1d_out_g`] split across intra-op workers by (batch, t) rows —
+/// taps read backward into the shared input, writes are per-row disjoint.
+#[allow(clippy::too_many_arguments)]
+pub fn conv1d_out_mt<T: Elem>(
+    x: &[T],
+    w: &[T],
+    b: &[T],
+    out: &mut [T],
+    batch: usize,
+    t: usize,
+    c: usize,
+    k: usize,
+    workers: usize,
+) {
+    if workers <= 1 || out.len() < INTRA_ELEM_MIN || c == 0 {
+        conv1d_out_g(x, w, b, out, batch, t, c, k);
+        return;
+    }
+    let _ = batch;
+    let grain = (INTRA_ELEM_GRAIN / c).max(1);
+    parallel_chunks_mut(out, grain * c, workers, |off, chunk| {
+        let r0 = off / c;
+        for (li, orow) in chunk.chunks_mut(c).enumerate() {
+            let r = r0 + li;
+            let (bi, ti) = (r / t, r % t);
+            conv1d_row(&x[bi * t * c..(bi + 1) * t * c], w, b, orow, ti, c, k);
+        }
+    });
 }
 
 pub fn rmsnorm_out(x: &[f32], w: &[f32], out: &mut [f32], rows: usize, d: usize, eps: f32) {
     rmsnorm_out_g::<f32>(x, w, out, rows, d, eps);
+}
+
+/// [`rmsnorm_out_g`] split across intra-op workers by rows.
+pub fn rmsnorm_out_mt<T: Elem>(
+    x: &[T],
+    w: &[T],
+    out: &mut [T],
+    rows: usize,
+    d: usize,
+    eps: f32,
+    workers: usize,
+) {
+    if workers <= 1 || out.len() < INTRA_ELEM_MIN || d == 0 {
+        rmsnorm_out_g(x, w, out, rows, d, eps);
+        return;
+    }
+    let _ = rows;
+    let grain = (INTRA_ELEM_GRAIN / d).max(1);
+    parallel_chunks_mut(out, grain * d, workers, |off, chunk| {
+        rmsnorm_out_g(&x[off..off + chunk.len()], w, chunk, chunk.len() / d, d, eps);
+    });
+}
+
+/// [`softmax_out_g`] split across intra-op workers by outer slabs.
+pub fn softmax_out_mt<T: Elem>(
+    x: &[T],
+    out: &mut [T],
+    outer: usize,
+    n_axis: usize,
+    inner: usize,
+    workers: usize,
+) {
+    let slab = n_axis * inner;
+    if workers <= 1 || out.len() < INTRA_ELEM_MIN || slab == 0 {
+        softmax_out_g(x, out, outer, n_axis, inner);
+        return;
+    }
+    let _ = outer;
+    let grain = (INTRA_ELEM_GRAIN / slab).max(1);
+    parallel_chunks_mut(out, grain * slab, workers, |off, chunk| {
+        softmax_out_g(&x[off..off + chunk.len()], chunk, chunk.len() / slab, n_axis, inner);
+    });
+}
+
+/// [`unary_out_g`] split across intra-op workers.
+pub fn unary_out_mt<T: Elem>(kind: UnKind, x: &[T], out: &mut [T], workers: usize) {
+    if workers <= 1 || out.len() < INTRA_ELEM_MIN {
+        unary_out_g(kind, x, out);
+        return;
+    }
+    parallel_chunks_mut(out, INTRA_ELEM_GRAIN, workers, |off, chunk| {
+        unary_out_g(kind, &x[off..off + chunk.len()], chunk);
+    });
+}
+
+/// [`plu_out_g`] split across intra-op workers.
+pub fn plu_out_mt<T: Elem>(table: &PluTable, x: &[T], out: &mut [T], workers: usize) {
+    if workers <= 1 || out.len() < INTRA_ELEM_MIN {
+        plu_out_g(table, x, out);
+        return;
+    }
+    parallel_chunks_mut(out, INTRA_ELEM_GRAIN, workers, |off, chunk| {
+        plu_out_g(table, &x[off..off + chunk.len()], chunk);
+    });
+}
+
+/// [`binary_out_g`] split across intra-op workers. The Elementwise and
+/// scalar modes chunk trivially (per-element independent); the general
+/// strided mode stays serial (its odometer is a running state).
+#[allow(clippy::too_many_arguments)]
+pub fn binary_out_mt<T: Elem>(
+    kind: BinKind,
+    mode: &BinMode,
+    a: &[T],
+    b: &[T],
+    out_shape: &[usize],
+    out: &mut [T],
+    idx: &mut Vec<usize>,
+    workers: usize,
+) {
+    if workers <= 1 || out.len() < INTRA_ELEM_MIN {
+        binary_out_g(kind, mode, a, b, out_shape, out, idx);
+        return;
+    }
+    match mode {
+        BinMode::Elementwise => {
+            parallel_chunks_mut(out, INTRA_ELEM_GRAIN, workers, |off, chunk| {
+                let mut scratch = Vec::new();
+                binary_out_g(
+                    kind,
+                    &BinMode::Elementwise,
+                    &a[off..off + chunk.len()],
+                    &b[off..off + chunk.len()],
+                    out_shape,
+                    chunk,
+                    &mut scratch,
+                );
+            });
+        }
+        BinMode::ScalarRight => {
+            parallel_chunks_mut(out, INTRA_ELEM_GRAIN, workers, |off, chunk| {
+                let mut scratch = Vec::new();
+                binary_out_g(
+                    kind,
+                    &BinMode::ScalarRight,
+                    &a[off..off + chunk.len()],
+                    b,
+                    out_shape,
+                    chunk,
+                    &mut scratch,
+                );
+            });
+        }
+        BinMode::ScalarLeft => {
+            parallel_chunks_mut(out, INTRA_ELEM_GRAIN, workers, |off, chunk| {
+                let mut scratch = Vec::new();
+                binary_out_g(
+                    kind,
+                    &BinMode::ScalarLeft,
+                    a,
+                    &b[off..off + chunk.len()],
+                    out_shape,
+                    chunk,
+                    &mut scratch,
+                );
+            });
+        }
+        BinMode::Strided { .. } => binary_out_g(kind, mode, a, b, out_shape, out, idx),
+    }
 }
 
 pub fn softmax_out(x: &[f32], out: &mut [f32], outer: usize, n_axis: usize, inner: usize) {
@@ -424,7 +932,23 @@ pub fn binary_out_g<T: Elem>(
     }
 }
 
-/// Batched matmul with f32 accumulation, storage-rounded output.
+thread_local! {
+    // widened-operand scratch for the generic GEMM: narrow storage is
+    // widened to f32 once per call instead of once per k-step inside the
+    // inner loop, and the buffers are reused across calls on this thread
+    static WIDEN_A: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
+    static WIDEN_B: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
+fn widen_into<T: Elem>(src: &[T], dst: &mut Vec<f32>) {
+    dst.clear();
+    dst.extend(src.iter().map(|v| v.to_f32()));
+}
+
+/// Batched matmul with f32 accumulation, storage-rounded output. Same
+/// blocked core as [`matmul_out`] (each output element accumulates in
+/// one f32 register, k-ascending), so the value sequence is identical
+/// to the scalar reference widened per element.
 #[allow(clippy::too_many_arguments)]
 pub fn matmul_out_g<T: Elem>(
     a: &[T],
@@ -437,29 +961,53 @@ pub fn matmul_out_g<T: Elem>(
     a_step: usize,
     b_step: usize,
 ) {
-    let mut row = vec![0.0f32; n]; // f32 accumulator row (rounding only at store)
-    for bi in 0..batch {
-        let ao = bi * a_step;
-        let bo = bi * b_step;
-        let oo = bi * m * n;
-        for i in 0..m {
-            row.fill(0.0);
-            for kk in 0..k {
-                let av_ik = a[ao + i * k + kk].to_f32();
-                if av_ik == 0.0 {
-                    continue;
-                }
-                let brow = bo + kk * n;
-                for (j, r) in row.iter_mut().enumerate() {
-                    *r += av_ik * b[brow + j].to_f32();
-                }
+    WIDEN_A.with(|wa| {
+        WIDEN_B.with(|wb| {
+            let (mut wa, mut wb) = (wa.borrow_mut(), wb.borrow_mut());
+            widen_into(a, &mut wa);
+            widen_into(b, &mut wb);
+            for bi in 0..batch {
+                matmul_panel(
+                    &wa,
+                    &wb,
+                    &mut out[bi * m * n..(bi + 1) * m * n],
+                    bi * a_step,
+                    bi * b_step,
+                    0,
+                    m,
+                    k,
+                    n,
+                );
             }
-            let orow = oo + i * n;
-            for (j, &r) in row.iter().enumerate() {
-                out[orow + j] = T::from_f32(r);
-            }
-        }
+        })
+    });
+}
+
+/// [`matmul_out_g`] split across intra-op workers by output row panels.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_out_g_mt<T: Elem>(
+    a: &[T],
+    b: &[T],
+    out: &mut [T],
+    batch: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a_step: usize,
+    b_step: usize,
+    workers: usize,
+) {
+    if workers <= 1 || 2 * batch * m * k * n < INTRA_GEMM_MIN_FLOPS {
+        matmul_out_g(a, b, out, batch, m, k, n, a_step, b_step);
+        return;
     }
+    // owned widened copies: worker closures borrow them immutably
+    let wa: Vec<f32> = a.iter().map(|v| v.to_f32()).collect();
+    let wb: Vec<f32> = b.iter().map(|v| v.to_f32()).collect();
+    let grain = gemm_grain_rows(k, n);
+    parallel_chunks_mut(out, grain * n, workers, |off, chunk| {
+        matmul_rows(&wa, &wb, chunk, off / n, chunk.len() / n, m, k, n, a_step, b_step);
+    });
 }
 
 /// CumSum with an f32 running accumulator; each prefix rounds at store
@@ -510,26 +1058,36 @@ pub fn reduce_sum_out_g<T: Elem>(
     }
 }
 
+#[inline]
+fn conv1d_row<T: Elem>(xb: &[T], w: &[T], b: &[T], orow: &mut [T], ti: usize, c: usize, k: usize) {
+    for (ci, o) in orow.iter_mut().enumerate() {
+        let mut acc = b[ci].to_f32();
+        for ki in 0..k {
+            // causal: tap ki reads position ti - (k - 1 - ki)
+            let src = ti as isize - (k - 1 - ki) as isize;
+            if src >= 0 {
+                acc += w[ki * c + ci].to_f32() * xb[src as usize * c + ci].to_f32();
+            }
+        }
+        *o = T::from_f32(acc);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 pub fn conv1d_out_g<T: Elem>(
     x: &[T],
     w: &[T],
     b: &[T],
     out: &mut [T],
+    batch: usize,
     t: usize,
     c: usize,
     k: usize,
 ) {
-    for ti in 0..t {
-        for ci in 0..c {
-            let mut acc = b[ci].to_f32();
-            for ki in 0..k {
-                // causal: tap ki reads position ti - (k - 1 - ki)
-                let src = ti as isize - (k - 1 - ki) as isize;
-                if src >= 0 {
-                    acc += w[ki * c + ci].to_f32() * x[src as usize * c + ci].to_f32();
-                }
-            }
-            out[ti * c + ci] = T::from_f32(acc);
+    for bi in 0..batch {
+        let xb = &x[bi * t * c..(bi + 1) * t * c];
+        for (ti, orow) in out[bi * t * c..(bi + 1) * t * c].chunks_mut(c).enumerate() {
+            conv1d_row(xb, w, b, orow, ti, c, k);
         }
     }
 }
@@ -741,6 +1299,53 @@ pub fn reduce_sum_i8_into(
     }
 }
 
+/// Register-tiled i8 GEMM micro-kernel; integer accumulation is exact,
+/// so blocking cannot change results. Mirrors [`matmul_panel`].
+#[allow(clippy::too_many_arguments)]
+fn matmul_i8_panel(
+    a: &[i8],
+    b: &[i8],
+    out_rows: &mut [f32],
+    s: f32,
+    ao: usize,
+    bo: usize,
+    i0: usize,
+    i1: usize,
+    k: usize,
+    n: usize,
+) {
+    let mut i = i0;
+    while i < i1 {
+        let rows = GEMM_MR.min(i1 - i);
+        let mut j = 0;
+        while j < n {
+            let jw = GEMM_NR.min(n - j);
+            let mut acc = [[0i32; GEMM_NR]; GEMM_MR];
+            for kk in 0..k {
+                let brow = &b[bo + kk * n + j..bo + kk * n + j + jw];
+                for (r, acc_r) in acc.iter_mut().enumerate().take(rows) {
+                    let av = a[ao + (i + r) * k + kk];
+                    if av == 0 {
+                        continue;
+                    }
+                    let av = i32::from(av);
+                    for (l, &bv) in brow.iter().enumerate() {
+                        acc_r[l] += av * i32::from(bv);
+                    }
+                }
+            }
+            for (r, acc_r) in acc.iter().enumerate().take(rows) {
+                let orow = (i - i0 + r) * n + j;
+                for (o, &v) in out_rows[orow..orow + jw].iter_mut().zip(acc_r.iter()) {
+                    *o = v as f32 * s;
+                }
+            }
+            j += jw;
+        }
+        i += rows;
+    }
+}
+
 /// i8 x i8 batched matmul: exact i32 accumulation per dot product,
 /// dequantized into f32 by the product of the operand scales.
 #[allow(clippy::too_many_arguments)]
@@ -758,30 +1363,67 @@ pub fn matmul_i8_out(
     b_step: usize,
 ) {
     let s = sa * sb;
-    let mut row = vec![0i32; n];
     for bi in 0..batch {
-        let ao = bi * a_step;
-        let bo = bi * b_step;
-        let oo = bi * m * n;
-        for i in 0..m {
-            row.fill(0);
-            for kk in 0..k {
-                let av_ik = a[ao + i * k + kk];
-                if av_ik == 0 {
-                    continue;
-                }
-                let av = i32::from(av_ik);
-                let brow = bo + kk * n;
-                for (j, r) in row.iter_mut().enumerate() {
-                    *r += av * i32::from(b[brow + j]);
-                }
-            }
-            let orow = oo + i * n;
-            for (j, &r) in row.iter().enumerate() {
-                out[orow + j] = r as f32 * s;
-            }
-        }
+        matmul_i8_panel(
+            a,
+            b,
+            &mut out[bi * m * n..(bi + 1) * m * n],
+            s,
+            bi * a_step,
+            bi * b_step,
+            0,
+            m,
+            k,
+            n,
+        );
     }
+}
+
+/// [`matmul_i8_out`] split across intra-op workers by output row panels.
+/// Safe to split at any worker count: the i32 accumulation is exact.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_i8_out_mt(
+    a: &[i8],
+    sa: f32,
+    b: &[i8],
+    sb: f32,
+    out: &mut [f32],
+    batch: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a_step: usize,
+    b_step: usize,
+    workers: usize,
+) {
+    if workers <= 1 || 2 * batch * m * k * n < INTRA_GEMM_MIN_FLOPS {
+        matmul_i8_out(a, sa, b, sb, out, batch, m, k, n, a_step, b_step);
+        return;
+    }
+    let s = sa * sb;
+    let grain = gemm_grain_rows(k, n);
+    parallel_chunks_mut(out, grain * n, workers, |off, chunk| {
+        let (r0, rows) = (off / n, chunk.len() / n);
+        let mut done = 0;
+        while done < rows {
+            let r = r0 + done;
+            let (bi, il) = (r / m, r % m);
+            let take = (m - il).min(rows - done);
+            matmul_i8_panel(
+                a,
+                b,
+                &mut chunk[done * n..(done + take) * n],
+                s,
+                bi * a_step,
+                bi * b_step,
+                il,
+                il + take,
+                k,
+                n,
+            );
+            done += take;
+        }
+    });
 }
 
 #[cfg(test)]
@@ -942,6 +1584,178 @@ mod tests {
         dequantize_f16_out(&out, &mut wide);
         for (w, o) in wide.iter().zip(&out) {
             assert_eq!(*w, f16_to_f32(*o));
+        }
+    }
+
+    fn lcg_fill(buf: &mut [f32], seed: &mut u32) {
+        for v in buf.iter_mut() {
+            *seed = seed.wrapping_mul(1664525).wrapping_add(1013904223);
+            *v = (*seed >> 8) as f32 / (1u32 << 24) as f32 - 0.5;
+        }
+    }
+
+    #[test]
+    fn blocked_matmul_is_bitwise_identical_to_the_scalar_reference() {
+        // ragged in every dimension (no multiple of MR/NR), broadcast B,
+        // zeros sprinkled into A to exercise the skip path
+        let (batch, m, k, n) = (2usize, 7, 13, 19);
+        let mut seed = 7u32;
+        let mut a = vec![0.0f32; batch * m * k];
+        let mut b = vec![0.0f32; k * n];
+        lcg_fill(&mut a, &mut seed);
+        lcg_fill(&mut b, &mut seed);
+        for v in a.iter_mut().step_by(5) {
+            *v = 0.0;
+        }
+        let mut rf = vec![0.0f32; batch * m * n];
+        let mut bl = vec![f32::NAN; batch * m * n];
+        matmul_ref(&a, &b, &mut rf, batch, m, k, n, m * k, 0);
+        matmul_out(&a, &b, &mut bl, batch, m, k, n, m * k, 0);
+        assert_eq!(rf, bl);
+    }
+
+    #[test]
+    fn fused_binary_reduce_sum_matches_the_unfused_pair() {
+        // (2,3,4) mul a broadcast (1,3,1), reduced along the last axis
+        let shape = [2usize, 3, 4];
+        let mut seed = 3u32;
+        let mut a = vec![0.0f32; 24];
+        let mut b = vec![0.0f32; 3];
+        lcg_fill(&mut a, &mut seed);
+        lcg_fill(&mut b, &mut seed);
+        let sa = bcast_strides(&shape, &shape);
+        let sb = bcast_strides(&shape, &[1, 3, 1]);
+        let mode = BinMode::Strided { sa: sa.clone(), sb: sb.clone() };
+        let mut idx = Vec::new();
+        let mut prod = vec![0.0f32; 24];
+        binary_out(BinKind::Mul, &mode, &a, &b, &shape, &mut prod, &mut idx);
+        let mut red = vec![0.0f32; 6];
+        reduce_sum_out(&prod, &mut red, 6, 4, 1);
+        let mut fused = vec![f32::NAN; 6];
+        binary_reduce_sum_out(BinKind::Mul, &a, &b, &sa, &sb, &shape, 2, &mut fused, &mut idx);
+        assert_eq!(red, fused);
+        // f16 storage: per-stage rounding must match the unfused stores
+        let ah: Vec<u16> = a.iter().map(|&v| f32_to_f16(v)).collect();
+        let bh: Vec<u16> = b.iter().map(|&v| f32_to_f16(v)).collect();
+        let mut prodh = vec![0u16; 24];
+        binary_out_g(BinKind::Mul, &mode, &ah, &bh, &shape, &mut prodh, &mut idx);
+        let mut redh = vec![0u16; 6];
+        reduce_sum_out_g(&prodh, &mut redh, 6, 4, 1);
+        let mut fusedh = vec![0u16; 6];
+        binary_reduce_sum_out_g(
+            BinKind::Mul,
+            &ah,
+            &bh,
+            &sa,
+            &sb,
+            &shape,
+            2,
+            &mut fusedh,
+            &mut idx,
+        );
+        assert_eq!(redh, fusedh);
+        // middle-axis reduction (inner > 1)
+        let mut red1 = vec![0.0f32; 8];
+        reduce_sum_out(&prod, &mut red1, 2, 3, 4);
+        let mut fused1 = vec![f32::NAN; 8];
+        binary_reduce_sum_out(BinKind::Mul, &a, &b, &sa, &sb, &shape, 1, &mut fused1, &mut idx);
+        assert_eq!(red1, fused1);
+    }
+
+    #[test]
+    fn gemm_intra_op_split_matches_serial_at_any_worker_count() {
+        // above INTRA_GEMM_MIN_FLOPS so the mt path actually splits;
+        // n = 129 leaves a ragged tail tile in every row panel
+        let (m, k, n) = (64usize, 64, 129);
+        assert!(2 * m * k * n >= INTRA_GEMM_MIN_FLOPS);
+        let mut seed = 11u32;
+        let mut a = vec![0.0f32; m * k];
+        let mut b = vec![0.0f32; k * n];
+        lcg_fill(&mut a, &mut seed);
+        lcg_fill(&mut b, &mut seed);
+        let mut serial = vec![0.0f32; m * n];
+        matmul_out(&a, &b, &mut serial, 1, m, k, n, 0, 0);
+        for workers in [1usize, 2, 4] {
+            let mut mt = vec![f32::NAN; m * n];
+            matmul_out_mt(&a, &b, &mut mt, 1, m, k, n, 0, 0, workers);
+            assert_eq!(serial, mt, "f32 workers={workers}");
+        }
+        let ah: Vec<u16> = a.iter().map(|&v| f32_to_f16(v)).collect();
+        let bh: Vec<u16> = b.iter().map(|&v| f32_to_f16(v)).collect();
+        let mut sh = vec![0u16; m * n];
+        matmul_out_g::<u16>(&ah, &bh, &mut sh, 1, m, k, n, 0, 0);
+        for workers in [2usize, 4] {
+            let mut mh = vec![0u16; m * n];
+            matmul_out_g_mt::<u16>(&ah, &bh, &mut mh, 1, m, k, n, 0, 0, workers);
+            assert_eq!(sh, mh, "f16 workers={workers}");
+        }
+        let ai: Vec<i8> = (0..m * k).map(|i| (i * 37 % 255) as u8 as i8).collect();
+        let bi: Vec<i8> = (0..k * n).map(|i| (i * 91 % 251) as u8 as i8).collect();
+        let mut si = vec![0.0f32; m * n];
+        matmul_i8_out(&ai, 0.5, &bi, 0.25, &mut si, 1, m, k, n, 0, 0);
+        for workers in [2usize, 4] {
+            let mut mi = vec![f32::NAN; m * n];
+            matmul_i8_out_mt(&ai, 0.5, &bi, 0.25, &mut mi, 1, m, k, n, 0, 0, workers);
+            assert_eq!(si, mi, "i8 workers={workers}");
+        }
+    }
+
+    #[test]
+    fn elementwise_intra_op_splits_match_serial() {
+        let (outer, n_axis, inner) = (8usize, 64, 64);
+        let len = outer * n_axis * inner;
+        assert!(len >= INTRA_ELEM_MIN);
+        let mut seed = 5u32;
+        let mut x = vec![0.0f32; len];
+        lcg_fill(&mut x, &mut seed);
+        let mut cs = vec![0.0f32; len];
+        cumsum_out(&x, &mut cs, outer, n_axis, inner);
+        let mut sm = vec![0.0f32; len];
+        softmax_out_g::<f32>(&x, &mut sm, outer, n_axis, inner);
+        let mut rs = vec![0.0f32; outer * inner];
+        reduce_sum_out(&x, &mut rs, outer, n_axis, inner);
+        let mut y = vec![0.0f32; len];
+        lcg_fill(&mut y, &mut seed);
+        let mut add = vec![0.0f32; len];
+        let mut idx = Vec::new();
+        binary_out(BinKind::Add, &BinMode::Elementwise, &x, &y, &[len], &mut add, &mut idx);
+        let mut si = vec![0.0f32; len];
+        unary_out(UnKind::SiLU, &x, &mut si);
+        let (cb, t, c, k) = (2usize, 128, 128, 4);
+        let mut wv = vec![0.0f32; k * c];
+        let mut bv = vec![0.0f32; c];
+        lcg_fill(&mut wv, &mut seed);
+        lcg_fill(&mut bv, &mut seed);
+        let mut cv = vec![0.0f32; cb * t * c];
+        conv1d_out(&x, &wv, &bv, &mut cv, cb, t, c, k);
+        let mut rn = vec![0.0f32; len];
+        rmsnorm_out(&x, &bv, &mut rn, len / c, c, 1e-5);
+        for workers in [2usize, 4] {
+            let mut o = vec![f32::NAN; len];
+            cumsum_out_mt(&x, &mut o, outer, n_axis, inner, workers);
+            assert_eq!(cs, o, "cumsum workers={workers}");
+            softmax_out_mt(&x, &mut o, outer, n_axis, inner, workers);
+            assert_eq!(sm, o, "softmax workers={workers}");
+            let mut r = vec![f32::NAN; outer * inner];
+            reduce_sum_out_mt(&x, &mut r, outer, n_axis, inner, workers);
+            assert_eq!(rs, r, "reduce workers={workers}");
+            binary_out_mt(
+                BinKind::Add,
+                &BinMode::Elementwise,
+                &x,
+                &y,
+                &[len],
+                &mut o,
+                &mut idx,
+                workers,
+            );
+            assert_eq!(add, o, "binary workers={workers}");
+            unary_out_mt(UnKind::SiLU, &x, &mut o, workers);
+            assert_eq!(si, o, "unary workers={workers}");
+            conv1d_out_mt::<f32>(&x, &wv, &bv, &mut o, cb, t, c, k, workers);
+            assert_eq!(cv, o, "conv workers={workers}");
+            rmsnorm_out_mt(&x, &bv, &mut o, len / c, c, 1e-5, workers);
+            assert_eq!(rn, o, "rmsnorm workers={workers}");
         }
     }
 }

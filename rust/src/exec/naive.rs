@@ -411,24 +411,11 @@ fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor, String> {
     }
     let (av, bv) = (a.as_f32(), b.as_f32());
     let mut out = vec![0.0f32; batch * m * n];
-    for bi in 0..batch {
-        let ao = if batch_a == 1 { 0 } else { bi * m * k };
-        let bo = if batch_b == 1 { 0 } else { bi * k * n };
-        let oo = bi * m * n;
-        for i in 0..m {
-            for kk in 0..k {
-                let av_ik = av[ao + i * k + kk];
-                if av_ik == 0.0 {
-                    continue;
-                }
-                let brow = bo + kk * n;
-                let orow = oo + i * n;
-                for j in 0..n {
-                    out[orow + j] += av_ik * bv[brow + j];
-                }
-            }
-        }
-    }
+    // routes through the same blocked GEMM the planned executor uses, so
+    // planned-vs-naive stays bitwise identical by construction
+    let a_step = if batch_a == 1 { 0 } else { m * k };
+    let b_step = if batch_b == 1 { 0 } else { k * n };
+    kernels::matmul_out(av, bv, &mut out, batch, m, k, n, a_step, b_step);
     // output shape: batch dims from the higher-rank operand
     let mut shape: Vec<usize> = if ra >= rb {
         a.shape[..ra - 2].to_vec()
@@ -504,23 +491,17 @@ fn gather(data: &Tensor, indices: &Tensor) -> Result<Tensor, String> {
 }
 
 fn conv1d_causal(x: &Tensor, w: &Tensor, b: &Tensor, k: usize) -> Tensor {
-    let (t, c) = (x.shape[0], x.shape[1]);
+    // (T, C) or batched (B, T, C); the causal window runs along T within
+    // each batch row independently
+    let (batch, t, c) = match x.shape.as_slice() {
+        [t, c] => (1, *t, *c),
+        [batch, t, c] => (*batch, *t, *c),
+        s => panic!("conv1d_causal input must be (T, C) or (B, T, C), got {s:?}"),
+    };
     let (xv, wv, bv) = (x.as_f32(), w.as_f32(), b.as_f32());
-    let mut out = vec![0.0f32; t * c];
-    for ti in 0..t {
-        for ci in 0..c {
-            let mut acc = bv[ci];
-            for ki in 0..k {
-                // causal: tap ki reads position ti - (k - 1 - ki)
-                let src = ti as isize - (k - 1 - ki) as isize;
-                if src >= 0 {
-                    acc += wv[ki * c + ci] * xv[src as usize * c + ci];
-                }
-            }
-            out[ti * c + ci] = acc;
-        }
-    }
-    Tensor::f32(vec![t, c], out)
+    let mut out = vec![0.0f32; batch * t * c];
+    kernels::conv1d_out(xv, wv, bv, &mut out, batch, t, c, k);
+    Tensor::f32(x.shape.clone(), out)
 }
 
 fn rmsnorm(x: &Tensor, w: &Tensor, eps: f32) -> Tensor {

@@ -32,6 +32,7 @@ use crate::util::f16::{f16_to_f32, f32_to_f16};
 use super::arena::{cast_slice_mut, Arena, SlotAlloc};
 use super::fuse::{self, ChainHead, ElemStage};
 use super::kernels::{self, BinMode, DataRef, View};
+use super::pool::{intra_workers_from_env, parallel_chunks_mut};
 use super::{Backend, Plan};
 
 /// Topological schedule over the live (output-reachable) nodes. Shared
@@ -83,7 +84,7 @@ enum Kernel {
     CumSum { outer: usize, n_axis: usize, inner: usize },
     ReduceSum { outer: usize, n_axis: usize, inner: usize },
     Gather { row: usize, vocab: usize },
-    Conv1d { t: usize, c: usize, k: usize },
+    Conv1d { batch: usize, t: usize, c: usize, k: usize },
     RmsNorm { rows: usize, d: usize, eps: f32 },
     Softmax { outer: usize, n_axis: usize, inner: usize },
     Slice { outer: usize, n_axis: usize, inner: usize, start: usize, len: usize },
@@ -95,6 +96,10 @@ enum Kernel {
     Quantize(DType),
     /// f16 / i8 -> f32 widening.
     Dequantize,
+    /// Fused `Binary -> ReduceSum` reduction epilogue: the binary's
+    /// virtual output (`shape`, operand broadcast strides `sa`/`sb`) is
+    /// reduced along `axis` without ever being materialized.
+    BinaryReduceSum { kind: BinKind, axis: usize, shape: Vec<usize>, sa: Vec<usize>, sb: Vec<usize> },
 }
 
 /// What feeds a fused chain at execution time.
@@ -102,6 +107,9 @@ enum Kernel {
 enum FusedHead {
     Value(ValueRef),
     Binary(BinKind, ValueRef, ValueRef),
+    /// A GEMM (its resolved `Kernel::MatMul`) computing into the chain's
+    /// output slot; the stages run as an in-place epilogue pass.
+    MatMul(Box<Kernel>, ValueRef, ValueRef),
 }
 
 #[derive(Clone, Debug)]
@@ -139,6 +147,10 @@ pub struct ExecutionPlan {
     fscratch: Vec<f32>,
     fused_away: usize,
     live_compute_nodes: usize,
+    /// Intra-op worker count for splitting large kernels (GEMM row
+    /// panels, elementwise slabs). 1 = serial. Chunk boundaries are
+    /// worker-count-independent, so results are identical at any value.
+    intra_workers: usize,
 }
 
 impl ExecutionPlan {
@@ -243,6 +255,87 @@ impl ExecutionPlan {
             protos.push(Proto { out: id, kind });
         }
 
+        // --- Binary -> ReduceSum reduction epilogues ----------------------
+        // A reduction whose sole input is a single-consumer, non-output
+        // binary collapses into one fused kernel, so the (often much
+        // larger) binary intermediate never gets an arena slot or a
+        // store/reload round trip. Bitwise neutral: the fused kernel
+        // mirrors the unfused store-then-reduce value sequence exactly
+        // (see kernels::binary_reduce_sum_out).
+        {
+            let mut is_out = vec![false; n];
+            for &o in &g.outputs {
+                is_out[o] = true;
+            }
+            let mut cnt = vec![0usize; n];
+            for p in &protos {
+                match &p.kind {
+                    ProtoKind::Kernel(_, args) => {
+                        for &a in args {
+                            cnt[a] += 1;
+                        }
+                    }
+                    ProtoKind::Fused(head, _) => match head {
+                        ChainHead::Value(x) => cnt[*x] += 1,
+                        ChainHead::Binary(_, a, b) => {
+                            cnt[*a] += 1;
+                            cnt[*b] += 1;
+                        }
+                        ChainHead::MatMul(mm) => {
+                            for &a in &g.node(*mm).inputs {
+                                cnt[a] += 1;
+                            }
+                        }
+                    },
+                }
+            }
+            let produced: HashMap<NodeId, usize> =
+                protos.iter().enumerate().map(|(i, p)| (p.out, i)).collect();
+            let mut dead = vec![false; protos.len()];
+            for ri in 0..protos.len() {
+                let ProtoKind::Kernel(Kernel::ReduceSum { .. }, rargs) = &protos[ri].kind
+                else {
+                    continue;
+                };
+                let x = rargs[0];
+                if is_out[x]
+                    || cnt[x] != 1
+                    || !matches!(g.node(x).dtype, DType::F32 | DType::F16)
+                {
+                    continue;
+                }
+                let Some(&bi) = produced.get(&x) else { continue };
+                if dead[bi] {
+                    continue;
+                }
+                let ProtoKind::Kernel(Kernel::Binary { kind, .. }, bargs) = &protos[bi].kind
+                else {
+                    continue;
+                };
+                let Op::ReduceSum { axis } = &g.node(protos[ri].out).op else {
+                    continue;
+                };
+                let shape = g.shape(x).to_vec();
+                let sa = kernels::bcast_strides(&shape, g.shape(bargs[0]));
+                let sb = kernels::bcast_strides(&shape, g.shape(bargs[1]));
+                let (kind, axis, bargs) = (*kind, *axis, bargs.clone());
+                protos[ri].kind = ProtoKind::Kernel(
+                    Kernel::BinaryReduceSum { kind, axis, shape, sa, sb },
+                    bargs,
+                );
+                dead[bi] = true;
+                fused_away += 1;
+            }
+            if dead.contains(&true) {
+                let mut i = 0;
+                protos.retain(|_| {
+                    let keep = !dead[i];
+                    i += 1;
+                    keep
+                });
+            }
+        }
+
         // --- use counts (graph outputs pinned) ----------------------------
         let mut uses = vec![0usize; n];
         for p in &protos {
@@ -257,6 +350,11 @@ impl ExecutionPlan {
                     ChainHead::Binary(_, a, b) => {
                         uses[*a] += 1;
                         uses[*b] += 1;
+                    }
+                    ChainHead::MatMul(mm) => {
+                        for &a in &g.node(*mm).inputs {
+                            uses[a] += 1;
+                        }
                     }
                 },
             }
@@ -311,6 +409,19 @@ impl ExecutionPlan {
                             arg_ids.push(*b);
                             FusedHead::Binary(*k, vref(&loc, *a), vref(&loc, *b))
                         }
+                        ChainHead::MatMul(mm) => {
+                            let mm_node = g.node(*mm);
+                            let kernel = kernel_for(g, mm_node)
+                                .map_err(|e| format!("node {mm} ({}): {e}", mm_node.name))?;
+                            let (a, b) = (mm_node.inputs[0], mm_node.inputs[1]);
+                            arg_ids.push(a);
+                            arg_ids.push(b);
+                            FusedHead::MatMul(
+                                Box::new(kernel),
+                                vref(&loc, a),
+                                vref(&loc, b),
+                            )
+                        }
                     };
                     StepKind::Fused { head: fh, stages: stages.clone() }
                 }
@@ -359,7 +470,15 @@ impl ExecutionPlan {
             fscratch: vec![0.0; fscratch_len],
             fused_away,
             live_compute_nodes,
+            intra_workers: intra_workers_from_env(),
         })
+    }
+
+    /// Override the intra-op worker count (tests assert result identity
+    /// across 1/2/4; serving respects `XAMBA_INTRA_THREADS`).
+    pub fn with_intra_workers(mut self, workers: usize) -> Self {
+        self.intra_workers = workers.max(1);
+        self
     }
 
     /// Execute the plan on `inputs` (graph input order). Arena slots are
@@ -410,9 +529,9 @@ impl ExecutionPlan {
             }
         }
 
-        let Self { steps, arena, consts, scratch, fscratch, .. } = self;
+        let Self { steps, arena, consts, scratch, fscratch, intra_workers, .. } = self;
         for step in steps.iter() {
-            exec_step(step, arena, consts, inputs, scratch, fscratch)?;
+            exec_step(step, arena, consts, inputs, scratch, fscratch, *intra_workers)?;
         }
 
         self.outputs
@@ -659,7 +778,12 @@ fn kernel_for(g: &Graph, node: &Node) -> Result<Kernel, String> {
         }
         Op::Conv1dCausal { k } => {
             let sx = g.shape(node.inputs[0]);
-            Kernel::Conv1d { t: sx[0], c: sx[1], k: *k }
+            let (batch, t, c) = match sx {
+                [t, c] => (1, *t, *c),
+                [batch, t, c] => (*batch, *t, *c),
+                _ => unreachable!("conv1d rank checked at graph build"),
+            };
+            Kernel::Conv1d { batch, t, c, k: *k }
         }
         Op::RmsNorm { eps } => {
             let sx = g.shape(node.inputs[0]);
@@ -735,6 +859,7 @@ fn tensor_ref(t: &Tensor) -> DataRef<'_> {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn exec_step(
     step: &Step,
     arena: &mut Arena,
@@ -742,6 +867,7 @@ fn exec_step(
     inputs: &[&Tensor],
     scratch: &mut Vec<usize>,
     fscratch: &mut [f32],
+    workers: usize,
 ) -> Result<(), String> {
     let Loc::Slot(s) = step.out else {
         unreachable!("compute step writes to a slot")
@@ -755,6 +881,7 @@ fn exec_step(
             consts,
             inputs,
             scratch,
+            workers,
         )
         .map(|()| None),
         DType::F16 => run_f16(
@@ -764,6 +891,7 @@ fn exec_step(
             consts,
             inputs,
             scratch,
+            workers,
         )
         .map(|()| None),
         DType::I8 => run_i8(
@@ -796,6 +924,18 @@ fn exec_step(
     }
 }
 
+/// Run `f(offset, chunk)` over `out`, splitting across intra-op workers
+/// when the node is large enough (chunk boundaries are worker-count-
+/// independent, so any split is bitwise-identical to the serial pass).
+fn for_chunks<T: Send>(out: &mut [T], workers: usize, f: impl Fn(usize, &mut [T]) + Sync) {
+    if workers > 1 && out.len() >= kernels::INTRA_ELEM_MIN {
+        parallel_chunks_mut(out, kernels::INTRA_ELEM_GRAIN, workers, &f);
+    } else {
+        f(0, out);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn run_f32(
     step: &Step,
     out: &mut [f32],
@@ -803,30 +943,72 @@ fn run_f32(
     consts: &[Tensor],
     inputs: &[&Tensor],
     scratch: &mut Vec<usize>,
+    workers: usize,
 ) -> Result<(), String> {
     match &step.kind {
         StepKind::Fused { head, stages } => {
             match head {
                 FusedHead::Value(x) => {
                     let xv = view(x, arena, consts, inputs).f32();
-                    for (o, &v) in out.iter_mut().zip(xv) {
-                        let mut acc = v;
-                        for st in stages {
-                            acc = st.apply(acc);
+                    for_chunks(out, workers, |off, chunk| {
+                        for (o, &v) in chunk.iter_mut().zip(&xv[off..off + chunk.len()]) {
+                            let mut acc = v;
+                            for st in stages {
+                                acc = st.apply(acc);
+                            }
+                            *o = acc;
                         }
-                        *o = acc;
-                    }
+                    });
                 }
                 FusedHead::Binary(kind, a, b) => {
                     let av = view(a, arena, consts, inputs).f32();
                     let bv = view(b, arena, consts, inputs).f32();
-                    for i in 0..out.len() {
-                        let mut acc = kernels::apply_binary(*kind, av[i], bv[i]);
-                        for st in stages {
-                            acc = st.apply(acc);
+                    for_chunks(out, workers, |off, chunk| {
+                        for (i, o) in chunk.iter_mut().enumerate() {
+                            let mut acc =
+                                kernels::apply_binary(*kind, av[off + i], bv[off + i]);
+                            for st in stages {
+                                acc = st.apply(acc);
+                            }
+                            *o = acc;
                         }
-                        out[i] = acc;
+                    });
+                }
+                FusedHead::MatMul(kernel, a, b) => {
+                    let Kernel::MatMul { batch, m, k, n, a_step, b_step } = kernel.as_ref()
+                    else {
+                        unreachable!("matmul chain head carries a matmul kernel")
+                    };
+                    if a.dtype == DType::I8 {
+                        let (qa, sa) = view(a, arena, consts, inputs).i8();
+                        let (qb, sb) = view(b, arena, consts, inputs).i8();
+                        kernels::matmul_i8_out_mt(
+                            qa, sa, qb, sb, out, *batch, *m, *k, *n, *a_step, *b_step,
+                            workers,
+                        );
+                    } else {
+                        kernels::matmul_out_mt(
+                            view(a, arena, consts, inputs).f32(),
+                            view(b, arena, consts, inputs).f32(),
+                            out,
+                            *batch,
+                            *m,
+                            *k,
+                            *n,
+                            *a_step,
+                            *b_step,
+                            workers,
+                        );
                     }
+                    for_chunks(out, workers, |_, chunk| {
+                        for o in chunk.iter_mut() {
+                            let mut acc = *o;
+                            for st in stages {
+                                acc = st.apply(acc);
+                            }
+                            *o = acc;
+                        }
+                    });
                 }
             }
             Ok(())
@@ -838,11 +1020,12 @@ fn run_f32(
                     if args[0].dtype == DType::I8 {
                         let (qa, sa) = v(0).i8();
                         let (qb, sb) = v(1).i8();
-                        kernels::matmul_i8_out(
+                        kernels::matmul_i8_out_mt(
                             qa, sa, qb, sb, out, *batch, *m, *k, *n, *a_step, *b_step,
+                            workers,
                         );
                     } else {
-                        kernels::matmul_out(
+                        kernels::matmul_out_mt(
                             v(0).f32(),
                             v(1).f32(),
                             out,
@@ -852,12 +1035,13 @@ fn run_f32(
                             *n,
                             *a_step,
                             *b_step,
+                            workers,
                         );
                     }
                     Ok(())
                 }
                 Kernel::Binary { kind, mode } => {
-                    kernels::binary_out(
+                    kernels::binary_out_mt::<f32>(
                         *kind,
                         mode,
                         v(0).f32(),
@@ -865,38 +1049,92 @@ fn run_f32(
                         &step.out_shape,
                         out,
                         scratch,
+                        workers,
+                    );
+                    Ok(())
+                }
+                Kernel::BinaryReduceSum { kind, axis, shape, sa, sb } => {
+                    kernels::binary_reduce_sum_out(
+                        *kind,
+                        v(0).f32(),
+                        v(1).f32(),
+                        sa,
+                        sb,
+                        shape,
+                        *axis,
+                        out,
+                        scratch,
                     );
                     Ok(())
                 }
                 Kernel::Unary(k) => {
-                    kernels::unary_out(*k, v(0).f32(), out);
+                    kernels::unary_out_mt::<f32>(*k, v(0).f32(), out, workers);
                     Ok(())
                 }
                 Kernel::Plu(table) => {
-                    kernels::plu_out(table, v(0).f32(), out);
+                    kernels::plu_out_mt::<f32>(table, v(0).f32(), out, workers);
                     Ok(())
                 }
                 Kernel::CumSum { outer, n_axis, inner } => {
-                    kernels::cumsum_out(v(0).f32(), out, *outer, *n_axis, *inner);
+                    kernels::cumsum_out_mt::<f32>(
+                        v(0).f32(),
+                        out,
+                        *outer,
+                        *n_axis,
+                        *inner,
+                        workers,
+                    );
                     Ok(())
                 }
                 Kernel::ReduceSum { outer, n_axis, inner } => {
-                    kernels::reduce_sum_out(v(0).f32(), out, *outer, *n_axis, *inner);
+                    kernels::reduce_sum_out_mt::<f32>(
+                        v(0).f32(),
+                        out,
+                        *outer,
+                        *n_axis,
+                        *inner,
+                        workers,
+                    );
                     Ok(())
                 }
                 Kernel::Gather { row, vocab } => {
                     kernels::gather_out(v(0).f32(), v(1).i32(), out, *row, *vocab)
                 }
-                Kernel::Conv1d { t, c, k } => {
-                    kernels::conv1d_out(v(0).f32(), v(1).f32(), v(2).f32(), out, *t, *c, *k);
+                Kernel::Conv1d { batch, t, c, k } => {
+                    kernels::conv1d_out_mt::<f32>(
+                        v(0).f32(),
+                        v(1).f32(),
+                        v(2).f32(),
+                        out,
+                        *batch,
+                        *t,
+                        *c,
+                        *k,
+                        workers,
+                    );
                     Ok(())
                 }
                 Kernel::RmsNorm { rows, d, eps } => {
-                    kernels::rmsnorm_out(v(0).f32(), v(1).f32(), out, *rows, *d, *eps);
+                    kernels::rmsnorm_out_mt::<f32>(
+                        v(0).f32(),
+                        v(1).f32(),
+                        out,
+                        *rows,
+                        *d,
+                        *eps,
+                        workers,
+                    );
                     Ok(())
                 }
                 Kernel::Softmax { outer, n_axis, inner } => {
-                    kernels::softmax_out(v(0).f32(), out, *outer, *n_axis, *inner);
+                    kernels::softmax_out_mt::<f32>(
+                        v(0).f32(),
+                        out,
+                        *outer,
+                        *n_axis,
+                        *inner,
+                        workers,
+                    );
                     Ok(())
                 }
                 Kernel::Slice { outer, n_axis, inner, start, len } => {
@@ -937,6 +1175,7 @@ fn round_f16(v: f32) -> f32 {
     f16_to_f32(f32_to_f16(v))
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_f16(
     step: &Step,
     out: &mut [u16],
@@ -944,34 +1183,66 @@ fn run_f16(
     consts: &[Tensor],
     inputs: &[&Tensor],
     scratch: &mut Vec<usize>,
+    workers: usize,
 ) -> Result<(), String> {
     match &step.kind {
         StepKind::Fused { head, stages } => {
             match head {
                 FusedHead::Value(x) => {
                     let xv = view(x, arena, consts, inputs).f16();
-                    for (o, &v) in out.iter_mut().zip(xv) {
-                        let mut acc = f16_to_f32(v);
-                        for st in stages {
-                            acc = round_f16(st.apply(acc));
+                    for_chunks(out, workers, |off, chunk| {
+                        for (o, &v) in chunk.iter_mut().zip(&xv[off..off + chunk.len()]) {
+                            let mut acc = f16_to_f32(v);
+                            for st in stages {
+                                acc = round_f16(st.apply(acc));
+                            }
+                            *o = f32_to_f16(acc);
                         }
-                        *o = f32_to_f16(acc);
-                    }
+                    });
                 }
                 FusedHead::Binary(kind, a, b) => {
                     let av = view(a, arena, consts, inputs).f16();
                     let bv = view(b, arena, consts, inputs).f16();
-                    for i in 0..out.len() {
-                        let mut acc = round_f16(kernels::apply_binary(
-                            *kind,
-                            f16_to_f32(av[i]),
-                            f16_to_f32(bv[i]),
-                        ));
-                        for st in stages {
-                            acc = round_f16(st.apply(acc));
+                    for_chunks(out, workers, |off, chunk| {
+                        for (i, o) in chunk.iter_mut().enumerate() {
+                            let mut acc = round_f16(kernels::apply_binary(
+                                *kind,
+                                f16_to_f32(av[off + i]),
+                                f16_to_f32(bv[off + i]),
+                            ));
+                            for st in stages {
+                                acc = round_f16(st.apply(acc));
+                            }
+                            *o = f32_to_f16(acc);
                         }
-                        out[i] = f32_to_f16(acc);
-                    }
+                    });
+                }
+                FusedHead::MatMul(kernel, a, b) => {
+                    let Kernel::MatMul { batch, m, k, n, a_step, b_step } = kernel.as_ref()
+                    else {
+                        unreachable!("matmul chain head carries a matmul kernel")
+                    };
+                    kernels::matmul_out_g_mt::<u16>(
+                        view(a, arena, consts, inputs).f16(),
+                        view(b, arena, consts, inputs).f16(),
+                        out,
+                        *batch,
+                        *m,
+                        *k,
+                        *n,
+                        *a_step,
+                        *b_step,
+                        workers,
+                    );
+                    for_chunks(out, workers, |_, chunk| {
+                        for o in chunk.iter_mut() {
+                            let mut acc = f16_to_f32(*o);
+                            for st in stages {
+                                acc = round_f16(st.apply(acc));
+                            }
+                            *o = f32_to_f16(acc);
+                        }
+                    });
                 }
             }
             Ok(())
@@ -980,7 +1251,7 @@ fn run_f16(
             let v = |i: usize| view(&args[i], arena, consts, inputs);
             match kernel {
                 Kernel::MatMul { batch, m, k, n, a_step, b_step } => {
-                    kernels::matmul_out_g::<u16>(
+                    kernels::matmul_out_g_mt::<u16>(
                         v(0).f16(),
                         v(1).f16(),
                         out,
@@ -990,11 +1261,12 @@ fn run_f16(
                         *n,
                         *a_step,
                         *b_step,
+                        workers,
                     );
                     Ok(())
                 }
                 Kernel::Binary { kind, mode } => {
-                    kernels::binary_out_g::<u16>(
+                    kernels::binary_out_mt::<u16>(
                         *kind,
                         mode,
                         v(0).f16(),
@@ -1002,46 +1274,92 @@ fn run_f16(
                         &step.out_shape,
                         out,
                         scratch,
+                        workers,
+                    );
+                    Ok(())
+                }
+                Kernel::BinaryReduceSum { kind, axis, shape, sa, sb } => {
+                    kernels::binary_reduce_sum_out_g::<u16>(
+                        *kind,
+                        v(0).f16(),
+                        v(1).f16(),
+                        sa,
+                        sb,
+                        shape,
+                        *axis,
+                        out,
+                        scratch,
                     );
                     Ok(())
                 }
                 Kernel::Unary(k) => {
-                    kernels::unary_out_g::<u16>(*k, v(0).f16(), out);
+                    kernels::unary_out_mt::<u16>(*k, v(0).f16(), out, workers);
                     Ok(())
                 }
                 Kernel::Plu(table) => {
-                    kernels::plu_out_g::<u16>(table, v(0).f16(), out);
+                    kernels::plu_out_mt::<u16>(table, v(0).f16(), out, workers);
                     Ok(())
                 }
                 Kernel::CumSum { outer, n_axis, inner } => {
-                    kernels::cumsum_out_g::<u16>(v(0).f16(), out, *outer, *n_axis, *inner);
+                    kernels::cumsum_out_mt::<u16>(
+                        v(0).f16(),
+                        out,
+                        *outer,
+                        *n_axis,
+                        *inner,
+                        workers,
+                    );
                     Ok(())
                 }
                 Kernel::ReduceSum { outer, n_axis, inner } => {
-                    kernels::reduce_sum_out_g::<u16>(v(0).f16(), out, *outer, *n_axis, *inner);
+                    kernels::reduce_sum_out_mt::<u16>(
+                        v(0).f16(),
+                        out,
+                        *outer,
+                        *n_axis,
+                        *inner,
+                        workers,
+                    );
                     Ok(())
                 }
                 Kernel::Gather { row, vocab } => {
                     kernels::gather_out(v(0).f16(), v(1).i32(), out, *row, *vocab)
                 }
-                Kernel::Conv1d { t, c, k } => {
-                    kernels::conv1d_out_g::<u16>(
+                Kernel::Conv1d { batch, t, c, k } => {
+                    kernels::conv1d_out_mt::<u16>(
                         v(0).f16(),
                         v(1).f16(),
                         v(2).f16(),
                         out,
+                        *batch,
                         *t,
                         *c,
                         *k,
+                        workers,
                     );
                     Ok(())
                 }
                 Kernel::RmsNorm { rows, d, eps } => {
-                    kernels::rmsnorm_out_g::<u16>(v(0).f16(), v(1).f16(), out, *rows, *d, *eps);
+                    kernels::rmsnorm_out_mt::<u16>(
+                        v(0).f16(),
+                        v(1).f16(),
+                        out,
+                        *rows,
+                        *d,
+                        *eps,
+                        workers,
+                    );
                     Ok(())
                 }
                 Kernel::Softmax { outer, n_axis, inner } => {
-                    kernels::softmax_out_g::<u16>(v(0).f16(), out, *outer, *n_axis, *inner);
+                    kernels::softmax_out_mt::<u16>(
+                        v(0).f16(),
+                        out,
+                        *outer,
+                        *n_axis,
+                        *inner,
+                        workers,
+                    );
                     Ok(())
                 }
                 Kernel::Slice { outer, n_axis, inner, start, len } => {
@@ -1452,6 +1770,173 @@ mod tests {
         assert_eq!(gq, wq);
         assert_eq!(gs, ws);
         assert_eq!(gs, 4.0 / 127.0, "layout ops must carry the scale unchanged");
+    }
+
+    #[test]
+    fn matmul_epilogue_fuses_into_the_gemm_step() {
+        // matmul -> silu -> *0.5 collapses to one step: the GEMM writes
+        // the output slot and the stages run as an in-place second pass
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![4, 8]);
+        let b = g.input("b", vec![8, 6]);
+        let m = g.matmul(a, b, "m");
+        let s = g.silu(m, "s");
+        let half = g.const_scalar("h", 0.5);
+        let c = g.mul(s, half, "c");
+        g.output(c);
+        let mut p = plan_of(&g);
+        assert_eq!(p.step_count(), 1, "matmul + epilogue should be one step");
+        assert_eq!(p.fused_node_count(), 2);
+        assert_eq!(p.slot_count(), 1, "epilogue intermediates get no slots");
+        let at = Tensor::f32(vec![4, 8], (0..32).map(|i| (i as f32) * 0.17 - 2.3).collect());
+        let bt = Tensor::f32(vec![8, 6], (0..48).map(|i| (i as f32) * 0.09 - 1.9).collect());
+        let got = p.run(&[at.clone(), bt.clone()]).unwrap();
+        let want = super::super::naive::run(&g, &[at, bt]).unwrap();
+        assert_eq!(got[0].as_f32(), want[0].as_f32(), "epilogue fusion must be bitwise");
+    }
+
+    #[test]
+    fn f16_matmul_epilogue_is_bitwise_with_per_stage_rounding() {
+        let mut g = Graph::new("t");
+        let a = g.input_dtype("a", vec![3, 5], DType::F16);
+        let b = g.input_dtype("b", vec![5, 4], DType::F16);
+        let m = g.matmul(a, b, "m");
+        let s = g.silu(m, "s");
+        let e = g.exp(s, "e");
+        g.output(e);
+        let mut p = plan_of(&g);
+        assert_eq!(p.step_count(), 1);
+        let at = Tensor::f32(vec![3, 5], (0..15).map(|i| (i as f32) * 0.21 - 1.4).collect())
+            .to_dtype(DType::F16);
+        let bt = Tensor::f32(vec![5, 4], (0..20).map(|i| (i as f32) * 0.13 - 1.2).collect())
+            .to_dtype(DType::F16);
+        let got = p.run(&[at.clone(), bt.clone()]).unwrap();
+        let want = super::super::naive::run(&g, &[at, bt]).unwrap();
+        assert_eq!(got[0].as_f16(), want[0].as_f16(), "f16 rounds after every stage");
+    }
+
+    #[test]
+    fn binary_reduce_sum_fuses_and_stays_bitwise() {
+        // mul -> reduce_sum(axis=1) collapses into one reduction step, so
+        // the (4,8,3) product never takes an arena slot
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![4, 8, 3]);
+        let b = g.input("b", vec![4, 8, 3]);
+        let m = g.mul(a, b, "m");
+        let r = g.reduce_sum(m, 1, "r");
+        g.output(r);
+        let mut p = plan_of(&g);
+        assert_eq!(p.step_count(), 1, "binary + reduce should be one step");
+        assert_eq!(p.fused_node_count(), 1);
+        assert_eq!(p.slot_count(), 1, "the product intermediate gets no slot");
+        let at = Tensor::f32(vec![4, 8, 3], (0..96).map(|i| (i as f32) * 0.07 - 3.1).collect());
+        let bt = Tensor::f32(vec![4, 8, 3], (0..96).map(|i| (i as f32) * 0.05 - 2.2).collect());
+        let got = p.run(&[at.clone(), bt.clone()]).unwrap();
+        let want = super::super::naive::run(&g, &[at, bt]).unwrap();
+        assert_eq!(got[0].as_f32(), want[0].as_f32(), "reduction epilogue must be bitwise");
+        assert_eq!(got[0].shape, vec![4, 3]);
+    }
+
+    #[test]
+    fn broadcast_binary_reduce_sum_fuses_and_stays_bitwise() {
+        // the broadcast operand reads through zero strides inside the
+        // fused kernel — same values the materialized product would hold
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![4, 8, 3]);
+        let b = g.input("b", vec![8, 3]);
+        let m = g.mul(a, b, "m");
+        let r = g.reduce_sum(m, 2, "r");
+        g.output(r);
+        let mut p = plan_of(&g);
+        assert_eq!(p.step_count(), 1);
+        let at = Tensor::f32(vec![4, 8, 3], (0..96).map(|i| (i as f32) * 0.03 - 1.5).collect());
+        let bt = Tensor::f32(vec![8, 3], (0..24).map(|i| (i as f32) * 0.11 - 1.3).collect());
+        let got = p.run(&[at.clone(), bt.clone()]).unwrap();
+        let want = super::super::naive::run(&g, &[at, bt]).unwrap();
+        assert_eq!(got[0].as_f32(), want[0].as_f32());
+    }
+
+    #[test]
+    fn f16_binary_reduce_sum_fuses_and_stays_bitwise() {
+        let mut g = Graph::new("t");
+        let a = g.input_dtype("a", vec![4, 8, 3], DType::F16);
+        let b = g.input_dtype("b", vec![4, 8, 3], DType::F16);
+        let m = g.mul(a, b, "m");
+        let r = g.reduce_sum(m, 1, "r");
+        g.output(r);
+        let mut p = plan_of(&g);
+        assert_eq!(p.step_count(), 1);
+        let at = Tensor::f32(vec![4, 8, 3], (0..96).map(|i| (i as f32) * 0.07 - 3.1).collect())
+            .to_dtype(DType::F16);
+        let bt = Tensor::f32(vec![4, 8, 3], (0..96).map(|i| (i as f32) * 0.05 - 2.2).collect())
+            .to_dtype(DType::F16);
+        let got = p.run(&[at.clone(), bt.clone()]).unwrap();
+        let want = super::super::naive::run(&g, &[at, bt]).unwrap();
+        assert_eq!(got[0].as_f16(), want[0].as_f16(), "per-stage f16 rounding preserved");
+    }
+
+    #[test]
+    fn multi_consumer_or_output_binary_does_not_fuse_with_reduce() {
+        // the product is itself a graph output, so it must still be
+        // materialized and the reduction stays a separate step
+        let mut g = Graph::new("t");
+        let a = g.input("a", vec![4, 8]);
+        let b = g.input("b", vec![4, 8]);
+        let m = g.mul(a, b, "m");
+        let r = g.reduce_sum(m, 0, "r");
+        g.output(m);
+        g.output(r);
+        let mut p = plan_of(&g);
+        assert_eq!(p.step_count(), 2);
+        let at = Tensor::f32(vec![4, 8], (0..32).map(|i| i as f32 * 0.4 - 5.0).collect());
+        let bt = Tensor::f32(vec![4, 8], (0..32).map(|i| i as f32 * 0.2 - 3.0).collect());
+        let got = p.run(&[at.clone(), bt.clone()]).unwrap();
+        let want = super::super::naive::run(&g, &[at, bt]).unwrap();
+        assert_eq!(got[0].as_f32(), want[0].as_f32());
+        assert_eq!(got[1].as_f32(), want[1].as_f32());
+    }
+
+    #[test]
+    fn intra_op_worker_count_never_changes_results() {
+        // prefill-scale graph exercising the threaded paths: a GEMM over
+        // the FLOP threshold with a fused epilogue, plus elementwise /
+        // scan / softmax nodes over the element threshold, plus a fused
+        // binary->reduce. Chunk boundaries depend only on shape, so every
+        // worker count must agree bitwise with the serial pass.
+        let mut g = Graph::new("t");
+        let x = g.input("x", vec![64, 512]);
+        let w = g.input("w", vec![512, 64]);
+        let m = g.matmul(x, w, "m");
+        let s = g.silu(m, "s");
+        let sm = g.softmax(x, 1, "sm");
+        let cs = g.cumsum(x, 0, "cs");
+        let sum = g.add(sm, cs, "sum");
+        let red = g.reduce_sum(sum, 1, "red");
+        g.output(s);
+        g.output(red);
+        let xs = Tensor::f32(
+            vec![64, 512],
+            (0..64 * 512).map(|i| ((i * 2654435761usize) % 1000) as f32 * 0.002 - 1.0).collect(),
+        );
+        let ws = Tensor::f32(
+            vec![512, 64],
+            (0..512 * 64).map(|i| ((i * 40503usize) % 997) as f32 * 0.001 - 0.5).collect(),
+        );
+        let mut base = plan_of(&g).with_intra_workers(1);
+        let want = base.run(&[xs.clone(), ws.clone()]).unwrap();
+        for workers in [2, 4] {
+            let mut p = plan_of(&g).with_intra_workers(workers);
+            for trial in 0..2 {
+                let got = p.run(&[xs.clone(), ws.clone()]).unwrap();
+                for (gt, wt) in got.iter().zip(&want) {
+                    assert_eq!(
+                        gt.as_f32(),
+                        wt.as_f32(),
+                        "workers={workers} trial={trial} must be bitwise-serial"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -195,6 +195,63 @@ fn worker_loop(rx: Receiver<Msg>) {
     }
 }
 
+// --- intra-op splitting ---------------------------------------------------------
+
+/// Intra-op worker count for splitting single large kernels (GEMM row
+/// panels, elementwise slabs). Defaults to 1 — fully serial, zero
+/// behavioral change — unless `XAMBA_INTRA_THREADS` asks for more.
+pub fn intra_workers_from_env() -> usize {
+    std::env::var("XAMBA_INTRA_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .unwrap_or(1)
+        .max(1)
+}
+
+/// Split `data` into fixed-size chunks of `chunk_elems` (the last chunk
+/// may be short) and run `f(element_offset, chunk)` over all of them on
+/// up to `workers` scoped threads.
+///
+/// Chunk boundaries depend ONLY on `data.len()` and `chunk_elems`, never
+/// on `workers` — chunks are dealt round-robin to workers, so any worker
+/// count computes the same chunks with the same `f`, and results are
+/// bitwise-identical to the serial loop by construction. The calling
+/// thread runs the first share itself; only `workers - 1` threads spawn.
+pub(crate) fn parallel_chunks_mut<T, F>(data: &mut [T], chunk_elems: usize, workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let chunk_elems = chunk_elems.max(1);
+    if workers <= 1 || data.len() <= chunk_elems {
+        let mut off = 0;
+        for chunk in data.chunks_mut(chunk_elems) {
+            let len = chunk.len();
+            f(off, chunk);
+            off += len;
+        }
+        return;
+    }
+    let mut parts: Vec<Vec<(usize, &mut [T])>> = (0..workers).map(|_| Vec::new()).collect();
+    for (ci, chunk) in data.chunks_mut(chunk_elems).enumerate() {
+        parts[ci % workers].push((ci * chunk_elems, chunk));
+    }
+    let f = &f;
+    std::thread::scope(|s| {
+        let mut own = parts.remove(0);
+        for part in parts.into_iter().filter(|p| !p.is_empty()) {
+            s.spawn(move || {
+                for (off, chunk) in part {
+                    f(off, chunk);
+                }
+            });
+        }
+        for (off, chunk) in own.drain(..) {
+            f(off, chunk);
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -280,6 +337,22 @@ mod tests {
             let want: Vec<f32> =
                 (0..4).map(|d| ((i * 4 + d) as f32).powi(2)).collect();
             assert_eq!(got, want.as_slice(), "worker {i}");
+        }
+    }
+
+    #[test]
+    fn parallel_chunks_cover_every_offset_at_any_worker_count() {
+        for workers in [1usize, 2, 5] {
+            let mut data = vec![0u32; 103]; // ragged tail chunk
+            parallel_chunks_mut(&mut data, 10, workers, |off, chunk| {
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v = (off + i) as u32;
+                }
+            });
+            assert!(
+                data.iter().enumerate().all(|(i, &v)| v == i as u32),
+                "workers={workers}"
+            );
         }
     }
 

@@ -280,10 +280,14 @@ impl Graph {
     ) -> NodeId {
         let sx = self.shape(x).to_vec();
         let sw = self.shape(w).to_vec();
-        assert_eq!(sx.len(), 2, "conv input must be (T, C)");
+        assert!(
+            sx.len() == 2 || sx.len() == 3,
+            "conv input must be (T, C) or (B, T, C)"
+        );
         assert_eq!(sw.len(), 2, "conv weight must be (K, C)");
-        assert_eq!(sx[1], sw[1], "conv channel mismatch");
-        assert_eq!(self.shape(b), &[sx[1]], "conv bias mismatch");
+        let c = *sx.last().unwrap();
+        assert_eq!(c, sw[1], "conv channel mismatch");
+        assert_eq!(self.shape(b), &[c], "conv bias mismatch");
         let k = sw[0];
         let dt = self.value_dtype2(x, w, name);
         assert_eq!(self.node(b).dtype, dt, "conv bias dtype mismatch at {name}");

@@ -137,6 +137,95 @@ pub(crate) fn block_prefill_with_state(
     (out, xi, h.expect("scan needs t >= 1"))
 }
 
+/// Batched counterpart of [`block_prefill_with_state`]: one rank-3 node
+/// per op over `x` (B, T, d_model) instead of `B` replicas of the
+/// single-sequence block. Every op treats the leading batch dimension
+/// independently — matmuls against shared rank-2 weights walk rows, the
+/// conv and the unrolled scan slice along the time axis, broadcasts
+/// reuse the same parameter values per sequence — so each sequence's
+/// results are bitwise identical to the single-sequence block. Returns
+/// `(block_out (B, T, d_model), conv input sequence (B, T, d_inner),
+/// final scan state (B, d_inner, N))`.
+pub(crate) fn block_prefill_batched_with_state(
+    ctx: &mut Ctx,
+    m: &ModelShape,
+    j: usize,
+    x: NodeId,
+    b: usize,
+    t: usize,
+) -> (NodeId, NodeId, NodeId) {
+    let (di, n) = (m.d_inner(), m.d_state);
+    let r = m.resolved_dt_rank();
+    let nm = |s: &str| format!("l{j}.{s}");
+    let w = |ctx: &Ctx, s: &str| ctx.w(&nm(s));
+
+    // staged projections: rank-3 activations against the shared weights
+    let in_proj = w(&*ctx, "in_proj");
+    let xz = ctx.g.matmul(x, in_proj, &nm("in_proj.mm")); // (B, T, 2di)
+    let xi = ctx.g.slice(xz, 2, 0, di, &nm("split.x"));
+    let z = ctx.g.slice(xz, 2, di, di, &nm("split.z"));
+
+    // depthwise causal conv (batch-aware kernel) + SiLU
+    let (cw, cb) = (w(&*ctx, "conv_w"), w(&*ctx, "conv_b"));
+    let xc = ctx.g.conv1d_causal(xi, cw, cb, &nm("conv")); // (B, T, di)
+    let xc = ctx.g.silu(xc, &nm("conv.silu"));
+
+    // selective parameters dt, B, C
+    let xp = w(&*ctx, "x_proj");
+    let xdbc = ctx.g.matmul(xc, xp, &nm("x_proj.mm")); // (B, T, r+2n)
+    let dt_r = ctx.g.slice(xdbc, 2, 0, r, &nm("split.dt"));
+    let b_sel = ctx.g.slice(xdbc, 2, r, n, &nm("split.B"));
+    let c_sel = ctx.g.slice(xdbc, 2, r + n, n, &nm("split.C"));
+    let (dtw, dtb) = (w(&*ctx, "dt_proj_w"), w(&*ctx, "dt_proj_b"));
+    let dt_full = ctx.g.matmul(dt_r, dtw, &nm("dt_proj.mm"));
+    let dt_full = ctx.g.add(dt_full, dtb, &nm("dt_proj.bias"));
+    let dt = ctx.g.softplus(dt_full, &nm("dt.softplus")); // (B, T, di)
+
+    let a_log = w(&*ctx, "a_log");
+    let a_exp = ctx.g.exp(a_log, &nm("A.exp"));
+    let neg1 = ctx.g.const_scalar(&nm("A.neg1"), -1.0);
+    let a = ctx.g.mul(a_exp, neg1, &nm("A")); // (di, n)
+    let d_skip = w(&*ctx, "d_skip");
+
+    // unrolled scan, batch-stacked: each step advances all B sequences
+    // through one (B, di, n) node set
+    let mut hstate: Option<NodeId> = None;
+    let mut ys: Vec<NodeId> = Vec::with_capacity(t);
+    for step in 0..t {
+        let snm = |s: &str| format!("l{j}.scan{step}.{s}");
+        let x_t = ctx.g.slice(xc, 1, step, 1, &snm("x"));   // (B, 1, di)
+        let dt_t = ctx.g.slice(dt, 1, step, 1, &snm("dt")); // (B, 1, di)
+        let b_t = ctx.g.slice(b_sel, 1, step, 1, &snm("B")); // (B, 1, n)
+        let c_t = ctx.g.slice(c_sel, 1, step, 1, &snm("C")); // (B, 1, n)
+        let dt_col = ctx.g.reshape(dt_t, vec![b, di, 1], &snm("dt.col"));
+        let da = ctx.g.mul(dt_col, a, &snm("dtA")); // (B, di, n)
+        let da = ctx.g.exp(da, &snm("decay"));
+        let xdt = ctx.g.mul(dt_t, x_t, &snm("x.dt")); // (B, 1, di)
+        let xdt_col = ctx.g.reshape(xdt, vec![b, di, 1], &snm("x.dt.col"));
+        let inflow = ctx.g.mul(xdt_col, b_t, &snm("inflow")); // (B, di, n)
+        let h_new = match hstate {
+            None => inflow, // h0 = 0
+            Some(prev) => {
+                let decayed = ctx.g.mul(da, prev, &snm("h.decay"));
+                ctx.g.add(decayed, inflow, &snm("h"))
+            }
+        };
+        hstate = Some(h_new);
+        let c_col = ctx.g.reshape(c_t, vec![b, n, 1], &snm("C.col"));
+        let y_t = ctx.g.matmul(h_new, c_col, &snm("y.mm")); // (B, di, 1)
+        let y_row = ctx.g.reshape(y_t, vec![b, 1, di], &snm("y.row"));
+        let skip = ctx.g.mul(x_t, d_skip, &snm("y.skip"));
+        ys.push(ctx.g.add(y_row, skip, &snm("y")));
+    }
+    let y = ctx.g.concat(&ys, 1, &nm("scan.y")); // (B, T, di)
+
+    let zg = ctx.g.silu(z, &nm("gate.silu"));
+    let y = ctx.g.mul(y, zg, &nm("gate.mul"));
+    let op = w(&*ctx, "out_proj");
+    let out = ctx.g.matmul(y, op, &nm("out_proj.mm"));
+    (out, xi, hstate.expect("scan needs t >= 1"))
+}
+
 /// Full Mamba-1 LM prefill graph: tokens (T,) i32 -> logits (T, V).
 ///
 /// Inputs: every parameter (ParamSpec order), then `tokens`.
@@ -191,16 +280,45 @@ pub fn build_prefill_serve(m: &ModelShape, t: usize) -> Graph {
 }
 
 /// Batched serving prefill for prefill bucket `b`: tokens (b, T) i32 →
-/// logits (b, V) + per-layer batch-stacked decode states. Each sequence
-/// replicates [`build_prefill_serve`] node-for-node, so per-sequence
-/// results are bitwise identical to the single-sequence graph (see
-/// `serve::lm_serve_scaffold_batched` for the batching invariants).
+/// logits (b, V) + per-layer batch-stacked decode states. True-batch:
+/// one (b, T)-shaped node per op via
+/// [`block_prefill_batched_with_state`], per-sequence bitwise identical
+/// to [`build_prefill_serve`] (see `serve::lm_serve_scaffold_batched`
+/// for the batching invariants).
 pub fn build_prefill_serve_batched(m: &ModelShape, b: usize, t: usize) -> Graph {
     assert_eq!(m.arch, "mamba");
     let k = m.d_conv;
     assert!(t >= k - 1, "serve prefill window {t} shorter than conv state {}", k - 1);
     super::serve::lm_serve_scaffold_batched(
         &format!("{}-serve-prefill-b{b}-t{t}", m.name),
+        m,
+        b,
+        t,
+        |ctx, j, xn| {
+            let (y, conv_seq, h_last) =
+                block_prefill_batched_with_state(ctx, m, j, xn, b, t);
+            let conv_state = ctx.g.slice(
+                conv_seq,
+                1,
+                t - (k - 1),
+                k - 1,
+                &format!("l{j}.conv.state"),
+            ); // (b, K-1, di)
+            (y, (conv_state, h_last))
+        },
+    )
+}
+
+/// Replicated batched serving prefill: each sequence runs its own copy
+/// of [`build_prefill_serve`], stitched together by layout ops only. The
+/// coordinator routes i8 serving here — dynamic per-tensor requantize
+/// scales inside a true-batch node would couple co-batched sequences.
+pub fn build_prefill_serve_batched_replicated(m: &ModelShape, b: usize, t: usize) -> Graph {
+    assert_eq!(m.arch, "mamba");
+    let k = m.d_conv;
+    assert!(t >= k - 1, "serve prefill window {t} shorter than conv state {}", k - 1);
+    super::serve::lm_serve_scaffold_batched_replicated(
+        &format!("{}-serve-prefill-rep-b{b}-t{t}", m.name),
         m,
         b,
         t,

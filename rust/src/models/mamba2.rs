@@ -91,6 +91,91 @@ fn ssd_chunk(
     (y, state)
 }
 
+/// Batched SSD over one chunk: the rank-4 counterpart of [`ssd_chunk`]
+/// with a leading batch dimension on every activation. `xh` (B, H, Tc,
+/// P); `dt_h` (B, H, Tc); `a` (H, 1); `b`/`c` (B, Tc, N); `h0` (B, H, P,
+/// N) or None. Returns (y (B, H, Tc, P), state (B, H, P, N)).
+///
+/// Two contractions need the per-sequence `b`/`c` aligned under the head
+/// axis before a batched matmul (`matmul_shape` has no batch-dim
+/// broadcast): they reshape to (B, 1, Tc, N) and broadcast to (B, H, Tc,
+/// N) — an exact copy of the values the single-sequence kernel reads
+/// through its `b_step = 0` operand reuse, so per-sequence results stay
+/// bitwise identical.
+#[allow(clippy::too_many_arguments)]
+fn ssd_chunk_batched(
+    ctx: &mut Ctx,
+    nm: &dyn Fn(&str) -> String,
+    bsz: usize,
+    tc: usize,
+    h: usize,
+    _p: usize,
+    n: usize,
+    xh: NodeId,
+    dt_h: NodeId,
+    a: NodeId,
+    b: NodeId,
+    c: NodeId,
+    h0: Option<NodeId>,
+) -> (NodeId, NodeId) {
+    // da = dt * a : (B, H, Tc)
+    let da = ctx.g.mul(dt_h, a, &nm("da"));
+
+    // --- segsum: broadcast -> strict-tril mask -> CumSum_b --------------
+    let da_col = ctx.g.reshape(da, vec![bsz, h, tc, 1], &nm("segsum.col"));
+    let da_rep = ctx.g.broadcast(da_col, vec![bsz, h, tc, tc], &nm("segsum.rep"));
+    let tril_m1 = ctx.g.const_tril_offset(&nm("segsum.mask"), tc, -1);
+    let masked = ctx.g.mul(da_rep, tril_m1, &nm("segsum.masked"));
+    let seg = ctx.g.cumsum(masked, 2, &nm("segsum.cumsum_b"));
+    let seg_exp = ctx.g.exp(seg, &nm("L.exp"));
+    let tril0 = ctx.g.const_tril(&nm("L.mask"), tc);
+    let l_mat = ctx.g.mul(seg_exp, tril0, &nm("L")); // (B, H, Tc, Tc)
+
+    // --- C B^T via broadcast-Mul + ReduceSum (einsum decomposition) -----
+    let c_row = ctx.g.reshape(c, vec![bsz, tc, 1, n], &nm("cb.c"));
+    let b_row = ctx.g.reshape(b, vec![bsz, 1, tc, n], &nm("cb.b"));
+    let cb_big = ctx.g.mul(c_row, b_row, &nm("cb.mul")); // (B, Tc, Tc, N)
+    let cb = ctx.g.reduce_sum(cb_big, 3, &nm("cb.reducesum")); // (B, Tc, Tc)
+    // align under the head axis before the broadcast against L
+    let cb = ctx.g.reshape(cb, vec![bsz, 1, tc, tc], &nm("cb.rows"));
+
+    // scores = (C B^T) ⊙ L, then intra-chunk outputs
+    let scores = ctx.g.mul(l_mat, cb, &nm("scores")); // (B, H, Tc, Tc)
+    let dt_col = ctx.g.reshape(dt_h, vec![bsz, h, tc, 1], &nm("xdt.dt"));
+    let xdt = ctx.g.mul(xh, dt_col, &nm("xdt")); // (B, H, Tc, P)
+    let mut y = ctx.g.matmul(scores, xdt, &nm("y.diag")); // (B, H, Tc, P)
+
+    // --- chunk state: decay-weighted contraction over Tc ----------------
+    let da_cs = ctx.g.cumsum(da, 2, &nm("state.cumsum")); // (B, H, Tc)
+    let last = ctx.g.slice(da_cs, 2, tc - 1, 1, &nm("state.last")); // (B, H, 1)
+    let diff = ctx.g.sub(last, da_cs, &nm("state.diff"));
+    let decay = ctx.g.exp(diff, &nm("state.decay")); // (B, H, Tc)
+    let wgt = ctx.g.mul(decay, dt_h, &nm("state.w")); // (B, H, Tc)
+    let w_col = ctx.g.reshape(wgt, vec![bsz, h, tc, 1], &nm("state.w.col"));
+    let xw = ctx.g.mul(xh, w_col, &nm("state.xw")); // (B, H, Tc, P)
+    let xw_t = ctx.g.transpose(xw, vec![0, 1, 3, 2], &nm("state.xw.T")); // (B,H,P,Tc)
+    let b_mid = ctx.g.reshape(b, vec![bsz, 1, tc, n], &nm("state.b.mid"));
+    let b_bc = ctx.g.broadcast(b_mid, vec![bsz, h, tc, n], &nm("state.b.rep"));
+    let mut state = ctx.g.matmul(xw_t, b_bc, &nm("state.mm")); // (B, H, P, N)
+
+    // --- incoming-state contribution (steps 3/4) -------------------------
+    if let Some(h0) = h0 {
+        let sdo = ctx.g.exp(da_cs, &nm("off.decay")); // (B, H, Tc)
+        let h0_t = ctx.g.transpose(h0, vec![0, 1, 3, 2], &nm("off.h0T")); // (B,H,N,P)
+        let c_mid = ctx.g.reshape(c, vec![bsz, 1, tc, n], &nm("off.c.mid"));
+        let c_bc = ctx.g.broadcast(c_mid, vec![bsz, h, tc, n], &nm("off.c.rep"));
+        let y_off = ctx.g.matmul(c_bc, h0_t, &nm("off.mm")); // (B, H, Tc, P)
+        let sdo_col = ctx.g.reshape(sdo, vec![bsz, h, tc, 1], &nm("off.col"));
+        let y_off = ctx.g.mul(y_off, sdo_col, &nm("off.scaled"));
+        y = ctx.g.add(y, y_off, &nm("y.with_off"));
+        let chunk_decay = ctx.g.reshape(last, vec![bsz, h, 1, 1], &nm("carry.decay"));
+        let chunk_decay = ctx.g.exp(chunk_decay, &nm("carry.exp"));
+        let carried = ctx.g.mul(h0, chunk_decay, &nm("carry"));
+        state = ctx.g.add(state, carried, &nm("state.total"));
+    }
+    (y, state)
+}
+
 /// One Mamba-2 block over `x` (T, d_model). `t_pad` is T padded up to a
 /// chunk multiple (the conversion-time padding of the official code).
 pub(crate) fn block_prefill(
@@ -254,6 +339,108 @@ fn block_prefill_inner(
     (out, xbc_raw, state.expect("at least one chunk"))
 }
 
+/// Batched serving Mamba-2 block over `x` (B, T, d_model): the rank-3
+/// mirror of `block_prefill_inner` with `pad_to_chunk = false`, driving
+/// [`ssd_chunk_batched`] so the whole bucket runs one (b, t)-shaped node
+/// per op. Per-sequence math is the same values in the same order as the
+/// single-sequence block — batch is an outer loop in every kernel — so
+/// each sequence's outputs stay bitwise identical to
+/// [`build_prefill_serve`]. Returns `(out (B, T, d_model), xbc_raw (B,
+/// T, conv_dim), state (B, H, P, N))`.
+fn block_prefill_batched_inner(
+    ctx: &mut Ctx,
+    m: &ModelShape,
+    j: usize,
+    x: NodeId,
+    bsz: usize,
+    t: usize,
+) -> (NodeId, NodeId, NodeId) {
+    let (di, n) = (m.d_inner(), m.d_state);
+    let (h, p) = (m.n_heads(), m.headdim);
+    let chunk = m.chunk;
+    let nm_s = move |j: usize, s: &str| format!("l{j}.{s}");
+    let nm = |s: &str| nm_s(j, s);
+
+    // single projection emits [z, x, B, C, dt] at once (appendix A.1)
+    let in_proj = ctx.w(&nm("in_proj"));
+    let zxbcdt = ctx.g.matmul(x, in_proj, &nm("in_proj.mm")); // (B, T, 2di+2n+h)
+    let z = ctx.g.slice(zxbcdt, 2, 0, di, &nm("split.z"));
+    let xbc_raw = ctx.g.slice(zxbcdt, 2, di, di + 2 * n, &nm("split.xbc"));
+    let dt_raw = ctx.g.slice(zxbcdt, 2, 2 * di + 2 * n, h, &nm("split.dt"));
+
+    // conv over (x, B, C) together, then SiLU
+    let (cw, cb) = (ctx.w(&nm("conv_w")), ctx.w(&nm("conv_b")));
+    let xbc = ctx.g.conv1d_causal(xbc_raw, cw, cb, &nm("conv"));
+    let xbc = ctx.g.silu(xbc, &nm("conv.silu"));
+    let xi = ctx.g.slice(xbc, 2, 0, di, &nm("split.x"));
+    let b_sel = ctx.g.slice(xbc, 2, di, n, &nm("split.B"));
+    let c_sel = ctx.g.slice(xbc, 2, di + n, n, &nm("split.C"));
+
+    // dt = softplus(dt_raw + bias) : (B, T, H)
+    let dtb = ctx.w(&nm("dt_bias"));
+    let dt = ctx.g.add(dt_raw, dtb, &nm("dt.bias"));
+    let dt = ctx.g.softplus(dt, &nm("dt.softplus"));
+
+    // a = -exp(a_log) : (H,) -> (H, 1)
+    let a_log = ctx.w(&nm("a_log"));
+    let a_exp = ctx.g.exp(a_log, &nm("A.exp"));
+    let neg1 = ctx.g.const_scalar(&nm("A.neg1"), -1.0);
+    let a = ctx.g.mul(a_exp, neg1, &nm("A"));
+    let a = ctx.g.reshape(a, vec![h, 1], &nm("A.col"));
+
+    // head layout: (B, T, di) -> (B, H, T, P); dt -> (B, H, T)
+    let xh4 = ctx.g.reshape(xi, vec![bsz, t, h, p], &nm("heads"));
+    let xh = ctx.g.transpose(xh4, vec![0, 2, 1, 3], &nm("heads.T"));
+    let dt_h = ctx.g.transpose(dt, vec![0, 2, 1], &nm("dt.T"));
+
+    // chunked SSD with state carry; serve mode never pads, ending on a
+    // real-length remainder chunk so the carried state is decode-exact
+    let mut state: Option<NodeId> = None;
+    let mut ys = Vec::new();
+    let mut off = 0usize;
+    let mut ci = 0usize;
+    while off < t {
+        let tc = chunk.min(t - off);
+        let cname = format!("l{j}.ssd.c{ci}");
+        let nmc = move |s: &str| format!("{cname}.{s}");
+        let xh_c = ctx.g.slice(xh, 2, off, tc, &nmc("x"));
+        let dt_c = ctx.g.slice(dt_h, 2, off, tc, &nmc("dt"));
+        let b_c = ctx.g.slice(b_sel, 1, off, tc, &nmc("b"));
+        let c_c = ctx.g.slice(c_sel, 1, off, tc, &nmc("c"));
+        let (y_c, s_c) = ssd_chunk_batched(
+            ctx, &nmc, bsz, tc, h, p, n, xh_c, dt_c, a, b_c, c_c, state,
+        );
+        ys.push(y_c);
+        state = Some(s_c);
+        off += tc;
+        ci += 1;
+    }
+    let y = if ys.len() == 1 {
+        ys[0]
+    } else {
+        ctx.g.concat(&ys, 2, &nm("ssd.y"))
+    }; // (B, H, T, P)
+
+    // D skip: y += D[h] * x
+    let d_skip = ctx.w(&nm("d_skip"));
+    let d_col = ctx.g.reshape(d_skip, vec![h, 1, 1], &nm("D.col"));
+    let skip = ctx.g.mul(xh, d_col, &nm("D.skip"));
+    let y = ctx.g.add(y, skip, &nm("y.skip"));
+
+    // back to (B, T, di)
+    let y = ctx.g.transpose(y, vec![0, 2, 1, 3], &nm("y.T")); // (B, T, H, P)
+    let y = ctx.g.reshape(y, vec![bsz, t, di], &nm("y.flat"));
+
+    // gated RMSNorm, out projection
+    let zg = ctx.g.silu(z, &nm("gate.silu"));
+    let gated = ctx.g.mul(y, zg, &nm("gate.mul"));
+    let gw = ctx.w(&nm("gnorm_w"));
+    let yn = ctx.g.rmsnorm(gated, gw, &nm("gnorm"));
+    let op = ctx.w(&nm("out_proj"));
+    let out = ctx.g.matmul(yn, op, &nm("out_proj.mm"));
+    (out, xbc_raw, state.expect("at least one chunk"))
+}
+
 /// Full Mamba-2 LM prefill graph: tokens (T,) i32 -> logits (T, V).
 pub fn build_prefill(m: &ModelShape, t: usize) -> Graph {
     assert_eq!(m.arch, "mamba2");
@@ -335,17 +522,55 @@ pub fn build_prefill_serve(m: &ModelShape, t: usize) -> Graph {
 }
 
 /// Batched serving prefill for prefill bucket `b`: tokens (b, T) i32 →
-/// logits (b, V) + per-layer batch-stacked decode states. Each sequence
-/// replicates [`build_prefill_serve`] node-for-node — including the
-/// no-padding real-length remainder chunk, so every stacked SSD state is
-/// decode-exact and bitwise identical to the single-sequence graph (see
-/// `serve::lm_serve_scaffold_batched` for the batching invariants).
+/// logits (b, V) + per-layer batch-stacked decode states. True batch-dim
+/// batching: every layer runs ONE (b, t)-shaped node per op via
+/// [`block_prefill_batched_inner`] — including the no-padding
+/// real-length remainder chunk — instead of replicating the
+/// single-sequence graph per sequence, so the planned step count stays
+/// flat in `b` while per-sequence results remain bitwise identical to
+/// [`build_prefill_serve`] (batch is an outer loop in every kernel).
+/// State outputs come out batch-stacked directly: `conv_state{j}` (b,
+/// K-1, conv_dim), `ssm_state{j}` (b, H, P, N).
 pub fn build_prefill_serve_batched(m: &ModelShape, b: usize, t: usize) -> Graph {
     assert_eq!(m.arch, "mamba2");
     let k = m.d_conv;
     assert!(t >= k - 1, "serve prefill window {t} shorter than conv state {}", k - 1);
     super::serve::lm_serve_scaffold_batched(
         &format!("{}-serve-prefill-b{b}-t{t}", m.name),
+        m,
+        b,
+        t,
+        |ctx, j, xn| {
+            let (y, xbc_raw, ssd_state) =
+                block_prefill_batched_inner(ctx, m, j, xn, b, t);
+            let conv_state = ctx.g.slice(
+                xbc_raw,
+                1,
+                t - (k - 1),
+                k - 1,
+                &format!("l{j}.conv.state"),
+            ); // (b, K-1, conv_dim)
+            (y, (conv_state, ssd_state))
+        },
+    )
+}
+
+/// Replicated batched serving prefill: same I/O as
+/// [`build_prefill_serve_batched`] but each sequence replicates
+/// [`build_prefill_serve`] node-for-node. The i8 serving path uses this —
+/// its dynamic per-tensor requantize scales would couple co-batched
+/// sequences inside one true-batch node (see
+/// `serve::lm_serve_scaffold_batched_replicated`).
+pub fn build_prefill_serve_batched_replicated(
+    m: &ModelShape,
+    b: usize,
+    t: usize,
+) -> Graph {
+    assert_eq!(m.arch, "mamba2");
+    let k = m.d_conv;
+    assert!(t >= k - 1, "serve prefill window {t} shorter than conv state {}", k - 1);
+    super::serve::lm_serve_scaffold_batched_replicated(
+        &format!("{}-serve-prefill-rep-b{b}-t{t}", m.name),
         m,
         b,
         t,

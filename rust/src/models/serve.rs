@@ -58,20 +58,68 @@ pub(crate) fn lm_serve_scaffold(
     ctx.g
 }
 
-/// Batched counterpart of [`lm_serve_scaffold`]: tokens (b, t) i32 →
+/// True-batch counterpart of [`lm_serve_scaffold`]: tokens (b, t) i32 →
 /// logits (b, V) + per-layer batch-stacked `(conv, ssm)` states, the
 /// same I/O layout as the batched decode graphs.
 ///
-/// Each sequence's computation REPLICATES the single-sequence scaffold
-/// node-for-node — same ops over the same values — so every per-sequence
-/// result is **bitwise identical** to the b=1 serve-prefill graph (the
-/// invariant the admission scheduler's parity tests pin down). Only pure
-/// layout ops (slice / reshape / concat) do the batching: no pad token
-/// and no cross-sequence arithmetic ever touches SSM state. Batching
-/// still pays: one plan execution, one parameter binding, and one
-/// schedule walk amortize the per-admission dispatch cost that
-/// serialized TTFT under concurrent admissions.
+/// Unlike [`lm_serve_scaffold_batched_replicated`], the batch dimension
+/// lives INSIDE every node: one (b, t, d) activation per op instead of
+/// `b` copies of the single-sequence graph. The kernel layer treats the
+/// leading batch dimension independently everywhere this scaffold uses
+/// it — matmuls against shared rank-2 weights walk rows, rmsnorm
+/// normalizes each (b, t) row on its own, conv / scan / elementwise ops
+/// never mix batch rows — so per-sequence results stay **bitwise
+/// identical** to the b=1 serve-prefill graph (the invariant the
+/// admission scheduler's parity tests pin down) while the step count per
+/// admission drops by ~b×. `block` receives the normalized (b, t, d)
+/// activation and must return batch-stacked `(conv (b, K-1, C), ssm
+/// (b, ...))` states directly.
 pub(crate) fn lm_serve_scaffold_batched(
+    graph_name: &str,
+    m: &ModelShape,
+    b: usize,
+    t: usize,
+    mut block: impl FnMut(&mut Ctx, usize, NodeId) -> (NodeId, (NodeId, NodeId)),
+) -> Graph {
+    assert!(b >= 1, "prefill bucket must be >= 1");
+    let spec = full_spec(m);
+    let mut ctx = Ctx::new(graph_name, &spec);
+    let tokens = ctx.g.input_i32("tokens", vec![b, t]);
+    let emb = ctx.w("emb");
+    let tok_flat = ctx.g.reshape(tokens, vec![b * t], "tokens.flat");
+    let rows = ctx.g.gather(emb, tok_flat, "embed"); // (b*t, d)
+    let mut x = ctx.g.reshape(rows, vec![b, t, m.d_model], "embed.batch");
+    let mut states: Vec<(NodeId, NodeId)> = Vec::with_capacity(m.n_layers);
+    for j in 0..m.n_layers {
+        let norm_w = ctx.w(&format!("l{j}.norm_w"));
+        let xn = ctx.g.rmsnorm(x, norm_w, &format!("l{j}.norm"));
+        let (y, st) = block(&mut ctx, j, xn);
+        states.push(st);
+        x = ctx.g.add(x, y, &format!("l{j}.residual"));
+    }
+    let fw = ctx.w("final_norm_w");
+    let x = ctx.g.rmsnorm(x, fw, "final_norm");
+    let x_last = ctx.g.slice(x, 1, t - 1, 1, "last_pos"); // (b, 1, d)
+    let x_last = ctx.g.reshape(x_last, vec![b, m.d_model], "last_pos.rows");
+    let emb_t = ctx.g.transpose(emb, vec![1, 0], "lm_head.wT");
+    let logits = ctx.g.matmul(x_last, emb_t, "lm_head.mm"); // (b, V)
+    ctx.g.output(logits);
+    for (cs, ss) in states {
+        ctx.g.output(cs);
+        ctx.g.output(ss);
+    }
+    ctx.g
+}
+
+/// Replicated batched scaffold: tokens (b, t) i32 → the same I/O layout
+/// as [`lm_serve_scaffold_batched`], but each sequence's computation
+/// REPLICATES the single-sequence scaffold node-for-node — same ops over
+/// the same values — with only pure layout ops (slice / reshape /
+/// concat) doing the batching. This is the fallback for dtypes whose
+/// kernels couple co-batched rows (i8's dynamic per-tensor requantize
+/// scales would mix sequences inside one (b, t) node), at the cost of
+/// `b`× the dispatch work the true-batch scaffold amortizes.
+pub(crate) fn lm_serve_scaffold_batched_replicated(
     graph_name: &str,
     m: &ModelShape,
     b: usize,
@@ -187,12 +235,31 @@ impl ServeFamily {
     /// Batched serving-prefill graph for prefill bucket `b`: tokens
     /// (b, t) i32 → logits (b, V) + per-layer batch-stacked states,
     /// per-sequence bitwise identical to
-    /// [`ServeFamily::build_prefill_serve`] at the same `t` (see
-    /// [`lm_serve_scaffold_batched`]).
+    /// [`ServeFamily::build_prefill_serve`] at the same `t`. The batch
+    /// dimension lives inside every node — one (b, t)-shaped step per op
+    /// (see [`lm_serve_scaffold_batched`]).
     pub fn build_prefill_batched(self, m: &ModelShape, b: usize, t: usize) -> Graph {
         match self {
             ServeFamily::Mamba1 => mamba1::build_prefill_serve_batched(m, b, t),
             ServeFamily::Mamba2 => mamba2::build_prefill_serve_batched(m, b, t),
+        }
+    }
+
+    /// Replicated batched serving-prefill graph: same I/O contract as
+    /// [`ServeFamily::build_prefill_batched`], but each sequence runs its
+    /// own copy of the single-sequence graph (see
+    /// [`lm_serve_scaffold_batched_replicated`]). The coordinator routes
+    /// i8 serving here: dynamic per-tensor requantize scales inside a
+    /// true-batch node would couple co-batched sequences.
+    pub fn build_prefill_batched_replicated(
+        self,
+        m: &ModelShape,
+        b: usize,
+        t: usize,
+    ) -> Graph {
+        match self {
+            ServeFamily::Mamba1 => mamba1::build_prefill_serve_batched_replicated(m, b, t),
+            ServeFamily::Mamba2 => mamba2::build_prefill_serve_batched_replicated(m, b, t),
         }
     }
 
@@ -242,15 +309,19 @@ mod tests {
         let (b, t) = (3usize, 9usize);
         for m in [presets::tiny_mamba(), presets::tiny_mamba2()] {
             let f = ServeFamily::from_arch(&m.arch).unwrap();
-            let g = f.build_prefill_batched(&m, b, t);
-            assert_eq!(g.outputs.len(), 1 + 2 * m.n_layers);
-            assert_eq!(g.shape(g.outputs[0]), &[b, m.vocab_size]);
-            let mut conv = vec![b];
-            conv.extend(f.conv_state_shape(&m));
-            let mut ssm = vec![b];
-            ssm.extend(f.ssm_state_shape(&m));
-            assert_eq!(g.shape(g.outputs[1]), conv.as_slice(), "{}", m.arch);
-            assert_eq!(g.shape(g.outputs[2]), ssm.as_slice(), "{}", m.arch);
+            for g in [
+                f.build_prefill_batched(&m, b, t),
+                f.build_prefill_batched_replicated(&m, b, t),
+            ] {
+                assert_eq!(g.outputs.len(), 1 + 2 * m.n_layers);
+                assert_eq!(g.shape(g.outputs[0]), &[b, m.vocab_size]);
+                let mut conv = vec![b];
+                conv.extend(f.conv_state_shape(&m));
+                let mut ssm = vec![b];
+                ssm.extend(f.ssm_state_shape(&m));
+                assert_eq!(g.shape(g.outputs[1]), conv.as_slice(), "{}", m.arch);
+                assert_eq!(g.shape(g.outputs[2]), ssm.as_slice(), "{}", m.arch);
+            }
         }
     }
 }
