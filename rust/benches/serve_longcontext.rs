@@ -1,0 +1,213 @@
+//! Long-context serving bench: chunked streaming prefill + the
+//! prompt-prefix state cache.
+//!
+//! Two claims get numbers (and correctness gates) here:
+//!
+//! * **Cold long prompts** stream through fixed-size resume-chunk graphs,
+//!   so arena memory is bounded by the chunk — the chunk plan's arena is
+//!   asserted strictly below a monolithic window plan's — while outputs
+//!   stay bitwise identical to monolithic prefill (gated per family
+//!   before timing).
+//! * **Multi-turn chat** resumes the previous turn's cached state: turn
+//!   2 prefills only its new suffix instead of re-prefilling the whole
+//!   history. The prefix-cache hit counter is asserted, and in full mode
+//!   the resume TTFT must beat a cold re-prefill of the same prompt by
+//!   >= 3x at a 4k-token history.
+//!
+//! Run: `cargo bench --bench serve_longcontext`
+//!
+//! CI (`bench-smoke`) runs it with `XAMBA_BENCH_QUICK=1` (smaller
+//! window / history, ratio assert relaxed) and `XAMBA_BENCH_JSON=...`,
+//! appending the chunked cold TTFT and the turn-2 resume TTFT to the
+//! artifact `xamba bench-check` gates against the committed baseline.
+
+use std::time::{Duration, Instant};
+
+use xamba::config::{ModelShape, ServeConfig};
+use xamba::coordinator::{
+    FinishReason, GenParams, PlannedServeModel, ServeModel, Server,
+};
+use xamba::util::{bench, Table};
+
+/// Small block shapes: the subject here is scheduling + state reuse,
+/// not GEMM throughput, so token counts scale up instead of widths.
+fn nano(arch: &str) -> ModelShape {
+    ModelShape {
+        name: format!("nano-{arch}"),
+        arch: arch.into(),
+        vocab_size: 256,
+        d_model: 32,
+        n_layers: 2,
+        d_state: 8,
+        d_conv: 3,
+        expand: 2,
+        dt_rank: 4,
+        headdim: 16,
+        chunk: 8,
+    }
+}
+
+fn tokens(len: usize, seed: usize) -> Vec<i32> {
+    (0..len).map(|t| ((seed * 31 + t * 7) % 256) as i32).collect()
+}
+
+/// Printable chat-history bytes (byte-level tokenizer: identity on these).
+fn history_bytes(len: usize) -> Vec<u8> {
+    (0..len).map(|i| ((i * 7 + 11) % 94 + 32) as u8).collect()
+}
+
+fn main() {
+    let quick = bench::quick_mode();
+    // (compiled window = bitwise-gate length, chunk, cold prompt, history)
+    let (window, chunk, cold_len, history) =
+        if quick { (32usize, 16usize, 384usize, 96usize) } else { (256, 128, 32768, 4096) };
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+    let mut table = Table::new(&["case", "value"]).with_title(
+        format!(
+            "serve_longcontext: chunked prefill + prefix-cache resume \
+             (window {window}, chunk {chunk})"
+        )
+        .as_str(),
+    );
+
+    // --- cold long-context prefill (bitwise-gated, arena-bounded) ------------
+    for shape in [nano("mamba"), nano("mamba2")] {
+        let weights = PlannedServeModel::random_weights(&shape, 42);
+        let mut mono =
+            PlannedServeModel::new(&shape, &weights, window, &[1], 1, "baseline")
+                .expect("monolithic model");
+        let mut chunked =
+            PlannedServeModel::new(&shape, &weights, window, &[1], 1, "baseline")
+                .expect("chunked model")
+                .with_prefill_chunk(chunk)
+                .expect("prefill chunk");
+
+        // correctness gate: chunked must reproduce monolithic bitwise
+        let p = tokens(window, 1);
+        let (want_logits, want_state) = mono.prefill(&p).expect("monolithic prefill");
+        let (logits, state) =
+            chunked.prefill_resume(&p, None, &mut |_, _| {}).expect("chunked prefill");
+        assert!(
+            want_logits.iter().zip(&logits).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{}: chunked prefill logits diverged from monolithic",
+            shape.name
+        );
+        assert_eq!(want_state, state, "{}: chunked prefill state diverged", shape.name);
+
+        if shape.arch == "mamba" {
+            let long = tokens(cold_len, 2);
+            let t0 = Instant::now();
+            chunked.prefill_resume(&long, None, &mut |_, _| {}).expect("cold prefill");
+            let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+            // arena bound: however long the prompt, the streaming path
+            // only ever runs window/chunk-sized plans
+            let chunk_arena = chunked
+                .plan_arena_bytes(&format!("prefill_resume_t{chunk}"))
+                .expect("resume-chunk plan compiled");
+            let mono_arena =
+                mono.plan_arena_bytes("prefill").expect("monolithic plan compiled");
+            assert!(
+                chunk_arena < mono_arena,
+                "chunk arena {chunk_arena} B not below monolithic window arena \
+                 {mono_arena} B"
+            );
+            table.row(&[
+                format!("cold {cold_len}-token chunked prefill"),
+                format!("{cold_ms:8.2} ms"),
+            ]);
+            table.row(&[
+                "chunk arena / window arena".into(),
+                format!("{chunk_arena} B / {mono_arena} B"),
+            ]);
+            metrics
+                .push(("serve_longcontext_mamba1_cold_chunked_ttft_ms".into(), cold_ms));
+        }
+    }
+
+    // --- 3-turn chat: resume vs cold re-prefill ------------------------------
+    let shape = nano("mamba");
+    let weights = PlannedServeModel::random_weights(&shape, 7);
+    let serve_cfg = |cache_mb: usize| ServeConfig {
+        max_slots: 2,
+        queue_cap: 8,
+        batch_wait_us: 100,
+        prefill_window: window,
+        prefix_cache_mb: cache_mb,
+        prefill_chunk: chunk,
+        ..Default::default()
+    };
+    let start = |cfg: ServeConfig| {
+        let (shape, weights) = (shape.clone(), weights.clone());
+        Server::start(
+            move || {
+                Ok(Box::new(
+                    PlannedServeModel::new(&shape, &weights, window, &[1], 1, "baseline")?
+                        .with_prefill_chunk(chunk)?,
+                ) as Box<dyn ServeModel>)
+            },
+            cfg,
+        )
+        .expect("server")
+    };
+    let gen = || GenParams { max_new_tokens: 4, ..Default::default() };
+    let timeout = Duration::from_secs(600);
+
+    let cached = start(serve_cfg(64));
+    let p1 = history_bytes(history);
+    let r1 = cached.submit(&p1, gen()).recv_timeout(timeout).expect("turn 1");
+    assert_eq!(r1.finish, FinishReason::Length);
+    let mut p2 = p1.clone();
+    p2.extend_from_slice(&r1.generated);
+    p2.extend_from_slice(b" tell me more about it");
+    let r2 = cached.submit(&p2, gen()).recv_timeout(timeout).expect("turn 2");
+    let mut p3 = p2.clone();
+    p3.extend_from_slice(&r2.generated);
+    p3.extend_from_slice(b" go on");
+    let r3 = cached.submit(&p3, gen()).recv_timeout(timeout).expect("turn 3");
+    assert_eq!(r3.finish, FinishReason::Length);
+    let m = cached.shutdown();
+    assert!(
+        m.prefix_hits >= 2,
+        "turns 2 and 3 must hit the prefix cache (hits {}, misses {})",
+        m.prefix_hits,
+        m.prefix_misses
+    );
+    assert!(
+        m.resumed_tokens >= history as u64,
+        "turn 2 must resume the whole history, resumed only {}",
+        m.resumed_tokens
+    );
+
+    // control: an identical server with the prefix cache disabled pays a
+    // full chunked re-prefill of the same turn-2 prompt
+    let control = start(serve_cfg(0));
+    let rc = control.submit(&p2, gen()).recv_timeout(timeout).expect("cold turn 2");
+    assert_eq!(rc.finish, FinishReason::Length);
+    control.shutdown();
+
+    let resume_ms = r2.ttft_us / 1e3;
+    let cold_ms = rc.ttft_us / 1e3;
+    table.row(&[
+        format!("turn-2 TTFT, resumed ({history}-token history)"),
+        format!("{resume_ms:8.2} ms"),
+    ]);
+    table.row(&["turn-2 TTFT, cold re-prefill".into(), format!("{cold_ms:8.2} ms")]);
+    table.row(&["resume speedup".into(), format!("{:.2}x", cold_ms / resume_ms)]);
+    if !quick {
+        assert!(
+            cold_ms >= 3.0 * resume_ms,
+            "resume speedup below 3x at a {history}-token history: \
+             cold {cold_ms:.2} ms vs resumed {resume_ms:.2} ms"
+        );
+    }
+    metrics.push(("serve_longcontext_mamba1_resume_turn2_ttft_ms".into(), resume_ms));
+
+    println!("{table}");
+    println!(
+        "serve_longcontext: chunked prefill is bitwise-identical to monolithic for \
+         both families; turn-2 hits resume cached state in O(new tokens)."
+    );
+    if let Some(path) = bench::metrics_path() {
+        bench::record(&path, &metrics).expect("record bench metrics");
+    }
+}

@@ -48,6 +48,7 @@ COMMANDS:
             [--artifacts DIR] [--weights FILE]
             [--window 32] [--workers 0] [--buckets 1,2,4,8]
             [--prefill-buckets 1,2,4,8] [--steal-chunk 0]
+            [--prefix-cache-mb 32] [--prefill-chunk 0]
             [--max-new 48] [--temperature 0.0]
             reads prompts from stdin (one per line), prints completions;
             the default planned backend serves BOTH model families
@@ -58,7 +59,11 @@ COMMANDS:
             int8 with dynamic activation scales; --prefill-buckets
             batches concurrent admissions into one prefill graph call
             per length-class (cuts TTFT under load); --steal-chunk sets
-            the pool's work-stealing decode chunk (0 = auto)
+            the pool's work-stealing decode chunk (0 = auto);
+            --prefix-cache-mb budgets the cross-request prefix cache
+            (finished states resume follow-up turns in O(new tokens);
+            0 disables); --prefill-chunk streams long prompts through
+            fixed-size chunk graphs with bounded arena memory (0 = off)
   profile   --model block130m-mamba2 [--t 4] [--passes cumba,reduba,actiba]
             [--config FILE] [--pipelined] [--energy]
             simulated-NPU per-op latency breakdown
@@ -132,8 +137,22 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             .parse::<usize>()
             .map_err(|_| format!("--steal-chunk: {v:?} is not a chunk size"))?;
     }
+    if let Some(v) = args.get_usize("prefix-cache-mb") {
+        cfg.prefix_cache_mb = v;
+    }
+    if let Some(v) = args.get_usize("prefill-chunk") {
+        cfg.prefill_chunk = v;
+    }
     if cfg.backend == "pjrt" {
-        for flag in ["weights", "window", "workers", "prefill-buckets", "steal-chunk"] {
+        for flag in [
+            "weights",
+            "window",
+            "workers",
+            "prefill-buckets",
+            "steal-chunk",
+            "prefix-cache-mb",
+            "prefill-chunk",
+        ] {
             // --dtype is validated (not just warned about): see
             // ServeConfig::validate via start_backend
             if args.get(flag).is_some() {

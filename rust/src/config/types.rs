@@ -227,6 +227,16 @@ pub struct ServeConfig {
     /// `{artifacts_dir}/weights_{model}.bin` if present, else a
     /// deterministic random init.
     pub weights_path: String,
+    /// Prefix-cache byte budget in MiB (planned backend, f32/f16):
+    /// finished sequences' recurrent states are retained keyed by their
+    /// token prefix, so a follow-up turn resumes decode-exactly and only
+    /// prefills its new suffix. 0 disables cross-request state reuse.
+    pub prefix_cache_mb: usize,
+    /// Streaming-prefill chunk size in tokens (planned backend): prompts
+    /// longer than the compiled window run as fixed-size chunk graphs
+    /// with bounded arena memory, checkpointing state at chunk
+    /// boundaries. 0 = off (long prompts truncate to the window).
+    pub prefill_chunk: usize,
 }
 
 impl Default for ServeConfig {
@@ -247,6 +257,8 @@ impl Default for ServeConfig {
             prefill_window: 32,
             workers: 0,
             weights_path: String::new(),
+            prefix_cache_mb: 32,
+            prefill_chunk: 0,
         }
     }
 }
@@ -361,6 +373,12 @@ impl ServeConfig {
                 .max(1) as usize,
             workers: doc.i64_or(&k("workers"), d.workers as i64).max(0) as usize,
             weights_path: doc.str_or(&k("weights_path"), &d.weights_path).into(),
+            prefix_cache_mb: doc
+                .i64_or(&k("prefix_cache_mb"), d.prefix_cache_mb as i64)
+                .max(0) as usize,
+            prefill_chunk: doc
+                .i64_or(&k("prefill_chunk"), d.prefill_chunk as i64)
+                .max(0) as usize,
         }
     }
 }
@@ -402,6 +420,24 @@ mod tests {
         let c = ServeConfig::from_doc(&doc, "serve");
         assert_eq!(c.prefill_buckets, ServeConfig::default().prefill_buckets);
         assert_eq!(c.steal_chunk, 0, "negative steal_chunk must clamp to auto");
+    }
+
+    #[test]
+    fn serve_from_doc_parses_state_reuse_knobs() {
+        let doc =
+            TomlDoc::parse("[serve]\nprefix_cache_mb = 8\nprefill_chunk = 64\n").unwrap();
+        let c = ServeConfig::from_doc(&doc, "serve");
+        assert_eq!(c.prefix_cache_mb, 8);
+        assert_eq!(c.prefill_chunk, 64);
+        // defaults: cache on, chunking off; negatives clamp to off
+        let d = ServeConfig::default();
+        assert_eq!(d.prefix_cache_mb, 32);
+        assert_eq!(d.prefill_chunk, 0);
+        let doc =
+            TomlDoc::parse("[serve]\nprefix_cache_mb = -1\nprefill_chunk = -2\n").unwrap();
+        let c = ServeConfig::from_doc(&doc, "serve");
+        assert_eq!(c.prefix_cache_mb, 0);
+        assert_eq!(c.prefill_chunk, 0);
     }
 
     #[test]

@@ -22,6 +22,16 @@ pub struct Metrics {
     pub prefill_batched_seqs: u64,
     pub decode_calls: u64,
     pub decode_batched_seqs: u64,
+    /// Prefix-cache lookups that found a usable cached prefix.
+    pub prefix_hits: u64,
+    /// Prefix-cache lookups that found nothing to resume.
+    pub prefix_misses: u64,
+    /// Prefix-cache entries evicted under the LRU byte budget.
+    pub prefix_evicted: u64,
+    /// Tokens served FROM cached states instead of being re-prefilled.
+    pub resumed_tokens: u64,
+    /// Prefill chunk-graph invocations (resume / chunked-streaming path).
+    pub prefill_chunks: u64,
     pub ttft_us: LatencyHistogram,
     pub e2e_us: LatencyHistogram,
     pub per_token_us: LatencyHistogram,
@@ -29,6 +39,9 @@ pub struct Metrics {
     pub decode_batch_us: LatencyHistogram,
     /// Wall latency of each batched-prefill admission round.
     pub prefill_batch_us: LatencyHistogram,
+    /// Wall latency of each streaming-prefill chunk (per-chunk TTFT
+    /// progress: how long each slice of a long prompt took).
+    pub prefill_chunk_us: LatencyHistogram,
 }
 
 impl Default for Metrics {
@@ -46,11 +59,17 @@ impl Default for Metrics {
             prefill_batched_seqs: 0,
             decode_calls: 0,
             decode_batched_seqs: 0,
+            prefix_hits: 0,
+            prefix_misses: 0,
+            prefix_evicted: 0,
+            resumed_tokens: 0,
+            prefill_chunks: 0,
             ttft_us: LatencyHistogram::new(),
             e2e_us: LatencyHistogram::new(),
             per_token_us: LatencyHistogram::new(),
             decode_batch_us: LatencyHistogram::new(),
             prefill_batch_us: LatencyHistogram::new(),
+            prefill_chunk_us: LatencyHistogram::new(),
         }
     }
 }
@@ -82,6 +101,16 @@ impl Metrics {
             0.0
         } else {
             self.prefill_batched_seqs as f64 / self.prefill_calls as f64
+        }
+    }
+
+    /// Fraction of prefix-cache lookups that resumed a cached state.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefix_hits + self.prefix_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / total as f64
         }
     }
 
@@ -123,6 +152,17 @@ impl Metrics {
             (
                 "prefill batch p50",
                 format!("{:.2} ms", self.prefill_batch_us.percentile_us(50.0) / 1e3),
+            ),
+            (
+                "prefix cache hit/miss",
+                format!("{}/{}", self.prefix_hits, self.prefix_misses),
+            ),
+            ("prefix evicted", format!("{}", self.prefix_evicted)),
+            ("resumed tokens", format!("{}", self.resumed_tokens)),
+            ("prefill chunks", format!("{}", self.prefill_chunks)),
+            (
+                "prefill chunk p50",
+                format!("{:.2} ms", self.prefill_chunk_us.percentile_us(50.0) / 1e3),
             ),
             ("decode calls", format!("{}", self.decode_calls)),
             ("mean batch", format!("{:.2}", self.mean_decode_batch())),
@@ -166,6 +206,20 @@ mod tests {
         assert!(s.contains("TTFT p95"));
         assert!(s.contains("decode batch p95"));
         assert!(s.contains("mean prefill batch"));
+    }
+
+    #[test]
+    fn prefix_hit_rate_math_and_report_rows() {
+        let mut m = Metrics::default();
+        assert_eq!(m.prefix_hit_rate(), 0.0);
+        m.prefix_hits = 3;
+        m.prefix_misses = 1;
+        m.resumed_tokens = 4096;
+        assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-12);
+        let s = m.report().render();
+        assert!(s.contains("prefix cache hit/miss"));
+        assert!(s.contains("resumed tokens"));
+        assert!(s.contains("prefill chunks"));
     }
 
     #[test]

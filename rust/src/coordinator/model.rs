@@ -61,6 +61,40 @@ pub trait ServeModel {
     /// Advance `seqs.len()` sequences one token (len must be a bucket).
     /// Returns per-sequence logits; states are updated in place.
     fn decode(&mut self, seqs: &mut [(&mut SeqState, i32)]) -> Result<Vec<Vec<f32>>>;
+    /// Token grain at which chunked / resumed prefill stays bitwise
+    /// identical to a monolithic prefill of the same sequence (mamba-1:
+    /// every position; mamba-2: SSD chunk boundaries). 0 = this backend
+    /// cannot continue a prefill from a saved state, and the engine
+    /// keeps every request on the plain prefill paths.
+    fn resume_grain(&self) -> usize {
+        0
+    }
+    /// Longest prompt the engine may hand this backend in one request
+    /// (the tokenizer's truncation window). Chunked-prefill backends
+    /// accept far more than one compiled window; everyone else is
+    /// window-bound.
+    fn max_prompt_len(&self) -> usize {
+        self.prefill_len()
+    }
+    /// Prefill `tokens` — the *new suffix only* — continuing from
+    /// `resume` (None = from scratch), calling `checkpoint(consumed,
+    /// state)` at resume-grain-aligned chunk boundaries so the engine
+    /// can retain intermediate snapshots for the prefix cache. Returns
+    /// last-position logits + final state, exactly like `prefill`.
+    /// Default: no resume support — delegates to plain prefill and
+    /// errors if a resume state is supplied.
+    fn prefill_resume(
+        &mut self,
+        tokens: &[i32],
+        resume: Option<&SeqState>,
+        checkpoint: &mut dyn FnMut(usize, &SeqState),
+    ) -> Result<(Vec<f32>, SeqState)> {
+        let _ = checkpoint;
+        if resume.is_some() {
+            return Err(anyhow!("this backend cannot resume from a cached state"));
+        }
+        self.prefill(tokens)
+    }
 }
 
 // --- PJRT-backed implementation -----------------------------------------------
@@ -258,6 +292,11 @@ pub struct PlannedServeModel {
     /// Work-stealing decode chunk size; 0 = auto (largest compiled
     /// bucket <= ceil(bucket / workers)).
     steal_chunk: usize,
+    /// Streaming-prefill chunk size (tokens), grain-aligned; 0 = off
+    /// (long prompts truncate to the window as before). When set, the
+    /// engine may hand prompts far longer than one window and they run
+    /// as a sequence of chunk graphs with bounded arena memory.
+    prefill_chunk: usize,
     vocab: usize,
     params: Arc<Vec<Tensor>>,
     cache: PlanCache,
@@ -399,6 +438,7 @@ impl PlannedServeModel {
             buckets,
             prefill_buckets: vec![1],
             steal_chunk: 0,
+            prefill_chunk: 0,
             vocab: shape.vocab_size,
             params,
             cache,
@@ -445,6 +485,34 @@ impl PlannedServeModel {
         Ok(self)
     }
 
+    /// Enable chunked streaming prefill: prompts longer than one window
+    /// run as a sequence of `chunk`-token resume graphs carrying the
+    /// per-layer state across boundaries, so arena memory is bounded by
+    /// the chunk graph rather than the prompt. The chunk is clamped to
+    /// the window and rounded down to a multiple of the family's resume
+    /// grain (mamba-2 prefill is only bitwise-stable at SSD chunk
+    /// boundaries). 0 disables; i8 serving silently disables too — its
+    /// dynamic per-tensor activation scales would make chunk boundaries
+    /// numerically observable.
+    pub fn with_prefill_chunk(mut self, chunk: usize) -> Result<Self> {
+        if chunk == 0 || self.dtype == DType::I8 {
+            self.prefill_chunk = 0;
+            return Ok(self);
+        }
+        let grain = self.family.resume_chunk_grain(&self.shape);
+        let rounded = (chunk.min(self.window) / grain) * grain;
+        if rounded < grain.max(self.min_prefill) {
+            return Err(anyhow!(
+                "prefill chunk {chunk} too small: need at least {} \
+                 (resume grain {grain}, min prefill {})",
+                grain.max(self.min_prefill),
+                self.min_prefill
+            ));
+        }
+        self.prefill_chunk = rounded;
+        Ok(self)
+    }
+
     /// Build from serving config: weights come from `weights_path`, else
     /// the trained artifacts file if present, else a deterministic random
     /// init (keeps `xamba serve` runnable with no `artifacts/` at all —
@@ -480,7 +548,8 @@ impl PlannedServeModel {
             dtype,
         )?
         .with_prefill_buckets(&cfg.prefill_buckets)?
-        .with_steal_chunk(cfg.steal_chunk)
+        .with_steal_chunk(cfg.steal_chunk)?
+        .with_prefill_chunk(cfg.prefill_chunk)
     }
 
     /// Deterministic random weights in `full_spec` order — small and
@@ -519,6 +588,16 @@ impl PlannedServeModel {
             .iter()
             .filter(|d| matches!(d, DType::F16 | DType::I8))
             .count()
+    }
+
+    /// Arena footprint (bytes) of the compiled plan for `program`
+    /// (dtype-qualified key: `"prefill"`, `"prefill_resume_t64"`, ...),
+    /// if that plan has been compiled. Tests and benches pin the
+    /// chunked-prefill memory bound with this: a resume-chunk plan's
+    /// arena must scale with the chunk, never with the whole prompt.
+    pub fn plan_arena_bytes(&self, program: &str) -> Option<usize> {
+        let key = plan_key_dtyped(self.family.arch(), program, self.dtype);
+        self.cache.plan(&key).map(|p| p.arena_bytes())
     }
 
     /// Flat length of one layer's per-sequence conv / ssm state.
@@ -676,6 +755,72 @@ impl PlannedServeModel {
         }
         Some(chunks)
     }
+
+    /// One resume-graph call: prefill `tokens` continuing from `prev`.
+    /// Plans compile lazily per length (`prefill_resume_t{t}`); in
+    /// steady chunked streaming every middle chunk shares one length,
+    /// so the compile count stays bounded like the length-class path.
+    fn run_resume_chunk(
+        &mut self,
+        tokens: &[i32],
+        prev: &SeqState,
+    ) -> Result<(Vec<f32>, SeqState)> {
+        let t = tokens.len();
+        let nl = self.shape.n_layers;
+        let (conv_len, ssm_len) = (self.conv_len(), self.ssm_len());
+        let mut tail = Vec::with_capacity(1 + 2 * nl);
+        tail.push(Tensor::i32(vec![t], tokens.to_vec()));
+        for j in 0..nl {
+            tail.push(Tensor::f32(
+                self.conv_shape.clone(),
+                prev.conv.f32_data()[j * conv_len..(j + 1) * conv_len].to_vec(),
+            ));
+            tail.push(Tensor::f32(
+                self.ssm_shape.clone(),
+                prev.ssm.f32_data()[j * ssm_len..(j + 1) * ssm_len].to_vec(),
+            ));
+        }
+        let key = plan_key_dtyped(
+            self.family.arch(),
+            &format!("prefill_resume_t{t}"),
+            self.dtype,
+        );
+        let outs = {
+            let Self { cache, family, shape, variant, params, dtype, weight_dtypes, .. } =
+                self;
+            let family = *family;
+            let dtype = *dtype;
+            cache
+                .run_or_compile_with(
+                    &key,
+                    || {
+                        build_serve_graph(
+                            variant,
+                            dtype,
+                            weight_dtypes,
+                            family.build_prefill_resume(shape, t),
+                        )
+                    },
+                    params,
+                    tail,
+                )
+                .map_err(|e| anyhow!(e))?
+        };
+        let logits = outs[0].as_f32().to_vec(); // (1, V) row
+        let mut conv = Vec::with_capacity(nl * conv_len);
+        let mut ssm = Vec::with_capacity(nl * ssm_len);
+        for j in 0..nl {
+            conv.extend_from_slice(outs[1 + 2 * j].as_f32());
+            ssm.extend_from_slice(outs[2 + 2 * j].as_f32());
+        }
+        Ok((
+            logits,
+            SeqState {
+                conv: HostTensor::F32(Self::batched(nl, &self.conv_shape), conv),
+                ssm: HostTensor::F32(Self::batched(nl, &self.ssm_shape), ssm),
+            },
+        ))
+    }
 }
 
 impl ServeModel for PlannedServeModel {
@@ -700,6 +845,72 @@ impl ServeModel for PlannedServeModel {
 
     fn prefill_buckets(&self) -> &[usize] {
         &self.prefill_buckets
+    }
+
+    /// mamba-1 carries the conv tail across any boundary (grain 1);
+    /// mamba-2 is bitwise-stable only at SSD chunk boundaries. i8
+    /// reports 0: its dynamic per-tensor activation scales depend on
+    /// chunk extents, so resumed prefill could not stay decode-exact.
+    fn resume_grain(&self) -> usize {
+        if self.dtype == DType::I8 {
+            0
+        } else {
+            self.family.resume_chunk_grain(&self.shape)
+        }
+    }
+
+    /// With chunked streaming on, the engine may hand whole long
+    /// prompts (bounded generously, not by the compiled window).
+    fn max_prompt_len(&self) -> usize {
+        if self.prefill_chunk > 0 {
+            1 << 20
+        } else {
+            self.window
+        }
+    }
+
+    /// Chunked / resumed prefill. The first chunk of a from-scratch
+    /// prompt runs the plain prefill graph (keeping its zero-history
+    /// step bitwise identical to monolithic prefill); every later chunk
+    /// runs the family's resume graph seeded with the previous chunk's
+    /// state. Intermediate states are offered to `checkpoint` at chunk
+    /// boundaries (always multiples of the resume grain); the final
+    /// state is returned, not checkpointed — the caller keys it.
+    fn prefill_resume(
+        &mut self,
+        tokens: &[i32],
+        resume: Option<&SeqState>,
+        checkpoint: &mut dyn FnMut(usize, &SeqState),
+    ) -> Result<(Vec<f32>, SeqState)> {
+        if self.resume_grain() == 0 {
+            if resume.is_some() {
+                return Err(anyhow!("resume is unsupported at this serving dtype"));
+            }
+            return self.prefill(tokens);
+        }
+        if tokens.is_empty() {
+            return Err(anyhow!("prefill_resume needs at least one new token"));
+        }
+        let chunk =
+            if self.prefill_chunk > 0 { self.prefill_chunk } else { self.window };
+        let mut state: Option<SeqState> = resume.cloned();
+        let mut consumed = 0usize;
+        let mut logits: Vec<f32> = Vec::new();
+        while consumed < tokens.len() {
+            let t = chunk.min(tokens.len() - consumed);
+            let seg = &tokens[consumed..consumed + t];
+            let (l, s) = match &state {
+                None => self.prefill(seg)?,
+                Some(prev) => self.run_resume_chunk(seg, prev)?,
+            };
+            consumed += t;
+            logits = l;
+            state = Some(s);
+            if consumed < tokens.len() {
+                checkpoint(consumed, state.as_ref().expect("state set above"));
+            }
+        }
+        Ok((logits, state.expect("at least one chunk ran")))
     }
 
     fn prefill(&mut self, tokens: &[i32]) -> Result<(Vec<f32>, SeqState)> {
@@ -915,9 +1126,17 @@ pub struct MockModel {
     pub decode_delay: std::time::Duration,
     /// Artificial per-prefill-round latency (scheduling tests).
     pub prefill_delay: std::time::Duration,
+    /// Resume grain the mock advertises (0 = no resume support).
+    pub resume_grain: usize,
+    /// Streaming-chunk size used by `prefill_resume` (0 = one chunk);
+    /// also lifts `max_prompt_len` beyond the window when set.
+    pub chunk: usize,
+    /// Every `prefill_resume` call observed: (suffix_len, had_state).
+    pub resume_log: Vec<(usize, bool)>,
     /// Optional shared engine-event trace: ('p', batch) per prefill
-    /// round, ('d', batch) per decode call, in call order. Interleaving
-    /// tests read it from outside the engine thread.
+    /// round, ('d', batch) per decode call, ('r', suffix_len) per
+    /// resume-prefill round, in call order. Interleaving tests read it
+    /// from outside the engine thread.
     pub event_log: Option<std::sync::Arc<std::sync::Mutex<Vec<(char, usize)>>>>,
 }
 
@@ -932,6 +1151,9 @@ impl MockModel {
             prefill_batch_log: Vec::new(),
             decode_delay: std::time::Duration::ZERO,
             prefill_delay: std::time::Duration::ZERO,
+            resume_grain: 0,
+            chunk: 0,
+            resume_log: Vec::new(),
             event_log: None,
         }
     }
@@ -964,6 +1186,55 @@ impl ServeModel for MockModel {
 
     fn prefill_buckets(&self) -> &[usize] {
         &self.prefill_buckets
+    }
+
+    fn resume_grain(&self) -> usize {
+        self.resume_grain
+    }
+
+    fn max_prompt_len(&self) -> usize {
+        if self.chunk > 0 {
+            usize::MAX / 2
+        } else {
+            self.window
+        }
+    }
+
+    /// Counter-model resume: the state after any prefix is just its
+    /// last token, so resuming is trivially decode-exact. Checkpoints
+    /// fire at `chunk` boundaries like the real backend.
+    fn prefill_resume(
+        &mut self,
+        tokens: &[i32],
+        resume: Option<&SeqState>,
+        checkpoint: &mut dyn FnMut(usize, &SeqState),
+    ) -> Result<(Vec<f32>, SeqState)> {
+        if self.resume_grain == 0 && resume.is_some() {
+            return Err(anyhow!("mock resume disabled"));
+        }
+        self.resume_log.push((tokens.len(), resume.is_some()));
+        self.log_event('r', tokens.len());
+        if !self.prefill_delay.is_zero() {
+            std::thread::sleep(self.prefill_delay);
+        }
+        let chunk = if self.chunk > 0 { self.chunk } else { tokens.len() };
+        let mut consumed = 0usize;
+        while consumed < tokens.len() {
+            consumed += chunk.min(tokens.len() - consumed);
+            if consumed < tokens.len() {
+                let state = SeqState {
+                    conv: HostTensor::F32(vec![1], vec![tokens[consumed - 1] as f32]),
+                    ssm: HostTensor::F32(vec![1], vec![0.0]),
+                };
+                checkpoint(consumed, &state);
+            }
+        }
+        let last = *tokens.last().unwrap();
+        let state = SeqState {
+            conv: HostTensor::F32(vec![1], vec![last as f32]),
+            ssm: HostTensor::F32(vec![1], vec![0.0]),
+        };
+        Ok((self.logits_for(last + 1), state))
     }
 
     fn prefill(&mut self, tokens: &[i32]) -> Result<(Vec<f32>, SeqState)> {

@@ -62,6 +62,9 @@ struct ActiveSeq {
     last_token: i32,
     generated: Vec<i32>,
     prompt: Vec<u8>,
+    /// Encoded prompt tokens — the completion-promotion key prefix for
+    /// the prefix cache (prompt ++ generated tokens the state absorbed).
+    prompt_tokens: Vec<i32>,
     params: GenParams,
     arrived: Instant,
     first_token_at: Instant,
@@ -203,8 +206,19 @@ fn engine_loop(
     rx: Receiver<Msg>,
     metrics: Arc<Mutex<Metrics>>,
 ) {
-    let tokenizer = Tokenizer::new(model.prefill_len(), model.vocab());
+    // The truncation window follows the backend: chunked-prefill models
+    // accept whole long prompts, window-bound models truncate as before.
+    let tokenizer = Tokenizer::new(model.max_prompt_len(), model.vocab());
     let mut cache = StateCache::new(cfg.max_slots);
+    if model.resume_grain() > 0 && cfg.prefix_cache_mb > 0 {
+        // Namespace the rolling hash by everything that changes the
+        // numerics: a cached state must never resume under a different
+        // model, rewrite variant, or serving dtype.
+        cache = cache.with_prefix(
+            cfg.prefix_cache_mb * 1024 * 1024,
+            &format!("{}:{}:{}", cfg.model, cfg.variant, cfg.dtype),
+        );
+    }
     let mut waiting: VecDeque<(Request, Reply)> = VecDeque::new();
     let mut active: Vec<ActiveSeq> = Vec::new();
     let mut rr = RoundRobin::default();
@@ -242,6 +256,122 @@ fn engine_loop(
             return;
         }
 
+        // --- resume / long-prompt admission (single-sequence round) --------
+        //
+        // Runs before the batched round: a request whose encoding extends
+        // a cached prefix resumes from the snapshot and prefills only its
+        // new suffix (O(new tokens), not O(history)), and a prompt longer
+        // than one compiled window streams through the chunked-prefill
+        // path with bounded arena memory. Either admits alone — a resume
+        // suffix rarely shares a length-class — counts as this iteration's
+        // one admission round, and falls through to decode below.
+        let mut resumed_round = false;
+        if cache.has_free() && !waiting.is_empty() && model.resume_grain() > 0 {
+            let (min_len, window) = model.prefill_len_range();
+            let enc = tokenizer.encode_ranged(&waiting[0].0.prompt, min_len);
+            let hit = cache.prefix_lookup(&enc);
+            {
+                let mut m = metrics.lock().unwrap();
+                m.prefix_hits = cache.prefix_hits;
+                m.prefix_misses = cache.prefix_misses;
+            }
+            if hit.is_some() || enc.len() > window {
+                resumed_round = true;
+                let (req, reply) = waiting.pop_front().expect("peeked above");
+                let (matched, resume_state) = match hit {
+                    Some((n, s)) => (n, Some(s)),
+                    None => (0, None),
+                };
+                let t0 = Instant::now();
+                let mut chunks = 0u64;
+                let mut chunk_t = Instant::now();
+                let mut chunk_us: Vec<f64> = Vec::new();
+                let result = {
+                    let cache = &mut cache;
+                    // chunk-boundary checkpoints feed the prefix cache,
+                    // keyed by the full token prefix the state absorbed
+                    let mut checkpoint =
+                        |consumed: usize, state: &super::model::SeqState| {
+                            cache.prefix_insert(&enc[..matched + consumed], state);
+                            chunks += 1;
+                            chunk_us.push(chunk_t.elapsed().as_micros() as f64);
+                            chunk_t = Instant::now();
+                        };
+                    model.prefill_resume(
+                        &enc[matched..],
+                        resume_state.as_ref(),
+                        &mut checkpoint,
+                    )
+                };
+                chunks += 1; // the final (uncheckpointed) chunk
+                chunk_us.push(chunk_t.elapsed().as_micros() as f64);
+                let round_us = t0.elapsed().as_micros() as f64;
+                match result {
+                    Ok((logits, state)) => {
+                        // retain the full-prompt state so the NEXT turn
+                        // (this prompt ++ reply ++ new text) resumes here
+                        cache.prefix_insert(&enc, &state);
+                        let slot = cache.alloc(state).expect("gated on has_free");
+                        let now = Instant::now();
+                        let mut rng = Prng::new(req.params.seed ^ req.id);
+                        let tok = sample(&logits, req.params.temperature, &mut rng);
+                        {
+                            let mut m = metrics.lock().unwrap();
+                            m.prefill_calls += 1;
+                            m.prefill_batched_seqs += 1;
+                            m.prefill_batch_us.record_us(round_us);
+                            m.prefills += 1;
+                            m.tokens_out += 1;
+                            m.resumed_tokens += matched as u64;
+                            m.prefill_chunks += chunks;
+                            for &us in &chunk_us {
+                                m.prefill_chunk_us.record_us(us);
+                            }
+                            m.prefix_evicted = cache.prefix_evicted;
+                            m.ttft_us.record_us(
+                                now.duration_since(req.arrived).as_micros() as f64,
+                            );
+                        }
+                        if !reply.push_token(tok.clamp(0, 255) as u8) {
+                            cache.release(slot);
+                            let mut m = metrics.lock().unwrap();
+                            m.cancelled += 1;
+                        } else {
+                            active.push(ActiveSeq {
+                                id: req.id,
+                                slot,
+                                last_token: tok,
+                                generated: vec![tok],
+                                prompt: req.prompt,
+                                prompt_tokens: enc,
+                                params: req.params,
+                                arrived: req.arrived,
+                                first_token_at: now,
+                                reply,
+                                rng,
+                                batch_trace: Vec::new(),
+                            });
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "resumed prefill failed for request {}: {e:#}",
+                            req.id
+                        );
+                        reply.finish(Response {
+                            id: req.id,
+                            prompt: req.prompt,
+                            generated: vec![],
+                            finish: FinishReason::Rejected,
+                            ttft_us: 0.0,
+                            e2e_us: 0.0,
+                            batch_trace: vec![],
+                        });
+                    }
+                }
+            }
+        }
+
         // --- prefill: one batched admission round --------------------------
         //
         // At most ONE prefill bucket runs per loop iteration, then control
@@ -252,7 +382,7 @@ fn engine_loop(
         // padded to batch it with a longer one); the class's leftover
         // stays queued and drains on later rounds, down to per-sequence
         // remainder batches.
-        if cache.has_free() && !waiting.is_empty() {
+        if !resumed_round && cache.has_free() && !waiting.is_empty() {
             let min_len = model.prefill_len_range().0;
             let enc_len = |prompt: &[u8]| tokenizer.encoded_len(prompt, min_len);
             let free = cache.capacity() - cache.in_use();
@@ -317,7 +447,9 @@ fn engine_loop(
                 m.prefill_batched_seqs += batch.len() as u64;
                 m.prefill_batch_us.record_us(round_us);
             }
-            for ((req, reply), result) in batch.into_iter().zip(results) {
+            for (((req, reply), result), toks) in
+                batch.into_iter().zip(results).zip(tokens)
+            {
                 let (logits, state) = match result {
                     Ok(r) => r,
                     Err(e) => {
@@ -357,6 +489,7 @@ fn engine_loop(
                     last_token: tok,
                     generated: vec![tok],
                     prompt: req.prompt,
+                    prompt_tokens: toks,
                     params: req.params,
                     arrived: req.arrived,
                     first_token_at: now,
@@ -441,7 +574,29 @@ fn engine_loop(
                         finished.sort_unstable_by(|a, b| b.cmp(a));
                         for i in finished {
                             let seq = active.swap_remove(i);
-                            cache.release(seq.slot);
+                            let final_state = cache.release(seq.slot);
+                            // promote the finished state to the prefix
+                            // tier: it has absorbed the prompt plus every
+                            // generated token EXCEPT the last sample
+                            // (never fed back through decode), so the
+                            // next turn of this conversation resumes it
+                            // decode-exactly. Cancels and failures are
+                            // not promoted; neither is a sequence whose
+                            // absorbed tokens fall outside the byte
+                            // alphabet (its next-turn prompt would
+                            // re-encode them differently than the state
+                            // actually saw them).
+                            let absorbed =
+                                &seq.generated[..seq.generated.len() - 1];
+                            if cache.prefix_enabled()
+                                && absorbed.iter().all(|&t| (0..=255).contains(&t))
+                            {
+                                let mut key = seq.prompt_tokens.clone();
+                                key.extend_from_slice(absorbed);
+                                cache.prefix_insert(&key, &final_state);
+                                let mut m = metrics.lock().unwrap();
+                                m.prefix_evicted = cache.prefix_evicted;
+                            }
                             let now = Instant::now();
                             let e2e =
                                 now.duration_since(seq.arrived).as_micros() as f64;

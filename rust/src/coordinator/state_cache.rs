@@ -1,22 +1,99 @@
-//! Sequence-state slab: the SSM analogue of a KV-cache manager.
+//! Sequence-state manager: the SSM analogue of a KV-cache manager,
+//! in two tiers.
 //!
-//! Unlike transformer serving, state size is O(1) per sequence (the
-//! paper's core efficiency argument), so the manager is a fixed slab of
-//! slots with explicit alloc/free — no paging, no eviction pressure, but
-//! the same admission-control role: no free slot means a request waits.
+//! **Live tier** — a fixed slab of slots with explicit alloc/free for
+//! in-flight sequences. State size is O(1) per sequence (the paper's
+//! core efficiency argument), so there is no paging: no free slot means
+//! a request waits (admission control).
+//!
+//! **Prefix tier** — finished sequences' state snapshots keyed by the
+//! token prefix that produced them, under an LRU byte budget. Because
+//! the whole conversation history compresses into a fixed-size state,
+//! a multi-turn request whose prompt extends a cached prefix resumes
+//! decode-exact in O(new tokens) instead of re-prefilling from token
+//! zero. Keys are a rolling hash seeded by a namespace string
+//! (`model:variant:dtype`), but every entry retains its full token
+//! prefix and a lookup verifies token equality, so hash collisions can
+//! never surface a wrong state. The tiers are structurally disjoint:
+//! eviction only ever touches the prefix tier, never a live slot.
 
 use super::model::SeqState;
+use crate::runtime::HostTensor;
 
-/// Slot handle into the cache.
+/// Slot handle into the live tier.
 pub type SlotId = usize;
 
-/// Fixed-capacity slab of per-sequence recurrent states.
+/// FNV-1a over the namespace string; seeds the rolling token hash so
+/// caches for different (model, variant, dtype) namespaces never hash
+/// alike even before the token-equality check.
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in s.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+/// One rolling-hash step: order-sensitive and O(1) to extend, so a
+/// streaming prefill can key a checkpoint at every chunk boundary
+/// without rehashing the prefix.
+fn hash_step(h: u64, tok: i32) -> u64 {
+    (h ^ (tok as u32 as u64)).wrapping_mul(0x0100_0000_01b3).rotate_left(23)
+}
+
+/// Hashes of every prefix of `tokens`: `out[i]` covers `tokens[..i]`.
+fn hash_prefixes(seed: u64, tokens: &[i32]) -> Vec<u64> {
+    let mut out = Vec::with_capacity(tokens.len() + 1);
+    let mut h = seed;
+    out.push(h);
+    for &t in tokens {
+        h = hash_step(h, t);
+        out.push(h);
+    }
+    out
+}
+
+fn tensor_bytes(t: &HostTensor) -> usize {
+    // Both variants store 4-byte elements.
+    t.shape().iter().product::<usize>() * 4
+}
+
+/// Resident cost of one prefix entry: the retained token key plus the
+/// two state tensors.
+fn entry_bytes(tokens: &[i32], state: &SeqState) -> usize {
+    tokens.len() * 4 + tensor_bytes(&state.conv) + tensor_bytes(&state.ssm)
+}
+
+/// A retained snapshot: the state after prefilling exactly `tokens`.
+#[derive(Debug)]
+struct PrefixEntry {
+    hash: u64,
+    tokens: Vec<i32>,
+    state: SeqState,
+    bytes: usize,
+    last_used: u64,
+}
+
+/// Two-tier per-sequence state manager (live slab + prefix cache).
 #[derive(Debug, Default)]
 pub struct StateCache {
     slots: Vec<Option<SeqState>>,
     free: Vec<SlotId>,
     /// Peak concurrent occupancy (observability).
     pub high_water: usize,
+    /// Reused ordering buffer for `get_many_mut` (avoids a per-call
+    /// allocation on every batched decode step).
+    scratch: Vec<(usize, SlotId)>,
+    // --- prefix tier ---
+    prefix: Vec<PrefixEntry>,
+    prefix_budget: usize,
+    prefix_bytes: usize,
+    seed: u64,
+    tick: u64,
+    pub prefix_hits: u64,
+    pub prefix_misses: u64,
+    pub prefix_evicted: u64,
 }
 
 impl StateCache {
@@ -24,8 +101,18 @@ impl StateCache {
         Self {
             slots: (0..capacity).map(|_| None).collect(),
             free: (0..capacity).rev().collect(),
-            high_water: 0,
+            ..Self::default()
         }
+    }
+
+    /// Enable the prefix tier: retain finished-sequence snapshots under
+    /// `budget_bytes` (0 keeps it disabled). The namespace string keys
+    /// the hash seed — use `model:variant:dtype` so states can never be
+    /// resumed across an incompatible serving configuration.
+    pub fn with_prefix(mut self, budget_bytes: usize, namespace: &str) -> Self {
+        self.prefix_budget = budget_bytes;
+        self.seed = fnv1a(namespace);
+        self
     }
 
     pub fn capacity(&self) -> usize {
@@ -61,22 +148,23 @@ impl StateCache {
     }
 
     /// Mutable access to several distinct slots at once (batched decode).
-    /// Panics on duplicate ids.
+    /// Panics on duplicate ids. Runs every decode step, so it sorts once
+    /// into a reused scratch buffer and finds duplicates as sorted
+    /// neighbours instead of the old O(n²) pairwise scan.
     pub fn get_many_mut(&mut self, ids: &[SlotId]) -> Vec<&mut SeqState> {
-        for (i, a) in ids.iter().enumerate() {
-            for b in &ids[i + 1..] {
-                assert_ne!(a, b, "duplicate slot id in batch");
-            }
+        let Self { slots, scratch, .. } = self;
+        scratch.clear();
+        scratch.extend(ids.iter().copied().enumerate());
+        scratch.sort_unstable_by_key(|&(_, s)| s);
+        for w in scratch.windows(2) {
+            assert_ne!(w[0].1, w[1].1, "duplicate slot id in batch");
         }
         // split the slab into disjoint mutable borrows
         let mut result: Vec<Option<&mut SeqState>> = Vec::with_capacity(ids.len());
-        let mut remaining: &mut [Option<SeqState>] = &mut self.slots;
-        let mut base = 0usize;
-        let mut order: Vec<(usize, SlotId)> =
-            ids.iter().copied().enumerate().map(|(i, s)| (i, s)).collect();
-        order.sort_by_key(|&(_, s)| s);
         result.resize_with(ids.len(), || None);
-        for (orig_idx, slot) in order {
+        let mut remaining: &mut [Option<SeqState>] = slots;
+        let mut base = 0usize;
+        for &(orig_idx, slot) in scratch.iter() {
             let offset = slot - base;
             let (head, tail) = remaining.split_at_mut(offset + 1);
             result[orig_idx] = Some(head[offset].as_mut().expect("empty slot"));
@@ -84,6 +172,113 @@ impl StateCache {
             base = slot + 1;
         }
         result.into_iter().map(|o| o.unwrap()).collect()
+    }
+
+    // --- prefix tier -----------------------------------------------------
+
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix_budget > 0
+    }
+
+    /// Resident bytes in the prefix tier (incremental accounting).
+    pub fn prefix_bytes(&self) -> usize {
+        self.prefix_bytes
+    }
+
+    pub fn prefix_entries(&self) -> usize {
+        self.prefix.len()
+    }
+
+    /// Recompute resident bytes from the entries themselves — test /
+    /// debug audit of the incremental accounting.
+    pub fn prefix_bytes_audit(&self) -> usize {
+        self.prefix.iter().map(|e| entry_bytes(&e.tokens, &e.state)).sum()
+    }
+
+    /// Longest-prefix probe: returns `(matched_len, state snapshot)` for
+    /// the longest cached entry whose tokens are a *proper* prefix of
+    /// `tokens` (a full match would leave no new tokens to prefill — the
+    /// caller wants at least one row to produce last-position logits).
+    /// Hash filters first, then token equality verifies, so a collision
+    /// can never resume the wrong state. Counts one hit or miss and
+    /// refreshes the winner's LRU age.
+    pub fn prefix_lookup(&mut self, tokens: &[i32]) -> Option<(usize, SeqState)> {
+        if self.prefix_budget == 0 || self.prefix.is_empty() {
+            return None;
+        }
+        let hashes = hash_prefixes(self.seed, tokens);
+        let mut best: Option<usize> = None;
+        let mut best_len = 0usize;
+        for (i, e) in self.prefix.iter().enumerate() {
+            let n = e.tokens.len();
+            if n >= tokens.len() || n <= best_len {
+                continue;
+            }
+            if e.hash == hashes[n] && e.tokens[..] == tokens[..n] {
+                best = Some(i);
+                best_len = n;
+            }
+        }
+        if let Some(i) = best {
+            self.tick += 1;
+            self.prefix_hits += 1;
+            let e = &mut self.prefix[i];
+            e.last_used = self.tick;
+            Some((best_len, e.state.clone()))
+        } else {
+            self.prefix_misses += 1;
+            None
+        }
+    }
+
+    /// Retain the state reached after prefilling exactly `tokens`.
+    /// Re-inserting an existing key replaces its snapshot (and its byte
+    /// accounting) without counting an eviction; otherwise LRU entries
+    /// are evicted until the tier fits the budget. An entry larger than
+    /// the whole budget is dropped rather than allowed to flush the
+    /// tier. Live slots are never touched.
+    pub fn prefix_insert(&mut self, tokens: &[i32], state: &SeqState) {
+        if self.prefix_budget == 0 || tokens.is_empty() {
+            return;
+        }
+        let hash = tokens.iter().fold(self.seed, |h, &t| hash_step(h, t));
+        if let Some(i) = self
+            .prefix
+            .iter()
+            .position(|e| e.hash == hash && e.tokens[..] == tokens[..])
+        {
+            let old = self.prefix.swap_remove(i);
+            self.prefix_bytes -= old.bytes;
+        }
+        let bytes = entry_bytes(tokens, state);
+        if bytes > self.prefix_budget {
+            return;
+        }
+        while self.prefix_bytes + bytes > self.prefix_budget {
+            self.evict_lru();
+        }
+        self.tick += 1;
+        self.prefix_bytes += bytes;
+        self.prefix.push(PrefixEntry {
+            hash,
+            tokens: tokens.to_vec(),
+            state: state.clone(),
+            bytes,
+            last_used: self.tick,
+        });
+    }
+
+    fn evict_lru(&mut self) {
+        let i = self
+            .prefix
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(i, _)| i)
+            .expect("evicting from empty prefix tier");
+        let e = self.prefix.swap_remove(i);
+        self.prefix_bytes -= e.bytes;
+        self.prefix_evicted += 1;
     }
 }
 
@@ -135,19 +330,133 @@ mod tests {
     }
 
     #[test]
+    fn prefix_disabled_without_budget() {
+        let mut c = StateCache::new(2);
+        assert!(!c.prefix_enabled());
+        c.prefix_insert(&[1, 2, 3], &st(1.0));
+        assert_eq!(c.prefix_entries(), 0);
+        assert!(c.prefix_lookup(&[1, 2, 3, 4]).is_none());
+        // a disabled tier counts neither hits nor misses
+        assert_eq!(c.prefix_hits + c.prefix_misses, 0);
+    }
+
+    #[test]
+    fn prefix_lookup_returns_longest_verified_prefix() {
+        let mut c = StateCache::new(2).with_prefix(1 << 20, "m:base:f32");
+        c.prefix_insert(&[1, 2], &st(2.0));
+        c.prefix_insert(&[1, 2, 3, 4], &st(4.0));
+        // longest proper prefix wins
+        let (n, s) = c.prefix_lookup(&[1, 2, 3, 4, 5, 6]).unwrap();
+        assert_eq!(n, 4);
+        assert_eq!(s.conv.f32_data()[0], 4.0);
+        // diverging suffix falls back to the shorter entry
+        let (n, s) = c.prefix_lookup(&[1, 2, 9, 9]).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(s.conv.f32_data()[0], 2.0);
+        // an exact-length match is not a *proper* prefix: no resume
+        assert!(c.prefix_lookup(&[1, 2]).is_none());
+        assert!(c.prefix_lookup(&[7, 8, 9]).is_none());
+        assert_eq!(c.prefix_hits, 2);
+        assert_eq!(c.prefix_misses, 2);
+    }
+
+    #[test]
+    fn prefix_reinsert_replaces_without_double_accounting() {
+        let mut c = StateCache::new(1).with_prefix(1 << 20, "ns");
+        c.prefix_insert(&[5, 6, 7], &st(1.0));
+        let bytes = c.prefix_bytes();
+        c.prefix_insert(&[5, 6, 7], &st(2.0));
+        assert_eq!(c.prefix_entries(), 1);
+        assert_eq!(c.prefix_bytes(), bytes);
+        assert_eq!(c.prefix_evicted, 0, "refresh is not an eviction");
+        let (_, s) = c.prefix_lookup(&[5, 6, 7, 8]).unwrap();
+        assert_eq!(s.conv.f32_data()[0], 2.0, "refresh took the new state");
+    }
+
+    #[test]
+    fn prefix_budget_evicts_lru_only() {
+        // st() entries cost 8 state bytes + 4 bytes/token; a length-2
+        // key costs 16, so a 40-byte budget fits exactly two entries.
+        let mut c = StateCache::new(1).with_prefix(40, "ns");
+        c.prefix_insert(&[1, 1], &st(1.0));
+        c.prefix_insert(&[2, 2], &st(2.0));
+        assert_eq!(c.prefix_entries(), 2);
+        // touch [1,1] so [2,2] becomes the LRU victim
+        assert!(c.prefix_lookup(&[1, 1, 9]).is_some());
+        c.prefix_insert(&[3, 3], &st(3.0));
+        assert_eq!(c.prefix_entries(), 2);
+        assert_eq!(c.prefix_evicted, 1);
+        assert!(c.prefix_lookup(&[1, 1, 9]).is_some(), "recently used survives");
+        assert!(c.prefix_lookup(&[3, 3, 9]).is_some(), "new entry resident");
+        assert!(c.prefix_lookup(&[2, 2, 9]).is_none(), "LRU entry evicted");
+        // an entry bigger than the whole budget is dropped, not thrashed
+        c.prefix_insert(&[4; 32], &st(4.0));
+        assert_eq!(c.prefix_entries(), 2);
+        assert!(c.prefix_bytes() <= 40);
+    }
+
+    #[test]
     fn slot_leak_free_under_churn() {
-        // property: after any alloc/release interleaving, in_use is exact
-        let mut c = StateCache::new(8);
-        let mut live: Vec<SlotId> = Vec::new();
+        // two-tier property test: under random alloc/release/promote/
+        // lookup interleavings, (a) live-slab occupancy is exact, (b)
+        // prefix byte accounting matches a from-scratch audit and never
+        // exceeds the budget, (c) a hit always returns the state that
+        // was inserted for exactly that token prefix, and (d) live slab
+        // states are never disturbed by prefix eviction.
+        let budget = 200; // tight: forces constant eviction pressure
+        let mut c = StateCache::new(8).with_prefix(budget, "churn");
+        let mut live: Vec<(SlotId, f32)> = Vec::new();
+        let mut inserted: std::collections::HashMap<Vec<i32>, f32> =
+            std::collections::HashMap::new();
         let mut rng = crate::util::Prng::new(3);
-        for _ in 0..1000 {
-            if !live.is_empty() && (rng.uniform() < 0.5 || !c.has_free()) {
-                let i = rng.below(live.len());
-                c.release(live.swap_remove(i));
-            } else if c.has_free() {
-                live.push(c.alloc(st(0.0)).unwrap());
+        let mut next_tag = 1.0f32;
+        for step in 0..1000 {
+            match step % 4 {
+                0 | 1 => {
+                    // slab churn (as before)
+                    if !live.is_empty() && (rng.uniform() < 0.5 || !c.has_free()) {
+                        let i = rng.below(live.len());
+                        let (id, tag) = live.swap_remove(i);
+                        let released = c.release(id);
+                        assert_eq!(released.conv.f32_data()[0], tag);
+                        // promote roughly half of the finished states
+                        if rng.uniform() < 0.5 {
+                            let key: Vec<i32> =
+                                (0..1 + rng.below(6)).map(|j| (id + j) as i32).collect();
+                            c.prefix_insert(&key, &released);
+                            inserted.insert(key, tag);
+                        }
+                    } else if c.has_free() {
+                        let tag = next_tag;
+                        next_tag += 1.0;
+                        live.push((c.alloc(st(tag)).unwrap(), tag));
+                    }
+                }
+                2 => {
+                    let key: Vec<i32> = (0..1 + rng.below(8)).map(|j| j as i32).collect();
+                    if let Some((n, s)) = c.prefix_lookup(&key) {
+                        assert!(n < key.len());
+                        let want = inserted
+                            .get(&key[..n])
+                            .expect("hit on a never-inserted prefix");
+                        assert_eq!(s.conv.f32_data()[0], *want);
+                    }
+                }
+                _ => {
+                    let tag = 1000.0 + rng.below(50) as f32;
+                    let key: Vec<i32> = (0..1 + rng.below(6)).map(|j| rng.below(9) as i32).collect();
+                    c.prefix_insert(&key, &st(tag));
+                    inserted.insert(key, tag);
+                }
             }
             assert_eq!(c.in_use(), live.len());
+            assert_eq!(c.prefix_bytes(), c.prefix_bytes_audit(), "accounting drift");
+            assert!(c.prefix_bytes() <= budget, "budget exceeded");
+            // eviction pressure must never reach into the live slab
+            for &(id, tag) in &live {
+                assert_eq!(c.get_mut(id).conv.f32_data()[0], tag);
+            }
         }
+        assert!(c.prefix_evicted > 0, "churn never exercised eviction");
     }
 }

@@ -137,6 +137,101 @@ pub(crate) fn block_prefill_with_state(
     (out, xi, h.expect("scan needs t >= 1"))
 }
 
+/// Resume variant of [`block_prefill_with_state`]: `conv_in` (K-1,
+/// d_inner) carries the raw pre-conv rows of the previous chunk's last
+/// K-1 tokens and `ssm_in` (d_inner, N) seeds the scan recurrence, so
+/// every resumed position computes exactly the values the monolithic
+/// block computes at the same global offset: the conv window is complete
+/// (no zero-padded edge), SiLU/x_proj/dt act per row, and each scan step
+/// takes the same carry expression `h' = exp(dt A) h + (dt x) B` the
+/// monolithic scan uses from step 1 on. Returns `(block_out,
+/// new_conv_state (K-1, d_inner), h_last (d_inner, N))`.
+pub(crate) fn block_prefill_resume_with_state(
+    ctx: &mut Ctx,
+    m: &ModelShape,
+    j: usize,
+    x: NodeId,
+    t: usize,
+    conv_in: NodeId,
+    ssm_in: NodeId,
+) -> (NodeId, NodeId, NodeId) {
+    let (di, n, k) = (m.d_inner(), m.d_state, m.d_conv);
+    let r = m.resolved_dt_rank();
+    let nm = |s: &str| format!("l{j}.{s}");
+    let w = |ctx: &Ctx, s: &str| ctx.w(&nm(s));
+
+    let in_proj = w(&*ctx, "in_proj");
+    let xz = ctx.g.matmul(x, in_proj, &nm("in_proj.mm"));
+    let xi = ctx.g.slice(xz, 1, 0, di, &nm("split.x"));
+    let z = ctx.g.slice(xz, 1, di, di, &nm("split.z"));
+
+    // extend the raw conv input with the carried tail, run the causal
+    // conv over (K-1+T, di), then keep only the T new rows — each has a
+    // full real window
+    let ext = ctx.g.concat(&[conv_in, xi], 0, &nm("conv.ext"));
+    let (cw, cb) = (w(&*ctx, "conv_w"), w(&*ctx, "conv_b"));
+    let xc_ext = ctx.g.conv1d_causal(ext, cw, cb, &nm("conv"));
+    let xc = ctx.g.slice(xc_ext, 0, k - 1, t, &nm("conv.new"));
+    let xc = ctx.g.silu(xc, &nm("conv.silu"));
+    // next chunk's carry: the last K-1 raw rows of the extended sequence
+    // (valid for any t >= 1 — short chunks keep part of the old tail)
+    let new_conv = ctx.g.slice(ext, 0, t, k - 1, &nm("conv.state"));
+
+    let xp = w(&*ctx, "x_proj");
+    let xdbc = ctx.g.matmul(xc, xp, &nm("x_proj.mm"));
+    let dt_r = ctx.g.slice(xdbc, 1, 0, r, &nm("split.dt"));
+    let b_sel = ctx.g.slice(xdbc, 1, r, n, &nm("split.B"));
+    let c_sel = ctx.g.slice(xdbc, 1, r + n, n, &nm("split.C"));
+    let (dtw, dtb) = (w(&*ctx, "dt_proj_w"), w(&*ctx, "dt_proj_b"));
+    let dt_full = ctx.g.matmul(dt_r, dtw, &nm("dt_proj.mm"));
+    let dt_full = ctx.g.add(dt_full, dtb, &nm("dt_proj.bias"));
+    let dt = ctx.g.softplus(dt_full, &nm("dt.softplus"));
+
+    let a_log = w(&*ctx, "a_log");
+    let a_exp = ctx.g.exp(a_log, &nm("A.exp"));
+    let neg1 = ctx.g.const_scalar(&nm("A.neg1"), -1.0);
+    let a = ctx.g.mul(a_exp, neg1, &nm("A"));
+    let d_skip = w(&*ctx, "d_skip");
+
+    // unrolled scan seeded from the carried state: EVERY step (step 0
+    // included) takes the carry path, matching the monolithic scan's
+    // steps >= 1
+    let mut h = ssm_in;
+    let mut ys: Vec<NodeId> = Vec::with_capacity(t);
+    for step in 0..t {
+        let snm = |s: &str| format!("l{j}.scan{step}.{s}");
+        let x_t = ctx.g.slice(xc, 0, step, 1, &snm("x"));
+        let dt_t = ctx.g.slice(dt, 0, step, 1, &snm("dt"));
+        let b_t = ctx.g.slice(b_sel, 0, step, 1, &snm("B"));
+        let c_t = ctx.g.slice(c_sel, 0, step, 1, &snm("C"));
+        let dt_col = ctx.g.reshape(dt_t, vec![di, 1], &snm("dt.col"));
+        let da = ctx.g.mul(dt_col, a, &snm("dtA"));
+        let da = ctx.g.exp(da, &snm("decay"));
+        let xdt = ctx.g.mul(dt_t, x_t, &snm("x.dt"));
+        let xdt_col = ctx.g.reshape(xdt, vec![di, 1], &snm("x.dt.col"));
+        let inflow = ctx.g.mul(xdt_col, b_t, &snm("inflow"));
+        let decayed = ctx.g.mul(da, h, &snm("h.decay"));
+        let h_new = ctx.g.add(decayed, inflow, &snm("h"));
+        h = h_new;
+        let c_col = ctx.g.reshape(c_t, vec![n, 1], &snm("C.col"));
+        let y_t = ctx.g.matmul(h_new, c_col, &snm("y.mm"));
+        let y_row = ctx.g.reshape(y_t, vec![1, di], &snm("y.row"));
+        let skip = ctx.g.mul(x_t, d_skip, &snm("y.skip"));
+        ys.push(ctx.g.add(y_row, skip, &snm("y")));
+    }
+    let y = if ys.len() == 1 {
+        ys[0]
+    } else {
+        ctx.g.concat(&ys, 0, &nm("scan.y"))
+    };
+
+    let zg = ctx.g.silu(z, &nm("gate.silu"));
+    let y = ctx.g.mul(y, zg, &nm("gate.mul"));
+    let op = w(&*ctx, "out_proj");
+    let out = ctx.g.matmul(y, op, &nm("out_proj.mm"));
+    (out, new_conv, h)
+}
+
 /// Batched counterpart of [`block_prefill_with_state`]: one rank-3 node
 /// per op over `x` (B, T, d_model) instead of `B` replicas of the
 /// single-sequence block. Every op treats the leading batch dimension
@@ -275,6 +370,29 @@ pub fn build_prefill_serve(m: &ModelShape, t: usize) -> Graph {
                 &format!("l{j}.conv.state"),
             );
             (y, (conv_state, h_last))
+        },
+    )
+}
+
+/// Resume serving prefill: tokens (T,) i32 + per-layer `(conv_state,
+/// ssm_state)` inputs → last-position logits (1, V) + new states, the
+/// same output layout as [`build_prefill_serve`]. Valid for any
+/// `t >= 1` — the carried conv tail completes every window, so there is
+/// no `t >= K-1` floor like the from-scratch prefill has.
+pub fn build_prefill_serve_resume(m: &ModelShape, t: usize) -> Graph {
+    assert_eq!(m.arch, "mamba");
+    let conv_shape = vec![m.d_conv - 1, m.d_inner()];
+    let ssm_shape = vec![m.d_inner(), m.d_state];
+    super::serve::lm_serve_scaffold_resume(
+        &format!("{}-serve-resume-t{t}", m.name),
+        m,
+        t,
+        &conv_shape,
+        &ssm_shape,
+        |ctx, j, xn, conv_in, ssm_in| {
+            let (y, new_conv, h_last) =
+                block_prefill_resume_with_state(ctx, m, j, xn, t, conv_in, ssm_in);
+            (y, (new_conv, h_last))
         },
     )
 }
@@ -690,6 +808,52 @@ mod tests {
                     singles[s][2 + 2 * j].as_f32(),
                     "ssm state diverges (seq {s}, layer {j})"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn resume_continues_monolithic_prefill_bitwise() {
+        // prefill the first `split` tokens from scratch, feed the
+        // resulting state into the resume graph for the rest — logits and
+        // final states must match the monolithic prefill bit for bit
+        use crate::exec::run_once;
+        use crate::graph::Tensor;
+        use crate::quality::param_inputs;
+
+        let m = presets::tiny_mamba();
+        let spec = full_spec(&m);
+        let mut rng = crate::util::Prng::new(7);
+        let weights = rng.range_vec(spec.total(), -0.1, 0.1);
+        let params = param_inputs(&spec, &weights);
+        let total = 11usize;
+        let tokens: Vec<i32> = (0..total as i32).map(|i| 3 + (i * 7) % 50).collect();
+
+        let run = |g: &Graph, extra: Vec<Tensor>| {
+            let mut inputs = params.clone();
+            inputs.extend(extra);
+            run_once(g, &inputs).expect("run")
+        };
+        let g_full = build_prefill_serve(&m, total);
+        let full = run(&g_full, vec![Tensor::i32(vec![total], tokens.clone())]);
+        // any split works for mamba-1 (resume grain 1); try several,
+        // including one that leaves a single-token remainder
+        for split in [2usize, 6, 10] {
+            let g_head = build_prefill_serve(&m, split);
+            let head = run(
+                &g_head,
+                vec![Tensor::i32(vec![split], tokens[..split].to_vec())],
+            );
+            let rest = total - split;
+            let g_res = build_prefill_serve_resume(&m, rest);
+            let mut extra = vec![Tensor::i32(vec![rest], tokens[split..].to_vec())];
+            for j in 0..m.n_layers {
+                extra.push(head[1 + 2 * j].clone());
+                extra.push(head[2 + 2 * j].clone());
+            }
+            let res = run(&g_res, extra);
+            for (i, (a, b)) in full.iter().zip(res.iter()).enumerate() {
+                assert_eq!(a.as_f32(), b.as_f32(), "split {split}: output {i} diverges");
             }
         }
     }

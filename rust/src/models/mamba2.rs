@@ -497,6 +497,139 @@ fn block_prefill_serve(
     (out, conv_state, state)
 }
 
+/// Resume variant of the serving block: `conv_in` (K-1, conv_dim)
+/// carries the raw pre-conv (x, B, C) rows of the previous chunk's last
+/// K-1 tokens, `ssm_in` (H, P, N) seeds the SSD carry, so the FIRST
+/// chunk here runs the same incoming-state path (`off.*` / `carry.*`
+/// nodes) the monolithic walk uses for every chunk past its first. At
+/// chunk-multiple boundaries the resumed math is bitwise identical to
+/// the monolithic prefill; from a decode-produced state it is a
+/// decode-exact continuation at any offset. Returns `(block_out,
+/// new_conv_state (K-1, conv_dim), ssd state (H, P, N))`.
+fn block_prefill_resume(
+    ctx: &mut Ctx,
+    m: &ModelShape,
+    j: usize,
+    x: NodeId,
+    t: usize,
+    conv_in: NodeId,
+    ssm_in: NodeId,
+) -> (NodeId, NodeId, NodeId) {
+    let (di, n) = (m.d_inner(), m.d_state);
+    let (h, p) = (m.n_heads(), m.headdim);
+    let (k, chunk) = (m.d_conv, m.chunk);
+    let nm_s = move |j: usize, s: &str| format!("l{j}.{s}");
+    let nm = |s: &str| nm_s(j, s);
+
+    // single projection emits [z, x, B, C, dt] at once (appendix A.1)
+    let in_proj = ctx.w(&nm("in_proj"));
+    let zxbcdt = ctx.g.matmul(x, in_proj, &nm("in_proj.mm"));
+    let z = ctx.g.slice(zxbcdt, 1, 0, di, &nm("split.z"));
+    let xbc_raw = ctx.g.slice(zxbcdt, 1, di, di + 2 * n, &nm("split.xbc"));
+    let dt_raw = ctx.g.slice(zxbcdt, 1, 2 * di + 2 * n, h, &nm("split.dt"));
+
+    // extend the raw (x, B, C) conv input with the carried tail, conv
+    // over (K-1+T, conv_dim), keep only the T new rows — each has a full
+    // real window, so the rows match the monolithic conv bitwise
+    let ext = ctx.g.concat(&[conv_in, xbc_raw], 0, &nm("conv.ext"));
+    let (cw, cb) = (ctx.w(&nm("conv_w")), ctx.w(&nm("conv_b")));
+    let xbc_ext = ctx.g.conv1d_causal(ext, cw, cb, &nm("conv"));
+    let xbc = ctx.g.slice(xbc_ext, 0, k - 1, t, &nm("conv.new"));
+    let xbc = ctx.g.silu(xbc, &nm("conv.silu"));
+    // next chunk's carry: the last K-1 raw rows of the extended sequence
+    let new_conv = ctx.g.slice(ext, 0, t, k - 1, &nm("conv.state"));
+
+    let xi = ctx.g.slice(xbc, 1, 0, di, &nm("split.x"));
+    let b_sel = ctx.g.slice(xbc, 1, di, n, &nm("split.B"));
+    let c_sel = ctx.g.slice(xbc, 1, di + n, n, &nm("split.C"));
+
+    // dt = softplus(dt_raw + bias) over the T new rows only
+    let dtb = ctx.w(&nm("dt_bias"));
+    let dt = ctx.g.add(dt_raw, dtb, &nm("dt.bias"));
+    let dt = ctx.g.softplus(dt, &nm("dt.softplus"));
+
+    // a = -exp(a_log) : (H,) -> (H, 1)
+    let a_log = ctx.w(&nm("a_log"));
+    let a_exp = ctx.g.exp(a_log, &nm("A.exp"));
+    let neg1 = ctx.g.const_scalar(&nm("A.neg1"), -1.0);
+    let a = ctx.g.mul(a_exp, neg1, &nm("A"));
+    let a = ctx.g.reshape(a, vec![h, 1], &nm("A.col"));
+
+    // head layout: (T, di) -> (H, T, P); dt -> (H, T)
+    let xh3 = ctx.g.reshape(xi, vec![t, h, p], &nm("heads"));
+    let xh = ctx.g.transpose(xh3, vec![1, 0, 2], &nm("heads.T"));
+    let dt_h = ctx.g.transpose(dt, vec![1, 0], &nm("dt.T"));
+
+    // chunked SSD, seeded from the carried state: every chunk takes the
+    // incoming-state path, exactly like monolithic chunks past the first
+    let mut state: Option<NodeId> = Some(ssm_in);
+    let mut ys = Vec::new();
+    let mut off = 0usize;
+    let mut ci = 0usize;
+    while off < t {
+        let tc = chunk.min(t - off);
+        let cname = format!("l{j}.ssd.c{ci}");
+        let nmc = move |s: &str| format!("{cname}.{s}");
+        let xh_c = ctx.g.slice(xh, 1, off, tc, &nmc("x"));
+        let dt_c = ctx.g.slice(dt_h, 1, off, tc, &nmc("dt"));
+        let b_c = ctx.g.slice(b_sel, 0, off, tc, &nmc("b"));
+        let c_c = ctx.g.slice(c_sel, 0, off, tc, &nmc("c"));
+        let (y_c, s_c) =
+            ssd_chunk(ctx, &nmc, tc, h, p, n, xh_c, dt_c, a, b_c, c_c, state);
+        ys.push(y_c);
+        state = Some(s_c);
+        off += tc;
+        ci += 1;
+    }
+    let y = if ys.len() == 1 {
+        ys[0]
+    } else {
+        ctx.g.concat(&ys, 1, &nm("ssd.y"))
+    }; // (H, T, P)
+
+    // D skip: y += D[h] * x
+    let d_skip = ctx.w(&nm("d_skip"));
+    let d_col = ctx.g.reshape(d_skip, vec![h, 1, 1], &nm("D.col"));
+    let skip = ctx.g.mul(xh, d_col, &nm("D.skip"));
+    let y = ctx.g.add(y, skip, &nm("y.skip"));
+
+    // back to (T, di)
+    let y = ctx.g.transpose(y, vec![1, 0, 2], &nm("y.T"));
+    let y = ctx.g.reshape(y, vec![t, di], &nm("y.flat"));
+
+    // gated RMSNorm, out projection
+    let zg = ctx.g.silu(z, &nm("gate.silu"));
+    let gated = ctx.g.mul(y, zg, &nm("gate.mul"));
+    let gw = ctx.w(&nm("gnorm_w"));
+    let yn = ctx.g.rmsnorm(gated, gw, &nm("gnorm"));
+    let op = ctx.w(&nm("out_proj"));
+    let out = ctx.g.matmul(yn, op, &nm("out_proj.mm"));
+    (out, new_conv, state.expect("at least one chunk"))
+}
+
+/// Resume serving prefill: tokens (T,) i32 + per-layer `(conv_state,
+/// ssm_state)` inputs → last-position logits (1, V) + new states, the
+/// same output layout as [`build_prefill_serve`]. Valid for any
+/// `t >= 1`; bitwise-identical continuation requires the boundary to
+/// land on a multiple of `m.chunk` (`ServeFamily::resume_chunk_grain`).
+pub fn build_prefill_serve_resume(m: &ModelShape, t: usize) -> Graph {
+    assert_eq!(m.arch, "mamba2");
+    let conv_shape = vec![m.d_conv - 1, m.conv_dim()];
+    let ssm_shape = vec![m.n_heads(), m.headdim, m.d_state];
+    super::serve::lm_serve_scaffold_resume(
+        &format!("{}-serve-resume-t{t}", m.name),
+        m,
+        t,
+        &conv_shape,
+        &ssm_shape,
+        |ctx, j, xn, conv_in, ssm_in| {
+            let (y, new_conv, ssd_state) =
+                block_prefill_resume(ctx, m, j, xn, t, conv_in, ssm_in);
+            (y, (new_conv, ssd_state))
+        },
+    )
+}
+
 /// Serving prefill graph: tokens (T,) i32 -> last-position logits (1, V)
 /// plus per-layer decode-ready recurrent state. Output order matches
 /// [`build_decode_batched`]: logits, then per layer `conv_state{j}`
@@ -902,6 +1035,51 @@ mod tests {
             g.shape(g.outputs[2]),
             &[b, m.n_heads(), m.headdim, m.d_state]
         );
+    }
+
+    #[test]
+    fn resume_continues_monolithic_prefill_bitwise_at_chunk_grain() {
+        // split the prompt at chunk multiples (the resume grain): prefill
+        // the head from scratch, resume the rest from its state — logits
+        // and final states must match the monolithic prefill bit for bit.
+        // total = 40 leaves a remainder chunk (chunk 16) on both sides.
+        use crate::exec::run_once;
+        use crate::graph::Tensor;
+        use crate::quality::param_inputs;
+
+        let m = presets::tiny_mamba2();
+        let spec = full_spec(&m);
+        let mut rng = crate::util::Prng::new(17);
+        let weights = rng.range_vec(spec.total(), -0.1, 0.1);
+        let params = param_inputs(&spec, &weights);
+        let total = 40usize;
+        let tokens: Vec<i32> = (0..total as i32).map(|i| 5 + (i * 11) % 60).collect();
+
+        let run = |g: &Graph, extra: Vec<Tensor>| {
+            let mut inputs = params.clone();
+            inputs.extend(extra);
+            run_once(g, &inputs).expect("run")
+        };
+        let g_full = build_prefill_serve(&m, total);
+        let full = run(&g_full, vec![Tensor::i32(vec![total], tokens.clone())]);
+        for split in [m.chunk, 2 * m.chunk] {
+            let g_head = build_prefill_serve(&m, split);
+            let head = run(
+                &g_head,
+                vec![Tensor::i32(vec![split], tokens[..split].to_vec())],
+            );
+            let rest = total - split;
+            let g_res = build_prefill_serve_resume(&m, rest);
+            let mut extra = vec![Tensor::i32(vec![rest], tokens[split..].to_vec())];
+            for j in 0..m.n_layers {
+                extra.push(head[1 + 2 * j].clone());
+                extra.push(head[2 + 2 * j].clone());
+            }
+            let res = run(&g_res, extra);
+            for (i, (a, b)) in full.iter().zip(res.iter()).enumerate() {
+                assert_eq!(a.as_f32(), b.as_f32(), "split {split}: output {i} diverges");
+            }
+        }
     }
 
     #[test]

@@ -60,3 +60,12 @@ pub fn build_prefill_batched(m: &ModelShape, b: usize, t: usize) -> Graph {
         .unwrap_or_else(|e| panic!("{e}"))
         .build_prefill_batched(m, b, t)
 }
+
+/// Build the resume serving-prefill graph (per-layer state enters as
+/// inputs; continues a cached snapshot bitwise at the family's resume
+/// grain) for either architecture.
+pub fn build_prefill_resume(m: &ModelShape, t: usize) -> Graph {
+    ServeFamily::from_arch(&m.arch)
+        .unwrap_or_else(|e| panic!("{e}"))
+        .build_prefill_resume(m, t)
+}

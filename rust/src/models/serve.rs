@@ -58,6 +58,57 @@ pub(crate) fn lm_serve_scaffold(
     ctx.g
 }
 
+/// Resume counterpart of [`lm_serve_scaffold`]: the per-layer recurrent
+/// state enters as graph *inputs* instead of starting from zero history,
+/// so the engine can run a long prompt as a sequence of fixed-size chunk
+/// graphs (bounded arena) and continue a prefix-cache snapshot in O(new
+/// tokens). Inputs after the parameters: `tokens` (t,), then per layer
+/// `conv_state{j}` / `ssm_state{j}` (the same per-sequence layouts the
+/// serve-prefill graphs emit). `block` receives the normalized activation
+/// plus that layer's two state inputs and returns `(block_out,
+/// (conv_state_out, ssm_state_out))`; outputs match [`lm_serve_scaffold`]
+/// exactly, so the coordinator unpacks both with one code path.
+pub(crate) fn lm_serve_scaffold_resume(
+    graph_name: &str,
+    m: &ModelShape,
+    t: usize,
+    conv_shape: &[usize],
+    ssm_shape: &[usize],
+    mut block: impl FnMut(&mut Ctx, usize, NodeId, NodeId, NodeId) -> (NodeId, (NodeId, NodeId)),
+) -> Graph {
+    assert!(t >= 1, "resume prefill needs at least one new token");
+    let spec = full_spec(m);
+    let mut ctx = Ctx::new(graph_name, &spec);
+    let tokens = ctx.g.input_i32("tokens", vec![t]);
+    let mut conv_ins: Vec<NodeId> = Vec::with_capacity(m.n_layers);
+    let mut ssm_ins: Vec<NodeId> = Vec::with_capacity(m.n_layers);
+    for j in 0..m.n_layers {
+        conv_ins.push(ctx.g.input(&format!("conv_state{j}"), conv_shape.to_vec()));
+        ssm_ins.push(ctx.g.input(&format!("ssm_state{j}"), ssm_shape.to_vec()));
+    }
+    let emb = ctx.w("emb");
+    let mut x = ctx.g.gather(emb, tokens, "embed");
+    let mut states: Vec<(NodeId, NodeId)> = Vec::with_capacity(m.n_layers);
+    for j in 0..m.n_layers {
+        let norm_w = ctx.w(&format!("l{j}.norm_w"));
+        let xn = ctx.g.rmsnorm(x, norm_w, &format!("l{j}.norm"));
+        let (y, st) = block(&mut ctx, j, xn, conv_ins[j], ssm_ins[j]);
+        states.push(st);
+        x = ctx.g.add(x, y, &format!("l{j}.residual"));
+    }
+    let fw = ctx.w("final_norm_w");
+    let x = ctx.g.rmsnorm(x, fw, "final_norm");
+    let x_last = ctx.g.slice(x, 0, t - 1, 1, "last_pos");
+    let emb_t = ctx.g.transpose(emb, vec![1, 0], "lm_head.wT");
+    let logits = ctx.g.matmul(x_last, emb_t, "lm_head.mm"); // (1, V)
+    ctx.g.output(logits);
+    for (cs, ss) in states {
+        ctx.g.output(cs);
+        ctx.g.output(ss);
+    }
+    ctx.g
+}
+
 /// True-batch counterpart of [`lm_serve_scaffold`]: tokens (b, t) i32 →
 /// logits (b, V) + per-layer batch-stacked `(conv, ssm)` states, the
 /// same I/O layout as the batched decode graphs.
@@ -223,6 +274,36 @@ impl ServeFamily {
         }
     }
 
+    /// Resume-prefill graph: tokens (t,) i32 + per-layer
+    /// `(conv_state, ssm_state)` *inputs* → last-position logits (1, V) +
+    /// per-layer new states (same output layout as
+    /// [`ServeFamily::build_prefill_serve`]). Continues a checkpointed
+    /// state across a chunk boundary: the conv input carries the raw
+    /// pre-conv tail of the last K-1 tokens, the ssm input seeds the
+    /// scan / SSD recurrence, so every resumed position sees exactly the
+    /// values the monolithic graph would have computed.
+    pub fn build_prefill_resume(self, m: &ModelShape, t: usize) -> Graph {
+        match self {
+            ServeFamily::Mamba1 => mamba1::build_prefill_serve_resume(m, t),
+            ServeFamily::Mamba2 => mamba2::build_prefill_serve_resume(m, t),
+        }
+    }
+
+    /// Token grain at which a chunk-boundary checkpoint resumes **bitwise
+    /// identically** to the monolithic prefill. Mamba-1's scan is strictly
+    /// sequential, so any boundary works (grain 1). Mamba-2's SSD
+    /// reassociates within each chunk — splitting mid-chunk changes the
+    /// reduction order — so boundaries must land on multiples of
+    /// `m.chunk`. (Resuming from a decode-produced state is decode-exact
+    /// at ANY offset; the grain only governs bitwise equality with a
+    /// from-scratch prefill.)
+    pub fn resume_chunk_grain(self, m: &ModelShape) -> usize {
+        match self {
+            ServeFamily::Mamba1 => 1,
+            ServeFamily::Mamba2 => m.chunk,
+        }
+    }
+
     /// Batched decode-step graph for bucket `b`: tokens (b,) i32 +
     /// per-layer stacked states → logits (b, V) + new states.
     pub fn build_decode_batched(self, m: &ModelShape, b: usize) -> Graph {
@@ -299,6 +380,48 @@ mod tests {
             assert_eq!(&g.shape(g.outputs[1])[1..], f.conv_state_shape(&m).as_slice());
             assert_eq!(&g.shape(g.outputs[2])[1..], f.ssm_state_shape(&m).as_slice());
         }
+    }
+
+    #[test]
+    fn resume_prefill_io_matches_the_serve_prefill_layout() {
+        // the resume graph's state INPUTS and OUTPUTS must both use the
+        // per-sequence layouts the serve-prefill graph emits, so a
+        // checkpoint round-trips without reshaping
+        let t = 5usize;
+        for m in [presets::tiny_mamba(), presets::tiny_mamba2()] {
+            let f = ServeFamily::from_arch(&m.arch).unwrap();
+            let g = f.build_prefill_resume(&m, t);
+            assert_eq!(g.outputs.len(), 1 + 2 * m.n_layers);
+            assert_eq!(g.shape(g.outputs[0]), &[1, m.vocab_size]);
+            for j in 0..m.n_layers {
+                assert_eq!(
+                    g.shape(g.outputs[1 + 2 * j]),
+                    f.conv_state_shape(&m).as_slice(),
+                    "{} conv out", m.arch
+                );
+                assert_eq!(
+                    g.shape(g.outputs[2 + 2 * j]),
+                    f.ssm_state_shape(&m).as_slice(),
+                    "{} ssm out", m.arch
+                );
+            }
+            // state inputs follow the params + tokens in layer order
+            let n_params = g.inputs.len() - 1 - 2 * m.n_layers;
+            for j in 0..m.n_layers {
+                let conv_in = g.inputs[n_params + 1 + 2 * j];
+                let ssm_in = g.inputs[n_params + 2 + 2 * j];
+                assert_eq!(g.shape(conv_in), f.conv_state_shape(&m).as_slice());
+                assert_eq!(g.shape(ssm_in), f.ssm_state_shape(&m).as_slice());
+            }
+        }
+    }
+
+    #[test]
+    fn resume_grain_is_sequential_for_mamba1_and_chunked_for_mamba2() {
+        let m1 = presets::tiny_mamba();
+        let m2 = presets::tiny_mamba2();
+        assert_eq!(ServeFamily::Mamba1.resume_chunk_grain(&m1), 1);
+        assert_eq!(ServeFamily::Mamba2.resume_chunk_grain(&m2), m2.chunk);
     }
 
     #[test]

@@ -622,6 +622,82 @@ fn intra_op_worker_count_is_bitwise_deterministic_across_dtypes() {
 }
 
 #[test]
+fn resumed_serve_prefill_matches_monolithic_for_both_families_and_dtypes() {
+    // the prefix cache's numeric contract: prefill(prefix) through the
+    // serve graph, then the RESUME graph over the suffix seeded with the
+    // captured per-layer states, must reproduce one monolithic serve
+    // prefill of the whole sequence bitwise — logits and every state —
+    // at f32 AND f16 (weights quantized, state inputs stay f32). The
+    // mamba-2 split sits on an SSD chunk boundary (its resume grain);
+    // mamba-1 splits anywhere. The resume graph is also held to
+    // planned-vs-naive parity like every other serving graph.
+    use xamba::graph::DType;
+    use xamba::models::params::full_spec;
+    use xamba::passes::quantize::{plan_weight_dtypes, quantize_graph};
+
+    let mut rng = Prng::new(0x2E5_37E);
+    for (shape, k, t) in
+        [(nano_shape("mamba"), 5usize, 12usize), (nano_shape("mamba2"), 8, 16)]
+    {
+        let label = shape.name.clone();
+        let full_g = xamba::models::build_prefill_serve(&shape, t);
+        let part_g = xamba::models::build_prefill_serve(&shape, k);
+        let res_g = xamba::models::build_prefill_resume(&shape, t - k);
+        check_graph(&res_g, &format!("{label} resume-prefill"), &mut rng);
+
+        let spec = full_spec(&shape);
+        let n_weights = spec.entries.len();
+        let weights = rng.range_vec(spec.total(), -0.1, 0.1);
+        let params = xamba::quality::param_inputs(&spec, &weights);
+        let tokens: Vec<i32> =
+            (0..t).map(|i| ((i * 11 + 3) % shape.vocab_size) as i32).collect();
+
+        for dtype in [DType::F32, DType::F16] {
+            let dlabel = format!("{label} {}", dtype.name());
+            // quantize each graph with its own structural weight plan;
+            // state inputs sit past the weight prefix and stay f32
+            let prep = |g: &Graph| -> (Graph, Vec<Tensor>) {
+                if dtype == DType::F32 {
+                    return (g.clone(), params.clone());
+                }
+                let wd = plan_weight_dtypes(g, n_weights, dtype);
+                let qg = quantize_graph(g, dtype, &wd)
+                    .unwrap_or_else(|e| panic!("{dlabel}: quantize: {e}"));
+                let qparams = params
+                    .iter()
+                    .zip(&wd)
+                    .map(|(p, &d)| if p.dtype() == d { p.clone() } else { p.to_dtype(d) })
+                    .collect();
+                (qg, qparams)
+            };
+            let (full_q, full_params) = prep(&full_g);
+            let (part_q, part_params) = prep(&part_g);
+            let (res_q, res_params) = prep(&res_g);
+
+            let mut inputs = full_params;
+            inputs.push(Tensor::i32(vec![t], tokens.clone()));
+            let want = xamba::exec::run_once(&full_q, &inputs)
+                .unwrap_or_else(|e| panic!("{dlabel} monolithic: {e}"));
+
+            let mut inputs = part_params;
+            inputs.push(Tensor::i32(vec![k], tokens[..k].to_vec()));
+            let part = xamba::exec::run_once(&part_q, &inputs)
+                .unwrap_or_else(|e| panic!("{dlabel} prefix: {e}"));
+
+            let mut inputs = res_params;
+            inputs.push(Tensor::i32(vec![t - k], tokens[k..].to_vec()));
+            for j in 0..shape.n_layers {
+                inputs.push(part[1 + 2 * j].clone());
+                inputs.push(part[2 + 2 * j].clone());
+            }
+            let got = xamba::exec::run_once(&res_q, &inputs)
+                .unwrap_or_else(|e| panic!("{dlabel} resume: {e}"));
+            assert_bitwise(&format!("{dlabel} resume-vs-monolithic"), &want, &got);
+        }
+    }
+}
+
+#[test]
 fn serve_and_decode_graphs_match_naive_for_both_families() {
     // the planned serving path's graphs — serve prefill (last-position
     // logits + per-layer state outputs) and per-bucket batched decode —
