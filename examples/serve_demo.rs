@@ -54,6 +54,7 @@ fn run_variant(model: &str, variant: &str, n_requests: usize, rate: f64) {
                         temperature: 0.0,
                         stop_byte: Some(b'.'),
                         seed: c * 1000 + i as u64,
+                        ..Default::default()
                     },
                 );
                 if let Ok(r) = rx.recv_timeout(Duration::from_secs(120)) {

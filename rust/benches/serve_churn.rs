@@ -1,0 +1,254 @@
+//! Mixed-length churn bench for the token-budget continuous-batching
+//! scheduler: short and long prompts keep arriving while decodes drain.
+//!
+//! Two claims get numbers (and correctness gates) here:
+//!
+//! * **Occupancy**: on the SAME deterministic arrival/length workload, a
+//!   continuous decode batch (every live sequence advances each step,
+//!   remapped onto the compiled buckets) sustains strictly higher mean
+//!   decode-batch occupancy than the old fixed-bucket policy (one
+//!   `plan()`-selected bucket per step, everyone else waits). The
+//!   policy simulation is exact arithmetic — asserted, not eyeballed.
+//! * **Remap, not recompile**: a real planned-backend server under
+//!   membership churn (staggered arrivals, mixed prompt lengths, mixed
+//!   decode maxima) keeps its plan-compile gauge FLAT after warmup —
+//!   mid-flight membership changes never compile a new plan.
+//!
+//! Run: `cargo bench --bench serve_churn`
+//!
+//! CI (`bench-smoke`) runs it with `XAMBA_BENCH_QUICK=1` and
+//! `XAMBA_BENCH_JSON=...`, appending churn throughput and TTFT p95 to
+//! the artifact `xamba bench-check` gates against the committed
+//! baseline.
+
+use std::time::{Duration, Instant};
+
+use xamba::config::{ModelShape, ServeConfig};
+use xamba::coordinator::batcher::plan;
+use xamba::coordinator::{
+    FinishReason, GenParams, PlannedServeModel, ServeModel, Server,
+};
+use xamba::util::{bench, Table};
+
+/// Small block shapes: the subject is scheduling, not GEMM throughput.
+fn nano() -> ModelShape {
+    ModelShape {
+        name: "nano-mamba".into(),
+        arch: "mamba".into(),
+        vocab_size: 256,
+        d_model: 32,
+        n_layers: 2,
+        d_state: 8,
+        d_conv: 3,
+        expand: 2,
+        dt_rank: 4,
+        headdim: 16,
+        chunk: 8,
+    }
+}
+
+/// One scheduling policy step over the simulated workload state:
+/// `advance` sequences decrement their remaining decode tokens, done
+/// sequences leave, queued arrivals fill free slots.
+struct Workload {
+    /// (arrival_step, decode_tokens) per request, arrival-ordered.
+    arrivals: Vec<(usize, usize)>,
+}
+
+impl Workload {
+    /// Ragged mixed-length traffic: arrivals trickle in while earlier
+    /// sequences drain, decode lengths vary 3..18.
+    fn mixed(n: usize) -> Workload {
+        Workload {
+            arrivals: (0..n).map(|i| (i / 2, 3 + (i * 5) % 16)).collect(),
+        }
+    }
+
+    /// Run the workload to completion under a per-step advance policy
+    /// (given the live count, how many sequences advance this step) and
+    /// return mean advanced-per-step — decode-batch occupancy.
+    fn occupancy(&self, slots: usize, advance: impl Fn(usize) -> usize) -> f64 {
+        let mut queued: std::collections::VecDeque<usize> =
+            std::collections::VecDeque::new();
+        let mut active: Vec<usize> = Vec::new();
+        let mut next_arrival = 0usize;
+        let mut step = 0usize;
+        let mut advanced_total = 0usize;
+        let mut steps = 0usize;
+        let mut rr = 0usize;
+        while next_arrival < self.arrivals.len() || !active.is_empty() || !queued.is_empty()
+        {
+            while next_arrival < self.arrivals.len()
+                && self.arrivals[next_arrival].0 <= step
+            {
+                queued.push_back(self.arrivals[next_arrival].1);
+                next_arrival += 1;
+            }
+            while active.len() < slots {
+                match queued.pop_front() {
+                    Some(r) => active.push(r),
+                    None => break,
+                }
+            }
+            if !active.is_empty() {
+                let k = advance(active.len()).min(active.len());
+                if k > 0 {
+                    for j in 0..k {
+                        let i = (rr + j) % active.len();
+                        active[i] -= 1;
+                    }
+                    rr = if active.is_empty() { 0 } else { (rr + k) % active.len() };
+                    active.retain(|&r| r > 0);
+                    advanced_total += k;
+                    steps += 1;
+                }
+            }
+            step += 1;
+        }
+        if steps == 0 {
+            0.0
+        } else {
+            advanced_total as f64 / steps as f64
+        }
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx]
+}
+
+fn main() {
+    let quick = bench::quick_mode();
+    let buckets = [1usize, 2, 4, 8];
+    let slots = 8usize;
+
+    // --- policy simulation: fixed-bucket vs continuous occupancy -------
+    let wl = Workload::mixed(if quick { 24 } else { 48 });
+    let fixed_occ = wl.occupancy(slots, |n| plan(&buckets, n).bucket);
+    let cont_occ = wl.occupancy(slots, |n| n);
+    assert!(
+        cont_occ > fixed_occ,
+        "continuous batching must beat the fixed-bucket loop's occupancy \
+         ({cont_occ:.3} vs {fixed_occ:.3})"
+    );
+    let mut sim = Table::new(&["policy", "mean decode occupancy"])
+        .with_title("serve_churn: scheduling policy occupancy (exact simulation)");
+    sim.row(&["fixed bucket (plan/select)".into(), format!("{fixed_occ:.3}")]);
+    sim.row(&["continuous (decode_any remap)".into(), format!("{cont_occ:.3}")]);
+    println!("{sim}");
+
+    // --- real server churn on the planned backend ----------------------
+    let shape = nano();
+    let window = 8usize;
+    let weights = PlannedServeModel::random_weights(&shape, 42);
+    let cfg = ServeConfig {
+        max_slots: slots,
+        queue_cap: 64,
+        batch_wait_us: 100,
+        prefill_window: window,
+        // the compile gauge must be deterministic: the prefix tier's
+        // resume plan would otherwise compile lazily on its first hit
+        prefix_cache_mb: 0,
+        ..Default::default()
+    };
+    let decode_buckets = [1usize, 2, 4];
+    let server = Server::start(
+        move || {
+            Ok(Box::new(PlannedServeModel::new(
+                &shape,
+                &weights,
+                window,
+                &decode_buckets,
+                2,
+                "baseline",
+            )?) as Box<dyn ServeModel>)
+        },
+        cfg,
+    )
+    .expect("start churn server");
+
+    // mixed prompt lengths (distinct prefill length-classes); warmup
+    // compiles each class once so the churn phase runs fully warm
+    let prompts: [&[u8]; 3] = [b"abc", b"abcdef", b"abcdefgh"];
+    for p in prompts {
+        let rx = server.submit(p, GenParams { max_new_tokens: 4, ..Default::default() });
+        let r = rx.recv_timeout(Duration::from_secs(120)).expect("warmup");
+        assert_eq!(r.finish, FinishReason::Length);
+    }
+    // overlap a pair so the multi-sequence decode buckets execute too
+    let pair: Vec<_> = (0..2)
+        .map(|_| {
+            server.submit(
+                b"abcdef",
+                GenParams { max_new_tokens: 6, ..Default::default() },
+            )
+        })
+        .collect();
+    for rx in pair {
+        rx.recv_timeout(Duration::from_secs(120)).expect("warmup pair");
+    }
+    let warm = server.metrics();
+    assert!(warm.plan_compiles > 0, "compile gauge never exported");
+
+    // churn: waves of mixed-length, mixed-max_new requests arriving
+    // while earlier decodes drain
+    let waves = if quick { 3 } else { 8 };
+    let per_wave = if quick { 4 } else { 6 };
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for w in 0..waves {
+        for i in 0..per_wave {
+            let p = prompts[(w + i) % prompts.len()];
+            rxs.push(server.submit(
+                p,
+                GenParams { max_new_tokens: 3 + (w * per_wave + i) % 10, ..Default::default() },
+            ));
+        }
+        // stagger waves so membership churns mid-decode
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let mut ttfts_ms: Vec<f64> = Vec::new();
+    let mut tokens = 0usize;
+    for rx in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(300)).expect("churn response");
+        assert_eq!(r.finish, FinishReason::Length);
+        tokens += r.generated.len();
+        ttfts_ms.push(r.ttft_us / 1e3);
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let m = server.shutdown();
+    assert_eq!(
+        m.plan_compiles, warm.plan_compiles,
+        "membership churn recompiled a plan ({} -> {})",
+        warm.plan_compiles, m.plan_compiles
+    );
+
+    ttfts_ms.sort_by(|a, b| a.total_cmp(b));
+    let tok_per_s = tokens as f64 / elapsed;
+    let p95 = percentile(&ttfts_ms, 0.95);
+    let mut table = Table::new(&["metric", "value"])
+        .with_title("serve_churn: planned-backend mixed-length churn");
+    table.row(&["requests".into(), format!("{}", waves * per_wave)]);
+    table.row(&["tokens out".into(), tokens.to_string()]);
+    table.row(&["throughput".into(), format!("{tok_per_s:.1} tok/s")]);
+    table.row(&["ttft p95".into(), format!("{p95:.1} ms")]);
+    table.row(&["mean decode occupancy".into(), format!("{:.2}", m.mean_decode_batch())]);
+    table.row(&["decode slot utilization".into(), format!("{:.2}", m.decode_slot_utilization())]);
+    table.row(&["plan compiles (flat)".into(), m.plan_compiles.to_string()]);
+    println!("{table}");
+
+    if let Some(path) = bench::metrics_path() {
+        bench::record(
+            &path,
+            &[
+                ("serve_churn_tok_per_s".to_string(), tok_per_s),
+                ("serve_churn_ttft_p95_ms".to_string(), p95),
+            ],
+        )
+        .expect("record bench metrics");
+    }
+}

@@ -49,6 +49,8 @@ COMMANDS:
             [--window 32] [--workers 0] [--buckets 1,2,4,8]
             [--prefill-buckets 1,2,4,8] [--steal-chunk 0]
             [--prefix-cache-mb 32] [--prefill-chunk 0]
+            [--max-batch-total-tokens 0] [--waiting-served-ratio 0.0]
+            [--deadline-ms 0]
             [--max-new 48] [--temperature 0.0]
             reads prompts from stdin (one per line), prints completions;
             the default planned backend serves BOTH model families
@@ -63,7 +65,13 @@ COMMANDS:
             --prefix-cache-mb budgets the cross-request prefix cache
             (finished states resume follow-up turns in O(new tokens);
             0 disables); --prefill-chunk streams long prompts through
-            fixed-size chunk graphs with bounded arena memory (0 = off)
+            fixed-size chunk graphs with bounded arena memory (0 = off);
+            --max-batch-total-tokens caps the token budget (prompt +
+            max-new headroom) held by live sequences (0 = unbounded),
+            --waiting-served-ratio defers admission until the queue is
+            that many times the running batch (0 = admit eagerly), and
+            --deadline-ms finishes requests as DeadlineExceeded past a
+            wall-clock deadline (0 = none)
   profile   --model block130m-mamba2 [--t 4] [--passes cumba,reduba,actiba]
             [--config FILE] [--pipelined] [--energy]
             simulated-NPU per-op latency breakdown
@@ -142,6 +150,19 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     }
     if let Some(v) = args.get_usize("prefill-chunk") {
         cfg.prefill_chunk = v;
+    }
+    // scheduler knobs apply to BOTH backends: they shape the engine
+    // loop's admission policy, not the executor
+    if let Some(v) = args.get_usize("max-batch-total-tokens") {
+        cfg.max_batch_total_tokens = v;
+    }
+    if let Some(v) = args.get("waiting-served-ratio") {
+        cfg.waiting_served_ratio = v
+            .parse::<f64>()
+            .map_err(|_| format!("--waiting-served-ratio: {v:?} is not a ratio"))?;
+    }
+    if let Some(v) = args.get_usize("deadline-ms") {
+        cfg.deadline_ms = v as u64;
     }
     if cfg.backend == "pjrt" {
         for flag in [

@@ -237,6 +237,22 @@ pub struct ServeConfig {
     /// with bounded arena memory, checkpointing state at chunk
     /// boundaries. 0 = off (long prompts truncate to the window).
     pub prefill_chunk: usize,
+    /// Token budget of the continuous-batching scheduler: the sum over
+    /// resident sequences of (encoded prompt tokens + max_new_tokens
+    /// headroom) never exceeds this. Requests whose own cost exceeds it
+    /// are rejected at admission. 0 = unbounded (slots are the only
+    /// residency limit).
+    pub max_batch_total_tokens: usize,
+    /// Admission policy knob: while sequences are decoding, a prefill
+    /// round is deferred until `waiting >= ratio * active` — larger
+    /// values favor decode latency of the running batch over TTFT of
+    /// the queue. 0.0 = admit eagerly whenever slots and budget allow.
+    pub waiting_served_ratio: f64,
+    /// Default per-request deadline in milliseconds from arrival
+    /// (requests may override via `GenParams::deadline_ms`); past it the
+    /// scheduler finishes the request as DeadlineExceeded and frees its
+    /// budget. 0 = no deadline.
+    pub deadline_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -259,6 +275,9 @@ impl Default for ServeConfig {
             weights_path: String::new(),
             prefix_cache_mb: 32,
             prefill_chunk: 0,
+            max_batch_total_tokens: 0,
+            waiting_served_ratio: 0.0,
+            deadline_ms: 0,
         }
     }
 }
@@ -330,6 +349,13 @@ impl ServeConfig {
                     .into(),
             );
         }
+        if !self.waiting_served_ratio.is_finite() || self.waiting_served_ratio < 0.0 {
+            return Err(format!(
+                "serve waiting_served_ratio must be a finite ratio >= 0 \
+                 (got {})",
+                self.waiting_served_ratio
+            ));
+        }
         Ok(())
     }
 
@@ -379,6 +405,14 @@ impl ServeConfig {
             prefill_chunk: doc
                 .i64_or(&k("prefill_chunk"), d.prefill_chunk as i64)
                 .max(0) as usize,
+            max_batch_total_tokens: doc
+                .i64_or(&k("max_batch_total_tokens"), d.max_batch_total_tokens as i64)
+                .max(0) as usize,
+            waiting_served_ratio: doc
+                .f64_or(&k("waiting_served_ratio"), d.waiting_served_ratio)
+                .max(0.0),
+            deadline_ms: doc.i64_or(&k("deadline_ms"), d.deadline_ms as i64).max(0)
+                as u64,
         }
     }
 }
@@ -438,6 +472,45 @@ mod tests {
         let c = ServeConfig::from_doc(&doc, "serve");
         assert_eq!(c.prefix_cache_mb, 0);
         assert_eq!(c.prefill_chunk, 0);
+    }
+
+    #[test]
+    fn serve_from_doc_parses_scheduler_knobs() {
+        let doc = TomlDoc::parse(
+            "[serve]\nmax_batch_total_tokens = 4096\n\
+             waiting_served_ratio = 1.5\ndeadline_ms = 250\n",
+        )
+        .unwrap();
+        let c = ServeConfig::from_doc(&doc, "serve");
+        assert_eq!(c.max_batch_total_tokens, 4096);
+        assert!((c.waiting_served_ratio - 1.5).abs() < 1e-12);
+        assert_eq!(c.deadline_ms, 250);
+        // defaults: unbounded budget, eager admission, no deadline
+        let d = ServeConfig::default();
+        assert_eq!(d.max_batch_total_tokens, 0);
+        assert_eq!(d.waiting_served_ratio, 0.0);
+        assert_eq!(d.deadline_ms, 0);
+        // negatives clamp instead of wrapping
+        let doc = TomlDoc::parse(
+            "[serve]\nmax_batch_total_tokens = -1\n\
+             waiting_served_ratio = -0.5\ndeadline_ms = -7\n",
+        )
+        .unwrap();
+        let c = ServeConfig::from_doc(&doc, "serve");
+        assert_eq!(c.max_batch_total_tokens, 0);
+        assert_eq!(c.waiting_served_ratio, 0.0);
+        assert_eq!(c.deadline_ms, 0);
+    }
+
+    #[test]
+    fn validate_flags_bad_waiting_served_ratio() {
+        for bad in [f64::NAN, f64::INFINITY, -1.0] {
+            let c = ServeConfig { waiting_served_ratio: bad, ..Default::default() };
+            let msg = c.validate().unwrap_err();
+            assert!(msg.contains("waiting_served_ratio"), "{msg}");
+        }
+        let ok = ServeConfig { waiting_served_ratio: 2.0, ..Default::default() };
+        assert_eq!(ok.validate(), Ok(()));
     }
 
     #[test]

@@ -9,9 +9,17 @@ use crate::util::{LatencyHistogram, Table};
 pub struct Metrics {
     pub started: Instant,
     pub admitted: u64,
+    /// Requests rejected as unschedulable (token cost beyond the whole
+    /// `max_batch_total_tokens` budget).
     pub rejected: u64,
+    /// Requests turned away by queue backpressure (FinishReason::Overloaded).
+    pub overloaded: u64,
     pub cancelled: u64,
-    /// Requests ended by a backend decode failure (FinishReason::Failed).
+    /// Requests (waiting or decoding) cut off by their wall-clock
+    /// deadline (FinishReason::DeadlineExceeded).
+    pub deadline_expired: u64,
+    /// Requests ended by a backend prefill/decode failure
+    /// (FinishReason::Failed).
     pub failed: u64,
     pub completed: u64,
     pub tokens_out: u64,
@@ -22,6 +30,15 @@ pub struct Metrics {
     pub prefill_batched_seqs: u64,
     pub decode_calls: u64,
     pub decode_batched_seqs: u64,
+    /// Pad slots executed by the decode batch remap (a non-bucket batch
+    /// rounds its remainder up to the smallest compiled bucket).
+    pub decode_padded_slots: u64,
+    /// High-water mark of scheduler token-budget usage (prompt tokens +
+    /// max_new_tokens headroom held by resident sequences).
+    pub budget_peak: u64,
+    /// Compiled-plan count of the backend (gauge; flat after warmup =
+    /// membership churn never recompiled anything).
+    pub plan_compiles: u64,
     /// Prefix-cache lookups that found a usable cached prefix.
     pub prefix_hits: u64,
     /// Prefix-cache lookups that found nothing to resume.
@@ -50,7 +67,9 @@ impl Default for Metrics {
             started: Instant::now(),
             admitted: 0,
             rejected: 0,
+            overloaded: 0,
             cancelled: 0,
+            deadline_expired: 0,
             failed: 0,
             completed: 0,
             tokens_out: 0,
@@ -59,6 +78,9 @@ impl Default for Metrics {
             prefill_batched_seqs: 0,
             decode_calls: 0,
             decode_batched_seqs: 0,
+            decode_padded_slots: 0,
+            budget_peak: 0,
+            plan_compiles: 0,
             prefix_hits: 0,
             prefix_misses: 0,
             prefix_evicted: 0,
@@ -104,6 +126,18 @@ impl Metrics {
         }
     }
 
+    /// Real-sequence fraction of executed decode slots: 1.0 means every
+    /// slot of every compiled bucket run carried a live sequence (no
+    /// remap padding).
+    pub fn decode_slot_utilization(&self) -> f64 {
+        let total = self.decode_batched_seqs + self.decode_padded_slots;
+        if total == 0 {
+            0.0
+        } else {
+            self.decode_batched_seqs as f64 / total as f64
+        }
+    }
+
     /// Fraction of prefix-cache lookups that resumed a cached state.
     pub fn prefix_hit_rate(&self) -> f64 {
         let total = self.prefix_hits + self.prefix_misses;
@@ -141,9 +175,12 @@ impl Metrics {
         let rows = [
             ("admitted", format!("{}", self.admitted)),
             ("rejected", format!("{}", self.rejected)),
+            ("overloaded", format!("{}", self.overloaded)),
             ("cancelled", format!("{}", self.cancelled)),
+            ("deadline expired", format!("{}", self.deadline_expired)),
             ("failed", format!("{}", self.failed)),
             ("completed", format!("{}", self.completed)),
+            ("budget peak", format!("{}", self.budget_peak)),
             ("tokens out", format!("{}", self.tokens_out)),
             ("tokens/s", format!("{:.1}", self.tokens_per_s())),
             ("prefills", format!("{}", self.prefills)),
@@ -166,6 +203,12 @@ impl Metrics {
             ),
             ("decode calls", format!("{}", self.decode_calls)),
             ("mean batch", format!("{:.2}", self.mean_decode_batch())),
+            ("padded decode slots", format!("{}", self.decode_padded_slots)),
+            (
+                "decode slot utilization",
+                format!("{:.2}", self.decode_slot_utilization()),
+            ),
+            ("plan compiles", format!("{}", self.plan_compiles)),
             ("TTFT p50", format!("{:.2} ms", ttft_p50 / 1e3)),
             ("TTFT p95", format!("{:.2} ms", ttft_p95 / 1e3)),
             ("TTFT p99", format!("{:.2} ms", ttft_p99 / 1e3)),
@@ -206,6 +249,22 @@ mod tests {
         assert!(s.contains("TTFT p95"));
         assert!(s.contains("decode batch p95"));
         assert!(s.contains("mean prefill batch"));
+        assert!(s.contains("overloaded"));
+        assert!(s.contains("deadline expired"));
+        assert!(s.contains("budget peak"));
+        assert!(s.contains("padded decode slots"));
+        assert!(s.contains("plan compiles"));
+    }
+
+    #[test]
+    fn decode_slot_utilization_math() {
+        let mut m = Metrics::default();
+        assert_eq!(m.decode_slot_utilization(), 0.0);
+        m.decode_batched_seqs = 9;
+        m.decode_padded_slots = 3;
+        assert!((m.decode_slot_utilization() - 0.75).abs() < 1e-12);
+        m.decode_padded_slots = 0;
+        assert_eq!(m.decode_slot_utilization(), 1.0);
     }
 
     #[test]

@@ -2,11 +2,13 @@
 //!
 //! A thread-based engine loop (no async runtime is vendored; SSM decode is
 //! compute-bound anyway) that drives the AOT PJRT executables: byte-level
-//! tokenizer with fixed-window prefill (paper Step-1 static shapes),
-//! admission queue with backpressure, SSM state-slot cache (the O(1)
-//! "KV cache"), bucketed dynamic batcher (largest compiled batch that
-//! fills), and serving metrics (TTFT / e2e / per-token histograms,
-//! Tokens/s — the paper's §4 KPI).
+//! tokenizer with fixed-window prefill (paper Step-1 static shapes), a
+//! token-budget continuous-batching scheduler (admission on
+//! `max_batch_total_tokens` with explicit Overloaded backpressure,
+//! per-request deadlines, mid-flight batch membership remapped onto the
+//! compiled buckets), SSM state-slot cache (the O(1) "KV cache"), and
+//! serving metrics (TTFT / e2e / per-token histograms, Tokens/s — the
+//! paper's §4 KPI).
 
 pub mod batcher;
 pub mod metrics;

@@ -61,6 +61,82 @@ pub trait ServeModel {
     /// Advance `seqs.len()` sequences one token (len must be a bucket).
     /// Returns per-sequence logits; states are updated in place.
     fn decode(&mut self, seqs: &mut [(&mut SeqState, i32)]) -> Result<Vec<Vec<f32>>>;
+    /// Advance ANY number of sequences one step by scatter/gathering the
+    /// batch over the compiled decode buckets: greedily run the largest
+    /// bucket that fits the remainder; a final remainder no bucket
+    /// matches exactly is padded up to the smallest sufficient bucket
+    /// with clones of its first real row. Duplicated rows never change a
+    /// per-tensor max-abs, so the padding is scale-neutral even for i8
+    /// dynamic activation scales, and per-sequence bucket-independence
+    /// (pinned by the planned differential suites) makes the pad rows
+    /// numerically invisible to the real ones. Only the real rows'
+    /// logits are gathered back. Returns (per-sequence logits, pad slots
+    /// executed). Membership churn therefore never needs a plan the
+    /// backend didn't already compile.
+    fn decode_any(
+        &mut self,
+        seqs: &mut [(&mut SeqState, i32)],
+    ) -> Result<(Vec<Vec<f32>>, usize)> {
+        let b = seqs.len();
+        if b == 0 {
+            return Ok((Vec::new(), 0));
+        }
+        let buckets = self.decode_buckets().to_vec();
+        if buckets.contains(&b) {
+            return Ok((self.decode(seqs)?, 0));
+        }
+        let mut logits = Vec::with_capacity(b);
+        let mut padded = 0usize;
+        let mut off = 0usize;
+        while off < b {
+            let remaining = b - off;
+            if let Some(c) =
+                buckets.iter().copied().filter(|&c| c <= remaining).max()
+            {
+                let mut part: Vec<(&mut SeqState, i32)> = seqs
+                    [off..off + c]
+                    .iter_mut()
+                    .map(|(s, t)| (&mut **s, *t))
+                    .collect();
+                logits.extend(self.decode(&mut part)?);
+                off += c;
+            } else {
+                let c = buckets
+                    .iter()
+                    .copied()
+                    .filter(|&c| c >= remaining)
+                    .min()
+                    .ok_or_else(|| {
+                        anyhow!(
+                            "no decode bucket covers a remainder of {remaining} \
+                             (buckets {buckets:?})"
+                        )
+                    })?;
+                let (pad_state, pad_tok) = {
+                    let (s, t) = &seqs[off];
+                    ((**s).clone(), *t)
+                };
+                let mut pad_states: Vec<SeqState> =
+                    vec![pad_state; c - remaining];
+                let mut part: Vec<(&mut SeqState, i32)> = seqs[off..]
+                    .iter_mut()
+                    .map(|(s, t)| (&mut **s, *t))
+                    .collect();
+                part.extend(pad_states.iter_mut().map(|s| (s, pad_tok)));
+                let out = self.decode(&mut part)?;
+                logits.extend(out.into_iter().take(remaining));
+                padded += c - remaining;
+                off = b;
+            }
+        }
+        Ok((logits, padded))
+    }
+    /// Compiled-plan count of this backend (0 when the notion does not
+    /// apply). The scheduler exports it as a gauge so tests and benches
+    /// can assert that membership churn never triggers a recompile.
+    fn plan_compiles(&self) -> usize {
+        0
+    }
     /// Token grain at which chunked / resumed prefill stays bitwise
     /// identical to a monolithic prefill of the same sequence (mamba-1:
     /// every position; mamba-2: SSD chunk boundaries). 0 = this backend
@@ -847,6 +923,13 @@ impl ServeModel for PlannedServeModel {
         &self.prefill_buckets
     }
 
+    /// Main-thread plan-cache compile count (workers warm their own
+    /// caches at construction and the batch remap only runs compiled
+    /// buckets, so a flat gauge means churn never recompiled anything).
+    fn plan_compiles(&self) -> usize {
+        self.cache.compile_count()
+    }
+
     /// mamba-1 carries the conv tail across any boundary (grain 1);
     /// mamba-2 is bitwise-stable only at SSD chunk boundaries. i8
     /// reports 0: its dynamic per-tensor activation scales depend on
@@ -1299,6 +1382,64 @@ mod tests {
             .0;
         assert_eq!(argmax2, 9);
         assert_eq!(m.batch_log, vec![1]);
+    }
+
+    fn amax(l: &[f32]) -> usize {
+        l.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0
+    }
+
+    #[test]
+    fn decode_any_remaps_non_bucket_batches_onto_compiled_buckets() {
+        // buckets [2, 4] — no bucket 1 or 3, so both the chunk walk and
+        // the pad-up remainder path are exercised. The mock ERRORS on
+        // non-bucket batch sizes, so passing proves the remap only ever
+        // issues compiled sizes.
+        let mut m = MockModel::new(4, 256, vec![2, 4]);
+        let mut states = Vec::new();
+        for t in [10i32, 20, 30] {
+            states.push(m.prefill(&[t]).unwrap().1);
+        }
+        let mut seqs: Vec<(&mut SeqState, i32)> =
+            states.iter_mut().zip([10i32, 20, 30]).collect();
+        let (logits, padded) = m.decode_any(&mut seqs).unwrap();
+        drop(seqs);
+        assert_eq!(logits.len(), 3, "one logit row per REAL sequence");
+        assert_eq!(padded, 1, "remainder 1 pads up to bucket 2");
+        assert_eq!(m.batch_log, vec![2, 2], "chunk 2 + padded remainder 2");
+        for (l, want) in logits.iter().zip([11usize, 21, 31]) {
+            assert_eq!(amax(l), want);
+        }
+        // every real state advanced exactly one step
+        for (s, t) in states.iter().zip([10.0f32, 20.0, 30.0]) {
+            assert_eq!(s.conv.f32_data(), &[t]);
+        }
+    }
+
+    #[test]
+    fn decode_any_exact_bucket_and_greedy_decomposition() {
+        let mut m = MockModel::new(4, 256, vec![1, 2, 4]);
+        let toks: Vec<i32> = (0..7).map(|i| 10 + i).collect();
+        let mut states: Vec<SeqState> =
+            toks.iter().map(|&t| m.prefill(&[t]).unwrap().1).collect();
+        // exact bucket: one call, zero padding
+        {
+            let mut seqs: Vec<(&mut SeqState, i32)> =
+                states.iter_mut().zip(toks.iter().copied()).take(4).collect();
+            let (l, padded) = m.decode_any(&mut seqs).unwrap();
+            assert_eq!((l.len(), padded), (4, 0));
+        }
+        assert_eq!(m.batch_log, vec![4]);
+        m.batch_log.clear();
+        // 7 = greedy [4, 2, 1], nothing padded (bucket 1 exists)
+        let mut seqs: Vec<(&mut SeqState, i32)> =
+            states.iter_mut().zip(toks.iter().copied()).collect();
+        let (l, padded) = m.decode_any(&mut seqs).unwrap();
+        drop(seqs);
+        assert_eq!((l.len(), padded), (7, 0));
+        assert_eq!(m.batch_log, vec![4, 2, 1]);
+        // empty batch is a no-op
+        let mut none: Vec<(&mut SeqState, i32)> = Vec::new();
+        assert_eq!(m.decode_any(&mut none).unwrap(), (Vec::new(), 0));
     }
 
     #[test]

@@ -1,11 +1,19 @@
-//! The serving engine loop: admission -> prefill -> bucketed batched
-//! decode -> completion, on a dedicated worker thread.
+//! The serving engine loop: token-budget continuous batching on a
+//! dedicated worker thread.
 //!
 //! Python never appears here (XAMBA's Step-1 promise): the loop drives
 //! pre-compiled PJRT executables (or a mock in tests) with plain channels
-//! for ingress/egress. Prefill is prioritized whenever a state slot is
-//! free (new requests reach their first token fast); otherwise all
-//! decodable sequences advance one step in the largest compiled bucket.
+//! for ingress/egress. Admission is governed by a token budget
+//! (`max_batch_total_tokens`: encoded prompt tokens + `max_new_tokens`
+//! headroom per request) under a `waiting_served_ratio` policy; the
+//! decode batch is CONTINUOUS — finished/cancelled/expired sequences
+//! leave it the same step they end and newly prefilled ones join between
+//! steps — while the compiled bucket plans stay the only execution
+//! targets: [`ServeModel::decode_any`] scatter/gathers whatever the live
+//! membership is onto them, so membership churn never recompiles.
+//! Per-request deadlines, immediate budget release on cancellation, and
+//! an explicit [`FinishReason::Overloaded`] under queue saturation round
+//! out the control plane.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -17,9 +25,9 @@ use anyhow::Result;
 use crate::config::ServeConfig;
 use crate::util::Prng;
 
-use super::batcher::{plan, RoundRobin};
+use super::batcher::plan;
 use super::metrics::Metrics;
-use super::model::ServeModel;
+use super::model::{SeqState, ServeModel};
 use super::request::{FinishReason, GenParams, Request, RequestId, Response, StreamEvent};
 use super::state_cache::{SlotId, StateCache};
 use super::tokenizer::Tokenizer;
@@ -56,6 +64,16 @@ enum Msg {
     Shutdown,
 }
 
+/// A request that passed admission control and is queued for prefill.
+struct Pending {
+    req: Request,
+    reply: Reply,
+    /// Token cost held against the batch budget while the sequence is
+    /// live: encoded prompt length + `max_new_tokens` headroom.
+    cost: usize,
+    deadline: Option<Instant>,
+}
+
 struct ActiveSeq {
     id: RequestId,
     slot: SlotId,
@@ -71,6 +89,34 @@ struct ActiveSeq {
     reply: Reply,
     rng: Prng,
     batch_trace: Vec<usize>,
+    /// Budget charge held until this sequence exits the batch.
+    cost: usize,
+    deadline: Option<Instant>,
+}
+
+impl ActiveSeq {
+    /// Deliver the final response and consume the sequence; returns the
+    /// end-to-end latency (µs) for the caller's metrics.
+    fn finish(self, finish: FinishReason) -> f64 {
+        let e2e = Instant::now().duration_since(self.arrived).as_micros() as f64;
+        self.reply.finish(Response {
+            id: self.id,
+            prompt: self.prompt,
+            generated: self
+                .generated
+                .iter()
+                .map(|&t| t.clamp(0, 255) as u8)
+                .collect(),
+            finish,
+            ttft_us: self
+                .first_token_at
+                .duration_since(self.arrived)
+                .as_micros() as f64,
+            e2e_us: e2e,
+            batch_trace: self.batch_trace,
+        });
+        e2e
+    }
 }
 
 /// Handle to a running server; dropping it (after `shutdown`) joins the
@@ -140,7 +186,7 @@ impl Server {
 
     /// Submit a prompt for STREAMING delivery: every sampled byte arrives
     /// as `StreamEvent::Token` immediately; dropping the receiver cancels
-    /// the request at the next decode step (slot reclaimed).
+    /// the request at the next decode step (slot and budget reclaimed).
     pub fn submit_streaming(
         &self,
         prompt: &[u8],
@@ -177,19 +223,35 @@ impl Drop for Server {
 }
 
 /// Sample a token from logits: greedy at temperature 0, else softmax.
+///
+/// NaN-proof: NaN logits are skipped in the argmax (`total_cmp` would
+/// sort them ABOVE every real value), and a non-finite softmax mass
+/// falls back to the greedy pick — one poisoned lane can no longer
+/// panic the engine thread and kill every in-flight request.
 pub fn sample(logits: &[f32], temperature: f32, rng: &mut Prng) -> i32 {
-    if temperature <= 0.0 {
-        return logits
+    fn greedy(logits: &[f32]) -> i32 {
+        logits
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .filter(|(_, v)| !v.is_nan())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i as i32)
-            .unwrap_or(0);
+            .unwrap_or(0)
+    }
+    if temperature <= 0.0 {
+        return greedy(logits);
     }
     let inv_t = 1.0 / temperature;
-    let mx = logits.iter().cloned().fold(f32::MIN, f32::max);
+    let mx = logits
+        .iter()
+        .cloned()
+        .filter(|v| !v.is_nan())
+        .fold(f32::MIN, f32::max);
     let weights: Vec<f32> = logits.iter().map(|&l| ((l - mx) * inv_t).exp()).collect();
     let total: f32 = weights.iter().sum();
+    if !total.is_finite() || total <= 0.0 {
+        return greedy(logits);
+    }
     let mut u = rng.uniform() * total;
     for (i, w) in weights.iter().enumerate() {
         u -= w;
@@ -198,6 +260,70 @@ pub fn sample(logits: &[f32], temperature: f32, rng: &mut Prng) -> i32 {
         }
     }
     (logits.len() - 1) as i32
+}
+
+/// Response for a request that never produced a token.
+fn empty_response(req: &Request, finish: FinishReason) -> Response {
+    Response {
+        id: req.id,
+        prompt: req.prompt.clone(),
+        generated: vec![],
+        finish,
+        ttft_us: 0.0,
+        e2e_us: 0.0,
+        batch_trace: vec![],
+    }
+}
+
+/// The request's effective deadline: its own override, else the server
+/// default; 0 = none.
+fn deadline_for(req: &Request, cfg: &ServeConfig) -> Option<Instant> {
+    let ms = req.params.deadline_ms.unwrap_or(cfg.deadline_ms);
+    (ms > 0).then(|| req.arrived + Duration::from_millis(ms))
+}
+
+/// Finish check for the FIRST (prefill-sampled) token: a stop byte hit
+/// at prefill or `max_new_tokens <= 1` means the request is complete
+/// before it ever enters the decode batch.
+fn first_token_finish(params: &GenParams, tok: i32) -> Option<FinishReason> {
+    if params.stop_byte.map(|b| tok == b as i32).unwrap_or(false) {
+        Some(FinishReason::Stop)
+    } else if params.max_new_tokens <= 1 {
+        Some(FinishReason::Length)
+    } else {
+        None
+    }
+}
+
+/// The single admission path — shared by the busy-loop ingress drain and
+/// the idle wait so the two can never drift apart again. Every outcome
+/// sends a response: queue saturation finishes as `Overloaded`
+/// (backpressure — retry later), a request whose token cost exceeds the
+/// WHOLE budget finishes as `Rejected` (it could never be scheduled),
+/// and everything else is costed, deadlined, and queued.
+fn submit_request(
+    req: Request,
+    reply: Reply,
+    waiting: &mut VecDeque<Pending>,
+    cfg: &ServeConfig,
+    tokenizer: &Tokenizer,
+    min_len: usize,
+    metrics: &Arc<Mutex<Metrics>>,
+) {
+    let cost = tokenizer.encoded_len(&req.prompt, min_len) + req.params.max_new_tokens;
+    if cfg.max_batch_total_tokens > 0 && cost > cfg.max_batch_total_tokens {
+        metrics.lock().unwrap().rejected += 1;
+        reply.finish(empty_response(&req, FinishReason::Rejected));
+        return;
+    }
+    if waiting.len() >= cfg.queue_cap {
+        metrics.lock().unwrap().overloaded += 1;
+        reply.finish(empty_response(&req, FinishReason::Overloaded));
+        return;
+    }
+    metrics.lock().unwrap().admitted += 1;
+    let deadline = deadline_for(&req, cfg);
+    waiting.push_back(Pending { req, reply, cost, deadline });
 }
 
 fn engine_loop(
@@ -219,42 +345,75 @@ fn engine_loop(
             &format!("{}:{}:{}", cfg.model, cfg.variant, cfg.dtype),
         );
     }
-    let mut waiting: VecDeque<(Request, Reply)> = VecDeque::new();
+    let (min_len, window) = model.prefill_len_range();
+    let budget_total = cfg.max_batch_total_tokens;
+    let mut budget_used: usize = 0;
+    let mut waiting: VecDeque<Pending> = VecDeque::new();
     let mut active: Vec<ActiveSeq> = Vec::new();
-    let mut rr = RoundRobin::default();
     let mut shutting_down = false;
 
     loop {
         // --- ingress ------------------------------------------------------
         loop {
             match rx.try_recv() {
-                Ok(Msg::Submit(req, reply)) => {
-                    let mut m = metrics.lock().unwrap();
-                    if waiting.len() >= cfg.queue_cap {
-                        m.rejected += 1;
-                        drop(m);
-                        reply.finish(Response {
-                            id: req.id,
-                            prompt: req.prompt,
-                            generated: vec![],
-                            finish: FinishReason::Rejected,
-                            ttft_us: 0.0,
-                            e2e_us: 0.0,
-                            batch_trace: vec![],
-                        });
-                    } else {
-                        m.admitted += 1;
-                        drop(m);
-                        waiting.push_back((req, reply));
-                    }
-                }
+                Ok(Msg::Submit(req, reply)) => submit_request(
+                    req,
+                    reply,
+                    &mut waiting,
+                    &cfg,
+                    &tokenizer,
+                    min_len,
+                    &metrics,
+                ),
                 Ok(Msg::Shutdown) => shutting_down = true,
                 Err(_) => break,
             }
         }
         if shutting_down && waiting.is_empty() && active.is_empty() {
+            // publish the plan-compile gauge one last time so shutdown
+            // metrics carry the final count
+            metrics.lock().unwrap().plan_compiles = model.plan_compiles() as u64;
             return;
         }
+
+        // --- deadline sweep -----------------------------------------------
+        let now = Instant::now();
+        let mut i = 0;
+        while i < waiting.len() {
+            if waiting[i].deadline.map(|d| now >= d).unwrap_or(false) {
+                let p = waiting.remove(i).expect("index in range");
+                metrics.lock().unwrap().deadline_expired += 1;
+                p.reply
+                    .finish(empty_response(&p.req, FinishReason::DeadlineExceeded));
+            } else {
+                i += 1;
+            }
+        }
+        // indices collected ascending, removed DESCENDING: swap_remove
+        // only disturbs positions >= its own, so the rest stay valid
+        let expired: Vec<usize> = active
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.deadline.map(|d| now >= d).unwrap_or(false))
+            .map(|(i, _)| i)
+            .collect();
+        for i in expired.into_iter().rev() {
+            let seq = active.swap_remove(i);
+            budget_used -= seq.cost;
+            cache.release(seq.slot);
+            metrics.lock().unwrap().deadline_expired += 1;
+            seq.finish(FinishReason::DeadlineExceeded);
+        }
+
+        // --- admission policy ---------------------------------------------
+        // waiting_served_ratio defers admission while the running batch
+        // is still large relative to the queue (0.0 = always admit);
+        // fits() holds the token budget across every admission source.
+        let admit_now = active.is_empty()
+            || cfg.waiting_served_ratio <= 0.0
+            || waiting.len() as f64 >= cfg.waiting_served_ratio * active.len() as f64;
+        let fits =
+            |used: usize, cost: usize| budget_total == 0 || used + cost <= budget_total;
 
         // --- resume / long-prompt admission (single-sequence round) --------
         //
@@ -266,9 +425,13 @@ fn engine_loop(
         // suffix rarely shares a length-class — counts as this iteration's
         // one admission round, and falls through to decode below.
         let mut resumed_round = false;
-        if cache.has_free() && !waiting.is_empty() && model.resume_grain() > 0 {
-            let (min_len, window) = model.prefill_len_range();
-            let enc = tokenizer.encode_ranged(&waiting[0].0.prompt, min_len);
+        if admit_now
+            && cache.has_free()
+            && model.resume_grain() > 0
+            && !waiting.is_empty()
+            && fits(budget_used, waiting[0].cost)
+        {
+            let enc = tokenizer.encode_ranged(&waiting[0].req.prompt, min_len);
             let hit = cache.prefix_lookup(&enc);
             {
                 let mut m = metrics.lock().unwrap();
@@ -277,7 +440,8 @@ fn engine_loop(
             }
             if hit.is_some() || enc.len() > window {
                 resumed_round = true;
-                let (req, reply) = waiting.pop_front().expect("peeked above");
+                let Pending { req, reply, cost, deadline } =
+                    waiting.pop_front().expect("peeked above");
                 let (matched, resume_state) = match hit {
                     Some((n, s)) => (n, Some(s)),
                     None => (0, None),
@@ -290,13 +454,12 @@ fn engine_loop(
                     let cache = &mut cache;
                     // chunk-boundary checkpoints feed the prefix cache,
                     // keyed by the full token prefix the state absorbed
-                    let mut checkpoint =
-                        |consumed: usize, state: &super::model::SeqState| {
-                            cache.prefix_insert(&enc[..matched + consumed], state);
-                            chunks += 1;
-                            chunk_us.push(chunk_t.elapsed().as_micros() as f64);
-                            chunk_t = Instant::now();
-                        };
+                    let mut checkpoint = |consumed: usize, state: &SeqState| {
+                        cache.prefix_insert(&enc[..matched + consumed], state);
+                        chunks += 1;
+                        chunk_us.push(chunk_t.elapsed().as_micros() as f64);
+                        chunk_t = Instant::now();
+                    };
                     model.prefill_resume(
                         &enc[matched..],
                         resume_state.as_ref(),
@@ -311,7 +474,6 @@ fn engine_loop(
                         // retain the full-prompt state so the NEXT turn
                         // (this prompt ++ reply ++ new text) resumes here
                         cache.prefix_insert(&enc, &state);
-                        let slot = cache.alloc(state).expect("gated on has_free");
                         let now = Instant::now();
                         let mut rng = Prng::new(req.params.seed ^ req.id);
                         let tok = sample(&logits, req.params.temperature, &mut rng);
@@ -333,10 +495,39 @@ fn engine_loop(
                             );
                         }
                         if !reply.push_token(tok.clamp(0, 255) as u8) {
-                            cache.release(slot);
-                            let mut m = metrics.lock().unwrap();
-                            m.cancelled += 1;
+                            // client vanished before the first token; no
+                            // slot or budget was ever charged
+                            metrics.lock().unwrap().cancelled += 1;
+                        } else if let Some(finish) = first_token_finish(&req.params, tok)
+                        {
+                            // complete at the first token: the full-prompt
+                            // state is already in the prefix tier, so the
+                            // next turn still resumes — no slot needed
+                            let e2e =
+                                Instant::now().duration_since(req.arrived).as_micros()
+                                    as f64;
+                            {
+                                let mut m = metrics.lock().unwrap();
+                                m.completed += 1;
+                                m.e2e_us.record_us(e2e);
+                            }
+                            reply.finish(Response {
+                                id: req.id,
+                                prompt: req.prompt,
+                                generated: vec![tok.clamp(0, 255) as u8],
+                                finish,
+                                ttft_us: now.duration_since(req.arrived).as_micros()
+                                    as f64,
+                                e2e_us: e2e,
+                                batch_trace: vec![],
+                            });
                         } else {
+                            let slot = cache.alloc(state).expect("gated on has_free");
+                            budget_used += cost;
+                            {
+                                let mut m = metrics.lock().unwrap();
+                                m.budget_peak = m.budget_peak.max(budget_used as u64);
+                            }
                             active.push(ActiveSeq {
                                 id: req.id,
                                 slot,
@@ -350,6 +541,8 @@ fn engine_loop(
                                 reply,
                                 rng,
                                 batch_trace: Vec::new(),
+                                cost,
+                                deadline,
                             });
                         }
                     }
@@ -358,15 +551,8 @@ fn engine_loop(
                             "resumed prefill failed for request {}: {e:#}",
                             req.id
                         );
-                        reply.finish(Response {
-                            id: req.id,
-                            prompt: req.prompt,
-                            generated: vec![],
-                            finish: FinishReason::Rejected,
-                            ttft_us: 0.0,
-                            e2e_us: 0.0,
-                            batch_trace: vec![],
-                        });
+                        metrics.lock().unwrap().failed += 1;
+                        reply.finish(empty_response(&req, FinishReason::Failed));
                     }
                 }
             }
@@ -379,11 +565,11 @@ fn engine_loop(
         // decode can never stall the decode loop by more than one prefill
         // batch. Waiting requests are grouped into the front request's
         // length-class (equal encoded token counts — no prompt is ever
-        // padded to batch it with a longer one); the class's leftover
-        // stays queued and drains on later rounds, down to per-sequence
-        // remainder batches.
-        if !resumed_round && cache.has_free() && !waiting.is_empty() {
-            let min_len = model.prefill_len_range().0;
+        // padded to batch it with a longer one); candidates that would
+        // overflow the token budget stay queued (their budget frees as
+        // running sequences finish), and the class's leftover drains on
+        // later rounds, down to per-sequence remainder batches.
+        if !resumed_round && admit_now && cache.has_free() && !waiting.is_empty() {
             let enc_len = |prompt: &[u8]| tokenizer.encoded_len(prompt, min_len);
             let free = cache.capacity() - cache.in_use();
             let cap = model
@@ -393,282 +579,267 @@ fn engine_loop(
                 .unwrap_or(1)
                 .min(free)
                 .max(1);
-            let class = enc_len(&waiting[0].0.prompt);
-            let mut take: Vec<usize> = vec![0];
-            for i in 1..waiting.len() {
+            let class = enc_len(&waiting[0].req.prompt);
+            let mut planned_cost = 0usize;
+            let mut take: Vec<usize> = Vec::new();
+            for i in 0..waiting.len() {
                 if take.len() >= cap {
                     break;
                 }
-                if enc_len(&waiting[i].0.prompt) == class {
-                    take.push(i);
+                if enc_len(&waiting[i].req.prompt) != class {
+                    continue;
                 }
+                if !fits(budget_used + planned_cost, waiting[i].cost) {
+                    continue;
+                }
+                planned_cost += waiting[i].cost;
+                take.push(i);
             }
-            // the largest compiled prefill bucket the class fills now
-            let b = plan(model.prefill_buckets(), take.len()).bucket.max(1);
-            take.truncate(b);
-            let mut batch: Vec<(Request, Reply)> = Vec::with_capacity(b);
-            for &i in take.iter().rev() {
-                batch.push(waiting.remove(i).expect("selected index in range"));
-            }
-            batch.reverse();
-            let tokens: Vec<Vec<i32>> = batch
-                .iter()
-                .map(|(req, _)| tokenizer.encode_ranged(&req.prompt, min_len))
-                .collect();
-            let token_refs: Vec<&[i32]> = tokens.iter().map(|t| t.as_slice()).collect();
-            let t0 = Instant::now();
-            // a failed BATCH retries each request alone, so one broken
-            // (bucket, length-class) graph — or one poison request —
-            // keeps the blast radius of the old per-request path: only
-            // the sequence that actually fails gets rejected
-            let mut fell_back = false;
-            let results: Vec<Result<(Vec<f32>, super::model::SeqState)>> =
-                match model.prefill_batched(&token_refs) {
-                    Ok(rs) => rs.into_iter().map(Ok).collect(),
-                    Err(e) => {
-                        eprintln!(
-                            "batched prefill failed for {} requests: {e:#}; \
-                             retrying per-sequence",
-                            batch.len()
+            if !take.is_empty() {
+                // the largest compiled prefill bucket the class fills now
+                let b = plan(model.prefill_buckets(), take.len()).bucket.max(1);
+                take.truncate(b);
+                let mut batch: Vec<Pending> = Vec::with_capacity(b);
+                for &i in take.iter().rev() {
+                    batch.push(waiting.remove(i).expect("selected index in range"));
+                }
+                batch.reverse();
+                let tokens: Vec<Vec<i32>> = batch
+                    .iter()
+                    .map(|p| tokenizer.encode_ranged(&p.req.prompt, min_len))
+                    .collect();
+                let token_refs: Vec<&[i32]> =
+                    tokens.iter().map(|t| t.as_slice()).collect();
+                let t0 = Instant::now();
+                // a failed BATCH retries each request alone, so one broken
+                // (bucket, length-class) graph — or one poison request —
+                // keeps the blast radius of the old per-request path: only
+                // the sequence that actually fails gets failed
+                let mut fell_back = false;
+                let results: Vec<Result<(Vec<f32>, SeqState)>> =
+                    match model.prefill_batched(&token_refs) {
+                        Ok(rs) => rs.into_iter().map(Ok).collect(),
+                        Err(e) => {
+                            eprintln!(
+                                "batched prefill failed for {} requests: {e:#}; \
+                                 retrying per-sequence",
+                                batch.len()
+                            );
+                            fell_back = true;
+                            token_refs.iter().map(|t| model.prefill(t)).collect()
+                        }
+                    };
+                let round_us = t0.elapsed().as_micros() as f64;
+                let now = Instant::now();
+                {
+                    let mut m = metrics.lock().unwrap();
+                    // a serial fallback counts as one round PER sequence, so
+                    // mean_prefill_batch honestly drops to 1.0 exactly when
+                    // batching is broken instead of masking it
+                    let rounds = if fell_back { batch.len() as u64 } else { 1 };
+                    m.prefill_calls += rounds;
+                    m.prefill_batched_seqs += batch.len() as u64;
+                    m.prefill_batch_us.record_us(round_us);
+                }
+                for ((p, result), toks) in batch.into_iter().zip(results).zip(tokens) {
+                    let Pending { req, reply, cost, deadline } = p;
+                    let (logits, state) = match result {
+                        Ok(r) => r,
+                        Err(e) => {
+                            eprintln!("prefill failed for request {}: {e:#}", req.id);
+                            metrics.lock().unwrap().failed += 1;
+                            reply.finish(empty_response(&req, FinishReason::Failed));
+                            continue;
+                        }
+                    };
+                    let mut rng = Prng::new(req.params.seed ^ req.id);
+                    let tok = sample(&logits, req.params.temperature, &mut rng);
+                    {
+                        let mut m = metrics.lock().unwrap();
+                        m.prefills += 1;
+                        m.tokens_out += 1;
+                        m.ttft_us.record_us(
+                            now.duration_since(req.arrived).as_micros() as f64,
                         );
-                        fell_back = true;
-                        token_refs.iter().map(|t| model.prefill(t)).collect()
                     }
-                };
-            let round_us = t0.elapsed().as_micros() as f64;
-            let now = Instant::now();
-            {
-                let mut m = metrics.lock().unwrap();
-                // a serial fallback counts as one round PER sequence, so
-                // mean_prefill_batch honestly drops to 1.0 exactly when
-                // batching is broken instead of masking it
-                let rounds = if fell_back { batch.len() as u64 } else { 1 };
-                m.prefill_calls += rounds;
-                m.prefill_batched_seqs += batch.len() as u64;
-                m.prefill_batch_us.record_us(round_us);
-            }
-            for (((req, reply), result), toks) in
-                batch.into_iter().zip(results).zip(tokens)
-            {
-                let (logits, state) = match result {
-                    Ok(r) => r,
-                    Err(e) => {
-                        eprintln!("prefill failed for request {}: {e:#}", req.id);
+                    if !reply.push_token(tok.clamp(0, 255) as u8) {
+                        // client vanished before the first token; no slot
+                        // or budget was ever charged
+                        metrics.lock().unwrap().cancelled += 1;
+                        continue;
+                    }
+                    if let Some(finish) = first_token_finish(&req.params, tok) {
+                        // complete at the first token: promote the
+                        // prompt-only state (it absorbed exactly the
+                        // prompt — the sampled token was never fed back)
+                        // and respond without ever occupying a slot
+                        if cache.prefix_enabled() {
+                            cache.prefix_insert(&toks, &state);
+                            let mut m = metrics.lock().unwrap();
+                            m.prefix_evicted = cache.prefix_evicted;
+                        }
+                        let e2e = Instant::now()
+                            .duration_since(req.arrived)
+                            .as_micros() as f64;
+                        {
+                            let mut m = metrics.lock().unwrap();
+                            m.completed += 1;
+                            m.e2e_us.record_us(e2e);
+                        }
                         reply.finish(Response {
                             id: req.id,
                             prompt: req.prompt,
-                            generated: vec![],
-                            finish: FinishReason::Rejected,
-                            ttft_us: 0.0,
-                            e2e_us: 0.0,
+                            generated: vec![tok.clamp(0, 255) as u8],
+                            finish,
+                            ttft_us: now.duration_since(req.arrived).as_micros() as f64,
+                            e2e_us: e2e,
                             batch_trace: vec![],
                         });
                         continue;
                     }
-                };
-                let slot = cache.alloc(state).expect("round capped at free slots");
-                let mut rng = Prng::new(req.params.seed ^ req.id);
-                let tok = sample(&logits, req.params.temperature, &mut rng);
-                {
-                    let mut m = metrics.lock().unwrap();
-                    m.prefills += 1;
-                    m.tokens_out += 1;
-                    m.ttft_us
-                        .record_us(now.duration_since(req.arrived).as_micros() as f64);
+                    let slot = cache.alloc(state).expect("round capped at free slots");
+                    budget_used += cost;
+                    {
+                        let mut m = metrics.lock().unwrap();
+                        m.budget_peak = m.budget_peak.max(budget_used as u64);
+                    }
+                    active.push(ActiveSeq {
+                        id: req.id,
+                        slot,
+                        last_token: tok,
+                        generated: vec![tok],
+                        prompt: req.prompt,
+                        prompt_tokens: toks,
+                        params: req.params,
+                        arrived: req.arrived,
+                        first_token_at: now,
+                        reply,
+                        rng,
+                        batch_trace: Vec::new(),
+                        cost,
+                        deadline,
+                    });
                 }
-                if !reply.push_token(tok.clamp(0, 255) as u8) {
-                    // client vanished before the first token
-                    cache.release(slot);
-                    let mut m = metrics.lock().unwrap();
-                    m.cancelled += 1;
-                    continue;
-                }
-                active.push(ActiveSeq {
-                    id: req.id,
-                    slot,
-                    last_token: tok,
-                    generated: vec![tok],
-                    prompt: req.prompt,
-                    prompt_tokens: toks,
-                    params: req.params,
-                    arrived: req.arrived,
-                    first_token_at: now,
-                    reply,
-                    rng,
-                    batch_trace: Vec::new(),
-                });
             }
             // NO `continue`: fall through so pending decodes advance
             // between admission rounds (the interleave invariant).
         }
 
-        // --- batched decode --------------------------------------------------
+        // --- continuous batched decode --------------------------------------
+        //
+        // EVERY live sequence advances each step; decode_any remaps the
+        // membership onto the compiled bucket plans (greedy decomposition
+        // plus padding for an unfittable remainder), so sequences joining
+        // or leaving between steps never trigger a recompile.
         if !active.is_empty() {
-            let p = plan(model.decode_buckets(), active.len());
-            if p.bucket > 0 {
-                let idxs: Vec<usize> = rr.select(
-                    &(0..active.len()).collect::<Vec<_>>(),
-                    p.bucket,
-                );
-                let t0 = Instant::now();
-                let slots: Vec<SlotId> = idxs.iter().map(|&i| active[i].slot).collect();
-                let states = cache.get_many_mut(&slots);
-                let mut seqs: Vec<(&mut super::model::SeqState, i32)> = states
-                    .into_iter()
-                    .zip(idxs.iter().map(|&i| active[i].last_token))
-                    .collect();
-                match model.decode(&mut seqs) {
-                    Ok(all_logits) => {
-                        drop(seqs);
-                        let step_us = t0.elapsed().as_micros() as f64;
-                        {
-                            let mut m = metrics.lock().unwrap();
-                            m.decode_calls += 1;
-                            m.decode_batched_seqs += idxs.len() as u64;
-                            m.tokens_out += idxs.len() as u64;
-                            m.per_token_us.record_us(step_us / idxs.len() as f64);
-                            m.decode_batch_us.record_us(step_us);
+            let t0 = Instant::now();
+            let slots: Vec<SlotId> = active.iter().map(|s| s.slot).collect();
+            let states = cache.get_many_mut(&slots);
+            let mut seqs: Vec<(&mut SeqState, i32)> = states
+                .into_iter()
+                .zip(active.iter().map(|s| s.last_token))
+                .collect();
+            match model.decode_any(&mut seqs) {
+                Ok((all_logits, padded)) => {
+                    drop(seqs);
+                    let n = active.len();
+                    let step_us = t0.elapsed().as_micros() as f64;
+                    {
+                        let mut m = metrics.lock().unwrap();
+                        // one decode_call per CONTINUOUS step: mean batch
+                        // is the mean number of live sequences advanced
+                        // per step (occupancy), regardless of how many
+                        // bucket executions the remap used underneath
+                        m.decode_calls += 1;
+                        m.decode_batched_seqs += n as u64;
+                        m.decode_padded_slots += padded as u64;
+                        m.tokens_out += n as u64;
+                        m.per_token_us.record_us(step_us / n as f64);
+                        m.decode_batch_us.record_us(step_us);
+                        m.plan_compiles = model.plan_compiles() as u64;
+                    }
+                    enum Exit {
+                        Cancel,
+                        Done(FinishReason),
+                    }
+                    let mut removals: Vec<(usize, Exit)> = Vec::new();
+                    for (i, logits) in all_logits.iter().enumerate() {
+                        let seq = &mut active[i];
+                        let tok = sample(logits, seq.params.temperature, &mut seq.rng);
+                        seq.last_token = tok;
+                        seq.generated.push(tok);
+                        seq.batch_trace.push(n);
+                        if !seq.reply.push_token(tok.clamp(0, 255) as u8) {
+                            removals.push((i, Exit::Cancel));
+                            continue;
                         }
-                        let mut finished: Vec<usize> = Vec::new();
-                        let mut cancelled: Vec<usize> = Vec::new();
-                        for (logits, &i) in all_logits.iter().zip(&idxs) {
-                            let seq = &mut active[i];
-                            let tok = sample(
-                                logits,
-                                seq.params.temperature,
-                                &mut seq.rng,
-                            );
-                            seq.last_token = tok;
-                            seq.generated.push(tok);
-                            seq.batch_trace.push(idxs.len());
-                            if !seq.reply.push_token(tok.clamp(0, 255) as u8) {
-                                cancelled.push(i);
-                                continue;
-                            }
-                            let hit_stop = seq
-                                .params
-                                .stop_byte
-                                .map(|b| tok == b as i32)
-                                .unwrap_or(false);
-                            if hit_stop || seq.generated.len() >= seq.params.max_new_tokens
-                            {
-                                finished.push(i);
-                            }
+                        let hit_stop = seq
+                            .params
+                            .stop_byte
+                            .map(|b| tok == b as i32)
+                            .unwrap_or(false);
+                        if hit_stop {
+                            removals.push((i, Exit::Done(FinishReason::Stop)));
+                        } else if seq.generated.len() >= seq.params.max_new_tokens {
+                            removals.push((i, Exit::Done(FinishReason::Length)));
                         }
-                        // reclaim cancelled slots first (no response owed)
-                        cancelled.sort_unstable_by(|a, b| b.cmp(a));
-                        for i in cancelled {
-                            let seq = active.swap_remove(i);
-                            cache.release(seq.slot);
-                            let mut m = metrics.lock().unwrap();
-                            m.cancelled += 1;
-                            // indices in `finished` past i shift; rebuild
-                            finished.retain(|&f| f != i);
-                            for f in finished.iter_mut() {
-                                if *f == active.len() {
-                                    *f = i; // swap_remove moved last into i
+                    }
+                    // exits leave the batch THE SAME STEP they end:
+                    // indices were collected ascending, so removing in
+                    // descending order keeps every pending index valid
+                    // (swap_remove only disturbs positions >= its own)
+                    for (i, exit) in removals.into_iter().rev() {
+                        let seq = active.swap_remove(i);
+                        budget_used -= seq.cost;
+                        let final_state = cache.release(seq.slot);
+                        match exit {
+                            Exit::Cancel => {
+                                metrics.lock().unwrap().cancelled += 1;
+                            }
+                            Exit::Done(reason) => {
+                                // promote the finished state to the prefix
+                                // tier: it has absorbed the prompt plus
+                                // every generated token EXCEPT the last
+                                // sample (never fed back through decode),
+                                // so the next turn of this conversation
+                                // resumes it decode-exactly. Cancels and
+                                // failures are not promoted; neither is a
+                                // sequence whose absorbed tokens fall
+                                // outside the byte alphabet (its next-turn
+                                // prompt would re-encode them differently
+                                // than the state actually saw them).
+                                let absorbed =
+                                    &seq.generated[..seq.generated.len() - 1];
+                                if cache.prefix_enabled()
+                                    && absorbed.iter().all(|&t| (0..=255).contains(&t))
+                                {
+                                    let mut key = seq.prompt_tokens.clone();
+                                    key.extend_from_slice(absorbed);
+                                    cache.prefix_insert(&key, &final_state);
+                                    let mut m = metrics.lock().unwrap();
+                                    m.prefix_evicted = cache.prefix_evicted;
                                 }
-                            }
-                        }
-                        // retire finished (descending index for swap_remove)
-                        finished.sort_unstable_by(|a, b| b.cmp(a));
-                        for i in finished {
-                            let seq = active.swap_remove(i);
-                            let final_state = cache.release(seq.slot);
-                            // promote the finished state to the prefix
-                            // tier: it has absorbed the prompt plus every
-                            // generated token EXCEPT the last sample
-                            // (never fed back through decode), so the
-                            // next turn of this conversation resumes it
-                            // decode-exactly. Cancels and failures are
-                            // not promoted; neither is a sequence whose
-                            // absorbed tokens fall outside the byte
-                            // alphabet (its next-turn prompt would
-                            // re-encode them differently than the state
-                            // actually saw them).
-                            let absorbed =
-                                &seq.generated[..seq.generated.len() - 1];
-                            if cache.prefix_enabled()
-                                && absorbed.iter().all(|&t| (0..=255).contains(&t))
-                            {
-                                let mut key = seq.prompt_tokens.clone();
-                                key.extend_from_slice(absorbed);
-                                cache.prefix_insert(&key, &final_state);
-                                let mut m = metrics.lock().unwrap();
-                                m.prefix_evicted = cache.prefix_evicted;
-                            }
-                            let now = Instant::now();
-                            let e2e =
-                                now.duration_since(seq.arrived).as_micros() as f64;
-                            let finish = if seq
-                                .params
-                                .stop_byte
-                                .map(|b| seq.last_token == b as i32)
-                                .unwrap_or(false)
-                            {
-                                FinishReason::Stop
-                            } else {
-                                FinishReason::Length
-                            };
-                            {
+                                let e2e = seq.finish(reason);
                                 let mut m = metrics.lock().unwrap();
                                 m.completed += 1;
                                 m.e2e_us.record_us(e2e);
                             }
-                            seq.reply.finish(Response {
-                                id: seq.id,
-                                prompt: seq.prompt,
-                                generated: seq
-                                    .generated
-                                    .iter()
-                                    .map(|&t| t.clamp(0, 255) as u8)
-                                    .collect(),
-                                finish,
-                                ttft_us: seq
-                                    .first_token_at
-                                    .duration_since(seq.arrived)
-                                    .as_micros() as f64,
-                                e2e_us: e2e,
-                                batch_trace: seq.batch_trace,
-                            });
                         }
-                        continue;
                     }
-                    Err(e) => {
-                        eprintln!("decode step failed: {e:#}; dropping batch");
-                        drop(seqs);
-                        let mut sorted = idxs.clone();
-                        sorted.sort_unstable_by(|a, b| b.cmp(a));
-                        for i in sorted {
-                            let seq = active.swap_remove(i);
-                            cache.release(seq.slot);
-                            // tell the client instead of letting it stare
-                            // at a dead channel until its recv times out
-                            let now = Instant::now();
-                            {
-                                let mut m = metrics.lock().unwrap();
-                                m.failed += 1;
-                            }
-                            seq.reply.finish(Response {
-                                id: seq.id,
-                                prompt: seq.prompt,
-                                generated: seq
-                                    .generated
-                                    .iter()
-                                    .map(|&t| t.clamp(0, 255) as u8)
-                                    .collect(),
-                                finish: FinishReason::Failed,
-                                ttft_us: seq
-                                    .first_token_at
-                                    .duration_since(seq.arrived)
-                                    .as_micros() as f64,
-                                e2e_us: now.duration_since(seq.arrived).as_micros()
-                                    as f64,
-                                batch_trace: seq.batch_trace,
-                            });
-                        }
-                        continue;
+                    continue;
+                }
+                Err(e) => {
+                    eprintln!("decode step failed: {e:#}; failing the batch");
+                    drop(seqs);
+                    // tell every client instead of letting them stare at
+                    // dead channels until their recvs time out
+                    for seq in active.drain(..) {
+                        budget_used -= seq.cost;
+                        cache.release(seq.slot);
+                        metrics.lock().unwrap().failed += 1;
+                        seq.finish(FinishReason::Failed);
                     }
+                    continue;
                 }
             }
         }
@@ -678,16 +849,15 @@ fn engine_loop(
             continue; // drain remaining work without blocking
         }
         match rx.recv_timeout(Duration::from_micros(cfg.batch_wait_us.max(100))) {
-            Ok(Msg::Submit(req, reply)) => {
-                let mut m = metrics.lock().unwrap();
-                if waiting.len() >= cfg.queue_cap {
-                    m.rejected += 1;
-                } else {
-                    m.admitted += 1;
-                    drop(m);
-                    waiting.push_back((req, reply));
-                }
-            }
+            Ok(Msg::Submit(req, reply)) => submit_request(
+                req,
+                reply,
+                &mut waiting,
+                &cfg,
+                &tokenizer,
+                min_len,
+                &metrics,
+            ),
             Ok(Msg::Shutdown) => shutting_down = true,
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => shutting_down = true,
@@ -821,8 +991,8 @@ mod tests {
     }
 
     #[test]
-    fn queue_overflow_rejects() {
-        // 1 slot + tiny queue: flood and count rejections
+    fn queue_overflow_surfaces_overloaded() {
+        // 1 slot + tiny queue: flood and count backpressure responses
         let mut model = MockModel::new(8, 256, vec![1]);
         model.decode_delay = Duration::from_millis(2);
         let cfg = ServeConfig {
@@ -840,18 +1010,20 @@ mod tests {
                 )
             })
             .collect();
-        let mut rejected = 0;
+        let mut overloaded = 0;
         let mut completed = 0;
         for rx in rxs {
             match rx.recv_timeout(Duration::from_secs(30)) {
-                Ok(r) if r.finish == FinishReason::Rejected => rejected += 1,
+                Ok(r) if r.finish == FinishReason::Overloaded => overloaded += 1,
                 Ok(_) => completed += 1,
                 Err(e) => panic!("lost response: {e}"),
             }
         }
-        assert!(rejected > 0, "backpressure never triggered");
-        assert_eq!(completed + rejected, 12);
-        server.shutdown();
+        assert!(overloaded > 0, "backpressure never triggered");
+        assert_eq!(completed + overloaded, 12);
+        let m = server.shutdown();
+        assert_eq!(m.overloaded, overloaded as u64);
+        assert_eq!(m.rejected, 0, "saturation is Overloaded, not Rejected");
     }
 
     #[test]
@@ -1044,6 +1216,22 @@ mod tests {
             }
         }
         assert!(seen_other);
+    }
+
+    #[test]
+    fn sampling_survives_nan_logits() {
+        let mut rng = Prng::new(7);
+        // a poisoned lane is skipped, not crowned argmax (and not a panic)
+        assert_eq!(sample(&[1.0, f32::NAN, 0.5], 0.0, &mut rng), 0);
+        assert_eq!(sample(&[f32::NAN, 2.0, 3.0], 0.0, &mut rng), 2);
+        // fully-poisoned logits degrade to token 0 instead of killing the
+        // engine thread
+        assert_eq!(sample(&[f32::NAN, f32::NAN], 0.0, &mut rng), 0);
+        // temperature sampling over NaN weights falls back to greedy
+        let t = sample(&[1.0, f32::NAN, 0.5], 0.7, &mut rng);
+        assert_eq!(t, 0);
+        let all_nan = sample(&[f32::NAN, f32::NAN], 0.7, &mut rng);
+        assert_eq!(all_nan, 0);
     }
 
     #[test]

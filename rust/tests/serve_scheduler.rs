@@ -1,0 +1,553 @@
+//! Scheduler-invariant and engine-loop regression tests for the
+//! token-budget continuous-batching scheduler: the budget is never
+//! exceeded across admission sources, finished sequences leave the
+//! decode batch the same step they end, deadline-expired and cancelled
+//! requests free budget immediately, queue saturation surfaces an
+//! explicit `Overloaded` response on EVERY ingress path, first
+//! (prefill-sampled) tokens get finish checks, prefill failures count
+//! as failures, and NaN logits can no longer kill the engine thread.
+
+use std::time::Duration;
+
+use anyhow::Result;
+use xamba::config::{ModelShape, ServeConfig};
+use xamba::coordinator::{
+    FinishReason, GenParams, MockModel, PlannedServeModel, SeqState, ServeModel,
+    Server, StreamEvent,
+};
+
+fn cfg(slots: usize) -> ServeConfig {
+    ServeConfig {
+        max_slots: slots,
+        queue_cap: 16,
+        batch_wait_us: 100,
+        ..Default::default()
+    }
+}
+
+// MockModel's prefill window is 8 and its length range is (8, 8), so
+// every prompt encodes to exactly 8 tokens: a request's budget cost is
+// always 8 + max_new_tokens.
+const WINDOW_COST: usize = 8;
+
+// --- satellite regressions -------------------------------------------------
+
+#[test]
+fn max_new_tokens_one_delivers_exactly_one_token() {
+    // the prefill-sampled token must get a length check: before the fix
+    // it was pushed into the decode batch and a second token came out
+    let model = MockModel::new(8, 256, vec![1]);
+    let server = Server::start(move || Ok(Box::new(model) as _), cfg(2)).unwrap();
+    let rx = server.submit(b"a", GenParams { max_new_tokens: 1, ..Default::default() });
+    let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(r.generated, b"b", "exactly one token");
+    assert_eq!(r.finish, FinishReason::Length);
+    let m = server.shutdown();
+    assert_eq!(m.completed, 1);
+    assert_eq!(m.tokens_out, 1);
+    assert_eq!(m.decode_calls, 0, "a 1-token request never enters decode");
+}
+
+#[test]
+fn stop_byte_sampled_at_prefill_finishes_immediately() {
+    // prompt "c" predicts 'd'; a stop byte hit on the FIRST sample must
+    // end the request without an extra decode step
+    let model = MockModel::new(8, 256, vec![1]);
+    let server = Server::start(move || Ok(Box::new(model) as _), cfg(2)).unwrap();
+    let rx = server.submit(
+        b"c",
+        GenParams { max_new_tokens: 50, stop_byte: Some(b'd'), ..Default::default() },
+    );
+    let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(r.finish, FinishReason::Stop);
+    assert_eq!(r.generated, b"d");
+    let m = server.shutdown();
+    assert_eq!(m.decode_calls, 0, "stop at prefill must skip decode entirely");
+    assert_eq!(m.completed, 1);
+}
+
+#[test]
+fn resume_path_applies_first_token_finish_check() {
+    // a 16-byte prompt with an 8-token window streams through the
+    // chunked-prefill (resume) admission path; its prefill-sampled
+    // token hits the stop byte and must finish there too
+    let mut model = MockModel::new(8, 256, vec![1]);
+    model.resume_grain = 1;
+    model.chunk = 4;
+    let server = Server::start(move || Ok(Box::new(model) as _), cfg(2)).unwrap();
+    let rx = server.submit(
+        b"abcdefghijklmnop", // last token 'p' predicts 'q'
+        GenParams { max_new_tokens: 50, stop_byte: Some(b'q'), ..Default::default() },
+    );
+    let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(r.finish, FinishReason::Stop);
+    assert_eq!(r.generated, b"q");
+    let m = server.shutdown();
+    assert_eq!(m.decode_calls, 0);
+    assert_eq!(m.completed, 1);
+    assert!(m.prefill_chunks >= 2, "long prompt must have streamed in chunks");
+}
+
+#[test]
+fn prefill_failure_finishes_failed_and_counts() {
+    // before the fix: prefill errors finished as Rejected and NO metric
+    // moved; they must surface as Failed and count as failures
+    struct FailingPrefill(MockModel);
+    impl ServeModel for FailingPrefill {
+        fn prefill_len(&self) -> usize {
+            self.0.prefill_len()
+        }
+        fn vocab(&self) -> usize {
+            self.0.vocab()
+        }
+        fn decode_buckets(&self) -> &[usize] {
+            self.0.decode_buckets()
+        }
+        fn prefill(&mut self, _tokens: &[i32]) -> Result<(Vec<f32>, SeqState)> {
+            Err(anyhow::anyhow!("synthetic prefill failure"))
+        }
+        fn decode(
+            &mut self,
+            seqs: &mut [(&mut SeqState, i32)],
+        ) -> Result<Vec<Vec<f32>>> {
+            self.0.decode(seqs)
+        }
+    }
+
+    let model = FailingPrefill(MockModel::new(8, 256, vec![1]));
+    let server = Server::start(move || Ok(Box::new(model) as _), cfg(2)).unwrap();
+    let rx = server.submit(b"a", GenParams { max_new_tokens: 5, ..Default::default() });
+    let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(r.finish, FinishReason::Failed);
+    assert!(r.generated.is_empty());
+    let m = server.shutdown();
+    assert_eq!(m.failed, 1, "prefill failures must count as failures");
+    assert_eq!(m.rejected, 0, "prefill failures are not admission rejections");
+    assert_eq!(m.completed, 0);
+}
+
+#[test]
+fn nan_logits_do_not_kill_the_engine() {
+    // before the fix: sample()'s partial_cmp().unwrap() panicked on the
+    // first NaN logit, killing the engine thread for every request
+    struct NanDecode(MockModel);
+    impl ServeModel for NanDecode {
+        fn prefill_len(&self) -> usize {
+            self.0.prefill_len()
+        }
+        fn vocab(&self) -> usize {
+            self.0.vocab()
+        }
+        fn decode_buckets(&self) -> &[usize] {
+            self.0.decode_buckets()
+        }
+        fn prefill(&mut self, tokens: &[i32]) -> Result<(Vec<f32>, SeqState)> {
+            self.0.prefill(tokens)
+        }
+        fn decode(
+            &mut self,
+            seqs: &mut [(&mut SeqState, i32)],
+        ) -> Result<Vec<Vec<f32>>> {
+            let vocab = self.0.vocab();
+            Ok(seqs.iter().map(|_| vec![f32::NAN; vocab]).collect())
+        }
+    }
+
+    let model = NanDecode(MockModel::new(8, 256, vec![1, 2]));
+    let server = Server::start(move || Ok(Box::new(model) as _), cfg(4)).unwrap();
+    let rx_a =
+        server.submit(b"a", GenParams { max_new_tokens: 3, ..Default::default() });
+    let rx_b =
+        server.submit(b"b", GenParams { max_new_tokens: 3, ..Default::default() });
+    let ra = rx_a.recv_timeout(Duration::from_secs(5)).expect("engine died on NaN");
+    let rb = rx_b.recv_timeout(Duration::from_secs(5)).expect("engine died on NaN");
+    assert_eq!(ra.finish, FinishReason::Length);
+    assert_eq!(rb.finish, FinishReason::Length);
+    assert_eq!(ra.generated.len(), 3);
+    // the engine must still serve AFTER surviving NaN steps
+    let rx_c =
+        server.submit(b"c", GenParams { max_new_tokens: 2, ..Default::default() });
+    assert_eq!(
+        rx_c.recv_timeout(Duration::from_secs(5)).unwrap().finish,
+        FinishReason::Length
+    );
+    let m = server.shutdown();
+    assert_eq!(m.completed, 3);
+    assert_eq!(m.failed, 0);
+}
+
+#[test]
+fn idle_queue_saturation_still_sends_a_response() {
+    // before the fix: overflow hit in the IDLE ingress branch bumped the
+    // rejected counter but never replied — the client's recv() hung
+    // until timeout. With queue_cap 0 every submission saturates; a
+    // request arriving while the engine sleeps in recv_timeout must
+    // still get an explicit Overloaded response.
+    let model = MockModel::new(8, 256, vec![1]);
+    let server = Server::start(
+        move || Ok(Box::new(model) as _),
+        ServeConfig { max_slots: 2, queue_cap: 0, batch_wait_us: 100, ..Default::default() },
+    )
+    .unwrap();
+    // let the engine park in its idle wait before submitting
+    std::thread::sleep(Duration::from_millis(50));
+    let rxs: Vec<_> = (0..5)
+        .map(|i| {
+            if i > 0 {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            server.submit(b"x", GenParams { max_new_tokens: 4, ..Default::default() })
+        })
+        .collect();
+    for rx in rxs {
+        let r = rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("saturated request got NO response (idle-branch regression)");
+        assert_eq!(r.finish, FinishReason::Overloaded);
+        assert!(r.generated.is_empty());
+    }
+    let m = server.shutdown();
+    assert_eq!(m.overloaded, 5);
+    assert_eq!(m.admitted, 0);
+    assert_eq!(m.rejected, 0, "saturation is Overloaded, not Rejected");
+}
+
+// --- scheduler invariants --------------------------------------------------
+
+#[test]
+fn token_budget_is_never_exceeded() {
+    // budget 24, each request costs 8 (window) + 4 (max_new) = 12: at
+    // most two sequences may ever be live at once, however many flood in
+    let mut model = MockModel::new(8, 256, vec![1, 2, 4]);
+    model.prefill_buckets = vec![1, 2, 4];
+    let server = Server::start(
+        move || Ok(Box::new(model) as _),
+        ServeConfig {
+            max_slots: 8,
+            queue_cap: 16,
+            batch_wait_us: 100,
+            max_batch_total_tokens: 24,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let rxs: Vec<_> = (0..6)
+        .map(|_| {
+            server.submit(b"m", GenParams { max_new_tokens: 4, ..Default::default() })
+        })
+        .collect();
+    for rx in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(r.finish, FinishReason::Length);
+        assert!(
+            r.batch_trace.iter().all(|&b| b <= 2),
+            "decode batch exceeded the budget cap: {:?}",
+            r.batch_trace
+        );
+    }
+    let m = server.shutdown();
+    assert_eq!(m.completed, 6);
+    assert!(m.budget_peak <= 24, "budget peak {} > 24", m.budget_peak);
+    assert!(m.budget_peak >= 12, "budget accounting never engaged");
+    assert!(m.mean_decode_batch() <= 2.0 + 1e-9);
+}
+
+#[test]
+fn oversize_request_is_rejected_at_admission() {
+    // cost 8 + 4 = 12 > budget 10: the request can NEVER run and must be
+    // rejected immediately (Rejected, not Overloaded)
+    let model = MockModel::new(8, 256, vec![1]);
+    let server = Server::start(
+        move || Ok(Box::new(model) as _),
+        ServeConfig {
+            max_slots: 2,
+            queue_cap: 16,
+            batch_wait_us: 100,
+            max_batch_total_tokens: 10,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let rx = server.submit(b"a", GenParams { max_new_tokens: 4, ..Default::default() });
+    let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(r.finish, FinishReason::Rejected);
+    let m = server.shutdown();
+    assert_eq!(m.rejected, 1);
+    assert_eq!(m.admitted, 0);
+    assert_eq!(m.overloaded, 0);
+}
+
+#[test]
+fn cancellation_frees_budget_immediately() {
+    // the budget fits exactly one live request; cancelling the first
+    // (receiver drop) must release its charge so the second can run
+    let mut model = MockModel::new(8, 256, vec![1]);
+    model.decode_delay = Duration::from_millis(1);
+    let server = Server::start(
+        move || Ok(Box::new(model) as _),
+        ServeConfig {
+            max_slots: 4,
+            queue_cap: 16,
+            batch_wait_us: 100,
+            max_batch_total_tokens: WINDOW_COST + 10_000,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let rx_a = server.submit_streaming(
+        b"a",
+        GenParams { max_new_tokens: 10_000, ..Default::default() },
+    );
+    // wait until A is definitely live, then walk away
+    let _ = rx_a.recv_timeout(Duration::from_secs(5)).unwrap();
+    let _ = rx_a.recv_timeout(Duration::from_secs(5)).unwrap();
+    let rx_b =
+        server.submit(b"b", GenParams { max_new_tokens: 4, ..Default::default() });
+    drop(rx_a);
+    let rb = rx_b.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(rb.finish, FinishReason::Length, "cancel never freed the budget");
+    let m = server.shutdown();
+    assert_eq!(m.cancelled, 1);
+    assert_eq!(m.completed, 1);
+}
+
+#[test]
+fn queued_request_expires_at_its_deadline() {
+    // A holds the whole budget; B's per-request deadline passes while it
+    // waits and it must finish DeadlineExceeded with empty output
+    let mut model = MockModel::new(8, 256, vec![1]);
+    model.decode_delay = Duration::from_millis(1);
+    let server = Server::start(
+        move || Ok(Box::new(model) as _),
+        ServeConfig {
+            max_slots: 4,
+            queue_cap: 16,
+            batch_wait_us: 100,
+            max_batch_total_tokens: WINDOW_COST + 10_000,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let rx_a = server.submit_streaming(
+        b"a",
+        GenParams { max_new_tokens: 10_000, ..Default::default() },
+    );
+    let _ = rx_a.recv_timeout(Duration::from_secs(5)).unwrap();
+    let rx_b = server.submit(
+        b"b",
+        GenParams { max_new_tokens: 4, deadline_ms: Some(50), ..Default::default() },
+    );
+    let rb = rx_b.recv_timeout(Duration::from_secs(10)).unwrap();
+    assert_eq!(rb.finish, FinishReason::DeadlineExceeded);
+    assert!(rb.generated.is_empty(), "expired in queue: no tokens");
+    drop(rx_a);
+    let m = server.shutdown();
+    assert_eq!(m.deadline_expired, 1);
+    assert_eq!(m.cancelled, 1);
+}
+
+#[test]
+fn decoding_request_expires_with_partial_output() {
+    // the server-wide default deadline interrupts a long generation
+    // mid-decode: partial output comes back, and the freed budget serves
+    // the next request normally
+    let mut model = MockModel::new(8, 256, vec![1]);
+    model.decode_delay = Duration::from_millis(2);
+    let server = Server::start(
+        move || Ok(Box::new(model) as _),
+        ServeConfig {
+            max_slots: 2,
+            queue_cap: 16,
+            batch_wait_us: 100,
+            deadline_ms: 100,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let rx = server.submit(
+        b"a",
+        GenParams { max_new_tokens: 10_000, ..Default::default() },
+    );
+    let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(r.finish, FinishReason::DeadlineExceeded);
+    assert!(
+        !r.generated.is_empty() && r.generated.len() < 10_000,
+        "expected partial output, got {} tokens",
+        r.generated.len()
+    );
+    // a fresh request gets its own deadline window and completes
+    let rx2 =
+        server.submit(b"b", GenParams { max_new_tokens: 3, ..Default::default() });
+    let r2 = rx2.recv_timeout(Duration::from_secs(10)).unwrap();
+    assert_eq!(r2.finish, FinishReason::Length);
+    let m = server.shutdown();
+    assert_eq!(m.deadline_expired, 1);
+    assert_eq!(m.completed, 1);
+}
+
+#[test]
+fn waiting_served_ratio_defers_admission() {
+    // ratio 100: one queued request never outweighs a running batch, so
+    // B waits until A's batch drains — decode occupancy stays exactly 1
+    let mut model = MockModel::new(8, 256, vec![1, 2]);
+    model.decode_delay = Duration::from_millis(1);
+    let server = Server::start(
+        move || Ok(Box::new(model) as _),
+        ServeConfig {
+            max_slots: 4,
+            queue_cap: 16,
+            batch_wait_us: 100,
+            waiting_served_ratio: 100.0,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let rx_a = server.submit_streaming(
+        b"a",
+        GenParams { max_new_tokens: 20, ..Default::default() },
+    );
+    let _ = rx_a.recv_timeout(Duration::from_secs(5)).unwrap();
+    let rx_b =
+        server.submit(b"b", GenParams { max_new_tokens: 4, ..Default::default() });
+    let rb = rx_b.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(rb.finish, FinishReason::Length);
+    assert!(
+        rb.batch_trace.iter().all(|&b| b == 1),
+        "deferred admission still co-batched: {:?}",
+        rb.batch_trace
+    );
+    while let Ok(ev) = rx_a.recv_timeout(Duration::from_secs(10)) {
+        if matches!(ev, StreamEvent::Done(_)) {
+            break;
+        }
+    }
+    let m = server.shutdown();
+    assert_eq!(m.completed, 2);
+    assert!(
+        (m.mean_decode_batch() - 1.0).abs() < 1e-9,
+        "occupancy {} != 1.0",
+        m.mean_decode_batch()
+    );
+}
+
+#[test]
+fn finished_sequences_leave_the_batch_the_same_step() {
+    // A (2 tokens) and B (10 tokens) co-decode at most ONE step: the
+    // step A finishes it must already be gone from B's next batch
+    let mut model = MockModel::new(8, 256, vec![1, 2]);
+    model.prefill_buckets = vec![1, 2];
+    let server = Server::start(move || Ok(Box::new(model) as _), cfg(4)).unwrap();
+    let rx_a =
+        server.submit(b"a", GenParams { max_new_tokens: 2, ..Default::default() });
+    let rx_b =
+        server.submit(b"b", GenParams { max_new_tokens: 10, ..Default::default() });
+    let ra = rx_a.recv_timeout(Duration::from_secs(10)).unwrap();
+    let rb = rx_b.recv_timeout(Duration::from_secs(10)).unwrap();
+    assert_eq!(ra.generated.len(), 2);
+    assert_eq!(rb.generated.len(), 10);
+    // A runs exactly one decode step, so B can see batch=2 at most once;
+    // a stale member would leave a second (or later) batch-2 entry
+    assert!(
+        rb.batch_trace.iter().filter(|&&b| b == 2).count() <= 1,
+        "finished sequence lingered in the batch: {:?}",
+        rb.batch_trace
+    );
+    let m = server.shutdown();
+    assert_eq!(m.completed, 2);
+}
+
+#[test]
+fn non_bucket_membership_pads_instead_of_failing() {
+    // the only compiled decode bucket is 2: a single live sequence must
+    // be padded onto it (scatter/gather remap), not error out
+    let model = MockModel::new(8, 256, vec![2]);
+    let server = Server::start(move || Ok(Box::new(model) as _), cfg(4)).unwrap();
+    let rx =
+        server.submit(b"a", GenParams { max_new_tokens: 3, ..Default::default() });
+    let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    assert_eq!(r.finish, FinishReason::Length);
+    assert_eq!(r.generated, b"bcd");
+    let m = server.shutdown();
+    assert!(m.decode_padded_slots >= 1, "pad path never exercised");
+    assert!(m.decode_slot_utilization() < 1.0);
+    assert_eq!(m.failed, 0);
+}
+
+// --- remap-not-recompile on the planned backend ----------------------------
+
+fn nano() -> ModelShape {
+    ModelShape {
+        name: "nano-mamba".into(),
+        arch: "mamba".into(),
+        vocab_size: 256,
+        d_model: 32,
+        n_layers: 2,
+        d_state: 8,
+        d_conv: 3,
+        expand: 2,
+        dt_rank: 4,
+        headdim: 32,
+        chunk: 16,
+    }
+}
+
+#[test]
+fn membership_churn_never_recompiles_planned_buckets() {
+    let shape = nano();
+    let window = 8;
+    let weights = PlannedServeModel::random_weights(&shape, 11);
+    let server = Server::start(
+        move || {
+            Ok(Box::new(PlannedServeModel::new(
+                &shape, &weights, window, &[1, 2], 1, "baseline",
+            )?) as Box<dyn ServeModel>)
+        },
+        ServeConfig {
+            max_slots: 4,
+            queue_cap: 16,
+            batch_wait_us: 100,
+            prefill_window: window,
+            // keep the compile gauge deterministic: no prefix tier (its
+            // resume plan compiles lazily on first hit) and a single
+            // prompt length-class throughout
+            prefix_cache_mb: 0,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // warmup: overlap two requests so batch sizes 1 AND 2 both execute
+    let w: Vec<_> = (0..2)
+        .map(|_| {
+            server.submit(b"warm", GenParams { max_new_tokens: 6, ..Default::default() })
+        })
+        .collect();
+    for rx in w {
+        rx.recv_timeout(Duration::from_secs(60)).unwrap();
+    }
+    let warm = server.metrics();
+    assert!(warm.plan_compiles > 0, "gauge never exported");
+
+    // churn: staggered decode maxima force joins/leaves every few steps;
+    // same prompt length as warmup = same (already compiled) class
+    let rxs: Vec<_> = (0..6)
+        .map(|i| {
+            server.submit(
+                b"warm",
+                GenParams { max_new_tokens: 2 + (i % 4), ..Default::default() },
+            )
+        })
+        .collect();
+    for rx in rxs {
+        assert_eq!(
+            rx.recv_timeout(Duration::from_secs(60)).unwrap().finish,
+            FinishReason::Length
+        );
+    }
+    let m = server.shutdown();
+    assert_eq!(m.completed, 8);
+    assert_eq!(
+        m.plan_compiles, warm.plan_compiles,
+        "membership churn triggered a plan recompile"
+    );
+}
