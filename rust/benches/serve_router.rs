@@ -1,0 +1,181 @@
+//! Replicated-serving bench: multi-turn session traffic through the
+//! `coordinator::router` front-end over a 2-replica planned-backend
+//! fleet.
+//!
+//! The workload is the router's reason to exist: concurrent
+//! conversations whose follow-up turns carry a `session_id`. Affinity
+//! routes each follow-up to the replica holding the conversation's
+//! recurrent state, so it resumes from the prefix cache in O(new
+//! tokens) — the numbers here put fleet throughput and TTFT behind CI's
+//! regression gate, and the run asserts the residency actually
+//! happened (`affinity_hits`, `resumed_tokens`) rather than trusting
+//! the topology.
+//!
+//! Run: `cargo bench --bench serve_router`
+//!
+//! CI (`bench-smoke`) runs it with `XAMBA_BENCH_QUICK=1` and
+//! `XAMBA_BENCH_JSON=...`, appending fleet throughput and TTFT p95 to
+//! the artifact `xamba bench-check` gates against the committed
+//! baseline.
+
+use std::time::{Duration, Instant};
+
+use xamba::config::{ModelShape, ServeConfig};
+use xamba::coordinator::{
+    EngineReplica, FinishReason, GenParams, PlannedServeModel, ReplicaHandle, Router,
+    ServeModel,
+};
+use xamba::util::{bench, Table};
+
+/// Small block shapes: the subject is fleet scheduling, not GEMM
+/// throughput.
+fn nano() -> ModelShape {
+    ModelShape {
+        name: "nano-mamba".into(),
+        arch: "mamba".into(),
+        vocab_size: 256,
+        d_model: 32,
+        n_layers: 2,
+        d_state: 8,
+        d_conv: 3,
+        expand: 2,
+        dt_rank: 4,
+        headdim: 16,
+        chunk: 8,
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx]
+}
+
+fn main() {
+    let quick = bench::quick_mode();
+    let sessions = if quick { 3 } else { 6 };
+    let turns = if quick { 2 } else { 4 };
+
+    let shape = nano();
+    let window = 8usize;
+    let weights = PlannedServeModel::random_weights(&shape, 42);
+    let router = Router::start(2, 32, move |i| {
+        let shape = shape.clone();
+        let weights = weights.clone();
+        let cfg = ServeConfig {
+            max_slots: 8,
+            queue_cap: 64,
+            batch_wait_us: 100,
+            prefill_window: window,
+            ..Default::default()
+        };
+        let replica = EngineReplica::start(
+            move || {
+                Ok(Box::new(
+                    PlannedServeModel::new(
+                        &shape,
+                        &weights,
+                        window,
+                        &[1, 2, 4],
+                        1,
+                        "baseline",
+                    )?
+                    .with_prefill_chunk(4)?,
+                ) as Box<dyn ServeModel>)
+            },
+            cfg,
+            format!("replica{i}:nano-mamba:baseline:f32"),
+        )?;
+        Ok(Box::new(replica) as Box<dyn ReplicaHandle>)
+    })
+    .expect("start replicated fleet");
+
+    // warmup: concurrent no-session requests spread across both replicas
+    // compile the chunk-prefill and small decode plans off the clock
+    let warm: Vec<_> = (0..4)
+        .map(|_| {
+            router.submit(
+                b"warmup prompt bytes",
+                GenParams { max_new_tokens: 4, ..Default::default() },
+            )
+        })
+        .collect();
+    for rx in warm {
+        let r = rx.recv_timeout(Duration::from_secs(300)).expect("warmup");
+        assert_eq!(r.finish, FinishReason::Length);
+    }
+
+    // measured phase: every session submits each turn concurrently;
+    // follow-up prompts extend the conversation (history ++ reply ++
+    // new text), so affinity + prefix residency are on the clocked path
+    let mut histories: Vec<Vec<u8>> =
+        (0..sessions).map(|i| format!("session{i:02}: hello").into_bytes()).collect();
+    let t0 = Instant::now();
+    let mut tokens = 0usize;
+    let mut ttfts_ms: Vec<f64> = Vec::new();
+    for _turn in 0..turns {
+        let rxs: Vec<_> = histories
+            .iter()
+            .enumerate()
+            .map(|(i, h)| {
+                router.submit(
+                    h,
+                    GenParams {
+                        max_new_tokens: 4,
+                        session_id: Some(i as u64),
+                        ..Default::default()
+                    },
+                )
+            })
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv_timeout(Duration::from_secs(300)).expect("turn response");
+            assert_eq!(r.finish, FinishReason::Length);
+            tokens += r.generated.len();
+            ttfts_ms.push(r.ttft_us / 1e3);
+            histories[i].extend_from_slice(&r.generated);
+            histories[i].extend_from_slice(b" and more");
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let m = router.shutdown();
+
+    // the topology must have done its job, not just finished
+    assert_eq!(m.failed, 0, "fleet dropped requests");
+    assert_eq!(m.router_rebalanced, 0, "steady-state traffic rebalanced");
+    let follow_ups = (sessions * (turns - 1)) as u64;
+    assert!(
+        m.affinity_hits >= follow_ups,
+        "only {} of {} follow-ups rode their session pin",
+        m.affinity_hits,
+        follow_ups
+    );
+    assert!(m.resumed_tokens > 0, "no follow-up resumed from the prefix cache");
+
+    ttfts_ms.sort_by(|a, b| a.total_cmp(b));
+    let tok_per_s = tokens as f64 / elapsed;
+    let p95 = percentile(&ttfts_ms, 0.95);
+    let mut table = Table::new(&["metric", "value"])
+        .with_title("serve_router: 2-replica fleet, multi-turn session traffic");
+    table.row(&["replicas".into(), "2".into()]);
+    table.row(&["sessions x turns".into(), format!("{sessions} x {turns}")]);
+    table.row(&["tokens out".into(), tokens.to_string()]);
+    table.row(&["throughput".into(), format!("{tok_per_s:.1} tok/s")]);
+    table.row(&["ttft p95".into(), format!("{p95:.1} ms")]);
+    table.row(&["affinity hits".into(), m.affinity_hits.to_string()]);
+    table.row(&["resumed tokens".into(), m.resumed_tokens.to_string()]);
+    println!("{table}");
+
+    if let Some(path) = bench::metrics_path() {
+        bench::record(
+            &path,
+            &[
+                ("serve_router_tok_per_s".to_string(), tok_per_s),
+                ("serve_router_ttft_p95_ms".to_string(), p95),
+            ],
+        )
+        .expect("record bench metrics");
+    }
+}

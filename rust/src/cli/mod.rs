@@ -12,7 +12,9 @@ mod args;
 pub use args::Args;
 
 use crate::config::{self, presets, NpuConfig, ServeConfig};
-use crate::coordinator::{start_backend, GenParams};
+use crate::coordinator::{
+    start_backend, start_planned_router, GenParams, Metrics, Response, Router, Server,
+};
 use crate::graph::Census;
 use crate::npu::Profile;
 use crate::passes::{actiba::ActibaPass, cumba::CumbaPass, reduba::RedubaPass, Pass};
@@ -51,6 +53,8 @@ COMMANDS:
             [--prefix-cache-mb 32] [--prefill-chunk 0]
             [--max-batch-total-tokens 0] [--waiting-served-ratio 0.0]
             [--deadline-ms 0]
+            [--replicas 1] [--replica-dtypes f32,f16,i8,i8]
+            [--replica-workers 2,2,1,1] [--replica-inflight 32]
             [--max-new 48] [--temperature 0.0]
             reads prompts from stdin (one per line), prints completions;
             the default planned backend serves BOTH model families
@@ -71,7 +75,13 @@ COMMANDS:
             --waiting-served-ratio defers admission until the queue is
             that many times the running batch (0 = admit eagerly), and
             --deadline-ms finishes requests as DeadlineExceeded past a
-            wall-clock deadline (0 = none)
+            wall-clock deadline (0 = none);
+            --replicas > 1 starts a router over that many independent
+            engines (least-loaded dispatch, session affinity, failover;
+            planned backend only), --replica-dtypes / --replica-workers
+            give per-replica overrides for heterogeneous fleets (one
+            entry per replica), and --replica-inflight caps dispatched
+            requests per replica (keep <= queue_cap; 0 = uncapped)
   profile   --model block130m-mamba2 [--t 4] [--passes cumba,reduba,actiba]
             [--config FILE] [--pipelined] [--energy]
             simulated-NPU per-op latency breakdown
@@ -86,10 +96,12 @@ COMMANDS:
             non-zero when the quantized perplexity regresses past the
             given fraction (the CI quality-smoke gate)
   bench-check --pr BENCH_pr.json --baseline benches/baseline_serve.json
-            [--max-regress 0.20]
+            [--max-regress 0.20] [--summary FILE]
             compare a bench metrics file against the committed baseline;
-            exits non-zero on any >20% tokens/sec or TTFT regression
-            (the CI bench-smoke gate)
+            exits non-zero on any tokens/sec or TTFT regression past the
+            tolerance (the CI bench-smoke gate); --summary also writes
+            the delta table as markdown (floor, PR value, % delta,
+            pass/fail) for the CI job summary, even when the gate fails
   help
 ";
 
@@ -98,12 +110,12 @@ fn npu_from(args: &Args) -> Result<NpuConfig, String> {
     Ok(NpuConfig::from_doc(&doc, "npu"))
 }
 
-fn parse_bucket_list(flag: &str, list: &str) -> Result<Vec<usize>, String> {
+fn parse_usize_list(flag: &str, list: &str, what: &str) -> Result<Vec<usize>, String> {
     list.split(',')
         .map(|s| {
             s.trim()
                 .parse::<usize>()
-                .map_err(|_| format!("--{flag}: {s:?} is not a batch size"))
+                .map_err(|_| format!("--{flag}: {s:?} is not a {what}"))
         })
         .collect()
 }
@@ -135,10 +147,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         cfg.workers = w;
     }
     if let Some(list) = args.get("buckets") {
-        cfg.decode_buckets = parse_bucket_list("buckets", list)?;
+        cfg.decode_buckets = parse_usize_list("buckets", list, "batch size")?;
     }
     if let Some(list) = args.get("prefill-buckets") {
-        cfg.prefill_buckets = parse_bucket_list("prefill-buckets", list)?;
+        cfg.prefill_buckets = parse_usize_list("prefill-buckets", list, "batch size")?;
     }
     if let Some(v) = args.get("steal-chunk") {
         cfg.steal_chunk = v
@@ -164,6 +176,24 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     if let Some(v) = args.get_usize("deadline-ms") {
         cfg.deadline_ms = v as u64;
     }
+    // replica fleet knobs (router in front of N engines)
+    if let Some(v) = args.get_usize("replicas") {
+        cfg.replicas = v;
+    }
+    if let Some(list) = args.get("replica-dtypes") {
+        cfg.replica_dtypes = list
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+    }
+    if let Some(list) = args.get("replica-workers") {
+        cfg.replica_workers =
+            parse_usize_list("replica-workers", list, "worker count")?;
+    }
+    if let Some(v) = args.get_usize("replica-inflight") {
+        cfg.replica_inflight = v;
+    }
     if cfg.backend == "pjrt" {
         for flag in [
             "weights",
@@ -186,14 +216,53 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     }
     let max_new = args.get_usize("max-new").unwrap_or(48);
     let temperature = args.get_f32("temperature").unwrap_or(0.0);
-    let server = start_backend(&cfg).map_err(|e| format!("{e:#}"))?;
+
+    // one engine, or a router over N of them — same client surface
+    enum Frontend {
+        Single(Server),
+        Fleet(Router),
+    }
+    impl Frontend {
+        fn submit(
+            &self,
+            prompt: &[u8],
+            params: GenParams,
+        ) -> std::sync::mpsc::Receiver<Response> {
+            match self {
+                Frontend::Single(s) => s.submit(prompt, params),
+                Frontend::Fleet(r) => r.submit(prompt, params),
+            }
+        }
+        fn shutdown(self) -> Metrics {
+            match self {
+                Frontend::Single(s) => s.shutdown(),
+                Frontend::Fleet(r) => r.shutdown(),
+            }
+        }
+    }
+    let server = if cfg.replicas > 1 {
+        if cfg.backend == "pjrt" {
+            return Err(
+                "replicated serving (--replicas > 1) runs on the planned backend"
+                    .into(),
+            );
+        }
+        Frontend::Fleet(start_planned_router(&cfg).map_err(|e| format!("{e:#}"))?)
+    } else {
+        Frontend::Single(start_backend(&cfg).map_err(|e| format!("{e:#}"))?)
+    };
     eprintln!(
-        "serving {} ({}, dtype {}) on the {} backend — type a prompt per line, \
+        "serving {} ({}, dtype {}) on the {} backend{} — type a prompt per line, \
          ctrl-d to stop",
         cfg.model,
         cfg.variant,
         if cfg.dtype.is_empty() { "f32" } else { &cfg.dtype },
-        cfg.backend
+        cfg.backend,
+        if cfg.replicas > 1 {
+            format!(" x {} replicas", cfg.replicas)
+        } else {
+            String::new()
+        }
     );
     let stdin = std::io::stdin();
     let mut line = String::new();
@@ -325,6 +394,12 @@ fn cmd_bench_check(args: &Args) -> Result<(), String> {
         .ok_or("bench-check needs --baseline FILE")?;
     let tolerance = args.get_f32("max-regress").unwrap_or(0.20) as f64;
     let checks = crate::util::bench::check_files(pr, baseline, tolerance)?;
+    // write the markdown delta table BEFORE the pass/fail verdict so CI
+    // can publish it to the job summary even when the gate fails
+    if let Some(path) = args.get("summary") {
+        let md = crate::util::bench::summary_markdown(&checks, tolerance);
+        std::fs::write(path, md).map_err(|e| format!("--summary {path}: {e}"))?;
+    }
     let mut table = crate::util::Table::new(&["metric", "baseline", "pr", "change", "ok"])
         .with_title(&format!("bench regression gate (tolerance {:.0}%)", tolerance * 100.0));
     let mut regressed = Vec::new();

@@ -253,6 +253,22 @@ pub struct ServeConfig {
     /// scheduler finishes the request as DeadlineExceeded and frees its
     /// budget. 0 = no deadline.
     pub deadline_ms: u64,
+    /// Replica engines behind the serving router. 1 = a single engine
+    /// (no router); >1 starts `coordinator::router` with least-loaded
+    /// routing and session affinity across this many engines.
+    pub replicas: usize,
+    /// Per-replica serving dtype overrides for heterogeneous fleets
+    /// (e.g. ["f32", "f16", "i8", "i8"]); replicas beyond the list keep
+    /// the base `dtype`. Empty = homogeneous fleet.
+    pub replica_dtypes: Vec<String>,
+    /// Per-replica worker-thread overrides; replicas beyond the list
+    /// keep the base `workers`. Empty = homogeneous fleet.
+    pub replica_workers: Vec<usize>,
+    /// Router dispatch cap: requests outstanding (dispatched, not yet
+    /// resolved) per replica. Keep at or below `queue_cap` so balanced
+    /// dispatch alone can never trip a replica's own Overloaded
+    /// backpressure. 0 = uncapped.
+    pub replica_inflight: usize,
 }
 
 impl Default for ServeConfig {
@@ -278,6 +294,10 @@ impl Default for ServeConfig {
             max_batch_total_tokens: 0,
             waiting_served_ratio: 0.0,
             deadline_ms: 0,
+            replicas: 1,
+            replica_dtypes: Vec::new(),
+            replica_workers: Vec::new(),
+            replica_inflight: 32,
         }
     }
 }
@@ -356,6 +376,52 @@ impl ServeConfig {
                 self.waiting_served_ratio
             ));
         }
+        if self.replicas == 0 {
+            return Err("serve replicas must be >= 1 (1 = no router)".into());
+        }
+        if !self.replica_dtypes.is_empty() && self.replica_dtypes.len() != self.replicas
+        {
+            return Err(format!(
+                "serve replica_dtypes lists {} dtypes for {} replicas \
+                 (give one per replica, or none for a homogeneous fleet)",
+                self.replica_dtypes.len(),
+                self.replicas
+            ));
+        }
+        for dt in &self.replica_dtypes {
+            match crate::graph::tensor::DType::parse_serve(dt) {
+                None => {
+                    let supported = crate::graph::tensor::SERVE_DTYPES
+                        .iter()
+                        .map(|d| d.name())
+                        .collect::<Vec<_>>()
+                        .join(", ");
+                    return Err(format!(
+                        "unknown replica dtype {dt:?} \
+                         (supported dtypes: {supported})"
+                    ));
+                }
+                Some(crate::graph::tensor::DType::F32) => {}
+                Some(d) if !planned => {
+                    return Err(format!(
+                        "replica dtype {:?} requires the planned backend \
+                         (the pjrt backend executes f32 AOT artifacts)",
+                        d.name()
+                    ));
+                }
+                Some(_) => {}
+            }
+        }
+        if !self.replica_workers.is_empty()
+            && self.replica_workers.len() != self.replicas
+        {
+            return Err(format!(
+                "serve replica_workers lists {} counts for {} replicas \
+                 (give one per replica, or none for a homogeneous fleet)",
+                self.replica_workers.len(),
+                self.replicas
+            ));
+        }
         Ok(())
     }
 
@@ -374,6 +440,38 @@ impl ServeConfig {
                     _ => None,
                 })
                 .unwrap_or_else(|| default.to_vec())
+        };
+        // per-replica override lists accept either a TOML array or the
+        // CLI's comma-separated string form ("f32,f16,i8")
+        let str_list = |name: &str| -> Vec<String> {
+            match doc.get(&k(name)) {
+                Some(super::toml::TomlValue::Arr(a)) => a
+                    .iter()
+                    .filter_map(|x| x.as_str())
+                    .map(|s| s.to_string())
+                    .collect(),
+                Some(super::toml::TomlValue::Str(s)) => s
+                    .split(',')
+                    .map(|p| p.trim())
+                    .filter(|p| !p.is_empty())
+                    .map(|p| p.to_string())
+                    .collect(),
+                _ => Vec::new(),
+            }
+        };
+        let count_list = |name: &str| -> Vec<usize> {
+            match doc.get(&k(name)) {
+                Some(super::toml::TomlValue::Arr(a)) => a
+                    .iter()
+                    .filter_map(|x| x.as_i64())
+                    .map(|x| x.max(0) as usize)
+                    .collect(),
+                Some(super::toml::TomlValue::Str(s)) => s
+                    .split(',')
+                    .filter_map(|p| p.trim().parse::<usize>().ok())
+                    .collect(),
+                _ => Vec::new(),
+            }
         };
         Self {
             backend: doc.str_or(&k("backend"), &d.backend).into(),
@@ -413,6 +511,14 @@ impl ServeConfig {
                 .max(0.0),
             deadline_ms: doc.i64_or(&k("deadline_ms"), d.deadline_ms as i64).max(0)
                 as u64,
+            // a zero/negative replica count would make the router
+            // unstartable: clamp to the single-engine minimum
+            replicas: doc.i64_or(&k("replicas"), d.replicas as i64).max(1) as usize,
+            replica_dtypes: str_list("replica_dtypes"),
+            replica_workers: count_list("replica_workers"),
+            replica_inflight: doc
+                .i64_or(&k("replica_inflight"), d.replica_inflight as i64)
+                .max(0) as usize,
         }
     }
 }
@@ -500,6 +606,88 @@ mod tests {
         assert_eq!(c.max_batch_total_tokens, 0);
         assert_eq!(c.waiting_served_ratio, 0.0);
         assert_eq!(c.deadline_ms, 0);
+    }
+
+    #[test]
+    fn serve_from_doc_parses_replica_knobs() {
+        // TOML array form
+        let doc = TomlDoc::parse(
+            "[serve]\nreplicas = 3\nreplica_dtypes = [\"f32\", \"f16\", \"i8\"]\n\
+             replica_workers = [1, 2, 2]\nreplica_inflight = 8\n",
+        )
+        .unwrap();
+        let c = ServeConfig::from_doc(&doc, "serve");
+        assert_eq!(c.replicas, 3);
+        assert_eq!(c.replica_dtypes, vec!["f32", "f16", "i8"]);
+        assert_eq!(c.replica_workers, vec![1, 2, 2]);
+        assert_eq!(c.replica_inflight, 8);
+        assert_eq!(c.validate(), Ok(()));
+        // comma-separated string form (the CLI flag shape)
+        let doc = TomlDoc::parse(
+            "[serve]\nreplicas = 2\nreplica_dtypes = \"f16, i8\"\n\
+             replica_workers = \"1,2\"\n",
+        )
+        .unwrap();
+        let c = ServeConfig::from_doc(&doc, "serve");
+        assert_eq!(c.replica_dtypes, vec!["f16", "i8"]);
+        assert_eq!(c.replica_workers, vec![1, 2]);
+        // defaults: single engine, homogeneous, capped dispatch
+        let d = ServeConfig::default();
+        assert_eq!(d.replicas, 1);
+        assert!(d.replica_dtypes.is_empty() && d.replica_workers.is_empty());
+        assert_eq!(d.replica_inflight, 32);
+        // negatives clamp instead of wrapping
+        let doc =
+            TomlDoc::parse("[serve]\nreplicas = -2\nreplica_inflight = -1\n").unwrap();
+        let c = ServeConfig::from_doc(&doc, "serve");
+        assert_eq!(c.replicas, 1);
+        assert_eq!(c.replica_inflight, 0);
+    }
+
+    #[test]
+    fn validate_flags_bad_replica_knobs() {
+        let bad = ServeConfig { replicas: 0, ..Default::default() };
+        assert!(bad.validate().unwrap_err().contains("replicas"));
+
+        // list length must match the fleet size
+        let bad = ServeConfig {
+            replicas: 3,
+            replica_dtypes: vec!["f32".into(), "f16".into()],
+            ..Default::default()
+        };
+        let msg = bad.validate().unwrap_err();
+        assert!(msg.contains("replica_dtypes") && msg.contains("3"), "{msg}");
+        let bad = ServeConfig {
+            replicas: 2,
+            replica_workers: vec![1, 2, 4],
+            ..Default::default()
+        };
+        assert!(bad.validate().unwrap_err().contains("replica_workers"));
+
+        // each per-replica dtype is validated like the base dtype
+        let bad = ServeConfig {
+            replicas: 2,
+            replica_dtypes: vec!["f32".into(), "bf16".into()],
+            ..Default::default()
+        };
+        let msg = bad.validate().unwrap_err();
+        assert!(msg.contains("bf16") && msg.contains("f16"), "{msg}");
+        // quantized replicas need the planned backend
+        let bad = ServeConfig {
+            backend: "pjrt".into(),
+            replicas: 2,
+            replica_dtypes: vec!["f32".into(), "i8".into()],
+            ..Default::default()
+        };
+        assert!(bad.validate().unwrap_err().contains("planned backend"));
+
+        let ok = ServeConfig {
+            replicas: 4,
+            replica_dtypes: vec!["f32".into(), "f16".into(), "i8".into(), "i8".into()],
+            replica_workers: vec![2, 2, 1, 1],
+            ..Default::default()
+        };
+        assert_eq!(ok.validate(), Ok(()));
     }
 
     #[test]

@@ -49,6 +49,16 @@ pub struct Metrics {
     pub resumed_tokens: u64,
     /// Prefill chunk-graph invocations (resume / chunked-streaming path).
     pub prefill_chunks: u64,
+    /// Router: requests whose `session_id` pinned them to the replica
+    /// that already holds their conversation's prefix state.
+    pub affinity_hits: u64,
+    /// Router: requests re-routed off their pinned (or first-choice)
+    /// replica — affinity re-pins after a drain/death, plus queued
+    /// requests resubmitted off a dead replica.
+    pub router_rebalanced: u64,
+    /// Router: replicas observed transitioning healthy -> dead (engine
+    /// thread gone); each one leaves the routing rotation.
+    pub replica_unhealthy: u64,
     pub ttft_us: LatencyHistogram,
     pub e2e_us: LatencyHistogram,
     pub per_token_us: LatencyHistogram,
@@ -86,6 +96,9 @@ impl Default for Metrics {
             prefix_evicted: 0,
             resumed_tokens: 0,
             prefill_chunks: 0,
+            affinity_hits: 0,
+            router_rebalanced: 0,
+            replica_unhealthy: 0,
             ttft_us: LatencyHistogram::new(),
             e2e_us: LatencyHistogram::new(),
             per_token_us: LatencyHistogram::new(),
@@ -97,6 +110,50 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    /// Fold another snapshot into this one (fleet aggregation): counters
+    /// add, histograms merge bucket-wise (the log-bucketed histograms
+    /// make cross-replica percentiles exact up to bucket resolution),
+    /// `budget_peak` takes the max (each replica budgets independently,
+    /// so the fleet peak is the worst single replica), and
+    /// `plan_compiles` adds (each replica owns a separate plan cache).
+    /// `started` keeps the earlier of the two so `tokens_per_s` spans
+    /// the whole fleet's lifetime.
+    pub fn merge(&mut self, other: &Metrics) {
+        if other.started < self.started {
+            self.started = other.started;
+        }
+        self.admitted += other.admitted;
+        self.rejected += other.rejected;
+        self.overloaded += other.overloaded;
+        self.cancelled += other.cancelled;
+        self.deadline_expired += other.deadline_expired;
+        self.failed += other.failed;
+        self.completed += other.completed;
+        self.tokens_out += other.tokens_out;
+        self.prefills += other.prefills;
+        self.prefill_calls += other.prefill_calls;
+        self.prefill_batched_seqs += other.prefill_batched_seqs;
+        self.decode_calls += other.decode_calls;
+        self.decode_batched_seqs += other.decode_batched_seqs;
+        self.decode_padded_slots += other.decode_padded_slots;
+        self.budget_peak = self.budget_peak.max(other.budget_peak);
+        self.plan_compiles += other.plan_compiles;
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_misses += other.prefix_misses;
+        self.prefix_evicted += other.prefix_evicted;
+        self.resumed_tokens += other.resumed_tokens;
+        self.prefill_chunks += other.prefill_chunks;
+        self.affinity_hits += other.affinity_hits;
+        self.router_rebalanced += other.router_rebalanced;
+        self.replica_unhealthy += other.replica_unhealthy;
+        self.ttft_us.merge(&other.ttft_us);
+        self.e2e_us.merge(&other.e2e_us);
+        self.per_token_us.merge(&other.per_token_us);
+        self.decode_batch_us.merge(&other.decode_batch_us);
+        self.prefill_batch_us.merge(&other.prefill_batch_us);
+        self.prefill_chunk_us.merge(&other.prefill_chunk_us);
+    }
+
     /// Aggregate decode throughput since start (Tokens/s — the paper's KPI).
     pub fn tokens_per_s(&self) -> f64 {
         let dt = self.started.elapsed().as_secs_f64();
@@ -209,6 +266,9 @@ impl Metrics {
                 format!("{:.2}", self.decode_slot_utilization()),
             ),
             ("plan compiles", format!("{}", self.plan_compiles)),
+            ("affinity hits", format!("{}", self.affinity_hits)),
+            ("router rebalanced", format!("{}", self.router_rebalanced)),
+            ("replica unhealthy", format!("{}", self.replica_unhealthy)),
             ("TTFT p50", format!("{:.2} ms", ttft_p50 / 1e3)),
             ("TTFT p95", format!("{:.2} ms", ttft_p95 / 1e3)),
             ("TTFT p99", format!("{:.2} ms", ttft_p99 / 1e3)),
@@ -254,6 +314,51 @@ mod tests {
         assert!(s.contains("budget peak"));
         assert!(s.contains("padded decode slots"));
         assert!(s.contains("plan compiles"));
+        assert!(s.contains("affinity hits"));
+        assert!(s.contains("router rebalanced"));
+        assert!(s.contains("replica unhealthy"));
+    }
+
+    #[test]
+    fn merge_aggregates_counters_histograms_and_peaks() {
+        let mut a = Metrics::default();
+        a.admitted = 3;
+        a.completed = 2;
+        a.tokens_out = 10;
+        a.budget_peak = 40;
+        a.plan_compiles = 5;
+        a.affinity_hits = 1;
+        a.ttft_us.record_us(100.0);
+        a.ttft_us.record_us(200.0);
+
+        let mut b = Metrics::default();
+        b.admitted = 4;
+        b.completed = 4;
+        b.tokens_out = 20;
+        b.budget_peak = 25;
+        b.plan_compiles = 7;
+        b.router_rebalanced = 2;
+        b.replica_unhealthy = 1;
+        b.ttft_us.record_us(300.0);
+
+        a.merge(&b);
+        assert_eq!(a.admitted, 7);
+        assert_eq!(a.completed, 6);
+        assert_eq!(a.tokens_out, 30);
+        // independent per-replica budgets: fleet peak is the worst ONE
+        assert_eq!(a.budget_peak, 40);
+        // separate plan caches: compile counts add
+        assert_eq!(a.plan_compiles, 12);
+        assert_eq!(a.affinity_hits, 1);
+        assert_eq!(a.router_rebalanced, 2);
+        assert_eq!(a.replica_unhealthy, 1);
+        assert_eq!(a.ttft_us.count(), 3, "histograms merge bucket-wise");
+        // merging an empty snapshot is the identity
+        let snapshot = a.clone();
+        a.merge(&Metrics::default());
+        assert_eq!(a.admitted, snapshot.admitted);
+        assert_eq!(a.ttft_us.count(), snapshot.ttft_us.count());
+        assert_eq!(a.budget_peak, snapshot.budget_peak);
     }
 
     #[test]

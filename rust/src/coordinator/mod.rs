@@ -8,12 +8,15 @@
 //! per-request deadlines, mid-flight batch membership remapped onto the
 //! compiled buckets), SSM state-slot cache (the O(1) "KV cache"), and
 //! serving metrics (TTFT / e2e / per-token histograms, Tokens/s — the
-//! paper's §4 KPI).
+//! paper's §4 KPI). The replicated front-end (`router`) fans the ingress
+//! queue across N such engines with session affinity, so a
+//! conversation's O(1) recurrent state stays resident on its replica.
 
 pub mod batcher;
 pub mod metrics;
 pub mod model;
 pub mod request;
+pub mod router;
 pub mod server;
 pub mod state_cache;
 pub mod tokenizer;
@@ -21,6 +24,10 @@ pub mod tokenizer;
 pub use metrics::Metrics;
 pub use model::{MockModel, PjrtServeModel, PlannedServeModel, SeqState, ServeModel};
 pub use request::{FinishReason, GenParams, Request, Response, StreamEvent};
+pub use router::{
+    replica_config, start_planned_router, EngineReplica, ReplicaHandle, ReplicaStatus,
+    Router,
+};
 pub use server::{sample, start_backend, start_pjrt, start_planned, Server};
 pub use state_cache::StateCache;
 pub use tokenizer::Tokenizer;

@@ -1221,6 +1221,11 @@ pub struct MockModel {
     /// resume-prefill round, in call order. Interleaving tests read it
     /// from outside the engine thread.
     pub event_log: Option<std::sync::Arc<std::sync::Mutex<Vec<(char, usize)>>>>,
+    /// Hard-death switch: once the flag is set, the next model call
+    /// PANICS (not `Err`), unwinding the engine thread exactly like a
+    /// real backend crash — every queued reply channel drops without a
+    /// response. Router failover tests flip it mid-stream.
+    pub die: Option<std::sync::Arc<std::sync::atomic::AtomicBool>>,
 }
 
 impl MockModel {
@@ -1238,6 +1243,15 @@ impl MockModel {
             chunk: 0,
             resume_log: Vec::new(),
             event_log: None,
+            die: None,
+        }
+    }
+
+    fn check_die(&self) {
+        if let Some(flag) = &self.die {
+            if flag.load(std::sync::atomic::Ordering::SeqCst) {
+                panic!("MockModel: synthetic hard death");
+            }
         }
     }
 
@@ -1292,6 +1306,7 @@ impl ServeModel for MockModel {
         resume: Option<&SeqState>,
         checkpoint: &mut dyn FnMut(usize, &SeqState),
     ) -> Result<(Vec<f32>, SeqState)> {
+        self.check_die();
         if self.resume_grain == 0 && resume.is_some() {
             return Err(anyhow!("mock resume disabled"));
         }
@@ -1321,6 +1336,7 @@ impl ServeModel for MockModel {
     }
 
     fn prefill(&mut self, tokens: &[i32]) -> Result<(Vec<f32>, SeqState)> {
+        self.check_die();
         let last = *tokens.last().unwrap();
         let state = SeqState {
             conv: HostTensor::F32(vec![1], vec![last as f32]),
@@ -1330,6 +1346,7 @@ impl ServeModel for MockModel {
     }
 
     fn prefill_batched(&mut self, seqs: &[&[i32]]) -> Result<Vec<(Vec<f32>, SeqState)>> {
+        self.check_die();
         self.prefill_batch_log.push(seqs.len());
         self.log_event('p', seqs.len());
         if !self.prefill_delay.is_zero() {
@@ -1339,6 +1356,7 @@ impl ServeModel for MockModel {
     }
 
     fn decode(&mut self, seqs: &mut [(&mut SeqState, i32)]) -> Result<Vec<Vec<f32>>> {
+        self.check_die();
         self.batch_log.push(seqs.len());
         self.log_event('d', seqs.len());
         if !self.buckets.contains(&seqs.len()) {

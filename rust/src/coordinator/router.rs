@@ -1,0 +1,936 @@
+//! Replicated serving: a router that owns the ingress queue and fans
+//! requests out to N independent replica engines.
+//!
+//! Each replica is a full token-budget engine (its own model, execution
+//! pool, state-slot cache, and metrics) behind the slim [`ReplicaHandle`]
+//! trait; the router adds the fleet-level control plane on one thread:
+//!
+//! - **Least-loaded routing** by live token cost: each replica's
+//!   outstanding (estimated prompt tokens + `max_new_tokens` headroom)
+//!   is the load signal, mirroring the per-engine scheduler budget.
+//! - **Session affinity**: a request carrying a `session_id` pins to the
+//!   replica that served the conversation's previous turn, so its O(1)
+//!   recurrent state stays resident in that replica's prefix cache and
+//!   the follow-up resumes in O(new tokens) — the SSM serving advantage
+//!   a KV-cache fleet cannot keep without shipping the cache around.
+//! - **Liveness / readiness**: a dead replica (engine thread gone) or a
+//!   draining one leaves the rotation. Its queued, not-yet-started
+//!   requests re-route to survivors; an in-flight decode that died with
+//!   the replica is failed WITH its partial output — a reply channel is
+//!   never silently dropped.
+//! - **Rolling restart**: [`Router::drain`] + [`Router::restart`]
+//!   replace one replica under load; dispatch flows around it while it
+//!   is down and the swap waits for its in-flight work to finish.
+//!
+//! Every dispatched request is watched by a relay thread forwarding the
+//! replica's stream to the client. The relay is where failover lives: a
+//! disconnect before any token means the request never started (the
+//! router re-routes it and counts `router_rebalanced`); a disconnect
+//! after tokens flowed means the replica hard-died mid-decode, so the
+//! relay synthesizes a `Failed` response carrying the partial output.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::ServeConfig;
+
+use super::metrics::Metrics;
+use super::model::ServeModel;
+use super::request::{FinishReason, GenParams, Response, StreamEvent};
+use super::server::Server;
+
+/// The seam between the router and one replica engine. Deliberately
+/// slim — submit / health / drain / metrics / shutdown — so a future
+/// out-of-process replica (a socket to another host) can slot in
+/// without touching the routing logic.
+pub trait ReplicaHandle: Send {
+    /// Submit for streaming delivery. The returned channel disconnecting
+    /// WITHOUT a terminal `Done` event is the hard-death signal the
+    /// router's relay watches for.
+    fn submit_streaming(&self, prompt: &[u8], params: GenParams)
+        -> Receiver<StreamEvent>;
+    /// Liveness: false once the engine is gone (clean exit or panic).
+    fn healthy(&self) -> bool;
+    /// Readiness: healthy AND accepting new work (false while draining).
+    fn ready(&self) -> bool;
+    /// Stop accepting new work; in-flight requests keep running.
+    fn drain(&self);
+    /// Metrics snapshot (stays readable after the engine died).
+    fn metrics(&self) -> Metrics;
+    /// Human-readable identity for status output (model/dtype/workers).
+    fn descriptor(&self) -> String;
+    /// Stop the engine (in-flight work completes) and return its final
+    /// metrics.
+    fn shutdown(self: Box<Self>) -> Metrics;
+}
+
+/// An in-process replica: one [`Server`] engine plus the router-facing
+/// readiness latch ([`ReplicaHandle::drain`] flips it; the engine itself
+/// keeps running so in-flight decodes finish).
+pub struct EngineReplica {
+    server: Server,
+    desc: String,
+    accepting: AtomicBool,
+}
+
+impl EngineReplica {
+    pub fn new(server: Server, desc: String) -> Self {
+        Self { server, desc, accepting: AtomicBool::new(true) }
+    }
+
+    /// Start a replica over any model factory (the model is constructed
+    /// inside the engine thread, like [`Server::start`]).
+    pub fn start<F>(factory: F, cfg: ServeConfig, desc: String) -> Result<Self>
+    where
+        F: FnOnce() -> Result<Box<dyn ServeModel>> + Send + 'static,
+    {
+        Ok(Self::new(Server::start(factory, cfg)?, desc))
+    }
+
+    /// Start a replica on the planned executor.
+    pub fn start_planned(cfg: &ServeConfig, desc: String) -> Result<Self> {
+        Ok(Self::new(super::server::start_planned(cfg)?, desc))
+    }
+}
+
+impl ReplicaHandle for EngineReplica {
+    fn submit_streaming(
+        &self,
+        prompt: &[u8],
+        params: GenParams,
+    ) -> Receiver<StreamEvent> {
+        self.server.submit_streaming(prompt, params)
+    }
+
+    fn healthy(&self) -> bool {
+        self.server.is_alive()
+    }
+
+    fn ready(&self) -> bool {
+        self.healthy() && self.accepting.load(Ordering::SeqCst)
+    }
+
+    fn drain(&self) {
+        self.accepting.store(false, Ordering::SeqCst);
+    }
+
+    fn metrics(&self) -> Metrics {
+        self.server.metrics()
+    }
+
+    fn descriptor(&self) -> String {
+        self.desc.clone()
+    }
+
+    fn shutdown(self: Box<Self>) -> Metrics {
+        self.server.shutdown()
+    }
+}
+
+/// How the submitting client wants its output delivered (the router's
+/// mirror of the engine's private reply enum).
+enum ClientReply {
+    Final(Sender<Response>),
+    Stream(Sender<StreamEvent>),
+}
+
+impl ClientReply {
+    fn finish(&self, resp: Response) {
+        match self {
+            ClientReply::Final(tx) => {
+                let _ = tx.send(resp);
+            }
+            ClientReply::Stream(tx) => {
+                let _ = tx.send(StreamEvent::Done(resp));
+            }
+        }
+    }
+}
+
+/// A request traveling through the router (queued, dispatched, or being
+/// resubmitted after a replica death).
+struct RouterRequest {
+    id: u64,
+    prompt: Vec<u8>,
+    params: GenParams,
+    reply: ClientReply,
+    /// Estimated token cost (prompt bytes + `max_new_tokens` headroom) —
+    /// the same shape as the engine scheduler's budget charge, held
+    /// against the target replica while the request is outstanding.
+    cost: usize,
+    /// Dispatch attempts so far; a request that bounced off every
+    /// replica fails loudly instead of ping-ponging forever.
+    attempts: usize,
+    /// Replicas that already dropped this request. Routing skips them:
+    /// liveness detection (the engine thread's join state) can trail the
+    /// reply-channel drop by a beat, and a resubmit must not race back
+    /// onto the corpse it just bounced off.
+    tried: Vec<usize>,
+}
+
+enum RouterMsg {
+    Submit(RouterRequest),
+    /// A relay saw its replica die before ANY token arrived: the request
+    /// never started, so it is safe to run elsewhere.
+    Resubmit(usize, RouterRequest),
+    /// A relay resolved (delivered `Done`, synthesized a partial-output
+    /// failure, or observed client cancellation): release the charge.
+    Done { replica: usize, cost: usize, failed_partial: bool },
+    Drain(usize),
+    Restart(usize),
+    Shutdown,
+}
+
+/// Router-side bookkeeping for one replica slot. The handle is `None`
+/// only after a failed restart (the slot is then permanently dead).
+struct ReplicaSlot {
+    handle: Option<Box<dyn ReplicaHandle>>,
+    /// Outstanding estimated token cost — the least-loaded signal.
+    inflight_cost: usize,
+    /// Outstanding dispatched requests (gates the per-replica cap and
+    /// defers restarts until the replica is idle).
+    inflight_reqs: usize,
+    was_healthy: bool,
+    restart_pending: bool,
+    desc: String,
+}
+
+impl ReplicaSlot {
+    fn new(handle: Box<dyn ReplicaHandle>) -> Self {
+        let desc = handle.descriptor();
+        let was_healthy = handle.healthy();
+        Self {
+            handle: Some(handle),
+            inflight_cost: 0,
+            inflight_reqs: 0,
+            was_healthy,
+            restart_pending: false,
+            desc,
+        }
+    }
+
+    fn healthy(&self) -> bool {
+        self.handle.as_ref().map(|h| h.healthy()).unwrap_or(false)
+    }
+
+    fn ready(&self) -> bool {
+        !self.restart_pending
+            && self.handle.as_ref().map(|h| h.ready()).unwrap_or(false)
+    }
+}
+
+/// Point-in-time view of one replica for status output.
+#[derive(Clone, Debug)]
+pub struct ReplicaStatus {
+    pub index: usize,
+    pub descriptor: String,
+    pub healthy: bool,
+    pub ready: bool,
+    /// Requests dispatched and not yet resolved.
+    pub inflight_requests: usize,
+    /// Estimated token cost outstanding (the routing load signal).
+    pub inflight_tokens: usize,
+    pub metrics: Metrics,
+}
+
+struct RouterShared {
+    aggregate: Metrics,
+    replicas: Vec<ReplicaStatus>,
+}
+
+/// Front-end over a replica fleet; the client API mirrors [`Server`]
+/// (`submit` / `submit_streaming` / `metrics` / `shutdown`) plus the
+/// fleet control plane (`drain` / `restart` / `replica_status`).
+pub struct Router {
+    tx: Sender<RouterMsg>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    shared: Arc<Mutex<RouterShared>>,
+    next_id: AtomicU64,
+}
+
+impl Router {
+    /// Build `replicas` engines via `factory(index)` and start the
+    /// routing loop. The factory is kept for rolling restarts, so it is
+    /// `Fn`, not `FnOnce`. `inflight_cap` bounds dispatched-unresolved
+    /// requests per replica (0 = uncapped); keep it at or below each
+    /// engine's `queue_cap` so load-balanced dispatch alone can never
+    /// trip a replica's own Overloaded backpressure.
+    pub fn start<F>(replicas: usize, inflight_cap: usize, factory: F) -> Result<Router>
+    where
+        F: Fn(usize) -> Result<Box<dyn ReplicaHandle>> + Send + 'static,
+    {
+        let n = replicas.max(1);
+        let mut slots = Vec::with_capacity(n);
+        for i in 0..n {
+            slots.push(ReplicaSlot::new(factory(i)?));
+        }
+        let shared = Arc::new(Mutex::new(RouterShared {
+            aggregate: Metrics::default(),
+            replicas: Vec::new(),
+        }));
+        let (tx, rx) = channel::<RouterMsg>();
+        let relay_tx = tx.clone();
+        let shared2 = shared.clone();
+        let worker = std::thread::Builder::new()
+            .name("xamba-router".into())
+            .spawn(move || {
+                router_loop(slots, factory, inflight_cap, rx, relay_tx, shared2)
+            })
+            .expect("spawn router");
+        Ok(Router {
+            tx,
+            worker: Some(worker),
+            shared,
+            next_id: AtomicU64::new(1),
+        })
+    }
+
+    fn enqueue(&self, prompt: &[u8], params: GenParams, reply: ClientReply) {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        // byte-level tokenizer: prompt bytes ~ prompt tokens, so this is
+        // the same cost shape the engine scheduler charges
+        let cost = prompt.len().max(1) + params.max_new_tokens;
+        let req = RouterRequest {
+            id,
+            prompt: prompt.to_vec(),
+            params,
+            reply,
+            cost,
+            attempts: 0,
+            tried: Vec::new(),
+        };
+        // a send error means the router already shut down; the receiver
+        // reports disconnection to the caller
+        let _ = self.tx.send(RouterMsg::Submit(req));
+    }
+
+    /// Submit a prompt; returns a receiver for the final response.
+    pub fn submit(&self, prompt: &[u8], params: GenParams) -> Receiver<Response> {
+        let (reply_tx, reply_rx) = channel();
+        self.enqueue(prompt, params, ClientReply::Final(reply_tx));
+        reply_rx
+    }
+
+    /// Submit a prompt for streaming delivery (tokens forwarded from the
+    /// serving replica as they are sampled).
+    pub fn submit_streaming(
+        &self,
+        prompt: &[u8],
+        params: GenParams,
+    ) -> Receiver<StreamEvent> {
+        let (reply_tx, reply_rx) = channel();
+        self.enqueue(prompt, params, ClientReply::Stream(reply_tx));
+        reply_rx
+    }
+
+    /// Fleet-aggregated metrics: every replica's snapshot folded through
+    /// [`Metrics::merge`], plus the router's own counters
+    /// (`affinity_hits`, `router_rebalanced`, `replica_unhealthy`).
+    pub fn metrics(&self) -> Metrics {
+        self.shared.lock().unwrap().aggregate.clone()
+    }
+
+    /// Per-replica status (health, readiness, live load, metrics).
+    pub fn replica_status(&self) -> Vec<ReplicaStatus> {
+        self.shared.lock().unwrap().replicas.clone()
+    }
+
+    /// Take one replica out of rotation; its in-flight work finishes.
+    pub fn drain(&self, replica: usize) {
+        let _ = self.tx.send(RouterMsg::Drain(replica));
+    }
+
+    /// Rolling restart: drain the replica, wait for its in-flight work,
+    /// then rebuild it with the spawn factory and return it to rotation.
+    pub fn restart(&self, replica: usize) {
+        let _ = self.tx.send(RouterMsg::Restart(replica));
+    }
+
+    /// Stop accepting work, drain the fleet, and return the final
+    /// aggregated metrics.
+    pub fn shutdown(mut self) -> Metrics {
+        let _ = self.tx.send(RouterMsg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        self.shared.lock().unwrap().aggregate.clone()
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        let _ = self.tx.send(RouterMsg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Deliver an empty `Failed` response (no healthy replica could take the
+/// request) — the client always hears back.
+fn fail_request(req: &RouterRequest, local: &mut Metrics) {
+    local.failed += 1;
+    req.reply.finish(Response {
+        id: req.id,
+        prompt: req.prompt.clone(),
+        generated: vec![],
+        finish: FinishReason::Failed,
+        ttft_us: 0.0,
+        e2e_us: 0.0,
+        batch_trace: vec![],
+    });
+}
+
+/// Apply one control/ingress message; true = shutdown requested.
+fn on_msg(
+    msg: RouterMsg,
+    pending: &mut VecDeque<RouterRequest>,
+    slots: &mut [ReplicaSlot],
+    sessions: &mut HashMap<u64, usize>,
+    local: &mut Metrics,
+) -> bool {
+    match msg {
+        RouterMsg::Submit(req) => pending.push_back(req),
+        RouterMsg::Resubmit(from, mut req) => {
+            if let Some(s) = slots.get_mut(from) {
+                s.inflight_reqs = s.inflight_reqs.saturating_sub(1);
+                s.inflight_cost = s.inflight_cost.saturating_sub(req.cost);
+            }
+            // un-pin the session from the replica that dropped it so the
+            // re-route below establishes a fresh pin
+            if let Some(sid) = req.params.session_id {
+                if sessions.get(&sid) == Some(&from) {
+                    sessions.remove(&sid);
+                }
+            }
+            local.router_rebalanced += 1;
+            req.attempts += 1;
+            if req.attempts >= slots.len() {
+                // bounced off every replica: give up loudly
+                fail_request(&req, local);
+            } else {
+                pending.push_back(req);
+            }
+        }
+        RouterMsg::Done { replica, cost, failed_partial } => {
+            if let Some(s) = slots.get_mut(replica) {
+                s.inflight_reqs = s.inflight_reqs.saturating_sub(1);
+                s.inflight_cost = s.inflight_cost.saturating_sub(cost);
+            }
+            if failed_partial {
+                local.failed += 1;
+            }
+        }
+        RouterMsg::Drain(i) => {
+            if let Some(s) = slots.get(i) {
+                if let Some(h) = &s.handle {
+                    h.drain();
+                }
+            }
+        }
+        RouterMsg::Restart(i) => {
+            if let Some(s) = slots.get_mut(i) {
+                if let Some(h) = &s.handle {
+                    h.drain();
+                }
+                s.restart_pending = true;
+            }
+        }
+        RouterMsg::Shutdown => return true,
+    }
+    false
+}
+
+enum RouteOutcome {
+    To(usize),
+    /// No replica can take the request RIGHT NOW (all at capacity or
+    /// draining) but at least one is alive: keep it queued.
+    Hold,
+    /// Every replica is dead: the request can never run.
+    NoReplica,
+}
+
+/// Pick a replica: session affinity first (the pinned replica holds the
+/// conversation's recurrent state — residency beats load balance, so the
+/// pin also bypasses the inflight cap), else least outstanding token
+/// cost among ready, under-cap replicas.
+fn route(
+    slots: &[ReplicaSlot],
+    sessions: &mut HashMap<u64, usize>,
+    local: &mut Metrics,
+    req: &RouterRequest,
+    inflight_cap: usize,
+) -> RouteOutcome {
+    if let Some(sid) = req.params.session_id {
+        if let Some(&r) = sessions.get(&sid) {
+            if !req.tried.contains(&r)
+                && slots.get(r).map(|s| s.ready()).unwrap_or(false)
+            {
+                local.affinity_hits += 1;
+                return RouteOutcome::To(r);
+            }
+            // the pinned replica left the rotation (drained or died):
+            // the conversation re-pins to a survivor and re-prefills
+            sessions.remove(&sid);
+            local.router_rebalanced += 1;
+        }
+    }
+    let mut best: Option<usize> = None;
+    for (i, s) in slots.iter().enumerate() {
+        if !s.ready() || req.tried.contains(&i) {
+            continue;
+        }
+        if inflight_cap > 0 && s.inflight_reqs >= inflight_cap {
+            continue;
+        }
+        if best
+            .map(|b| s.inflight_cost < slots[b].inflight_cost)
+            .unwrap_or(true)
+        {
+            best = Some(i);
+        }
+    }
+    match best {
+        Some(r) => {
+            if let Some(sid) = req.params.session_id {
+                sessions.insert(sid, r);
+            }
+            RouteOutcome::To(r)
+        }
+        None if slots.iter().any(|s| s.healthy()) => RouteOutcome::Hold,
+        None => RouteOutcome::NoReplica,
+    }
+}
+
+/// Hand a routed request to its replica and spawn the relay thread that
+/// watches the reply stream.
+fn dispatch(
+    replica: usize,
+    req: RouterRequest,
+    slots: &mut [ReplicaSlot],
+    tx: &Sender<RouterMsg>,
+) {
+    let events = slots[replica]
+        .handle
+        .as_ref()
+        .expect("routed to a live replica")
+        .submit_streaming(&req.prompt, req.params.clone());
+    slots[replica].inflight_reqs += 1;
+    slots[replica].inflight_cost += req.cost;
+    let tx = tx.clone();
+    std::thread::Builder::new()
+        .name("xamba-relay".into())
+        .spawn(move || relay(replica, req, events, tx))
+        .expect("spawn relay");
+}
+
+/// Forward one replica stream to the client and classify how it ended.
+/// Runs on its own thread so a stalled replica never blocks the router.
+fn relay(
+    replica: usize,
+    mut req: RouterRequest,
+    events: Receiver<StreamEvent>,
+    tx: Sender<RouterMsg>,
+) {
+    let started = Instant::now();
+    let mut first_token: Option<Instant> = None;
+    let mut collected: Vec<u8> = Vec::new();
+    loop {
+        match events.recv() {
+            Ok(StreamEvent::Token(t)) => {
+                if first_token.is_none() {
+                    first_token = Some(Instant::now());
+                }
+                collected.push(t);
+                if let ClientReply::Stream(ctx) = &req.reply {
+                    if ctx.send(StreamEvent::Token(t)).is_err() {
+                        // client walked away: dropping `events` cancels
+                        // the request at the replica's next decode step
+                        let _ = tx.send(RouterMsg::Done {
+                            replica,
+                            cost: req.cost,
+                            failed_partial: false,
+                        });
+                        return;
+                    }
+                }
+            }
+            Ok(StreamEvent::Done(resp)) => {
+                req.reply.finish(resp);
+                let _ = tx.send(RouterMsg::Done {
+                    replica,
+                    cost: req.cost,
+                    failed_partial: false,
+                });
+                return;
+            }
+            Err(_) => {
+                // the replica engine died without finishing this request
+                if collected.is_empty() {
+                    // never started (still queued behind the engine's
+                    // admission): safe to run on a survivor
+                    req.tried.push(replica);
+                    let _ = tx.send(RouterMsg::Resubmit(replica, req));
+                } else {
+                    // mid-decode: fail WITH the partial output so the
+                    // client learns exactly what it got
+                    req.reply.finish(Response {
+                        id: req.id,
+                        prompt: req.prompt.clone(),
+                        generated: collected,
+                        finish: FinishReason::Failed,
+                        ttft_us: first_token
+                            .map(|t| t.duration_since(started).as_micros() as f64)
+                            .unwrap_or(0.0),
+                        e2e_us: started.elapsed().as_micros() as f64,
+                        batch_trace: vec![],
+                    });
+                    let _ = tx.send(RouterMsg::Done {
+                        replica,
+                        cost: req.cost,
+                        failed_partial: true,
+                    });
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// Publish the aggregated + per-replica snapshot for [`Router::metrics`]
+/// and [`Router::replica_status`] (the slots live on the loop thread).
+fn publish(
+    slots: &[ReplicaSlot],
+    local: &Metrics,
+    retired: &Metrics,
+    shared: &Arc<Mutex<RouterShared>>,
+) {
+    let mut aggregate = local.clone();
+    aggregate.merge(retired);
+    let mut replicas = Vec::with_capacity(slots.len());
+    for (i, s) in slots.iter().enumerate() {
+        let (healthy, ready, metrics) = match &s.handle {
+            Some(h) => (h.healthy(), s.ready(), h.metrics()),
+            None => (false, false, Metrics::default()),
+        };
+        aggregate.merge(&metrics);
+        replicas.push(ReplicaStatus {
+            index: i,
+            descriptor: s.desc.clone(),
+            healthy,
+            ready,
+            inflight_requests: s.inflight_reqs,
+            inflight_tokens: s.inflight_cost,
+            metrics,
+        });
+    }
+    let mut sh = shared.lock().unwrap();
+    sh.aggregate = aggregate;
+    sh.replicas = replicas;
+}
+
+fn router_loop<F>(
+    mut slots: Vec<ReplicaSlot>,
+    factory: F,
+    inflight_cap: usize,
+    rx: Receiver<RouterMsg>,
+    relay_tx: Sender<RouterMsg>,
+    shared: Arc<Mutex<RouterShared>>,
+) where
+    F: Fn(usize) -> Result<Box<dyn ReplicaHandle>>,
+{
+    let mut pending: VecDeque<RouterRequest> = VecDeque::new();
+    let mut sessions: HashMap<u64, usize> = HashMap::new();
+    // the router's own counters (affinity/rebalance/health + requests it
+    // failed itself); replica counters are merged in at publish time
+    let mut local = Metrics::default();
+    // final metrics of replicas retired by restart or shutdown
+    let mut retired = Metrics::default();
+    let mut shutting_down = false;
+
+    loop {
+        // --- ingress + relay resolutions --------------------------------
+        loop {
+            match rx.try_recv() {
+                Ok(msg) => {
+                    if on_msg(msg, &mut pending, &mut slots, &mut sessions, &mut local)
+                    {
+                        shutting_down = true;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+
+        // --- health sweep ------------------------------------------------
+        for s in slots.iter_mut() {
+            let h = s.healthy();
+            if s.was_healthy && !h {
+                // engine thread gone: out of rotation; its dispatched
+                // requests resolve through their relays (resubmit or
+                // partial-output failure), never a dropped channel
+                local.replica_unhealthy += 1;
+            }
+            s.was_healthy = h;
+        }
+
+        // --- deferred restarts ------------------------------------------
+        // a restart waits until the replica's outstanding requests have
+        // all resolved (drain stopped new dispatch), then swaps engines
+        for i in 0..slots.len() {
+            if !slots[i].restart_pending || slots[i].inflight_reqs != 0 {
+                continue;
+            }
+            if let Some(h) = slots[i].handle.take() {
+                retired.merge(&h.shutdown());
+            }
+            match factory(i) {
+                Ok(h) => {
+                    slots[i].desc = h.descriptor();
+                    slots[i].was_healthy = h.healthy();
+                    slots[i].handle = Some(h);
+                }
+                Err(e) => {
+                    eprintln!("replica {i} restart failed: {e:#}");
+                    local.replica_unhealthy += 1;
+                    slots[i].was_healthy = false;
+                }
+            }
+            slots[i].restart_pending = false;
+        }
+
+        // --- dispatch ----------------------------------------------------
+        let mut held: VecDeque<RouterRequest> = VecDeque::new();
+        while let Some(req) = pending.pop_front() {
+            match route(&slots, &mut sessions, &mut local, &req, inflight_cap) {
+                RouteOutcome::To(r) => dispatch(r, req, &mut slots, &relay_tx),
+                RouteOutcome::Hold => {
+                    if shutting_down {
+                        // nothing will free up once we stop: fail instead
+                        // of deadlocking the drain
+                        fail_request(&req, &mut local);
+                    } else {
+                        held.push_back(req);
+                    }
+                }
+                RouteOutcome::NoReplica => fail_request(&req, &mut local),
+            }
+        }
+        pending = held;
+
+        // --- publish -----------------------------------------------------
+        publish(&slots, &local, &retired, &shared);
+
+        // --- drained shutdown -------------------------------------------
+        if shutting_down
+            && pending.is_empty()
+            && slots.iter().all(|s| s.inflight_reqs == 0)
+        {
+            for s in slots.iter_mut() {
+                if let Some(h) = s.handle.take() {
+                    retired.merge(&h.shutdown());
+                }
+            }
+            publish(&slots, &local, &retired, &shared);
+            return;
+        }
+
+        // --- idle wait ---------------------------------------------------
+        match rx.recv_timeout(Duration::from_millis(1)) {
+            Ok(msg) => {
+                if on_msg(msg, &mut pending, &mut slots, &mut sessions, &mut local) {
+                    shutting_down = true;
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            // unreachable while the loop holds a relay sender, but the
+            // defensive arm keeps the loop total
+            Err(RecvTimeoutError::Disconnected) => shutting_down = true,
+        }
+    }
+}
+
+/// Per-replica config: the base serving config with this replica's
+/// dtype / worker-count overrides applied (heterogeneous fleets:
+/// `--replicas 4 --replica-dtypes f32,f16,i8,i8`).
+pub fn replica_config(cfg: &ServeConfig, index: usize) -> ServeConfig {
+    let mut c = cfg.clone();
+    if let Some(dt) = cfg.replica_dtypes.get(index) {
+        c.dtype = dt.clone();
+    }
+    if let Some(&w) = cfg.replica_workers.get(index) {
+        c.workers = w;
+    }
+    c
+}
+
+/// Start a router over `cfg.replicas` planned-executor engines, each
+/// configured by [`replica_config`]. Validates the base config (and each
+/// per-replica dtype) up front.
+pub fn start_planned_router(cfg: &ServeConfig) -> Result<Router> {
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    let base = cfg.clone();
+    Router::start(cfg.replicas.max(1), cfg.replica_inflight, move |i| {
+        let c = replica_config(&base, i);
+        let desc = format!(
+            "replica{}:{}:{}:{} workers={}",
+            i, c.model, c.variant, c.dtype, c.workers
+        );
+        Ok(Box::new(EngineReplica::start_planned(&c, desc)?) as Box<dyn ReplicaHandle>)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::model::MockModel;
+
+    fn mock_fleet(n: usize) -> Router {
+        Router::start(n, 32, move |i| {
+            let cfg = ServeConfig {
+                max_slots: 8,
+                queue_cap: 64,
+                batch_wait_us: 100,
+                ..Default::default()
+            };
+            let server = Server::start(
+                move || Ok(Box::new(MockModel::new(8, 256, vec![1, 2, 4])) as _),
+                cfg,
+            )?;
+            Ok(Box::new(EngineReplica::new(server, format!("mock{i}")))
+                as Box<dyn ReplicaHandle>)
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn requests_complete_across_the_fleet() {
+        let router = mock_fleet(2);
+        let rxs: Vec<_> = (0..6)
+            .map(|_| {
+                router.submit(
+                    b"a",
+                    GenParams { max_new_tokens: 4, ..Default::default() },
+                )
+            })
+            .collect();
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(r.finish, FinishReason::Length);
+            assert_eq!(r.generated, b"bcde");
+        }
+        let m = router.shutdown();
+        assert_eq!(m.completed, 6);
+        assert_eq!(m.failed, 0);
+    }
+
+    #[test]
+    fn streaming_relays_tokens_through_the_router() {
+        let router = mock_fleet(2);
+        let rx = router.submit_streaming(
+            b"a",
+            GenParams { max_new_tokens: 4, ..Default::default() },
+        );
+        let mut tokens = Vec::new();
+        let mut done = None;
+        while let Ok(ev) = rx.recv_timeout(Duration::from_secs(10)) {
+            match ev {
+                StreamEvent::Token(t) => tokens.push(t),
+                StreamEvent::Done(r) => {
+                    done = Some(r);
+                    break;
+                }
+            }
+        }
+        assert_eq!(tokens, b"bcde");
+        assert_eq!(done.expect("no Done event").generated, b"bcde");
+        router.shutdown();
+    }
+
+    #[test]
+    fn session_requests_pin_and_count_affinity_hits() {
+        let router = mock_fleet(2);
+        for _ in 0..3 {
+            let r = router
+                .submit(
+                    b"a",
+                    GenParams {
+                        max_new_tokens: 3,
+                        session_id: Some(7),
+                        ..Default::default()
+                    },
+                )
+                .recv_timeout(Duration::from_secs(10))
+                .unwrap();
+            assert_eq!(r.finish, FinishReason::Length);
+        }
+        let m = router.shutdown();
+        // turn 1 establishes the pin; turns 2 and 3 hit it
+        assert_eq!(m.affinity_hits, 2);
+        assert_eq!(m.router_rebalanced, 0);
+        assert_eq!(m.completed, 3);
+    }
+
+    #[test]
+    fn drained_replica_leaves_rotation() {
+        let router = mock_fleet(2);
+        router.drain(0);
+        // wait for the loop to apply the drain and publish it
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let st = router.replica_status();
+            if st.len() == 2 && !st[0].ready && st[1].ready {
+                break;
+            }
+            assert!(Instant::now() < deadline, "drain never published");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let rxs: Vec<_> = (0..4)
+            .map(|_| {
+                router.submit(
+                    b"a",
+                    GenParams { max_new_tokens: 3, ..Default::default() },
+                )
+            })
+            .collect();
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(r.finish, FinishReason::Length);
+        }
+        // the published snapshot can trail the loop by one iteration
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let st = router.replica_status();
+            assert_eq!(st[0].metrics.admitted, 0, "drained replica took work");
+            if st[1].metrics.admitted == 4 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "snapshot never caught up");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        router.shutdown();
+    }
+
+    #[test]
+    fn replica_config_applies_per_replica_overrides() {
+        let cfg = ServeConfig {
+            replicas: 3,
+            replica_dtypes: vec!["f32".into(), "f16".into(), "i8".into()],
+            replica_workers: vec![1, 2],
+            ..Default::default()
+        };
+        let c0 = replica_config(&cfg, 0);
+        let c1 = replica_config(&cfg, 1);
+        let c2 = replica_config(&cfg, 2);
+        assert_eq!((c0.dtype.as_str(), c0.workers), ("f32", 1));
+        assert_eq!((c1.dtype.as_str(), c1.workers), ("f16", 2));
+        // lists shorter than the fleet fall back to the base config
+        assert_eq!(c2.dtype, "i8");
+        assert_eq!(c2.workers, ServeConfig::default().workers);
+    }
+}

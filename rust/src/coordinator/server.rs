@@ -203,6 +203,15 @@ impl Server {
         self.metrics.lock().unwrap().clone()
     }
 
+    /// Liveness: false once the engine thread has exited — cleanly or by
+    /// panic (a backend panic unwinds the thread and drops every queued
+    /// reply channel). The router polls this to take a dead replica out
+    /// of rotation; the metrics snapshot above stays readable either way
+    /// (it lives behind an `Arc`, not in the thread).
+    pub fn is_alive(&self) -> bool {
+        self.worker.as_ref().map(|w| !w.is_finished()).unwrap_or(false)
+    }
+
     /// Stop accepting work and join the loop (in-flight work completes).
     pub fn shutdown(mut self) -> Metrics {
         let _ = self.tx.send(Msg::Shutdown);
@@ -1200,6 +1209,55 @@ mod tests {
                 &log[..]
             );
         }
+    }
+
+    #[test]
+    fn is_alive_tracks_engine_thread_death() {
+        let model = MockModel::new(8, 256, vec![1]);
+        let server =
+            Server::start(move || Ok(Box::new(model) as _), test_cfg(2)).unwrap();
+        assert!(server.is_alive(), "fresh server must be live");
+        server.shutdown();
+
+        // a backend PANIC (not an Err) unwinds the engine thread; the
+        // liveness probe is how the router learns a replica hard-died
+        struct PanickingDecode(MockModel);
+        impl ServeModel for PanickingDecode {
+            fn prefill_len(&self) -> usize {
+                self.0.prefill_len()
+            }
+            fn vocab(&self) -> usize {
+                self.0.vocab()
+            }
+            fn decode_buckets(&self) -> &[usize] {
+                self.0.decode_buckets()
+            }
+            fn prefill(&mut self, tokens: &[i32]) -> Result<(Vec<f32>, SeqState)> {
+                self.0.prefill(tokens)
+            }
+            fn decode(
+                &mut self,
+                _seqs: &mut [(&mut SeqState, i32)],
+            ) -> Result<Vec<Vec<f32>>> {
+                panic!("synthetic replica death");
+            }
+        }
+        let model = PanickingDecode(MockModel::new(8, 256, vec![1]));
+        let server =
+            Server::start(move || Ok(Box::new(model) as _), test_cfg(2)).unwrap();
+        let rx = server.submit(b"a", GenParams { max_new_tokens: 5, ..Default::default() });
+        // the reply channel dies WITH the thread: no response, just a
+        // disconnect — exactly the signal the router's relay watches for
+        assert!(rx.recv_timeout(Duration::from_secs(10)).is_err());
+        for _ in 0..200 {
+            if !server.is_alive() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(!server.is_alive(), "panicked engine still reported live");
+        // the metrics Arc outlives the thread
+        assert_eq!(server.metrics().admitted, 1);
     }
 
     #[test]

@@ -100,6 +100,35 @@ pub fn compare(pr: &Json, baseline: &Json, tolerance: f64) -> Result<Vec<Check>,
     Ok(out)
 }
 
+/// Render a set of checks as a GitHub-flavored markdown table — the
+/// `bench-check --summary` payload the CI bench-smoke job appends to
+/// `$GITHUB_STEP_SUMMARY` so every PR shows its perf deltas inline.
+pub fn summary_markdown(checks: &[Check], tolerance: f64) -> String {
+    let regressed = checks.iter().filter(|c| c.regressed).count();
+    let mut s = format!(
+        "### Bench regression gate (tolerance {:.0}%)\n\n\
+         | bench | committed floor | PR value | delta | status |\n\
+         | --- | ---: | ---: | ---: | :---: |\n",
+        tolerance * 100.0
+    );
+    for c in checks {
+        s.push_str(&format!(
+            "| `{}` | {:.2} | {:.2} | {:+.1}% | {} |\n",
+            c.key,
+            c.baseline,
+            c.got,
+            c.change_pct,
+            if c.regressed { "**REGRESSED**" } else { "ok" }
+        ));
+    }
+    s.push_str(&format!(
+        "\n{} of {} metrics within tolerance.\n",
+        checks.len() - regressed,
+        checks.len()
+    ));
+    s
+}
+
 /// [`compare`] over files on disk (the `xamba bench-check` entry point).
 pub fn check_files(
     pr_path: &str,
@@ -159,6 +188,74 @@ mod tests {
         let base = obj(&[("a_ms", 1.0)]);
         let pr = obj(&[("a_ms", 1.0), ("b_ms", 9.0)]);
         assert_eq!(compare(&pr, &base, 0.2).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn tolerance_boundary_at_the_ci_gate() {
+        // the CI gate runs at 0.10: -9.9% passes, -10.1% fails (and the
+        // exact edge is NOT a regression — the comparison is strict)
+        let base = obj(&[("decode_tok_per_s", 100.0)]);
+        let just_in = compare(&obj(&[("decode_tok_per_s", 90.1)]), &base, 0.10).unwrap();
+        assert!(!just_in[0].regressed, "{:+.2}%", just_in[0].change_pct);
+        let edge = compare(&obj(&[("decode_tok_per_s", 90.0)]), &base, 0.10).unwrap();
+        assert!(!edge[0].regressed, "exact tolerance edge must pass");
+        let just_out =
+            compare(&obj(&[("decode_tok_per_s", 89.9)]), &base, 0.10).unwrap();
+        assert!(just_out[0].regressed);
+        // same boundary, latency direction
+        let base = obj(&[("ttft_ms", 100.0)]);
+        assert!(!compare(&obj(&[("ttft_ms", 110.0)]), &base, 0.10).unwrap()[0].regressed);
+        assert!(compare(&obj(&[("ttft_ms", 110.2)]), &base, 0.10).unwrap()[0].regressed);
+    }
+
+    #[test]
+    fn nonpositive_baseline_floors_are_errors() {
+        let base = obj(&[("decode_tok_per_s", 0.0)]);
+        let err = compare(&obj(&[("decode_tok_per_s", 1.0)]), &base, 0.1).unwrap_err();
+        assert!(err.contains("positive"), "{err}");
+    }
+
+    #[test]
+    fn check_files_surfaces_missing_and_malformed_inputs() {
+        let dir = std::env::temp_dir();
+        let pr = dir.join(format!("xamba_gate_pr_{}.json", std::process::id()));
+        let base = dir.join(format!("xamba_gate_base_{}.json", std::process::id()));
+        let (pr, base) = (pr.to_str().unwrap(), base.to_str().unwrap());
+        let _ = std::fs::remove_file(pr);
+
+        // missing PR artifact: the error says the benches never ran
+        std::fs::write(base, "{\"a_ms\": 1.0}").unwrap();
+        let err = check_files(pr, base, 0.1).unwrap_err();
+        assert!(err.contains("did the benches run"), "{err}");
+
+        // malformed PR JSON fails loudly, not as a silent pass
+        std::fs::write(pr, "{not json").unwrap();
+        assert!(check_files(pr, base, 0.1).is_err());
+        // malformed baseline too
+        std::fs::write(pr, "{\"a_ms\": 1.0}").unwrap();
+        std::fs::write(base, "[1, 2]").unwrap();
+        let err = check_files(pr, base, 0.1).unwrap_err();
+        assert!(err.contains("not a JSON object"), "{err}");
+
+        // and the happy path over real files
+        std::fs::write(base, "{\"a_ms\": 1.0}").unwrap();
+        let checks = check_files(pr, base, 0.1).unwrap();
+        assert_eq!(checks.len(), 1);
+        assert!(!checks[0].regressed);
+        let _ = std::fs::remove_file(pr);
+        let _ = std::fs::remove_file(base);
+    }
+
+    #[test]
+    fn summary_markdown_renders_the_delta_table() {
+        let base = obj(&[("decode_tok_per_s", 100.0), ("ttft_ms", 10.0)]);
+        let pr = obj(&[("decode_tok_per_s", 80.0), ("ttft_ms", 9.0)]);
+        let checks = compare(&pr, &base, 0.10).unwrap();
+        let md = summary_markdown(&checks, 0.10);
+        assert!(md.contains("tolerance 10%"), "{md}");
+        assert!(md.contains("| `decode_tok_per_s` | 100.00 | 80.00 | -20.0% | **REGRESSED** |"), "{md}");
+        assert!(md.contains("| `ttft_ms` | 10.00 | 9.00 | +10.0% | ok |"), "{md}");
+        assert!(md.contains("1 of 2 metrics within tolerance"), "{md}");
     }
 
     #[test]

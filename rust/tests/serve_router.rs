@@ -1,0 +1,391 @@
+//! Acceptance tests of the replicated serving router: session-affinity
+//! residency on the replica holding the conversation's recurrent state,
+//! failover that never drops a reply channel when a replica hard-dies
+//! mid-stream, heterogeneous (mixed-dtype) fleets with correct metric
+//! aggregation, and rolling drain-restart under load.
+//!
+//! Mock-backed tests use `MockModel` (counter semantics make resume and
+//! partial output trivially checkable; its `die` flag panics the engine
+//! thread exactly like a real backend crash); the mixed-dtype test runs
+//! real `PlannedServeModel` replicas end to end.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use xamba::config::{ModelShape, ServeConfig};
+use xamba::coordinator::{
+    EngineReplica, FinishReason, GenParams, MockModel, PlannedServeModel,
+    ReplicaHandle, Router, ServeModel, StreamEvent,
+};
+use xamba::graph::DType;
+
+fn fleet_cfg() -> ServeConfig {
+    ServeConfig {
+        max_slots: 8,
+        queue_cap: 64,
+        batch_wait_us: 100,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn session_follow_up_resumes_on_its_pinned_replica() {
+    // resume-capable mocks: the fleet-level claim under test is that a
+    // follow-up turn lands where the conversation's state lives and only
+    // prefills its new suffix
+    let router = Router::start(2, 32, move |i| {
+        let replica = EngineReplica::start(
+            move || {
+                let mut m = MockModel::new(8, 256, vec![1, 2, 4]);
+                m.resume_grain = 1;
+                m.chunk = 4;
+                m.decode_delay = Duration::from_millis(2);
+                Ok(Box::new(m) as Box<dyn ServeModel>)
+            },
+            fleet_cfg(),
+            format!("mock{i}"),
+        )?;
+        Ok(Box::new(replica) as Box<dyn ReplicaHandle>)
+    })
+    .unwrap();
+
+    // turn 1 of session 42: both replicas idle, so least-loaded routing
+    // picks replica 0 and the session pins there
+    let p1 = b"abcdefghijklmnop";
+    let r1 = router
+        .submit(
+            p1,
+            GenParams { max_new_tokens: 4, session_id: Some(42), ..Default::default() },
+        )
+        .recv_timeout(Duration::from_secs(10))
+        .unwrap();
+    assert_eq!(r1.generated, b"qrst");
+
+    // wait for turn 1's routing charge to drain, then park a long
+    // no-session stream on replica 0 (still the least-loaded tie win):
+    // plain load balancing would now send the follow-up to the idle
+    // replica 1 — only session affinity keeps it with its state
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while router.replica_status()[0].inflight_requests != 0 {
+        assert!(Instant::now() < deadline, "turn 1 charge never freed");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let blocker = router
+        .submit_streaming(b"z", GenParams { max_new_tokens: 400, ..Default::default() });
+    match blocker.recv_timeout(Duration::from_secs(10)).unwrap() {
+        StreamEvent::Token(_) => {}
+        StreamEvent::Done(r) => panic!("blocker finished early: {r:?}"),
+    }
+
+    // turn 2: history ++ reply ++ new text. 19 of its 31 tokens are the
+    // shared history (prompt ++ generated minus the unfed last sample),
+    // which must RESUME from replica 0's prefix cache; only the 12-token
+    // suffix prefills. Counter semantics pin decode-exactness: '!' -> "#
+    let mut p2 = p1.to_vec();
+    p2.extend_from_slice(&r1.generated);
+    p2.extend_from_slice(b" more data!");
+    let r2 = router
+        .submit(
+            &p2,
+            GenParams { max_new_tokens: 2, session_id: Some(42), ..Default::default() },
+        )
+        .recv_timeout(Duration::from_secs(10))
+        .unwrap();
+    assert_eq!(r2.generated, b"\"#", "resume was not decode-exact");
+
+    // replica-level residency: the hit is on the pinned replica; the
+    // idle one never saw any of the conversation
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let st = router.replica_status();
+        assert_eq!(st[1].metrics.admitted, 0, "work leaked to replica 1");
+        if st[0].metrics.prefix_hits == 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "prefix hit never published");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    // client walks away from the blocker; the relay cancels it upstream
+    drop(blocker);
+
+    let m = router.shutdown();
+    assert_eq!(m.affinity_hits, 1, "turn 2 must ride the session pin");
+    assert_eq!(m.router_rebalanced, 0);
+    assert_eq!(m.prefix_hits, 1);
+    assert_eq!(m.resumed_tokens, 19, "shared history was re-prefilled");
+    assert!(m.completed >= 2);
+    assert_eq!(m.failed, 0);
+}
+
+#[test]
+fn replica_death_mid_stream_loses_no_reply_channels() {
+    let flags: Vec<Arc<AtomicBool>> =
+        (0..2).map(|_| Arc::new(AtomicBool::new(false))).collect();
+    let factory_flags = flags.clone();
+    let router = Router::start(2, 32, move |i| {
+        let flag = factory_flags[i].clone();
+        let cfg = ServeConfig {
+            max_slots: 4,
+            queue_cap: 64,
+            batch_wait_us: 100,
+            // defer admission while anything decodes: the pinned flood
+            // below stays queued with zero tokens served, exercising the
+            // requeue-not-started half of failover
+            waiting_served_ratio: 1000.0,
+            ..Default::default()
+        };
+        let replica = EngineReplica::start(
+            move || {
+                let mut m = MockModel::new(8, 256, vec![1, 2, 4]);
+                m.decode_delay = Duration::from_millis(3);
+                m.die = Some(flag);
+                Ok(Box::new(m) as Box<dyn ServeModel>)
+            },
+            cfg,
+            format!("mock{i}"),
+        )?;
+        Ok(Box::new(replica) as Box<dyn ReplicaHandle>)
+    })
+    .unwrap();
+
+    // a streaming conversation starts decoding on replica 0, pinning
+    // session 9 there
+    let stream = router.submit_streaming(
+        b"a",
+        GenParams { max_new_tokens: 100, session_id: Some(9), ..Default::default() },
+    );
+    let mut streamed = Vec::new();
+    while streamed.len() < 2 {
+        match stream.recv_timeout(Duration::from_secs(10)).unwrap() {
+            StreamEvent::Token(t) => streamed.push(t),
+            StreamEvent::Done(r) => panic!("stream finished early: {r:?}"),
+        }
+    }
+
+    // three follow-ups ride the pin onto replica 0 and queue behind the
+    // stream, un-prefilled
+    let followups: Vec<_> = (0..3)
+        .map(|_| {
+            router.submit(
+                b"a",
+                GenParams { max_new_tokens: 3, session_id: Some(9), ..Default::default() },
+            )
+        })
+        .collect();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let st = router.replica_status();
+        if st[0].inflight_requests == 4 {
+            break;
+        }
+        assert_eq!(st[1].inflight_requests, 0, "follow-up dodged the session pin");
+        assert!(Instant::now() < deadline, "follow-ups never dispatched");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let survivor_compiles = router.replica_status()[1].metrics.plan_compiles;
+
+    // hard death: the next model call panics, unwinding the engine
+    // thread and dropping every queued reply channel at once
+    flags[0].store(true, Ordering::SeqCst);
+
+    // the in-flight stream fails WITH the partial output it streamed
+    let dead = loop {
+        match stream.recv_timeout(Duration::from_secs(10)).unwrap() {
+            StreamEvent::Token(t) => streamed.push(t),
+            StreamEvent::Done(r) => break r,
+        }
+    };
+    assert_eq!(dead.finish, FinishReason::Failed);
+    assert!(!dead.generated.is_empty(), "partial output lost in the failure");
+    assert_eq!(dead.generated, streamed, "failure response disagrees with the stream");
+
+    // the queued follow-ups re-route to the survivor and complete:
+    // every reply channel answers
+    for rx in followups {
+        let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(r.finish, FinishReason::Length);
+        assert_eq!(r.generated, b"bcd");
+    }
+    let st = router.replica_status();
+    assert_eq!(
+        st[1].metrics.plan_compiles, survivor_compiles,
+        "failover must not recompile the survivor"
+    );
+
+    let m = router.shutdown();
+    assert_eq!(m.completed, 3);
+    assert_eq!(m.failed, 1, "exactly the mid-decode casualty");
+    assert_eq!(m.router_rebalanced, 3, "one requeue per not-yet-started request");
+    assert_eq!(m.replica_unhealthy, 1);
+    // 3 pinned follow-ups before the death; after it, the first requeue
+    // re-pins the session to the survivor and the other two hit the pin
+    assert_eq!(m.affinity_hits, 5);
+}
+
+#[test]
+fn mixed_dtype_fleet_serves_and_aggregates_per_replica_metrics() {
+    let shape = ModelShape {
+        name: "nano-mamba".into(),
+        arch: "mamba".into(),
+        vocab_size: 256,
+        d_model: 32,
+        n_layers: 2,
+        d_state: 8,
+        d_conv: 3,
+        expand: 2,
+        dt_rank: 4,
+        headdim: 16,
+        chunk: 8,
+    };
+    let weights = PlannedServeModel::random_weights(&shape, 42);
+    let router = Router::start(3, 32, move |i| {
+        let name = ["f32", "f16", "i8"][i];
+        let shape = shape.clone();
+        let weights = weights.clone();
+        let cfg = ServeConfig {
+            max_slots: 4,
+            queue_cap: 16,
+            batch_wait_us: 100,
+            // keep plan_compiles a pure function of the traffic shape
+            prefix_cache_mb: 0,
+            ..Default::default()
+        };
+        let replica = EngineReplica::start(
+            move || {
+                let dt = match name {
+                    "f16" => DType::F16,
+                    "i8" => DType::I8,
+                    _ => DType::F32,
+                };
+                Ok(Box::new(PlannedServeModel::new_dtyped(
+                    &shape, &weights, 8, &[1, 2], 1, "baseline", dt,
+                )?) as Box<dyn ServeModel>)
+            },
+            cfg,
+            format!("replica{i}:{name}"),
+        )?;
+        Ok(Box::new(replica) as Box<dyn ReplicaHandle>)
+    })
+    .unwrap();
+
+    // three equal-cost requests submitted back to back spread one per
+    // replica (least-loaded: each dispatch charges its target before the
+    // next routes)
+    let rxs: Vec<_> = (0..3)
+        .map(|_| {
+            router.submit(b"abcd", GenParams { max_new_tokens: 4, ..Default::default() })
+        })
+        .collect();
+    for rx in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert_eq!(r.finish, FinishReason::Length);
+        assert_eq!(r.generated.len(), 4);
+    }
+
+    // every dtype replica served exactly one request
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let st = loop {
+        let st = router.replica_status();
+        if st.iter().all(|s| s.metrics.completed == 1) {
+            break st;
+        }
+        assert!(Instant::now() < deadline, "per-replica completions never published");
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    for (i, name) in ["f32", "f16", "i8"].iter().enumerate() {
+        assert_eq!(st[i].descriptor, format!("replica{i}:{name}"));
+        assert!(
+            st[i].metrics.plan_compiles > 0,
+            "{} replica compiled nothing",
+            name
+        );
+    }
+    let compiled: u64 = st.iter().map(|s| s.metrics.plan_compiles).sum();
+    let served: u64 = st.iter().map(|s| s.metrics.tokens_out).sum();
+
+    // the aggregate is exactly the per-replica sum — nothing double
+    // counted, nothing dropped when the fleet shuts down
+    let m = router.shutdown();
+    assert_eq!(m.completed, 3);
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.plan_compiles, compiled);
+    assert_eq!(m.tokens_out, served);
+}
+
+#[test]
+fn rolling_restart_under_load_causes_no_overloads() {
+    let router = Router::start(2, 32, move |i| {
+        let replica = EngineReplica::start(
+            move || {
+                let mut m = MockModel::new(8, 256, vec![1, 2, 4]);
+                m.decode_delay = Duration::from_millis(1);
+                Ok(Box::new(m) as Box<dyn ServeModel>)
+            },
+            fleet_cfg(),
+            format!("mock{i}"),
+        )?;
+        Ok(Box::new(replica) as Box<dyn ReplicaHandle>)
+    })
+    .unwrap();
+
+    let wave = |n: usize| -> Vec<_> {
+        (0..n)
+            .map(|_| {
+                router.submit(b"ab", GenParams { max_new_tokens: 4, ..Default::default() })
+            })
+            .collect()
+    };
+
+    // wave 1: both replicas serving
+    let wave1 = wave(8);
+    // restart replica 0 in the middle of wave 2's arrivals: dispatch
+    // must flow around the draining replica, and the engine swap waits
+    // for its in-flight work
+    let mut wave2 = wave(6);
+    router.restart(0);
+    wave2.extend(wave(6));
+    let mut finishes = Vec::new();
+    for rx in wave1.into_iter().chain(wave2) {
+        finishes.push(rx.recv_timeout(Duration::from_secs(10)).unwrap().finish);
+    }
+    assert!(
+        finishes.iter().all(|f| *f == FinishReason::Length),
+        "restart disturbed the fleet: {finishes:?}"
+    );
+
+    // the fresh engine returns to rotation...
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let st = router.replica_status();
+        if st[0].ready && st[0].healthy {
+            break;
+        }
+        assert!(Instant::now() < deadline, "replica 0 never came back");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    // ...and takes its share of wave 3
+    for rx in wave(8) {
+        let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(r.finish, FinishReason::Length);
+    }
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let st = router.replica_status();
+        if st[0].metrics.admitted > 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "restarted replica took no work");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    let m = router.shutdown();
+    // nothing Overloaded, nothing failed, nothing lost across the swap:
+    // the retired engine's counters fold into the aggregate
+    assert_eq!(m.completed, 28);
+    assert_eq!(m.admitted, 28);
+    assert_eq!(m.overloaded, 0);
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.router_rebalanced, 0);
+    assert_eq!(m.replica_unhealthy, 0, "a clean restart is not a health event");
+}
