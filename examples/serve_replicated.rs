@@ -11,7 +11,7 @@
 //!
 //! Run: `cargo run --release --example serve_replicated --
 //!       [--replicas 3] [--replica-dtypes f32,f16,i8]
-//!       [--sessions 6] [--turns 3]`
+//!       [--sessions 6] [--turns 3] [--speculate 2]`
 
 use std::time::{Duration, Instant};
 
@@ -23,6 +23,7 @@ use xamba::util::Table;
 fn status_table(router: &Router, title: &str) -> Table {
     let mut t = Table::new(&[
         "replica", "healthy", "ready", "inflight", "admitted", "completed",
+        "spec accept",
     ])
     .with_title(title);
     for s in router.replica_status() {
@@ -33,6 +34,7 @@ fn status_table(router: &Router, title: &str) -> Table {
             format!("{} req / {} tok", s.inflight_requests, s.inflight_tokens),
             s.metrics.admitted.to_string(),
             s.metrics.completed.to_string(),
+            format!("{:.2}", s.metrics.spec_acceptance_rate()),
         ]);
     }
     t
@@ -78,6 +80,9 @@ fn main() {
         })
         .unwrap_or_default();
 
+    // speculative decoding across the fleet (greedy turns draft via
+    // prompt-lookup; the status table shows each replica's hit rate)
+    let speculate = args.get_usize("speculate").unwrap_or(2) as i64;
     let cfg = ServeConfig {
         replicas,
         replica_dtypes: dtypes,
@@ -85,6 +90,7 @@ fn main() {
         queue_cap: 64,
         prefill_window: 16,
         prefill_chunk: 8,
+        speculate,
         ..Default::default()
     };
     println!(
@@ -128,11 +134,14 @@ fn main() {
     let m = router.shutdown();
     println!(
         "throughput {:.1} tok/s aggregate | affinity hits {} | resumed tokens {} | \
-         rebalanced {}",
+         rebalanced {} | spec acceptance {:.2} ({} of {} drafts)",
         tokens as f64 / wall,
         m.affinity_hits,
         m.resumed_tokens,
-        m.router_rebalanced
+        m.router_rebalanced,
+        m.spec_acceptance_rate(),
+        m.spec_accepted,
+        m.spec_proposed
     );
     println!("{}", m.report());
 }

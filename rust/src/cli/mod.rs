@@ -55,6 +55,7 @@ COMMANDS:
             [--deadline-ms 0]
             [--replicas 1] [--replica-dtypes f32,f16,i8,i8]
             [--replica-workers 2,2,1,1] [--replica-inflight 32]
+            [--speculate 0]
             [--max-new 48] [--temperature 0.0]
             reads prompts from stdin (one per line), prints completions;
             the default planned backend serves BOTH model families
@@ -81,7 +82,11 @@ COMMANDS:
             planned backend only), --replica-dtypes / --replica-workers
             give per-replica overrides for heterogeneous fleets (one
             entry per replica), and --replica-inflight caps dispatched
-            requests per replica (keep <= queue_cap; 0 = uncapped)
+            requests per replica (keep <= queue_cap; 0 = uncapped);
+            --speculate K drafts up to K tokens per decode step via
+            prompt-lookup and verifies them in one batched step (greedy
+            requests, planned backend, f32/f16; output stays bitwise
+            identical to --speculate 0)
   profile   --model block130m-mamba2 [--t 4] [--passes cumba,reduba,actiba]
             [--config FILE] [--pipelined] [--energy]
             simulated-NPU per-op latency breakdown
@@ -193,6 +198,13 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     }
     if let Some(v) = args.get_usize("replica-inflight") {
         cfg.replica_inflight = v;
+    }
+    // parsed signed so "--speculate -1" reaches validate's message
+    // instead of failing as "not a number" here
+    if let Some(v) = args.get("speculate") {
+        cfg.speculate = v
+            .parse::<i64>()
+            .map_err(|_| format!("--speculate: {v:?} is not a draft length"))?;
     }
     if cfg.backend == "pjrt" {
         for flag in [

@@ -10,7 +10,7 @@ pub mod types;
 
 pub use presets::{model_by_name, npu_series2, npu_unit};
 pub use toml::{TomlDoc, TomlValue};
-pub use types::{ModelShape, NpuConfig, ServeConfig};
+pub use types::{ModelShape, NpuConfig, ServeConfig, SPECULATE_CAP};
 
 /// Load a TOML config file; `None` path yields an empty doc (defaults).
 pub fn load(path: Option<&str>) -> Result<TomlDoc, String> {

@@ -13,6 +13,11 @@
 
 use super::toml::TomlDoc;
 
+/// Largest number of drafted tokens per speculative decode step
+/// (`--speculate K`). The verify window is K+1 (drafts + the bonus
+/// token), so this bounds the compiled verify-graph family per bucket.
+pub const SPECULATE_CAP: usize = 8;
+
 /// Cost-model parameters of the simulated NPU (DESIGN.md §1: substitution
 /// for the Intel Core Ultra Series 2 NPU). Defaults are calibrated so the
 /// *baseline* Mamba/Mamba-2 profiles reproduce the bottleneck shares of
@@ -269,6 +274,12 @@ pub struct ServeConfig {
     /// dispatch alone can never trip a replica's own Overloaded
     /// backpressure. 0 = uncapped.
     pub replica_inflight: usize,
+    /// Speculative-decoding draft length K (planned backend, greedy
+    /// requests): a prompt-lookup proposer drafts up to K tokens per
+    /// decode step and one batched verify graph scores the whole window.
+    /// Kept signed so a negative CLI/TOML value reaches `validate` with
+    /// an actionable message instead of wrapping. 0 = off (default).
+    pub speculate: i64,
 }
 
 impl Default for ServeConfig {
@@ -298,6 +309,7 @@ impl Default for ServeConfig {
             replica_dtypes: Vec::new(),
             replica_workers: Vec::new(),
             replica_inflight: 32,
+            speculate: 0,
         }
     }
 }
@@ -422,6 +434,29 @@ impl ServeConfig {
                 self.replicas
             ));
         }
+        if self.speculate < 0 {
+            return Err(format!(
+                "serve speculate must be >= 0 drafted tokens per step \
+                 (got {}; 0 disables speculative decoding)",
+                self.speculate
+            ));
+        }
+        if self.speculate > SPECULATE_CAP as i64 {
+            return Err(format!(
+                "serve speculate {} exceeds the cap of {SPECULATE_CAP} \
+                 drafted tokens per step (longer windows compile large \
+                 verify graphs for little acceptance gain)",
+                self.speculate
+            ));
+        }
+        if self.speculate > 0 && !planned {
+            return Err(format!(
+                "serve speculate {} requires the planned backend \
+                 (the pjrt backend has no verify executables; \
+                 use --backend planned or --speculate 0)",
+                self.speculate
+            ));
+        }
         Ok(())
     }
 
@@ -519,6 +554,8 @@ impl ServeConfig {
             replica_inflight: doc
                 .i64_or(&k("replica_inflight"), d.replica_inflight as i64)
                 .max(0) as usize,
+            // deliberately NOT clamped: validate() owns the error message
+            speculate: doc.i64_or(&k("speculate"), d.speculate),
         }
     }
 }
@@ -688,6 +725,51 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(ok.validate(), Ok(()));
+    }
+
+    #[test]
+    fn serve_from_doc_parses_speculate() {
+        let doc = TomlDoc::parse("[serve]\nspeculate = 4\n").unwrap();
+        let c = ServeConfig::from_doc(&doc, "serve");
+        assert_eq!(c.speculate, 4);
+        assert_eq!(c.validate(), Ok(()));
+        // default is off
+        assert_eq!(ServeConfig::default().speculate, 0);
+        // negatives are preserved so validate can name them
+        let doc = TomlDoc::parse("[serve]\nspeculate = -2\n").unwrap();
+        assert_eq!(ServeConfig::from_doc(&doc, "serve").speculate, -2);
+    }
+
+    #[test]
+    fn validate_flags_bad_speculate() {
+        let bad = ServeConfig { speculate: -1, ..Default::default() };
+        let msg = bad.validate().unwrap_err();
+        assert!(msg.contains("speculate") && msg.contains(">= 0"), "{msg}");
+        assert!(msg.contains("-1"), "{msg}");
+
+        let bad = ServeConfig {
+            speculate: SPECULATE_CAP as i64 + 1,
+            ..Default::default()
+        };
+        let msg = bad.validate().unwrap_err();
+        assert!(msg.contains("speculate") && msg.contains("cap"), "{msg}");
+        assert!(msg.contains(&SPECULATE_CAP.to_string()), "{msg}");
+
+        // speculation needs the planned backend's verify graphs
+        let bad = ServeConfig {
+            backend: "pjrt".into(),
+            speculate: 2,
+            ..Default::default()
+        };
+        let msg = bad.validate().unwrap_err();
+        assert!(msg.contains("planned backend"), "{msg}");
+        assert!(msg.contains("--speculate 0"), "{msg}");
+
+        // every in-range K validates on the planned backend
+        for k in 0..=SPECULATE_CAP as i64 {
+            let ok = ServeConfig { speculate: k, ..Default::default() };
+            assert_eq!(ok.validate(), Ok(()), "speculate {k} must validate");
+        }
     }
 
     #[test]

@@ -59,6 +59,16 @@ pub struct Metrics {
     /// Router: replicas observed transitioning healthy -> dead (engine
     /// thread gone); each one leaves the routing rotation.
     pub replica_unhealthy: u64,
+    /// Speculative decoding: draft tokens proposed across verify steps.
+    pub spec_proposed: u64,
+    /// Speculative decoding: drafted tokens accepted by verification
+    /// (the bonus token every step yields is NOT counted here, so
+    /// acceptance rate is the proposer's true hit rate).
+    pub spec_accepted: u64,
+    /// Tokens emitted across decode/verify rounds — numerator of the
+    /// tokens-per-step gauge (denominator `decode_calls`); > 1.0 per
+    /// step is speculation paying off.
+    pub decode_step_tokens: u64,
     pub ttft_us: LatencyHistogram,
     pub e2e_us: LatencyHistogram,
     pub per_token_us: LatencyHistogram,
@@ -99,6 +109,9 @@ impl Default for Metrics {
             affinity_hits: 0,
             router_rebalanced: 0,
             replica_unhealthy: 0,
+            spec_proposed: 0,
+            spec_accepted: 0,
+            decode_step_tokens: 0,
             ttft_us: LatencyHistogram::new(),
             e2e_us: LatencyHistogram::new(),
             per_token_us: LatencyHistogram::new(),
@@ -146,6 +159,9 @@ impl Metrics {
         self.affinity_hits += other.affinity_hits;
         self.router_rebalanced += other.router_rebalanced;
         self.replica_unhealthy += other.replica_unhealthy;
+        self.spec_proposed += other.spec_proposed;
+        self.spec_accepted += other.spec_accepted;
+        self.decode_step_tokens += other.decode_step_tokens;
         self.ttft_us.merge(&other.ttft_us);
         self.e2e_us.merge(&other.e2e_us);
         self.per_token_us.merge(&other.per_token_us);
@@ -192,6 +208,27 @@ impl Metrics {
             0.0
         } else {
             self.decode_batched_seqs as f64 / total as f64
+        }
+    }
+
+    /// Fraction of drafted tokens that verification accepted (0.0 when
+    /// speculation never ran). The per-step bonus token is excluded, so
+    /// this is the proposer's hit rate, not the speedup.
+    pub fn spec_acceptance_rate(&self) -> f64 {
+        if self.spec_proposed == 0 {
+            0.0
+        } else {
+            self.spec_accepted as f64 / self.spec_proposed as f64
+        }
+    }
+
+    /// Mean tokens emitted per decode/verify round (1.0 = plain decode;
+    /// speculation pushes it toward the verify window size).
+    pub fn decode_tokens_per_step(&self) -> f64 {
+        if self.decode_calls == 0 {
+            0.0
+        } else {
+            self.decode_step_tokens as f64 / self.decode_calls as f64
         }
     }
 
@@ -265,6 +302,18 @@ impl Metrics {
                 "decode slot utilization",
                 format!("{:.2}", self.decode_slot_utilization()),
             ),
+            (
+                "spec proposed/accepted",
+                format!("{}/{}", self.spec_proposed, self.spec_accepted),
+            ),
+            (
+                "spec acceptance rate",
+                format!("{:.2}", self.spec_acceptance_rate()),
+            ),
+            (
+                "decode tokens/step",
+                format!("{:.2}", self.decode_tokens_per_step()),
+            ),
             ("plan compiles", format!("{}", self.plan_compiles)),
             ("affinity hits", format!("{}", self.affinity_hits)),
             ("router rebalanced", format!("{}", self.router_rebalanced)),
@@ -317,6 +366,32 @@ mod tests {
         assert!(s.contains("affinity hits"));
         assert!(s.contains("router rebalanced"));
         assert!(s.contains("replica unhealthy"));
+        assert!(s.contains("spec acceptance rate"));
+        assert!(s.contains("decode tokens/step"));
+    }
+
+    #[test]
+    fn speculation_gauges_math_and_merge() {
+        let mut m = Metrics::default();
+        assert_eq!(m.spec_acceptance_rate(), 0.0);
+        assert_eq!(m.decode_tokens_per_step(), 0.0);
+        m.spec_proposed = 8;
+        m.spec_accepted = 6;
+        m.decode_calls = 4;
+        m.decode_step_tokens = 10;
+        assert!((m.spec_acceptance_rate() - 0.75).abs() < 1e-12);
+        assert!((m.decode_tokens_per_step() - 2.5).abs() < 1e-12);
+
+        let mut other = Metrics::default();
+        other.spec_proposed = 2;
+        other.spec_accepted = 2;
+        other.decode_calls = 1;
+        other.decode_step_tokens = 3;
+        m.merge(&other);
+        assert_eq!(m.spec_proposed, 10);
+        assert_eq!(m.spec_accepted, 8);
+        assert_eq!(m.decode_step_tokens, 13);
+        assert!((m.spec_acceptance_rate() - 0.8).abs() < 1e-12);
     }
 
     #[test]

@@ -18,12 +18,14 @@ pub mod model;
 pub mod request;
 pub mod router;
 pub mod server;
+pub mod speculate;
 pub mod state_cache;
 pub mod tokenizer;
 
 pub use metrics::Metrics;
 pub use model::{MockModel, PjrtServeModel, PlannedServeModel, SeqState, ServeModel};
 pub use request::{FinishReason, GenParams, Request, Response, StreamEvent};
+pub use speculate::{CheckpointRing, PromptLookupProposer, Proposer};
 pub use router::{
     replica_config, start_planned_router, EngineReplica, ReplicaHandle, ReplicaStatus,
     Router,

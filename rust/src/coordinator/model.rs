@@ -131,6 +131,92 @@ pub trait ServeModel {
         }
         Ok((logits, padded))
     }
+    /// Longest speculative-verify window (tokens per call) this backend
+    /// can score in one step. 0 = no verify support, and the engine
+    /// keeps every sequence on the plain decode path.
+    fn verify_window(&self) -> usize {
+        0
+    }
+    /// Score a speculative window for `seqs.len()` sequences (len must
+    /// be a decode bucket) in ONE multi-token step. Every row carries
+    /// the same number of input tokens `kw` (1..=`verify_window()`): the
+    /// sequence's last emitted token followed by kw-1 drafted tokens.
+    /// Returns per-sequence logits at ALL kw positions, flattened
+    /// row-major (kw * vocab); states advance kw steps in place.
+    ///
+    /// Bitwise contract: position p's logits and the final states must
+    /// be identical to kw sequential [`ServeModel::decode`] calls on the
+    /// same tokens — that is what lets greedy speculative output match
+    /// non-speculative decode exactly.
+    fn verify(&mut self, seqs: &mut [(&mut SeqState, &[i32])]) -> Result<Vec<Vec<f32>>> {
+        let _ = seqs;
+        Err(anyhow!("this backend does not support speculative verify"))
+    }
+    /// [`ServeModel::decode_any`]'s remap for verify steps: scatter any
+    /// batch size over the compiled decode buckets (greedy largest-fit,
+    /// remainder padded up with clones of its first real row — the pad
+    /// rows replay the same window, so they are numerically invisible).
+    /// Returns (per-sequence logits, pad slots executed). Like decode,
+    /// membership churn never needs a plan beyond the (bucket, window)
+    /// set already in use.
+    fn verify_any(
+        &mut self,
+        seqs: &mut [(&mut SeqState, &[i32])],
+    ) -> Result<(Vec<Vec<f32>>, usize)> {
+        let b = seqs.len();
+        if b == 0 {
+            return Ok((Vec::new(), 0));
+        }
+        let buckets = self.decode_buckets().to_vec();
+        if buckets.contains(&b) {
+            return Ok((self.verify(seqs)?, 0));
+        }
+        let mut logits = Vec::with_capacity(b);
+        let mut padded = 0usize;
+        let mut off = 0usize;
+        while off < b {
+            let remaining = b - off;
+            if let Some(c) =
+                buckets.iter().copied().filter(|&c| c <= remaining).max()
+            {
+                let mut part: Vec<(&mut SeqState, &[i32])> = seqs
+                    [off..off + c]
+                    .iter_mut()
+                    .map(|(s, t)| (&mut **s, *t))
+                    .collect();
+                logits.extend(self.verify(&mut part)?);
+                off += c;
+            } else {
+                let c = buckets
+                    .iter()
+                    .copied()
+                    .filter(|&c| c >= remaining)
+                    .min()
+                    .ok_or_else(|| {
+                        anyhow!(
+                            "no decode bucket covers a remainder of {remaining} \
+                             (buckets {buckets:?})"
+                        )
+                    })?;
+                let (pad_state, pad_toks) = {
+                    let (s, t) = &seqs[off];
+                    ((**s).clone(), *t)
+                };
+                let mut pad_states: Vec<SeqState> =
+                    vec![pad_state; c - remaining];
+                let mut part: Vec<(&mut SeqState, &[i32])> = seqs[off..]
+                    .iter_mut()
+                    .map(|(s, t)| (&mut **s, *t))
+                    .collect();
+                part.extend(pad_states.iter_mut().map(|s| (s, pad_toks)));
+                let out = self.verify(&mut part)?;
+                logits.extend(out.into_iter().take(remaining));
+                padded += c - remaining;
+                off = b;
+            }
+        }
+        Ok((logits, padded))
+    }
     /// Compiled-plan count of this backend (0 when the notion does not
     /// apply). The scheduler exports it as a gauge so tests and benches
     /// can assert that membership churn never triggers a recompile.
@@ -805,6 +891,65 @@ impl PlannedServeModel {
         }
     }
 
+    /// Per-call verify inputs after the bound parameter prefix: tokens
+    /// (b, kw), then per layer the batch-stacked conv and ssm states —
+    /// the same state layout as [`PlannedServeModel::decode_tail`].
+    fn verify_tail(&self, seqs: &[(&mut SeqState, &[i32])], kw: usize) -> Vec<Tensor> {
+        let b = seqs.len();
+        let conv_len = self.conv_len();
+        let ssm_len = self.ssm_len();
+        let mut tail = Vec::with_capacity(1 + 2 * self.shape.n_layers);
+        let mut toks = Vec::with_capacity(b * kw);
+        for (_, t) in seqs {
+            toks.extend_from_slice(t);
+        }
+        tail.push(Tensor::i32(vec![b, kw], toks));
+        for j in 0..self.shape.n_layers {
+            let mut conv = Vec::with_capacity(b * conv_len);
+            let mut ssm = Vec::with_capacity(b * ssm_len);
+            for (s, _) in seqs {
+                conv.extend_from_slice(
+                    &s.conv.f32_data()[j * conv_len..(j + 1) * conv_len],
+                );
+                ssm.extend_from_slice(&s.ssm.f32_data()[j * ssm_len..(j + 1) * ssm_len]);
+            }
+            tail.push(Tensor::f32(Self::batched(b, &self.conv_shape), conv));
+            tail.push(Tensor::f32(Self::batched(b, &self.ssm_shape), ssm));
+        }
+        tail
+    }
+
+    /// Unpack one verify call's outputs: states land exactly like
+    /// [`PlannedServeModel::apply_outputs`] (the graphs share the state
+    /// layout); the logits row per sequence is `kw * vocab` long.
+    fn apply_verify_outputs(
+        &self,
+        seqs: &mut [(&mut SeqState, &[i32])],
+        outs: &[Tensor],
+        row: usize,
+        logits: &mut Vec<Vec<f32>>,
+    ) {
+        let conv_len = self.conv_len();
+        let ssm_len = self.ssm_len();
+        let nl = self.shape.n_layers;
+        let logits_all = outs[0].as_f32();
+        for (i, (state, _)) in seqs.iter_mut().enumerate() {
+            let mut conv = Vec::with_capacity(nl * conv_len);
+            let mut ssm = Vec::with_capacity(nl * ssm_len);
+            for j in 0..nl {
+                conv.extend_from_slice(
+                    &outs[1 + 2 * j].as_f32()[i * conv_len..(i + 1) * conv_len],
+                );
+                ssm.extend_from_slice(
+                    &outs[2 + 2 * j].as_f32()[i * ssm_len..(i + 1) * ssm_len],
+                );
+            }
+            state.conv = HostTensor::F32(Self::batched(nl, &self.conv_shape), conv);
+            state.ssm = HostTensor::F32(Self::batched(nl, &self.ssm_shape), ssm);
+            logits.push(logits_all[i * row..(i + 1) * row].to_vec());
+        }
+    }
+
     /// Decompose bucket `b` into compiled chunk sizes for the pool's
     /// work-stealing queue — uneven chunks are fine (the queue feeds
     /// whichever worker is free, and submission-order reassembly keeps
@@ -1137,6 +1282,79 @@ impl ServeModel for PlannedServeModel {
         Ok(result)
     }
 
+    /// i8 reports 0: its dynamic per-tensor activation scales would
+    /// couple the kw positions inside one (b, kw, ·) node, so a verify
+    /// step could not stay bitwise-identical to kw decode steps (the
+    /// same coupling that pins i8 buckets unsplit on the pool).
+    fn verify_window(&self) -> usize {
+        if self.dtype == DType::I8 {
+            0
+        } else {
+            crate::config::SPECULATE_CAP + 1
+        }
+    }
+
+    /// One verify-graph call per (bucket, window): plans compile lazily
+    /// under `verify_b{b}_k{kw}` keys into the same cache as decode, so
+    /// after warmup the compile gauge stays flat — the windows in play
+    /// are bounded by `verify_window()` and the buckets are the decode
+    /// set. Runs unsplit (no pool chunking): a verify step is one short
+    /// multi-token graph, and acceptance/rollback happens on the engine
+    /// thread anyway.
+    fn verify(&mut self, seqs: &mut [(&mut SeqState, &[i32])]) -> Result<Vec<Vec<f32>>> {
+        let b = seqs.len();
+        if self.buckets.binary_search(&b).is_err() {
+            return Err(anyhow!("no decode bucket of size {b}"));
+        }
+        let window = self.verify_window();
+        if window == 0 {
+            return Err(anyhow!(
+                "speculative verify is unsupported at this serving dtype"
+            ));
+        }
+        let kw = seqs[0].1.len();
+        if kw == 0 || seqs.iter().any(|(_, t)| t.len() != kw) {
+            return Err(anyhow!(
+                "verify needs equal non-empty token windows per sequence"
+            ));
+        }
+        if kw > window {
+            return Err(anyhow!(
+                "verify window {kw} exceeds the supported maximum {window}"
+            ));
+        }
+        let tail = self.verify_tail(seqs, kw);
+        let key = plan_key_dtyped(
+            self.family.arch(),
+            &format!("verify_b{b}_k{kw}"),
+            self.dtype,
+        );
+        let outs = {
+            let Self { cache, family, shape, variant, params, dtype, weight_dtypes, .. } =
+                self;
+            let family = *family;
+            let dtype = *dtype;
+            cache
+                .run_or_compile_with(
+                    &key,
+                    || {
+                        build_serve_graph(
+                            variant,
+                            dtype,
+                            weight_dtypes,
+                            family.build_verify(shape, b, kw),
+                        )
+                    },
+                    params,
+                    tail,
+                )
+                .map_err(|e| anyhow!(e))?
+        };
+        let mut logits = Vec::with_capacity(b);
+        self.apply_verify_outputs(seqs, &outs, kw * self.vocab, &mut logits);
+        Ok(logits)
+    }
+
     fn decode(&mut self, seqs: &mut [(&mut SeqState, i32)]) -> Result<Vec<Vec<f32>>> {
         let b = seqs.len();
         if self.buckets.binary_search(&b).is_err() {
@@ -1216,6 +1434,10 @@ pub struct MockModel {
     pub chunk: usize,
     /// Every `prefill_resume` call observed: (suffix_len, had_state).
     pub resume_log: Vec<(usize, bool)>,
+    /// Longest verify window the mock advertises (0 = no speculation).
+    pub verify_window: usize,
+    /// Every verify call observed: (batch, window).
+    pub verify_log: Vec<(usize, usize)>,
     /// Optional shared engine-event trace: ('p', batch) per prefill
     /// round, ('d', batch) per decode call, ('r', suffix_len) per
     /// resume-prefill round, in call order. Interleaving tests read it
@@ -1242,6 +1464,8 @@ impl MockModel {
             resume_grain: 0,
             chunk: 0,
             resume_log: Vec::new(),
+            verify_window: 5,
+            verify_log: Vec::new(),
             event_log: None,
             die: None,
         }
@@ -1372,6 +1596,42 @@ impl ServeModel for MockModel {
                 self.logits_for(*tok + 1)
             })
             .collect())
+    }
+
+    fn verify_window(&self) -> usize {
+        self.verify_window
+    }
+
+    /// Counter-model verify: position p predicts `tokens[p] + 1`, the
+    /// state absorbs the whole window — bitwise identical to kw mock
+    /// decode steps by construction, like the real backends.
+    fn verify(&mut self, seqs: &mut [(&mut SeqState, &[i32])]) -> Result<Vec<Vec<f32>>> {
+        self.check_die();
+        let b = seqs.len();
+        self.verify_log.push((b, seqs.first().map_or(0, |(_, t)| t.len())));
+        self.log_event('v', b);
+        if !self.buckets.contains(&b) {
+            return Err(anyhow!("batch {b} is not a bucket"));
+        }
+        let kw = seqs[0].1.len();
+        if kw == 0 || kw > self.verify_window || seqs.iter().any(|(_, t)| t.len() != kw)
+        {
+            return Err(anyhow!("bad verify window"));
+        }
+        if !self.decode_delay.is_zero() {
+            std::thread::sleep(self.decode_delay);
+        }
+        let vocab = self.vocab;
+        let mut out = Vec::with_capacity(b);
+        for (state, toks) in seqs.iter_mut() {
+            state.conv = HostTensor::F32(vec![1], vec![toks[kw - 1] as f32]);
+            let mut row = Vec::with_capacity(kw * vocab);
+            for &t in toks.iter() {
+                row.extend_from_slice(&self.logits_for(t + 1));
+            }
+            out.push(row);
+        }
+        Ok(out)
     }
 }
 

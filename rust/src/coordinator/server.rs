@@ -15,7 +15,7 @@
 //! an explicit [`FinishReason::Overloaded`] under queue saturation round
 //! out the control plane.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -29,6 +29,7 @@ use super::batcher::plan;
 use super::metrics::Metrics;
 use super::model::{SeqState, ServeModel};
 use super::request::{FinishReason, GenParams, Request, RequestId, Response, StreamEvent};
+use super::speculate::{CheckpointRing, PromptLookupProposer, Proposer};
 use super::state_cache::{SlotId, StateCache};
 use super::tokenizer::Tokenizer;
 
@@ -83,6 +84,9 @@ struct ActiveSeq {
     /// Encoded prompt tokens — the completion-promotion key prefix for
     /// the prefix cache (prompt ++ generated tokens the state absorbed).
     prompt_tokens: Vec<i32>,
+    /// Full token history (encoded prompt ++ every generated token) —
+    /// the prompt-lookup proposer's n-gram corpus, grown incrementally.
+    history: Vec<i32>,
     params: GenParams,
     arrived: Instant,
     first_token_at: Instant,
@@ -136,6 +140,21 @@ impl Server {
     where
         F: FnOnce() -> Result<Box<dyn ServeModel>> + Send + 'static,
     {
+        Self::start_with_proposer(factory, cfg, Box::new(PromptLookupProposer::default()))
+    }
+
+    /// Start with a custom speculative-decoding proposer (the default is
+    /// prompt-lookup). Only consulted when `cfg.speculate > 0` and the
+    /// backend advertises a verify window; a tiny draft model can slot
+    /// in through this seam without touching the engine loop.
+    pub fn start_with_proposer<F>(
+        factory: F,
+        cfg: ServeConfig,
+        proposer: Box<dyn Proposer>,
+    ) -> Result<Server>
+    where
+        F: FnOnce() -> Result<Box<dyn ServeModel>> + Send + 'static,
+    {
         let (tx, rx) = channel::<Msg>();
         let (ready_tx, ready_rx) = channel::<Result<()>>();
         let metrics = Arc::new(Mutex::new(Metrics::default()));
@@ -153,7 +172,7 @@ impl Server {
                         return;
                     }
                 };
-                engine_loop(model, cfg, rx, m2)
+                engine_loop(model, cfg, rx, m2, proposer)
             })
             .expect("spawn engine");
         ready_rx
@@ -340,6 +359,7 @@ fn engine_loop(
     cfg: ServeConfig,
     rx: Receiver<Msg>,
     metrics: Arc<Mutex<Metrics>>,
+    mut proposer: Box<dyn Proposer>,
 ) {
     // The truncation window follows the backend: chunked-prefill models
     // accept whole long prompts, window-bound models truncate as before.
@@ -355,6 +375,15 @@ fn engine_loop(
         );
     }
     let (min_len, window) = model.prefill_len_range();
+    // speculation: drafts per step from config, capped so the verify
+    // window (drafts + the bonus position) fits what the backend
+    // advertises; 0 on either side keeps every row on plain decode
+    let spec_k = if cfg.speculate > 0 {
+        (cfg.speculate as usize).min(model.verify_window().saturating_sub(1))
+    } else {
+        0
+    };
+    let mut ring = CheckpointRing::new();
     let budget_total = cfg.max_batch_total_tokens;
     let mut budget_used: usize = 0;
     let mut waiting: VecDeque<Pending> = VecDeque::new();
@@ -537,6 +566,8 @@ fn engine_loop(
                                 let mut m = metrics.lock().unwrap();
                                 m.budget_peak = m.budget_peak.max(budget_used as u64);
                             }
+                            let mut history = enc.clone();
+                            history.push(tok);
                             active.push(ActiveSeq {
                                 id: req.id,
                                 slot,
@@ -544,6 +575,7 @@ fn engine_loop(
                                 generated: vec![tok],
                                 prompt: req.prompt,
                                 prompt_tokens: enc,
+                                history,
                                 params: req.params,
                                 arrived: req.arrived,
                                 first_token_at: now,
@@ -712,6 +744,8 @@ fn engine_loop(
                         let mut m = metrics.lock().unwrap();
                         m.budget_peak = m.budget_peak.max(budget_used as u64);
                     }
+                    let mut history = toks.clone();
+                    history.push(tok);
                     active.push(ActiveSeq {
                         id: req.id,
                         slot,
@@ -719,6 +753,7 @@ fn engine_loop(
                         generated: vec![tok],
                         prompt: req.prompt,
                         prompt_tokens: toks,
+                        history,
                         params: req.params,
                         arrived: req.arrived,
                         first_token_at: now,
@@ -734,114 +769,241 @@ fn engine_loop(
             // between admission rounds (the interleave invariant).
         }
 
-        // --- continuous batched decode --------------------------------------
+        // --- continuous batched decode (optionally speculative) -------------
         //
         // EVERY live sequence advances each step; decode_any remaps the
         // membership onto the compiled bucket plans (greedy decomposition
         // plus padding for an unfittable remainder), so sequences joining
-        // or leaving between steps never trigger a recompile.
+        // or leaving between steps never trigger a recompile. With
+        // `--speculate K`, greedy sequences whose history yields a
+        // prompt-lookup draft advance through ONE batched verify step
+        // instead: their state is checkpointed into the ring first, and
+        // partial acceptance rolls back and re-advances exactly the
+        // accepted tokens — so the post-step state (and therefore every
+        // future token) is bitwise the non-speculative one. Mixed
+        // speculative / plain membership is one batch: rows are grouped
+        // by window length and each group remaps onto the same compiled
+        // buckets.
         if !active.is_empty() {
             let t0 = Instant::now();
-            let slots: Vec<SlotId> = active.iter().map(|s| s.slot).collect();
-            let states = cache.get_many_mut(&slots);
-            let mut seqs: Vec<(&mut SeqState, i32)> = states
-                .into_iter()
-                .zip(active.iter().map(|s| s.last_token))
-                .collect();
-            match model.decode_any(&mut seqs) {
-                Ok((all_logits, padded)) => {
-                    drop(seqs);
-                    let n = active.len();
-                    let step_us = t0.elapsed().as_micros() as f64;
-                    {
-                        let mut m = metrics.lock().unwrap();
-                        // one decode_call per CONTINUOUS step: mean batch
-                        // is the mean number of live sequences advanced
-                        // per step (occupancy), regardless of how many
-                        // bucket executions the remap used underneath
-                        m.decode_calls += 1;
-                        m.decode_batched_seqs += n as u64;
-                        m.decode_padded_slots += padded as u64;
-                        m.tokens_out += n as u64;
-                        m.per_token_us.record_us(step_us / n as f64);
-                        m.decode_batch_us.record_us(step_us);
-                        m.plan_compiles = model.plan_compiles() as u64;
-                    }
-                    enum Exit {
-                        Cancel,
-                        Done(FinishReason),
-                    }
-                    let mut removals: Vec<(usize, Exit)> = Vec::new();
-                    for (i, logits) in all_logits.iter().enumerate() {
-                        let seq = &mut active[i];
-                        let tok = sample(logits, seq.params.temperature, &mut seq.rng);
-                        seq.last_token = tok;
-                        seq.generated.push(tok);
-                        seq.batch_trace.push(n);
-                        if !seq.reply.push_token(tok.clamp(0, 255) as u8) {
-                            removals.push((i, Exit::Cancel));
-                            continue;
-                        }
-                        let hit_stop = seq
+            let vocab = model.vocab();
+            // per-row verify window: [last_token] ++ drafts. Empty draft,
+            // sampled (non-greedy) rows, and rows within one token of
+            // their length limit stay on plain decode (window 1).
+            let windows: Vec<Vec<i32>> = active
+                .iter()
+                .map(|seq| {
+                    let mut w = vec![seq.last_token];
+                    if spec_k > 0 && seq.params.temperature <= 0.0 {
+                        // never draft past the row's remaining length:
+                        // tokens beyond max_new_tokens could only be
+                        // rolled back again
+                        let rem = seq
                             .params
-                            .stop_byte
-                            .map(|b| tok == b as i32)
-                            .unwrap_or(false);
-                        if hit_stop {
-                            removals.push((i, Exit::Done(FinishReason::Stop)));
-                        } else if seq.generated.len() >= seq.params.max_new_tokens {
-                            removals.push((i, Exit::Done(FinishReason::Length)));
+                            .max_new_tokens
+                            .saturating_sub(seq.generated.len());
+                        let k = spec_k.min(rem.saturating_sub(1));
+                        if k > 0 {
+                            let draft = proposer.propose(&seq.history, k);
+                            // a misbehaving proposer cannot push an
+                            // out-of-vocab token into the embed gather
+                            w.extend(
+                                draft
+                                    .into_iter()
+                                    .take(k)
+                                    .take_while(|&t| (0..vocab as i32).contains(&t)),
+                            );
                         }
                     }
-                    // exits leave the batch THE SAME STEP they end:
-                    // indices were collected ascending, so removing in
-                    // descending order keeps every pending index valid
-                    // (swap_remove only disturbs positions >= its own)
-                    for (i, exit) in removals.into_iter().rev() {
-                        let seq = active.swap_remove(i);
-                        budget_used -= seq.cost;
-                        let final_state = cache.release(seq.slot);
-                        match exit {
-                            Exit::Cancel => {
-                                metrics.lock().unwrap().cancelled += 1;
-                            }
-                            Exit::Done(reason) => {
-                                // promote the finished state to the prefix
-                                // tier: it has absorbed the prompt plus
-                                // every generated token EXCEPT the last
-                                // sample (never fed back through decode),
-                                // so the next turn of this conversation
-                                // resumes it decode-exactly. Cancels and
-                                // failures are not promoted; neither is a
-                                // sequence whose absorbed tokens fall
-                                // outside the byte alphabet (its next-turn
-                                // prompt would re-encode them differently
-                                // than the state actually saw them).
-                                let absorbed =
-                                    &seq.generated[..seq.generated.len() - 1];
-                                if cache.prefix_enabled()
-                                    && absorbed.iter().all(|&t| (0..=255).contains(&t))
-                                {
-                                    let mut key = seq.prompt_tokens.clone();
-                                    key.extend_from_slice(absorbed);
-                                    cache.prefix_insert(&key, &final_state);
-                                    let mut m = metrics.lock().unwrap();
-                                    m.prefix_evicted = cache.prefix_evicted;
-                                }
-                                let e2e = seq.finish(reason);
-                                let mut m = metrics.lock().unwrap();
-                                m.completed += 1;
-                                m.e2e_us.record_us(e2e);
-                            }
-                        }
-                    }
-                    continue;
+                    w
+                })
+                .collect();
+            let mut plain: Vec<usize> = Vec::new();
+            let mut spec_groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+            for (i, w) in windows.iter().enumerate() {
+                if w.len() == 1 {
+                    plain.push(i);
+                } else {
+                    spec_groups.entry(w.len()).or_default().push(i);
                 }
-                Err(e) => {
-                    eprintln!("decode step failed: {e:#}; failing the batch");
-                    drop(seqs);
-                    // tell every client instead of letting them stare at
-                    // dead channels until their recvs time out
+            }
+
+            // run the model calls; any failure fails the whole batch,
+            // exactly like a plain decode failure always has
+            let mut step_logits: Vec<Option<Vec<f32>>> = Vec::new();
+            step_logits.resize_with(active.len(), || None);
+            let mut padded_total = 0usize;
+            let mut step_err: Option<anyhow::Error> = None;
+            if !plain.is_empty() {
+                let slots: Vec<SlotId> = plain.iter().map(|&i| active[i].slot).collect();
+                let states = cache.get_many_mut(&slots);
+                let mut seqs: Vec<(&mut SeqState, i32)> = states
+                    .into_iter()
+                    .zip(plain.iter().map(|&i| windows[i][0]))
+                    .collect();
+                match model.decode_any(&mut seqs) {
+                    Ok((logits, padded)) => {
+                        padded_total += padded;
+                        for (&i, l) in plain.iter().zip(logits) {
+                            step_logits[i] = Some(l);
+                        }
+                    }
+                    Err(e) => step_err = Some(e),
+                }
+            }
+            for rows in spec_groups.values() {
+                if step_err.is_some() {
+                    break;
+                }
+                let slots: Vec<SlotId> = rows.iter().map(|&i| active[i].slot).collect();
+                let states = cache.get_many_mut(&slots);
+                // checkpoint BEFORE verify mutates anything: the ring
+                // (keyed by slot, reused across steps) is what partial
+                // acceptance rolls back to
+                let mut seqs: Vec<(&mut SeqState, &[i32])> =
+                    Vec::with_capacity(rows.len());
+                for (st, &i) in states.into_iter().zip(rows.iter()) {
+                    ring.checkpoint(active[i].slot, st);
+                    seqs.push((st, windows[i].as_slice()));
+                }
+                match model.verify_any(&mut seqs) {
+                    Ok((logits, padded)) => {
+                        padded_total += padded;
+                        for (&i, l) in rows.iter().zip(logits) {
+                            step_logits[i] = Some(l);
+                        }
+                    }
+                    Err(e) => step_err = Some(e),
+                }
+            }
+            if let Some(e) = step_err.take() {
+                eprintln!("decode step failed: {e:#}; failing the batch");
+                // tell every client instead of letting them stare at
+                // dead channels until their recvs time out
+                for seq in active.drain(..) {
+                    budget_used -= seq.cost;
+                    cache.release(seq.slot);
+                    metrics.lock().unwrap().failed += 1;
+                    seq.finish(FinishReason::Failed);
+                }
+                continue;
+            }
+
+            // --- emission: walk each row's window while drafts match ---
+            let n = active.len();
+            enum Exit {
+                Cancel,
+                Done(FinishReason),
+            }
+            let mut removals: Vec<(usize, Exit)> = Vec::new();
+            // rows whose verify over-advanced: (active index, accepted
+            // emission count a < kw); rolled back + re-advanced below
+            let mut readvance: Vec<(usize, usize)> = Vec::new();
+            let mut emitted_total = 0u64;
+            let mut spec_proposed = 0u64;
+            let mut spec_accepted = 0u64;
+            for (i, row) in step_logits.iter().enumerate() {
+                let row = row.as_ref().expect("every live row ran this step");
+                let kw = windows[i].len();
+                let seq = &mut active[i];
+                spec_proposed += (kw - 1) as u64;
+                let mut a = 0usize; // tokens emitted from this window
+                let mut exit: Option<Exit> = None;
+                loop {
+                    // emit t_{a+1} = sample(L_a) — the PR-8 NaN-safe
+                    // sampler at EVERY position, drafted or bonus
+                    let logits = &row[a * vocab..(a + 1) * vocab];
+                    let tok = sample(logits, seq.params.temperature, &mut seq.rng);
+                    seq.last_token = tok;
+                    seq.generated.push(tok);
+                    seq.history.push(tok);
+                    seq.batch_trace.push(n);
+                    a += 1;
+                    emitted_total += 1;
+                    if !seq.reply.push_token(tok.clamp(0, 255) as u8) {
+                        exit = Some(Exit::Cancel);
+                        break;
+                    }
+                    let hit_stop = seq
+                        .params
+                        .stop_byte
+                        .map(|b| tok == b as i32)
+                        .unwrap_or(false);
+                    if hit_stop {
+                        exit = Some(Exit::Done(FinishReason::Stop));
+                        break;
+                    }
+                    if seq.generated.len() >= seq.params.max_new_tokens {
+                        exit = Some(Exit::Done(FinishReason::Length));
+                        break;
+                    }
+                    // deeper window positions are only valid while the
+                    // draft at this position is what greedy actually chose
+                    if a >= kw || tok != windows[i][a] {
+                        break;
+                    }
+                }
+                spec_accepted += (a - 1) as u64;
+                match exit {
+                    Some(Exit::Cancel) => {
+                        // cancelled rows never roll back: the slot is
+                        // released this step and the state discarded
+                        removals.push((i, Exit::Cancel));
+                    }
+                    other => {
+                        if a < kw {
+                            readvance.push((i, a));
+                        }
+                        if let Some(exit) = other {
+                            removals.push((i, exit));
+                        }
+                    }
+                }
+            }
+
+            // --- rollback + re-advance the partially accepted rows -----
+            //
+            // Verify absorbed the whole window; a row that emitted a < kw
+            // tokens must end the step as if it had decoded exactly those
+            // a tokens. Rollback restores the pre-verify snapshot, then
+            // the accepted prefix re-advances through the same bitwise
+            // path (one plain decode step for a == 1, a verify window of
+            // length a otherwise). Runs BEFORE removals so finishing
+            // rows' states are exact when promoted to the prefix cache.
+            if !readvance.is_empty() {
+                let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+                for &(i, a) in &readvance {
+                    groups.entry(a).or_default().push(i);
+                }
+                for (&a, rows) in groups.iter() {
+                    if step_err.is_some() {
+                        break;
+                    }
+                    let slots: Vec<SlotId> =
+                        rows.iter().map(|&i| active[i].slot).collect();
+                    let states = cache.get_many_mut(&slots);
+                    let mut seqs: Vec<(&mut SeqState, &[i32])> =
+                        Vec::with_capacity(rows.len());
+                    for (st, &i) in states.into_iter().zip(rows.iter()) {
+                        ring.rollback_into(active[i].slot, st);
+                        seqs.push((st, &windows[i][..a]));
+                    }
+                    let result = if a == 1 {
+                        let mut one: Vec<(&mut SeqState, i32)> = seqs
+                            .iter_mut()
+                            .map(|(s, t)| (&mut **s, t[0]))
+                            .collect();
+                        model.decode_any(&mut one).map(|(_, p)| p)
+                    } else {
+                        model.verify_any(&mut seqs).map(|(_, p)| p)
+                    };
+                    match result {
+                        Ok(padded) => padded_total += padded,
+                        Err(e) => step_err = Some(e),
+                    }
+                }
+                if let Some(e) = step_err.take() {
+                    eprintln!("speculative re-advance failed: {e:#}; failing the batch");
                     for seq in active.drain(..) {
                         budget_used -= seq.cost;
                         cache.release(seq.slot);
@@ -851,6 +1013,68 @@ fn engine_loop(
                     continue;
                 }
             }
+
+            let step_us = t0.elapsed().as_micros() as f64;
+            {
+                let mut m = metrics.lock().unwrap();
+                // one decode_call per CONTINUOUS step: mean batch is the
+                // mean number of live sequences advanced per step
+                // (occupancy), regardless of how many bucket executions
+                // the remap — or the verify/re-advance pair — used
+                m.decode_calls += 1;
+                m.decode_batched_seqs += n as u64;
+                m.decode_padded_slots += padded_total as u64;
+                m.tokens_out += emitted_total;
+                m.decode_step_tokens += emitted_total;
+                m.spec_proposed += spec_proposed;
+                m.spec_accepted += spec_accepted;
+                m.per_token_us.record_us(step_us / emitted_total.max(1) as f64);
+                m.decode_batch_us.record_us(step_us);
+                m.plan_compiles = model.plan_compiles() as u64;
+            }
+
+            // exits leave the batch THE SAME STEP they end: indices were
+            // collected ascending, so removing in descending order keeps
+            // every pending index valid (swap_remove only disturbs
+            // positions >= its own)
+            for (i, exit) in removals.into_iter().rev() {
+                let seq = active.swap_remove(i);
+                budget_used -= seq.cost;
+                let final_state = cache.release(seq.slot);
+                match exit {
+                    Exit::Cancel => {
+                        metrics.lock().unwrap().cancelled += 1;
+                    }
+                    Exit::Done(reason) => {
+                        // promote the finished state to the prefix
+                        // tier: it has absorbed the prompt plus
+                        // every generated token EXCEPT the last
+                        // sample (never fed back through decode),
+                        // so the next turn of this conversation
+                        // resumes it decode-exactly. Cancels and
+                        // failures are not promoted; neither is a
+                        // sequence whose absorbed tokens fall
+                        // outside the byte alphabet (its next-turn
+                        // prompt would re-encode them differently
+                        // than the state actually saw them).
+                        let absorbed = &seq.generated[..seq.generated.len() - 1];
+                        if cache.prefix_enabled()
+                            && absorbed.iter().all(|&t| (0..=255).contains(&t))
+                        {
+                            let mut key = seq.prompt_tokens.clone();
+                            key.extend_from_slice(absorbed);
+                            cache.prefix_insert(&key, &final_state);
+                            let mut m = metrics.lock().unwrap();
+                            m.prefix_evicted = cache.prefix_evicted;
+                        }
+                        let e2e = seq.finish(reason);
+                        let mut m = metrics.lock().unwrap();
+                        m.completed += 1;
+                        m.e2e_us.record_us(e2e);
+                    }
+                }
+            }
+            continue;
         }
 
         // --- idle ------------------------------------------------------------

@@ -1,0 +1,251 @@
+//! Speculative decoding support: the draft-token proposer seam and the
+//! per-slot state checkpoint ring.
+//!
+//! SSM state is O(1) per sequence (conv window + recurrent state, a few
+//! KB), so speculation is cheap to make exactly reversible: the engine
+//! snapshots each speculating sequence's state into `CheckpointRing`
+//! before a verify step, and on partial acceptance rolls back and
+//! re-advances only the accepted tokens, landing bitwise on the
+//! non-speculative state. The default proposer is prompt-lookup
+//! (n-gram match over the sequence's own token history — no draft model
+//! required); `Proposer` is the seam where a tiny draft model can slot
+//! in later.
+
+use super::model::SeqState;
+use crate::runtime::HostTensor;
+
+/// Drafts up to `k` next tokens for a sequence given its full token
+/// history (prompt + generated so far, in order). Returning fewer than
+/// `k` tokens — or none — is always legal; the engine shrinks the
+/// verify window to match (an empty draft falls back to plain decode).
+pub trait Proposer: Send {
+    fn propose(&mut self, history: &[i32], k: usize) -> Vec<i32>;
+}
+
+/// Prompt-lookup decoding (n-gram speculation): find the most recent
+/// earlier occurrence of the history's trailing n-gram and draft the
+/// tokens that followed it. Matches TGI/vLLM's "prompt lookup" scheme.
+/// Repetitive or code-like continuations (and greedy decode loops) make
+/// this proposer highly accurate for free.
+#[derive(Clone, Debug)]
+pub struct PromptLookupProposer {
+    /// Longest trailing n-gram to try first (descending to `min_ngram`).
+    pub max_ngram: usize,
+    /// Shortest n-gram worth matching (1 = single-token recurrence).
+    pub min_ngram: usize,
+}
+
+impl Default for PromptLookupProposer {
+    fn default() -> Self {
+        Self { max_ngram: 3, min_ngram: 1 }
+    }
+}
+
+impl Proposer for PromptLookupProposer {
+    fn propose(&mut self, history: &[i32], k: usize) -> Vec<i32> {
+        if k == 0 {
+            return Vec::new();
+        }
+        let len = history.len();
+        let hi = self.max_ngram.max(self.min_ngram).max(1);
+        let lo = self.min_ngram.max(1);
+        for n in (lo..=hi).rev() {
+            if len < n + 1 {
+                continue;
+            }
+            let suffix = &history[len - n..];
+            // most recent earlier occurrence wins (local repetition is
+            // the strongest signal)
+            for i in (0..len - n).rev() {
+                if &history[i..i + n] == suffix {
+                    let start = i + n;
+                    let end = (start + k).min(len);
+                    if start < end {
+                        return history[start..end].to_vec();
+                    }
+                }
+            }
+        }
+        Vec::new()
+    }
+}
+
+/// Per-slot snapshots of sequence state taken immediately before a
+/// verify step. Slots are reused across steps: once a slot has been
+/// written at a given state shape, later checkpoints copy in place
+/// instead of allocating (`allocs()` counts the exceptions, so tests
+/// can assert the steady state is allocation-free).
+#[derive(Default)]
+pub struct CheckpointRing {
+    slots: Vec<Option<SeqState>>,
+    allocs: usize,
+}
+
+fn copy_tensor(dst: &mut HostTensor, src: &HostTensor, allocs: &mut usize) {
+    match (dst, src) {
+        (HostTensor::F32(ds, dd), HostTensor::F32(ss, sd))
+            if ds == ss && dd.len() == sd.len() =>
+        {
+            dd.copy_from_slice(sd);
+        }
+        (HostTensor::I32(ds, dd), HostTensor::I32(ss, sd))
+            if ds == ss && dd.len() == sd.len() =>
+        {
+            dd.copy_from_slice(sd);
+        }
+        (dst, src) => {
+            *allocs += 1;
+            *dst = src.clone();
+        }
+    }
+}
+
+impl CheckpointRing {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Snapshot `state` into slot `i`, growing the ring on demand.
+    pub fn checkpoint(&mut self, i: usize, state: &SeqState) {
+        if i >= self.slots.len() {
+            self.slots.resize_with(i + 1, || None);
+        }
+        match &mut self.slots[i] {
+            Some(slot) => {
+                copy_tensor(&mut slot.conv, &state.conv, &mut self.allocs);
+                copy_tensor(&mut slot.ssm, &state.ssm, &mut self.allocs);
+            }
+            empty => {
+                self.allocs += 1;
+                *empty = Some(state.clone());
+            }
+        }
+    }
+
+    /// Restore slot `i`'s snapshot into `state`. Panics if the slot was
+    /// never checkpointed — the engine only rolls back slots it just
+    /// checkpointed in the same step.
+    pub fn rollback(&self, i: usize, state: &mut SeqState) {
+        let slot = self.slots[i]
+            .as_ref()
+            .expect("rollback of a slot that was never checkpointed");
+        state.conv = slot.conv.clone();
+        state.ssm = slot.ssm.clone();
+    }
+
+    /// Restore slot `i` in place without allocating when shapes match.
+    pub fn rollback_into(&mut self, i: usize, state: &mut SeqState) {
+        let slot = self.slots[i]
+            .as_ref()
+            .expect("rollback of a slot that was never checkpointed");
+        let mut allocs = 0;
+        copy_tensor(&mut state.conv, &slot.conv, &mut allocs);
+        copy_tensor(&mut state.ssm, &slot.ssm, &mut allocs);
+        self.allocs += allocs;
+    }
+
+    /// Snapshot allocations so far (first-touch per slot plus any
+    /// shape-change reallocation; flat after warmup).
+    pub fn allocs(&self) -> usize {
+        self.allocs
+    }
+
+    /// Slots the ring has grown to cover.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hist(toks: &[i32]) -> Vec<i32> {
+        toks.to_vec()
+    }
+
+    #[test]
+    fn prompt_lookup_drafts_the_continuation_of_the_latest_match() {
+        let mut p = PromptLookupProposer::default();
+        // trailing [7, 8] matched earlier; continuation is [9, 4, 7]
+        let h = hist(&[1, 7, 8, 9, 4, 7, 8]);
+        assert_eq!(p.propose(&h, 3), vec![9, 4, 7]);
+        // shorter request truncates the draft
+        assert_eq!(p.propose(&h, 1), vec![9]);
+    }
+
+    #[test]
+    fn prompt_lookup_prefers_longer_ngrams_and_recent_matches() {
+        let mut p = PromptLookupProposer::default();
+        // trailing 3-gram [2, 3, 4] occurs at 0 (followed by 9) even
+        // though the trailing 1-gram [4] also occurs at 5 (followed by 8)
+        let h = hist(&[2, 3, 4, 9, 1, 4, 8, 2, 3, 4]);
+        assert_eq!(p.propose(&h, 2), vec![9, 1]);
+        // with only 1-grams available, the most recent match wins
+        let h = hist(&[5, 1, 5, 2, 5]);
+        assert_eq!(p.propose(&h, 1), vec![2]);
+    }
+
+    #[test]
+    fn prompt_lookup_handles_no_match_and_short_history() {
+        let mut p = PromptLookupProposer::default();
+        assert!(p.propose(&[], 4).is_empty());
+        assert!(p.propose(&[3], 4).is_empty());
+        assert!(p.propose(&[1, 2, 3, 4], 4).is_empty());
+        assert!(p.propose(&[1, 1, 2], 0).is_empty());
+        // cycle of period 1: the continuation span reaches the end of
+        // history, so the draft is the single repeated token
+        assert_eq!(p.propose(&[9, 9, 9], 4), vec![9]);
+    }
+
+    #[test]
+    fn checkpoint_ring_reuses_slots_without_allocating() {
+        let mut ring = CheckpointRing::new();
+        let mk = |v: f32| SeqState {
+            conv: HostTensor::F32(vec![2, 3], vec![v; 6]),
+            ssm: HostTensor::F32(vec![4], vec![v; 4]),
+        };
+        ring.checkpoint(0, &mk(1.0));
+        ring.checkpoint(1, &mk(2.0));
+        let first_touch = ring.allocs();
+        assert!(first_touch >= 2);
+        // steady state: same shapes, no further allocation
+        for step in 0..10 {
+            ring.checkpoint(0, &mk(step as f32));
+            ring.checkpoint(1, &mk(-step as f32));
+        }
+        assert_eq!(ring.allocs(), first_touch);
+        assert_eq!(ring.capacity(), 2);
+
+        // rollback restores the snapshot exactly
+        let snap = mk(7.5);
+        ring.checkpoint(0, &snap);
+        let mut live = mk(0.0);
+        ring.rollback_into(0, &mut live);
+        assert_eq!(live, snap);
+        assert_eq!(ring.allocs(), first_touch, "in-place rollback is free");
+        let mut live2 = mk(0.25);
+        ring.rollback(0, &mut live2);
+        assert_eq!(live2, snap);
+    }
+
+    #[test]
+    fn checkpoint_ring_reallocates_on_shape_change_only() {
+        let mut ring = CheckpointRing::new();
+        let small = SeqState {
+            conv: HostTensor::F32(vec![2], vec![1.0; 2]),
+            ssm: HostTensor::F32(vec![2], vec![1.0; 2]),
+        };
+        let big = SeqState {
+            conv: HostTensor::F32(vec![4], vec![2.0; 4]),
+            ssm: HostTensor::F32(vec![4], vec![2.0; 4]),
+        };
+        ring.checkpoint(0, &small);
+        let a0 = ring.allocs();
+        ring.checkpoint(0, &big);
+        assert!(ring.allocs() > a0, "shape change must reallocate");
+        let a1 = ring.allocs();
+        ring.checkpoint(0, &big);
+        assert_eq!(ring.allocs(), a1);
+    }
+}

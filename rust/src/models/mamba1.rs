@@ -659,6 +659,133 @@ pub fn build_decode_batched(m: &ModelShape, b: usize) -> Graph {
     ctx.g
 }
 
+/// Speculative-verify graph: tokens (b, kw) i32 + per-layer stacked
+/// states -> logits at ALL kw positions (b, kw, V) + states advanced by
+/// kw steps. One compiled plan per (bucket, window); the scheduler uses
+/// it to score a drafted window in a single multi-token step.
+///
+/// Bitwise contract: this graph is [`build_decode_batched`] unrolled kw
+/// times — position-independent stages (projections, dt pipeline, gate,
+/// norms) run batched over a (b, kw, ·) axis, which every kernel treats
+/// row-independently, while the conv window and the scan recurrence
+/// replay decode's exact per-step op sequence. Position p's logits and
+/// the final states are therefore bitwise identical to kw sequential
+/// decode steps, at f32 and f16 alike (fused chains round per stage).
+/// i8 is excluded: its dynamic per-tensor activation scales would couple
+/// the kw positions inside one node.
+pub fn build_verify_batched(m: &ModelShape, b: usize, kw: usize) -> Graph {
+    assert_eq!(m.arch, "mamba");
+    assert!(b >= 1, "verify bucket must be >= 1");
+    assert!(kw >= 1, "verify window must be >= 1");
+    let spec = full_spec(m);
+    let mut ctx = Ctx::new(&format!("{}-verify-b{b}-k{kw}", m.name), &spec);
+    let tokens = ctx.g.input_i32("tokens", vec![b, kw]);
+    let (di, n, k) = (m.d_inner(), m.d_state, m.d_conv);
+    let r = m.resolved_dt_rank();
+    let mut conv_states = Vec::new();
+    let mut ssm_states = Vec::new();
+    for j in 0..m.n_layers {
+        conv_states.push(ctx.g.input(&format!("conv_state{j}"), vec![b, k - 1, di]));
+        ssm_states.push(ctx.g.input(&format!("ssm_state{j}"), vec![b, di, n]));
+    }
+
+    let emb = ctx.w("emb");
+    let tok_flat = ctx.g.reshape(tokens, vec![b * kw], "tokens.flat");
+    let rows = ctx.g.gather(emb, tok_flat, "embed"); // (b*kw, d)
+    let mut x = ctx.g.reshape(rows, vec![b, kw, m.d_model], "embed.batch");
+    let mut out_states = Vec::new();
+    for j in 0..m.n_layers {
+        let nm = |s: &str| format!("l{j}.{s}");
+        let norm_w = ctx.w(&nm("norm_w"));
+        let xn = ctx.g.rmsnorm(x, norm_w, &nm("norm"));
+        let in_proj = ctx.w(&nm("in_proj"));
+        let xz = ctx.g.matmul(xn, in_proj, &nm("in_proj.mm")); // (b, kw, 2di)
+        let xi = ctx.g.slice(xz, 2, 0, di, &nm("split.x"));
+        let z = ctx.g.slice(xz, 2, di, di, &nm("split.z"));
+
+        // conv: extend the state with the kw raw rows, then each position
+        // dots decode's exact (b, K, di) window against the taps
+        let ext = ctx.g.concat(&[conv_states[j], xi], 1, &nm("conv.ext")); // (b, K-1+kw, di)
+        let cw = ctx.w(&nm("conv_w"));
+        let mut xc_rows = Vec::with_capacity(kw);
+        for p in 0..kw {
+            let pn = |s: &str| format!("l{j}.p{p}.{s}");
+            let win = ctx.g.slice(ext, 1, p, k, &pn("conv.win")); // (b, K, di)
+            let prod = ctx.g.mul(win, cw, &pn("conv.prod"));
+            let sum = ctx.g.reduce_sum(prod, 1, &pn("conv.sum")); // (b, di)
+            xc_rows.push(ctx.g.reshape(sum, vec![b, 1, di], &pn("conv.row")));
+        }
+        let xc = ctx.g.concat(&xc_rows, 1, &nm("conv.taps")); // (b, kw, di)
+        let cb = ctx.w(&nm("conv_b"));
+        let xc = ctx.g.add(xc, cb, &nm("conv.bias"));
+        let xc = ctx.g.silu(xc, &nm("conv.silu"));
+        let new_conv = ctx.g.slice(ext, 1, kw, k - 1, &nm("conv.state"));
+
+        let xp = ctx.w(&nm("x_proj"));
+        let xdbc = ctx.g.matmul(xc, xp, &nm("x_proj.mm")); // (b, kw, r+2n)
+        let dt_r = ctx.g.slice(xdbc, 2, 0, r, &nm("split.dt"));
+        let b_t = ctx.g.slice(xdbc, 2, r, n, &nm("split.B"));
+        let c_t = ctx.g.slice(xdbc, 2, r + n, n, &nm("split.C"));
+        let dtw = ctx.w(&nm("dt_proj_w"));
+        let dtb = ctx.w(&nm("dt_proj_b"));
+        let dt_f = ctx.g.matmul(dt_r, dtw, &nm("dt_proj.mm"));
+        let dt_f = ctx.g.add(dt_f, dtb, &nm("dt_proj.bias"));
+        let dt = ctx.g.softplus(dt_f, &nm("dt.softplus")); // (b, kw, di)
+
+        let a_log = ctx.w(&nm("a_log"));
+        let a_exp = ctx.g.exp(a_log, &nm("A.exp"));
+        let neg1 = ctx.g.const_scalar(&nm("A.neg1"), -1.0);
+        let a = ctx.g.mul(a_exp, neg1, &nm("A")); // (di, n)
+
+        // position-independent scan operands, batched over kw
+        let dt_col = ctx.g.reshape(dt, vec![b, kw, di, 1], &nm("dt.col"));
+        let da = ctx.g.mul(dt_col, a, &nm("dtA")); // (b, kw, di, n)
+        let da = ctx.g.exp(da, &nm("decay"));
+        let xdt = ctx.g.mul(dt, xc, &nm("x.dt")); // (b, kw, di)
+        let xdt_col = ctx.g.reshape(xdt, vec![b, kw, di, 1], &nm("x.dt.col"));
+        let b_row = ctx.g.reshape(b_t, vec![b, kw, 1, n], &nm("B.row"));
+        let inflow = ctx.g.mul(xdt_col, b_row, &nm("inflow")); // (b, kw, di, n)
+
+        // the recurrence itself replays decode's step ops sequentially
+        let mut h = ssm_states[j];
+        let mut y_rows = Vec::with_capacity(kw);
+        for p in 0..kw {
+            let pn = |s: &str| format!("l{j}.p{p}.{s}");
+            let da_s = ctx.g.slice(da, 1, p, 1, &pn("decay.s"));
+            let da_p = ctx.g.reshape(da_s, vec![b, di, n], &pn("decay.p"));
+            let in_s = ctx.g.slice(inflow, 1, p, 1, &pn("inflow.s"));
+            let in_p = ctx.g.reshape(in_s, vec![b, di, n], &pn("inflow.p"));
+            let decayed = ctx.g.mul(da_p, h, &pn("h.decay"));
+            h = ctx.g.add(decayed, in_p, &pn("h")); // (b, di, n)
+            let c_s = ctx.g.slice(c_t, 1, p, 1, &pn("C.s"));
+            let c_col = ctx.g.reshape(c_s, vec![b, n, 1], &pn("C.col"));
+            let y_t = ctx.g.matmul(h, c_col, &pn("y.mm")); // (b, di, 1)
+            y_rows.push(ctx.g.reshape(y_t, vec![b, 1, di], &pn("y.row")));
+        }
+        let y_mm = ctx.g.concat(&y_rows, 1, &nm("y.cat")); // (b, kw, di)
+        let d_skip = ctx.w(&nm("d_skip"));
+        let skip = ctx.g.mul(xc, d_skip, &nm("y.skip"));
+        let y = ctx.g.add(y_mm, skip, &nm("y"));
+
+        let zg = ctx.g.silu(z, &nm("gate.silu"));
+        let y = ctx.g.mul(y, zg, &nm("gate.mul"));
+        let op = ctx.w(&nm("out_proj"));
+        let y = ctx.g.matmul(y, op, &nm("out_proj.mm"));
+        x = ctx.g.add(x, y, &nm("residual"));
+        out_states.push((new_conv, h));
+    }
+    let fw = ctx.w("final_norm_w");
+    let x = ctx.g.rmsnorm(x, fw, "final_norm");
+    let emb_t = ctx.g.transpose(emb, vec![1, 0], "lm_head.wT");
+    let logits = ctx.g.matmul(x, emb_t, "lm_head.mm"); // (b, kw, V)
+    ctx.g.output(logits);
+    for (cs, ss) in out_states {
+        ctx.g.output(cs);
+        ctx.g.output(ss);
+    }
+    ctx.g
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -825,6 +825,138 @@ pub fn build_decode_batched(m: &ModelShape, b: usize) -> Graph {
     ctx.g
 }
 
+/// Speculative-verify graph: tokens (b, kw) i32 + per-layer stacked
+/// states -> logits at ALL kw positions (b, kw, V) + states advanced by
+/// kw steps. The Mamba-2 counterpart of `mamba1::build_verify_batched`.
+///
+/// Bitwise contract: [`build_decode_batched`] unrolled kw times.
+/// Position-independent stages (projections, conv bias/silu, the dt
+/// pipeline, gating, norms) batch over a (b, kw, ·) axis — every kernel
+/// treats those rows independently — while the conv window extraction
+/// and the SSD state recurrence replay decode's exact per-step op
+/// sequence, so position p's logits and the final states are bitwise
+/// identical to kw sequential decode steps (f32 and f16; i8's dynamic
+/// per-tensor scales would couple positions, so it is excluded). Note
+/// this is NOT the chunked SSD prefill: that reassociates within a
+/// chunk and is only decode-exact at chunk boundaries.
+pub fn build_verify_batched(m: &ModelShape, b: usize, kw: usize) -> Graph {
+    assert_eq!(m.arch, "mamba2");
+    assert!(b >= 1, "verify bucket must be >= 1");
+    assert!(kw >= 1, "verify window must be >= 1");
+    let spec = full_spec(m);
+    let mut ctx = Ctx::new(&format!("{}-verify-b{b}-k{kw}", m.name), &spec);
+    let tokens = ctx.g.input_i32("tokens", vec![b, kw]);
+    let (di, n, k) = (m.d_inner(), m.d_state, m.d_conv);
+    let (h, p_dim) = (m.n_heads(), m.headdim);
+    let cd = m.conv_dim();
+    let mut conv_states = Vec::new();
+    let mut ssm_states = Vec::new();
+    for j in 0..m.n_layers {
+        conv_states.push(ctx.g.input(&format!("conv_state{j}"), vec![b, k - 1, cd]));
+        ssm_states.push(ctx.g.input(&format!("ssm_state{j}"), vec![b, h, p_dim, n]));
+    }
+
+    let emb = ctx.w("emb");
+    let tok_flat = ctx.g.reshape(tokens, vec![b * kw], "tokens.flat");
+    let rows = ctx.g.gather(emb, tok_flat, "embed"); // (b*kw, d)
+    let mut x = ctx.g.reshape(rows, vec![b, kw, m.d_model], "embed.batch");
+    let mut out_states = Vec::new();
+    for j in 0..m.n_layers {
+        let nm = |s: &str| format!("l{j}.{s}");
+        let norm_w = ctx.w(&nm("norm_w"));
+        let xn = ctx.g.rmsnorm(x, norm_w, &nm("norm"));
+        let in_proj = ctx.w(&nm("in_proj"));
+        let zxbcdt = ctx.g.matmul(xn, in_proj, &nm("in_proj.mm")); // (b, kw, 2di+2n+h)
+        let z = ctx.g.slice(zxbcdt, 2, 0, di, &nm("split.z"));
+        let xbc = ctx.g.slice(zxbcdt, 2, di, di + 2 * n, &nm("split.xbc"));
+        let dt_raw = ctx.g.slice(zxbcdt, 2, 2 * di + 2 * n, h, &nm("split.dtr"));
+
+        // conv: extend the state with the kw raw rows, then each position
+        // dots decode's exact (b, K, cd) window against the taps
+        let ext = ctx.g.concat(&[conv_states[j], xbc], 1, &nm("conv.ext")); // (b, K-1+kw, cd)
+        let cw = ctx.w(&nm("conv_w"));
+        let mut xc_rows = Vec::with_capacity(kw);
+        for p in 0..kw {
+            let pn = |s: &str| format!("l{j}.p{p}.{s}");
+            let win = ctx.g.slice(ext, 1, p, k, &pn("conv.win")); // (b, K, cd)
+            let prod = ctx.g.mul(win, cw, &pn("conv.prod"));
+            let sum = ctx.g.reduce_sum(prod, 1, &pn("conv.sum")); // (b, cd)
+            xc_rows.push(ctx.g.reshape(sum, vec![b, 1, cd], &pn("conv.row")));
+        }
+        let xbc1 = ctx.g.concat(&xc_rows, 1, &nm("conv.taps")); // (b, kw, cd)
+        let cb = ctx.w(&nm("conv_b"));
+        let xbc1 = ctx.g.add(xbc1, cb, &nm("conv.bias"));
+        let xbc1 = ctx.g.silu(xbc1, &nm("conv.silu"));
+        let new_conv = ctx.g.slice(ext, 1, kw, k - 1, &nm("conv.state"));
+
+        let xi = ctx.g.slice(xbc1, 2, 0, di, &nm("split.x"));
+        let b_t = ctx.g.slice(xbc1, 2, di, n, &nm("split.B")); // (b, kw, n)
+        let c_t = ctx.g.slice(xbc1, 2, di + n, n, &nm("split.C"));
+
+        let dtb = ctx.w(&nm("dt_bias"));
+        let dt = ctx.g.add(dt_raw, dtb, &nm("dt.bias"));
+        let dt = ctx.g.softplus(dt, &nm("dt.softplus")); // (b, kw, h)
+
+        let a_log = ctx.w(&nm("a_log"));
+        let a_exp = ctx.g.exp(a_log, &nm("A.exp"));
+        let neg1 = ctx.g.const_scalar(&nm("A.neg1"), -1.0);
+        let a = ctx.g.mul(a_exp, neg1, &nm("A")); // (h,)
+
+        // position-independent recurrence operands, batched over kw
+        let da = ctx.g.mul(dt, a, &nm("da")); // (b, kw, h)
+        let da = ctx.g.exp(da, &nm("decay"));
+        let xh = ctx.g.reshape(xi, vec![b, kw, h, p_dim], &nm("x.heads"));
+        let dt_col = ctx.g.reshape(dt, vec![b, kw, h, 1], &nm("dt.col"));
+        let xdt = ctx.g.mul(xh, dt_col, &nm("x.dt")); // (b, kw, h, p)
+
+        // the recurrence itself replays decode's step ops sequentially
+        let mut hs = ssm_states[j];
+        let mut y_rows = Vec::with_capacity(kw);
+        for p in 0..kw {
+            let pn = |s: &str| format!("l{j}.p{p}.{s}");
+            let da_s = ctx.g.slice(da, 1, p, 1, &pn("decay.s"));
+            let da4 = ctx.g.reshape(da_s, vec![b, h, 1, 1], &pn("decay.4d"));
+            let decayed = ctx.g.mul(hs, da4, &pn("h.decay"));
+            let xdt_s = ctx.g.slice(xdt, 1, p, 1, &pn("x.dt.s"));
+            let xdt4 = ctx.g.reshape(xdt_s, vec![b, h, p_dim, 1], &pn("x.dt.4d"));
+            let b_s = ctx.g.slice(b_t, 1, p, 1, &pn("B.s"));
+            let b4 = ctx.g.reshape(b_s, vec![b, 1, 1, n], &pn("B.4d"));
+            let inflow = ctx.g.mul(xdt4, b4, &pn("inflow")); // (b, h, p, n)
+            hs = ctx.g.add(decayed, inflow, &pn("h"));
+            let c_s = ctx.g.slice(c_t, 1, p, 1, &pn("C.s"));
+            let c_mid = ctx.g.reshape(c_s, vec![b, 1, n, 1], &pn("C.mid"));
+            let c_col = ctx.g.broadcast(c_mid, vec![b, h, n, 1], &pn("C.col"));
+            let y4 = ctx.g.matmul(hs, c_col, &pn("y.mm")); // (b, h, p, 1)
+            y_rows.push(ctx.g.reshape(y4, vec![b, 1, h, p_dim], &pn("y.row")));
+        }
+        let y = ctx.g.concat(&y_rows, 1, &nm("y.cat")); // (b, kw, h, p)
+        let d_skip = ctx.w(&nm("d_skip"));
+        let d_col = ctx.g.reshape(d_skip, vec![h, 1], &nm("D.col"));
+        let skip = ctx.g.mul(xh, d_col, &nm("y.skip"));
+        let y = ctx.g.add(y, skip, &nm("y.skipped"));
+        let y = ctx.g.reshape(y, vec![b, kw, di], &nm("y.flat"));
+
+        let zg = ctx.g.silu(z, &nm("gate.silu"));
+        let gated = ctx.g.mul(y, zg, &nm("gate.mul"));
+        let gw = ctx.w(&nm("gnorm_w"));
+        let yn = ctx.g.rmsnorm(gated, gw, &nm("gnorm"));
+        let op = ctx.w(&nm("out_proj"));
+        let y = ctx.g.matmul(yn, op, &nm("out_proj.mm"));
+        x = ctx.g.add(x, y, &nm("residual"));
+        out_states.push((new_conv, hs));
+    }
+    let fw = ctx.w("final_norm_w");
+    let x = ctx.g.rmsnorm(x, fw, "final_norm");
+    let emb_t = ctx.g.transpose(emb, vec![1, 0], "lm_head.wT");
+    let logits = ctx.g.matmul(x, emb_t, "lm_head.mm"); // (b, kw, V)
+    ctx.g.output(logits);
+    for (cs, ss) in out_states {
+        ctx.g.output(cs);
+        ctx.g.output(ss);
+    }
+    ctx.g
+}
+
 /// Single-token decode-step graph (recurrent SSD update, no chunking).
 ///
 /// Inputs: params, token (1,), per layer `conv_state{j}` (K-1, conv_dim)

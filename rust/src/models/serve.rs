@@ -313,6 +313,23 @@ impl ServeFamily {
         }
     }
 
+    /// Speculative-verify graph for bucket `b` and window `kw`: tokens
+    /// (b, kw) i32 + per-layer stacked states → logits at ALL kw
+    /// positions (b, kw, V) + states advanced kw steps. Unlike the
+    /// serve-prefill graphs (last-position logits, conv bias-first),
+    /// this is [`ServeFamily::build_decode_batched`] unrolled kw times —
+    /// position p's logits and the final states are **bitwise
+    /// identical** to kw sequential decode steps, which is what lets
+    /// speculative acceptance/rollback reproduce non-speculative output
+    /// exactly. f32/f16 only; i8's dynamic per-tensor activation scales
+    /// would couple the kw positions inside one node.
+    pub fn build_verify(self, m: &ModelShape, b: usize, kw: usize) -> Graph {
+        match self {
+            ServeFamily::Mamba1 => mamba1::build_verify_batched(m, b, kw),
+            ServeFamily::Mamba2 => mamba2::build_verify_batched(m, b, kw),
+        }
+    }
+
     /// Batched serving-prefill graph for prefill bucket `b`: tokens
     /// (b, t) i32 → logits (b, V) + per-layer batch-stacked states,
     /// per-sequence bitwise identical to
@@ -422,6 +439,26 @@ mod tests {
         let m2 = presets::tiny_mamba2();
         assert_eq!(ServeFamily::Mamba1.resume_chunk_grain(&m1), 1);
         assert_eq!(ServeFamily::Mamba2.resume_chunk_grain(&m2), m2.chunk);
+    }
+
+    #[test]
+    fn verify_graph_io_matches_the_decode_layout() {
+        // verify outputs stack exactly like batched decode's, with the
+        // window axis only on the logits — the coordinator unpacks
+        // states with the same code path
+        let (b, kw) = (2usize, 3usize);
+        for m in [presets::tiny_mamba(), presets::tiny_mamba2()] {
+            let f = ServeFamily::from_arch(&m.arch).unwrap();
+            let g = f.build_verify(&m, b, kw);
+            assert_eq!(g.outputs.len(), 1 + 2 * m.n_layers);
+            assert_eq!(g.shape(g.outputs[0]), &[b, kw, m.vocab_size]);
+            let mut conv = vec![b];
+            conv.extend(f.conv_state_shape(&m));
+            let mut ssm = vec![b];
+            ssm.extend(f.ssm_state_shape(&m));
+            assert_eq!(g.shape(g.outputs[1]), conv.as_slice(), "{}", m.arch);
+            assert_eq!(g.shape(g.outputs[2]), ssm.as_slice(), "{}", m.arch);
+        }
     }
 
     #[test]

@@ -8,9 +8,10 @@
 //! `xamba bench-check` then compares against the committed baseline,
 //! failing the build on any regression beyond the tolerance.
 //!
-//! Metric keys carry their own direction: `*_per_s` is higher-is-better,
-//! `*_ms` / `*_us` lower-is-better. A key the baseline tracks but the
-//! bench no longer emits is an error, so the gate cannot silently decay.
+//! Metric keys carry their own direction: `*_per_s`, `*_ratio`, and
+//! `*_rate` are higher-is-better, `*_ms` / `*_us` lower-is-better. A key
+//! the baseline tracks but the bench no longer emits is an error, so
+//! the gate cannot silently decay.
 
 use std::collections::BTreeMap;
 
@@ -55,13 +56,16 @@ pub struct Check {
 }
 
 fn higher_is_better(key: &str) -> Result<bool, String> {
-    if key.ends_with("_per_s") {
+    if key.ends_with("_per_s") || key.ends_with("_ratio") || key.ends_with("_rate") {
+        // throughputs, dimensionless multipliers (speculative speedup),
+        // and hit/acceptance rates all regress downward
         Ok(true)
     } else if key.ends_with("_ms") || key.ends_with("_us") {
         Ok(false)
     } else {
         Err(format!(
-            "metric {key:?} has no direction suffix (want *_per_s, *_ms, or *_us)"
+            "metric {key:?} has no direction suffix \
+             (want *_per_s, *_ratio, *_rate, *_ms, or *_us)"
         ))
     }
 }
@@ -174,6 +178,26 @@ mod tests {
         assert!(slow[0].regressed, "TTFT +30% must regress");
         let fast = compare(&obj(&[("ttft_ms", 7.0)]), &base, 0.20).unwrap();
         assert!(!fast[0].regressed && fast[0].change_pct > 0.0);
+    }
+
+    #[test]
+    fn ratio_and_rate_metrics_gate_upward() {
+        let base = obj(&[("spec_speedup_ratio", 1.5), ("spec_acceptance_rate", 0.8)]);
+        let slow = compare(
+            &obj(&[("spec_speedup_ratio", 1.0), ("spec_acceptance_rate", 0.85)]),
+            &base,
+            0.10,
+        )
+        .unwrap();
+        assert!(slow.iter().any(|c| c.key == "spec_speedup_ratio" && c.regressed));
+        assert!(slow.iter().any(|c| c.key == "spec_acceptance_rate" && !c.regressed));
+        let ok = compare(
+            &obj(&[("spec_speedup_ratio", 1.6), ("spec_acceptance_rate", 0.9)]),
+            &base,
+            0.10,
+        )
+        .unwrap();
+        assert!(ok.iter().all(|c| !c.regressed));
     }
 
     #[test]
